@@ -1,0 +1,71 @@
+//! Tiled Cholesky factorization — the dense-linear-algebra DAG the
+//! paper's related work motivates (Ltaief et al., LAWN 223). POTRF/TRSM
+//! tiles run as `mm` kernels, SYRK/GEMM updates as fused `mm_add`.
+//!
+//! Compares scheduling policies over tile-grid sizes in the simulator,
+//! then (if artifacts are built) executes a small instance for real with
+//! verified numerics.
+//!
+//! ```bash
+//! cargo run --release --example cholesky
+//! ```
+
+use std::path::Path;
+
+use hetsched::coordinator::{ExecEngine, ExecOptions};
+use hetsched::dag::workloads;
+use hetsched::perfmodel::CalibratedModel;
+use hetsched::platform::Platform;
+use hetsched::report::{fmt_ms, Table};
+use hetsched::runtime::RuntimeService;
+use hetsched::sched;
+use hetsched::sim::{simulate, SimConfig};
+
+fn main() -> anyhow::Result<()> {
+    let platform = Platform::paper();
+    let model = CalibratedModel::paper();
+    println!("{}", platform.table1());
+
+    let tile = 1024u32;
+    let mut table = Table::new(
+        format!("tiled Cholesky, tile size {tile}"),
+        &["tiles", "nodes", "policy", "makespan_ms", "transfers", "cpu_tasks", "gpu_tasks"],
+    );
+    for t in [3usize, 5, 8, 12] {
+        let dag = workloads::cholesky(t, tile);
+        for name in ["eager", "dmda", "gp"] {
+            let mut s = sched::by_name(name).unwrap();
+            let r = simulate(&dag, s.as_mut(), &platform, &model, &SimConfig::default());
+            table.row(vec![
+                format!("{t}x{t}"),
+                dag.node_count().to_string(),
+                name.to_string(),
+                fmt_ms(r.makespan_ms),
+                r.ledger.count.to_string(),
+                r.tasks_per_device[0].to_string(),
+                r.tasks_per_device[1].to_string(),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+
+    // Real execution of a 4x4 tile grid at size 64 (if artifacts exist).
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        let svc = RuntimeService::spawn(&dir)?;
+        let engine = ExecEngine::new(svc.clone(), platform.clone());
+        let dag = workloads::cholesky(4, 64);
+        let mut s = sched::by_name("gp").unwrap();
+        let r = engine.run(&dag, s.as_mut(), &model, &ExecOptions::default())?;
+        println!(
+            "real 4x4 Cholesky (tile 64): {} tasks verified, makespan {:.2} ms, {} transfers",
+            r.assignments.len(),
+            r.makespan_ms,
+            r.ledger.count
+        );
+        svc.shutdown();
+    } else {
+        println!("(skip real run: artifacts missing — `make artifacts`)");
+    }
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Montage-style astronomy mosaic workflow — the workload class Tanaka &
+//! Tatebe's multi-constraint partitioning paper (the paper's related
+//! work [11]) targets. Sweeps mosaic width and compares all policies on
+//! makespan and data movement; writes the partitioned DOT for the widest
+//! case.
+//!
+//! ```bash
+//! cargo run --release --example montage_workflow
+//! ```
+
+use hetsched::dag::{dot, workloads};
+use hetsched::perfmodel::CalibratedModel;
+use hetsched::platform::Platform;
+use hetsched::report::{fmt_ms, Table};
+use hetsched::sched::{self, GpConfig, GraphPartition, Scheduler as _};
+use hetsched::sim::{simulate, SimConfig};
+
+fn main() {
+    let platform = Platform::paper();
+    let model = CalibratedModel::paper();
+    println!("{}", platform.table1());
+
+    let size = 1024u32;
+    let mut table = Table::new(
+        format!("Montage workflow, tile size {size}"),
+        &["width", "nodes", "edges", "policy", "makespan_ms", "transfers", "MB_moved"],
+    );
+    for width in [4usize, 8, 16, 32] {
+        let dag = workloads::montage(width, size);
+        for name in ["eager", "dmda", "gp", "heft"] {
+            let mut s = sched::by_name(name).unwrap();
+            let r = simulate(&dag, s.as_mut(), &platform, &model, &SimConfig::default());
+            table.row(vec![
+                width.to_string(),
+                dag.node_count().to_string(),
+                dag.edge_count().to_string(),
+                name.to_string(),
+                fmt_ms(r.makespan_ms),
+                r.ledger.count.to_string(),
+                format!("{:.1}", r.ledger.bytes as f64 / 1e6),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+
+    // Partition the widest mosaic and dump the colored DOT.
+    let dag = workloads::montage(32, size);
+    let mut gp = GraphPartition::new(GpConfig::default());
+    gp.plan(&dag, &platform, &model);
+    let result = gp.last_result().unwrap();
+    println!(
+        "width-32 partition: edge-cut={} us, weights={:?}, R=({:.3}, {:.3})",
+        result.edge_cut,
+        result.part_weights,
+        gp.ratios()[0],
+        gp.ratios()[1]
+    );
+    let out = dot::write(&dag, "montage32", Some(gp.parts()));
+    let path = std::env::temp_dir().join("montage32_partitioned.dot");
+    if std::fs::write(&path, out).is_ok() {
+        println!("partitioned DOT written to {}", path.display());
+    }
+}

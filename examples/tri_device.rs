@@ -1,0 +1,61 @@
+//! Future-work extension (paper §VI): "extend this policy to more
+//! heterogeneous systems, such as systems equipped with a CPU, a GPU, and
+//! an FPGA." The k-way recursive-bisection partitioner makes this a
+//! config change: three target ratios from the generalized Formula (1),
+//! k = 3 parts, pins per device.
+//!
+//! ```bash
+//! cargo run --release --example tri_device
+//! ```
+
+use hetsched::dag::{generate_layered, GeneratorConfig, KernelKind};
+use hetsched::perfmodel::{CalibratedModel, PerfModel};
+use hetsched::platform::Platform;
+use hetsched::report::{fmt_ms, Table};
+use hetsched::sched::{self, GpConfig, GraphPartition, Scheduler as _};
+use hetsched::sim::{simulate, SimConfig};
+
+fn main() {
+    let platform = Platform::tri_device();
+    let model = CalibratedModel::tri_device();
+    println!("{}", platform.table1());
+
+    for (kernel, label) in [(KernelKind::Ma, "MA"), (KernelKind::Mm, "MM")] {
+        let mut table = Table::new(
+            format!("CPU+GPU+FPGA, {label} kernels, 200-kernel task"),
+            &["size", "policy", "makespan_ms", "transfers", "cpu", "gpu", "fpga"],
+        );
+        for &n in &[512u32, 1024, 2048] {
+            let dag = generate_layered(&GeneratorConfig::scaled(200, kernel, n, 17));
+            for name in ["eager", "dmda", "gp"] {
+                let mut s = sched::by_name(name).unwrap();
+                let r = simulate(&dag, s.as_mut(), &platform, &model, &SimConfig::default());
+                table.row(vec![
+                    n.to_string(),
+                    name.to_string(),
+                    fmt_ms(r.makespan_ms),
+                    r.ledger.count.to_string(),
+                    r.tasks_per_device[0].to_string(),
+                    r.tasks_per_device[1].to_string(),
+                    r.tasks_per_device[2].to_string(),
+                ]);
+            }
+        }
+        println!("{}", table.render());
+    }
+
+    // Show the generalized Formula (1) targets and achieved split.
+    let dag = generate_layered(&GeneratorConfig::scaled(200, KernelKind::Ma, 2048, 17));
+    let mut gp = GraphPartition::new(GpConfig::default());
+    gp.plan(&dag, &platform, &model);
+    println!("generalized Formula (1) targets: {:?}", gp.ratios());
+    println!(
+        "achieved part weights: {:?} (edge cut {} us)",
+        gp.last_result().unwrap().part_weights,
+        gp.last_result().unwrap().edge_cut
+    );
+    for d in 0..3 {
+        let t = model.kernel_time_ms(KernelKind::Ma, 2048, d);
+        println!("  device {d} ({}) MA@2048: {t:.3} ms", platform.devices[d].name);
+    }
+}

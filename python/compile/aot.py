@@ -1,0 +1,100 @@
+"""AOT driver: lower every (op, size) pair once to HLO *text* and write a
+manifest the Rust runtime consumes.
+
+HLO text — not `lowered.compile().serialize()` nor a serialized
+HloModuleProto — is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids which the xla crate's bundled xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.matadd import vmem_bytes_per_step as matadd_vmem
+from .kernels.matmul import mxu_utilization_estimate
+from .kernels.matmul import vmem_bytes_per_step as matmul_vmem
+
+#: Sizes shipped as artifacts. The figure sweeps (64..2048) run on the
+#: calibrated simulator; real-compute execution (examples/e2e_dataflow,
+#: integration tests) uses these modest sizes so `make artifacts` stays
+#: fast while still exercising multi-tile grids (256, 384 > one 128 block;
+#: 384 also covers the non-power-of-two path).
+DEFAULT_SIZES = (64, 128, 256, 384, 512)
+DEFAULT_OPS = ("ma", "mm", "mm_add")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO module -> XlaComputation -> HLO text (return_tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_op(op: str, n: int) -> str:
+    fn, _ = model.OPS[op]
+    return to_hlo_text(jax.jit(fn).lower(*model.example_args(op, n)))
+
+
+def vmem_estimate(op: str, n: int) -> int:
+    """Structural VMEM-per-grid-step estimate recorded in the manifest
+    (the §Perf L1 budget; interpret-mode wallclock is not a TPU proxy)."""
+    if op in ("mm", "mm_add"):
+        return matmul_vmem(n, n, n)
+    return matadd_vmem(n, n)
+
+
+def build(out_dir: str, ops, sizes) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for op in ops:
+        _, arity = model.OPS[op]
+        for n in sizes:
+            name = f"{op}_{n}"
+            path = f"{name}.hlo.txt"
+            text = lower_op(op, n)
+            with open(os.path.join(out_dir, path), "w") as f:
+                f.write(text)
+            entries.append({
+                "name": name,
+                "op": op,
+                "n": n,
+                "arity": arity,
+                "path": path,
+                "flops": model.flops(op, n),
+                "io_bytes": model.io_bytes(op, n),
+                "vmem_bytes_per_step": vmem_estimate(op, n),
+                "mxu_fill": (mxu_utilization_estimate(n, n, n)
+                              if op in ("mm", "mm_add") else 0.0),
+            })
+            print(f"  wrote {path} ({len(text)} chars)")
+    manifest = {
+        "format": 1,
+        "dtype": "f32",
+        "interchange": "hlo-text",
+        "entries": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  wrote manifest.json ({len(entries)} entries)")
+    return manifest
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--sizes", type=int, nargs="*", default=list(DEFAULT_SIZES))
+    p.add_argument("--ops", nargs="*", default=list(DEFAULT_OPS))
+    args = p.parse_args()
+    build(args.out_dir, args.ops, args.sizes)
+
+
+if __name__ == "__main__":
+    main()

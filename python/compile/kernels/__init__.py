@@ -1,0 +1,5 @@
+# L1 Pallas kernels (build-time only; lowered AOT into HLO text).
+from .matadd import matadd
+from .matmul import matmul
+
+__all__ = ["matadd", "matmul"]

@@ -1,0 +1,58 @@
+"""Tiled elementwise matrix-addition Pallas kernel (the paper's MA kernel).
+
+MA is bandwidth-bound on every device (paper §IV.B, Fig 4: its GPU-compute
+to PCIe-transfer ratio is < 1), so the kernel is shaped for the VPU rather
+than the MXU: the grid walks row panels, each step streams one
+``(bm, n)`` tile of each operand through VMEM and writes the sum back.
+Lane-dimension (last axis) stays whole to keep 8x128 VPU lanes full.
+
+interpret=True for the same reason as matmul.py (CPU PJRT).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default row-panel height: 8 sublanes x a healthy multiple.
+ROW_PANEL = 256
+
+
+def _largest_divisor_leq(n: int, cap: int) -> int:
+    d = min(n, cap)
+    while n % d != 0:
+        d -= 1
+    return d
+
+
+def _matadd_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] + y_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("panel_cap",))
+def matadd(x: jax.Array, y: jax.Array, *, panel_cap: int = ROW_PANEL) -> jax.Array:
+    """``x + y`` via a row-panel Pallas kernel. Shapes must match."""
+    assert x.shape == y.shape, f"shape mismatch: {x.shape} vs {y.shape}"
+    m, n = x.shape
+    bm = _largest_divisor_leq(m, panel_cap)
+    grid = (m // bm,)
+
+    return pl.pallas_call(
+        _matadd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.result_type(x.dtype, y.dtype)),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(x, y)
+
+
+def vmem_bytes_per_step(m: int, n: int, dtype_bytes: int = 4,
+                        panel_cap: int = ROW_PANEL) -> int:
+    """VMEM residency per grid step (two input tiles + one output tile)."""
+    bm = _largest_divisor_leq(m, panel_cap)
+    return 3 * dtype_bytes * bm * n

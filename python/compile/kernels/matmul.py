@@ -1,0 +1,115 @@
+"""Blocked matrix-multiplication Pallas kernel (the paper's MM kernel).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's MM kernel
+is CUBLAS on a GTX TITAN. Instead of porting a threadblock decomposition,
+this kernel is written TPU-style:
+
+* the grid iterates over (M/bm, N/bn) output tiles with an inner K-block
+  reduction axis — each grid step feeds one `bm x bk @ bk x bn` MXU-shaped
+  matmul;
+* `BlockSpec`s express the HBM->VMEM staging schedule (one A-row-panel and
+  one B-col-panel resident per step);
+* the fp32 accumulator lives in the revisited output tile (innermost grid
+  axis), the standard Pallas accumulation idiom;
+* block sizes default to 128 (the MXU systolic-array edge) and shrink to
+  the largest divisor of the problem size when it is smaller or not
+  divisible, so the kernel stays correct for every shape the test suite
+  throws at it.
+
+The kernel must be lowered with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU systolic array edge; the natural tile for fp32/bf16 matmul on TPU.
+MXU_EDGE = 128
+
+
+def _largest_divisor_leq(n: int, cap: int) -> int:
+    """Largest divisor of ``n`` that is <= ``cap`` (>= 1)."""
+    d = min(n, cap)
+    while n % d != 0:
+        d -= 1
+    return d
+
+
+def pick_blocks(m: int, k: int, n: int, cap: int = MXU_EDGE):
+    """Choose (bm, bk, bn) tile sizes for an ``m x k @ k x n`` product."""
+    return (
+        _largest_divisor_leq(m, cap),
+        _largest_divisor_leq(k, cap),
+        _largest_divisor_leq(n, cap),
+    )
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, nk: int):
+    """One grid step: accumulate ``x_tile @ y_tile`` into the output tile.
+
+    The K axis is the innermost grid dimension, so the same output tile is
+    revisited ``nk`` times; it is zeroed on the first visit and accumulated
+    into afterwards (fp32 accumulation regardless of input dtype).
+    """
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    acc = jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        y_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] += acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_cap",))
+def matmul(x: jax.Array, y: jax.Array, *, block_cap: int = MXU_EDGE) -> jax.Array:
+    """``x @ y`` via a blocked Pallas kernel (fp32 accumulation).
+
+    ``x``: (m, k), ``y``: (k, n) -> (m, n). Output dtype follows ``x``.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {y.shape}"
+    bm, bk, bn = pick_blocks(m, k, n, block_cap)
+    nk = k // bk
+    grid = (m // bm, n // bn, nk)
+
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            # A row-panel: tile (bm, bk) at block-index (i, kk).
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            # B col-panel: tile (bk, bn) at block-index (kk, j).
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(x, y)
+
+
+def vmem_bytes_per_step(m: int, k: int, n: int, dtype_bytes: int = 4,
+                        block_cap: int = MXU_EDGE) -> int:
+    """Estimated VMEM residency per grid step (A tile + B tile + O tile).
+
+    Used by the §Perf analysis: must stay well under the ~16 MiB VMEM of a
+    TPU core for the chosen block sizes.
+    """
+    bm, bk, bn = pick_blocks(m, k, n, block_cap)
+    return dtype_bytes * (bm * bk + bk * bn + bm * bn)
+
+
+def mxu_utilization_estimate(m: int, k: int, n: int,
+                             block_cap: int = MXU_EDGE) -> float:
+    """Fraction of each MXU pass doing useful work (tile fill ratio)."""
+    bm, bk, bn = pick_blocks(m, k, n, block_cap)
+    fill = lambda b: b / (((b + MXU_EDGE - 1) // MXU_EDGE) * MXU_EDGE)
+    return fill(bm) * fill(bk) * fill(bn)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for the Pallas kernels — the L1 correctness signal.
+
+Every kernel in this package must match its oracle to float tolerance
+across the shape/dtype sweep in python/tests/test_kernel.py.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    """Reference mm: plain jnp.matmul with fp32 accumulation."""
+    out = jnp.matmul(
+        x.astype(jnp.float32), y.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return out.astype(x.dtype)
+
+
+def matadd_ref(x, y):
+    """Reference ma: plain elementwise add."""
+    return x + y
+
+
+def mm_add_ref(a, b, c):
+    """Reference fused task kernel: a @ b + c."""
+    return matadd_ref(matmul_ref(a, b), c)

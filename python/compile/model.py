@@ -1,0 +1,71 @@
+"""L2: the JAX compute graph for each task-kernel variant.
+
+The paper's workload is a DAG whose nodes are all the same kernel type
+(matrix addition or matrix multiplication, two inputs -> one output,
+square fp32 matrices). Each node's compute is one of the functions below,
+calling the L1 Pallas kernels; `aot.py` lowers every (op, size) pair once
+to HLO text, and the Rust runtime executes those artifacts on its PJRT CPU
+client. Python never runs on the execution path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matadd, matmul
+
+
+def ma(x, y):
+    """Paper's MA node: elementwise addition of two square matrices."""
+    return matadd(x, y)
+
+
+def mm(x, y):
+    """Paper's MM node: matrix product of two square matrices."""
+    return matmul(x, y)
+
+
+def mm_add(a, b, c):
+    """Fused task node: a @ b + c (used by the Cholesky/GEMM-chain
+    examples; one HLO, one kernel launch on the device)."""
+    return matadd(matmul(a, b), c)
+
+
+def ma_chain(x, y, z):
+    """Two dependent MA nodes fused: (x + y) + z."""
+    return matadd(matadd(x, y), z)
+
+
+#: op name -> (callable, arity). The AOT driver and the Rust manifest
+#: loader agree on these names.
+OPS = {
+    "ma": (ma, 2),
+    "mm": (mm, 2),
+    "mm_add": (mm_add, 3),
+    "ma_chain": (ma_chain, 3),
+}
+
+
+def example_args(op: str, n: int, dtype=jnp.float32):
+    """ShapeDtypeStructs for lowering `op` at square size `n`."""
+    _, arity = OPS[op]
+    spec = jax.ShapeDtypeStruct((n, n), dtype)
+    return (spec,) * arity
+
+
+def flops(op: str, n: int) -> int:
+    """Nominal flop count of one node (used by the perf model docs)."""
+    if op == "ma":
+        return n * n
+    if op == "mm":
+        return 2 * n * n * n
+    if op == "mm_add":
+        return 2 * n * n * n + n * n
+    if op == "ma_chain":
+        return 2 * n * n
+    raise KeyError(op)
+
+
+def io_bytes(op: str, n: int, dtype_bytes: int = 4) -> int:
+    """Bytes moved across PCIe if every operand + result crosses the bus."""
+    _, arity = OPS[op]
+    return (arity + 1) * n * n * dtype_bytes

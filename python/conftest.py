@@ -1,0 +1,7 @@
+# Make `import compile...` work regardless of pytest invocation directory
+# (the canonical validation command runs `pytest python/tests/` from the
+# repository root).
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

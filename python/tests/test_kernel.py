@@ -1,0 +1,154 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the compiled artifacts — the same
+jitted functions tested here are the ones aot.py lowers to HLO text.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matadd, matmul
+from compile.kernels.matadd import _largest_divisor_leq as add_div
+from compile.kernels.matmul import (
+    mxu_utilization_estimate,
+    pick_blocks,
+    vmem_bytes_per_step,
+)
+from compile.kernels.ref import matadd_ref, matmul_ref, mm_add_ref
+
+SIZES = [8, 16, 64, 128, 256, 384]
+
+
+def _rand(shape, seed, dtype=np.float32):
+    return np.random.RandomState(seed).randn(*shape).astype(dtype)
+
+
+# ---------------------------------------------------------------- matmul
+
+@pytest.mark.parametrize("n", SIZES)
+def test_matmul_matches_ref_square(n):
+    x, y = _rand((n, n), 0), _rand((n, n), 1)
+    np.testing.assert_allclose(matmul(x, y), matmul_ref(x, y),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 16, 24), (128, 64, 32), (256, 128, 8),
+                                    (16, 256, 16), (120, 72, 48)])
+def test_matmul_rectangular(m, k, n):
+    x, y = _rand((m, k), 2), _rand((k, n), 3)
+    np.testing.assert_allclose(matmul(x, y), matmul_ref(x, y),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_matmul_identity():
+    x = _rand((64, 64), 4)
+    eye = np.eye(64, dtype=np.float32)
+    np.testing.assert_allclose(matmul(x, eye), x, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(matmul(eye, x), x, rtol=1e-6, atol=1e-6)
+
+
+def test_matmul_zeros():
+    x = _rand((32, 32), 5)
+    z = np.zeros((32, 32), np.float32)
+    assert np.abs(np.asarray(matmul(x, z))).max() == 0.0
+
+
+def test_matmul_bfloat16_inputs_fp32_accumulation():
+    x = _rand((128, 128), 6).astype(jnp.bfloat16)
+    y = _rand((128, 128), 7).astype(jnp.bfloat16)
+    got = matmul(x, y)
+    assert got.dtype == jnp.bfloat16
+    want = matmul_ref(x, y)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5e-2, atol=5e-1)
+
+
+def test_matmul_nondivisible_by_mxu_edge():
+    # 129 is coprime with 128: blocks shrink to divisors; still correct.
+    x, y = _rand((129, 129), 8), _rand((129, 129), 9)
+    np.testing.assert_allclose(matmul(x, y, block_cap=64), matmul_ref(x, y),
+                               rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.sampled_from([8, 16, 24, 32, 48, 64]),
+    k=st.sampled_from([8, 16, 24, 32, 48, 64]),
+    n=st.sampled_from([8, 16, 24, 32, 48, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_hypothesis_shapes(m, k, n, seed):
+    x, y = _rand((m, k), seed % 1000), _rand((k, n), seed % 1000 + 1)
+    np.testing.assert_allclose(matmul(x, y), matmul_ref(x, y),
+                               rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(scale=st.floats(1e-3, 1e3), n=st.sampled_from([16, 32, 64]))
+def test_matmul_scale_invariance(scale, n):
+    # (s*x) @ y == s * (x @ y): catches accumulation-order bugs at range.
+    x, y = _rand((n, n), 10), _rand((n, n), 11)
+    a = np.asarray(matmul((scale * x).astype(np.float32), y), np.float64)
+    b = scale * np.asarray(matmul(x, y), np.float64)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-3 * scale)
+
+
+# ---------------------------------------------------------------- matadd
+
+@pytest.mark.parametrize("n", SIZES)
+def test_matadd_matches_ref(n):
+    x, y = _rand((n, n), 20), _rand((n, n), 21)
+    np.testing.assert_allclose(matadd(x, y), matadd_ref(x, y), rtol=1e-6)
+
+
+@pytest.mark.parametrize("m,n", [(8, 24), (256, 8), (1, 128), (300, 7)])
+def test_matadd_rectangular(m, n):
+    x, y = _rand((m, n), 22), _rand((m, n), 23)
+    np.testing.assert_allclose(matadd(x, y), matadd_ref(x, y), rtol=1e-6)
+
+
+def test_matadd_commutative():
+    x, y = _rand((64, 64), 24), _rand((64, 64), 25)
+    np.testing.assert_allclose(matadd(x, y), matadd(y, x), rtol=0, atol=0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matadd_hypothesis_arbitrary_shapes(m, n, seed):
+    x, y = _rand((m, n), seed % 997), _rand((m, n), seed % 997 + 1)
+    np.testing.assert_allclose(matadd(x, y), matadd_ref(x, y), rtol=1e-6)
+
+
+# ------------------------------------------------------- structural/§Perf
+
+def test_pick_blocks_divide_problem():
+    for (m, k, n) in [(64, 64, 64), (384, 384, 384), (129, 77, 500)]:
+        bm, bk, bn = pick_blocks(m, k, n)
+        assert m % bm == 0 and k % bk == 0 and n % bn == 0
+        assert bm <= 128 and bk <= 128 and bn <= 128
+
+
+def test_vmem_budget_under_16mib():
+    # Largest AOT'd size must keep per-step VMEM well under a TPU core's
+    # ~16 MiB (DESIGN.md §Perf L1 target).
+    assert vmem_bytes_per_step(512, 512, 512) < 16 * 2**20 // 4
+
+
+def test_mxu_fill_full_at_mxu_multiples():
+    assert mxu_utilization_estimate(512, 512, 512) == 1.0
+    assert mxu_utilization_estimate(64, 64, 64) < 1.0
+
+
+def test_add_divisor_helper():
+    assert add_div(256, 256) == 256
+    assert add_div(300, 256) == 150
+    assert add_div(7, 256) == 7
+    assert add_div(97, 64) == 1

@@ -1,0 +1,58 @@
+"""L2 shape/semantics tests for the model-layer ops."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels.ref import matadd_ref, matmul_ref, mm_add_ref
+
+
+def _rand(shape, seed):
+    return np.random.RandomState(seed).randn(*shape).astype(np.float32)
+
+
+@pytest.mark.parametrize("op", list(model.OPS))
+def test_ops_shapes_and_arity(op):
+    fn, arity = model.OPS[op]
+    n = 32
+    args = [_rand((n, n), i) for i in range(arity)]
+    out = fn(*args)
+    assert out.shape == (n, n)
+    assert out.dtype == jnp.float32
+
+
+def test_mm_add_matches_ref():
+    a, b, c = (_rand((48, 48), i) for i in range(3))
+    np.testing.assert_allclose(model.mm_add(a, b, c), mm_add_ref(a, b, c),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_ma_chain_matches_ref():
+    x, y, z = (_rand((48, 48), 10 + i) for i in range(3))
+    np.testing.assert_allclose(model.ma_chain(x, y, z),
+                               matadd_ref(matadd_ref(x, y), z), rtol=1e-6)
+
+
+def test_example_args_match_arity():
+    for op, (_, arity) in model.OPS.items():
+        specs = model.example_args(op, 16)
+        assert len(specs) == arity
+        assert all(s.shape == (16, 16) for s in specs)
+
+
+def test_flops_monotone_in_size():
+    for op in model.OPS:
+        assert model.flops(op, 128) > model.flops(op, 64)
+
+
+def test_mm_flops_cubic():
+    assert model.flops("mm", 64) == 2 * 64**3
+    assert model.flops("ma", 64) == 64 * 64
+
+
+def test_io_bytes():
+    # ma: 2 inputs + 1 output, f32.
+    assert model.io_bytes("ma", 64) == 3 * 64 * 64 * 4
+    assert model.io_bytes("mm_add", 64) == 4 * 64 * 64 * 4

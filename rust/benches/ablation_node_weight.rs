@@ -1,0 +1,50 @@
+//! Ablation D1 — the node-weight policy choice the paper discusses in
+//! §III: node weights can come from GPU kernel times (smaller values →
+//! edge weights get *higher* relative priority → the partitioner works
+//! harder to avoid transfers) or CPU kernel times (the opposite).
+//! "How this policy influences the partition results depends on graph
+//! partition algorithms" — this bench measures it on ours.
+
+use hetsched::benchkit::preamble;
+use hetsched::dag::{generate_layered, GeneratorConfig, KernelKind};
+use hetsched::perfmodel::{CalibratedModel, NodeWeightPolicy};
+use hetsched::platform::Platform;
+use hetsched::report::{fmt_ms, Table};
+use hetsched::sched::{GpConfig, GraphPartition, Scheduler as _};
+use hetsched::sim::{simulate, SimConfig};
+
+fn main() {
+    let platform = Platform::paper();
+    let model = CalibratedModel::paper();
+    preamble("ablation_node_weight — §III node-weight policy choice", &platform);
+
+    let mut table = Table::new(
+        "gp partitions under different node-weight policies (MA kernels)",
+        &["size", "policy", "edge_cut_us", "cpu_tasks", "transfers", "makespan_ms"],
+    );
+    for &n in &[512u32, 1024, 2048] {
+        let dag = generate_layered(&GeneratorConfig::paper(KernelKind::Ma, n));
+        for (policy, label) in [
+            (NodeWeightPolicy::GpuTime, "gpu-time"),
+            (NodeWeightPolicy::CpuTime, "cpu-time"),
+            (NodeWeightPolicy::MeanTime, "mean-time"),
+        ] {
+            let mut gp = GraphPartition::new(GpConfig { node_weight: policy, ..Default::default() });
+            let r = simulate(&dag, &mut gp, &platform, &model, &SimConfig::default());
+            let cut = gp.last_result().map(|p| p.edge_cut).unwrap_or(0);
+            let cpu_tasks = r.tasks_per_device[0];
+            table.row(vec![
+                n.to_string(),
+                label.to_string(),
+                cut.to_string(),
+                cpu_tasks.to_string(),
+                r.ledger.count.to_string(),
+                fmt_ms(r.makespan_ms),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    let _ = table.save_csv("ablation_node_weight");
+    println!("note: smaller node weights (gpu-time) give edge weights higher");
+    println!("priority during partitioning, per the paper's §III discussion.");
+}

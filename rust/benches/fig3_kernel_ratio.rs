@@ -1,0 +1,48 @@
+//! Fig 3 — ratio of CPU execution time to GPU execution time per kernel,
+//! sizes 64..2048 (paper §IV.B).
+//!
+//! Acceptance shape (DESIGN.md §4): the MM curve is steep and
+//! monotonically increasing (≫10× by 1024); the MA curve stays low and
+//! flattens; both start below 1 (launch overhead dominates tiny kernels).
+
+use hetsched::benchkit::{preamble, PAPER_SIZES};
+use hetsched::dag::KernelKind;
+use hetsched::perfmodel::{CalibratedModel, PerfModel};
+use hetsched::platform::Platform;
+use hetsched::report::{fmt_ratio, Table};
+
+fn main() {
+    let platform = Platform::paper();
+    let model = CalibratedModel::paper();
+    preamble("fig3_kernel_ratio — CPU/GPU execution-time ratio", &platform);
+
+    let mut table = Table::new(
+        "Fig 3: ratio of CPU to GPU execution time (computation only)",
+        &["size", "ma_cpu_ms", "ma_gpu_ms", "ma_ratio", "mm_cpu_ms", "mm_gpu_ms", "mm_ratio"],
+    );
+    let mut prev_mm = 0.0;
+    for &n in &PAPER_SIZES {
+        let t = |k: KernelKind, d: usize| model.kernel_time_ms(k, n, d);
+        let ma_ratio = t(KernelKind::Ma, 0) / t(KernelKind::Ma, 1);
+        let mm_ratio = t(KernelKind::Mm, 0) / t(KernelKind::Mm, 1);
+        table.row(vec![
+            n.to_string(),
+            fmt_ratio(t(KernelKind::Ma, 0)),
+            fmt_ratio(t(KernelKind::Ma, 1)),
+            fmt_ratio(ma_ratio),
+            fmt_ratio(t(KernelKind::Mm, 0)),
+            fmt_ratio(t(KernelKind::Mm, 1)),
+            fmt_ratio(mm_ratio),
+        ]);
+        // Paper shape assertions.
+        assert!(mm_ratio >= prev_mm, "MM ratio must be monotone (steep curve)");
+        assert!(ma_ratio < 12.0, "MA ratio must stay low");
+        prev_mm = mm_ratio;
+    }
+    println!("{}", table.render());
+    match table.save_csv("fig3_kernel_ratio") {
+        Ok(p) => println!("csv: {}", p.display()),
+        Err(e) => eprintln!("csv save failed: {e}"),
+    }
+    println!("shape check: MM steep+monotone, MA low — OK");
+}

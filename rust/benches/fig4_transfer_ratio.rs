@@ -1,0 +1,56 @@
+//! Fig 4 — ratio of GPU execution time to PCIe transfer time (2 inputs +
+//! 1 output), sizes 64..2048 (paper §IV.B).
+//!
+//! Acceptance shape: MA stays below 1 everywhere ("requires the majority
+//! of the transferring data"); MM decreases until 384, rises before 1792,
+//! then descends slightly — the CUBLAS-size-optimization curve the paper
+//! observes and our calibrated efficiency table reproduces.
+
+use hetsched::benchkit::{preamble, PAPER_SIZES};
+use hetsched::dag::KernelKind;
+use hetsched::perfmodel::{CalibratedModel, PerfModel};
+use hetsched::platform::Platform;
+use hetsched::report::{fmt_ratio, Table};
+
+fn main() {
+    let platform = Platform::paper();
+    let model = CalibratedModel::paper();
+    preamble("fig4_transfer_ratio — GPU exec / PCIe transfer ratio", &platform);
+
+    let mut table = Table::new(
+        "Fig 4: ratio of GPU execution time to data transfer time (3 matrices)",
+        &["size", "xfer_ms", "ma_gpu_ms", "ma_ratio", "mm_gpu_ms", "mm_ratio"],
+    );
+    let ratio = |k: KernelKind, n: u32| {
+        let bytes = 4 * n as u64 * n as u64;
+        model.kernel_time_ms(k, n, 1) / (3.0 * model.transfer_time_ms(bytes))
+    };
+    for &n in &PAPER_SIZES {
+        let bytes = 4 * n as u64 * n as u64;
+        let xfer = 3.0 * model.transfer_time_ms(bytes);
+        table.row(vec![
+            n.to_string(),
+            fmt_ratio(xfer),
+            fmt_ratio(model.kernel_time_ms(KernelKind::Ma, n, 1)),
+            fmt_ratio(ratio(KernelKind::Ma, n)),
+            fmt_ratio(model.kernel_time_ms(KernelKind::Mm, n, 1)),
+            fmt_ratio(ratio(KernelKind::Mm, n)),
+        ]);
+        assert!(ratio(KernelKind::Ma, n) < 1.0, "MA must stay below 1 at {n}");
+    }
+    println!("{}", table.render());
+
+    // The paper's exact dip-rise-descend sentence, as assertions.
+    let mm = |n| ratio(KernelKind::Mm, n);
+    assert!(mm(64) > mm(128) && mm(128) > mm(256) && mm(256) > mm(384),
+        "MM ratio must decrease until 384");
+    assert!(mm(384) < mm(512) && mm(512) < mm(1024) && mm(1024) < mm(1792),
+        "MM ratio must rise before 1792");
+    assert!(mm(2048) < mm(1792), "MM ratio must descend slightly after 1792");
+
+    match table.save_csv("fig4_transfer_ratio") {
+        Ok(p) => println!("csv: {}", p.display()),
+        Err(e) => eprintln!("csv save failed: {e}"),
+    }
+    println!("shape check: MA<1 everywhere; MM dip@384 / rise@1792 / descend@2048 — OK");
+}

@@ -1,0 +1,82 @@
+//! Fig 6 — execution time of the 38-kernel / 75-edge task with **matrix
+//! multiplication** kernels under eager / dmda / graph-partition (§IV.C).
+//!
+//! Acceptance shape: eager shows the highest execution time everywhere
+//! and diverges as size grows (it keeps feeding the slow CPU); dmda and
+//! gp coincide at large sizes because Formula (1) drives R_cpu → 0 and gp
+//! pins the whole graph to the GPU — the paper's "leaving the
+//! low-efficiency processor idle can be a better option than using it".
+
+use hetsched::benchkit::{preamble, PAPER_ITERATIONS, PAPER_SIZES};
+use hetsched::dag::{generate_layered, GeneratorConfig, KernelKind};
+use hetsched::perfmodel::CalibratedModel;
+use hetsched::platform::Platform;
+use hetsched::report::{fmt_ms, fmt_ratio, Table};
+use hetsched::sched;
+use hetsched::sched::{GpConfig, GraphPartition, Scheduler as _};
+use hetsched::sim::{simulate, SimConfig};
+
+fn main() {
+    let platform = Platform::paper();
+    let model = CalibratedModel::paper();
+    preamble("fig6_mm_schedulers — task makespan, MM kernels", &platform);
+
+    let mut table = Table::new(
+        format!("Fig 6: execution time (ms), MM kernels, {PAPER_ITERATIONS} iterations"),
+        &["size", "eager", "dmda", "gp", "eager/gp", "gp_cpu_tasks"],
+    );
+    let cfg = SimConfig::default();
+    for &n in &PAPER_SIZES {
+        let dag = generate_layered(&GeneratorConfig::paper(KernelKind::Mm, n));
+        let mut makespans = Vec::new();
+        let mut gp_cpu_tasks = 0usize;
+        for name in ["eager", "dmda", "gp"] {
+            let mut s = sched::by_name(name).unwrap();
+            let mut last = None;
+            for _ in 0..PAPER_ITERATIONS {
+                last = Some(simulate(&dag, s.as_mut(), &platform, &model, &cfg));
+            }
+            let r = last.unwrap();
+            if name == "gp" {
+                gp_cpu_tasks = r.tasks_per_device[0];
+            }
+            makespans.push(r.makespan_ms);
+        }
+        table.row(vec![
+            n.to_string(),
+            fmt_ms(makespans[0]),
+            fmt_ms(makespans[1]),
+            fmt_ms(makespans[2]),
+            fmt_ratio(makespans[0] / makespans[2]),
+            gp_cpu_tasks.to_string(),
+        ]);
+        if n >= 384 {
+            assert!(
+                makespans[0] > 2.0 * makespans[2],
+                "eager must lose clearly at {n}: {makespans:?}"
+            );
+            assert!(
+                (makespans[1] - makespans[2]).abs() / makespans[2] < 0.15,
+                "dmda and gp must coincide at {n}: {makespans:?}"
+            );
+            assert!(gp_cpu_tasks <= 1, "gp must pin (almost) everything to GPU at {n}");
+        }
+    }
+    println!("{}", table.render());
+
+    // Paper's Formula (1) observation, printed for the record.
+    let dag = generate_layered(&GeneratorConfig::paper(KernelKind::Mm, 2048));
+    let mut gp = GraphPartition::new(GpConfig::default());
+    gp.plan(&dag, &platform, &model);
+    println!(
+        "Formula (1) at size 2048: R_cpu={:.4} R_gpu={:.4} (paper: \"workload on the CPU is almost 0\")",
+        gp.ratios()[0],
+        gp.ratios()[1]
+    );
+
+    match table.save_csv("fig6_mm_schedulers") {
+        Ok(p) => println!("csv: {}", p.display()),
+        Err(e) => eprintln!("csv save failed: {e}"),
+    }
+    println!("shape check: eager diverges; dmda == gp; gp all-GPU — OK");
+}

@@ -1,0 +1,100 @@
+//! P1 — partitioner substrate validation: runtime and cut quality of the
+//! multilevel partitioner vs graph size (DESIGN.md §6 L3 target: ≤ 100 ms
+//! for 1e5-node graphs), plus a quality sanity ratio against random
+//! assignment.
+
+use hetsched::benchkit::{bench, preamble, BenchOpts};
+use hetsched::dag::metis_io::MetisGraph;
+use hetsched::partition::{partition, quality, PartitionConfig};
+use hetsched::platform::Platform;
+use hetsched::report::{fmt_ms, fmt_ratio, Table};
+use hetsched::util::Pcg32;
+
+/// Random 2D-grid-plus-chords graph (partitionable but not trivial).
+fn make_graph(n: usize, seed: u64) -> MetisGraph {
+    let cols = (n as f64).sqrt().ceil() as usize;
+    let mut adj: Vec<Vec<(usize, i64)>> = vec![Vec::new(); n];
+    let mut rng = Pcg32::seeded(seed);
+    let mut add = |a: usize, b: usize, w: i64, adj: &mut Vec<Vec<(usize, i64)>>| {
+        if a != b && !adj[a].iter().any(|&(x, _)| x == b) {
+            adj[a].push((b, w));
+            adj[b].push((a, w));
+        }
+    };
+    for v in 0..n {
+        if v + 1 < n && (v + 1) % cols != 0 {
+            add(v, v + 1, 10, &mut adj);
+        }
+        if v + cols < n {
+            add(v, v + cols, 10, &mut adj);
+        }
+    }
+    // 5% random chords with light weight.
+    for _ in 0..n / 20 {
+        let a = rng.gen_range(n as u32) as usize;
+        let b = rng.gen_range(n as u32) as usize;
+        add(a, b, 1, &mut adj);
+    }
+    MetisGraph { vwgt: vec![1; n], adj }
+}
+
+fn random_cut(g: &MetisGraph, seed: u64) -> i64 {
+    let mut rng = Pcg32::seeded(seed);
+    let parts: Vec<usize> = (0..g.vertex_count()).map(|_| rng.gen_range(2) as usize).collect();
+    quality::edge_cut(g, &parts)
+}
+
+fn main() {
+    preamble("partitioner — multilevel bisection speed & quality", &Platform::paper());
+
+    let mut table = Table::new(
+        "partitioner scaling (k=2, uniform targets)",
+        &["vertices", "edges", "time_ms", "cut", "cut/random", "balance"],
+    );
+    for &n in &[100usize, 1_000, 10_000, 100_000] {
+        let g = make_graph(n, 3);
+        let cfg = PartitionConfig::default();
+        let opts = BenchOpts { warmup_iters: 1, iters: if n >= 100_000 { 3 } else { 10 } };
+        let summary = bench(&opts, || partition(&g, &cfg));
+        let res = partition(&g, &cfg);
+        let rnd = random_cut(&g, 99).max(1);
+        let total: i64 = res.part_weights.iter().sum();
+        let balance = res.part_weights.iter().cloned().fold(0, i64::max) as f64
+            / (total as f64 / 2.0);
+        table.row(vec![
+            n.to_string(),
+            g.edge_count().to_string(),
+            fmt_ms(summary.mean),
+            res.edge_cut.to_string(),
+            fmt_ratio(res.edge_cut as f64 / rnd as f64),
+            fmt_ratio(balance),
+        ]);
+        assert!(
+            res.edge_cut < rnd / 4,
+            "multilevel cut must beat random by 4x at n={n}: {} vs {rnd}",
+            res.edge_cut
+        );
+        if n == 100_000 {
+            println!("100k-vertex partition: {:.1} ms (target <= 100 ms)", summary.mean);
+        }
+    }
+    println!("{}", table.render());
+
+    // Skewed-target quality (the gp use case).
+    let mut skew = Table::new(
+        "skewed targets on 10k vertices (R_cpu sweep)",
+        &["r0", "achieved", "cut"],
+    );
+    let g = make_graph(10_000, 5);
+    for &r0 in &[0.5, 0.25, 0.1, 0.05, 0.01] {
+        let cfg = PartitionConfig::bipartition(r0, 1.0 - r0);
+        let res = partition(&g, &cfg);
+        skew.row(vec![
+            fmt_ratio(r0),
+            fmt_ratio(res.fractions()[0]),
+            res.edge_cut.to_string(),
+        ]);
+    }
+    println!("{}", skew.render());
+    let _ = table.save_csv("partitioner");
+}

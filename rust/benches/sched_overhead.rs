@@ -1,0 +1,59 @@
+//! D3 — scheduling overhead (paper §IV.D): "the dmda policy takes time to
+//! make a decision, while the eager does not. The graph-partition
+//! scheduler only makes a singular decision and uses the same decision
+//! for all following tasks, which averages the scheduling overhead."
+//!
+//! Reported: per-task decision time (ns) for each policy and the one-off
+//! plan time for offline policies, over growing task counts, so gp's
+//! amortization is visible.
+
+use hetsched::benchkit::preamble;
+use hetsched::dag::{generate_layered, GeneratorConfig, KernelKind};
+use hetsched::perfmodel::CalibratedModel;
+use hetsched::platform::Platform;
+use hetsched::report::Table;
+use hetsched::sched;
+use hetsched::sim::{simulate, SimConfig};
+
+const POLICIES: [&str; 5] = ["eager", "dmda", "gp", "heft", "random"];
+
+fn main() {
+    let platform = Platform::paper();
+    let model = CalibratedModel::paper();
+    preamble("sched_overhead — §IV.D decision-time comparison", &platform);
+
+    let mut table = Table::new(
+        "scheduling overhead (MM kernels at 1024)",
+        &["kernels", "policy", "decision_ns_per_task", "plan_us", "amortized_ns_per_task"],
+    );
+    for &kernels in &[38usize, 380, 3800] {
+        let cfg = GeneratorConfig::scaled(kernels, KernelKind::Mm, 1024, 5);
+        let dag = generate_layered(&cfg);
+        for name in POLICIES {
+            let mut s = sched::by_name(name).unwrap();
+            // Median of 5 runs to de-noise wall timing.
+            let mut decision = Vec::new();
+            let mut plan = Vec::new();
+            for _ in 0..5 {
+                let r = simulate(&dag, s.as_mut(), &platform, &model, &SimConfig::default());
+                decision.push(r.decision_ns_per_task());
+                plan.push(r.plan_ns);
+            }
+            decision.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            plan.sort_unstable();
+            let d = decision[2];
+            let p = plan[2];
+            table.row(vec![
+                kernels.to_string(),
+                name.to_string(),
+                format!("{d:.0}"),
+                format!("{:.1}", p as f64 / 1e3),
+                format!("{:.0}", d + p as f64 / kernels as f64),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    let _ = table.save_csv("sched_overhead");
+    println!("expected shape: eager cheapest per task; dmda pays per-decision;");
+    println!("gp's plan cost amortizes away as the task count grows (§IV.D).");
+}

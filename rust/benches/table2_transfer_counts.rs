@@ -1,0 +1,76 @@
+//! "Table 2" — data-transfer frequency per scheduler (paper §IV.C text,
+//! tabulated): for MA tasks the eager policy incurs the most transfers,
+//! dmda fewer (data-aware), graph-partition the fewest (minimal edge
+//! cut); for large MM all reasonable policies converge to the all-GPU
+//! transfer floor while eager thrashes data both ways.
+
+use hetsched::benchkit::{preamble, PAPER_SIZES};
+use hetsched::dag::{generate_layered, GeneratorConfig, KernelKind};
+use hetsched::perfmodel::CalibratedModel;
+use hetsched::platform::Platform;
+use hetsched::report::Table;
+use hetsched::sched;
+use hetsched::sim::{simulate, SimConfig};
+
+const POLICIES: [&str; 5] = ["eager", "dmda", "gp", "gpu-only", "random"];
+
+fn main() {
+    let platform = Platform::paper();
+    let model = CalibratedModel::paper();
+    preamble("table2_transfer_counts — transfer frequency per policy", &platform);
+
+    let mut agg = [0u64; 3]; // eager, dmda, gp totals over the MA sweep
+    for (kernel, label) in [(KernelKind::Ma, "MA"), (KernelKind::Mm, "MM")] {
+        let mut table = Table::new(
+            format!("Transfer counts, {label} kernels (38-kernel task)"),
+            &["size", "eager", "dmda", "gp", "gpu-only", "random"],
+        );
+        let mut bytes_table = Table::new(
+            format!("Transfer megabytes, {label} kernels"),
+            &["size", "eager", "dmda", "gp", "gpu-only", "random"],
+        );
+        for &n in &PAPER_SIZES {
+            let dag = generate_layered(&GeneratorConfig::paper(kernel, n));
+            let mut counts = Vec::new();
+            let mut mbs = Vec::new();
+            for name in POLICIES {
+                let mut s = sched::by_name(name).unwrap();
+                let r = simulate(&dag, s.as_mut(), &platform, &model, &SimConfig::default());
+                counts.push(r.ledger.count);
+                mbs.push(format!("{:.2}", r.ledger.bytes as f64 / 1e6));
+            }
+            if kernel == KernelKind::Ma && n >= 256 {
+                // The robust paper claim: gp yields (near-)minimal
+                // transfers at every size, and strictly minimal summed
+                // over the sweep (asserted below). Below 256 the GPU is
+                // not worth using at all (Fig 3 ratio < 1): dmda
+                // degenerates to cpu-only with ~no transfers, which is
+                // outside the claim's regime.
+                if n >= 512 {
+                    let best_online = counts[0].min(counts[1]);
+                    assert!(counts[2] <= best_online + 2,
+                        "gp must be near-minimal at {n}: {counts:?}");
+                }
+                agg[0] += counts[0];
+                agg[1] += counts[1];
+                agg[2] += counts[2];
+            }
+            let mut row = vec![n.to_string()];
+            row.extend(counts.iter().map(u64::to_string));
+            table.row(row);
+            let mut row = vec![n.to_string()];
+            row.extend(mbs);
+            bytes_table.row(row);
+        }
+        println!("{}", table.render());
+        println!("{}", bytes_table.render());
+        let _ = table.save_csv(&format!("table2_transfers_{}", label.to_lowercase()));
+    }
+    assert!(agg[2] < agg[0] && agg[2] < agg[1],
+        "gp must be minimal over the MA sweep (n>=256): eager={} dmda={} gp={}",
+        agg[0], agg[1], agg[2]);
+    println!(
+        "MA sweep totals (n>=256): eager={} dmda={} gp={} — gp minimal — OK",
+        agg[0], agg[1], agg[2]
+    );
+}

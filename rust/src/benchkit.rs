@@ -1,0 +1,72 @@
+//! Bench harness (criterion is unavailable offline): wall-clock timing
+//! with warm-up, repetition and summary statistics, plus the standard
+//! header every bench target prints (the paper's Table I).
+
+use std::time::Instant;
+
+use crate::platform::Platform;
+use crate::util::stats::Summary;
+
+/// Options for [`bench`].
+#[derive(Debug, Clone)]
+pub struct BenchOpts {
+    pub warmup_iters: usize,
+    pub iters: usize,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts { warmup_iters: 2, iters: 10 }
+    }
+}
+
+/// Time `f` over `opts.iters` runs (after warm-up); returns ms statistics.
+pub fn bench<T>(opts: &BenchOpts, mut f: impl FnMut() -> T) -> Summary {
+    for _ in 0..opts.warmup_iters {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(opts.iters);
+    for _ in 0..opts.iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    Summary::from(&samples)
+}
+
+/// Print the standard bench preamble: bench name + simulated platform
+/// (the paper's Table I).
+pub fn preamble(name: &str, platform: &Platform) {
+    println!("### {name}");
+    println!("{}", platform.table1());
+}
+
+/// The size sweep used by the paper's figures (square matrix side).
+pub const PAPER_SIZES: [u32; 11] = [64, 128, 256, 384, 512, 768, 1024, 1280, 1536, 1792, 2048];
+
+/// The paper's iteration count per test case ("we calculated averages by
+/// running 100 iterations").
+pub const PAPER_ITERATIONS: usize = 100;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let s = bench(&BenchOpts { warmup_iters: 1, iters: 5 }, || {
+            std::hint::black_box((0..1000).sum::<u64>())
+        });
+        assert_eq!(s.n, 5);
+        assert!(s.mean >= 0.0);
+        assert!(s.min <= s.mean && s.mean <= s.max);
+    }
+
+    #[test]
+    fn paper_constants() {
+        assert_eq!(PAPER_SIZES.len(), 11);
+        assert_eq!(PAPER_SIZES[0], 64);
+        assert_eq!(PAPER_SIZES[10], 2048);
+        assert_eq!(PAPER_ITERATIONS, 100);
+    }
+}

@@ -1,0 +1,148 @@
+//! Hand-rolled CLI (clap is unavailable offline): subcommands with
+//! `--flag value` / `--flag` options.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First positional token (the subcommand).
+    pub command: String,
+    /// Remaining positionals.
+    pub positional: Vec<String>,
+    /// `--key value` and bare `--switch` (value "true").
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (no argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare -- not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // Next token is the value unless it is another flag.
+                    match it.peek() {
+                        Some(nxt) if !nxt.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.flags.insert(name.to_string(), v);
+                        }
+                        _ => {
+                            out.flags.insert(name.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else if out.command.is_empty() {
+                out.command = tok;
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn flag_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn flag_u32(&self, name: &str, default: u32) -> Result<u32> {
+        match self.flag(name) {
+            Some(v) => v.parse().with_context(|| format!("bad --{name} {v:?}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn flag_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            Some(v) => v.parse().with_context(|| format!("bad --{name} {v:?}")),
+            None => Ok(default),
+        }
+    }
+}
+
+/// Top-level usage text.
+pub const USAGE: &str = "\
+hetsched — graph-partition scheduling for heterogeneous data-flow workloads
+
+USAGE: hetsched <command> [flags]
+
+COMMANDS:
+  run        Run one workload under a scheduler (simulated or real PJRT).
+             --scheduler eager|dmda|gp|heft|random|roundrobin|cpu-only|gpu-only
+             --workload paper|scaled|montage|cholesky|stencil|forkjoin|chain
+             --kernel ma|mm|mm_add  --size N  --kernels N  --iterations N
+             --config FILE  --real  --tri  --trace FILE  --dump-dot FILE
+  partition  Partition a DOT task graph (gpmetis-like).
+             --dot FILE [--out FILE] [--k N] [--kernel K] [--size N]
+  figures    Reproduce all paper tables quickly (sim, 1 iteration/size).
+  measure    Measure real PJRT kernel times for the shipped artifacts.
+             [--reps N]
+  stats      Structural statistics of a DOT graph or built-in workload.
+             [--dot FILE | --workload ...]
+  gen        Emit a random layered DAG as DOT (the paper's generator).
+             [--kernels N] [--edges N] [--kernel K] [--size N] [--seed S]
+  info       Show platform (Table I) and artifact manifest.
+  help       This text.
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Args {
+        Args::parse(tokens.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let a = parse(&["run", "--scheduler", "gp", "--size", "512", "--real"]);
+        assert_eq!(a.command, "run");
+        assert_eq!(a.flag("scheduler"), Some("gp"));
+        assert_eq!(a.flag_u32("size", 0).unwrap(), 512);
+        assert!(a.has("real"));
+        assert!(!a.has("sim"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse(&["run", "--size=128"]);
+        assert_eq!(a.flag("size"), Some("128"));
+    }
+
+    #[test]
+    fn switch_before_flag() {
+        let a = parse(&["run", "--real", "--scheduler", "dmda"]);
+        assert_eq!(a.flag("real"), Some("true"));
+        assert_eq!(a.flag("scheduler"), Some("dmda"));
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = parse(&["partition", "graph.dot", "--k", "2"]);
+        assert_eq!(a.command, "partition");
+        assert_eq!(a.positional, vec!["graph.dot"]);
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse(&["run", "--size", "huge"]);
+        assert!(a.flag_u32("size", 0).is_err());
+        assert_eq!(a.flag_u32("missing", 7).unwrap(), 7);
+    }
+}

@@ -1,0 +1,264 @@
+//! Run configuration: a small INI/TOML-subset format (`key = value` lines
+//! with `[section]` headers and `#` comments) plus the typed [`RunConfig`]
+//! the CLI and benches consume. serde is unavailable offline, so parsing
+//! is hand-rolled and strict.
+//!
+//! Example (`examples/run.cfg`):
+//! ```text
+//! [workload]
+//! kind = paper          # paper | montage | cholesky | stencil | forkjoin | chain
+//! kernel = mm
+//! size = 1024
+//! kernels = 38          # node count for scaled workloads
+//!
+//! [run]
+//! scheduler = gp
+//! iterations = 100
+//! platform = paper      # paper | tri
+//! return-to-host = true
+//! ```
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::dag::generator::{generate_layered, GeneratorConfig};
+use crate::dag::{workloads, Dag, KernelKind};
+use crate::platform::Platform;
+
+/// Raw parsed config: section -> key -> value.
+pub type RawConfig = BTreeMap<String, BTreeMap<String, String>>;
+
+/// Parse the `key = value` format (sections optional; pre-section keys go
+/// into the "" section).
+pub fn parse_raw(src: &str) -> Result<RawConfig> {
+    let mut out: RawConfig = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in src.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name
+                .strip_suffix(']')
+                .with_context(|| format!("line {}: bad section header", lineno + 1))?;
+            section = name.trim().to_string();
+            out.entry(section.clone()).or_default();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+        out.entry(section.clone())
+            .or_default()
+            .insert(k.trim().to_string(), v.trim().trim_matches('"').to_string());
+    }
+    Ok(out)
+}
+
+/// Workload families the config system can build.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WorkloadKind {
+    /// The paper's 38-kernel / 75-edge random instance.
+    Paper,
+    /// Scaled random layered DAG with `kernels` nodes.
+    Scaled { kernels: usize, seed: u64 },
+    Montage { width: usize },
+    Cholesky { tiles: usize },
+    Stencil { rows: usize, cols: usize },
+    ForkJoin { width: usize },
+    Chain { len: usize },
+}
+
+/// A fully-typed run description.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub workload: WorkloadKind,
+    pub kernel: KernelKind,
+    pub size: u32,
+    pub scheduler: String,
+    pub iterations: usize,
+    pub tri_platform: bool,
+    pub return_to_host: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            workload: WorkloadKind::Paper,
+            kernel: KernelKind::Mm,
+            size: 1024,
+            scheduler: "gp".into(),
+            iterations: 1,
+            tri_platform: false,
+            return_to_host: true,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Build from a parsed raw config.
+    pub fn from_raw(raw: &RawConfig) -> Result<RunConfig> {
+        let mut cfg = RunConfig::default();
+        let empty = BTreeMap::new();
+        let w = raw.get("workload").unwrap_or(&empty);
+        let r = raw.get("run").unwrap_or(&empty);
+
+        if let Some(k) = w.get("kernel") {
+            cfg.kernel = KernelKind::parse(k).with_context(|| format!("bad kernel {k:?}"))?;
+        }
+        if let Some(s) = w.get("size") {
+            cfg.size = s.parse().with_context(|| format!("bad size {s:?}"))?;
+        }
+        let get_usize = |m: &BTreeMap<String, String>, key: &str, default: usize| -> Result<usize> {
+            match m.get(key) {
+                Some(v) => v.parse().with_context(|| format!("bad {key} {v:?}")),
+                None => Ok(default),
+            }
+        };
+        match w.get("kind").map(String::as_str).unwrap_or("paper") {
+            "paper" => cfg.workload = WorkloadKind::Paper,
+            "scaled" => {
+                cfg.workload = WorkloadKind::Scaled {
+                    kernels: get_usize(w, "kernels", 38)?,
+                    seed: get_usize(w, "seed", 2015)? as u64,
+                }
+            }
+            "montage" => cfg.workload = WorkloadKind::Montage { width: get_usize(w, "width", 8)? },
+            "cholesky" => {
+                cfg.workload = WorkloadKind::Cholesky { tiles: get_usize(w, "tiles", 5)? }
+            }
+            "stencil" => {
+                cfg.workload = WorkloadKind::Stencil {
+                    rows: get_usize(w, "rows", 6)?,
+                    cols: get_usize(w, "cols", 6)?,
+                }
+            }
+            "forkjoin" => {
+                cfg.workload = WorkloadKind::ForkJoin { width: get_usize(w, "width", 16)? }
+            }
+            "chain" => cfg.workload = WorkloadKind::Chain { len: get_usize(w, "len", 16)? },
+            other => bail!("unknown workload kind {other:?}"),
+        }
+
+        if let Some(s) = r.get("scheduler") {
+            cfg.scheduler = s.clone();
+        }
+        cfg.iterations = get_usize(r, "iterations", 1)?;
+        match r.get("platform").map(String::as_str).unwrap_or("paper") {
+            "paper" => cfg.tri_platform = false,
+            "tri" => cfg.tri_platform = true,
+            other => bail!("unknown platform {other:?}"),
+        }
+        if let Some(b) = r.get("return-to-host") {
+            cfg.return_to_host = b == "true";
+        }
+        Ok(cfg)
+    }
+
+    /// Parse a config file's text.
+    pub fn parse(src: &str) -> Result<RunConfig> {
+        Self::from_raw(&parse_raw(src)?)
+    }
+
+    /// Materialize the workload DAG.
+    pub fn build_dag(&self) -> Dag {
+        match &self.workload {
+            WorkloadKind::Paper => {
+                generate_layered(&GeneratorConfig::paper(self.kernel, self.size))
+            }
+            WorkloadKind::Scaled { kernels, seed } => generate_layered(
+                &GeneratorConfig::scaled(*kernels, self.kernel, self.size, *seed),
+            ),
+            WorkloadKind::Montage { width } => workloads::montage(*width, self.size),
+            WorkloadKind::Cholesky { tiles } => workloads::cholesky(*tiles, self.size),
+            WorkloadKind::Stencil { rows, cols } => workloads::stencil(*rows, *cols, self.size),
+            WorkloadKind::ForkJoin { width } => {
+                workloads::fork_join(*width, self.kernel, self.size)
+            }
+            WorkloadKind::Chain { len } => workloads::chain(*len, self.kernel, self.size),
+        }
+    }
+
+    /// Materialize the platform.
+    pub fn build_platform(&self) -> Platform {
+        if self.tri_platform {
+            Platform::tri_device()
+        } else {
+            Platform::paper()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_raw_sections_and_comments() {
+        let raw = parse_raw("a = 1\n[s]\n# comment\nb = two # trailing\n[t]\nc = \"three\"\n").unwrap();
+        assert_eq!(raw[""]["a"], "1");
+        assert_eq!(raw["s"]["b"], "two");
+        assert_eq!(raw["t"]["c"], "three");
+    }
+
+    #[test]
+    fn parse_raw_rejects_bad_lines() {
+        assert!(parse_raw("just a line").is_err());
+        assert!(parse_raw("[unterminated").is_err());
+    }
+
+    #[test]
+    fn full_config_roundtrip() {
+        let src = r#"
+            [workload]
+            kind = cholesky
+            tiles = 4
+            kernel = mm_add
+            size = 256
+            [run]
+            scheduler = dmda
+            iterations = 10
+            platform = tri
+            return-to-host = false
+        "#;
+        let cfg = RunConfig::parse(src).unwrap();
+        assert_eq!(cfg.workload, WorkloadKind::Cholesky { tiles: 4 });
+        assert_eq!(cfg.kernel, KernelKind::MmAdd);
+        assert_eq!(cfg.size, 256);
+        assert_eq!(cfg.scheduler, "dmda");
+        assert_eq!(cfg.iterations, 10);
+        assert!(cfg.tri_platform);
+        assert!(!cfg.return_to_host);
+        assert_eq!(cfg.build_platform().device_count(), 3);
+        assert!(cfg.build_dag().node_count() > 0);
+    }
+
+    #[test]
+    fn defaults_are_paper() {
+        let cfg = RunConfig::parse("").unwrap();
+        assert_eq!(cfg.workload, WorkloadKind::Paper);
+        let dag = cfg.build_dag();
+        assert_eq!(dag.kernel_count(), 38);
+        assert_eq!(dag.edge_count(), 75);
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        assert!(RunConfig::parse("[workload]\nkind = bogus\n").is_err());
+        assert!(RunConfig::parse("[workload]\nkernel = conv\n").is_err());
+        assert!(RunConfig::parse("[workload]\nsize = big\n").is_err());
+        assert!(RunConfig::parse("[run]\nplatform = mars\n").is_err());
+    }
+
+    #[test]
+    fn every_workload_kind_builds() {
+        for kind in ["paper", "scaled", "montage", "cholesky", "stencil", "forkjoin", "chain"] {
+            let cfg = RunConfig::parse(&format!("[workload]\nkind = {kind}\nsize = 64\n")).unwrap();
+            let dag = cfg.build_dag();
+            assert!(dag.node_count() > 0, "{kind} built empty dag");
+            assert!(crate::dag::is_acyclic(&dag), "{kind} not acyclic");
+        }
+    }
+}

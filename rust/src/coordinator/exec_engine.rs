@@ -1,0 +1,480 @@
+//! The threaded real-compute execution engine.
+//!
+//! Topology (per the paper's runtime): a coordinator owns global state —
+//! ready queue, MSI [`Directory`], per-memory-node [`HostStore`], transfer
+//! ledger — and one worker thread runs per device worker (the paper: 3 CPU
+//! workers + 1 GPU worker). Kernels execute for real through the shared
+//! PJRT [`KernelRuntime`]; "bus transfers" are real buffer copies between
+//! per-node address spaces, counted exactly like the simulator counts
+//! them.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::oracle;
+use crate::dag::{Dag, KernelKind, NodeId};
+use crate::data::{DataHandle, Directory, HostStore, TransferLedger};
+use crate::perfmodel::PerfModel;
+use crate::platform::Platform;
+use crate::runtime::RuntimeService;
+use crate::sched::{DispatchCtx, InputInfo, Scheduler};
+use crate::sim::{RunReport, TraceEvent};
+
+/// Options for a real run.
+#[derive(Debug, Clone)]
+pub struct ExecOptions {
+    /// Seed for the deterministic initial input buffers.
+    pub seed: u64,
+    /// Verify every node output against the pure-Rust oracle.
+    pub verify: bool,
+    /// Transfer sink outputs back to host at the end.
+    pub return_results_to_host: bool,
+    /// Record trace events.
+    pub collect_trace: bool,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        ExecOptions { seed: 42, verify: true, return_results_to_host: true, collect_trace: true }
+    }
+}
+
+/// The real execution engine.
+pub struct ExecEngine {
+    runtime: RuntimeService,
+    platform: Platform,
+}
+
+enum WorkerMsg {
+    Run {
+        task: NodeId,
+        kernel: KernelKind,
+        n: u32,
+        inputs: Vec<Vec<f32>>,
+    },
+    Stop,
+}
+
+struct Completion {
+    task: NodeId,
+    device: usize,
+    worker: usize,
+    output: Vec<f32>,
+    start_ms: f64,
+    end_ms: f64,
+}
+
+impl ExecEngine {
+    pub fn new(runtime: RuntimeService, platform: Platform) -> ExecEngine {
+        ExecEngine { runtime, platform }
+    }
+
+    /// Execute `dag` under `scheduler` with real kernels; returns the run
+    /// report and (if verification is on) checks outputs in-line.
+    pub fn run(
+        &self,
+        dag: &Dag,
+        scheduler: &mut dyn Scheduler,
+        model: &dyn PerfModel,
+        opts: &ExecOptions,
+    ) -> Result<RunReport> {
+        let n_nodes = dag.node_count();
+        let k = self.platform.device_count();
+        let host = self.platform.host_node();
+        let epoch = Instant::now();
+        let now_ms = move || epoch.elapsed().as_secs_f64() * 1e3;
+
+        // --- offline plan ---
+        let t0 = Instant::now();
+        scheduler.plan(dag, &self.platform, model);
+        let plan_ns = t0.elapsed().as_nanos() as u64;
+
+        // --- data state ---
+        let mut dir = Directory::new();
+        let mut store = HostStore::new(k);
+        let out: Vec<DataHandle> = (0..n_nodes)
+            .map(|v| {
+                let sz = dag.node(v).size as u64;
+                dir.alloc_unwritten(4 * sz * sz)
+            })
+            .collect();
+        let mut initial: Vec<Vec<DataHandle>> = Vec::with_capacity(n_nodes);
+        for v in 0..n_nodes {
+            let node = dag.node(v);
+            let missing = node.kernel.arity().saturating_sub(dag.in_degree(v));
+            let mut hs = Vec::with_capacity(missing);
+            for slot in 0..missing {
+                let sz = node.size as u64;
+                let h = dir.alloc(4 * sz * sz, host);
+                store.put(h, host, oracle::initial_input(v, slot, node.size, opts.seed));
+                hs.push(h);
+            }
+            initial.push(hs);
+        }
+
+        // --- workers ---
+        let (done_tx, done_rx) = mpsc::channel::<Completion>();
+        let mut senders: Vec<Vec<mpsc::Sender<WorkerMsg>>> = Vec::with_capacity(k);
+        let mut joins = Vec::new();
+        for (dev, spec) in self.platform.devices.iter().enumerate() {
+            let mut dev_senders = Vec::with_capacity(spec.workers);
+            for w in 0..spec.workers {
+                let (tx, rx) = mpsc::channel::<WorkerMsg>();
+                let done = done_tx.clone();
+                let rt = self.runtime.clone();
+                let join = std::thread::Builder::new()
+                    .name(format!("worker-d{dev}w{w}"))
+                    .spawn(move || {
+                        while let Ok(msg) = rx.recv() {
+                            match msg {
+                                WorkerMsg::Run { task, kernel, n, inputs } => {
+                                    let start_ms = epoch.elapsed().as_secs_f64() * 1e3;
+                                    let output = rt
+                                        .execute(kernel, n, inputs)
+                                        .expect("kernel execution failed");
+                                    let end_ms = epoch.elapsed().as_secs_f64() * 1e3;
+                                    let _ = done.send(Completion {
+                                        task,
+                                        device: dev,
+                                        worker: w,
+                                        output,
+                                        start_ms,
+                                        end_ms,
+                                    });
+                                }
+                                WorkerMsg::Stop => break,
+                            }
+                        }
+                    })
+                    .context("spawning worker")?;
+                joins.push(join);
+                dev_senders.push(tx);
+            }
+            senders.push(dev_senders);
+        }
+
+        // --- coordinator loop ---
+        let mut ledger = TransferLedger::new();
+        let mut indeg: Vec<usize> = (0..n_nodes).map(|v| dag.in_degree(v)).collect();
+        let mut ready: Vec<NodeId> = (0..n_nodes).filter(|&v| indeg[v] == 0).collect();
+        let mut assignments = vec![usize::MAX; n_nodes];
+        let mut tasks_per_device = vec![0usize; k];
+        let mut device_busy = vec![0.0f64; k];
+        // Estimated backlog per device (model-time), the dispatch signal.
+        let mut device_backlog = vec![0.0f64; k];
+        // Next free worker per device, round-robin over its workers.
+        let mut next_worker = vec![0usize; k];
+        let mut decision_ns = 0u64;
+        let mut trace = Vec::new();
+        let mut in_flight = 0usize;
+        let mut finished = vec![false; n_nodes];
+        let mut outputs_done = 0usize;
+        let mut node_outputs: HashMap<NodeId, Vec<f32>> = HashMap::new();
+
+        while outputs_done < n_nodes {
+            // Dispatch everything ready.
+            while let Some(v) = ready.pop() {
+                let node = dag.node(v);
+                if node.kernel == KernelKind::Source {
+                    // Zero-cost: output is a host-resident zero buffer.
+                    let sz = node.size as usize;
+                    dir.acquire_write(out[v], host);
+                    store.put(out[v], host, vec![0f32; sz * sz]);
+                    assignments[v] = host;
+                    finished[v] = true;
+                    outputs_done += 1;
+                    for &e in dag.out_edges(v) {
+                        let wv = dag.edge(e).dst;
+                        indeg[wv] -= 1;
+                        if indeg[wv] == 0 {
+                            ready.push(wv);
+                        }
+                    }
+                    continue;
+                }
+
+                // Input handles: in-edge outputs (capped at arity for the
+                // kernel math, all fetched for coherence) + initials.
+                let mut handles: Vec<DataHandle> = dag
+                    .in_edges(v)
+                    .iter()
+                    .map(|&e| out[dag.edge(e).src])
+                    .collect();
+                handles.extend(&initial[v]);
+                let inputs_info: Vec<InputInfo> = handles
+                    .iter()
+                    .map(|&h| InputInfo { bytes: dir.bytes(h), valid_mask: dir.valid_mask(h) })
+                    .collect();
+
+                let t_now = now_ms();
+                let device_free: Vec<f64> =
+                    device_backlog.iter().map(|&b| t_now + b).collect();
+                let ctx = DispatchCtx {
+                    task: v,
+                    kernel: node.kernel,
+                    size: node.size,
+                    ready_ms: t_now,
+                    device_free_ms: &device_free,
+                    inputs: &inputs_info,
+                    platform: &self.platform,
+                    model,
+                };
+                let td = Instant::now();
+                let dev = scheduler.select(&ctx);
+                decision_ns += td.elapsed().as_nanos() as u64;
+
+                // MSI acquisition: real buffer copies between node spaces.
+                for &h in &handles {
+                    if let Some(src) = dir.acquire_read(h, dev) {
+                        let bytes = store.transfer(h, src, dev);
+                        ledger.record(src, dev, bytes, model.transfer_time_ms(bytes));
+                    }
+                }
+                dir.acquire_write(out[v], dev);
+                // MSI write invalidation drops stale copies physically.
+                for other in 0..k {
+                    if other != dev && store.get(out[v], other).is_some() {
+                        store.invalidate(out[v], other);
+                    }
+                }
+
+                // Kernel math consumes the first `arity` inputs.
+                let arity = node.kernel.arity();
+                let input_bufs: Vec<Vec<f32>> = handles
+                    .iter()
+                    .take(arity)
+                    .map(|&h| store.get(h, dev).expect("input resident after acquire").clone())
+                    .collect();
+
+                assignments[v] = dev;
+                tasks_per_device[dev] += 1;
+                device_backlog[dev] += model.kernel_time_ms(node.kernel, node.size, dev);
+                let w = next_worker[dev];
+                next_worker[dev] = (w + 1) % senders[dev].len();
+                senders[dev][w]
+                    .send(WorkerMsg::Run {
+                        task: v,
+                        kernel: node.kernel,
+                        n: node.size,
+                        inputs: input_bufs,
+                    })
+                    .context("worker channel closed")?;
+                in_flight += 1;
+            }
+
+            if in_flight == 0 {
+                break;
+            }
+            // Wait for one completion, then loop to dispatch newly-ready.
+            let c = done_rx.recv().context("workers gone")?;
+            in_flight -= 1;
+            outputs_done += 1;
+            finished[c.task] = true;
+            store.put(out[c.task], c.device, c.output.clone());
+            node_outputs.insert(c.task, c.output);
+            device_busy[c.device] += c.end_ms - c.start_ms;
+            let node = dag.node(c.task);
+            let est = model.kernel_time_ms(node.kernel, node.size, c.device);
+            device_backlog[c.device] = (device_backlog[c.device] - est).max(0.0);
+            if opts.collect_trace {
+                trace.push(TraceEvent {
+                    task: c.task,
+                    device: c.device,
+                    worker: c.worker,
+                    start_ms: c.start_ms,
+                    end_ms: c.end_ms,
+                });
+            }
+            for &e in dag.out_edges(c.task) {
+                let wv = dag.edge(e).dst;
+                indeg[wv] -= 1;
+                if indeg[wv] == 0 {
+                    ready.push(wv);
+                }
+            }
+        }
+
+        // --- shutdown workers ---
+        for dev_senders in &senders {
+            for tx in dev_senders {
+                let _ = tx.send(WorkerMsg::Stop);
+            }
+        }
+        drop(done_tx);
+        for j in joins {
+            let _ = j.join();
+        }
+
+        // --- return results to host ---
+        if opts.return_results_to_host {
+            for v in dag.sinks() {
+                if dag.node(v).kernel == KernelKind::Source {
+                    continue;
+                }
+                if let Some(src) = dir.acquire_read(out[v], host) {
+                    let bytes = store.transfer(out[v], src, host);
+                    ledger.record(src, host, bytes, model.transfer_time_ms(bytes));
+                }
+            }
+        }
+
+        let makespan = now_ms();
+
+        // --- verification against the oracle ---
+        //
+        // Per-node check: each kernel's output is recomputed by the
+        // pure-Rust oracle from the *engine's own* upstream outputs, so
+        // every execution is verified without compounding fp32
+        // accumulation-order divergence across deep MM chains (which is
+        // chaotic, not a bug).
+        if opts.verify {
+            for (v, node) in dag.nodes() {
+                if node.kernel == KernelKind::Source {
+                    continue;
+                }
+                let got = node_outputs
+                    .get(&v)
+                    .with_context(|| format!("missing output for task {v}"))?;
+                let arity = node.kernel.arity();
+                let mut inputs: Vec<&[f32]> = dag
+                    .in_edges(v)
+                    .iter()
+                    .take(arity)
+                    .map(|&e| node_outputs[&dag.edge(e).src].as_slice())
+                    .collect();
+                let mut slot_bufs = Vec::new();
+                while inputs.len() + slot_bufs.len() < arity {
+                    slot_bufs.push(oracle::initial_input(
+                        v,
+                        slot_bufs.len(),
+                        node.size,
+                        opts.seed,
+                    ));
+                }
+                for b in &slot_bufs {
+                    inputs.push(b.as_slice());
+                }
+                let want = oracle::kernel_output(node.kernel, node.size, &inputs);
+                anyhow::ensure!(got.len() == want.len(), "task {v}: length mismatch");
+                // Absolute tolerance scaled to the dot-product magnitude:
+                // fp32 sums of `size` terms of magnitude ~scale² can
+                // differ by eps * size * scale² under different
+                // accumulation orders (cancellation makes output-relative
+                // checks meaningless).
+                let scale = inputs
+                    .iter()
+                    .flat_map(|s| s.iter())
+                    .fold(1.0f32, |m, &x| m.max(x.abs()));
+                let tol = 1e-6 * node.size as f32 * scale * scale + 1e-5;
+                for i in 0..got.len() {
+                    anyhow::ensure!(
+                        (got[i] - want[i]).abs() <= tol,
+                        "task {v} ({}) elem {i}: got {} want {} (tol {tol})",
+                        node.name,
+                        got[i],
+                        want[i]
+                    );
+                }
+            }
+        }
+
+        Ok(RunReport {
+            scheduler: scheduler.name(),
+            makespan_ms: makespan,
+            ledger,
+            assignments,
+            device_busy_ms: device_busy,
+            tasks_per_device,
+            decision_ns,
+            plan_ns,
+            trace,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::generator::{generate_layered, GeneratorConfig};
+    use crate::dag::workloads;
+    use crate::perfmodel::CalibratedModel;
+    use crate::sched;
+    use std::path::Path;
+
+    fn engine() -> Option<ExecEngine> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        let rt = RuntimeService::spawn(dir).unwrap();
+        Some(ExecEngine::new(rt, Platform::paper()))
+    }
+
+    #[test]
+    fn chain_executes_and_verifies() {
+        let Some(eng) = engine() else { return };
+        let dag = workloads::chain(4, KernelKind::Ma, 64);
+        let model = CalibratedModel::default();
+        let mut s = sched::by_name("dmda").unwrap();
+        let r = eng.run(&dag, s.as_mut(), &model, &ExecOptions::default()).unwrap();
+        assert_eq!(r.tasks_per_device.iter().sum::<usize>(), 4);
+        assert!(r.makespan_ms > 0.0);
+    }
+
+    #[test]
+    fn paper_dag_real_run_all_schedulers() {
+        let Some(eng) = engine() else { return };
+        let mut cfg = GeneratorConfig::paper(KernelKind::Mm, 64);
+        cfg.size = 64;
+        let dag = generate_layered(&cfg);
+        let model = CalibratedModel::default();
+        for name in ["eager", "dmda", "gp"] {
+            let mut s = sched::by_name(name).unwrap();
+            let r = eng.run(&dag, s.as_mut(), &model, &ExecOptions::default()).unwrap();
+            assert_eq!(
+                r.assignments.iter().filter(|&&d| d != usize::MAX).count(),
+                38,
+                "{name}: all tasks assigned"
+            );
+        }
+    }
+
+    #[test]
+    fn transfer_counts_match_simulator_for_offline_policies() {
+        // For pinned policies the transfer pattern is schedule-order
+        // independent, so sim and real must agree exactly.
+        let Some(eng) = engine() else { return };
+        let dag = generate_layered(&GeneratorConfig::paper(KernelKind::Ma, 64));
+        let model = CalibratedModel::default();
+        for name in ["gpu-only", "gp"] {
+            let mut s1 = sched::by_name(name).unwrap();
+            let real = eng.run(&dag, s1.as_mut(), &model, &ExecOptions::default()).unwrap();
+            let mut s2 = sched::by_name(name).unwrap();
+            let sim = crate::sim::simulate(
+                &dag,
+                s2.as_mut(),
+                &Platform::paper(),
+                &model,
+                &crate::sim::SimConfig::default(),
+            );
+            assert_eq!(
+                real.ledger.count, sim.ledger.count,
+                "{name}: real vs sim transfer counts"
+            );
+            assert_eq!(real.assignments, sim.assignments, "{name}: assignments");
+        }
+    }
+
+    #[test]
+    fn verification_catches_nothing_on_good_runs() {
+        let Some(eng) = engine() else { return };
+        let dag = workloads::fork_join(6, KernelKind::Mm, 64);
+        let model = CalibratedModel::default();
+        let mut s = sched::by_name("eager").unwrap();
+        let opts = ExecOptions { verify: true, ..Default::default() };
+        eng.run(&dag, s.as_mut(), &model, &opts).unwrap();
+    }
+}

@@ -1,0 +1,92 @@
+//! Offline measurement: fill a [`MeasuredModel`] from real PJRT kernel
+//! timings — the paper's literal method for obtaining node weights
+//! ("the latter method is applied in this paper to obtain the performance
+//! parameters from kernel executions", §III.B).
+//!
+//! On this substrate both "devices" run on the host CPU, so measured
+//! times describe the L1 kernels as compiled, not a GPU; the calibrated
+//! model supplies the heterogeneity. The measured model still exercises
+//! the full measurement path and feeds the e2e example.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::dag::KernelKind;
+use crate::perfmodel::MeasuredModel;
+use crate::runtime::KernelRuntime;
+use crate::util::Pcg32;
+
+/// Measure every artifact `reps` times per device and record the mean.
+/// `devices` is the number of devices to record identical samples for
+/// (this substrate has one physical device).
+pub fn measure_kernels(
+    runtime: &KernelRuntime,
+    devices: usize,
+    reps: usize,
+) -> Result<MeasuredModel> {
+    let mut model = MeasuredModel::new();
+    let mut rng = Pcg32::seeded(7);
+    let entries: Vec<(KernelKind, u32, usize)> = runtime
+        .manifest()
+        .entries
+        .iter()
+        .map(|a| (a.op, a.n, a.arity))
+        .collect();
+    for (op, n, arity) in entries {
+        let elems = n as usize * n as usize;
+        let bufs: Vec<Vec<f32>> = (0..arity)
+            .map(|_| (0..elems).map(|_| rng.gen_f32()).collect())
+            .collect();
+        let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+        // Warm-up compiles + caches.
+        runtime.execute(op, n, &refs)?;
+        let mut total = 0.0;
+        for _ in 0..reps.max(1) {
+            let (_, ms) = runtime.execute_timed(op, n, &refs)?;
+            total += ms;
+        }
+        let mean = total / reps.max(1) as f64;
+        for d in 0..devices {
+            model.record_kernel(op, d, n, mean);
+        }
+    }
+    // Bus samples: time actual buffer copies (what a transfer costs on
+    // this substrate).
+    for pow in [12u32, 16, 20, 24] {
+        let bytes = 1u64 << pow;
+        let src = vec![1u8; bytes as usize];
+        let t0 = Instant::now();
+        let dst = src.clone();
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        std::hint::black_box(&dst);
+        model.record_transfer(bytes, ms.max(1e-6));
+    }
+    Ok(model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::PerfModel;
+    use std::path::Path;
+
+    #[test]
+    fn measurement_fills_model() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let rt = KernelRuntime::open(dir).unwrap();
+        let m = measure_kernels(&rt, 2, 1).unwrap();
+        assert!(m.kernel_samples() > 0);
+        // Some timing recorded for every shipped op.
+        assert!(m.kernel_time_ms(KernelKind::Ma, 64, 0) > 0.0);
+        assert!(m.kernel_time_ms(KernelKind::Mm, 128, 1) > 0.0);
+        // MM must be slower at 512 than 64 on real hardware.
+        assert!(
+            m.kernel_time_ms(KernelKind::Mm, 512, 0) > m.kernel_time_ms(KernelKind::Mm, 64, 0)
+        );
+        assert!(m.transfer_time_ms(1 << 20) > 0.0);
+    }
+}

@@ -1,0 +1,22 @@
+//! Execution coordinator: the real (non-simulated) engine.
+//!
+//! Mirrors the StarPU runtime architecture the paper builds on: a
+//! coordinator thread owns the ready queue, the MSI directory and the
+//! per-memory-node buffer store; one worker thread per device worker
+//! executes kernels through the shared PJRT runtime. The same
+//! [`Scheduler`] objects drive dispatch as in the simulator, so policy
+//! behaviour (assignments, transfer counts) is engine-independent; only
+//! the clock differs (wall time here, virtual time there).
+//!
+//! Also home of the paper's offline pieces:
+//! * [`measure`] — fills a [`MeasuredModel`] from real PJRT kernel
+//!   timings (the paper's "offline measurements");
+//! * [`oracle`] — pure-Rust DAG evaluation used to verify every real
+//!   run's numerics end-to-end.
+
+pub mod exec_engine;
+pub mod measure;
+pub mod oracle;
+
+pub use exec_engine::{ExecEngine, ExecOptions};
+pub use measure::measure_kernels;

@@ -1,0 +1,170 @@
+//! Pure-Rust DAG evaluation oracle.
+//!
+//! Recomputes every node's output with naive f32 kernels on the host, in
+//! topological order, from the same seeded initial inputs the real engine
+//! uses. The real engine's results must match elementwise — this closes
+//! the loop across all three layers (Pallas kernel → HLO artifact → PJRT
+//! execution → MSI data movement).
+
+use std::collections::HashMap;
+
+use crate::dag::{topo, Dag, KernelKind, NodeId};
+use crate::util::Pcg32;
+
+/// Deterministic initial input buffer for (node, input slot).
+pub fn initial_input(node: NodeId, slot: usize, n: u32, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::new(seed ^ (node as u64) << 20 ^ slot as u64, 99);
+    (0..(n as usize * n as usize)).map(|_| rng.gen_f32() * 2.0 - 1.0).collect()
+}
+
+fn mm(a: &[f32], b: &[f32], n: usize) -> Vec<f32> {
+    let mut out = vec![0f32; n * n];
+    for i in 0..n {
+        for k in 0..n {
+            let aik = a[i * n + k];
+            if aik == 0.0 {
+                continue;
+            }
+            let (row_b, row_o) = (&b[k * n..(k + 1) * n], &mut out[i * n..(i + 1) * n]);
+            for j in 0..n {
+                row_o[j] += aik * row_b[j];
+            }
+        }
+    }
+    out
+}
+
+fn ma(a: &[f32], b: &[f32]) -> Vec<f32> {
+    a.iter().zip(b).map(|(x, y)| x + y).collect()
+}
+
+/// Compute one kernel's output from its (arity-sized) input list.
+pub fn kernel_output(kernel: KernelKind, n: u32, inputs: &[&[f32]]) -> Vec<f32> {
+    let nn = n as usize;
+    match kernel {
+        KernelKind::Ma => ma(inputs[0], inputs[1]),
+        KernelKind::Mm => mm(inputs[0], inputs[1], nn),
+        KernelKind::MmAdd => ma(&mm(inputs[0], inputs[1], nn), inputs[2]),
+        KernelKind::MaChain => ma(&ma(inputs[0], inputs[1]), inputs[2]),
+        KernelKind::Source => inputs.first().map(|x| x.to_vec()).unwrap_or_default(),
+    }
+}
+
+/// Gather the input buffers for `v`: in-edge outputs first (edge order),
+/// then seeded initial buffers to fill the kernel's arity. If the node has
+/// more in-edges than arity, the extra edges are ordering-only
+/// dependencies and their data is ignored by the kernel math.
+pub fn gather_inputs<'a>(
+    dag: &Dag,
+    v: NodeId,
+    outputs: &'a HashMap<NodeId, Vec<f32>>,
+    initials: &'a HashMap<(NodeId, usize), Vec<f32>>,
+) -> Vec<&'a [f32]> {
+    let node = dag.node(v);
+    let arity = node.kernel.arity();
+    let mut inputs: Vec<&[f32]> = dag
+        .in_edges(v)
+        .iter()
+        .take(arity)
+        .map(|&e| outputs[&dag.edge(e).src].as_slice())
+        .collect();
+    let mut slot = 0usize;
+    while inputs.len() < arity {
+        inputs.push(initials[&(v, slot)].as_slice());
+        slot += 1;
+    }
+    inputs
+}
+
+/// Evaluate the whole DAG on the host; returns every node's output.
+pub fn evaluate(dag: &Dag, seed: u64) -> HashMap<NodeId, Vec<f32>> {
+    let order = topo::topo_order(dag).expect("oracle requires a DAG");
+    let mut initials = HashMap::new();
+    for (v, node) in dag.nodes() {
+        let missing = node.kernel.arity().saturating_sub(dag.in_degree(v));
+        for slot in 0..missing {
+            initials.insert((v, slot), initial_input(v, slot, node.size, seed));
+        }
+    }
+    let mut outputs: HashMap<NodeId, Vec<f32>> = HashMap::new();
+    for v in order {
+        let node = dag.node(v);
+        if node.kernel == KernelKind::Source {
+            outputs.insert(v, vec![0f32; node.size as usize * node.size as usize]);
+            continue;
+        }
+        let inputs = gather_inputs(dag, v, &outputs, &initials);
+        outputs.insert(v, kernel_output(node.kernel, node.size, &inputs));
+    }
+    outputs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::workloads;
+
+    #[test]
+    fn initial_inputs_deterministic_and_distinct() {
+        let a = initial_input(3, 0, 16, 42);
+        let b = initial_input(3, 0, 16, 42);
+        let c = initial_input(3, 1, 16, 42);
+        let d = initial_input(4, 0, 16, 42);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(a, d);
+        assert_eq!(a.len(), 256);
+    }
+
+    #[test]
+    fn ma_chain_evaluates() {
+        let dag = workloads::chain(3, KernelKind::Ma, 8);
+        let out = evaluate(&dag, 1);
+        assert_eq!(out.len(), 3);
+        // chain: c0 = i0 + i1; c1 = c0 + i; c2 = c1 + i.
+        let i0 = initial_input(0, 0, 8, 1);
+        let i1 = initial_input(0, 1, 8, 1);
+        let c0: Vec<f32> = i0.iter().zip(&i1).map(|(a, b)| a + b).collect();
+        assert_eq!(out[&0], c0);
+        let i2 = initial_input(1, 0, 8, 1);
+        let c1: Vec<f32> = c0.iter().zip(&i2).map(|(a, b)| a + b).collect();
+        assert_eq!(out[&1], c1);
+    }
+
+    #[test]
+    fn mm_identity_sanity() {
+        let n = 4usize;
+        let mut eye = vec![0f32; n * n];
+        for i in 0..n {
+            eye[i * n + i] = 1.0;
+        }
+        let x: Vec<f32> = (0..n * n).map(|i| i as f32).collect();
+        assert_eq!(kernel_output(KernelKind::Mm, 4, &[&x, &eye]), x);
+        assert_eq!(kernel_output(KernelKind::Mm, 4, &[&eye, &x]), x);
+    }
+
+    #[test]
+    fn mm_add_composition() {
+        let a = vec![1f32; 4];
+        let b = vec![2f32; 4];
+        let c = vec![0.5f32; 4];
+        // 2x2 of ones x twos = [[4,4],[4,4]]... a@b where each row sums 2 els.
+        let got = kernel_output(KernelKind::MmAdd, 2, &[&a, &b, &c]);
+        assert_eq!(got, vec![4.5f32; 4]);
+    }
+
+    #[test]
+    fn extra_in_edges_are_ordering_only() {
+        let mut dag = Dag::new();
+        let a = dag.add_node("a", KernelKind::Ma, 8);
+        let b = dag.add_node("b", KernelKind::Ma, 8);
+        let c = dag.add_node("c", KernelKind::Ma, 8);
+        let d = dag.add_node("d", KernelKind::Ma, 8);
+        dag.add_edge(a, d);
+        dag.add_edge(b, d);
+        dag.add_edge(c, d); // third in-edge on an arity-2 kernel
+        let out = evaluate(&dag, 7);
+        let want: Vec<f32> = out[&a].iter().zip(&out[&b]).map(|(x, y)| x + y).collect();
+        assert_eq!(out[&d], want);
+    }
+}

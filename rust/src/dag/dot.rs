@@ -1,0 +1,519 @@
+//! DOT subset parser and writer.
+//!
+//! The paper uses DOT as its user-facing interface for expressing data
+//! dependencies between kernels, and to visualize original and partitioned
+//! DAGs. We implement the subset needed for that: `digraph` blocks, node
+//! statements with `[key=value, ...]` attributes, edge statements
+//! (`a -> b -> c [..]`), quoted strings, and `//`, `/* */`, `#` comments.
+//!
+//! Recognized node attributes: `kernel` (ma|mm|mm_add|ma_chain|source),
+//! `size` (square matrix side), `part` (device pin, written by the
+//! partitioner). Unknown attributes are preserved for round-tripping by
+//! the visualizer but ignored by the scheduler.
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+
+use super::graph::{Dag, KernelKind, NodeId};
+
+/// Parse error with 1-based line information.
+#[derive(Debug, thiserror::Error)]
+#[error("dot parse error at line {line}: {msg}")]
+pub struct DotError {
+    pub line: usize,
+    pub msg: String,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Ident(String),
+    Arrow,
+    LBrace,
+    RBrace,
+    LBracket,
+    RBracket,
+    Semi,
+    Comma,
+    Eq,
+}
+
+struct Lexer<'a> {
+    src: &'a [u8],
+    pos: usize,
+    line: usize,
+}
+
+impl<'a> Lexer<'a> {
+    fn new(src: &'a str) -> Self {
+        Lexer { src: src.as_bytes(), pos: 0, line: 1 }
+    }
+
+    fn err(&self, msg: impl Into<String>) -> DotError {
+        DotError { line: self.line, msg: msg.into() }
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let c = self.src.get(self.pos).copied();
+        if c == Some(b'\n') {
+            self.line += 1;
+        }
+        if c.is_some() {
+            self.pos += 1;
+        }
+        c
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.src.get(self.pos).copied()
+    }
+
+    fn peek2(&self) -> Option<u8> {
+        self.src.get(self.pos + 1).copied()
+    }
+
+    fn skip_trivia(&mut self) -> Result<(), DotError> {
+        loop {
+            match self.peek() {
+                Some(c) if c.is_ascii_whitespace() => {
+                    self.bump();
+                }
+                Some(b'#') => {
+                    while let Some(c) = self.bump() {
+                        if c == b'\n' {
+                            break;
+                        }
+                    }
+                }
+                Some(b'/') if self.peek2() == Some(b'/') => {
+                    while let Some(c) = self.bump() {
+                        if c == b'\n' {
+                            break;
+                        }
+                    }
+                }
+                Some(b'/') if self.peek2() == Some(b'*') => {
+                    self.bump();
+                    self.bump();
+                    loop {
+                        match self.bump() {
+                            Some(b'*') if self.peek() == Some(b'/') => {
+                                self.bump();
+                                break;
+                            }
+                            Some(_) => {}
+                            None => return Err(self.err("unterminated /* comment")),
+                        }
+                    }
+                }
+                _ => return Ok(()),
+            }
+        }
+    }
+
+    fn next_tok(&mut self) -> Result<Option<(Tok, usize)>, DotError> {
+        self.skip_trivia()?;
+        let line = self.line;
+        let Some(c) = self.peek() else {
+            return Ok(None);
+        };
+        let tok = match c {
+            b'{' => {
+                self.bump();
+                Tok::LBrace
+            }
+            b'}' => {
+                self.bump();
+                Tok::RBrace
+            }
+            b'[' => {
+                self.bump();
+                Tok::LBracket
+            }
+            b']' => {
+                self.bump();
+                Tok::RBracket
+            }
+            b';' => {
+                self.bump();
+                Tok::Semi
+            }
+            b',' => {
+                self.bump();
+                Tok::Comma
+            }
+            b'=' => {
+                self.bump();
+                Tok::Eq
+            }
+            b'-' if self.peek2() == Some(b'>') => {
+                self.bump();
+                self.bump();
+                Tok::Arrow
+            }
+            b'"' => {
+                self.bump();
+                let mut s = String::new();
+                loop {
+                    match self.bump() {
+                        Some(b'"') => break,
+                        Some(b'\\') => match self.bump() {
+                            Some(c) => s.push(c as char),
+                            None => return Err(self.err("unterminated string")),
+                        },
+                        Some(c) => s.push(c as char),
+                        None => return Err(self.err("unterminated string")),
+                    }
+                }
+                Tok::Ident(s)
+            }
+            c if c.is_ascii_alphanumeric() || c == b'_' || c == b'.' || c == b'-' => {
+                let mut s = String::new();
+                while let Some(c) = self.peek() {
+                    if c.is_ascii_alphanumeric() || c == b'_' || c == b'.' || c == b'-' {
+                        s.push(c as char);
+                        self.bump();
+                    } else {
+                        break;
+                    }
+                }
+                Tok::Ident(s)
+            }
+            other => return Err(self.err(format!("unexpected character {:?}", other as char))),
+        };
+        Ok(Some((tok, line)))
+    }
+}
+
+/// Result of parsing: the graph plus per-node attribute maps (including
+/// attributes hetsched itself does not interpret).
+#[derive(Debug, Default)]
+pub struct ParsedDot {
+    pub name: String,
+    pub dag: Dag,
+    pub node_attrs: Vec<HashMap<String, String>>,
+    /// `part` attribute per node, if present (device pin).
+    pub parts: Vec<Option<usize>>,
+}
+
+struct Parser {
+    toks: Vec<(Tok, usize)>,
+    pos: usize,
+}
+
+impl Parser {
+    fn err_at(&self, msg: impl Into<String>) -> DotError {
+        // `bump` has usually consumed the offending token already; report
+        // the line of the token just behind the cursor.
+        let idx = self.pos.saturating_sub(1).min(self.toks.len().saturating_sub(1));
+        let line = self.toks.get(idx).map(|t| t.1).unwrap_or(0);
+        DotError { line, msg: msg.into() }
+    }
+
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.pos).map(|t| &t.0)
+    }
+
+    fn bump(&mut self) -> Option<Tok> {
+        let t = self.toks.get(self.pos).map(|t| t.0.clone());
+        if t.is_some() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn expect(&mut self, want: &Tok) -> Result<(), DotError> {
+        match self.bump() {
+            Some(ref t) if t == want => Ok(()),
+            other => Err(self.err_at(format!("expected {want:?}, found {other:?}"))),
+        }
+    }
+
+    fn ident(&mut self) -> Result<String, DotError> {
+        match self.bump() {
+            Some(Tok::Ident(s)) => Ok(s),
+            other => Err(self.err_at(format!("expected identifier, found {other:?}"))),
+        }
+    }
+
+    /// Parse `[k=v, k=v ...]` (comma or semicolon separated).
+    fn attr_list(&mut self) -> Result<HashMap<String, String>, DotError> {
+        let mut attrs = HashMap::new();
+        self.expect(&Tok::LBracket)?;
+        loop {
+            match self.peek() {
+                Some(Tok::RBracket) => {
+                    self.bump();
+                    break;
+                }
+                Some(Tok::Comma) | Some(Tok::Semi) => {
+                    self.bump();
+                }
+                Some(Tok::Ident(_)) => {
+                    let k = self.ident()?;
+                    self.expect(&Tok::Eq)?;
+                    let v = self.ident()?;
+                    attrs.insert(k, v);
+                }
+                other => return Err(self.err_at(format!("bad attribute list near {other:?}"))),
+            }
+        }
+        Ok(attrs)
+    }
+}
+
+/// Parse a DOT digraph into a [`ParsedDot`].
+///
+/// Node defaults: `kernel=ma`, `size=default_size`. Nodes referenced only
+/// in edge statements are created with the defaults.
+pub fn parse(src: &str, default_size: u32) -> Result<ParsedDot, DotError> {
+    let mut lx = Lexer::new(src);
+    let mut toks = Vec::new();
+    while let Some(t) = lx.next_tok()? {
+        toks.push(t);
+    }
+    let mut p = Parser { toks, pos: 0 };
+
+    match p.bump() {
+        Some(Tok::Ident(kw)) if kw == "digraph" => {}
+        other => {
+            return Err(p.err_at(format!("expected 'digraph', found {other:?}")));
+        }
+    }
+    let name = match p.peek() {
+        Some(Tok::Ident(_)) => p.ident()?,
+        _ => String::new(),
+    };
+    p.expect(&Tok::LBrace)?;
+
+    let mut out = ParsedDot { name, ..Default::default() };
+    // Deferred attribute application so defaults can be overridden after
+    // first reference.
+    let ensure_node = |out: &mut ParsedDot, name: &str| -> NodeId {
+        if let Some(id) = out.dag.node_by_name(name) {
+            return id;
+        }
+        let id = out.dag.add_node(name, KernelKind::Ma, default_size);
+        out.node_attrs.push(HashMap::new());
+        out.parts.push(None);
+        id
+    };
+
+    loop {
+        match p.peek() {
+            Some(Tok::RBrace) => {
+                p.bump();
+                break;
+            }
+            Some(Tok::Semi) => {
+                p.bump();
+            }
+            Some(Tok::Ident(_)) => {
+                let first = p.ident()?;
+                // Graph-level attribute (`rankdir=LR;`)? Skip it.
+                if matches!(p.peek(), Some(Tok::Eq)) {
+                    p.bump();
+                    p.ident()?;
+                    continue;
+                }
+                let mut path = vec![ensure_node(&mut out, &first)];
+                while matches!(p.peek(), Some(Tok::Arrow)) {
+                    p.bump();
+                    let nxt = p.ident()?;
+                    path.push(ensure_node(&mut out, &nxt));
+                }
+                let attrs = if matches!(p.peek(), Some(Tok::LBracket)) {
+                    p.attr_list()?
+                } else {
+                    HashMap::new()
+                };
+                if path.len() == 1 {
+                    // Node statement: apply attributes.
+                    let id = path[0];
+                    if let Some(k) = attrs.get("kernel") {
+                        let kind = KernelKind::parse(k)
+                            .ok_or_else(|| p.err_at(format!("unknown kernel {k:?}")))?;
+                        out.dag.node_mut(id).kernel = kind;
+                    }
+                    if let Some(s) = attrs.get("size") {
+                        let size: u32 = s
+                            .parse()
+                            .map_err(|_| p.err_at(format!("bad size {s:?}")))?;
+                        out.dag.node_mut(id).size = size;
+                    }
+                    if let Some(pt) = attrs.get("part") {
+                        let part: usize = pt
+                            .parse()
+                            .map_err(|_| p.err_at(format!("bad part {pt:?}")))?;
+                        out.parts[id] = Some(part);
+                    }
+                    for (k, v) in attrs {
+                        out.node_attrs[id].insert(k, v);
+                    }
+                } else {
+                    // Edge chain: a -> b -> c
+                    for w in path.windows(2) {
+                        match attrs.get("bytes").map(|b| b.parse::<u64>()) {
+                            Some(Ok(bytes)) => {
+                                out.dag.add_edge_with_bytes(w[0], w[1], bytes);
+                            }
+                            Some(Err(_)) => {
+                                return Err(p.err_at("bad bytes attribute"));
+                            }
+                            None => {
+                                out.dag.add_edge(w[0], w[1]);
+                            }
+                        }
+                    }
+                }
+            }
+            other => return Err(p.err_at(format!("unexpected token {other:?}"))),
+        }
+    }
+    Ok(out)
+}
+
+/// Colors used when writing a partitioned graph (device 0 = CPU, 1 = GPU,
+/// 2 = third accelerator, ...).
+const PART_COLORS: &[&str] = &["lightblue", "lightsalmon", "palegreen", "khaki", "plum"];
+
+/// Serialize a DAG to DOT. `parts`, when provided, pins each node's `part`
+/// attribute and fill color — this is the paper's "partition results
+/// should be easily displayed" requirement.
+pub fn write(dag: &Dag, name: &str, parts: Option<&[usize]>) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "digraph {name} {{");
+    let _ = writeln!(s, "  rankdir=TB;");
+    for (id, node) in dag.nodes() {
+        let mut attrs = format!("kernel={}, size={}", node.kernel.name(), node.size);
+        if let Some(parts) = parts {
+            let p = parts[id];
+            let color = PART_COLORS[p % PART_COLORS.len()];
+            let _ = write!(attrs, ", part={p}, style=filled, fillcolor={color}");
+        }
+        let _ = writeln!(s, "  \"{}\" [{}];", node.name, attrs);
+    }
+    for (_, e) in dag.edges() {
+        let _ = writeln!(
+            s,
+            "  \"{}\" -> \"{}\" [bytes={}];",
+            dag.node(e.src).name,
+            dag.node(e.dst).name,
+            e.bytes
+        );
+    }
+    s.push_str("}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_simple_digraph() {
+        let src = r#"
+            digraph g {
+              a [kernel=mm, size=128];
+              b [kernel=ma, size=128];
+              a -> b;
+            }
+        "#;
+        let p = parse(src, 64).unwrap();
+        assert_eq!(p.name, "g");
+        assert_eq!(p.dag.node_count(), 2);
+        assert_eq!(p.dag.edge_count(), 1);
+        let a = p.dag.node_by_name("a").unwrap();
+        assert_eq!(p.dag.node(a).kernel, KernelKind::Mm);
+        assert_eq!(p.dag.node(a).size, 128);
+    }
+
+    #[test]
+    fn parse_edge_chain_and_defaults() {
+        let p = parse("digraph { x -> y -> z; }", 32).unwrap();
+        assert_eq!(p.dag.node_count(), 3);
+        assert_eq!(p.dag.edge_count(), 2);
+        assert_eq!(p.dag.node(0).size, 32);
+        assert_eq!(p.dag.node(0).kernel, KernelKind::Ma);
+    }
+
+    #[test]
+    fn parse_comments_and_quoted_names() {
+        let src = r#"
+            digraph g {
+              // line comment
+              # hash comment
+              /* block
+                 comment */
+              "node one" -> "node two";
+            }
+        "#;
+        let p = parse(src, 8).unwrap();
+        assert_eq!(p.dag.node_count(), 2);
+        assert!(p.dag.node_by_name("node one").is_some());
+    }
+
+    #[test]
+    fn parse_part_attribute() {
+        let src = "digraph { a [part=1]; b; a -> b; }";
+        let p = parse(src, 8).unwrap();
+        assert_eq!(p.parts[p.dag.node_by_name("a").unwrap()], Some(1));
+        assert_eq!(p.parts[p.dag.node_by_name("b").unwrap()], None);
+    }
+
+    #[test]
+    fn parse_edge_bytes_attribute() {
+        let src = "digraph { a -> b [bytes=12345]; }";
+        let p = parse(src, 8).unwrap();
+        assert_eq!(p.dag.edge(0).bytes, 12345);
+    }
+
+    #[test]
+    fn parse_graph_attrs_skipped() {
+        let p = parse("digraph { rankdir=LR; a -> b; }", 8).unwrap();
+        assert_eq!(p.dag.node_count(), 2);
+    }
+
+    #[test]
+    fn parse_errors_have_lines() {
+        let err = parse("digraph {\n a -> ;\n}", 8).unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn parse_rejects_non_digraph() {
+        assert!(parse("graph { a -- b; }", 8).is_err());
+    }
+
+    #[test]
+    fn roundtrip_write_parse() {
+        let src = r#"digraph g {
+            a [kernel=mm, size=256];
+            b [kernel=ma, size=256];
+            c [kernel=mm_add, size=256];
+            a -> b; a -> c; b -> c;
+        }"#;
+        let p1 = parse(src, 64).unwrap();
+        let text = write(&p1.dag, "g", None);
+        let p2 = parse(&text, 64).unwrap();
+        assert_eq!(p2.dag.node_count(), p1.dag.node_count());
+        assert_eq!(p2.dag.edge_count(), p1.dag.edge_count());
+        for (id, n) in p1.dag.nodes() {
+            let id2 = p2.dag.node_by_name(&n.name).unwrap();
+            assert_eq!(p2.dag.node(id2).kernel, n.kernel);
+            assert_eq!(p2.dag.node(id2).size, n.size);
+            let _ = id;
+        }
+    }
+
+    #[test]
+    fn write_with_parts_emits_colors() {
+        let p = parse("digraph { a -> b; }", 8).unwrap();
+        let text = write(&p.dag, "g", Some(&[0, 1]));
+        assert!(text.contains("part=0"));
+        assert!(text.contains("part=1"));
+        assert!(text.contains("fillcolor="));
+        // And the parts round-trip.
+        let p2 = parse(&text, 8).unwrap();
+        assert_eq!(p2.parts, vec![Some(0), Some(1)]);
+    }
+}

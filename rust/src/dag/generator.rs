@@ -1,0 +1,253 @@
+//! Random layered DAG generator — the paper's "DAG generator to generate
+//! the structure for test tasks" (§IV.A).
+//!
+//! The paper's evaluation instance is a task with **38 kernels and 75 data
+//! dependencies**, every kernel the same matrix computation with two
+//! inputs and one output. [`GeneratorConfig::paper`] reproduces exactly
+//! that shape (node/edge counts are asserted in tests); other
+//! configurations sweep structure for the ablation benches.
+
+use super::graph::{Dag, KernelKind, NodeId};
+use crate::util::Pcg32;
+
+/// Configuration for [`generate_layered`].
+#[derive(Debug, Clone)]
+pub struct GeneratorConfig {
+    /// Number of real kernels (excluding virtual sources).
+    pub kernels: usize,
+    /// Number of data-dependency edges between real kernels.
+    pub edges: usize,
+    /// Number of layers the kernels are spread over.
+    pub layers: usize,
+    /// Kernel kind for every node (the paper uses homogeneous tasks).
+    pub kernel: KernelKind,
+    /// Square-matrix side length for every node.
+    pub size: u32,
+    /// PRNG seed.
+    pub seed: u64,
+    /// Insert a zero-weight virtual source feeding all initial kernels
+    /// (paper §III.B: "all initial kernels have data dependencies pointing
+    /// from an empty kernel whose weight is set to zero").
+    pub with_virtual_source: bool,
+}
+
+impl GeneratorConfig {
+    /// The paper's 38-kernel / 75-edge instance.
+    pub fn paper(kernel: KernelKind, size: u32) -> GeneratorConfig {
+        GeneratorConfig {
+            kernels: 38,
+            edges: 75,
+            layers: 7,
+            kernel,
+            size,
+            seed: 2015, // publication year; any fixed seed works
+            with_virtual_source: false,
+        }
+    }
+
+    /// Scaled variant holding the paper's edge/kernel density (~2 in-edges
+    /// per kernel).
+    pub fn scaled(kernels: usize, kernel: KernelKind, size: u32, seed: u64) -> GeneratorConfig {
+        GeneratorConfig {
+            kernels,
+            edges: kernels * 2 - 1,
+            layers: (kernels as f64).sqrt().ceil() as usize,
+            kernel,
+            size,
+            seed,
+            with_virtual_source: false,
+        }
+    }
+}
+
+/// Maximum edges a layered assignment admits (each node can receive edges
+/// only from strictly earlier layers).
+fn max_edges(layer_of: &[usize], layers: usize) -> usize {
+    let mut per_layer = vec![0usize; layers];
+    for &l in layer_of {
+        per_layer[l] += 1;
+    }
+    let mut prefix = 0usize;
+    let mut total = 0usize;
+    for l in 0..layers {
+        total += per_layer[l] * prefix;
+        prefix += per_layer[l];
+    }
+    total
+}
+
+/// Generate a random layered DAG with exactly `config.kernels` kernels and
+/// exactly `config.edges` edges (panics if the edge target is infeasible
+/// for the layer structure, which cannot happen for the presets).
+///
+/// Construction:
+/// 1. spread kernels over layers (each layer non-empty, remainder random);
+/// 2. connect every non-first-layer node to ≥1 node of an earlier layer
+///    (connectivity / "two inputs" bias: up to 2 parents first pass);
+/// 3. add random earlier-layer→later-layer edges until the target count,
+///    skipping duplicates.
+pub fn generate_layered(config: &GeneratorConfig) -> Dag {
+    let mut rng = Pcg32::seeded(config.seed);
+    let n = config.kernels;
+    let layers = config.layers.max(1).min(n);
+
+    // 1. layer assignment: one node per layer guaranteed, rest random.
+    let mut layer_of = vec![0usize; n];
+    for (l, slot) in layer_of.iter_mut().take(layers).enumerate() {
+        *slot = l;
+    }
+    for slot in layer_of.iter_mut().skip(layers) {
+        *slot = rng.gen_range(layers as u32) as usize;
+    }
+    rng.shuffle(&mut layer_of);
+
+    assert!(
+        config.edges <= max_edges(&layer_of, layers),
+        "edge target {} infeasible for {} nodes in {} layers",
+        config.edges,
+        n,
+        layers
+    );
+
+    let mut dag = Dag::new();
+    let ids: Vec<NodeId> = (0..n)
+        .map(|i| dag.add_node(format!("k{i}"), config.kernel, config.size))
+        .collect();
+
+    // Nodes of each earlier-layer prefix for fast parent sampling.
+    let mut by_layer: Vec<Vec<NodeId>> = vec![Vec::new(); layers];
+    for (i, &l) in layer_of.iter().enumerate() {
+        by_layer[l].push(ids[i]);
+    }
+    let mut earlier: Vec<Vec<NodeId>> = Vec::with_capacity(layers);
+    let mut acc: Vec<NodeId> = Vec::new();
+    for l in 0..layers {
+        earlier.push(acc.clone());
+        acc.extend(&by_layer[l]);
+    }
+
+    let mut have = std::collections::HashSet::<(NodeId, NodeId)>::new();
+    let mut edges_left = config.edges;
+
+    // 2. connectivity pass: up to 2 parents per non-initial node.
+    for l in 1..layers {
+        for &v in &by_layer[l] {
+            let pool = &earlier[l];
+            let parents = 2.min(pool.len()).min(edges_left);
+            let mut tries = 0;
+            let mut added = 0;
+            while added < parents && tries < 32 {
+                tries += 1;
+                let u = *rng.choose(pool);
+                if have.insert((u, v)) {
+                    dag.add_edge(u, v);
+                    edges_left -= 1;
+                    added += 1;
+                }
+            }
+            if edges_left == 0 {
+                break;
+            }
+        }
+    }
+
+    // 3. fill to the exact edge target.
+    let mut guard = 0usize;
+    while edges_left > 0 {
+        guard += 1;
+        assert!(guard < 1_000_000, "generator failed to place remaining edges");
+        let l = 1 + rng.gen_range((layers - 1) as u32) as usize;
+        if by_layer[l].is_empty() || earlier[l].is_empty() {
+            continue;
+        }
+        let v = *rng.choose(&by_layer[l]);
+        let u = *rng.choose(&earlier[l]);
+        if have.insert((u, v)) {
+            dag.add_edge(u, v);
+            edges_left -= 1;
+        }
+    }
+
+    if config.with_virtual_source {
+        let src = dag.add_node("__source", KernelKind::Source, config.size);
+        let initial: Vec<NodeId> = ids
+            .iter()
+            .copied()
+            .filter(|&i| dag.in_degree(i) == 0)
+            .collect();
+        for v in initial {
+            dag.add_edge(src, v);
+        }
+    }
+
+    dag
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::topo::is_acyclic;
+
+    #[test]
+    fn paper_instance_exact_counts() {
+        let dag = generate_layered(&GeneratorConfig::paper(KernelKind::Mm, 512));
+        assert_eq!(dag.kernel_count(), 38, "paper: 38 kernels");
+        assert_eq!(dag.edge_count(), 75, "paper: 75 data dependencies");
+        assert!(is_acyclic(&dag));
+    }
+
+    #[test]
+    fn paper_instance_deterministic() {
+        let a = generate_layered(&GeneratorConfig::paper(KernelKind::Ma, 256));
+        let b = generate_layered(&GeneratorConfig::paper(KernelKind::Ma, 256));
+        let ea: Vec<_> = a.edges().map(|(_, e)| (e.src, e.dst)).collect();
+        let eb: Vec<_> = b.edges().map(|(_, e)| (e.src, e.dst)).collect();
+        assert_eq!(ea, eb);
+    }
+
+    #[test]
+    fn virtual_source_feeds_all_initials() {
+        let mut cfg = GeneratorConfig::paper(KernelKind::Ma, 64);
+        cfg.with_virtual_source = true;
+        let dag = generate_layered(&cfg);
+        let src = dag.node_by_name("__source").unwrap();
+        assert_eq!(dag.node(src).kernel, KernelKind::Source);
+        // Every non-source node must now be reachable-from-sourced (indeg > 0).
+        for (id, n) in dag.nodes() {
+            if n.kernel != KernelKind::Source {
+                assert!(dag.in_degree(id) > 0, "{} has no inputs", n.name);
+            }
+        }
+    }
+
+    #[test]
+    fn scaled_configs_acyclic_and_exact() {
+        for k in [10, 38, 100, 333] {
+            let cfg = GeneratorConfig::scaled(k, KernelKind::Mm, 128, 7);
+            let dag = generate_layered(&cfg);
+            assert_eq!(dag.kernel_count(), k);
+            assert_eq!(dag.edge_count(), cfg.edges);
+            assert!(is_acyclic(&dag));
+        }
+    }
+
+    #[test]
+    fn no_duplicate_edges() {
+        let dag = generate_layered(&GeneratorConfig::paper(KernelKind::Mm, 64));
+        let mut seen = std::collections::HashSet::new();
+        for (_, e) in dag.edges() {
+            assert!(seen.insert((e.src, e.dst)), "duplicate edge {e:?}");
+        }
+    }
+
+    #[test]
+    fn seeds_change_structure() {
+        let mut c1 = GeneratorConfig::paper(KernelKind::Mm, 64);
+        c1.seed = 1;
+        let mut c2 = c1.clone();
+        c2.seed = 2;
+        let e1: Vec<_> = generate_layered(&c1).edges().map(|(_, e)| (e.src, e.dst)).collect();
+        let e2: Vec<_> = generate_layered(&c2).edges().map(|(_, e)| (e.src, e.dst)).collect();
+        assert_ne!(e1, e2);
+    }
+}

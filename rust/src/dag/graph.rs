@@ -1,0 +1,338 @@
+//! Core task-graph representation.
+//!
+//! A [`Dag`] is an arena of [`Node`]s (kernels) and [`Edge`]s (data
+//! dependencies). Each node carries the kernel kind and square-matrix side
+//! length; each edge carries the payload size in bytes (one `n x n` f32
+//! matrix by default, matching the paper's workload where every kernel has
+//! two inputs and one output).
+
+use std::collections::HashMap;
+use std::fmt;
+
+/// Index of a node within its [`Dag`].
+pub type NodeId = usize;
+/// Index of an edge within its [`Dag`].
+pub type EdgeId = usize;
+
+/// The kernel computed by a task node.
+///
+/// `Ma`/`Mm` are the paper's two evaluation kernels; `MmAdd`/`MaChain` are
+/// the fused variants used by the Cholesky / chain examples; `Source` is
+/// the paper's "empty kernel" whose weight is zero and whose output is the
+/// initial host-resident data.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    /// Matrix addition (bandwidth-bound).
+    Ma,
+    /// Matrix multiplication (compute-bound).
+    Mm,
+    /// Fused `a @ b + c`.
+    MmAdd,
+    /// Fused `(x + y) + z`.
+    MaChain,
+    /// Zero-cost virtual source producing initial host data.
+    Source,
+}
+
+impl KernelKind {
+    /// Number of input operands (the paper's kernels have two).
+    pub fn arity(self) -> usize {
+        match self {
+            KernelKind::Ma | KernelKind::Mm => 2,
+            KernelKind::MmAdd | KernelKind::MaChain => 3,
+            KernelKind::Source => 0,
+        }
+    }
+
+    /// Stable lowercase name; matches the artifact manifest's `op` field.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Ma => "ma",
+            KernelKind::Mm => "mm",
+            KernelKind::MmAdd => "mm_add",
+            KernelKind::MaChain => "ma_chain",
+            KernelKind::Source => "source",
+        }
+    }
+
+    /// Parse from the manifest/DOT attribute spelling.
+    pub fn parse(s: &str) -> Option<KernelKind> {
+        Some(match s {
+            "ma" => KernelKind::Ma,
+            "mm" => KernelKind::Mm,
+            "mm_add" => KernelKind::MmAdd,
+            "ma_chain" => KernelKind::MaChain,
+            "source" => KernelKind::Source,
+            _ => return None,
+        })
+    }
+
+    /// Nominal flop count for one execution at square size `n`.
+    pub fn flops(self, n: u32) -> u64 {
+        let n = n as u64;
+        match self {
+            KernelKind::Ma => n * n,
+            KernelKind::Mm => 2 * n * n * n,
+            KernelKind::MmAdd => 2 * n * n * n + n * n,
+            KernelKind::MaChain => 2 * n * n,
+            KernelKind::Source => 0,
+        }
+    }
+}
+
+impl fmt::Display for KernelKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A task node: one kernel execution.
+#[derive(Debug, Clone)]
+pub struct Node {
+    /// Unique display name (DOT identifier).
+    pub name: String,
+    /// Kernel this node runs.
+    pub kernel: KernelKind,
+    /// Square-matrix side length of the node's operands.
+    pub size: u32,
+}
+
+/// A data dependency: `src`'s output is one of `dst`'s inputs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Edge {
+    pub src: NodeId,
+    pub dst: NodeId,
+    /// Payload size in bytes (one f32 matrix unless overridden).
+    pub bytes: u64,
+}
+
+/// A directed acyclic task graph.
+#[derive(Debug, Clone, Default)]
+pub struct Dag {
+    nodes: Vec<Node>,
+    edges: Vec<Edge>,
+    /// Outgoing edge ids per node.
+    succs: Vec<Vec<EdgeId>>,
+    /// Incoming edge ids per node.
+    preds: Vec<Vec<EdgeId>>,
+    by_name: HashMap<String, NodeId>,
+}
+
+impl Dag {
+    pub fn new() -> Dag {
+        Dag::default()
+    }
+
+    /// Add a node; names must be unique.
+    pub fn add_node(&mut self, name: impl Into<String>, kernel: KernelKind, size: u32) -> NodeId {
+        let name = name.into();
+        assert!(
+            !self.by_name.contains_key(&name),
+            "duplicate node name {name:?}"
+        );
+        let id = self.nodes.len();
+        self.by_name.insert(name.clone(), id);
+        self.nodes.push(Node { name, kernel, size });
+        self.succs.push(Vec::new());
+        self.preds.push(Vec::new());
+        id
+    }
+
+    /// Add a dependency edge carrying one `size x size` f32 matrix of the
+    /// source node.
+    pub fn add_edge(&mut self, src: NodeId, dst: NodeId) -> EdgeId {
+        let bytes = 4 * self.nodes[src].size as u64 * self.nodes[src].size as u64;
+        self.add_edge_with_bytes(src, dst, bytes)
+    }
+
+    /// Add a dependency edge with an explicit payload size.
+    pub fn add_edge_with_bytes(&mut self, src: NodeId, dst: NodeId, bytes: u64) -> EdgeId {
+        assert!(src < self.nodes.len() && dst < self.nodes.len());
+        assert_ne!(src, dst, "self-loop on {}", self.nodes[src].name);
+        let id = self.edges.len();
+        self.edges.push(Edge { src, dst, bytes });
+        self.succs[src].push(id);
+        self.preds[dst].push(id);
+        id
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    pub fn node_mut(&mut self, id: NodeId) -> &mut Node {
+        &mut self.nodes[id]
+    }
+
+    pub fn edge(&self, id: EdgeId) -> &Edge {
+        &self.edges[id]
+    }
+
+    pub fn nodes(&self) -> impl Iterator<Item = (NodeId, &Node)> {
+        self.nodes.iter().enumerate()
+    }
+
+    pub fn edges(&self) -> impl Iterator<Item = (EdgeId, &Edge)> {
+        self.edges.iter().enumerate()
+    }
+
+    pub fn node_by_name(&self, name: &str) -> Option<NodeId> {
+        self.by_name.get(name).copied()
+    }
+
+    /// Outgoing edge ids of `id`.
+    pub fn out_edges(&self, id: NodeId) -> &[EdgeId] {
+        &self.succs[id]
+    }
+
+    /// Incoming edge ids of `id`.
+    pub fn in_edges(&self, id: NodeId) -> &[EdgeId] {
+        &self.preds[id]
+    }
+
+    /// Successor node ids of `id`.
+    pub fn successors(&self, id: NodeId) -> impl Iterator<Item = NodeId> + '_ {
+        self.succs[id].iter().map(move |&e| self.edges[e].dst)
+    }
+
+    /// Predecessor node ids of `id`.
+    pub fn predecessors(&self, id: NodeId) -> impl Iterator<Item = NodeId> + '_ {
+        self.preds[id].iter().map(move |&e| self.edges[e].src)
+    }
+
+    pub fn in_degree(&self, id: NodeId) -> usize {
+        self.preds[id].len()
+    }
+
+    pub fn out_degree(&self, id: NodeId) -> usize {
+        self.succs[id].len()
+    }
+
+    /// Nodes with no predecessors.
+    pub fn sources(&self) -> Vec<NodeId> {
+        (0..self.nodes.len())
+            .filter(|&i| self.preds[i].is_empty())
+            .collect()
+    }
+
+    /// Nodes with no successors.
+    pub fn sinks(&self) -> Vec<NodeId> {
+        (0..self.nodes.len())
+            .filter(|&i| self.succs[i].is_empty())
+            .collect()
+    }
+
+    /// Count of "real" kernels, excluding virtual sources.
+    pub fn kernel_count(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| n.kernel != KernelKind::Source)
+            .count()
+    }
+
+    /// Total bytes carried by all edges.
+    pub fn total_edge_bytes(&self) -> u64 {
+        self.edges.iter().map(|e| e.bytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> Dag {
+        let mut g = Dag::new();
+        let a = g.add_node("a", KernelKind::Ma, 64);
+        let b = g.add_node("b", KernelKind::Ma, 64);
+        let c = g.add_node("c", KernelKind::Mm, 64);
+        let d = g.add_node("d", KernelKind::Ma, 64);
+        g.add_edge(a, b);
+        g.add_edge(a, c);
+        g.add_edge(b, d);
+        g.add_edge(c, d);
+        g
+    }
+
+    #[test]
+    fn build_and_query() {
+        let g = diamond();
+        assert_eq!(g.node_count(), 4);
+        assert_eq!(g.edge_count(), 4);
+        assert_eq!(g.sources(), vec![0]);
+        assert_eq!(g.sinks(), vec![3]);
+        assert_eq!(g.in_degree(3), 2);
+        assert_eq!(g.out_degree(0), 2);
+        assert_eq!(g.node_by_name("c"), Some(2));
+        assert_eq!(g.node_by_name("zz"), None);
+    }
+
+    #[test]
+    fn edge_bytes_default_f32_matrix() {
+        let g = diamond();
+        assert_eq!(g.edge(0).bytes, 4 * 64 * 64);
+        assert_eq!(g.total_edge_bytes(), 4 * 4 * 64 * 64);
+    }
+
+    #[test]
+    fn successors_and_predecessors() {
+        let g = diamond();
+        let succ: Vec<_> = g.successors(0).collect();
+        assert_eq!(succ, vec![1, 2]);
+        let pred: Vec<_> = g.predecessors(3).collect();
+        assert_eq!(pred, vec![1, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate node name")]
+    fn duplicate_names_rejected() {
+        let mut g = Dag::new();
+        g.add_node("x", KernelKind::Ma, 8);
+        g.add_node("x", KernelKind::Mm, 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "self-loop")]
+    fn self_loops_rejected() {
+        let mut g = Dag::new();
+        let a = g.add_node("a", KernelKind::Ma, 8);
+        g.add_edge(a, a);
+    }
+
+    #[test]
+    fn kernel_kind_roundtrip() {
+        for k in [
+            KernelKind::Ma,
+            KernelKind::Mm,
+            KernelKind::MmAdd,
+            KernelKind::MaChain,
+            KernelKind::Source,
+        ] {
+            assert_eq!(KernelKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(KernelKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn kernel_flops() {
+        assert_eq!(KernelKind::Mm.flops(64), 2 * 64 * 64 * 64);
+        assert_eq!(KernelKind::Ma.flops(64), 64 * 64);
+        assert_eq!(KernelKind::Source.flops(64), 0);
+    }
+
+    #[test]
+    fn kernel_count_excludes_sources() {
+        let mut g = diamond();
+        let s = g.add_node("src0", KernelKind::Source, 64);
+        g.add_edge(s, 0);
+        assert_eq!(g.node_count(), 5);
+        assert_eq!(g.kernel_count(), 4);
+    }
+}

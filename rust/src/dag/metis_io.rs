@@ -1,0 +1,232 @@
+//! METIS line-based graph format I/O — the "format translator" of the
+//! paper's processing flow (§III.B): METIS expresses graphs as one
+//! adjacency line per vertex, while DOT is edge-based.
+//!
+//! Format (undirected, as consumed by `gpmetis`):
+//!
+//! ```text
+//! <nvtxs> <nedges> <fmt> [ncon]
+//! <vwgt_1..ncon> <adj> <adjwgt> <adj> <adjwgt> ...   (one line per vertex)
+//! ```
+//!
+//! `fmt=011` means vertex weights + edge weights are present. Vertex ids
+//! are 1-based. A DAG's directed edges are symmetrized; antiparallel
+//! duplicates are merged by summing weights (METIS requires a symmetric
+//! adjacency structure).
+
+use std::collections::HashMap;
+
+use super::graph::{Dag, NodeId};
+
+/// An undirected weighted graph in METIS vertex-adjacency form.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetisGraph {
+    /// Vertex weights (one constraint).
+    pub vwgt: Vec<i64>,
+    /// Adjacency: `(neighbor, edge_weight)` per vertex, neighbor 0-based.
+    pub adj: Vec<Vec<(usize, i64)>>,
+}
+
+impl MetisGraph {
+    pub fn vertex_count(&self) -> usize {
+        self.vwgt.len()
+    }
+
+    /// Number of undirected edges.
+    pub fn edge_count(&self) -> usize {
+        self.adj.iter().map(|a| a.len()).sum::<usize>() / 2
+    }
+}
+
+/// Lower a weighted DAG to the symmetrized METIS structure.
+///
+/// `node_weight(id)` and `edge_weight(eid)` supply the integer weights
+/// (the paper measures both in milliseconds; callers scale to integers —
+/// METIS accepts only integral weights, so we use microseconds upstream).
+pub fn dag_to_metis(
+    dag: &Dag,
+    node_weight: impl Fn(NodeId) -> i64,
+    edge_weight: impl Fn(super::graph::EdgeId) -> i64,
+) -> MetisGraph {
+    let n = dag.node_count();
+    let mut merged: Vec<HashMap<usize, i64>> = vec![HashMap::new(); n];
+    for (eid, e) in dag.edges() {
+        let w = edge_weight(eid).max(1);
+        *merged[e.src].entry(e.dst).or_insert(0) += w;
+        *merged[e.dst].entry(e.src).or_insert(0) += w;
+    }
+    let adj = merged
+        .into_iter()
+        .map(|m| {
+            let mut v: Vec<(usize, i64)> = m.into_iter().collect();
+            v.sort_unstable();
+            v
+        })
+        .collect();
+    MetisGraph {
+        vwgt: (0..n).map(|i| node_weight(i).max(0)).collect(),
+        adj,
+    }
+}
+
+/// Serialize in `gpmetis` file format (fmt=011: vwgt + adjwgt).
+pub fn write_metis(g: &MetisGraph) -> String {
+    let mut s = String::new();
+    s.push_str(&format!("{} {} 011\n", g.vertex_count(), g.edge_count()));
+    for v in 0..g.vertex_count() {
+        let mut line = format!("{}", g.vwgt[v]);
+        for &(u, w) in &g.adj[v] {
+            line.push_str(&format!(" {} {}", u + 1, w));
+        }
+        line.push('\n');
+        s.push_str(&line);
+    }
+    s
+}
+
+/// Parse the `gpmetis` file format produced by [`write_metis`].
+pub fn parse_metis(src: &str) -> Result<MetisGraph, String> {
+    let mut lines = src
+        .lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('%'));
+    let header = lines.next().ok_or("empty metis file")?;
+    let head: Vec<&str> = header.split_whitespace().collect();
+    if head.len() < 2 {
+        return Err(format!("bad header {header:?}"));
+    }
+    let nv: usize = head[0].parse().map_err(|_| "bad vertex count")?;
+    let ne: usize = head[1].parse().map_err(|_| "bad edge count")?;
+    let fmt = head.get(2).copied().unwrap_or("000");
+    let has_vwgt = fmt.len() >= 2 && &fmt[fmt.len() - 2..fmt.len() - 1] == "1";
+    let has_ewgt = fmt.ends_with('1');
+
+    let mut g = MetisGraph { vwgt: Vec::with_capacity(nv), adj: Vec::with_capacity(nv) };
+    for (i, line) in lines.enumerate() {
+        if i >= nv {
+            return Err("too many vertex lines".into());
+        }
+        let mut it = line.split_whitespace();
+        let vw = if has_vwgt {
+            it.next().ok_or("missing vertex weight")?.parse::<i64>().map_err(|_| "bad vwgt")?
+        } else {
+            1
+        };
+        g.vwgt.push(vw);
+        let mut adj = Vec::new();
+        loop {
+            let Some(u) = it.next() else { break };
+            let u: usize = u.parse().map_err(|_| "bad adjacency id")?;
+            if u == 0 || u > nv {
+                return Err(format!("adjacency id {u} out of range"));
+            }
+            let w = if has_ewgt {
+                it.next().ok_or("missing edge weight")?.parse::<i64>().map_err(|_| "bad ewgt")?
+            } else {
+                1
+            };
+            adj.push((u - 1, w));
+        }
+        g.adj.push(adj);
+    }
+    if g.vwgt.len() != nv {
+        return Err(format!("expected {nv} vertex lines, got {}", g.vwgt.len()));
+    }
+    if g.edge_count() != ne {
+        return Err(format!("edge count mismatch: header {ne}, lines {}", g.edge_count()));
+    }
+    Ok(g)
+}
+
+/// Serialize a partition vector in `gpmetis` output format (one part id
+/// per line, vertex order).
+pub fn write_partition(parts: &[usize]) -> String {
+    let mut s = String::with_capacity(parts.len() * 2);
+    for &p in parts {
+        s.push_str(&format!("{p}\n"));
+    }
+    s
+}
+
+/// Parse a `gpmetis` partition file.
+pub fn parse_partition(src: &str) -> Result<Vec<usize>, String> {
+    src.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty())
+        .map(|l| l.parse::<usize>().map_err(|_| format!("bad part line {l:?}")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::graph::KernelKind;
+
+    fn sample_dag() -> Dag {
+        let mut g = Dag::new();
+        let a = g.add_node("a", KernelKind::Mm, 64);
+        let b = g.add_node("b", KernelKind::Mm, 64);
+        let c = g.add_node("c", KernelKind::Mm, 64);
+        g.add_edge(a, b);
+        g.add_edge(b, c);
+        g.add_edge(a, c);
+        g
+    }
+
+    #[test]
+    fn dag_to_metis_symmetrizes() {
+        let g = dag_to_metis(&sample_dag(), |_| 10, |_| 5);
+        assert_eq!(g.vertex_count(), 3);
+        assert_eq!(g.edge_count(), 3);
+        // b's neighbors are a and c.
+        assert_eq!(g.adj[1], vec![(0, 5), (2, 5)]);
+    }
+
+    #[test]
+    fn antiparallel_edges_merge() {
+        let mut d = Dag::new();
+        let a = d.add_node("a", KernelKind::Ma, 8);
+        let b = d.add_node("b", KernelKind::Ma, 8);
+        d.add_edge(a, b);
+        d.add_edge(b, a); // cyclic as a digraph, but METIS is undirected
+        let g = dag_to_metis(&d, |_| 1, |_| 3);
+        assert_eq!(g.edge_count(), 1);
+        assert_eq!(g.adj[0], vec![(1, 6)]);
+    }
+
+    #[test]
+    fn metis_text_roundtrip() {
+        let g = dag_to_metis(&sample_dag(), |i| (i as i64 + 1) * 7, |e| (e as i64 + 1) * 3);
+        let text = write_metis(&g);
+        let g2 = parse_metis(&text).unwrap();
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn metis_header_shape() {
+        let g = dag_to_metis(&sample_dag(), |_| 1, |_| 1);
+        let text = write_metis(&g);
+        assert!(text.starts_with("3 3 011\n"));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_metis("").is_err());
+        assert!(parse_metis("2 1 011\n1 5 3\n1 0 3\n").is_err()); // id 5 out of range
+        assert!(parse_metis("2 9 011\n1 2 3\n1 1 3\n").is_err()); // edge count mismatch
+    }
+
+    #[test]
+    fn partition_roundtrip() {
+        let parts = vec![0, 1, 1, 0, 2];
+        let text = write_partition(&parts);
+        assert_eq!(parse_partition(&text).unwrap(), parts);
+    }
+
+    #[test]
+    fn zero_edge_weight_clamped_to_one() {
+        // METIS requires positive edge weights.
+        let g = dag_to_metis(&sample_dag(), |_| 1, |_| 0);
+        assert!(g.adj.iter().flatten().all(|&(_, w)| w >= 1));
+    }
+}

@@ -1,0 +1,16 @@
+//! Task-DAG substrate: graph arena, topological utilities, DOT subset
+//! parser/writer, METIS line-format I/O, random layered generator, and a
+//! library of named workloads (paper DAG, Montage-like, tiled Cholesky,
+//! stencil, fork-join).
+
+pub mod dot;
+pub mod generator;
+pub mod graph;
+pub mod metis_io;
+pub mod stats;
+pub mod topo;
+pub mod workloads;
+
+pub use generator::{GeneratorConfig, generate_layered};
+pub use graph::{Dag, Edge, EdgeId, KernelKind, Node, NodeId};
+pub use topo::{is_acyclic, topo_order};

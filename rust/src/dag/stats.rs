@@ -1,0 +1,146 @@
+//! Structural statistics of a task DAG — the quantities that drive
+//! scheduler behaviour (§IV.A: "the number of kernels and data
+//! dependencies determines the structural complexity of this task").
+
+use super::graph::Dag;
+use super::topo::{critical_path, levels};
+
+/// Summary of a DAG's structure.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DagStats {
+    pub nodes: usize,
+    pub edges: usize,
+    /// Longest path length in hops (depth).
+    pub depth: usize,
+    /// Maximum number of nodes on one level (peak task parallelism).
+    pub width: usize,
+    /// Mean in-degree over non-source nodes.
+    pub mean_in_degree: f64,
+    pub max_in_degree: usize,
+    pub max_out_degree: usize,
+    pub sources: usize,
+    pub sinks: usize,
+    /// Edges / max possible forward edges given the level structure.
+    pub density: f64,
+    /// Unit-cost critical path / nodes — 1.0 = pure chain, ~0 = flat.
+    pub seriality: f64,
+}
+
+/// Compute statistics; panics on cyclic graphs.
+pub fn stats(dag: &Dag) -> DagStats {
+    let n = dag.node_count();
+    if n == 0 {
+        return DagStats {
+            nodes: 0,
+            edges: 0,
+            depth: 0,
+            width: 0,
+            mean_in_degree: 0.0,
+            max_in_degree: 0,
+            max_out_degree: 0,
+            sources: 0,
+            sinks: 0,
+            density: 0.0,
+            seriality: 0.0,
+        };
+    }
+    let lv = levels(dag);
+    let depth = lv.iter().copied().max().unwrap_or(0);
+    let mut per_level = vec![0usize; depth + 1];
+    for &l in &lv {
+        per_level[l] += 1;
+    }
+    // Max forward edges: every pair of nodes on strictly increasing levels.
+    let mut prefix = 0usize;
+    let mut max_fwd = 0usize;
+    for &c in &per_level {
+        max_fwd += c * prefix;
+        prefix += c;
+    }
+    let cp_hops = critical_path(dag, |_| 1.0, |_| 0.0);
+    DagStats {
+        nodes: n,
+        edges: dag.edge_count(),
+        depth,
+        width: per_level.iter().copied().max().unwrap_or(0),
+        mean_in_degree: dag.edge_count() as f64 / n as f64,
+        max_in_degree: (0..n).map(|v| dag.in_degree(v)).max().unwrap_or(0),
+        max_out_degree: (0..n).map(|v| dag.out_degree(v)).max().unwrap_or(0),
+        sources: dag.sources().len(),
+        sinks: dag.sinks().len(),
+        density: if max_fwd == 0 { 0.0 } else { dag.edge_count() as f64 / max_fwd as f64 },
+        seriality: cp_hops / n as f64,
+    }
+}
+
+impl std::fmt::Display for DagStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "nodes          {}", self.nodes)?;
+        writeln!(f, "edges          {}", self.edges)?;
+        writeln!(f, "depth          {}", self.depth)?;
+        writeln!(f, "width          {}", self.width)?;
+        writeln!(f, "mean in-degree {:.2}", self.mean_in_degree)?;
+        writeln!(f, "max in-degree  {}", self.max_in_degree)?;
+        writeln!(f, "max out-degree {}", self.max_out_degree)?;
+        writeln!(f, "sources/sinks  {}/{}", self.sources, self.sinks)?;
+        writeln!(f, "density        {:.4}", self.density)?;
+        write!(f, "seriality      {:.3}", self.seriality)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::generator::{generate_layered, GeneratorConfig};
+    use crate::dag::{workloads, KernelKind};
+
+    #[test]
+    fn chain_stats() {
+        let g = workloads::chain(6, KernelKind::Ma, 8);
+        let s = stats(&g);
+        assert_eq!(s.nodes, 6);
+        assert_eq!(s.edges, 5);
+        assert_eq!(s.depth, 5);
+        assert_eq!(s.width, 1);
+        assert_eq!(s.sources, 1);
+        assert_eq!(s.sinks, 1);
+        assert!((s.seriality - 1.0).abs() < 1e-12, "a chain is fully serial");
+    }
+
+    #[test]
+    fn fork_join_stats() {
+        let g = workloads::fork_join(10, KernelKind::Mm, 8);
+        let s = stats(&g);
+        assert_eq!(s.depth, 2);
+        assert_eq!(s.width, 10);
+        assert_eq!(s.max_out_degree, 10);
+        assert_eq!(s.max_in_degree, 10);
+        assert!(s.seriality < 0.5);
+    }
+
+    #[test]
+    fn paper_instance_stats() {
+        let g = generate_layered(&GeneratorConfig::paper(KernelKind::Mm, 512));
+        let s = stats(&g);
+        assert_eq!(s.nodes, 38);
+        assert_eq!(s.edges, 75);
+        assert!((s.mean_in_degree - 75.0 / 38.0).abs() < 1e-12);
+        assert!(s.depth >= 4, "paper DAG is layered: depth {}", s.depth);
+        assert!(s.density > 0.0 && s.density < 1.0);
+    }
+
+    #[test]
+    fn empty_graph_stats() {
+        let s = stats(&crate::dag::Dag::new());
+        assert_eq!(s.nodes, 0);
+        assert_eq!(s.density, 0.0);
+    }
+
+    #[test]
+    fn display_renders() {
+        let g = workloads::chain(3, KernelKind::Ma, 8);
+        let text = format!("{}", stats(&g));
+        assert!(text.contains("nodes          3"));
+        assert!(text.contains("seriality"));
+    }
+}

@@ -1,0 +1,165 @@
+//! Topological utilities: Kahn ordering, acyclicity check, depth levels,
+//! critical-path length under a node/edge cost model.
+
+use super::graph::{Dag, NodeId};
+
+/// Kahn's algorithm. Returns `None` if the graph has a cycle.
+pub fn topo_order(dag: &Dag) -> Option<Vec<NodeId>> {
+    let n = dag.node_count();
+    let mut indeg: Vec<usize> = (0..n).map(|i| dag.in_degree(i)).collect();
+    let mut queue: Vec<NodeId> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    let mut order = Vec::with_capacity(n);
+    let mut head = 0;
+    while head < queue.len() {
+        let u = queue[head];
+        head += 1;
+        order.push(u);
+        for v in dag.successors(u) {
+            indeg[v] -= 1;
+            if indeg[v] == 0 {
+                queue.push(v);
+            }
+        }
+    }
+    (order.len() == n).then_some(order)
+}
+
+/// True iff the graph contains no directed cycle.
+pub fn is_acyclic(dag: &Dag) -> bool {
+    topo_order(dag).is_some()
+}
+
+/// Longest-path depth (level) of each node; sources are level 0.
+/// Panics on cyclic graphs.
+pub fn levels(dag: &Dag) -> Vec<usize> {
+    let order = topo_order(dag).expect("levels() requires an acyclic graph");
+    let mut lvl = vec![0usize; dag.node_count()];
+    for &u in &order {
+        for v in dag.successors(u) {
+            lvl[v] = lvl[v].max(lvl[u] + 1);
+        }
+    }
+    lvl
+}
+
+/// Critical-path length with per-node and per-edge costs.
+///
+/// `node_cost(id)` is the execution cost of a node, `edge_cost(eid)` the
+/// communication cost of an edge; the result is the heaviest source→sink
+/// chain, the classic lower bound on any schedule's makespan.
+pub fn critical_path(
+    dag: &Dag,
+    node_cost: impl Fn(NodeId) -> f64,
+    edge_cost: impl Fn(super::graph::EdgeId) -> f64,
+) -> f64 {
+    let order = topo_order(dag).expect("critical_path() requires an acyclic graph");
+    let mut finish = vec![0.0f64; dag.node_count()];
+    let mut best = 0.0f64;
+    for &u in &order {
+        let mut start = 0.0f64;
+        for &e in dag.in_edges(u) {
+            let edge = dag.edge(e);
+            start = start.max(finish[edge.src] + edge_cost(e));
+        }
+        finish[u] = start + node_cost(u);
+        best = best.max(finish[u]);
+    }
+    best
+}
+
+/// Transitive reachability from `from` (inclusive).
+pub fn reachable_from(dag: &Dag, from: NodeId) -> Vec<bool> {
+    let mut seen = vec![false; dag.node_count()];
+    let mut stack = vec![from];
+    seen[from] = true;
+    while let Some(u) = stack.pop() {
+        for v in dag.successors(u) {
+            if !seen[v] {
+                seen[v] = true;
+                stack.push(v);
+            }
+        }
+    }
+    seen
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::graph::KernelKind;
+
+    fn chain(n: usize) -> Dag {
+        let mut g = Dag::new();
+        let ids: Vec<_> = (0..n)
+            .map(|i| g.add_node(format!("n{i}"), KernelKind::Ma, 8))
+            .collect();
+        for w in ids.windows(2) {
+            g.add_edge(w[0], w[1]);
+        }
+        g
+    }
+
+    #[test]
+    fn topo_on_chain() {
+        let g = chain(5);
+        assert_eq!(topo_order(&g).unwrap(), vec![0, 1, 2, 3, 4]);
+        assert!(is_acyclic(&g));
+    }
+
+    #[test]
+    fn topo_respects_edges() {
+        let mut g = Dag::new();
+        let a = g.add_node("a", KernelKind::Ma, 8);
+        let b = g.add_node("b", KernelKind::Ma, 8);
+        let c = g.add_node("c", KernelKind::Ma, 8);
+        g.add_edge(c, b);
+        g.add_edge(b, a);
+        let order = topo_order(&g).unwrap();
+        let pos = |x: usize| order.iter().position(|&u| u == x).unwrap();
+        assert!(pos(c) < pos(b) && pos(b) < pos(a));
+    }
+
+    #[test]
+    fn levels_on_diamond() {
+        let mut g = Dag::new();
+        let a = g.add_node("a", KernelKind::Ma, 8);
+        let b = g.add_node("b", KernelKind::Ma, 8);
+        let c = g.add_node("c", KernelKind::Ma, 8);
+        let d = g.add_node("d", KernelKind::Ma, 8);
+        g.add_edge(a, b);
+        g.add_edge(a, c);
+        g.add_edge(b, d);
+        g.add_edge(c, d);
+        assert_eq!(levels(&g), vec![0, 1, 1, 2]);
+    }
+
+    #[test]
+    fn critical_path_chain() {
+        let g = chain(4);
+        let cp = critical_path(&g, |_| 2.0, |_| 1.0);
+        // 4 nodes x 2.0 + 3 edges x 1.0
+        assert!((cp - 11.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn critical_path_picks_heavier_branch() {
+        let mut g = Dag::new();
+        let a = g.add_node("a", KernelKind::Ma, 8);
+        let b = g.add_node("b", KernelKind::Ma, 8); // heavy
+        let c = g.add_node("c", KernelKind::Ma, 8); // light
+        let d = g.add_node("d", KernelKind::Ma, 8);
+        g.add_edge(a, b);
+        g.add_edge(a, c);
+        g.add_edge(b, d);
+        g.add_edge(c, d);
+        let cp = critical_path(&g, |id| if id == b { 10.0 } else { 1.0 }, |_| 0.0);
+        assert!((cp - 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reachability() {
+        let g = chain(4);
+        let r = reachable_from(&g, 1);
+        assert_eq!(r, vec![false, true, true, true]);
+    }
+}

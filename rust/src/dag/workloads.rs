@@ -1,0 +1,270 @@
+//! Named workload builders.
+//!
+//! Beyond the paper's random instance, these are the DAG families its
+//! introduction and related work motivate: Montage-style astronomy
+//! workflows (Tanaka & Tatebe's multi-constraint partitioning target),
+//! tiled Cholesky factorization (Ltaief et al., the classic dense-linear-
+//! algebra data-flow workload), wavefront stencils, and fork-join maps.
+
+use super::graph::{Dag, KernelKind, NodeId};
+
+/// Montage-like mosaic workflow.
+///
+/// Structure (per the Montage mProject/mDiff/mBackground pipeline):
+/// `width` project nodes fan into `width-1` pairwise diff nodes, a fit
+/// aggregation tree reduces the diffs, one background-model node fans back
+/// out to `width` background-correction nodes, and a final add node
+/// reduces everything into the mosaic.
+pub fn montage(width: usize, size: u32) -> Dag {
+    assert!(width >= 2, "montage needs width >= 2");
+    let mut g = Dag::new();
+    let project: Vec<NodeId> = (0..width)
+        .map(|i| g.add_node(format!("project{i}"), KernelKind::Mm, size))
+        .collect();
+    let diff: Vec<NodeId> = (0..width - 1)
+        .map(|i| g.add_node(format!("diff{i}"), KernelKind::Ma, size))
+        .collect();
+    for i in 0..width - 1 {
+        g.add_edge(project[i], diff[i]);
+        g.add_edge(project[i + 1], diff[i]);
+    }
+    // Binary aggregation tree over the diffs (mFitplane/mConcatFit).
+    let mut frontier = diff.clone();
+    let mut t = 0usize;
+    while frontier.len() > 1 {
+        let mut next = Vec::new();
+        for pair in frontier.chunks(2) {
+            if pair.len() == 2 {
+                let fit = g.add_node(format!("fit{t}"), KernelKind::Ma, size);
+                t += 1;
+                g.add_edge(pair[0], fit);
+                g.add_edge(pair[1], fit);
+                next.push(fit);
+            } else {
+                next.push(pair[0]);
+            }
+        }
+        frontier = next;
+    }
+    let model = g.add_node("bgmodel", KernelKind::Mm, size);
+    g.add_edge(frontier[0], model);
+    let bg: Vec<NodeId> = (0..width)
+        .map(|i| {
+            let b = g.add_node(format!("background{i}"), KernelKind::Ma, size);
+            g.add_edge(project[i], b);
+            g.add_edge(model, b);
+            b
+        })
+        .collect();
+    let mosaic = g.add_node("mosaic", KernelKind::Ma, size);
+    for b in bg {
+        g.add_edge(b, mosaic);
+    }
+    g
+}
+
+/// Tiled right-looking Cholesky factorization DAG over a `t x t` tile
+/// grid: POTRF (diagonal), TRSM (panel), SYRK/GEMM (updates).
+///
+/// Kernel mapping: POTRF/TRSM → `mm` (compute-bound), SYRK/GEMM →
+/// `mm_add` (fused multiply-add), matching each kernel's true arithmetic
+/// shape.
+pub fn cholesky(t: usize, tile: u32) -> Dag {
+    assert!(t >= 1);
+    let mut g = Dag::new();
+    // writer[(i,j)] = node that last wrote tile (i,j).
+    let mut writer: Vec<Vec<Option<NodeId>>> = vec![vec![None; t]; t];
+    for k in 0..t {
+        let potrf = g.add_node(format!("potrf_{k}"), KernelKind::Mm, tile);
+        if let Some(w) = writer[k][k] {
+            g.add_edge(w, potrf);
+        }
+        writer[k][k] = Some(potrf);
+        for i in k + 1..t {
+            let trsm = g.add_node(format!("trsm_{i}_{k}"), KernelKind::Mm, tile);
+            g.add_edge(potrf, trsm);
+            if let Some(w) = writer[i][k] {
+                g.add_edge(w, trsm);
+            }
+            writer[i][k] = Some(trsm);
+        }
+        for i in k + 1..t {
+            for j in k + 1..=i {
+                let name = if i == j {
+                    format!("syrk_{i}_{k}")
+                } else {
+                    format!("gemm_{i}_{j}_{k}")
+                };
+                let upd = g.add_node(name, KernelKind::MmAdd, tile);
+                g.add_edge(writer[i][k].unwrap(), upd);
+                if i != j {
+                    g.add_edge(writer[j][k].unwrap(), upd);
+                }
+                if let Some(w) = writer[i][j] {
+                    g.add_edge(w, upd);
+                }
+                writer[i][j] = Some(upd);
+            }
+        }
+    }
+    g
+}
+
+/// 2-D wavefront stencil: node (i,j) depends on (i-1,j) and (i,j-1).
+pub fn stencil(rows: usize, cols: usize, size: u32) -> Dag {
+    let mut g = Dag::new();
+    let mut ids = vec![vec![0usize; cols]; rows];
+    for i in 0..rows {
+        for j in 0..cols {
+            ids[i][j] = g.add_node(format!("s_{i}_{j}"), KernelKind::Ma, size);
+            if i > 0 {
+                g.add_edge(ids[i - 1][j], ids[i][j]);
+            }
+            if j > 0 {
+                g.add_edge(ids[i][j - 1], ids[i][j]);
+            }
+        }
+    }
+    g
+}
+
+/// Fork-join: one source fans out to `width` parallel kernels which join
+/// into one sink (embarrassingly parallel middle stage).
+pub fn fork_join(width: usize, kernel: KernelKind, size: u32) -> Dag {
+    let mut g = Dag::new();
+    let fork = g.add_node("fork", KernelKind::Ma, size);
+    let join = g.add_node("join", KernelKind::Ma, size);
+    for i in 0..width {
+        let k = g.add_node(format!("work{i}"), kernel, size);
+        g.add_edge(fork, k);
+        g.add_edge(k, join);
+    }
+    g
+}
+
+/// Mixed-kernel random DAG — the workload the paper explicitly did NOT
+/// test (§IV.D: "The graph-partition policy assumes that each kernel has
+/// the same performance ratio between different types of processors.
+/// Hence, we did not test the task consisting of different kernel
+/// types"). `mm_fraction` of the kernels are MM, the rest MA; structure
+/// comes from the layered generator.
+pub fn mixed_random(kernels: usize, size: u32, mm_fraction: f64, seed: u64) -> Dag {
+    use crate::dag::generator::{generate_layered, GeneratorConfig};
+    use crate::util::Pcg32;
+    let cfg = GeneratorConfig::scaled(kernels, KernelKind::Ma, size, seed);
+    let mut dag = generate_layered(&cfg);
+    let mut rng = Pcg32::seeded(seed ^ 0x4D495845 /* "MIXE" */);
+    for id in 0..dag.node_count() {
+        if rng.gen_bool(mm_fraction) {
+            dag.node_mut(id).kernel = KernelKind::Mm;
+        }
+    }
+    dag
+}
+
+/// Linear chain of `len` kernels (worst case for parallel scheduling:
+/// zero task parallelism, every edge a potential transfer).
+pub fn chain(len: usize, kernel: KernelKind, size: u32) -> Dag {
+    assert!(len >= 1);
+    let mut g = Dag::new();
+    let ids: Vec<NodeId> = (0..len)
+        .map(|i| g.add_node(format!("c{i}"), kernel, size))
+        .collect();
+    for w in ids.windows(2) {
+        g.add_edge(w[0], w[1]);
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::topo::{is_acyclic, levels};
+
+    #[test]
+    fn montage_structure() {
+        let g = montage(4, 128);
+        assert!(is_acyclic(&g));
+        // 4 project + 3 diff + 2 fit (3->2->1 tree has 2 internal) + model
+        // + 4 background + mosaic
+        assert_eq!(g.node_by_name("mosaic").map(|m| g.in_degree(m)), Some(4));
+        assert_eq!(g.sinks().len(), 1);
+        assert_eq!(g.sources().len(), 4);
+    }
+
+    #[test]
+    fn montage_width2_minimal() {
+        let g = montage(2, 64);
+        assert!(is_acyclic(&g));
+        assert!(g.node_by_name("bgmodel").is_some());
+    }
+
+    #[test]
+    fn cholesky_counts() {
+        // t tiles: potrf = t, trsm = t(t-1)/2, updates = sum_k (t-k-1)(t-k)/2.
+        let t = 4;
+        let g = cholesky(t, 256);
+        assert!(is_acyclic(&g));
+        let potrf = g.nodes().filter(|(_, n)| n.name.starts_with("potrf")).count();
+        let trsm = g.nodes().filter(|(_, n)| n.name.starts_with("trsm")).count();
+        assert_eq!(potrf, t);
+        assert_eq!(trsm, t * (t - 1) / 2);
+        // The final potrf depends transitively on everything in column 0.
+        let last = g.node_by_name("potrf_3").unwrap();
+        assert!(g.in_degree(last) > 0);
+    }
+
+    #[test]
+    fn cholesky_t1_single_potrf() {
+        let g = cholesky(1, 64);
+        assert_eq!(g.node_count(), 1);
+        assert_eq!(g.edge_count(), 0);
+    }
+
+    #[test]
+    fn stencil_wavefront_levels() {
+        let g = stencil(3, 4, 64);
+        assert!(is_acyclic(&g));
+        assert_eq!(g.node_count(), 12);
+        assert_eq!(g.edge_count(), 2 * 3 * 4 - 3 - 4);
+        let lv = levels(&g);
+        let last = g.node_by_name("s_2_3").unwrap();
+        assert_eq!(lv[last], 2 + 3);
+    }
+
+    #[test]
+    fn fork_join_shape() {
+        let g = fork_join(8, KernelKind::Mm, 128);
+        assert!(is_acyclic(&g));
+        assert_eq!(g.node_count(), 10);
+        assert_eq!(g.edge_count(), 16);
+        assert_eq!(g.out_degree(g.node_by_name("fork").unwrap()), 8);
+        assert_eq!(g.in_degree(g.node_by_name("join").unwrap()), 8);
+    }
+
+    #[test]
+    fn mixed_random_has_both_kernels() {
+        let g = mixed_random(100, 512, 0.5, 7);
+        let mm = g.nodes().filter(|(_, n)| n.kernel == KernelKind::Mm).count();
+        let ma = g.nodes().filter(|(_, n)| n.kernel == KernelKind::Ma).count();
+        assert_eq!(mm + ma, 100);
+        assert!(mm >= 30 && ma >= 30, "roughly half each: {mm}/{ma}");
+        assert!(is_acyclic(&g));
+    }
+
+    #[test]
+    fn mixed_random_fraction_extremes() {
+        let g = mixed_random(50, 256, 0.0, 3);
+        assert!(g.nodes().all(|(_, n)| n.kernel == KernelKind::Ma));
+        let g = mixed_random(50, 256, 1.0, 3);
+        assert!(g.nodes().all(|(_, n)| n.kernel == KernelKind::Mm));
+    }
+
+    #[test]
+    fn chain_shape() {
+        let g = chain(5, KernelKind::Ma, 64);
+        assert_eq!(g.node_count(), 5);
+        assert_eq!(g.edge_count(), 4);
+        assert_eq!(levels(&g)[4], 4);
+    }
+}

@@ -1,0 +1,176 @@
+//! MSI coherence directory.
+//!
+//! Tracks, per data handle, which memory nodes hold a valid copy (a
+//! bitmask — at most 64 memory nodes, plenty beyond the paper's two).
+//! The directory is pure bookkeeping: engines consult it to decide when a
+//! bus transfer is needed and record the resulting state transitions.
+
+use crate::platform::MemNode;
+
+/// Opaque handle to one logical datum (a kernel output or an initial
+/// input buffer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct DataHandle(pub u32);
+
+/// Per-handle coherence state.
+#[derive(Debug, Clone, Default)]
+pub struct Directory {
+    /// Bit `i` set = memory node `i` holds a valid copy.
+    masks: Vec<u64>,
+    bytes: Vec<u64>,
+}
+
+impl Directory {
+    pub fn new() -> Directory {
+        Directory::default()
+    }
+
+    /// Register a datum of `bytes` with its initial valid copy on `home`.
+    pub fn alloc(&mut self, bytes: u64, home: MemNode) -> DataHandle {
+        assert!(home < 64, "memory node out of bitmask range");
+        let h = DataHandle(self.masks.len() as u32);
+        self.masks.push(1u64 << home);
+        self.bytes.push(bytes);
+        h
+    }
+
+    /// Register a datum that nobody has produced yet (no valid copies).
+    pub fn alloc_unwritten(&mut self, bytes: u64) -> DataHandle {
+        let h = DataHandle(self.masks.len() as u32);
+        self.masks.push(0);
+        self.bytes.push(bytes);
+        h
+    }
+
+    pub fn len(&self) -> usize {
+        self.masks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.masks.is_empty()
+    }
+
+    pub fn bytes(&self, h: DataHandle) -> u64 {
+        self.bytes[h.0 as usize]
+    }
+
+    /// Does `node` hold a valid copy?
+    pub fn is_valid(&self, h: DataHandle, node: MemNode) -> bool {
+        self.masks[h.0 as usize] & (1u64 << node) != 0
+    }
+
+    /// Bitmask of nodes holding valid copies.
+    pub fn valid_mask(&self, h: DataHandle) -> u64 {
+        self.masks[h.0 as usize]
+    }
+
+    /// Any node holding a valid copy (lowest id), if any.
+    pub fn any_holder(&self, h: DataHandle) -> Option<MemNode> {
+        let m = self.masks[h.0 as usize];
+        (m != 0).then(|| m.trailing_zeros() as MemNode)
+    }
+
+    /// Acquire for **read** on `node`: returns the source node a transfer
+    /// must copy from (`Some(src)`) or `None` if the copy is already
+    /// local. The new copy becomes Shared.
+    ///
+    /// Panics if the datum has no valid copy anywhere (read of unwritten
+    /// data — a scheduling bug the engines must never commit).
+    pub fn acquire_read(&mut self, h: DataHandle, node: MemNode) -> Option<MemNode> {
+        if self.is_valid(h, node) {
+            return None;
+        }
+        let src = self
+            .any_holder(h)
+            .expect("acquire_read of unwritten datum: dependency violation");
+        self.masks[h.0 as usize] |= 1u64 << node;
+        Some(src)
+    }
+
+    /// Acquire for **write** on `node`: the writer's copy becomes the only
+    /// valid one (M state); every other copy is invalidated.
+    pub fn acquire_write(&mut self, h: DataHandle, node: MemNode) {
+        self.masks[h.0 as usize] = 1u64 << node;
+    }
+
+    /// Number of valid copies.
+    pub fn copy_count(&self, h: DataHandle) -> u32 {
+        self.masks[h.0 as usize].count_ones()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_starts_at_home() {
+        let mut d = Directory::new();
+        let h = d.alloc(1024, 0);
+        assert!(d.is_valid(h, 0));
+        assert!(!d.is_valid(h, 1));
+        assert_eq!(d.bytes(h), 1024);
+        assert_eq!(d.any_holder(h), Some(0));
+    }
+
+    #[test]
+    fn read_replicates_shared() {
+        let mut d = Directory::new();
+        let h = d.alloc(8, 0);
+        assert_eq!(d.acquire_read(h, 1), Some(0), "must fetch from host");
+        assert!(d.is_valid(h, 0) && d.is_valid(h, 1), "both copies valid (S)");
+        assert_eq!(d.copy_count(h), 2);
+        // Second read is a local hit.
+        assert_eq!(d.acquire_read(h, 1), None);
+    }
+
+    #[test]
+    fn write_invalidates_other_copies() {
+        let mut d = Directory::new();
+        let h = d.alloc(8, 0);
+        d.acquire_read(h, 1);
+        d.acquire_write(h, 1);
+        assert!(d.is_valid(h, 1));
+        assert!(!d.is_valid(h, 0), "host copy must be invalidated");
+        assert_eq!(d.copy_count(h), 1);
+        // Reading back on host now requires a transfer from node 1.
+        assert_eq!(d.acquire_read(h, 0), Some(1));
+    }
+
+    #[test]
+    fn unwritten_then_written() {
+        let mut d = Directory::new();
+        let h = d.alloc_unwritten(64);
+        assert_eq!(d.any_holder(h), None);
+        d.acquire_write(h, 1);
+        assert_eq!(d.any_holder(h), Some(1));
+    }
+
+    #[test]
+    #[should_panic(expected = "dependency violation")]
+    fn read_of_unwritten_panics() {
+        let mut d = Directory::new();
+        let h = d.alloc_unwritten(64);
+        d.acquire_read(h, 0);
+    }
+
+    #[test]
+    fn many_handles_independent() {
+        let mut d = Directory::new();
+        let a = d.alloc(1, 0);
+        let b = d.alloc(2, 1);
+        d.acquire_write(a, 1);
+        assert!(d.is_valid(b, 1) && !d.is_valid(b, 0));
+        assert!(d.is_valid(a, 1) && !d.is_valid(a, 0));
+        assert_eq!(d.len(), 2);
+    }
+
+    #[test]
+    fn valid_mask_matches_queries() {
+        let mut d = Directory::new();
+        let h = d.alloc(8, 2);
+        d.acquire_read(h, 0);
+        d.acquire_read(h, 3);
+        assert_eq!(d.valid_mask(h), 0b1101);
+    }
+}

@@ -1,0 +1,120 @@
+//! Transfer ledger: counts, bytes and time of every bus transfer, broken
+//! down by (source, destination) memory-node pair.
+//!
+//! "Data transfer frequency" is the paper's second headline metric (its
+//! §IV.C compares the three schedulers by transfer counts observed in the
+//! runtime trace), so the ledger is a first-class output of every run.
+
+use crate::platform::MemNode;
+
+/// Accumulated transfer statistics.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TransferLedger {
+    /// Per (src, dst) pair: (count, bytes).
+    pairs: Vec<((MemNode, MemNode), (u64, u64))>,
+    pub count: u64,
+    pub bytes: u64,
+    pub time_ms: f64,
+}
+
+impl TransferLedger {
+    pub fn new() -> TransferLedger {
+        TransferLedger::default()
+    }
+
+    /// Record one transfer.
+    pub fn record(&mut self, src: MemNode, dst: MemNode, bytes: u64, time_ms: f64) {
+        self.count += 1;
+        self.bytes += bytes;
+        self.time_ms += time_ms;
+        match self.pairs.iter_mut().find(|(k, _)| *k == (src, dst)) {
+            Some((_, (c, b))) => {
+                *c += 1;
+                *b += bytes;
+            }
+            None => self.pairs.push(((src, dst), (1, bytes))),
+        }
+    }
+
+    /// Transfer count from `src` to `dst`.
+    pub fn count_pair(&self, src: MemNode, dst: MemNode) -> u64 {
+        self.pairs
+            .iter()
+            .find(|(k, _)| *k == (src, dst))
+            .map(|(_, (c, _))| *c)
+            .unwrap_or(0)
+    }
+
+    /// Bytes moved from `src` to `dst`.
+    pub fn bytes_pair(&self, src: MemNode, dst: MemNode) -> u64 {
+        self.pairs
+            .iter()
+            .find(|(k, _)| *k == (src, dst))
+            .map(|(_, (_, b))| *b)
+            .unwrap_or(0)
+    }
+
+    /// All (src, dst) pairs seen, in first-seen order.
+    pub fn pairs(&self) -> impl Iterator<Item = (MemNode, MemNode, u64, u64)> + '_ {
+        self.pairs.iter().map(|&((s, d), (c, b))| (s, d, c, b))
+    }
+
+    /// Merge another ledger into this one.
+    pub fn merge(&mut self, other: &TransferLedger) {
+        for &((s, d), (c, b)) in &other.pairs {
+            self.count += c;
+            self.bytes += b;
+            match self.pairs.iter_mut().find(|(k, _)| *k == (s, d)) {
+                Some((_, (mc, mb))) => {
+                    *mc += c;
+                    *mb += b;
+                }
+                None => self.pairs.push(((s, d), (c, b))),
+            }
+        }
+        self.time_ms += other.time_ms;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_accumulate() {
+        let mut l = TransferLedger::new();
+        l.record(0, 1, 100, 0.5);
+        l.record(0, 1, 200, 0.6);
+        l.record(1, 0, 50, 0.1);
+        assert_eq!(l.count, 3);
+        assert_eq!(l.bytes, 350);
+        assert!((l.time_ms - 1.2).abs() < 1e-12);
+        assert_eq!(l.count_pair(0, 1), 2);
+        assert_eq!(l.bytes_pair(0, 1), 300);
+        assert_eq!(l.count_pair(1, 0), 1);
+        assert_eq!(l.count_pair(1, 2), 0);
+    }
+
+    #[test]
+    fn pairs_iteration() {
+        let mut l = TransferLedger::new();
+        l.record(0, 1, 10, 0.0);
+        l.record(2, 0, 20, 0.0);
+        let pairs: Vec<_> = l.pairs().collect();
+        assert_eq!(pairs, vec![(0, 1, 1, 10), (2, 0, 1, 20)]);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = TransferLedger::new();
+        a.record(0, 1, 10, 0.1);
+        let mut b = TransferLedger::new();
+        b.record(0, 1, 5, 0.2);
+        b.record(1, 0, 7, 0.3);
+        a.merge(&b);
+        assert_eq!(a.count, 3);
+        assert_eq!(a.bytes, 22);
+        assert_eq!(a.count_pair(0, 1), 2);
+        assert!((a.time_ms - 0.6).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,17 @@
+//! Data layer: MSI coherence directory over discrete memory nodes and the
+//! transfer ledger — the StarPU-data substitute (DESIGN.md §2).
+//!
+//! StarPU guarantees data consistency across memory nodes with an
+//! MSI-style protocol: a handle's copy on a node is Modified, Shared, or
+//! Invalid; reads replicate (S), writes take exclusive ownership (M) and
+//! invalidate every other copy. Both execution engines (sim and real)
+//! drive the same [`Directory`], so transfer counts are identical by
+//! construction.
+
+pub mod coherence;
+pub mod ledger;
+pub mod store;
+
+pub use coherence::{DataHandle, Directory};
+pub use ledger::TransferLedger;
+pub use store::HostStore;

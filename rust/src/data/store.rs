@@ -1,0 +1,114 @@
+//! Buffer storage for the real execution engine: one address space per
+//! memory node, holding f32 matrices keyed by data handle.
+//!
+//! On real hardware these would be device allocations; with the CPU-PJRT
+//! substrate every "memory node" is a distinct host-side map, and a bus
+//! transfer is an explicit buffer copy between maps (so a stale copy on
+//! another node can never be read by accident — exactly the property the
+//! MSI directory promises).
+
+use std::collections::HashMap;
+
+use super::coherence::DataHandle;
+use crate::platform::MemNode;
+
+/// Per-memory-node buffer spaces.
+#[derive(Debug, Default)]
+pub struct HostStore {
+    spaces: Vec<HashMap<u32, Vec<f32>>>,
+}
+
+impl HostStore {
+    pub fn new(mem_nodes: usize) -> HostStore {
+        HostStore { spaces: (0..mem_nodes).map(|_| HashMap::new()).collect() }
+    }
+
+    pub fn mem_nodes(&self) -> usize {
+        self.spaces.len()
+    }
+
+    /// Place `data` on `node` (initial allocation or kernel output).
+    pub fn put(&mut self, h: DataHandle, node: MemNode, data: Vec<f32>) {
+        self.spaces[node].insert(h.0, data);
+    }
+
+    /// Read a buffer resident on `node`.
+    pub fn get(&self, h: DataHandle, node: MemNode) -> Option<&Vec<f32>> {
+        self.spaces[node].get(&h.0)
+    }
+
+    /// Copy `h` from `src` to `dst` (the bus transfer). Returns the bytes
+    /// moved. Panics if the source copy is missing — the coherence
+    /// directory must have validated it.
+    pub fn transfer(&mut self, h: DataHandle, src: MemNode, dst: MemNode) -> u64 {
+        let buf = self.spaces[src]
+            .get(&h.0)
+            .unwrap_or_else(|| panic!("transfer of non-resident handle {h:?} from node {src}"))
+            .clone();
+        let bytes = (buf.len() * 4) as u64;
+        self.spaces[dst].insert(h.0, buf);
+        bytes
+    }
+
+    /// Drop the copy of `h` on `node` (MSI invalidation).
+    pub fn invalidate(&mut self, h: DataHandle, node: MemNode) {
+        self.spaces[node].remove(&h.0);
+    }
+
+    /// Bytes resident per node (allocation pressure metric).
+    pub fn resident_bytes(&self, node: MemNode) -> u64 {
+        self.spaces[node].values().map(|v| (v.len() * 4) as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let mut s = HostStore::new(2);
+        let h = DataHandle(0);
+        s.put(h, 0, vec![1.0, 2.0]);
+        assert_eq!(s.get(h, 0), Some(&vec![1.0, 2.0]));
+        assert_eq!(s.get(h, 1), None);
+    }
+
+    #[test]
+    fn transfer_copies_between_spaces() {
+        let mut s = HostStore::new(2);
+        let h = DataHandle(3);
+        s.put(h, 0, vec![5.0; 8]);
+        let bytes = s.transfer(h, 0, 1);
+        assert_eq!(bytes, 32);
+        assert_eq!(s.get(h, 1), Some(&vec![5.0; 8]));
+        assert!(s.get(h, 0).is_some(), "source copy remains (shared)");
+    }
+
+    #[test]
+    fn invalidate_removes_copy() {
+        let mut s = HostStore::new(2);
+        let h = DataHandle(1);
+        s.put(h, 0, vec![1.0]);
+        s.transfer(h, 0, 1);
+        s.invalidate(h, 0);
+        assert_eq!(s.get(h, 0), None);
+        assert!(s.get(h, 1).is_some());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-resident")]
+    fn transfer_missing_panics() {
+        let mut s = HostStore::new(2);
+        s.transfer(DataHandle(9), 0, 1);
+    }
+
+    #[test]
+    fn resident_bytes_accounting() {
+        let mut s = HostStore::new(2);
+        s.put(DataHandle(0), 0, vec![0.0; 16]);
+        s.put(DataHandle(1), 0, vec![0.0; 4]);
+        assert_eq!(s.resident_bytes(0), 80);
+        assert_eq!(s.resident_bytes(1), 0);
+    }
+}

@@ -1,0 +1,33 @@
+//! hetsched — a graph-partition-based scheduling framework for
+//! heterogeneous data-flow workloads.
+//!
+//! Reproduction of "A Graph-Partition-Based Scheduling Policy for
+//! Heterogeneous Architectures" (Wu, Lohmann, Schröder-Preikschat, 2015).
+//!
+//! Layer map (DESIGN.md §3):
+//! * [`dag`] — task graphs, DOT/METIS formats, generators, workloads;
+//! * [`partition`] — the multilevel partitioner (METIS substitute);
+//! * [`perfmodel`] — calibrated/measured timing models;
+//! * [`platform`] — device + bus descriptions (Table I as data);
+//! * [`data`] — MSI data coherence over discrete memory nodes;
+//! * [`sched`] — eager / dmda / graph-partition (and extra) policies;
+//! * [`sim`] — discrete-event engine for fast, deterministic sweeps;
+//! * [`runtime`] — PJRT loading/execution of AOT'd HLO artifacts;
+//! * [`coordinator`] — threaded real-compute execution engine;
+//! * [`metrics`], [`report`], [`benchkit`] — observability and harness.
+
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod dag;
+pub mod data;
+pub mod metrics;
+pub mod partition;
+pub mod perfmodel;
+pub mod platform;
+pub mod report;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod util;

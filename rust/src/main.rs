@@ -1,0 +1,321 @@
+//! hetsched CLI — the L3 leader entrypoint.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use hetsched::benchkit;
+use hetsched::cli::{Args, USAGE};
+use hetsched::config::RunConfig;
+use hetsched::coordinator::{measure_kernels, ExecEngine, ExecOptions};
+use hetsched::dag::{dot, KernelKind};
+use hetsched::metrics;
+use hetsched::perfmodel::{CalibratedModel, PerfModel};
+use hetsched::platform::Platform;
+use hetsched::report::{fmt_ms, fmt_ratio, Table};
+use hetsched::runtime::{KernelRuntime, RuntimeService};
+use hetsched::sched;
+use hetsched::sched::Scheduler as _;
+use hetsched::sim::{simulate, SimConfig};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "run" => cmd_run(&args),
+        "partition" => cmd_partition(&args),
+        "figures" => cmd_figures(&args),
+        "measure" => cmd_measure(&args),
+        "stats" => cmd_stats(&args),
+        "gen" => cmd_gen(&args),
+        "info" => cmd_info(&args),
+        "" | "help" | "--help" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n\n{USAGE}"),
+    }
+}
+
+fn artifacts_dir() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn build_config(args: &Args) -> Result<RunConfig> {
+    let mut cfg = match args.flag("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading config {path}"))?;
+            RunConfig::parse(&text)?
+        }
+        None => RunConfig::default(),
+    };
+    if let Some(s) = args.flag("scheduler") {
+        cfg.scheduler = s.to_string();
+    }
+    if let Some(k) = args.flag("kernel") {
+        cfg.kernel = KernelKind::parse(k).with_context(|| format!("bad kernel {k:?}"))?;
+    }
+    cfg.size = args.flag_u32("size", cfg.size)?;
+    cfg.iterations = args.flag_usize("iterations", cfg.iterations)?;
+    if args.has("tri") {
+        cfg.tri_platform = true;
+    }
+    if let Some(w) = args.flag("workload") {
+        let kernels = args.flag_usize("kernels", 38)?;
+        use hetsched::config::WorkloadKind::*;
+        cfg.workload = match w {
+            "paper" => Paper,
+            "scaled" => Scaled { kernels, seed: 2015 },
+            "montage" => Montage { width: args.flag_usize("width", 8)? },
+            "cholesky" => Cholesky { tiles: args.flag_usize("tiles", 5)? },
+            "stencil" => Stencil {
+                rows: args.flag_usize("rows", 6)?,
+                cols: args.flag_usize("cols", 6)?,
+            },
+            "forkjoin" => ForkJoin { width: args.flag_usize("width", 16)? },
+            "chain" => Chain { len: args.flag_usize("len", 16)? },
+            other => bail!("unknown workload {other:?}"),
+        };
+    }
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let dag = cfg.build_dag();
+    let platform = cfg.build_platform();
+    let model = if cfg.tri_platform {
+        CalibratedModel::tri_device()
+    } else {
+        CalibratedModel::paper()
+    };
+    println!("{}", platform.table1());
+    println!(
+        "workload: {:?} kernel={} size={} nodes={} edges={}",
+        cfg.workload,
+        cfg.kernel,
+        cfg.size,
+        dag.kernel_count(),
+        dag.edge_count()
+    );
+
+    let mut scheduler = sched::by_name(&cfg.scheduler)
+        .with_context(|| format!("unknown scheduler {:?}", cfg.scheduler))?;
+
+    let report = if args.has("real") {
+        let rt = RuntimeService::spawn(artifacts_dir())?;
+        if !rt.has(cfg.kernel, cfg.size) {
+            bail!(
+                "no artifact for {} at size {} (available: {:?}); run `make artifacts`",
+                cfg.kernel,
+                cfg.size,
+                rt.manifest().sizes(cfg.kernel)
+            );
+        }
+        let engine = ExecEngine::new(rt, platform.clone());
+        let opts = ExecOptions { verify: !args.has("no-verify"), ..Default::default() };
+        let r = engine.run(&dag, scheduler.as_mut(), &model, &opts)?;
+        println!("mode: REAL (PJRT CPU, verified={})", opts.verify);
+        r
+    } else {
+        let sim_cfg = SimConfig {
+            return_results_to_host: cfg.return_to_host,
+            collect_trace: args.flag("trace").is_some(),
+            bus_channels: args.flag_usize("bus-channels", 1)?,
+            prefetch: args.has("prefetch"),
+        };
+        let mut last = None;
+        for _ in 0..cfg.iterations.max(1) {
+            last = Some(simulate(&dag, scheduler.as_mut(), &platform, &model, &sim_cfg));
+        }
+        println!("mode: SIM (calibrated model, {} iterations)", cfg.iterations.max(1));
+        last.unwrap()
+    };
+
+    println!("{}", metrics::summary_line(&report));
+    for (s, d, c, b) in report.ledger.pairs() {
+        println!("  transfers {s}->{d}: {c} ({b} bytes)");
+    }
+    if let Some(path) = args.flag("trace") {
+        std::fs::write(path, metrics::chrome_trace(&report, &platform))
+            .with_context(|| format!("writing trace {path}"))?;
+        println!("trace written to {path}");
+    }
+    if let Some(path) = args.flag("dump-dot") {
+        let text = dot::write(&dag, "workload", Some(&report.assignments));
+        std::fs::write(path, text).with_context(|| format!("writing dot {path}"))?;
+        println!("partitioned DOT written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_partition(args: &Args) -> Result<()> {
+    let path = args
+        .flag("dot")
+        .map(String::from)
+        .or_else(|| args.positional.first().cloned())
+        .context("need --dot FILE")?;
+    let src = std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
+    let default_size = args.flag_u32("size", 512)?;
+    let parsed = dot::parse(&src, default_size)?;
+    let mut dag = parsed.dag;
+    if let Some(k) = args.flag("kernel") {
+        let kind = KernelKind::parse(k).with_context(|| format!("bad kernel {k:?}"))?;
+        for id in 0..dag.node_count() {
+            dag.node_mut(id).kernel = kind;
+        }
+    }
+    let k = args.flag_usize("k", 2)?;
+    let platform = if k >= 3 { Platform::tri_device() } else { Platform::paper() };
+    let model = if k >= 3 { CalibratedModel::tri_device() } else { CalibratedModel::paper() };
+
+    let mut gp = sched::GraphPartition::new(sched::GpConfig::default());
+    gp.plan(&dag, &platform, &model);
+    let result = gp.last_result().unwrap();
+    println!(
+        "partitioned {} nodes / {} edges: edge-cut={} part-weights={:?} targets={:?}",
+        dag.node_count(),
+        dag.edge_count(),
+        result.edge_cut,
+        result.part_weights,
+        gp.ratios()
+    );
+    let out_text = dot::write(&dag, "partitioned", Some(gp.parts()));
+    match args.flag("out") {
+        Some(out) => {
+            std::fs::write(out, out_text).with_context(|| format!("writing {out}"))?;
+            println!("written to {out}");
+        }
+        None => print!("{out_text}"),
+    }
+    Ok(())
+}
+
+fn cmd_figures(_args: &Args) -> Result<()> {
+    let platform = Platform::paper();
+    let model = CalibratedModel::paper();
+    benchkit::preamble("paper figures (sim, quick pass)", &platform);
+
+    // Fig 3.
+    let mut t3 = Table::new("Fig 3: CPU/GPU kernel-time ratio", &["size", "ma", "mm"]);
+    for &n in &benchkit::PAPER_SIZES {
+        let r = |k: KernelKind| model.kernel_time_ms(k, n, 0) / model.kernel_time_ms(k, n, 1);
+        t3.row(vec![n.to_string(), fmt_ratio(r(KernelKind::Ma)), fmt_ratio(r(KernelKind::Mm))]);
+    }
+    println!("{}", t3.render());
+
+    // Fig 4.
+    let mut t4 = Table::new("Fig 4: GPU-exec/transfer ratio", &["size", "ma", "mm"]);
+    for &n in &benchkit::PAPER_SIZES {
+        let bytes = 4 * n as u64 * n as u64;
+        let xfer = 3.0 * model.transfer_time_ms(bytes);
+        let r = |k: KernelKind| model.kernel_time_ms(k, n, 1) / xfer;
+        t4.row(vec![n.to_string(), fmt_ratio(r(KernelKind::Ma)), fmt_ratio(r(KernelKind::Mm))]);
+    }
+    println!("{}", t4.render());
+
+    // Figs 5 & 6.
+    for (kernel, fig) in [(KernelKind::Ma, "Fig 5"), (KernelKind::Mm, "Fig 6")] {
+        let mut t = Table::new(
+            format!("{fig}: task makespan (ms), {kernel} kernels"),
+            &["size", "eager", "dmda", "gp"],
+        );
+        for &n in &benchkit::PAPER_SIZES {
+            let dag =
+                hetsched::dag::generate_layered(&hetsched::dag::GeneratorConfig::paper(kernel, n));
+            let mut cells = vec![n.to_string()];
+            for mut s in sched::paper_set() {
+                let r = simulate(&dag, s.as_mut(), &platform, &model, &SimConfig::default());
+                cells.push(fmt_ms(r.makespan_ms));
+            }
+            t.row(cells);
+        }
+        println!("{}", t.render());
+    }
+    Ok(())
+}
+
+fn cmd_measure(args: &Args) -> Result<()> {
+    let reps = args.flag_usize("reps", 5)?;
+    let rt = KernelRuntime::open(artifacts_dir())?;
+    println!("PJRT platform: {}", rt.platform_name());
+    let measured = measure_kernels(&rt, 1, reps)?;
+    let mut t = Table::new(
+        format!("measured kernel times ({reps} reps, PJRT CPU)"),
+        &["op", "size", "ms"],
+    );
+    for a in &rt.manifest().entries {
+        t.row(vec![
+            a.op.to_string(),
+            a.n.to_string(),
+            fmt_ms(measured.kernel_time_ms(a.op, a.n, 0)),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_stats(args: &Args) -> Result<()> {
+    // Structural statistics of a DOT graph or a built-in workload.
+    let dag = match args.flag("dot") {
+        Some(path) => {
+            let src = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+            dot::parse(&src, args.flag_u32("size", 512)?)?.dag
+        }
+        None => build_config(args)?.build_dag(),
+    };
+    println!("{}", hetsched::dag::stats::stats(&dag));
+    Ok(())
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    // Emit a random layered DAG as DOT (the paper's DAG generator as a tool).
+    let kernels = args.flag_usize("kernels", 38)?;
+    let edges = args.flag_usize("edges", kernels * 2 - 1)?;
+    let kernel = KernelKind::parse(&args.flag_or("kernel", "mm")).context("bad kernel")?;
+    let cfg = hetsched::dag::GeneratorConfig {
+        kernels,
+        edges,
+        layers: args.flag_usize("layers", (kernels as f64).sqrt().ceil() as usize)?,
+        kernel,
+        size: args.flag_u32("size", 1024)?,
+        seed: args.flag_usize("seed", 2015)? as u64,
+        with_virtual_source: args.has("virtual-source"),
+    };
+    let dag = hetsched::dag::generate_layered(&cfg);
+    let text = dot::write(&dag, "generated", None);
+    match args.flag("out") {
+        Some(out) => {
+            std::fs::write(out, text).with_context(|| format!("writing {out}"))?;
+            println!("wrote {out} ({} nodes, {} edges)", dag.node_count(), dag.edge_count());
+        }
+        None => print!("{text}"),
+    }
+    Ok(())
+}
+
+fn cmd_info(_args: &Args) -> Result<()> {
+    println!("{}", Platform::paper().table1());
+    let dir = artifacts_dir();
+    match KernelRuntime::open(&dir) {
+        Ok(rt) => {
+            println!("artifacts ({}):", dir.display());
+            for a in &rt.manifest().entries {
+                println!(
+                    "  {:<12} n={:<5} arity={} flops={:<12} vmem/step={} B",
+                    a.name, a.n, a.arity, a.flops, a.vmem_bytes_per_step
+                );
+            }
+        }
+        Err(e) => println!("artifacts not available: {e} (run `make artifacts`)"),
+    }
+    Ok(())
+}

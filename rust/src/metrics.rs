@@ -1,0 +1,116 @@
+//! Observability: run counters and chrome://tracing export.
+//!
+//! The paper reads scheduler behaviour off "the runtime trace" (§IV.C);
+//! [`chrome_trace`] renders a [`RunReport`]'s timeline in the Trace Event
+//! Format so the same inspection works here (load it in a Chromium
+//! `about:tracing` tab or Perfetto).
+
+use std::fmt::Write as _;
+
+use crate::platform::Platform;
+use crate::sim::RunReport;
+use crate::util::json;
+
+/// Render a run's trace in Chrome Trace Event Format (JSON array of
+/// complete events; timestamps in microseconds).
+pub fn chrome_trace(report: &RunReport, platform: &Platform) -> String {
+    let mut s = String::from("[\n");
+    let mut first = true;
+    for ev in &report.trace {
+        if !first {
+            s.push_str(",\n");
+        }
+        first = false;
+        let dev = &platform.devices[ev.device];
+        let _ = write!(
+            s,
+            r#"  {{"name": "task{}", "cat": "kernel", "ph": "X", "ts": {:.3}, "dur": {:.3}, "pid": {}, "tid": {}, "args": {{"device": "{}"}}}}"#,
+            ev.task,
+            ev.start_ms * 1000.0,
+            (ev.end_ms - ev.start_ms) * 1000.0,
+            ev.device,
+            ev.worker,
+            json::escape(&dev.name),
+        );
+    }
+    s.push_str("\n]\n");
+    s
+}
+
+/// One-line human summary of a run.
+pub fn summary_line(report: &RunReport) -> String {
+    format!(
+        "{:<10} makespan={:>10.3} ms  transfers={:>4} ({:>10} B, {:>8.3} ms)  tasks/dev={:?}  decision={:.1} ns/task",
+        report.scheduler,
+        report.makespan_ms,
+        report.ledger.count,
+        report.ledger.bytes,
+        report.ledger.time_ms,
+        report.tasks_per_device,
+        report.decision_ns_per_task(),
+    )
+}
+
+/// CSV header matching [`csv_row`].
+pub const CSV_HEADER: &str =
+    "scheduler,size,makespan_ms,transfers,transfer_bytes,transfer_ms,tasks_cpu,tasks_gpu,decision_ns_per_task,plan_ns";
+
+/// One CSV row for a run at a given kernel size.
+pub fn csv_row(report: &RunReport, size: u32) -> String {
+    format!(
+        "{},{},{:.6},{},{},{:.6},{},{},{:.1},{}",
+        report.scheduler,
+        size,
+        report.makespan_ms,
+        report.ledger.count,
+        report.ledger.bytes,
+        report.ledger.time_ms,
+        report.tasks_per_device.first().copied().unwrap_or(0),
+        report.tasks_per_device.get(1).copied().unwrap_or(0),
+        report.decision_ns_per_task(),
+        report.plan_ns,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::generator::{generate_layered, GeneratorConfig};
+    use crate::dag::KernelKind;
+    use crate::perfmodel::CalibratedModel;
+    use crate::sched;
+    use crate::sim::{simulate, SimConfig};
+
+    fn sample_report() -> (RunReport, Platform) {
+        let dag = generate_layered(&GeneratorConfig::paper(KernelKind::Ma, 256));
+        let platform = Platform::paper();
+        let model = CalibratedModel::default();
+        let mut s = sched::by_name("dmda").unwrap();
+        let cfg = SimConfig { return_results_to_host: true, collect_trace: true, ..Default::default() };
+        let r = simulate(&dag, s.as_mut(), &platform, &model, &cfg);
+        (r, platform)
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json() {
+        let (r, p) = sample_report();
+        let trace = chrome_trace(&r, &p);
+        let parsed = json::parse(&trace).expect("trace must parse as JSON");
+        let events = parsed.as_arr().unwrap();
+        assert_eq!(events.len(), 38);
+        for e in events {
+            assert_eq!(e.get("ph").unwrap().as_str(), Some("X"));
+            assert!(e.get("ts").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(e.get("dur").unwrap().as_f64().unwrap() > 0.0);
+        }
+    }
+
+    #[test]
+    fn summary_and_csv_contain_scheduler() {
+        let (r, _) = sample_report();
+        assert!(summary_line(&r).contains("dmda"));
+        let row = csv_row(&r, 256);
+        assert!(row.starts_with("dmda,256,"));
+        assert_eq!(row.split(',').count(), CSV_HEADER.split(',').count());
+    }
+}

@@ -1,0 +1,236 @@
+//! Coarsening phase: heavy-edge matching (HEM).
+//!
+//! Vertices are visited in random order; each unmatched vertex is matched
+//! with its unmatched neighbor of maximum edge weight (ties broken by
+//! first-seen). Matched pairs collapse into one coarse vertex whose weight
+//! is the pair's sum; parallel coarse edges merge by summing weights, and
+//! intra-pair edges vanish (they can never be cut again at coarser
+//! levels — exactly why HEM preserves small cuts).
+
+use crate::dag::metis_io::MetisGraph;
+use crate::util::Pcg32;
+
+/// One level of the coarsening hierarchy. Does NOT own the fine graph
+/// (§Perf iteration 1: cloning the fine graph per level dominated
+/// partitioner time on large inputs); callers keep the hierarchy stack.
+#[derive(Debug, Clone)]
+pub struct CoarseLevel {
+    /// fine vertex -> coarse vertex.
+    pub map: Vec<usize>,
+    pub coarse: MetisGraph,
+    /// Side pin per coarse vertex (-1 free; inherited from members).
+    pub coarse_fixed: Vec<i8>,
+}
+
+impl CoarseLevel {
+    /// Project a coarse partition back onto the fine graph.
+    pub fn project(&self, coarse_side: &[usize]) -> Vec<usize> {
+        self.map.iter().map(|&c| coarse_side[c]).collect()
+    }
+}
+
+/// Perform one round of heavy-edge matching on `fine`.
+///
+/// `fixed[v]` (-1 free, 0/1 pinned side): vertices pinned to different
+/// sides are never matched together; a pair with one pinned member pins
+/// the coarse vertex.
+pub fn coarsen_once(fine: &MetisGraph, fixed: &[i8], rng: &mut Pcg32) -> CoarseLevel {
+    let n = fine.vertex_count();
+    let mut matched = vec![usize::MAX; n];
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+
+    for &v in &order {
+        if matched[v] != usize::MAX {
+            continue;
+        }
+        let mut best: Option<(usize, i64)> = None;
+        for &(u, w) in &fine.adj[v] {
+            let compatible = fixed[v] < 0 || fixed[u] < 0 || fixed[v] == fixed[u];
+            if u != v && matched[u] == usize::MAX && compatible {
+                match best {
+                    Some((_, bw)) if bw >= w => {}
+                    _ => best = Some((u, w)),
+                }
+            }
+        }
+        match best {
+            Some((u, _)) => {
+                matched[v] = u;
+                matched[u] = v;
+            }
+            None => matched[v] = v, // stays single
+        }
+    }
+
+    // Assign coarse ids (pair -> one id, singleton -> one id).
+    let mut map = vec![usize::MAX; n];
+    let mut next = 0usize;
+    for v in 0..n {
+        if map[v] != usize::MAX {
+            continue;
+        }
+        map[v] = next;
+        let m = matched[v];
+        if m != v && m != usize::MAX {
+            map[m] = next;
+        }
+        next += 1;
+    }
+
+    // Build the coarse graph.
+    let mut vwgt = vec![0i64; next];
+    for v in 0..n {
+        vwgt[map[v]] += fine.vwgt[v];
+    }
+    // Merge edges: accumulate per coarse source with a scatter buffer.
+    // Fine vertices are grouped by coarse id via counting sort (one flat
+    // buffer — §Perf: per-coarse-vertex Vec allocations dominated
+    // coarsening time on large graphs).
+    let mut counts = vec![0usize; next + 1];
+    for v in 0..n {
+        counts[map[v] + 1] += 1;
+    }
+    for c in 0..next {
+        counts[c + 1] += counts[c];
+    }
+    let mut ordered = vec![0usize; n];
+    {
+        let mut cursor = counts.clone();
+        for v in 0..n {
+            ordered[cursor[map[v]]] = v;
+            cursor[map[v]] += 1;
+        }
+    }
+    let mut adj: Vec<Vec<(usize, i64)>> = vec![Vec::new(); next];
+    let mut acc = vec![0i64; next];
+    let mut touched: Vec<usize> = Vec::new();
+    for c in 0..next {
+        for &v in &ordered[counts[c]..counts[c + 1]] {
+            for &(u, w) in &fine.adj[v] {
+                let cu = map[u];
+                if cu == c {
+                    continue; // interior edge disappears
+                }
+                if acc[cu] == 0 {
+                    touched.push(cu);
+                }
+                acc[cu] += w;
+            }
+        }
+        touched.sort_unstable();
+        let mut edges = Vec::with_capacity(touched.len());
+        for &cu in &touched {
+            edges.push((cu, acc[cu]));
+            acc[cu] = 0;
+        }
+        adj[c] = edges;
+        touched.clear();
+    }
+
+    // Coarse pins: any pinned member pins the coarse vertex (matching
+    // never pairs conflicting pins).
+    let mut coarse_fixed = vec![-1i8; next];
+    for v in 0..n {
+        if fixed[v] >= 0 {
+            debug_assert!(
+                coarse_fixed[map[v]] < 0 || coarse_fixed[map[v]] == fixed[v],
+                "conflicting pins merged"
+            );
+            coarse_fixed[map[v]] = fixed[v];
+        }
+    }
+
+    CoarseLevel { map, coarse: MetisGraph { vwgt, adj }, coarse_fixed }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path(n: usize, w: i64) -> MetisGraph {
+        let mut adj = vec![Vec::new(); n];
+        for i in 0..n - 1 {
+            adj[i].push((i + 1, w));
+            adj[i + 1].push((i, w));
+        }
+        MetisGraph { vwgt: vec![1; n], adj }
+    }
+
+    #[test]
+    fn coarsening_shrinks_path() {
+        let g = path(16, 1);
+        let mut rng = Pcg32::seeded(1);
+        let lvl = coarsen_once(&g, &vec![-1i8; g.vertex_count()], &mut rng);
+        assert!(lvl.coarse.vertex_count() <= 12, "HEM should shrink a path substantially");
+        assert!(lvl.coarse.vertex_count() >= 8, "pairs only: at least n/2");
+    }
+
+    #[test]
+    fn vertex_weight_conserved() {
+        let g = path(13, 2);
+        let mut rng = Pcg32::seeded(2);
+        let lvl = coarsen_once(&g, &vec![-1i8; g.vertex_count()], &mut rng);
+        assert_eq!(lvl.coarse.vwgt.iter().sum::<i64>(), 13);
+    }
+
+    #[test]
+    fn coarse_adjacency_symmetric() {
+        let g = path(20, 3);
+        let mut rng = Pcg32::seeded(3);
+        let lvl = coarsen_once(&g, &vec![-1i8; g.vertex_count()], &mut rng);
+        let c = &lvl.coarse;
+        for v in 0..c.vertex_count() {
+            for &(u, w) in &c.adj[v] {
+                assert!(
+                    c.adj[u].iter().any(|&(x, xw)| x == v && xw == w),
+                    "asymmetric coarse edge {v}->{u}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn heavy_edges_matched_first() {
+        // Star-free graph: 0-1 heavy, 1-2 light, 2-3 heavy.
+        let mut adj = vec![Vec::new(); 4];
+        let mut add = |a: usize, b: usize, w: i64, adj: &mut Vec<Vec<(usize, i64)>>| {
+            adj[a].push((b, w));
+            adj[b].push((a, w));
+        };
+        add(0, 1, 100, &mut adj);
+        add(1, 2, 1, &mut adj);
+        add(2, 3, 100, &mut adj);
+        let g = MetisGraph { vwgt: vec![1; 4], adj };
+        let mut rng = Pcg32::seeded(4);
+        let lvl = coarsen_once(&g, &vec![-1i8; g.vertex_count()], &mut rng);
+        // (0,1) and (2,3) collapse; only the light edge remains.
+        assert_eq!(lvl.coarse.vertex_count(), 2);
+        assert_eq!(lvl.coarse.edge_count(), 1);
+        assert_eq!(lvl.coarse.adj[0][0].1, 1);
+    }
+
+    #[test]
+    fn project_roundtrip() {
+        let g = path(10, 1);
+        let mut rng = Pcg32::seeded(5);
+        let lvl = coarsen_once(&g, &vec![-1i8; g.vertex_count()], &mut rng);
+        let coarse_side: Vec<usize> = (0..lvl.coarse.vertex_count()).map(|i| i % 2).collect();
+        let fine_side = lvl.project(&coarse_side);
+        assert_eq!(fine_side.len(), 10);
+        for v in 0..10 {
+            assert_eq!(fine_side[v], coarse_side[lvl.map[v]]);
+        }
+    }
+
+    #[test]
+    fn isolated_vertices_survive() {
+        let g = MetisGraph { vwgt: vec![5, 7, 9], adj: vec![vec![], vec![], vec![]] };
+        let mut rng = Pcg32::seeded(6);
+        let lvl = coarsen_once(&g, &vec![-1i8; g.vertex_count()], &mut rng);
+        assert_eq!(lvl.coarse.vertex_count(), 3);
+        let mut w = lvl.coarse.vwgt.clone();
+        w.sort();
+        assert_eq!(w, vec![5, 7, 9]);
+    }
+}

@@ -1,0 +1,472 @@
+//! Multilevel graph partitioner — the in-tree replacement for METIS.
+//!
+//! Same algorithm family as `gpmetis` (Karypis & Kumar's multilevel
+//! scheme):
+//!
+//! 1. **Coarsening** ([`coarsen`]): heavy-edge matching collapses vertex
+//!    pairs until the graph is small, preserving total vertex weight and
+//!    merging parallel edges.
+//! 2. **Initial partitioning** ([`initial`]): greedy graph growing from
+//!    multiple random seeds on the coarsest graph, keeping the best cut
+//!    that meets the balance constraint.
+//! 3. **Uncoarsening + refinement** ([`refine`]): the partition is
+//!    projected back level by level, running boundary Fiduccia–Mattheyses
+//!    passes at each level.
+//!
+//! K-way partitions are produced by recursive bisection with *target
+//! partition weights* — the feature the paper leans on: the CPU/GPU
+//! workload ratio of Formula (1) becomes the target weight vector, so the
+//! partitioner balances load in proportion to device speed while
+//! minimizing edge cut (PCIe transfer time).
+
+pub mod coarsen;
+pub mod initial;
+pub mod quality;
+pub mod refine;
+
+use crate::dag::metis_io::MetisGraph;
+use crate::util::Pcg32;
+
+/// Partitioning parameters.
+#[derive(Debug, Clone)]
+pub struct PartitionConfig {
+    /// Number of parts (2 for the CPU–GPU platform, 3+ for the paper's
+    /// future-work CPU+GPU+FPGA extension).
+    pub k: usize,
+    /// Target weight fraction per part; must sum to ~1. `None` = uniform.
+    pub targets: Option<Vec<f64>>,
+    /// Allowed load imbalance (METIS `ubvec`-style): each part may hold up
+    /// to `target * (1 + epsilon)` weight.
+    pub epsilon: f64,
+    /// PRNG seed for matching tiebreaks and initial-partition seeds.
+    pub seed: u64,
+    /// Stop coarsening when at most this many vertices remain.
+    pub coarsen_until: usize,
+    /// Number of greedy-graph-growing attempts on the coarsest graph.
+    pub initial_tries: usize,
+    /// Maximum FM passes per uncoarsening level.
+    pub refine_passes: usize,
+    /// Optional pre-assignment per vertex (`-1` = free, else a part id the
+    /// vertex is pinned to). Used by the gp scheduler to anchor the
+    /// paper's zero-weight "empty kernel" — and hence all initial data —
+    /// on the host partition.
+    pub fixed: Option<Vec<i32>>,
+}
+
+impl Default for PartitionConfig {
+    fn default() -> Self {
+        PartitionConfig {
+            k: 2,
+            targets: None,
+            epsilon: 0.05,
+            seed: 1,
+            coarsen_until: 64,
+            initial_tries: 8,
+            refine_passes: 4,
+            fixed: None,
+        }
+    }
+}
+
+impl PartitionConfig {
+    /// Bipartition with explicit `(target_0, target_1)` fractions — the
+    /// paper's `(R_cpu, R_gpu)` from Formula (1)/(2).
+    pub fn bipartition(r0: f64, r1: f64) -> PartitionConfig {
+        PartitionConfig {
+            k: 2,
+            targets: Some(vec![r0, r1]),
+            ..Default::default()
+        }
+    }
+}
+
+/// Result of a partitioning run.
+#[derive(Debug, Clone)]
+pub struct PartitionResult {
+    /// Part id per vertex.
+    pub parts: Vec<usize>,
+    /// Total weight of cut edges.
+    pub edge_cut: i64,
+    /// Sum of vertex weights per part.
+    pub part_weights: Vec<i64>,
+}
+
+impl PartitionResult {
+    /// Achieved weight fraction per part.
+    pub fn fractions(&self) -> Vec<f64> {
+        let total: i64 = self.part_weights.iter().sum();
+        if total == 0 {
+            return vec![0.0; self.part_weights.len()];
+        }
+        self.part_weights.iter().map(|&w| w as f64 / total as f64).collect()
+    }
+}
+
+/// Partition `g` per `cfg`. Panics on `k == 0`; `k == 1` returns the
+/// trivial partition.
+pub fn partition(g: &MetisGraph, cfg: &PartitionConfig) -> PartitionResult {
+    assert!(cfg.k >= 1, "k must be >= 1");
+    let n = g.vertex_count();
+    if cfg.k == 1 || n == 0 {
+        let parts = vec![0usize; n];
+        return finish(g, parts, 1.max(cfg.k));
+    }
+    let targets = match &cfg.targets {
+        Some(t) => {
+            assert_eq!(t.len(), cfg.k, "targets length must equal k");
+            let sum: f64 = t.iter().sum();
+            assert!(sum > 0.0, "targets must sum > 0");
+            t.iter().map(|x| x / sum).collect::<Vec<f64>>()
+        }
+        None => vec![1.0 / cfg.k as f64; cfg.k],
+    };
+
+    let fixed: Vec<i32> = match &cfg.fixed {
+        Some(f) => {
+            assert_eq!(f.len(), n, "fixed length must equal vertex count");
+            assert!(f.iter().all(|&p| p < cfg.k as i32), "fixed part out of range");
+            f.clone()
+        }
+        None => vec![-1; n],
+    };
+
+    let mut rng = Pcg32::seeded(cfg.seed);
+    let mut parts = vec![0usize; n];
+    let t0 = std::time::Instant::now();
+    let all: Vec<usize> = (0..n).collect();
+    recursive_bisect(g, &all, &targets, 0, &fixed, cfg, &mut rng, &mut parts);
+    if std::env::var("HETSCHED_PROF").is_ok() { eprintln!("recursive_bisect: {:?}", t0.elapsed()); }
+    let t1 = std::time::Instant::now();
+    let r = finish(g, parts, cfg.k);
+    if std::env::var("HETSCHED_PROF").is_ok() { eprintln!("finish: {:?}", t1.elapsed()); }
+    r
+}
+
+fn finish(g: &MetisGraph, parts: Vec<usize>, k: usize) -> PartitionResult {
+    let edge_cut = quality::edge_cut(g, &parts);
+    let part_weights = quality::part_weights(g, &parts, k);
+    PartitionResult { parts, edge_cut, part_weights }
+}
+
+/// Recursively bisect the vertex subset `vs` over `targets[part_base..]`.
+#[allow(clippy::too_many_arguments)]
+fn recursive_bisect(
+    g: &MetisGraph,
+    vs: &[usize],
+    targets: &[f64],
+    part_base: usize,
+    fixed: &[i32],
+    cfg: &PartitionConfig,
+    rng: &mut Pcg32,
+    parts: &mut [usize],
+) {
+    let k = targets.len();
+    if k == 1 {
+        for &v in vs {
+            parts[v] = part_base;
+        }
+        return;
+    }
+    // Split the target vector in two halves; bisect with the summed
+    // fractions, then recurse into each side's induced subgraph.
+    let k_left = k / 2;
+    let t_left: f64 = targets[..k_left].iter().sum();
+    let t_right: f64 = targets[k_left..].iter().sum();
+    let frac_left = t_left / (t_left + t_right);
+
+    // Side-level pins: a vertex fixed to part p belongs to side 0 iff p
+    // falls in the left half of this recursion's part range.
+    let side_pin = |v: usize| -> i8 {
+        if fixed[v] < 0 {
+            -1
+        } else if (fixed[v] as usize) < part_base + k_left {
+            0
+        } else {
+            1
+        }
+    };
+    // Top level: the subset is the whole graph — skip the induced copy
+    // (§Perf: the full-graph `induce` cost ~25% of a k=2 partition).
+    let side = if vs.len() == g.vertex_count() {
+        let sub_fixed: Vec<i8> = (0..g.vertex_count()).map(side_pin).collect();
+        bisect(g, frac_left, &sub_fixed, cfg, rng)
+    } else {
+        let (sub, sub_to_full) = induce(g, vs);
+        let sub_fixed: Vec<i8> = sub_to_full.iter().map(|&v| side_pin(v)).collect();
+        bisect(&sub, frac_left, &sub_fixed, cfg, rng)
+    };
+
+    let mut left = Vec::new();
+    let mut right = Vec::new();
+    for (i, &s) in side.iter().enumerate() {
+        if s == 0 {
+            left.push(vs[i]);
+        } else {
+            right.push(vs[i]);
+        }
+    }
+    // Renormalize child target vectors.
+    let lt: Vec<f64> = targets[..k_left].iter().map(|x| x / t_left.max(1e-12)).collect();
+    let rt: Vec<f64> = targets[k_left..].iter().map(|x| x / t_right.max(1e-12)).collect();
+    recursive_bisect(g, &left, &lt, part_base, fixed, cfg, rng, parts);
+    recursive_bisect(g, &right, &rt, part_base + k_left, fixed, cfg, rng, parts);
+}
+
+/// Induced subgraph over `vs`; returns (subgraph, sub-index -> full-index).
+fn induce(g: &MetisGraph, vs: &[usize]) -> (MetisGraph, Vec<usize>) {
+    let mut full_to_sub = vec![usize::MAX; g.vertex_count()];
+    for (i, &v) in vs.iter().enumerate() {
+        full_to_sub[v] = i;
+    }
+    let vwgt = vs.iter().map(|&v| g.vwgt[v]).collect();
+    let adj = vs
+        .iter()
+        .map(|&v| {
+            g.adj[v]
+                .iter()
+                .filter_map(|&(u, w)| {
+                    let su = full_to_sub[u];
+                    (su != usize::MAX).then_some((su, w))
+                })
+                .collect()
+        })
+        .collect();
+    (MetisGraph { vwgt, adj }, vs.to_vec())
+}
+
+/// Multilevel bisection of `g` with part-0 target fraction `frac0`.
+/// `fixed[v]` pins vertex `v` to side 0/1 (-1 = free).
+/// Returns a 0/1 side per vertex.
+pub fn bisect(
+    g: &MetisGraph,
+    frac0: f64,
+    fixed: &[i8],
+    cfg: &PartitionConfig,
+    rng: &mut Pcg32,
+) -> Vec<usize> {
+    let n = g.vertex_count();
+    if n == 0 {
+        return Vec::new();
+    }
+    let total: i64 = g.vwgt.iter().sum();
+    // Degenerate target: everything (except pins) lands on one side.
+    // Mirrors the paper's MM observation — Formula (1) drives R_cpu toward
+    // 0 and the whole graph onto the GPU.
+    let target0 = frac0 * total as f64;
+    let min_w = g.vwgt.iter().copied().filter(|&w| w > 0).min().unwrap_or(1);
+    if target0 < min_w as f64 / 2.0 {
+        return (0..n).map(|v| if fixed[v] == 0 { 0 } else { 1 }).collect();
+    }
+    if (total as f64 - target0) < min_w as f64 / 2.0 {
+        return (0..n).map(|v| if fixed[v] == 1 { 1 } else { 0 }).collect();
+    }
+
+    // --- coarsening phase ---
+    // levels[i] maps level-i fine vertices to level-(i+1) coarse ones;
+    // the level-0 fine graph is `g` itself (never cloned — §Perf 1).
+    let mut levels: Vec<coarsen::CoarseLevel> = Vec::new();
+    while levels.last().map(|l| &l.coarse).unwrap_or(g).vertex_count() > cfg.coarsen_until {
+        let (cur_g, cur_fixed): (&MetisGraph, &[i8]) = match levels.last() {
+            Some(l) => (&l.coarse, &l.coarse_fixed),
+            None => (g, fixed),
+        };
+        let lvl = coarsen::coarsen_once(cur_g, cur_fixed, rng);
+        // Matching stalled (e.g. star graphs): stop coarsening.
+        if lvl.coarse.vertex_count() as f64 > 0.95 * cur_g.vertex_count() as f64 {
+            break;
+        }
+        levels.push(lvl);
+    }
+
+    // --- initial partition on the coarsest graph ---
+    let (coarsest, coarsest_fixed): (&MetisGraph, &[i8]) = match levels.last() {
+        Some(l) => (&l.coarse, &l.coarse_fixed),
+        None => (g, fixed),
+    };
+    let mut side = initial::greedy_growing(coarsest, frac0, coarsest_fixed, cfg, rng);
+    refine::fm_refine(coarsest, &mut side, frac0, coarsest_fixed, cfg, rng);
+
+    // --- uncoarsen + refine ---
+    for i in (0..levels.len()).rev() {
+        side = levels[i].project(&side);
+        let (fine_g, fine_fixed): (&MetisGraph, &[i8]) = if i == 0 {
+            (g, fixed)
+        } else {
+            (&levels[i - 1].coarse, &levels[i - 1].coarse_fixed)
+        };
+        refine::fm_refine(fine_g, &mut side, frac0, fine_fixed, cfg, rng);
+    }
+    side
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::metis_io::MetisGraph;
+
+    /// Two dense cliques joined by a single light edge.
+    pub(crate) fn two_cliques(sz: usize, heavy: i64, light: i64) -> MetisGraph {
+        let n = 2 * sz;
+        let mut adj = vec![Vec::new(); n];
+        for c in 0..2 {
+            for i in 0..sz {
+                for j in 0..sz {
+                    if i != j {
+                        adj[c * sz + i].push((c * sz + j, heavy));
+                    }
+                }
+            }
+        }
+        adj[0].push((sz, light));
+        adj[sz].push((0, light));
+        MetisGraph { vwgt: vec![1; n], adj }
+    }
+
+    #[test]
+    fn bisect_finds_clique_cut() {
+        let g = two_cliques(8, 10, 1);
+        let cfg = PartitionConfig::default();
+        let res = partition(&g, &cfg);
+        assert_eq!(res.edge_cut, 1, "should cut only the light bridge");
+        assert_eq!(res.part_weights, vec![8, 8]);
+        // All of clique 0 on one side, clique 1 on the other.
+        assert!(res.parts[..8].iter().all(|&p| p == res.parts[0]));
+        assert!(res.parts[8..].iter().all(|&p| p == res.parts[8]));
+        assert_ne!(res.parts[0], res.parts[8]);
+    }
+
+    #[test]
+    fn degenerate_target_everything_one_side() {
+        let g = two_cliques(8, 10, 1);
+        // R_cpu ~ 0: the paper's MM case.
+        let cfg = PartitionConfig::bipartition(0.001, 0.999);
+        let res = partition(&g, &cfg);
+        assert_eq!(res.part_weights[0], 0);
+        assert_eq!(res.part_weights[1], 16);
+        assert_eq!(res.edge_cut, 0);
+    }
+
+    #[test]
+    fn k1_trivial() {
+        let g = two_cliques(4, 5, 1);
+        let res = partition(&g, &PartitionConfig { k: 1, ..Default::default() });
+        assert!(res.parts.iter().all(|&p| p == 0));
+        assert_eq!(res.edge_cut, 0);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = MetisGraph { vwgt: vec![], adj: vec![] };
+        let res = partition(&g, &PartitionConfig::default());
+        assert!(res.parts.is_empty());
+    }
+
+    #[test]
+    fn weighted_targets_respected() {
+        // 30 unit vertices in a path; ask for a 1:2 split.
+        let n = 30;
+        let mut adj = vec![Vec::new(); n];
+        for i in 0..n - 1 {
+            adj[i].push((i + 1, 1));
+            adj[i + 1].push((i, 1));
+        }
+        let g = MetisGraph { vwgt: vec![1; n], adj };
+        let cfg = PartitionConfig::bipartition(1.0 / 3.0, 2.0 / 3.0);
+        let res = partition(&g, &cfg);
+        let f = res.fractions();
+        assert!((f[0] - 1.0 / 3.0).abs() < 0.12, "got fractions {f:?}");
+        // A path split in two contiguous pieces cuts exactly one edge.
+        assert!(res.edge_cut <= 3, "cut {} too high for a path", res.edge_cut);
+    }
+
+    #[test]
+    fn kway_four_cliques() {
+        // 4 cliques of 6, ring-connected lightly; k=4 should cut only the
+        // 4 light ring edges (or fewer if imbalance allows).
+        let sz = 6;
+        let n = 4 * sz;
+        let mut adj = vec![Vec::new(); n];
+        for c in 0..4 {
+            for i in 0..sz {
+                for j in 0..sz {
+                    if i != j {
+                        adj[c * sz + i].push((c * sz + j, 20));
+                    }
+                }
+            }
+        }
+        for c in 0..4 {
+            let a = c * sz;
+            let b = ((c + 1) % 4) * sz;
+            adj[a].push((b, 1));
+            adj[b].push((a, 1));
+        }
+        let g = MetisGraph { vwgt: vec![1; n], adj };
+        let res = partition(&g, &PartitionConfig { k: 4, seed: 3, ..Default::default() });
+        assert_eq!(res.part_weights, vec![sz as i64; 4]);
+        assert!(res.edge_cut <= 4, "cut {} should be the ring only", res.edge_cut);
+        // Each clique uniform.
+        for c in 0..4 {
+            let p0 = res.parts[c * sz];
+            assert!((0..sz).all(|i| res.parts[c * sz + i] == p0));
+        }
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let g = two_cliques(10, 5, 1);
+        let cfg = PartitionConfig { seed: 42, ..Default::default() };
+        let a = partition(&g, &cfg);
+        let b = partition(&g, &cfg);
+        assert_eq!(a.parts, b.parts);
+    }
+// temporary profiling harness (appended to partition/mod.rs tests)
+#[test]
+#[ignore]
+fn profile_phases() {
+    use std::time::Instant;
+    let n = 100_000usize;
+    let cols = (n as f64).sqrt().ceil() as usize;
+    let mut adj: Vec<Vec<(usize, i64)>> = vec![Vec::new(); n];
+    for v in 0..n {
+        if v + 1 < n && (v + 1) % cols != 0 { adj[v].push((v + 1, 10)); adj[v + 1].push((v, 10)); }
+        if v + cols < n { adj[v].push((v + cols, 10)); adj[v + cols].push((v, 10)); }
+    }
+    let g = MetisGraph { vwgt: vec![1; n], adj };
+    let cfg = PartitionConfig::default();
+    let mut rng = Pcg32::seeded(1);
+    let fixed = vec![-1i8; n];
+
+    // coarsening only
+    let t0 = Instant::now();
+    let mut levels: Vec<coarsen::CoarseLevel> = Vec::new();
+    while levels.last().map(|l| &l.coarse).unwrap_or(&g).vertex_count() > cfg.coarsen_until {
+        let (cur_g, cur_fixed): (&MetisGraph, &[i8]) = match levels.last() {
+            Some(l) => (&l.coarse, &l.coarse_fixed),
+            None => (&g, &fixed),
+        };
+        let lvl = coarsen::coarsen_once(cur_g, cur_fixed, &mut rng);
+        if lvl.coarse.vertex_count() as f64 > 0.95 * cur_g.vertex_count() as f64 { break; }
+        levels.push(lvl);
+    }
+    let t_coarsen = t0.elapsed();
+    eprintln!("coarsen: {:?} ({} levels)", t_coarsen, levels.len());
+
+    let (coarsest, coarsest_fixed): (&MetisGraph, &[i8]) = (&levels.last().unwrap().coarse, &levels.last().unwrap().coarse_fixed);
+    let t0 = Instant::now();
+    let mut side = initial::greedy_growing(coarsest, 0.5, coarsest_fixed, &cfg, &mut rng);
+    refine::fm_refine(coarsest, &mut side, 0.5, coarsest_fixed, &cfg, &mut rng);
+    eprintln!("initial: {:?}", t0.elapsed());
+
+    let t0 = Instant::now();
+    for i in (0..levels.len()).rev() {
+        side = levels[i].project(&side);
+        let (fine_g, fine_fixed): (&MetisGraph, &[i8]) = if i == 0 { (&g, &fixed[..]) } else { (&levels[i-1].coarse, &levels[i-1].coarse_fixed) };
+        let tl = Instant::now();
+        refine::fm_refine(fine_g, &mut side, 0.5, fine_fixed, &cfg, &mut rng);
+        eprintln!("  refine level {i} ({} verts): {:?}", fine_g.vertex_count(), tl.elapsed());
+    }
+    eprintln!("refine total: {:?}", t0.elapsed());
+}
+
+}

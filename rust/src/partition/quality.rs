@@ -1,0 +1,121 @@
+//! Partition quality metrics: edge cut, per-part weights, imbalance.
+
+use crate::dag::metis_io::MetisGraph;
+
+/// Total weight of edges whose endpoints lie in different parts.
+pub fn edge_cut(g: &MetisGraph, parts: &[usize]) -> i64 {
+    let mut cut = 0i64;
+    for v in 0..g.vertex_count() {
+        for &(u, w) in &g.adj[v] {
+            if parts[u] != parts[v] {
+                cut += w;
+            }
+        }
+    }
+    cut / 2 // each undirected edge stored twice
+}
+
+/// Sum of vertex weights per part.
+pub fn part_weights(g: &MetisGraph, parts: &[usize], k: usize) -> Vec<i64> {
+    let mut w = vec![0i64; k];
+    for v in 0..g.vertex_count() {
+        w[parts[v]] += g.vwgt[v];
+    }
+    w
+}
+
+/// Per-part imbalance relative to target fractions:
+/// `achieved_fraction / target_fraction` (1.0 = perfect). Parts with a
+/// zero target report 1.0 when empty and +inf when non-empty.
+pub fn imbalance(g: &MetisGraph, parts: &[usize], targets: &[f64]) -> Vec<f64> {
+    let w = part_weights(g, parts, targets.len());
+    let total: i64 = w.iter().sum();
+    targets
+        .iter()
+        .zip(&w)
+        .map(|(&t, &pw)| {
+            let frac = if total == 0 { 0.0 } else { pw as f64 / total as f64 };
+            if t <= 0.0 {
+                if pw == 0 {
+                    1.0
+                } else {
+                    f64::INFINITY
+                }
+            } else {
+                frac / t
+            }
+        })
+        .collect()
+}
+
+/// Number of cut edges (unweighted) — the paper's "data transfer
+/// frequency" proxy for a pinned partition.
+pub fn cut_edge_count(g: &MetisGraph, parts: &[usize]) -> usize {
+    let mut cnt = 0usize;
+    for v in 0..g.vertex_count() {
+        for &(u, _) in &g.adj[v] {
+            if parts[u] != parts[v] {
+                cnt += 1;
+            }
+        }
+    }
+    cnt / 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle() -> MetisGraph {
+        let mut adj = vec![Vec::new(); 3];
+        let mut add = |a: usize, b: usize, w: i64, adj: &mut Vec<Vec<(usize, i64)>>| {
+            adj[a].push((b, w));
+            adj[b].push((a, w));
+        };
+        add(0, 1, 5, &mut adj);
+        add(1, 2, 7, &mut adj);
+        add(0, 2, 11, &mut adj);
+        MetisGraph { vwgt: vec![1, 2, 3], adj }
+    }
+
+    #[test]
+    fn cut_counts_crossing_weight() {
+        let g = triangle();
+        assert_eq!(edge_cut(&g, &[0, 0, 0]), 0);
+        assert_eq!(edge_cut(&g, &[0, 1, 1]), 5 + 11);
+        assert_eq!(edge_cut(&g, &[0, 1, 0]), 5 + 7);
+    }
+
+    #[test]
+    fn cut_edge_count_unweighted() {
+        let g = triangle();
+        assert_eq!(cut_edge_count(&g, &[0, 1, 1]), 2);
+        assert_eq!(cut_edge_count(&g, &[0, 0, 0]), 0);
+    }
+
+    #[test]
+    fn weights_per_part() {
+        let g = triangle();
+        assert_eq!(part_weights(&g, &[0, 1, 1], 2), vec![1, 5]);
+        assert_eq!(part_weights(&g, &[1, 1, 1], 2), vec![0, 6]);
+    }
+
+    #[test]
+    fn imbalance_perfect_and_skewed() {
+        let g = triangle(); // total weight 6
+        let imb = imbalance(&g, &[0, 0, 1], &[0.5, 0.5]);
+        assert!((imb[0] - 1.0).abs() < 1e-9); // 3/6 vs 0.5
+        assert!((imb[1] - 1.0).abs() < 1e-9);
+        let imb = imbalance(&g, &[0, 1, 1], &[0.5, 0.5]);
+        assert!((imb[0] - 1.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn imbalance_zero_target() {
+        let g = triangle();
+        let imb = imbalance(&g, &[1, 1, 1], &[0.0, 1.0]);
+        assert_eq!(imb[0], 1.0);
+        let imb = imbalance(&g, &[0, 1, 1], &[0.0, 1.0]);
+        assert!(imb[0].is_infinite());
+    }
+}

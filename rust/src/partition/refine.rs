@@ -1,0 +1,248 @@
+//! Refinement phase: boundary Fiduccia–Mattheyses (FM) with rollback.
+//!
+//! Each pass tentatively moves every vertex at most once, always picking
+//! the highest-gain move that keeps the balance constraint, and finally
+//! rolls back to the best prefix seen. Passes repeat until no pass
+//! improves the cut (or `refine_passes` is exhausted).
+//!
+//! Balance constraint: part 0 weight must stay within
+//! `target0 * (1 ± epsilon) ± max_vertex_weight` — the vertex-weight slack
+//! keeps coarse levels (where single vertices can outweigh the tolerance)
+//! from deadlocking, mirroring METIS's coarse-level relaxation.
+
+use std::collections::BinaryHeap;
+
+use crate::dag::metis_io::MetisGraph;
+use crate::util::Pcg32;
+
+/// Run FM refinement in place. `fixed[v]` (-1 free, 0/1 pinned) locks
+/// pinned vertices for every pass. Returns the final cut.
+pub fn fm_refine(
+    g: &MetisGraph,
+    side: &mut [usize],
+    frac0: f64,
+    fixed: &[i8],
+    cfg: &super::PartitionConfig,
+    rng: &mut Pcg32,
+) -> i64 {
+    let n = g.vertex_count();
+    if n == 0 {
+        return 0;
+    }
+    let total: i64 = g.vwgt.iter().sum();
+    let target0 = frac0 * total as f64;
+    let target1 = total as f64 - target0;
+    let max_vw = g.vwgt.iter().copied().max().unwrap_or(0);
+    // Per-part METIS-ubvec-style tolerance: each side may deviate by
+    // epsilon of *its own* target (plus one max vertex weight, which
+    // keeps coarse levels — where one vertex can outweigh the tolerance —
+    // from deadlocking). Proportional slack matters for the paper's
+    // skewed Formula-(1) targets: a 0.6% CPU share must not be erased by
+    // a tolerance computed from the 99.4% GPU side.
+    let lo0 = (target0 - (cfg.epsilon * target0 + max_vw as f64)).floor() as i64;
+    let hi0 = (target0 + (cfg.epsilon * target1 + max_vw as f64)).ceil() as i64;
+
+    let mut cut = super::quality::edge_cut(g, side);
+    for _ in 0..cfg.refine_passes.max(1) {
+        let improved = fm_pass(g, side, lo0, hi0, fixed, &mut cut, rng);
+        if !improved {
+            break;
+        }
+    }
+    cut
+}
+
+/// One FM pass; returns true if the cut strictly improved.
+fn fm_pass(
+    g: &MetisGraph,
+    side: &mut [usize],
+    lo0: i64,
+    hi0: i64,
+    fixed: &[i8],
+    cut: &mut i64,
+    _rng: &mut Pcg32,
+) -> bool {
+    let n = g.vertex_count();
+    let mut w0: i64 = (0..n).filter(|&v| side[v] == 0).map(|v| g.vwgt[v]).sum();
+
+    // gain[v] = cut reduction if v switches sides.
+    let mut gain = vec![0i64; n];
+    for v in 0..n {
+        gain[v] = g.adj[v]
+            .iter()
+            .map(|&(u, w)| if side[u] != side[v] { w } else { -w })
+            .sum();
+    }
+
+    // Max-heap of (gain, vertex); stale entries skipped lazily.
+    let mut heap: BinaryHeap<(i64, usize)> = (0..n)
+        .filter(|&v| fixed[v] < 0 && (is_boundary(g, side, v) || g.adj[v].is_empty()))
+        .map(|v| (gain[v], v))
+        .collect();
+    // Pinned vertices are locked from the start.
+    let mut locked: Vec<bool> = (0..n).map(|v| fixed[v] >= 0).collect();
+
+    // Move log for rollback: (vertex, cut_after, w0_after).
+    let mut log: Vec<(usize, i64, i64)> = Vec::new();
+    let mut running_cut = *cut;
+    let mut best_cut = *cut;
+    let mut best_len = 0usize;
+    // Rollback prefers balanced prefixes: (band distance, cut) lexicographic.
+    let w0_start = w0;
+    let mut best_key = (i64::MAX, i64::MAX); // filled after `dist` is defined
+
+    // Distance to the balance band; moves may either stay in band or
+    // strictly restore balance (needed when a coarse-level projection
+    // lands outside the band — otherwise refinement could never recover).
+    let dist = |w: i64| {
+        if w < lo0 {
+            lo0 - w
+        } else if w > hi0 {
+            w - hi0
+        } else {
+            0
+        }
+    };
+
+    // Classic FM early abort: once a long run of moves fails to beat the
+    // best prefix, the pass has degenerated into noise — stop instead of
+    // moving every vertex (this bounds pass cost by the useful work).
+    let abort_after = 50.max(n / 100);
+
+    while let Some((gv, v)) = heap.pop() {
+        if log.len() >= best_len + abort_after {
+            break;
+        }
+        if locked[v] || gv != gain[v] {
+            continue; // stale
+        }
+        // Balance check for moving v out of its side.
+        let new_w0 = if side[v] == 0 { w0 - g.vwgt[v] } else { w0 + g.vwgt[v] };
+        if dist(new_w0) > 0 && dist(new_w0) >= dist(w0) {
+            continue;
+        }
+        if best_key == (i64::MAX, i64::MAX) {
+            best_key = (dist(w0_start), *cut);
+        }
+        // Commit the tentative move.
+        locked[v] = true;
+        side[v] = 1 - side[v];
+        w0 = new_w0;
+        running_cut -= gv;
+        log.push((v, running_cut, w0));
+        let key = (dist(w0), running_cut);
+        if key < best_key {
+            best_key = key;
+            best_cut = running_cut;
+            best_len = log.len();
+        }
+        // Update neighbor gains.
+        for &(u, w) in &g.adj[v] {
+            if locked[u] {
+                continue;
+            }
+            let delta = if side[u] == side[v] { -2 * w } else { 2 * w };
+            gain[u] += delta;
+            heap.push((gain[u], u));
+        }
+    }
+
+    // Roll back to the best prefix. `best_len > 0` implies the kept
+    // prefix strictly improved the (band-distance, cut) key, so another
+    // pass is worthwhile.
+    for &(v, _, _) in log.iter().skip(best_len).rev() {
+        side[v] = 1 - side[v];
+    }
+    let improved = best_len > 0;
+    if improved {
+        *cut = best_cut;
+    }
+    improved
+}
+
+fn is_boundary(g: &MetisGraph, side: &[usize], v: usize) -> bool {
+    g.adj[v].iter().any(|&(u, _)| side[u] != side[v])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::{quality, PartitionConfig};
+
+    fn ladder(n: usize) -> MetisGraph {
+        // Two parallel paths with rungs: 2n vertices.
+        let mut adj = vec![Vec::new(); 2 * n];
+        let mut add = |a: usize, b: usize, adj: &mut Vec<Vec<(usize, i64)>>| {
+            adj[a].push((b, 1));
+            adj[b].push((a, 1));
+        };
+        for i in 0..n - 1 {
+            add(i, i + 1, &mut adj);
+            add(n + i, n + i + 1, &mut adj);
+        }
+        for i in 0..n {
+            add(i, n + i, &mut adj);
+        }
+        MetisGraph { vwgt: vec![1; 2 * n], adj }
+    }
+
+    #[test]
+    fn refine_improves_bad_partition() {
+        // Alternating sides on a ladder is maximally bad; FM should slash it.
+        let g = ladder(8);
+        let mut side: Vec<usize> = (0..16).map(|v| v % 2).collect();
+        let before = quality::edge_cut(&g, &side);
+        let cfg = PartitionConfig::default();
+        let mut rng = Pcg32::seeded(1);
+        let after = fm_refine(&g, &mut side, 0.5, &vec![-1i8; g.vertex_count()], &cfg, &mut rng);
+        assert!(after < before, "cut {before} -> {after} should improve");
+        assert_eq!(after, quality::edge_cut(&g, &side), "returned cut must match");
+    }
+
+    #[test]
+    fn refine_respects_balance() {
+        let g = ladder(10);
+        let mut side: Vec<usize> = (0..20).map(|v| v % 2).collect();
+        let cfg = PartitionConfig { epsilon: 0.1, ..Default::default() };
+        let mut rng = Pcg32::seeded(2);
+        fm_refine(&g, &mut side, 0.5, &vec![-1i8; g.vertex_count()], &cfg, &mut rng);
+        let w0 = side.iter().filter(|&&s| s == 0).count();
+        assert!((8..=12).contains(&w0), "w0 {w0} violates 50% ± slack");
+    }
+
+    #[test]
+    fn refine_keeps_optimal_partition() {
+        // Already-optimal split of the ladder (left half vs right half):
+        // FM must not make it worse.
+        let g = ladder(8);
+        let mut side: Vec<usize> = (0..16).map(|v| usize::from(v % 8 >= 4)).collect();
+        let before = quality::edge_cut(&g, &side);
+        let cfg = PartitionConfig::default();
+        let mut rng = Pcg32::seeded(3);
+        let after = fm_refine(&g, &mut side, 0.5, &vec![-1i8; g.vertex_count()], &cfg, &mut rng);
+        assert!(after <= before);
+    }
+
+    #[test]
+    fn skewed_target_respected() {
+        let g = ladder(10); // 20 vertices
+        let mut side = vec![0usize; 20];
+        for v in 15..20 {
+            side[v] = 1;
+        }
+        let cfg = PartitionConfig { epsilon: 0.05, ..Default::default() };
+        let mut rng = Pcg32::seeded(4);
+        fm_refine(&g, &mut side, 0.75, &vec![-1i8; g.vertex_count()], &cfg, &mut rng);
+        let w0 = side.iter().filter(|&&s| s == 0).count();
+        assert!((13..=17).contains(&w0), "w0 {w0} should stay near 15");
+    }
+
+    #[test]
+    fn empty_graph_noop() {
+        let g = MetisGraph { vwgt: vec![], adj: vec![] };
+        let mut side: Vec<usize> = vec![];
+        let cfg = PartitionConfig::default();
+        let mut rng = Pcg32::seeded(5);
+        assert_eq!(fm_refine(&g, &mut side, 0.5, &vec![-1i8; g.vertex_count()], &cfg, &mut rng), 0);
+    }
+}

@@ -1,0 +1,159 @@
+//! Table-backed performance model filled from actual measurements.
+//!
+//! This is the paper's literal approach ("we use offline measurements"):
+//! run each kernel a few times per device, store the observed times, and
+//! interpolate. The execution coordinator fills one of these from real
+//! PJRT kernel timings for the end-to-end example; tests fill it by hand.
+
+use std::collections::HashMap;
+
+use super::PerfModel;
+use crate::dag::KernelKind;
+use crate::platform::DeviceId;
+
+/// Key: (kernel, device). Value: sorted `(size, time_ms)` samples.
+type Table = HashMap<(KernelKind, DeviceId), Vec<(u32, f64)>>;
+
+/// A measurement-backed model with log-linear interpolation between
+/// sampled sizes and clamped extrapolation outside the sampled range.
+#[derive(Debug, Clone, Default)]
+pub struct MeasuredModel {
+    table: Table,
+    /// Sorted `(bytes, time_ms)` transfer samples.
+    transfers: Vec<(u64, f64)>,
+}
+
+impl MeasuredModel {
+    pub fn new() -> MeasuredModel {
+        MeasuredModel::default()
+    }
+
+    /// Record one kernel timing sample.
+    pub fn record_kernel(&mut self, kernel: KernelKind, device: DeviceId, n: u32, ms: f64) {
+        let v = self.table.entry((kernel, device)).or_default();
+        match v.binary_search_by_key(&n, |&(s, _)| s) {
+            Ok(i) => v[i] = (n, 0.5 * (v[i].1 + ms)), // average repeat samples
+            Err(i) => v.insert(i, (n, ms)),
+        }
+    }
+
+    /// Record one transfer timing sample.
+    pub fn record_transfer(&mut self, bytes: u64, ms: f64) {
+        match self.transfers.binary_search_by_key(&bytes, |&(b, _)| b) {
+            Ok(i) => self.transfers[i] = (bytes, 0.5 * (self.transfers[i].1 + ms)),
+            Err(i) => self.transfers.insert(i, (bytes, ms)),
+        }
+    }
+
+    /// Number of kernel samples stored.
+    pub fn kernel_samples(&self) -> usize {
+        self.table.values().map(Vec::len).sum()
+    }
+
+    pub fn has_kernel(&self, kernel: KernelKind, device: DeviceId) -> bool {
+        self.table.contains_key(&(kernel, device))
+    }
+
+    fn interp(samples: &[(f64, f64)], x: f64) -> f64 {
+        match samples.len() {
+            0 => 0.0,
+            1 => samples[0].1,
+            _ => {
+                if x <= samples[0].0 {
+                    return samples[0].1;
+                }
+                if x >= samples[samples.len() - 1].0 {
+                    return samples[samples.len() - 1].1;
+                }
+                let i = samples.iter().position(|&(s, _)| s >= x).unwrap();
+                let (x0, y0) = samples[i - 1];
+                let (x1, y1) = samples[i];
+                let t = (x - x0) / (x1 - x0);
+                y0 + t * (y1 - y0)
+            }
+        }
+    }
+}
+
+impl PerfModel for MeasuredModel {
+    fn kernel_time_ms(&self, kernel: KernelKind, n: u32, device: DeviceId) -> f64 {
+        if kernel == KernelKind::Source {
+            return 0.0;
+        }
+        let Some(v) = self.table.get(&(kernel, device)) else {
+            return 0.0;
+        };
+        let pts: Vec<(f64, f64)> = v.iter().map(|&(s, t)| (s as f64, t)).collect();
+        Self::interp(&pts, n as f64)
+    }
+
+    fn transfer_time_ms(&self, bytes: u64) -> f64 {
+        let pts: Vec<(f64, f64)> = self.transfers.iter().map(|&(b, t)| (b as f64, t)).collect();
+        Self::interp(&pts, bytes as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_sample_returned() {
+        let mut m = MeasuredModel::new();
+        m.record_kernel(KernelKind::Mm, 0, 128, 3.5);
+        assert_eq!(m.kernel_time_ms(KernelKind::Mm, 128, 0), 3.5);
+    }
+
+    #[test]
+    fn interpolates_between_samples() {
+        let mut m = MeasuredModel::new();
+        m.record_kernel(KernelKind::Mm, 1, 100, 1.0);
+        m.record_kernel(KernelKind::Mm, 1, 200, 3.0);
+        assert!((m.kernel_time_ms(KernelKind::Mm, 150, 1) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clamps_outside_range() {
+        let mut m = MeasuredModel::new();
+        m.record_kernel(KernelKind::Ma, 0, 100, 1.0);
+        m.record_kernel(KernelKind::Ma, 0, 200, 3.0);
+        assert_eq!(m.kernel_time_ms(KernelKind::Ma, 10, 0), 1.0);
+        assert_eq!(m.kernel_time_ms(KernelKind::Ma, 999, 0), 3.0);
+    }
+
+    #[test]
+    fn repeat_samples_average() {
+        let mut m = MeasuredModel::new();
+        m.record_kernel(KernelKind::Mm, 0, 64, 2.0);
+        m.record_kernel(KernelKind::Mm, 0, 64, 4.0);
+        assert!((m.kernel_time_ms(KernelKind::Mm, 64, 0) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn missing_entries_zero() {
+        let m = MeasuredModel::new();
+        assert_eq!(m.kernel_time_ms(KernelKind::Mm, 64, 0), 0.0);
+        assert_eq!(m.transfer_time_ms(1000), 0.0);
+    }
+
+    #[test]
+    fn transfer_interpolation() {
+        let mut m = MeasuredModel::new();
+        m.record_transfer(1000, 0.1);
+        m.record_transfer(3000, 0.3);
+        assert!((m.transfer_time_ms(2000) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn samples_stay_sorted() {
+        let mut m = MeasuredModel::new();
+        for n in [512u32, 64, 256, 128] {
+            m.record_kernel(KernelKind::Ma, 0, n, n as f64);
+        }
+        assert_eq!(m.kernel_samples(), 4);
+        // Interpolation between 128 and 256 must be monotone.
+        let a = m.kernel_time_ms(KernelKind::Ma, 150, 0);
+        let b = m.kernel_time_ms(KernelKind::Ma, 200, 0);
+        assert!(a < b);
+    }
+}

@@ -1,0 +1,138 @@
+//! Performance models: per-device kernel execution time and bus transfer
+//! time — the "offline measurement" information the paper's scheduler
+//! consumes (§II, §III.B).
+//!
+//! The paper measures kernel/transfer times on real hardware; our hardware
+//! gate (DESIGN.md §2) replaces those measurements with
+//! [`CalibratedModel`], an analytic roofline model whose constants are
+//! tuned so the *ratio curves of Figs 3 and 4* — the quantities that drive
+//! every scheduling decision — have the published shape. The measurement
+//! path itself still exists: [`MeasuredModel`] wraps an arbitrary table,
+//! and the coordinator can fill one from real PJRT kernel timings.
+
+pub mod calibrated;
+pub mod measured;
+
+pub use calibrated::CalibratedModel;
+pub use measured::MeasuredModel;
+
+use crate::dag::KernelKind;
+use crate::platform::{DeviceId, Platform};
+
+/// Time source for scheduling decisions and the simulator.
+pub trait PerfModel: Send + Sync {
+    /// Execution time (ms) of one `kernel` at square size `n` on one
+    /// worker of `device`.
+    fn kernel_time_ms(&self, kernel: KernelKind, n: u32, device: DeviceId) -> f64;
+
+    /// Bus transfer time (ms) for `bytes` between two memory nodes.
+    /// Symmetric per the paper's measurement (<0.007% direction error).
+    fn transfer_time_ms(&self, bytes: u64) -> f64;
+
+    /// Workload-ratio vector per device — the paper's Formulas (1)/(2),
+    /// generalized to `k` devices by speed proportionality:
+    /// `R_d = (1/t_d) / Σ_i (1/t_i)`. For two devices this reduces exactly
+    /// to `R_cpu = t_gpu / (t_gpu + t_cpu)`.
+    fn workload_ratios(&self, kernel: KernelKind, n: u32, platform: &Platform) -> Vec<f64> {
+        let times: Vec<f64> = (0..platform.device_count())
+            .map(|d| self.kernel_time_ms(kernel, n, d).max(1e-9))
+            .collect();
+        let inv_sum: f64 = times.iter().map(|t| 1.0 / t).sum();
+        times.iter().map(|t| (1.0 / t) / inv_sum).collect()
+    }
+}
+
+/// Edge weight for the partitioner: transfer time of the edge payload in
+/// integer microseconds (METIS needs integral weights; µs preserves three
+/// decimal digits of the paper's millisecond weights).
+pub fn edge_weight_us(model: &dyn PerfModel, bytes: u64) -> i64 {
+    (model.transfer_time_ms(bytes) * 1000.0).round() as i64
+}
+
+/// Node-weight policy for the partitioner (paper §III discussion: either
+/// per-kernel time on the GPU or on the CPU may be used; GPU weights are
+/// smaller, giving edge weights higher relative priority).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeWeightPolicy {
+    /// Use each kernel's GPU execution time (paper's default choice).
+    GpuTime,
+    /// Use each kernel's CPU execution time.
+    CpuTime,
+    /// Mean of the device times (ablation extra).
+    MeanTime,
+}
+
+/// Node weight in integer microseconds under `policy`.
+pub fn node_weight_us(
+    model: &dyn PerfModel,
+    kernel: KernelKind,
+    n: u32,
+    platform: &Platform,
+    policy: NodeWeightPolicy,
+) -> i64 {
+    if kernel == KernelKind::Source {
+        return 0; // the paper's zero-weight "empty kernel"
+    }
+    let cpu = model.kernel_time_ms(kernel, n, 0);
+    let last = platform.device_count() - 1;
+    let gpu = model.kernel_time_ms(kernel, n, if last >= 1 { 1 } else { last });
+    let ms = match policy {
+        NodeWeightPolicy::GpuTime => gpu,
+        NodeWeightPolicy::CpuTime => cpu,
+        NodeWeightPolicy::MeanTime => 0.5 * (cpu + gpu),
+    };
+    (ms * 1000.0).round().max(1.0) as i64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratios_reduce_to_paper_formula_for_two_devices() {
+        let m = CalibratedModel::default();
+        let p = Platform::paper();
+        let r = m.workload_ratios(KernelKind::Mm, 1024, &p);
+        let t_cpu = m.kernel_time_ms(KernelKind::Mm, 1024, 0);
+        let t_gpu = m.kernel_time_ms(KernelKind::Mm, 1024, 1);
+        let expect_cpu = t_gpu / (t_gpu + t_cpu);
+        assert!((r[0] - expect_cpu).abs() < 1e-12, "{} vs {}", r[0], expect_cpu);
+        assert!((r[0] + r[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ratios_sum_to_one_for_k_devices() {
+        let m = CalibratedModel::tri_device();
+        let p = Platform::tri_device();
+        let r = m.workload_ratios(KernelKind::Ma, 512, &p);
+        assert_eq!(r.len(), 3);
+        assert!((r.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn source_nodes_zero_weight() {
+        let m = CalibratedModel::default();
+        let p = Platform::paper();
+        let w = node_weight_us(&m, KernelKind::Source, 1024, &p, NodeWeightPolicy::GpuTime);
+        assert_eq!(w, 0);
+    }
+
+    #[test]
+    fn gpu_weights_smaller_than_cpu_weights_for_mm() {
+        // Paper §III: "choosing the execution time on GPUs would reduce
+        // the node weights".
+        let m = CalibratedModel::default();
+        let p = Platform::paper();
+        let g = node_weight_us(&m, KernelKind::Mm, 1024, &p, NodeWeightPolicy::GpuTime);
+        let c = node_weight_us(&m, KernelKind::Mm, 1024, &p, NodeWeightPolicy::CpuTime);
+        assert!(g < c, "gpu {g} should be < cpu {c}");
+    }
+
+    #[test]
+    fn edge_weight_microseconds() {
+        let m = CalibratedModel::default();
+        let w = edge_weight_us(&m, 4 * 1024 * 1024);
+        // 4 MiB over 12.5 GB/s ≈ 0.335 ms + 0.02 ms latency ≈ 355 µs.
+        assert!((300..420).contains(&w), "got {w}");
+    }
+}

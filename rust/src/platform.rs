@@ -1,0 +1,160 @@
+//! Hardware platform description (the paper's Table I, as data).
+//!
+//! A platform is a set of devices connected by one shared system bus
+//! (PCIe in the paper). Each device owns one discrete memory node; memory
+//! node ids equal device ids, and device 0 (the CPU) owns host memory
+//! where all initial data lives (paper §III.B).
+
+/// Index of a device (== index of its memory node).
+pub type DeviceId = usize;
+/// Index of a memory node.
+pub type MemNode = usize;
+
+/// Broad device class, selecting the perf-model curves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceKind {
+    /// General-purpose CPU cores; kernel runs on one worker core.
+    Cpu,
+    /// Throughput accelerator (the paper's GTX TITAN).
+    Gpu,
+    /// The paper's future-work third accelerator.
+    Fpga,
+}
+
+/// One device of the platform.
+#[derive(Debug, Clone)]
+pub struct DeviceSpec {
+    pub name: String,
+    pub kind: DeviceKind,
+    /// Number of worker threads this device contributes. The paper uses
+    /// 3 CPU worker cores (1 core reserved for the runtime) and 1 GPU
+    /// worker thread.
+    pub workers: usize,
+}
+
+/// The shared system bus connecting all memory nodes.
+#[derive(Debug, Clone)]
+pub struct BusSpec {
+    pub name: String,
+    /// Effective bandwidth in GB/s.
+    pub bandwidth_gbs: f64,
+    /// Per-transfer latency in milliseconds.
+    pub latency_ms: f64,
+    /// Whether two transfers can be in flight at once (dual copy engines,
+    /// paper §III: Tesla-only; GTX = false).
+    pub duplex: bool,
+}
+
+/// A complete platform.
+#[derive(Debug, Clone)]
+pub struct Platform {
+    pub devices: Vec<DeviceSpec>,
+    pub bus: BusSpec,
+}
+
+impl Platform {
+    /// The paper's Table I machine: quad-core i7-4770 (3 worker cores +
+    /// 1 runtime core) + GTX TITAN over PCIe 3.0 x16.
+    pub fn paper() -> Platform {
+        Platform {
+            devices: vec![
+                DeviceSpec { name: "i7-4770".into(), kind: DeviceKind::Cpu, workers: 3 },
+                DeviceSpec { name: "GTX-TITAN".into(), kind: DeviceKind::Gpu, workers: 1 },
+            ],
+            bus: BusSpec {
+                name: "PCIe-3.0-x16".into(),
+                bandwidth_gbs: 12.5,
+                latency_ms: 0.020,
+                duplex: false,
+            },
+        }
+    }
+
+    /// The paper's future-work platform: CPU + GPU + FPGA.
+    pub fn tri_device() -> Platform {
+        let mut p = Platform::paper();
+        p.devices.push(DeviceSpec {
+            name: "FPGA".into(),
+            kind: DeviceKind::Fpga,
+            workers: 1,
+        });
+        p
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Total worker threads across devices.
+    pub fn worker_count(&self) -> usize {
+        self.devices.iter().map(|d| d.workers).sum()
+    }
+
+    /// The memory node holding initial data (host).
+    pub fn host_node(&self) -> MemNode {
+        0
+    }
+
+    /// Render the Table I-style header printed by every bench.
+    pub fn table1(&self) -> String {
+        let mut s = String::from("platform      | description\n");
+        s.push_str("--------------+-------------------------------------------\n");
+        for d in &self.devices {
+            s.push_str(&format!(
+                "{:<13} | {} ({:?}, {} worker{})\n",
+                d.kind_label(),
+                d.name,
+                d.kind,
+                d.workers,
+                if d.workers == 1 { "" } else { "s" }
+            ));
+        }
+        s.push_str(&format!(
+            "BUS           | {} ({} GB/s, {} ms latency)\n",
+            self.bus.name, self.bus.bandwidth_gbs, self.bus.latency_ms
+        ));
+        s
+    }
+}
+
+impl DeviceSpec {
+    fn kind_label(&self) -> &'static str {
+        match self.kind {
+            DeviceKind::Cpu => "CPU",
+            DeviceKind::Gpu => "GPU",
+            DeviceKind::Fpga => "FPGA",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_platform_matches_table1() {
+        let p = Platform::paper();
+        assert_eq!(p.device_count(), 2);
+        assert_eq!(p.devices[0].kind, DeviceKind::Cpu);
+        assert_eq!(p.devices[0].workers, 3, "3 worker cores + 1 runtime core");
+        assert_eq!(p.devices[1].kind, DeviceKind::Gpu);
+        assert_eq!(p.devices[1].workers, 1, "one GPU worker thread");
+        assert!(!p.bus.duplex, "GTX has no dual copy engines");
+        assert_eq!(p.worker_count(), 4);
+    }
+
+    #[test]
+    fn tri_device_extension() {
+        let p = Platform::tri_device();
+        assert_eq!(p.device_count(), 3);
+        assert_eq!(p.devices[2].kind, DeviceKind::Fpga);
+    }
+
+    #[test]
+    fn table1_mentions_all_rows() {
+        let t = Platform::paper().table1();
+        assert!(t.contains("i7-4770"));
+        assert!(t.contains("GTX-TITAN"));
+        assert!(t.contains("PCIe-3.0-x16"));
+    }
+}

@@ -1,0 +1,248 @@
+//! Kernel execution on the PJRT CPU client.
+//!
+//! One [`KernelRuntime`] per process: it owns the PJRT client and a cache
+//! of compiled executables keyed by `(op, n)`. Compilation happens once
+//! per artifact (eagerly in [`KernelRuntime::load`] or lazily via
+//! [`KernelRuntime::ensure`]); execution marshals `&[f32]` slices to
+//! literals and back.
+//!
+//! Thread-safety: the PJRT CPU client is thread-safe, but executions are
+//! serialized behind a mutex per runtime — on this substrate every
+//! "device" shares the same physical CPU, so serialization also keeps the
+//! measured kernel times meaningful for the measured perf model.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::Manifest;
+use crate::dag::KernelKind;
+
+/// Compiled-executable cache + PJRT client.
+pub struct KernelRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exes: Mutex<HashMap<(KernelKind, u32), xla::PjRtLoadedExecutable>>,
+}
+
+impl KernelRuntime {
+    /// Create a runtime over an artifacts directory; compiles nothing yet.
+    pub fn open(dir: impl AsRef<Path>) -> Result<KernelRuntime> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(KernelRuntime { client, manifest, exes: Mutex::new(HashMap::new()) })
+    }
+
+    /// Create a runtime and eagerly compile every artifact.
+    pub fn load(dir: impl AsRef<Path>) -> Result<KernelRuntime> {
+        let rt = Self::open(dir)?;
+        let keys: Vec<(KernelKind, u32)> =
+            rt.manifest.entries.iter().map(|a| (a.op, a.n)).collect();
+        for (op, n) in keys {
+            rt.ensure(op, n)?;
+        }
+        Ok(rt)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Is `(op, n)` available as an artifact?
+    pub fn has(&self, op: KernelKind, n: u32) -> bool {
+        self.manifest.find(op, n).is_some()
+    }
+
+    /// Compile `(op, n)` if not cached yet.
+    pub fn ensure(&self, op: KernelKind, n: u32) -> Result<()> {
+        let mut exes = self.exes.lock().unwrap();
+        if exes.contains_key(&(op, n)) {
+            return Ok(());
+        }
+        let art = self
+            .manifest
+            .find(op, n)
+            .with_context(|| format!("no artifact for {op} at size {n}"))?;
+        let path = art
+            .path
+            .to_str()
+            .with_context(|| format!("non-utf8 path {:?}", art.path))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("loading HLO text {path}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", art.name))?;
+        exes.insert((op, n), exe);
+        Ok(())
+    }
+
+    /// Execute `(op, n)` over `inputs` (each a row-major `n*n` f32 slice).
+    /// Returns the output matrix.
+    pub fn execute(&self, op: KernelKind, n: u32, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        let art = self
+            .manifest
+            .find(op, n)
+            .with_context(|| format!("no artifact for {op} at size {n}"))?;
+        if inputs.len() != art.arity {
+            bail!("{}: expected {} inputs, got {}", art.name, art.arity, inputs.len());
+        }
+        let elems = (n as usize) * (n as usize);
+        for (i, inp) in inputs.iter().enumerate() {
+            if inp.len() != elems {
+                bail!("{}: input {i} has {} elems, want {elems}", art.name, inp.len());
+            }
+        }
+        self.ensure(op, n)?;
+
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|inp| {
+                xla::Literal::vec1(inp)
+                    .reshape(&[n as i64, n as i64])
+                    .map_err(|e| anyhow!("reshape: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+
+        let exes = self.exes.lock().unwrap();
+        let exe = exes.get(&(op, n)).expect("ensured above");
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute {}: {e:?}", art.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().map_err(|e| anyhow!("to_tuple1: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Execute and return (output, wall-time in ms) — the measurement
+    /// primitive behind the paper's "offline measurements".
+    pub fn execute_timed(
+        &self,
+        op: KernelKind,
+        n: u32,
+        inputs: &[&[f32]],
+    ) -> Result<(Vec<f32>, f64)> {
+        let t0 = Instant::now();
+        let out = self.execute(op, n, inputs)?;
+        Ok((out, t0.elapsed().as_secs_f64() * 1e3))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    fn rt() -> Option<KernelRuntime> {
+        artifacts_dir().map(|d| KernelRuntime::open(d).unwrap())
+    }
+
+    fn rand_mat(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::Pcg32::seeded(seed);
+        (0..n * n).map(|_| rng.gen_f32() * 2.0 - 1.0).collect()
+    }
+
+    fn mm_ref(a: &[f32], b: &[f32], n: usize) -> Vec<f32> {
+        let mut out = vec![0f32; n * n];
+        for i in 0..n {
+            for kk in 0..n {
+                let aik = a[i * n + kk];
+                for j in 0..n {
+                    out[i * n + j] += aik * b[kk * n + j];
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn ma_matches_elementwise_add() {
+        let Some(rt) = rt() else { return };
+        let n = 64usize;
+        let a = rand_mat(n, 1);
+        let b = rand_mat(n, 2);
+        let out = rt.execute(KernelKind::Ma, 64, &[&a, &b]).unwrap();
+        for i in 0..n * n {
+            assert!((out[i] - (a[i] + b[i])).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn mm_matches_naive_reference() {
+        let Some(rt) = rt() else { return };
+        let n = 64usize;
+        let a = rand_mat(n, 3);
+        let b = rand_mat(n, 4);
+        let out = rt.execute(KernelKind::Mm, 64, &[&a, &b]).unwrap();
+        let want = mm_ref(&a, &b, n);
+        for i in 0..n * n {
+            assert!(
+                (out[i] - want[i]).abs() < 1e-3,
+                "elem {i}: {} vs {}",
+                out[i],
+                want[i]
+            );
+        }
+    }
+
+    #[test]
+    fn mm_add_fused() {
+        let Some(rt) = rt() else { return };
+        let n = 64usize;
+        let a = rand_mat(n, 5);
+        let b = rand_mat(n, 6);
+        let c = rand_mat(n, 7);
+        let out = rt.execute(KernelKind::MmAdd, 64, &[&a, &b, &c]).unwrap();
+        let want = mm_ref(&a, &b, n);
+        for i in 0..n * n {
+            assert!((out[i] - (want[i] + c[i])).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn wrong_arity_rejected() {
+        let Some(rt) = rt() else { return };
+        let a = rand_mat(64, 8);
+        assert!(rt.execute(KernelKind::Ma, 64, &[&a]).is_err());
+    }
+
+    #[test]
+    fn wrong_shape_rejected() {
+        let Some(rt) = rt() else { return };
+        let a = rand_mat(32, 9);
+        let b = rand_mat(32, 10);
+        assert!(rt.execute(KernelKind::Ma, 64, &[&a, &b]).is_err());
+    }
+
+    #[test]
+    fn missing_size_errors() {
+        let Some(rt) = rt() else { return };
+        assert!(!rt.has(KernelKind::Ma, 7));
+        let a = vec![0f32; 49];
+        assert!(rt.execute(KernelKind::Ma, 7, &[&a, &a]).is_err());
+    }
+
+    #[test]
+    fn timed_execution_positive() {
+        let Some(rt) = rt() else { return };
+        let a = rand_mat(128, 11);
+        let b = rand_mat(128, 12);
+        let (_, ms) = rt.execute_timed(KernelKind::Mm, 128, &[&a, &b]).unwrap();
+        assert!(ms > 0.0);
+    }
+}

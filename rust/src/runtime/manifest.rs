@@ -1,0 +1,153 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::dag::KernelKind;
+use crate::util::json;
+
+/// One AOT'd kernel artifact.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub op: KernelKind,
+    /// Square matrix side length.
+    pub n: u32,
+    /// Number of input operands.
+    pub arity: usize,
+    /// HLO text file path (absolute after loading).
+    pub path: PathBuf,
+    /// Nominal flop count (from the L2 model).
+    pub flops: u64,
+    /// Bytes crossing the bus if all operands + result transfer.
+    pub io_bytes: u64,
+    /// Structural VMEM budget per Pallas grid step (§Perf L1).
+    pub vmem_bytes_per_step: u64,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub entries: Vec<Artifact>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON; `dir` resolves relative artifact paths.
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let v = json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        match v.get("interchange").and_then(|x| x.as_str()) {
+            Some("hlo-text") => {}
+            other => bail!("unsupported interchange format {other:?} (want hlo-text)"),
+        }
+        let entries = v
+            .get("entries")
+            .and_then(|e| e.as_arr())
+            .context("manifest missing entries")?;
+        let mut out = Vec::with_capacity(entries.len());
+        for e in entries {
+            let name = e
+                .get("name")
+                .and_then(|x| x.as_str())
+                .context("entry missing name")?
+                .to_string();
+            let op_str = e.get("op").and_then(|x| x.as_str()).context("entry missing op")?;
+            let op = KernelKind::parse(op_str)
+                .with_context(|| format!("unknown op {op_str:?} in manifest"))?;
+            let rel = e.get("path").and_then(|x| x.as_str()).context("entry missing path")?;
+            out.push(Artifact {
+                name,
+                op,
+                n: e.get("n").and_then(|x| x.as_u64()).context("entry missing n")? as u32,
+                arity: e.get("arity").and_then(|x| x.as_u64()).unwrap_or(op.arity() as u64)
+                    as usize,
+                path: dir.join(rel),
+                flops: e.get("flops").and_then(|x| x.as_u64()).unwrap_or(0),
+                io_bytes: e.get("io_bytes").and_then(|x| x.as_u64()).unwrap_or(0),
+                vmem_bytes_per_step: e
+                    .get("vmem_bytes_per_step")
+                    .and_then(|x| x.as_u64())
+                    .unwrap_or(0),
+            });
+        }
+        Ok(Manifest { entries: out })
+    }
+
+    /// Find the artifact for `(op, n)`.
+    pub fn find(&self, op: KernelKind, n: u32) -> Option<&Artifact> {
+        self.entries.iter().find(|a| a.op == op && a.n == n)
+    }
+
+    /// Distinct sizes available for `op`, ascending.
+    pub fn sizes(&self, op: KernelKind) -> Vec<u32> {
+        let mut v: Vec<u32> = self.entries.iter().filter(|a| a.op == op).map(|a| a.n).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "format": 1,
+        "dtype": "f32",
+        "interchange": "hlo-text",
+        "entries": [
+            {"name": "ma_64", "op": "ma", "n": 64, "arity": 2, "path": "ma_64.hlo.txt",
+             "flops": 4096, "io_bytes": 49152, "vmem_bytes_per_step": 196608},
+            {"name": "mm_128", "op": "mm", "n": 128, "arity": 2, "path": "mm_128.hlo.txt",
+             "flops": 4194304, "io_bytes": 196608, "vmem_bytes_per_step": 196608}
+        ]
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/art")).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let a = m.find(KernelKind::Ma, 64).unwrap();
+        assert_eq!(a.arity, 2);
+        assert_eq!(a.path, PathBuf::from("/art/ma_64.hlo.txt"));
+        assert_eq!(a.flops, 4096);
+        assert!(m.find(KernelKind::Mm, 64).is_none());
+        assert_eq!(m.sizes(KernelKind::Mm), vec![128]);
+    }
+
+    #[test]
+    fn rejects_wrong_interchange() {
+        let bad = SAMPLE.replace("hlo-text", "proto");
+        assert!(Manifest::parse(&bad, Path::new("/")).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_op() {
+        let bad = SAMPLE.replace("\"op\": \"ma\"", "\"op\": \"conv\"");
+        assert!(Manifest::parse(&bad, Path::new("/")).is_err());
+    }
+
+    #[test]
+    fn loads_shipped_manifest_if_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return; // `make artifacts` not run — skip
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(!m.entries.is_empty());
+        for a in &m.entries {
+            assert!(a.path.exists(), "missing artifact file {:?}", a.path);
+        }
+        assert!(m.find(KernelKind::Ma, 64).is_some());
+        assert!(m.find(KernelKind::Mm, 128).is_some());
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: load the AOT'd HLO-text artifacts and execute them.
+//!
+//! Bridge pattern (see /opt/xla-example/load_hlo and DESIGN.md §3):
+//! `python/compile/aot.py` lowers each (op, size) pair once to **HLO
+//! text** — not serialized protos, which the crate's bundled
+//! xla_extension 0.5.1 rejects for jax ≥ 0.5's 64-bit instruction ids —
+//! and this module loads the text with `HloModuleProto::from_text_file`,
+//! compiles on the PJRT CPU client, and executes with f32 literals.
+//! Python never runs on this path.
+
+pub mod exec;
+pub mod manifest;
+pub mod service;
+
+pub use exec::KernelRuntime;
+pub use manifest::{Artifact, Manifest};
+pub use service::RuntimeService;

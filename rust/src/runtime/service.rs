@@ -1,0 +1,150 @@
+//! Thread-safe façade over [`KernelRuntime`].
+//!
+//! The `xla` crate's PJRT handles are `!Send` (Rc internals), so the
+//! runtime cannot be shared across worker threads directly. A
+//! [`RuntimeService`] spawns one dedicated service thread that owns the
+//! runtime and executes requests sent over a channel; handles are `Clone +
+//! Send` and can be given to every worker. Kernel executions serialize on
+//! the service thread — faithful on this substrate, where every simulated
+//! device shares one physical CPU.
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::exec::KernelRuntime;
+use super::manifest::Manifest;
+use crate::dag::KernelKind;
+
+enum Request {
+    Execute {
+        op: KernelKind,
+        n: u32,
+        inputs: Vec<Vec<f32>>,
+        reply: mpsc::Sender<Result<(Vec<f32>, f64)>>,
+    },
+    Stop,
+}
+
+/// Cloneable, Send-able handle to the PJRT service thread.
+#[derive(Clone)]
+pub struct RuntimeService {
+    tx: mpsc::Sender<Request>,
+    manifest: Arc<Manifest>,
+    join: Arc<Mutex<Option<std::thread::JoinHandle<()>>>>,
+}
+
+impl RuntimeService {
+    /// Spawn the service thread over an artifacts directory.
+    pub fn spawn(dir: impl AsRef<Path>) -> Result<RuntimeService> {
+        let dir: PathBuf = dir.as_ref().to_path_buf();
+        // Parse the manifest here too, so handles can answer `has` without
+        // a round-trip.
+        let manifest = Arc::new(Manifest::load(&dir)?);
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-service".into())
+            .spawn(move || {
+                let rt = match KernelRuntime::open(&dir) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Execute { op, n, inputs, reply } => {
+                            let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+                            let _ = reply.send(rt.execute_timed(op, n, &refs));
+                        }
+                        Request::Stop => break,
+                    }
+                }
+            })
+            .context("spawning pjrt service")?;
+        ready_rx
+            .recv()
+            .context("pjrt service died during startup")??;
+        Ok(RuntimeService { tx, manifest, join: Arc::new(Mutex::new(Some(join))) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn has(&self, op: KernelKind, n: u32) -> bool {
+        self.manifest.find(op, n).is_some()
+    }
+
+    /// Execute a kernel on the service thread; blocks for the result.
+    pub fn execute(&self, op: KernelKind, n: u32, inputs: Vec<Vec<f32>>) -> Result<Vec<f32>> {
+        self.execute_timed(op, n, inputs).map(|(out, _)| out)
+    }
+
+    /// Execute and return (output, kernel wall ms).
+    pub fn execute_timed(
+        &self,
+        op: KernelKind,
+        n: u32,
+        inputs: Vec<Vec<f32>>,
+    ) -> Result<(Vec<f32>, f64)> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Execute { op, n, inputs, reply })
+            .map_err(|_| anyhow!("pjrt service gone"))?;
+        rx.recv().map_err(|_| anyhow!("pjrt service dropped request"))?
+    }
+
+    /// Stop the service thread (also triggered when the last clone drops).
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Request::Stop);
+        if let Some(j) = self.join.lock().unwrap().take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn service() -> Option<RuntimeService> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then(|| RuntimeService::spawn(dir).unwrap())
+    }
+
+    #[test]
+    fn executes_from_multiple_threads() {
+        let Some(svc) = service() else { return };
+        let mut joins = Vec::new();
+        for t in 0..4 {
+            let svc = svc.clone();
+            joins.push(std::thread::spawn(move || {
+                let n = 64usize;
+                let a = vec![t as f32; n * n];
+                let b = vec![1.0f32; n * n];
+                let out = svc.execute(KernelKind::Ma, 64, vec![a, b]).unwrap();
+                assert!(out.iter().all(|&x| (x - (t as f32 + 1.0)).abs() < 1e-6));
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn missing_artifact_is_error_not_panic() {
+        let Some(svc) = service() else { return };
+        let a = vec![0f32; 9];
+        assert!(svc.execute(KernelKind::Ma, 3, vec![a.clone(), a]).is_err());
+        svc.shutdown();
+    }
+}

@@ -1,0 +1,98 @@
+//! The eager policy: StarPU's greedy idle-worker scheduler.
+//!
+//! "The eager policy tries to exploit both processors when either is
+//! idle" (paper §IV.C) — a task goes to whichever device has the earliest
+//! free worker, with no regard for execution efficiency or data location.
+//! On compute-bound workloads with a large device gap this is the paper's
+//! losing baseline (Fig 6); its transfer count is the highest of the
+//! three policies.
+
+use super::{DispatchCtx, Scheduler};
+use crate::platform::DeviceId;
+
+/// Greedy idle-worker dispatch.
+#[derive(Debug, Default)]
+pub struct Eager;
+
+impl Eager {
+    pub fn new() -> Eager {
+        Eager
+    }
+}
+
+impl Scheduler for Eager {
+    fn name(&self) -> &'static str {
+        "eager"
+    }
+
+    fn select(&mut self, ctx: &DispatchCtx) -> DeviceId {
+        // Earliest-free device; ties go to the higher device id, modelling
+        // StarPU's behaviour of keeping accelerators hot (the observed
+        // "eager dispatches the most kernels to the GPU").
+        let mut best = 0usize;
+        for d in 1..ctx.device_free_ms.len() {
+            if ctx.device_free_ms[d] <= ctx.device_free_ms[best] {
+                best = d;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::KernelKind;
+    use crate::perfmodel::CalibratedModel;
+    use crate::platform::Platform;
+    use crate::sched::InputInfo;
+
+    fn ctx<'a>(
+        free: &'a [f64],
+        inputs: &'a [InputInfo],
+        platform: &'a Platform,
+        model: &'a CalibratedModel,
+    ) -> DispatchCtx<'a> {
+        DispatchCtx {
+            task: 0,
+            kernel: KernelKind::Mm,
+            size: 1024,
+            ready_ms: 0.0,
+            device_free_ms: free,
+            inputs,
+            platform,
+            model,
+        }
+    }
+
+    #[test]
+    fn picks_idle_device() {
+        let platform = Platform::paper();
+        let model = CalibratedModel::default();
+        let mut s = Eager::new();
+        let free = [10.0, 2.0];
+        assert_eq!(s.select(&ctx(&free, &[], &platform, &model)), 1);
+        let free = [1.0, 50.0];
+        assert_eq!(s.select(&ctx(&free, &[], &platform, &model)), 0);
+    }
+
+    #[test]
+    fn ties_prefer_accelerator() {
+        let platform = Platform::paper();
+        let model = CalibratedModel::default();
+        let mut s = Eager::new();
+        let free = [0.0, 0.0];
+        assert_eq!(s.select(&ctx(&free, &[], &platform, &model)), 1);
+    }
+
+    #[test]
+    fn ignores_data_location() {
+        // Input resident on CPU; eager still picks the idle GPU.
+        let platform = Platform::paper();
+        let model = CalibratedModel::default();
+        let mut s = Eager::new();
+        let inputs = [InputInfo { bytes: 1 << 24, valid_mask: 0b01 }];
+        let free = [5.0, 0.0];
+        assert_eq!(s.select(&ctx(&free, &inputs, &platform, &model)), 1);
+    }
+}

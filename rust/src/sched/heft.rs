@@ -1,0 +1,132 @@
+//! HEFT-style policy (Topcuoglu et al.): a classic heterogeneous list
+//! scheduler, included as a stronger literature baseline than the paper's
+//! set.
+//!
+//! Full HEFT orders tasks by upward rank and assigns each to the
+//! earliest-finish-time processor. Our engines dispatch in dependency-
+//! readiness order, so the rank is used as a tiebreak/insertion hint and
+//! the device choice is the EFT rule — the part of HEFT that matters for
+//! device selection. The upward ranks are computed in `plan` with mean
+//! execution and mean transfer costs, per the original formulation.
+
+use super::{DispatchCtx, Scheduler};
+use crate::dag::{topo, Dag};
+use crate::perfmodel::PerfModel;
+use crate::platform::{DeviceId, Platform};
+
+/// Earliest-finish-time selection with precomputed upward ranks.
+#[derive(Debug, Default)]
+pub struct Heft {
+    /// Upward rank per node (exposed for tests/analysis).
+    ranks: Vec<f64>,
+}
+
+impl Heft {
+    pub fn new() -> Heft {
+        Heft::default()
+    }
+
+    pub fn ranks(&self) -> &[f64] {
+        &self.ranks
+    }
+}
+
+impl Scheduler for Heft {
+    fn name(&self) -> &'static str {
+        "heft"
+    }
+
+    fn plan(&mut self, dag: &Dag, platform: &Platform, model: &dyn PerfModel) {
+        let k = platform.device_count();
+        let mean_exec = |id: usize| -> f64 {
+            let n = dag.node(id);
+            (0..k).map(|d| model.kernel_time_ms(n.kernel, n.size, d)).sum::<f64>() / k as f64
+        };
+        // rank_u(v) = mean_exec(v) + max over succs (mean_comm + rank_u).
+        let order = topo::topo_order(dag).expect("HEFT requires a DAG");
+        let mut ranks = vec![0.0f64; dag.node_count()];
+        for &u in order.iter().rev() {
+            let mut best = 0.0f64;
+            for &e in dag.out_edges(u) {
+                let edge = dag.edge(e);
+                // Mean communication: transfer happens with probability
+                // (k-1)/k when endpoints land on different devices.
+                let comm = model.transfer_time_ms(edge.bytes) * (k as f64 - 1.0) / k as f64;
+                best = best.max(comm + ranks[edge.dst]);
+            }
+            ranks[u] = mean_exec(u) + best;
+        }
+        self.ranks = ranks;
+    }
+
+    fn select(&mut self, ctx: &DispatchCtx) -> DeviceId {
+        // EFT rule — identical objective to dmda's estimator.
+        let mut best = 0usize;
+        let mut best_t = f64::INFINITY;
+        for d in 0..ctx.device_free_ms.len() {
+            let t = ctx.estimated_finish_ms(d);
+            if t < best_t {
+                best_t = t;
+                best = d;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::{generator::{generate_layered, GeneratorConfig}, KernelKind};
+    use crate::perfmodel::CalibratedModel;
+
+    #[test]
+    fn ranks_decrease_toward_sinks() {
+        let dag = generate_layered(&GeneratorConfig::paper(KernelKind::Mm, 512));
+        let platform = Platform::paper();
+        let model = CalibratedModel::default();
+        let mut h = Heft::new();
+        h.plan(&dag, &platform, &model);
+        for (_, e) in dag.edges() {
+            assert!(
+                h.ranks()[e.src] > h.ranks()[e.dst],
+                "rank must strictly decrease along edges"
+            );
+        }
+    }
+
+    #[test]
+    fn sinks_rank_equals_mean_exec() {
+        let dag = crate::dag::workloads::chain(3, KernelKind::Ma, 256);
+        let platform = Platform::paper();
+        let model = CalibratedModel::default();
+        let mut h = Heft::new();
+        h.plan(&dag, &platform, &model);
+        let sink = 2;
+        let mean = (model.kernel_time_ms(KernelKind::Ma, 256, 0)
+            + model.kernel_time_ms(KernelKind::Ma, 256, 1))
+            / 2.0;
+        assert!((h.ranks()[sink] - mean).abs() < 1e-9);
+    }
+
+    #[test]
+    fn selects_like_eft() {
+        let dag = crate::dag::workloads::chain(2, KernelKind::Mm, 1024);
+        let platform = Platform::paper();
+        let model = CalibratedModel::default();
+        let mut h = Heft::new();
+        h.plan(&dag, &platform, &model);
+        let free = [0.0, 0.0];
+        let ctx = DispatchCtx {
+            task: 0,
+            kernel: KernelKind::Mm,
+            size: 1024,
+            ready_ms: 0.0,
+            device_free_ms: &free,
+            inputs: &[],
+            platform: &platform,
+            model: &model,
+        };
+        assert_eq!(h.select(&ctx), 1, "big MM -> GPU under EFT");
+    }
+}

@@ -1,0 +1,197 @@
+//! Scheduling policies.
+//!
+//! Every policy implements [`Scheduler`]; both execution engines (the
+//! discrete-event simulator and the threaded real-compute coordinator)
+//! call the same `select` at each task's dispatch point, so a policy's
+//! behaviour — and its transfer footprint — is engine-independent.
+//!
+//! Paper policies:
+//! * [`eager::Eager`] — StarPU's greedy idle-worker policy;
+//! * [`dmda::Dmda`] — StarPU's data-aware minimal-completion-time policy;
+//! * [`gp::GraphPartition`] — the paper's contribution: offline METIS-style
+//!   partition with Formula (1) target ratios, then pinning.
+//!
+//! Extra baselines for the ablations: [`random::RandomSched`],
+//! [`random::RoundRobin`], [`pin::PinAll`], [`heft::Heft`].
+
+pub mod dmda;
+pub mod eager;
+pub mod gp;
+pub mod heft;
+pub mod pin;
+pub mod random;
+
+pub use dmda::Dmda;
+pub use eager::Eager;
+pub use gp::{GraphPartition, GpConfig};
+pub use heft::Heft;
+pub use pin::PinAll;
+pub use random::{RandomSched, RoundRobin};
+
+use crate::dag::{Dag, KernelKind, NodeId};
+use crate::perfmodel::PerfModel;
+use crate::platform::{DeviceId, Platform};
+
+/// Location info for one input of a dispatching task.
+#[derive(Debug, Clone, Copy)]
+pub struct InputInfo {
+    /// Payload size in bytes.
+    pub bytes: u64,
+    /// Bit `i` set = memory node `i` holds a valid copy.
+    pub valid_mask: u64,
+}
+
+impl InputInfo {
+    /// Is a valid copy already resident on `node`?
+    pub fn on(&self, node: usize) -> bool {
+        self.valid_mask & (1u64 << node) != 0
+    }
+}
+
+/// Everything a policy may consult at one dispatch point.
+pub struct DispatchCtx<'a> {
+    pub task: NodeId,
+    pub kernel: KernelKind,
+    pub size: u32,
+    /// Virtual/real time at which the task's dependencies are satisfied.
+    pub ready_ms: f64,
+    /// Earliest time a worker of each device becomes free.
+    pub device_free_ms: &'a [f64],
+    /// Current location of each input.
+    pub inputs: &'a [InputInfo],
+    pub platform: &'a Platform,
+    pub model: &'a dyn PerfModel,
+}
+
+impl<'a> DispatchCtx<'a> {
+    /// Total estimated transfer time to make all inputs valid on `dev`.
+    pub fn transfer_cost_ms(&self, dev: DeviceId) -> f64 {
+        self.inputs
+            .iter()
+            .filter(|i| !i.on(dev))
+            .map(|i| self.model.transfer_time_ms(i.bytes))
+            .sum()
+    }
+
+    /// Estimated finish time of the task on `dev` (dmda's objective):
+    /// `max(worker_free, ready + transfers) + exec`.
+    pub fn estimated_finish_ms(&self, dev: DeviceId) -> f64 {
+        let data_ready = self.ready_ms + self.transfer_cost_ms(dev);
+        let start = self.device_free_ms[dev].max(data_ready);
+        start + self.model.kernel_time_ms(self.kernel, self.size, dev)
+    }
+}
+
+/// A scheduling policy.
+pub trait Scheduler: Send {
+    /// Short stable name used in reports ("eager", "dmda", "gp", ...).
+    fn name(&self) -> &'static str;
+
+    /// Offline planning pass before any task runs. Online policies leave
+    /// this empty; the graph-partition policy does all its work here
+    /// (paper §IV.D: "makes a singular decision and uses the same decision
+    /// for all following tasks").
+    fn plan(&mut self, _dag: &Dag, _platform: &Platform, _model: &dyn PerfModel) {}
+
+    /// Pick the device for one ready task.
+    fn select(&mut self, ctx: &DispatchCtx) -> DeviceId;
+
+    /// True for policies whose decisions are fixed before execution.
+    fn is_offline(&self) -> bool {
+        false
+    }
+}
+
+/// Construct a named scheduler: "eager", "dmda", "gp", "random",
+/// "roundrobin", "heft", "cpu-only", "gpu-only".
+pub fn by_name(name: &str) -> Option<Box<dyn Scheduler>> {
+    Some(match name {
+        "eager" => Box::new(Eager::new()),
+        "dmda" => Box::new(Dmda::new()),
+        "gp" => Box::new(GraphPartition::new(GpConfig::default())),
+        "random" => Box::new(RandomSched::new(7)),
+        "roundrobin" => Box::new(RoundRobin::new()),
+        "heft" => Box::new(Heft::new()),
+        "cpu-only" => Box::new(PinAll::new(0)),
+        "gpu-only" => Box::new(PinAll::new(1)),
+        _ => return None,
+    })
+}
+
+/// The paper's three evaluated policies, in its order.
+pub fn paper_set() -> Vec<Box<dyn Scheduler>> {
+    vec![
+        Box::new(Eager::new()),
+        Box::new(Dmda::new()),
+        Box::new(GraphPartition::new(GpConfig::default())),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::CalibratedModel;
+
+    #[test]
+    fn by_name_known_and_unknown() {
+        for n in ["eager", "dmda", "gp", "random", "roundrobin", "heft", "cpu-only", "gpu-only"] {
+            assert!(by_name(n).is_some(), "missing {n}");
+            assert_eq!(by_name(n).unwrap().name(), n);
+        }
+        assert!(by_name("mystery").is_none());
+    }
+
+    #[test]
+    fn transfer_cost_counts_only_missing_inputs() {
+        let model = CalibratedModel::default();
+        let platform = Platform::paper();
+        let inputs = [
+            InputInfo { bytes: 1_000_000, valid_mask: 0b01 }, // host only
+            InputInfo { bytes: 1_000_000, valid_mask: 0b11 }, // both
+        ];
+        let free = [0.0, 0.0];
+        let ctx = DispatchCtx {
+            task: 0,
+            kernel: KernelKind::Ma,
+            size: 512,
+            ready_ms: 0.0,
+            device_free_ms: &free,
+            inputs: &inputs,
+            platform: &platform,
+            model: &model,
+        };
+        assert_eq!(ctx.transfer_cost_ms(0), 0.0, "all inputs on host");
+        let gpu_cost = ctx.transfer_cost_ms(1);
+        assert!((gpu_cost - model.transfer_time_ms(1_000_000)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn estimated_finish_includes_queue_and_exec() {
+        let model = CalibratedModel::default();
+        let platform = Platform::paper();
+        let inputs: [InputInfo; 0] = [];
+        let free = [5.0, 0.0];
+        let ctx = DispatchCtx {
+            task: 0,
+            kernel: KernelKind::Mm,
+            size: 256,
+            ready_ms: 1.0,
+            device_free_ms: &free,
+            inputs: &inputs,
+            platform: &platform,
+            model: &model,
+        };
+        let f0 = ctx.estimated_finish_ms(0);
+        let exec0 = model.kernel_time_ms(KernelKind::Mm, 256, 0);
+        assert!((f0 - (5.0 + exec0)).abs() < 1e-12, "queued behind worker");
+        let f1 = ctx.estimated_finish_ms(1);
+        let exec1 = model.kernel_time_ms(KernelKind::Mm, 256, 1);
+        assert!((f1 - (1.0 + exec1)).abs() < 1e-12, "starts at ready time");
+    }
+
+    #[test]
+    fn paper_set_order() {
+        let names: Vec<_> = paper_set().iter().map(|s| s.name()).collect();
+        assert_eq!(names, vec!["eager", "dmda", "gp"]);
+    }
+}

@@ -1,0 +1,71 @@
+//! Pin-everything policy: run the whole DAG on one device.
+//!
+//! `gpu-only` is the paper's implicit reference point for large MM (both
+//! dmda and gp converge to it); `cpu-only` bounds the no-accelerator
+//! case. Also the baseline for measuring what any multi-device policy
+//! actually buys.
+
+use super::{DispatchCtx, Scheduler};
+use crate::platform::DeviceId;
+
+/// Pin every task to one fixed device.
+#[derive(Debug)]
+pub struct PinAll {
+    device: DeviceId,
+    name: &'static str,
+}
+
+impl PinAll {
+    pub fn new(device: DeviceId) -> PinAll {
+        let name = match device {
+            0 => "cpu-only",
+            1 => "gpu-only",
+            _ => "pin",
+        };
+        PinAll { device, name }
+    }
+}
+
+impl Scheduler for PinAll {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn select(&mut self, _ctx: &DispatchCtx) -> DeviceId {
+        self.device
+    }
+
+    fn is_offline(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::KernelKind;
+    use crate::perfmodel::CalibratedModel;
+    use crate::platform::Platform;
+
+    #[test]
+    fn always_same_device() {
+        let platform = Platform::paper();
+        let model = CalibratedModel::default();
+        let free = [0.0, 100.0];
+        let ctx = DispatchCtx {
+            task: 3,
+            kernel: KernelKind::Mm,
+            size: 512,
+            ready_ms: 0.0,
+            device_free_ms: &free,
+            inputs: &[],
+            platform: &platform,
+            model: &model,
+        };
+        let mut s = PinAll::new(1);
+        assert_eq!(s.select(&ctx), 1, "pins even when the device is busy");
+        assert_eq!(s.name(), "gpu-only");
+        assert!(s.is_offline());
+        assert_eq!(PinAll::new(0).name(), "cpu-only");
+    }
+}

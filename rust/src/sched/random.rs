@@ -1,0 +1,117 @@
+//! Baseline policies for ablations: uniform-random and round-robin
+//! device choice. Neither consults time or data location; they bound the
+//! "no information" end of the policy space.
+
+use super::{DispatchCtx, Scheduler};
+use crate::platform::DeviceId;
+use crate::util::Pcg32;
+
+/// Uniform-random device choice.
+pub struct RandomSched {
+    rng: Pcg32,
+}
+
+impl RandomSched {
+    pub fn new(seed: u64) -> RandomSched {
+        RandomSched { rng: Pcg32::seeded(seed) }
+    }
+}
+
+impl Scheduler for RandomSched {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn select(&mut self, ctx: &DispatchCtx) -> DeviceId {
+        self.rng.gen_range(ctx.device_free_ms.len() as u32) as DeviceId
+    }
+}
+
+/// Cyclic device choice.
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl RoundRobin {
+    pub fn new() -> RoundRobin {
+        RoundRobin::default()
+    }
+}
+
+impl Scheduler for RoundRobin {
+    fn name(&self) -> &'static str {
+        "roundrobin"
+    }
+
+    fn select(&mut self, ctx: &DispatchCtx) -> DeviceId {
+        let d = self.next % ctx.device_free_ms.len();
+        self.next = self.next.wrapping_add(1);
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::KernelKind;
+    use crate::perfmodel::CalibratedModel;
+    use crate::platform::Platform;
+
+    fn ctx<'a>(
+        free: &'a [f64],
+        platform: &'a Platform,
+        model: &'a CalibratedModel,
+    ) -> DispatchCtx<'a> {
+        DispatchCtx {
+            task: 0,
+            kernel: KernelKind::Ma,
+            size: 64,
+            ready_ms: 0.0,
+            device_free_ms: free,
+            inputs: &[],
+            platform,
+            model,
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let platform = Platform::paper();
+        let model = CalibratedModel::default();
+        let free = [0.0, 0.0];
+        let mut s = RoundRobin::new();
+        let picks: Vec<_> = (0..6).map(|_| s.select(&ctx(&free, &platform, &model))).collect();
+        assert_eq!(picks, vec![0, 1, 0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn random_in_range_and_covers_devices() {
+        let platform = Platform::paper();
+        let model = CalibratedModel::default();
+        let free = [0.0, 0.0];
+        let mut s = RandomSched::new(3);
+        let mut seen = [false; 2];
+        for _ in 0..64 {
+            let d = s.select(&ctx(&free, &platform, &model));
+            assert!(d < 2);
+            seen[d] = true;
+        }
+        assert!(seen[0] && seen[1]);
+    }
+
+    #[test]
+    fn random_deterministic_by_seed() {
+        let platform = Platform::paper();
+        let model = CalibratedModel::default();
+        let free = [0.0, 0.0];
+        let mut a = RandomSched::new(9);
+        let mut b = RandomSched::new(9);
+        for _ in 0..16 {
+            assert_eq!(
+                a.select(&ctx(&free, &platform, &model)),
+                b.select(&ctx(&free, &platform, &model))
+            );
+        }
+    }
+}

@@ -1,0 +1,489 @@
+//! The list-scheduling discrete-event engine.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::time::Instant;
+
+use super::report::{RunReport, TraceEvent};
+use crate::dag::{Dag, KernelKind};
+use crate::data::{DataHandle, Directory, TransferLedger};
+use crate::perfmodel::PerfModel;
+use crate::platform::Platform;
+use crate::sched::{DispatchCtx, InputInfo, Scheduler};
+
+/// Simulation options.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// After the last kernel, transfer every sink output back to host
+    /// memory (results belong to the application on the host).
+    pub return_results_to_host: bool,
+    /// Record per-task trace events.
+    pub collect_trace: bool,
+    /// Number of concurrent bus channels. 1 = the paper's GTX TITAN;
+    /// 2 models Tesla dual copy engines (paper §III: "this feature can
+    /// alleviate data transfer overhead. Taking advantage of this
+    /// feature will be covered in future work").
+    pub bus_channels: usize,
+    /// Transfer/compute overlap: a transfer may start as soon as its
+    /// source datum exists rather than when the consuming task is ready
+    /// (the CUDA-streams technique of the paper's §I / Membarth et al.).
+    pub prefetch: bool,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            return_results_to_host: true,
+            collect_trace: false,
+            bus_channels: 1,
+            prefetch: false,
+        }
+    }
+}
+
+/// Totally ordered f64 for the ready heap (times are finite by
+/// construction).
+#[derive(PartialEq, PartialOrd)]
+struct Ord64(f64);
+impl Eq for Ord64 {}
+#[allow(clippy::derive_ord_xor_partial_ord)]
+impl Ord for Ord64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.partial_cmp(other).unwrap()
+    }
+}
+
+/// Simulate `dag` under `scheduler`. See module docs for fidelity notes.
+pub fn simulate(
+    dag: &Dag,
+    scheduler: &mut dyn Scheduler,
+    platform: &Platform,
+    model: &dyn PerfModel,
+    config: &SimConfig,
+) -> RunReport {
+    let n = dag.node_count();
+    let k = platform.device_count();
+    let host = platform.host_node();
+
+    // --- offline plan ---
+    let t0 = Instant::now();
+    scheduler.plan(dag, platform, model);
+    let plan_ns = t0.elapsed().as_nanos() as u64;
+
+    // --- data handles ---
+    let mut dir = Directory::new();
+    // Output handle per node.
+    let out: Vec<DataHandle> = (0..n)
+        .map(|i| {
+            let sz = dag.node(i).size as u64;
+            dir.alloc_unwritten(4 * sz * sz)
+        })
+        .collect();
+    // Initial host-resident inputs for under-fed kernels (paper §III.B:
+    // all initial data on host).
+    let initial: Vec<Vec<DataHandle>> = (0..n)
+        .map(|i| {
+            let node = dag.node(i);
+            let missing = node.kernel.arity().saturating_sub(dag.in_degree(i));
+            let sz = node.size as u64;
+            (0..missing).map(|_| dir.alloc(4 * sz * sz, host)).collect()
+        })
+        .collect();
+
+    // --- engine state ---
+    let mut worker_free: Vec<Vec<f64>> = platform
+        .devices
+        .iter()
+        .map(|d| vec![0.0; d.workers])
+        .collect();
+    // Bus channels (1 unless modelling dual copy engines).
+    let mut bus: Vec<f64> = vec![0.0; config.bus_channels.max(1)];
+    // Time each datum becomes available at its producer (prefetch mode).
+    let mut avail: Vec<f64> = vec![0.0; dir.len()];
+    let mut ledger = TransferLedger::new();
+    let mut indeg: Vec<usize> = (0..n).map(|i| dag.in_degree(i)).collect();
+    let mut ready_time = vec![0.0f64; n];
+    let mut finish = vec![0.0f64; n];
+    let mut assignments = vec![usize::MAX; n];
+    let mut device_busy = vec![0.0f64; k];
+    let mut tasks_per_device = vec![0usize; k];
+    let mut decision_ns = 0u64;
+    let mut trace = Vec::new();
+
+    // Ready heap ordered by (ready time, node id) for determinism.
+    let mut heap: BinaryHeap<Reverse<(Ord64, usize)>> = BinaryHeap::new();
+    for v in 0..n {
+        if indeg[v] == 0 {
+            heap.push(Reverse((Ord64(0.0), v)));
+        }
+    }
+
+    let mut executed = 0usize;
+    while let Some(Reverse((Ord64(ready), v))) = heap.pop() {
+        executed += 1;
+        let node = dag.node(v);
+
+        // Virtual source kernels: zero time, output = host-resident data.
+        if node.kernel == KernelKind::Source {
+            dir.acquire_write(out[v], host);
+            finish[v] = ready;
+            assignments[v] = host;
+            for &e in dag.out_edges(v) {
+                let w = dag.edge(e).dst;
+                indeg[w] -= 1;
+                ready_time[w] = ready_time[w].max(ready);
+                if indeg[w] == 0 {
+                    heap.push(Reverse((Ord64(ready_time[w]), w)));
+                }
+            }
+            continue;
+        }
+
+        // Inputs: predecessor outputs + initial host buffers.
+        let mut handles: Vec<DataHandle> = dag
+            .in_edges(v)
+            .iter()
+            .map(|&e| out[dag.edge(e).src])
+            .collect();
+        handles.extend(&initial[v]);
+        let inputs: Vec<InputInfo> = handles
+            .iter()
+            .map(|&h| InputInfo { bytes: dir.bytes(h), valid_mask: dir.valid_mask(h) })
+            .collect();
+
+        // Device availability snapshot (earliest-free worker per device).
+        let device_free: Vec<f64> = worker_free
+            .iter()
+            .map(|ws| ws.iter().cloned().fold(f64::INFINITY, f64::min))
+            .collect();
+
+        // --- the scheduling decision ---
+        let ctx = DispatchCtx {
+            task: v,
+            kernel: node.kernel,
+            size: node.size,
+            ready_ms: ready,
+            device_free_ms: &device_free,
+            inputs: &inputs,
+            platform,
+            model,
+        };
+        let t0 = Instant::now();
+        let dev = scheduler.select(&ctx);
+        decision_ns += t0.elapsed().as_nanos() as u64;
+        assert!(dev < k, "scheduler returned invalid device {dev}");
+
+        // --- data acquisition: MSI reads, serialized per bus channel ---
+        let mut data_ready = ready;
+        for &h in &handles {
+            if let Some(src) = dir.acquire_read(h, dev) {
+                let t = model.transfer_time_ms(dir.bytes(h));
+                // Earliest-free channel; with prefetch the copy may begin
+                // as soon as the datum exists at its producer.
+                let ch = (0..bus.len())
+                    .min_by(|&a, &b| bus[a].partial_cmp(&bus[b]).unwrap())
+                    .unwrap();
+                let earliest = if config.prefetch { avail[h.0 as usize] } else { ready };
+                let start = bus[ch].max(earliest);
+                bus[ch] = start + t;
+                ledger.record(src, dev, dir.bytes(h), t);
+                data_ready = data_ready.max(bus[ch]);
+            }
+        }
+        // Output: exclusive write on the executing node.
+        dir.acquire_write(out[v], dev);
+
+        // --- execute on the earliest-free worker ---
+        let (worker, &wfree) = worker_free[dev]
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        let exec = model.kernel_time_ms(node.kernel, node.size, dev);
+        let start = wfree.max(data_ready);
+        let end = start + exec;
+        worker_free[dev][worker] = end;
+        finish[v] = end;
+        avail[out[v].0 as usize] = end;
+        assignments[v] = dev;
+        device_busy[dev] += exec;
+        tasks_per_device[dev] += 1;
+        if config.collect_trace {
+            trace.push(TraceEvent { task: v, device: dev, worker, start_ms: start, end_ms: end });
+        }
+
+        // --- fire successors ---
+        for &e in dag.out_edges(v) {
+            let w = dag.edge(e).dst;
+            indeg[w] -= 1;
+            ready_time[w] = ready_time[w].max(end);
+            if indeg[w] == 0 {
+                heap.push(Reverse((Ord64(ready_time[w]), w)));
+            }
+        }
+    }
+    assert_eq!(executed, n, "cyclic graph or unreachable tasks");
+
+    let mut makespan = finish.iter().cloned().fold(0.0f64, f64::max);
+
+    // --- return results to host ---
+    if config.return_results_to_host {
+        for v in dag.sinks() {
+            if dag.node(v).kernel == KernelKind::Source {
+                continue;
+            }
+            if let Some(src) = dir.acquire_read(out[v], host) {
+                let t = model.transfer_time_ms(dir.bytes(out[v]));
+                let ch = (0..bus.len())
+                    .min_by(|&a, &b| bus[a].partial_cmp(&bus[b]).unwrap())
+                    .unwrap();
+                let start = bus[ch].max(finish[v]);
+                bus[ch] = start + t;
+                ledger.record(src, host, dir.bytes(out[v]), t);
+                makespan = makespan.max(bus[ch]);
+            }
+        }
+    }
+
+    RunReport {
+        scheduler: scheduler.name(),
+        makespan_ms: makespan,
+        ledger,
+        assignments,
+        device_busy_ms: device_busy,
+        tasks_per_device,
+        decision_ns,
+        plan_ns,
+        trace,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::generator::{generate_layered, GeneratorConfig};
+    use crate::dag::workloads;
+    use crate::perfmodel::CalibratedModel;
+    use crate::sched;
+
+    fn run(
+        dag: &Dag,
+        name: &str,
+        config: &SimConfig,
+    ) -> RunReport {
+        let platform = Platform::paper();
+        let model = CalibratedModel::default();
+        let mut s = sched::by_name(name).unwrap();
+        simulate(dag, s.as_mut(), &platform, &model, config)
+    }
+
+    #[test]
+    fn single_task_on_cpu_no_transfers() {
+        let dag = workloads::chain(1, KernelKind::Ma, 256);
+        let r = run(&dag, "cpu-only", &SimConfig::default());
+        let model = CalibratedModel::default();
+        let exec = model.kernel_time_ms(KernelKind::Ma, 256, 0);
+        assert!((r.makespan_ms - exec).abs() < 1e-9);
+        assert_eq!(r.ledger.count, 0, "host-resident end to end");
+        assert_eq!(r.tasks_per_device, vec![1, 0]);
+    }
+
+    #[test]
+    fn single_task_on_gpu_counts_all_transfers() {
+        // 1 MA task pinned to GPU: 2 initial inputs up + 1 result back.
+        let dag = workloads::chain(1, KernelKind::Ma, 256);
+        let r = run(&dag, "gpu-only", &SimConfig::default());
+        assert_eq!(r.ledger.count, 3);
+        assert_eq!(r.ledger.count_pair(0, 1), 2);
+        assert_eq!(r.ledger.count_pair(1, 0), 1);
+    }
+
+    #[test]
+    fn chain_on_gpu_keeps_data_resident() {
+        // 5-task chain pinned to GPU: inputs of later tasks are already
+        // device-resident; transfers = initial loads + final store only.
+        let dag = workloads::chain(5, KernelKind::Ma, 256);
+        let r = run(&dag, "gpu-only", &SimConfig::default());
+        // task0: 2 initial + each later task: 1 initial (arity 2, indeg 1)
+        // = 2 + 4, plus 1 result back.
+        assert_eq!(r.ledger.count, 7);
+    }
+
+    #[test]
+    fn makespan_at_least_critical_path() {
+        let dag = generate_layered(&GeneratorConfig::paper(KernelKind::Mm, 512));
+        let platform = Platform::paper();
+        let model = CalibratedModel::default();
+        for name in ["eager", "dmda", "gp", "random", "roundrobin"] {
+            let r = run(&dag, name, &SimConfig { return_results_to_host: false, collect_trace: false, ..Default::default() });
+            // Lower bound: best-device execution of the critical path.
+            let cp = crate::dag::topo::critical_path(
+                &dag,
+                |v| {
+                    let n = dag.node(v);
+                    model
+                        .kernel_time_ms(n.kernel, n.size, 0)
+                        .min(model.kernel_time_ms(n.kernel, n.size, 1))
+                },
+                |_| 0.0,
+            );
+            assert!(
+                r.makespan_ms >= cp - 1e-9,
+                "{name}: makespan {} below critical path {cp}",
+                r.makespan_ms
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let dag = generate_layered(&GeneratorConfig::paper(KernelKind::Ma, 1024));
+        let a = run(&dag, "dmda", &SimConfig::default());
+        let b = run(&dag, "dmda", &SimConfig::default());
+        assert_eq!(a.makespan_ms, b.makespan_ms);
+        assert_eq!(a.assignments, b.assignments);
+        assert_eq!(a.ledger.count, b.ledger.count);
+    }
+
+    #[test]
+    fn trace_collection_and_no_worker_overlap() {
+        let dag = generate_layered(&GeneratorConfig::paper(KernelKind::Ma, 512));
+        let r = run(&dag, "eager", &SimConfig { return_results_to_host: true, collect_trace: true, ..Default::default() });
+        assert_eq!(r.trace.len(), 38);
+        // No two events on the same (device, worker) may overlap.
+        for a in &r.trace {
+            for b in &r.trace {
+                if (a.task != b.task) && a.device == b.device && a.worker == b.worker {
+                    assert!(
+                        a.end_ms <= b.start_ms + 1e-9 || b.end_ms <= a.start_ms + 1e-9,
+                        "overlap: {a:?} vs {b:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dependencies_respected_in_trace() {
+        let dag = workloads::chain(4, KernelKind::Mm, 256);
+        let r = run(&dag, "dmda", &SimConfig { return_results_to_host: false, collect_trace: true, ..Default::default() });
+        let mut start = vec![0.0; 4];
+        let mut end = vec![0.0; 4];
+        for ev in &r.trace {
+            start[ev.task] = ev.start_ms;
+            end[ev.task] = ev.end_ms;
+        }
+        for i in 0..3 {
+            assert!(end[i] <= start[i + 1] + 1e-9, "task {i} must finish first");
+        }
+    }
+
+    #[test]
+    fn virtual_source_free_and_on_host() {
+        let mut cfg = GeneratorConfig::paper(KernelKind::Ma, 512);
+        cfg.with_virtual_source = true;
+        let dag = generate_layered(&cfg);
+        let r = run(&dag, "dmda", &SimConfig::default());
+        let src = dag.node_by_name("__source").unwrap();
+        assert_eq!(r.assignments[src], 0, "source output lives on host");
+        // 38 real kernels executed on workers (the source is free).
+        assert_eq!(r.tasks_per_device.iter().sum::<usize>(), 38);
+    }
+
+    #[test]
+    fn eager_slower_than_dmda_for_large_mm() {
+        // The Fig 6 headline shape, as a unit test.
+        let dag = generate_layered(&GeneratorConfig::paper(KernelKind::Mm, 1024));
+        let e = run(&dag, "eager", &SimConfig::default());
+        let d = run(&dag, "dmda", &SimConfig::default());
+        assert!(
+            e.makespan_ms > 1.5 * d.makespan_ms,
+            "eager {} should lose clearly to dmda {}",
+            e.makespan_ms,
+            d.makespan_ms
+        );
+    }
+
+    #[test]
+    fn gp_minimizes_transfers_for_ma() {
+        // The Fig 5 discussion shape: transfers(eager) > transfers(dmda)
+        // >= transfers(gp).
+        let dag = generate_layered(&GeneratorConfig::paper(KernelKind::Ma, 1024));
+        let e = run(&dag, "eager", &SimConfig::default());
+        let d = run(&dag, "dmda", &SimConfig::default());
+        let g = run(&dag, "gp", &SimConfig::default());
+        assert!(
+            e.ledger.count > d.ledger.count,
+            "eager {} vs dmda {}",
+            e.ledger.count,
+            d.ledger.count
+        );
+        assert!(
+            d.ledger.count >= g.ledger.count,
+            "dmda {} vs gp {}",
+            d.ledger.count,
+            g.ledger.count
+        );
+    }
+
+    #[test]
+    fn dual_copy_engines_never_hurt_and_help_ma() {
+        // Paper §III future work: dual copy engines alleviate transfer
+        // overhead — strongest on the transfer-bound MA task.
+        // Pinned policies keep the same schedule, so the comparison is
+        // apples-to-apples (online policies may legitimately re-decide
+        // under the changed timing).
+        let dag = generate_layered(&GeneratorConfig::paper(KernelKind::Ma, 1024));
+        let base = SimConfig::default();
+        let dual = SimConfig { bus_channels: 2, ..Default::default() };
+        for name in ["gp", "gpu-only"] {
+            let b = run(&dag, name, &base);
+            let d = run(&dag, name, &dual);
+            assert!(d.makespan_ms <= b.makespan_ms + 1e-9, "{name} must not regress");
+            assert_eq!(d.ledger.count, b.ledger.count, "{name}: same transfers");
+            assert_eq!(d.assignments, b.assignments, "{name}: same pins");
+        }
+        let b = run(&dag, "gp", &base);
+        let d = run(&dag, "gp", &dual);
+        assert!(d.makespan_ms < 0.95 * b.makespan_ms, "gp MA must benefit");
+    }
+
+    #[test]
+    fn prefetch_never_hurts() {
+        for kernel in [KernelKind::Ma, KernelKind::Mm] {
+            let dag = generate_layered(&GeneratorConfig::paper(kernel, 1024));
+            let base = SimConfig::default();
+            let pf = SimConfig { prefetch: true, ..Default::default() };
+            for name in ["gp", "gpu-only", "cpu-only"] {
+                let b = run(&dag, name, &base);
+                let p = run(&dag, name, &pf);
+                assert!(p.makespan_ms <= b.makespan_ms + 1e-9, "{name}/{kernel}");
+            }
+        }
+    }
+
+    #[test]
+    fn extra_channels_bounded_by_transfer_count() {
+        // With as many channels as transfers, the bus is never the
+        // bottleneck; more channels change nothing further.
+        let dag = generate_layered(&GeneratorConfig::paper(KernelKind::Ma, 512));
+        let a = run(&dag, "gp", &SimConfig { bus_channels: 64, ..Default::default() });
+        let b = run(&dag, "gp", &SimConfig { bus_channels: 128, ..Default::default() });
+        assert!((a.makespan_ms - b.makespan_ms).abs() < 1e-9);
+    }
+
+    #[test]
+    fn busy_time_consistent_with_assignments() {
+        let dag = generate_layered(&GeneratorConfig::paper(KernelKind::Mm, 512));
+        let r = run(&dag, "gp", &SimConfig::default());
+        let model = CalibratedModel::default();
+        let mut expect = vec![0.0f64; 2];
+        for (v, &d) in r.assignments.iter().enumerate() {
+            let n = dag.node(v);
+            expect[d] += model.kernel_time_ms(n.kernel, n.size, d);
+        }
+        for d in 0..2 {
+            assert!((expect[d] - r.device_busy_ms[d]).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,100 @@
+//! Run reports shared by the simulator and the real execution engine.
+
+use crate::data::TransferLedger;
+use crate::platform::DeviceId;
+
+/// One task execution in the timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub task: usize,
+    pub device: DeviceId,
+    pub worker: usize,
+    pub start_ms: f64,
+    pub end_ms: f64,
+}
+
+/// Outcome of one scheduled run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    /// Scheduler name ("eager" / "dmda" / "gp" / ...).
+    pub scheduler: &'static str,
+    /// Total completion time (ms, virtual for sim / measured for real).
+    pub makespan_ms: f64,
+    /// All bus transfers (the paper's "data transfer frequency").
+    pub ledger: TransferLedger,
+    /// Device chosen per task.
+    pub assignments: Vec<DeviceId>,
+    /// Busy time per device (sum over its workers).
+    pub device_busy_ms: Vec<f64>,
+    /// Tasks executed per device.
+    pub tasks_per_device: Vec<usize>,
+    /// Wall-clock nanoseconds spent inside `Scheduler::select`.
+    pub decision_ns: u64,
+    /// Wall-clock nanoseconds spent inside `Scheduler::plan`.
+    pub plan_ns: u64,
+    /// Per-task execution trace.
+    pub trace: Vec<TraceEvent>,
+}
+
+impl RunReport {
+    /// Utilization per device = busy / (makespan * workers).
+    pub fn utilization(&self, workers_per_device: &[usize]) -> Vec<f64> {
+        self.device_busy_ms
+            .iter()
+            .zip(workers_per_device)
+            .map(|(&busy, &w)| {
+                if self.makespan_ms <= 0.0 {
+                    0.0
+                } else {
+                    busy / (self.makespan_ms * w as f64)
+                }
+            })
+            .collect()
+    }
+
+    /// Scheduling overhead per task in nanoseconds (paper §IV.D metric).
+    pub fn decision_ns_per_task(&self) -> f64 {
+        let n = self.assignments.len().max(1);
+        self.decision_ns as f64 / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn utilization_math() {
+        let r = RunReport {
+            scheduler: "test",
+            makespan_ms: 10.0,
+            ledger: TransferLedger::new(),
+            assignments: vec![0, 1],
+            device_busy_ms: vec![15.0, 5.0],
+            tasks_per_device: vec![1, 1],
+            decision_ns: 2000,
+            plan_ns: 0,
+            trace: vec![],
+        };
+        let u = r.utilization(&[3, 1]);
+        assert!((u[0] - 0.5).abs() < 1e-12);
+        assert!((u[1] - 0.5).abs() < 1e-12);
+        assert!((r.decision_ns_per_task() - 1000.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_makespan_guard() {
+        let r = RunReport {
+            scheduler: "test",
+            makespan_ms: 0.0,
+            ledger: TransferLedger::new(),
+            assignments: vec![],
+            device_busy_ms: vec![0.0],
+            tasks_per_device: vec![0],
+            decision_ns: 0,
+            plan_ns: 0,
+            trace: vec![],
+        };
+        assert_eq!(r.utilization(&[1]), vec![0.0]);
+    }
+}

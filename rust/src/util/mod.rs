@@ -1,0 +1,8 @@
+//! Small self-contained utilities: deterministic PRNG, statistics,
+//! and a miniature property-testing harness used across the test suite.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Pcg32;

@@ -1,0 +1,168 @@
+//! Integration tests across the full offline pipeline:
+//! DOT text -> DAG -> weights -> partition -> pin -> simulate -> metrics,
+//! plus the paper's figure shapes end-to-end.
+
+use hetsched::dag::{dot, generate_layered, metis_io, GeneratorConfig, KernelKind};
+use hetsched::perfmodel::{CalibratedModel, PerfModel};
+use hetsched::platform::Platform;
+use hetsched::sched::{self, GpConfig, GraphPartition, Scheduler as _};
+use hetsched::sim::{simulate, SimConfig};
+
+fn run(dag: &hetsched::dag::Dag, name: &str) -> hetsched::sim::RunReport {
+    let platform = Platform::paper();
+    let model = CalibratedModel::paper();
+    let mut s = sched::by_name(name).unwrap();
+    simulate(dag, s.as_mut(), &platform, &model, &SimConfig::default())
+}
+
+#[test]
+fn dot_to_schedule_pipeline() {
+    // A user-authored DOT file goes all the way to a scheduled run.
+    let src = r#"
+        digraph pipeline {
+            load1 [kernel=ma, size=512];
+            load2 [kernel=ma, size=512];
+            gemm1 [kernel=mm, size=512];
+            gemm2 [kernel=mm, size=512];
+            reduce [kernel=ma, size=512];
+            load1 -> gemm1; load2 -> gemm1;
+            load1 -> gemm2; load2 -> gemm2;
+            gemm1 -> reduce; gemm2 -> reduce;
+        }
+    "#;
+    let parsed = dot::parse(src, 512).unwrap();
+    for name in ["eager", "dmda", "gp", "heft"] {
+        let r = run(&parsed.dag, name);
+        assert_eq!(r.assignments.len(), 5, "{name}");
+        assert!(r.makespan_ms > 0.0, "{name}");
+    }
+}
+
+#[test]
+fn partition_roundtrips_through_dot() {
+    // gp plan -> colored DOT -> reparse -> same pins.
+    let dag = generate_layered(&GeneratorConfig::paper(KernelKind::Ma, 1024));
+    let platform = Platform::paper();
+    let model = CalibratedModel::paper();
+    let mut gp = GraphPartition::new(GpConfig::default());
+    gp.plan(&dag, &platform, &model);
+    let text = dot::write(&dag, "g", Some(gp.parts()));
+    let reparsed = dot::parse(&text, 1024).unwrap();
+    for (id, node) in dag.nodes() {
+        let rid = reparsed.dag.node_by_name(&node.name).unwrap();
+        assert_eq!(reparsed.parts[rid], Some(gp.parts()[id]));
+        assert_eq!(reparsed.dag.node(rid).kernel, node.kernel);
+        assert_eq!(reparsed.dag.node(rid).size, node.size);
+    }
+}
+
+#[test]
+fn metis_file_roundtrip_of_weighted_paper_graph() {
+    // The paper's format-translator path: weighted DAG -> METIS file text
+    // -> parse -> identical structure.
+    let dag = generate_layered(&GeneratorConfig::paper(KernelKind::Mm, 512));
+    let model = CalibratedModel::paper();
+    let g = metis_io::dag_to_metis(
+        &dag,
+        |v| {
+            let n = dag.node(v);
+            (model.kernel_time_ms(n.kernel, n.size, 1) * 1000.0) as i64
+        },
+        |e| (model.transfer_time_ms(dag.edge(e).bytes) * 1000.0) as i64,
+    );
+    let text = metis_io::write_metis(&g);
+    let g2 = metis_io::parse_metis(&text).unwrap();
+    assert_eq!(g, g2);
+}
+
+#[test]
+fn fig5_shape_ma_policies_close() {
+    for n in [512u32, 1024, 2048] {
+        let dag = generate_layered(&GeneratorConfig::paper(KernelKind::Ma, n));
+        let e = run(&dag, "eager").makespan_ms;
+        let d = run(&dag, "dmda").makespan_ms;
+        let g = run(&dag, "gp").makespan_ms;
+        let max = e.max(d).max(g);
+        let min = e.min(d).min(g);
+        assert!(max / min < 2.0, "MA@{n}: {e} {d} {g} should be comparable");
+    }
+}
+
+#[test]
+fn fig6_shape_eager_loses_dmda_equals_gp() {
+    for n in [512u32, 1024, 2048] {
+        let dag = generate_layered(&GeneratorConfig::paper(KernelKind::Mm, n));
+        let e = run(&dag, "eager").makespan_ms;
+        let d = run(&dag, "dmda").makespan_ms;
+        let g = run(&dag, "gp").makespan_ms;
+        assert!(e > 2.0 * g, "MM@{n}: eager {e} must lose to gp {g}");
+        assert!((d - g).abs() / g < 0.15, "MM@{n}: dmda {d} ~= gp {g}");
+    }
+}
+
+#[test]
+fn gp_transfer_minimality_over_sweep() {
+    let mut totals = [0u64; 3];
+    for n in [256u32, 512, 1024, 2048] {
+        let dag = generate_layered(&GeneratorConfig::paper(KernelKind::Ma, n));
+        for (i, name) in ["eager", "dmda", "gp"].iter().enumerate() {
+            totals[i] += run(&dag, name).ledger.count;
+        }
+    }
+    assert!(totals[2] < totals[0], "gp {totals:?} must beat eager on transfers");
+    assert!(totals[2] < totals[1], "gp {totals:?} must beat dmda on transfers");
+}
+
+#[test]
+fn gp_mm_large_all_gpu_formula1() {
+    let dag = generate_layered(&GeneratorConfig::paper(KernelKind::Mm, 2048));
+    let r = run(&dag, "gp");
+    assert!(r.tasks_per_device[0] <= 1, "paper: CPU workload almost 0");
+    // dmda makes the same decision.
+    let d = run(&dag, "dmda");
+    assert_eq!(d.tasks_per_device[0], 0);
+}
+
+#[test]
+fn tri_device_pipeline_works() {
+    let platform = Platform::tri_device();
+    let model = CalibratedModel::tri_device();
+    let dag = generate_layered(&GeneratorConfig::scaled(120, KernelKind::Ma, 1024, 3));
+    for name in ["eager", "dmda", "gp"] {
+        let mut s = sched::by_name(name).unwrap();
+        let r = simulate(&dag, s.as_mut(), &platform, &model, &SimConfig::default());
+        assert_eq!(r.tasks_per_device.iter().sum::<usize>(), 120, "{name}");
+        assert_eq!(r.tasks_per_device.len(), 3);
+    }
+}
+
+#[test]
+fn chrome_trace_of_real_pipeline_parses() {
+    let dag = generate_layered(&GeneratorConfig::paper(KernelKind::Mm, 512));
+    let platform = Platform::paper();
+    let model = CalibratedModel::paper();
+    let mut s = sched::by_name("gp").unwrap();
+    let cfg = SimConfig { return_results_to_host: true, collect_trace: true, ..Default::default() };
+    let r = simulate(&dag, s.as_mut(), &platform, &model, &cfg);
+    let trace = hetsched::metrics::chrome_trace(&r, &platform);
+    let v = hetsched::util::json::parse(&trace).unwrap();
+    assert_eq!(v.as_arr().unwrap().len(), 38);
+}
+
+#[test]
+fn scheduler_overhead_shape() {
+    // §IV.D: gp select is a lookup; its per-task decision time must not
+    // exceed dmda's by more than noise (compare medians over runs).
+    let dag = generate_layered(&GeneratorConfig::scaled(1000, KernelKind::Mm, 512, 9));
+    let med = |name: &str| {
+        let mut xs: Vec<f64> = (0..7).map(|_| run(&dag, name).decision_ns_per_task()).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs[3]
+    };
+    let gp = med("gp");
+    let dmda = med("dmda");
+    assert!(
+        gp <= dmda * 3.0 + 200.0,
+        "gp per-task decision ({gp} ns) should be trivial vs dmda ({dmda} ns)"
+    );
+}

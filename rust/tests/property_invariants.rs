@@ -1,0 +1,242 @@
+//! Randomized property tests over coordinator/scheduler/partitioner
+//! invariants (proptest is unavailable offline; the in-tree PCG + forall
+//! loop plays its role — every failure prints the offending seed).
+
+use hetsched::dag::{generate_layered, metis_io, topo, Dag, GeneratorConfig, KernelKind};
+use hetsched::partition::{partition, quality, PartitionConfig};
+use hetsched::perfmodel::{CalibratedModel, PerfModel};
+use hetsched::platform::Platform;
+use hetsched::sched;
+use hetsched::sim::{simulate, SimConfig};
+use hetsched::util::Pcg32;
+
+const SCHEDULERS: [&str; 7] = ["eager", "dmda", "gp", "heft", "random", "roundrobin", "gpu-only"];
+
+fn random_dag(rng: &mut Pcg32) -> Dag {
+    let kernels = rng.gen_range_usize(2, 120);
+    let kernel = *rng.choose(&[KernelKind::Ma, KernelKind::Mm, KernelKind::MmAdd]);
+    let size = *rng.choose(&[64u32, 256, 512, 1024, 2048]);
+    let mut cfg = GeneratorConfig::scaled(kernels, kernel, size, rng.next_u64());
+    // Vary density within feasibility.
+    cfg.edges = cfg.edges.min(kernels * (kernels - 1) / 4).max(kernels.saturating_sub(1));
+    generate_layered(&cfg)
+}
+
+/// Every schedule respects dependencies, assigns all tasks, and never
+/// beats the critical-path lower bound.
+#[test]
+fn forall_schedules_are_feasible_and_bounded() {
+    let platform = Platform::paper();
+    let model = CalibratedModel::paper();
+    let mut rng = Pcg32::seeded(0xFEED);
+    for trial in 0..40 {
+        let seed_note = format!("trial {trial}");
+        let dag = random_dag(&mut rng);
+        let cp = topo::critical_path(
+            &dag,
+            |v| {
+                let n = dag.node(v);
+                model
+                    .kernel_time_ms(n.kernel, n.size, 0)
+                    .min(model.kernel_time_ms(n.kernel, n.size, 1))
+            },
+            |_| 0.0,
+        );
+        for name in SCHEDULERS {
+            let mut s = sched::by_name(name).unwrap();
+            let cfg = SimConfig { return_results_to_host: false, collect_trace: true, ..Default::default() };
+            let r = simulate(&dag, s.as_mut(), &platform, &model, &cfg);
+            assert!(
+                r.makespan_ms >= cp - 1e-9,
+                "{seed_note} {name}: makespan {} < critical path {cp}",
+                r.makespan_ms
+            );
+            assert!(r.assignments.iter().all(|&d| d < 2), "{seed_note} {name}");
+            // Trace respects every edge.
+            let mut end = vec![0.0f64; dag.node_count()];
+            let mut start = vec![0.0f64; dag.node_count()];
+            for ev in &r.trace {
+                start[ev.task] = ev.start_ms;
+                end[ev.task] = ev.end_ms;
+            }
+            for (_, e) in dag.edges() {
+                assert!(
+                    end[e.src] <= start[e.dst] + 1e-9,
+                    "{seed_note} {name}: edge {}->{} violated",
+                    e.src,
+                    e.dst
+                );
+            }
+        }
+    }
+}
+
+/// Transfer counts are bounded by the structural maximum: every input
+/// fetched once per consumer plus one write-back per sink.
+#[test]
+fn forall_transfer_counts_bounded() {
+    let platform = Platform::paper();
+    let model = CalibratedModel::paper();
+    let mut rng = Pcg32::seeded(0xBEEF);
+    for trial in 0..30 {
+        let dag = random_dag(&mut rng);
+        let max_inputs: usize = dag
+            .nodes()
+            .map(|(v, n)| dag.in_degree(v).max(n.kernel.arity()))
+            .sum();
+        let bound = (max_inputs + dag.sinks().len()) as u64;
+        for name in SCHEDULERS {
+            let mut s = sched::by_name(name).unwrap();
+            let r = simulate(&dag, s.as_mut(), &platform, &model, &SimConfig::default());
+            assert!(
+                r.ledger.count <= bound,
+                "trial {trial} {name}: {} transfers exceeds bound {bound}",
+                r.ledger.count
+            );
+        }
+    }
+}
+
+/// Pinning everything on one device yields zero inter-kernel transfers
+/// (only initial loads + final stores), for any DAG.
+#[test]
+fn forall_single_device_transfer_floor() {
+    let platform = Platform::paper();
+    let model = CalibratedModel::paper();
+    let mut rng = Pcg32::seeded(0xCAFE);
+    for _ in 0..20 {
+        let dag = random_dag(&mut rng);
+        let mut s = sched::by_name("cpu-only").unwrap();
+        let r = simulate(&dag, s.as_mut(), &platform, &model, &SimConfig::default());
+        assert_eq!(r.ledger.count, 0, "cpu-only must never touch the bus");
+        let mut s = sched::by_name("gpu-only").unwrap();
+        let r = simulate(&dag, s.as_mut(), &platform, &model, &SimConfig::default());
+        // gpu-only: initial loads (missing-arity inputs of entry kernels
+        // + all initial buffers) + one write-back per sink; inter-kernel
+        // edges stay device-resident.
+        let initial_loads: usize = dag
+            .nodes()
+            .map(|(v, n)| n.kernel.arity().saturating_sub(dag.in_degree(v)))
+            .sum();
+        let expected = (initial_loads + dag.sinks().len()) as u64;
+        assert_eq!(r.ledger.count, expected, "gpu-only transfer floor");
+    }
+}
+
+/// The partitioner always returns a complete, in-range partition whose
+/// reported cut matches a from-scratch recount, for random graphs,
+/// random k and random targets.
+#[test]
+fn forall_partitions_consistent() {
+    let mut rng = Pcg32::seeded(0xD00D);
+    for trial in 0..40 {
+        let n = rng.gen_range_usize(1, 400);
+        // Random connected-ish graph.
+        let mut adj: Vec<Vec<(usize, i64)>> = vec![Vec::new(); n];
+        for v in 1..n {
+            let u = rng.gen_range_usize(0, v);
+            let w = 1 + rng.gen_range(20) as i64;
+            adj[v].push((u, w));
+            adj[u].push((v, w));
+        }
+        for _ in 0..n / 2 {
+            let a = rng.gen_range_usize(0, n);
+            let b = rng.gen_range_usize(0, n);
+            if a != b && !adj[a].iter().any(|&(x, _)| x == b) {
+                let w = 1 + rng.gen_range(20) as i64;
+                adj[a].push((b, w));
+                adj[b].push((a, w));
+            }
+        }
+        let vwgt: Vec<i64> = (0..n).map(|_| 1 + rng.gen_range(9) as i64).collect();
+        let g = metis_io::MetisGraph { vwgt, adj };
+
+        let k = rng.gen_range_usize(1, 5.min(n + 1));
+        let targets: Option<Vec<f64>> = if rng.gen_bool(0.5) {
+            let raw: Vec<f64> = (0..k).map(|_| 0.05 + rng.gen_f64()).collect();
+            let s: f64 = raw.iter().sum();
+            Some(raw.iter().map(|x| x / s).collect())
+        } else {
+            None
+        };
+        let cfg = PartitionConfig { k, targets, seed: rng.next_u64(), ..Default::default() };
+        let res = partition(&g, &cfg);
+        assert_eq!(res.parts.len(), n, "trial {trial}");
+        assert!(res.parts.iter().all(|&p| p < k), "trial {trial}: part out of range");
+        assert_eq!(
+            res.edge_cut,
+            quality::edge_cut(&g, &res.parts),
+            "trial {trial}: reported cut must match recount"
+        );
+        let w = quality::part_weights(&g, &res.parts, k);
+        assert_eq!(w, res.part_weights, "trial {trial}");
+        assert_eq!(w.iter().sum::<i64>(), g.vwgt.iter().sum::<i64>());
+    }
+}
+
+/// Fixed-vertex pins are always honored.
+#[test]
+fn forall_fixed_vertices_respected() {
+    let mut rng = Pcg32::seeded(0xF17ED);
+    for trial in 0..25 {
+        let n = rng.gen_range_usize(4, 200);
+        let mut adj: Vec<Vec<(usize, i64)>> = vec![Vec::new(); n];
+        for v in 1..n {
+            let u = rng.gen_range_usize(0, v);
+            adj[v].push((u, 1 + rng.gen_range(8) as i64));
+            let w = adj[v][adj[v].len() - 1].1;
+            adj[u].push((v, w));
+        }
+        let g = metis_io::MetisGraph { vwgt: vec![1; n], adj };
+        let mut fixed = vec![-1i32; n];
+        for _ in 0..rng.gen_range_usize(1, 1 + n / 4) {
+            let v = rng.gen_range_usize(0, n);
+            fixed[v] = rng.gen_range(2) as i32;
+        }
+        let cfg = PartitionConfig { fixed: Some(fixed.clone()), seed: trial, ..Default::default() };
+        let res = partition(&g, &cfg);
+        for v in 0..n {
+            if fixed[v] >= 0 {
+                assert_eq!(res.parts[v], fixed[v] as usize, "trial {trial}: pin violated at {v}");
+            }
+        }
+    }
+}
+
+/// DOT writer output always reparses to an isomorphic graph.
+#[test]
+fn forall_dot_roundtrip() {
+    let mut rng = Pcg32::seeded(0xD07);
+    for _ in 0..25 {
+        let dag = random_dag(&mut rng);
+        let text = hetsched::dag::dot::write(&dag, "g", None);
+        let p = hetsched::dag::dot::parse(&text, 1).unwrap();
+        assert_eq!(p.dag.node_count(), dag.node_count());
+        assert_eq!(p.dag.edge_count(), dag.edge_count());
+        for (id, n) in dag.nodes() {
+            let rid = p.dag.node_by_name(&n.name).unwrap();
+            assert_eq!(p.dag.node(rid).kernel, n.kernel);
+            assert_eq!(p.dag.node(rid).size, n.size);
+            let _ = id;
+        }
+    }
+}
+
+/// Workload ratios always form a probability vector, and Formula (1)
+/// holds pairwise for two devices.
+#[test]
+fn forall_formula1_probability_vector() {
+    let model = CalibratedModel::paper();
+    let platform = Platform::paper();
+    let mut rng = Pcg32::seeded(0xF0);
+    for _ in 0..50 {
+        let kernel = *rng.choose(&[KernelKind::Ma, KernelKind::Mm, KernelKind::MmAdd]);
+        let n = 32 + rng.gen_range(4000);
+        let r = model.workload_ratios(kernel, n, &platform);
+        assert!((r.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(r.iter().all(|&x| (0.0..=1.0).contains(&x)));
+        let t0 = model.kernel_time_ms(kernel, n, 0);
+        let t1 = model.kernel_time_ms(kernel, n, 1);
+        assert!((r[0] - t1 / (t0 + t1)).abs() < 1e-9, "Formula (1) violated");
+    }
+}

@@ -1,0 +1,98 @@
+//! Real-execution integration: the AOT artifacts run through PJRT under
+//! every scheduler with verified numerics; pinned policies' transfer
+//! ledgers match the simulator exactly. Tests no-op (pass trivially)
+//! when `make artifacts` has not been run.
+
+use std::path::{Path, PathBuf};
+
+use hetsched::coordinator::{measure_kernels, ExecEngine, ExecOptions};
+use hetsched::dag::{generate_layered, workloads, GeneratorConfig, KernelKind};
+use hetsched::perfmodel::{CalibratedModel, MeasuredModel, PerfModel};
+use hetsched::platform::Platform;
+use hetsched::runtime::{KernelRuntime, RuntimeService};
+use hetsched::sched;
+use hetsched::sim::{simulate, SimConfig};
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn paper_task_real_vs_sim_transfer_agreement() {
+    let Some(dir) = artifacts() else { return };
+    let svc = RuntimeService::spawn(&dir).unwrap();
+    let engine = ExecEngine::new(svc.clone(), Platform::paper());
+    let model = CalibratedModel::paper();
+    for kernel in [KernelKind::Ma, KernelKind::Mm] {
+        let dag = generate_layered(&GeneratorConfig::paper(kernel, 64));
+        for name in ["gp", "gpu-only", "cpu-only"] {
+            let mut s = sched::by_name(name).unwrap();
+            let real = engine.run(&dag, s.as_mut(), &model, &ExecOptions::default()).unwrap();
+            let mut s = sched::by_name(name).unwrap();
+            let sim = simulate(&dag, s.as_mut(), &Platform::paper(), &model, &SimConfig::default());
+            assert_eq!(real.assignments, sim.assignments, "{kernel}/{name}");
+            assert_eq!(real.ledger.count, sim.ledger.count, "{kernel}/{name}");
+            assert_eq!(real.ledger.bytes, sim.ledger.bytes, "{kernel}/{name}");
+        }
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn online_policies_verify_on_all_workloads() {
+    let Some(dir) = artifacts() else { return };
+    let svc = RuntimeService::spawn(&dir).unwrap();
+    let engine = ExecEngine::new(svc.clone(), Platform::paper());
+    let model = CalibratedModel::paper();
+    let dags = [
+        workloads::chain(6, KernelKind::Mm, 64),
+        workloads::fork_join(8, KernelKind::Ma, 128),
+        workloads::stencil(3, 3, 64),
+        workloads::cholesky(3, 64),
+        workloads::montage(4, 64),
+    ];
+    for dag in &dags {
+        for name in ["eager", "dmda", "heft"] {
+            let mut s = sched::by_name(name).unwrap();
+            // verify=true raises on any numeric mismatch.
+            engine.run(dag, s.as_mut(), &model, &ExecOptions::default()).unwrap();
+        }
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn measured_model_drives_gp_plan() {
+    // The paper's full offline loop: measure kernels -> weighted graph ->
+    // partition -> run. With identical per-device measurements the ratio
+    // is 0.5/0.5 and gp must split the work.
+    let Some(dir) = artifacts() else { return };
+    let rt = KernelRuntime::open(&dir).unwrap();
+    let measured: MeasuredModel = measure_kernels(&rt, 2, 2).unwrap();
+    let platform = Platform::paper();
+    let dag = generate_layered(&GeneratorConfig::paper(KernelKind::Mm, 128));
+    let r = measured.workload_ratios(KernelKind::Mm, 128, &platform);
+    assert!((r[0] - 0.5).abs() < 1e-6, "identical measurements -> even split");
+    let mut gp = sched::GraphPartition::new(sched::GpConfig::default());
+    use hetsched::sched::Scheduler as _;
+    gp.plan(&dag, &platform, &measured);
+    let cpu = gp.parts().iter().filter(|&&p| p == 0).count();
+    let gpu = gp.parts().iter().filter(|&&p| p == 1).count();
+    assert!(cpu > 5 && gpu > 5, "even ratio must split work: {cpu}/{gpu}");
+}
+
+#[test]
+fn different_seeds_give_different_data_but_both_verify() {
+    let Some(dir) = artifacts() else { return };
+    let svc = RuntimeService::spawn(&dir).unwrap();
+    let engine = ExecEngine::new(svc.clone(), Platform::paper());
+    let model = CalibratedModel::paper();
+    let dag = workloads::chain(3, KernelKind::Ma, 64);
+    for seed in [1u64, 2, 3] {
+        let mut s = sched::by_name("dmda").unwrap();
+        let opts = ExecOptions { seed, ..Default::default() };
+        engine.run(&dag, s.as_mut(), &model, &opts).unwrap();
+    }
+    svc.shutdown();
+}
