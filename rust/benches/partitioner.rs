@@ -2,15 +2,26 @@
 //! multilevel partitioner vs graph size (DESIGN.md §6 L3 target: ≤ 100 ms
 //! for 1e5-node graphs), plus a quality sanity ratio against random
 //! assignment.
+//!
+//! Besides the human-readable tables, the bench emits
+//! `bench_results/BENCH_partitioner.json` — machine-readable rows
+//! (graph size → wall ms, edge cut, cut-vs-random ratio, balance) plus
+//! the workspace phase-timer breakdown — so the perf trajectory is
+//! tracked across PRs.
+
+use std::fmt::Write as _;
 
 use hetsched::benchkit::{bench, preamble, BenchOpts};
 use hetsched::dag::metis_io::MetisGraph;
-use hetsched::partition::{partition, quality, PartitionConfig};
+use hetsched::partition::{partition_with, quality, PartitionConfig, PartitionWorkspace};
 use hetsched::platform::Platform;
 use hetsched::report::{fmt_ms, fmt_ratio, Table};
 use hetsched::util::Pcg32;
 
 /// Random 2D-grid-plus-chords graph (partitionable but not trivial).
+/// Construction is kept identical to the seed revision so cut numbers
+/// stay comparable across PRs; the nested-adjacency staging is converted
+/// to CSR once, outside the timed region.
 fn make_graph(n: usize, seed: u64) -> MetisGraph {
     let cols = (n as f64).sqrt().ceil() as usize;
     let mut adj: Vec<Vec<(usize, i64)>> = vec![Vec::new(); n];
@@ -35,7 +46,7 @@ fn make_graph(n: usize, seed: u64) -> MetisGraph {
         let b = rng.gen_range(n as u32) as usize;
         add(a, b, 1, &mut adj);
     }
-    MetisGraph { vwgt: vec![1; n], adj }
+    MetisGraph::from_adj(vec![1; n], adj)
 }
 
 fn random_cut(g: &MetisGraph, seed: u64) -> i64 {
@@ -44,9 +55,21 @@ fn random_cut(g: &MetisGraph, seed: u64) -> i64 {
     quality::edge_cut(g, &parts)
 }
 
+struct ScaleRow {
+    n: usize,
+    edges: usize,
+    time_ms: f64,
+    cut: i64,
+    cut_random_ratio: f64,
+    balance: f64,
+}
+
 fn main() {
     preamble("partitioner — multilevel bisection speed & quality", &Platform::paper());
 
+    let mut ws = PartitionWorkspace::new();
+    let mut phase_timer = hetsched::benchkit::PhaseTimer::new();
+    let mut rows: Vec<ScaleRow> = Vec::new();
     let mut table = Table::new(
         "partitioner scaling (k=2, uniform targets)",
         &["vertices", "edges", "time_ms", "cut", "cut/random", "balance"],
@@ -55,19 +78,28 @@ fn main() {
         let g = make_graph(n, 3);
         let cfg = PartitionConfig::default();
         let opts = BenchOpts { warmup_iters: 1, iters: if n >= 100_000 { 3 } else { 10 } };
-        let summary = bench(&opts, || partition(&g, &cfg));
-        let res = partition(&g, &cfg);
+        let summary = bench(&opts, || partition_with(&g, &cfg, &mut ws));
+        ws.timer.clear();
+        let res = partition_with(&g, &cfg, &mut ws);
         let rnd = random_cut(&g, 99).max(1);
         let total: i64 = res.part_weights.iter().sum();
-        let balance = res.part_weights.iter().cloned().fold(0, i64::max) as f64
-            / (total as f64 / 2.0);
+        let balance =
+            res.part_weights.iter().cloned().fold(0, i64::max) as f64 / (total as f64 / 2.0);
+        let row = ScaleRow {
+            n,
+            edges: g.edge_count(),
+            time_ms: summary.mean,
+            cut: res.edge_cut,
+            cut_random_ratio: res.edge_cut as f64 / rnd as f64,
+            balance,
+        };
         table.row(vec![
             n.to_string(),
-            g.edge_count().to_string(),
-            fmt_ms(summary.mean),
-            res.edge_cut.to_string(),
-            fmt_ratio(res.edge_cut as f64 / rnd as f64),
-            fmt_ratio(balance),
+            row.edges.to_string(),
+            fmt_ms(row.time_ms),
+            row.cut.to_string(),
+            fmt_ratio(row.cut_random_ratio),
+            fmt_ratio(row.balance),
         ]);
         assert!(
             res.edge_cut < rnd / 4,
@@ -76,7 +108,11 @@ fn main() {
         );
         if n == 100_000 {
             println!("100k-vertex partition: {:.1} ms (target <= 100 ms)", summary.mean);
+            println!("phase breakdown (one run): {}", ws.timer.render());
+            // Snapshot now: the timer holds exactly one 100k run here.
+            phase_timer = ws.timer.clone();
         }
+        rows.push(row);
     }
     println!("{}", table.render());
 
@@ -85,16 +121,68 @@ fn main() {
         "skewed targets on 10k vertices (R_cpu sweep)",
         &["r0", "achieved", "cut"],
     );
+    let mut skew_rows: Vec<(f64, f64, i64)> = Vec::new();
     let g = make_graph(10_000, 5);
     for &r0 in &[0.5, 0.25, 0.1, 0.05, 0.01] {
         let cfg = PartitionConfig::bipartition(r0, 1.0 - r0);
-        let res = partition(&g, &cfg);
+        let res = partition_with(&g, &cfg, &mut ws);
         skew.row(vec![
             fmt_ratio(r0),
             fmt_ratio(res.fractions()[0]),
             res.edge_cut.to_string(),
         ]);
+        skew_rows.push((r0, res.fractions()[0], res.edge_cut));
     }
     println!("{}", skew.render());
     let _ = table.save_csv("partitioner");
+    match save_json(&rows, &skew_rows, &phase_timer) {
+        Ok(path) => println!("json written to {}", path.display()),
+        Err(e) => eprintln!("failed to write BENCH_partitioner.json: {e}"),
+    }
+}
+
+/// Write `bench_results/BENCH_partitioner.json`.
+fn save_json(
+    rows: &[ScaleRow],
+    skew: &[(f64, f64, i64)],
+    phase_timer: &hetsched::benchkit::PhaseTimer,
+) -> std::io::Result<std::path::PathBuf> {
+    let mut s = String::new();
+    s.push_str("{\n  \"bench\": \"partitioner\",\n  \"harness\": \"cargo-bench\",\n");
+    s.push_str("  \"scaling\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = writeln!(
+            s,
+            "    {{\"n\": {}, \"edges\": {}, \"time_ms\": {:.3}, \"cut\": {}, \
+             \"cut_random_ratio\": {:.4}, \"balance\": {:.4}}}{}",
+            r.n,
+            r.edges,
+            r.time_ms,
+            r.cut,
+            r.cut_random_ratio,
+            r.balance,
+            if i + 1 < rows.len() { "," } else { "" }
+        );
+    }
+    s.push_str("  ],\n  \"skew_10k\": [\n");
+    for (i, &(r0, achieved, cut)) in skew.iter().enumerate() {
+        let _ = writeln!(
+            s,
+            "    {{\"r0\": {r0}, \"achieved\": {achieved:.4}, \"cut\": {cut}}}{}",
+            if i + 1 < skew.len() { "," } else { "" }
+        );
+    }
+    s.push_str("  ],\n  \"phase_ms_100k_single_run\": {\n");
+    let entries = phase_timer.entries();
+    for (i, (name, ms)) in entries.iter().enumerate() {
+        let _ =
+            writeln!(s, "    \"{name}\": {ms:.3}{}", if i + 1 < entries.len() { "," } else { "" });
+    }
+    s.push_str("  }\n}\n");
+
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("bench_results");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("BENCH_partitioner.json");
+    std::fs::write(&path, s)?;
+    Ok(path)
 }

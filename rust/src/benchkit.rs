@@ -1,5 +1,6 @@
 //! Bench harness (criterion is unavailable offline): wall-clock timing
-//! with warm-up, repetition and summary statistics, plus the standard
+//! with warm-up, repetition and summary statistics, a phase timer for
+//! attributing time inside multi-phase algorithms, plus the standard
 //! header every bench target prints (the paper's Table I).
 
 use std::time::Instant;
@@ -32,6 +33,75 @@ pub fn bench<T>(opts: &BenchOpts, mut f: impl FnMut() -> T) -> Summary {
         samples.push(t0.elapsed().as_secs_f64() * 1e3);
     }
     Summary::from(&samples)
+}
+
+/// Accumulating per-phase wall-clock attribution.
+///
+/// The partitioner (and any other multi-phase algorithm) reports through
+/// one of these instead of ad-hoc env-var-gated `eprintln!` probes:
+/// repeated `add`s under the same name accumulate, so a timer owned by a
+/// reusable workspace aggregates across levels, bisections and calls
+/// until [`PhaseTimer::clear`] is called.
+#[derive(Debug, Clone, Default)]
+pub struct PhaseTimer {
+    entries: Vec<(&'static str, f64)>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> PhaseTimer {
+        PhaseTimer::default()
+    }
+
+    /// Add `ms` under `phase` (accumulates with previous adds).
+    pub fn add(&mut self, phase: &'static str, ms: f64) {
+        match self.entries.iter_mut().find(|(name, _)| *name == phase) {
+            Some((_, acc)) => *acc += ms,
+            None => self.entries.push((phase, ms)),
+        }
+    }
+
+    /// Add the elapsed time since `t0` under `phase`; returns a fresh
+    /// start instant so call sites can chain consecutive phases.
+    pub fn lap(&mut self, phase: &'static str, t0: Instant) -> Instant {
+        self.add(phase, t0.elapsed().as_secs_f64() * 1e3);
+        Instant::now()
+    }
+
+    /// Time the closure under `phase`.
+    pub fn time<T>(&mut self, phase: &'static str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(phase, t0.elapsed().as_secs_f64() * 1e3);
+        out
+    }
+
+    /// Accumulated milliseconds for `phase` (0.0 if never recorded).
+    pub fn ms(&self, phase: &str) -> f64 {
+        self.entries.iter().find(|(name, _)| *name == phase).map(|(_, ms)| *ms).unwrap_or(0.0)
+    }
+
+    /// All `(phase, ms)` entries in first-recorded order.
+    pub fn entries(&self) -> &[(&'static str, f64)] {
+        &self.entries
+    }
+
+    /// Sum over all phases.
+    pub fn total_ms(&self) -> f64 {
+        self.entries.iter().map(|(_, ms)| ms).sum()
+    }
+
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+
+    /// One-line rendering, e.g. `coarsen 12.1ms | refine 8.7ms`.
+    pub fn render(&self) -> String {
+        self.entries
+            .iter()
+            .map(|(name, ms)| format!("{name} {ms:.3}ms"))
+            .collect::<Vec<_>>()
+            .join(" | ")
+    }
 }
 
 /// Print the standard bench preamble: bench name + simulated platform
@@ -68,5 +138,34 @@ mod tests {
         assert_eq!(PAPER_SIZES[0], 64);
         assert_eq!(PAPER_SIZES[10], 2048);
         assert_eq!(PAPER_ITERATIONS, 100);
+    }
+
+    #[test]
+    fn phase_timer_accumulates() {
+        let mut t = PhaseTimer::new();
+        t.add("coarsen", 1.5);
+        t.add("refine", 2.0);
+        t.add("coarsen", 0.5);
+        assert!((t.ms("coarsen") - 2.0).abs() < 1e-12);
+        assert!((t.ms("refine") - 2.0).abs() < 1e-12);
+        assert_eq!(t.ms("absent"), 0.0);
+        assert!((t.total_ms() - 4.0).abs() < 1e-12);
+        assert_eq!(t.entries().len(), 2);
+        let line = t.render();
+        assert!(line.contains("coarsen") && line.contains("refine"));
+        t.clear();
+        assert_eq!(t.entries().len(), 0);
+    }
+
+    #[test]
+    fn phase_timer_time_and_lap() {
+        let mut t = PhaseTimer::new();
+        let out = t.time("work", || 41 + 1);
+        assert_eq!(out, 42);
+        assert!(t.ms("work") >= 0.0);
+        let t0 = Instant::now();
+        let t1 = t.lap("lap", t0);
+        assert!(t1 >= t0);
+        assert_eq!(t.entries().len(), 2);
     }
 }

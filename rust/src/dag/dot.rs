@@ -17,12 +17,19 @@ use std::fmt::Write as _;
 use super::graph::{Dag, KernelKind, NodeId};
 
 /// Parse error with 1-based line information.
-#[derive(Debug, thiserror::Error)]
-#[error("dot parse error at line {line}: {msg}")]
+#[derive(Debug)]
 pub struct DotError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for DotError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "dot parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for DotError {}
 
 #[derive(Debug, Clone, PartialEq)]
 enum Tok {

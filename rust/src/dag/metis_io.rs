@@ -13,29 +13,276 @@
 //! are 1-based. A DAG's directed edges are symmetrized; antiparallel
 //! duplicates are merged by summing weights (METIS requires a symmetric
 //! adjacency structure).
-
-use std::collections::HashMap;
+//!
+//! In-memory representation: the graph is stored in METIS's own flat CSR
+//! layout (`xadj`/`adjncy`/`adjwgt`) rather than nested `Vec<Vec<_>>`
+//! adjacency. The partitioner's coarsen/refine/induce passes iterate
+//! adjacency in tight loops, so one contiguous edge array (4-byte
+//! neighbor ids, separate weight array) keeps the hot path cache-linear
+//! and lets coarse graphs be built as exact-size single allocations.
 
 use super::graph::{Dag, NodeId};
 
-/// An undirected weighted graph in METIS vertex-adjacency form.
+/// An undirected weighted graph in METIS CSR form.
+///
+/// Invariants (maintained by [`CsrBuilder`] and expected by the
+/// partitioner):
+/// * `xadj.len() == vwgt.len() + 1`, `xadj[0] == 0`, `xadj` is
+///   non-decreasing, and `xadj[n] == adjncy.len() == adjwgt.len()`;
+/// * the structure is symmetric — `u ∈ adj(v)` iff `v ∈ adj(u)`, with
+///   equal weights on both directions;
+/// * no self-loops.
 #[derive(Debug, Clone, PartialEq)]
 pub struct MetisGraph {
     /// Vertex weights (one constraint).
     pub vwgt: Vec<i64>,
-    /// Adjacency: `(neighbor, edge_weight)` per vertex, neighbor 0-based.
-    pub adj: Vec<Vec<(usize, i64)>>,
+    /// CSR row offsets: vertex `v`'s neighbors live at
+    /// `adjncy[xadj[v]..xadj[v + 1]]`.
+    pub xadj: Vec<usize>,
+    /// Flat neighbor ids (0-based), one entry per edge direction.
+    pub adjncy: Vec<u32>,
+    /// Edge weight per `adjncy` entry.
+    pub adjwgt: Vec<i64>,
+}
+
+impl Default for MetisGraph {
+    fn default() -> Self {
+        MetisGraph::empty()
+    }
 }
 
 impl MetisGraph {
+    /// An empty graph.
+    pub fn empty() -> MetisGraph {
+        MetisGraph { vwgt: Vec::new(), xadj: vec![0], adjncy: Vec::new(), adjwgt: Vec::new() }
+    }
+
+    /// Build from nested adjacency lists, preserving the given neighbor
+    /// order verbatim (no sorting, no merging). The input must already be
+    /// symmetric; this is the migration path for tests and generators
+    /// that find per-vertex `Vec` construction convenient.
+    pub fn from_adj(vwgt: Vec<i64>, adj: Vec<Vec<(usize, i64)>>) -> MetisGraph {
+        assert_eq!(vwgt.len(), adj.len(), "vwgt/adj length mismatch");
+        let mut xadj = Vec::with_capacity(adj.len() + 1);
+        xadj.push(0usize);
+        let total: usize = adj.iter().map(Vec::len).sum();
+        let mut adjncy = Vec::with_capacity(total);
+        let mut adjwgt = Vec::with_capacity(total);
+        for row in &adj {
+            for &(u, w) in row {
+                adjncy.push(u as u32);
+                adjwgt.push(w);
+            }
+            xadj.push(adjncy.len());
+        }
+        MetisGraph { vwgt, xadj, adjncy, adjwgt }
+    }
+
     pub fn vertex_count(&self) -> usize {
         self.vwgt.len()
     }
 
     /// Number of undirected edges.
     pub fn edge_count(&self) -> usize {
-        self.adj.iter().map(|a| a.len()).sum::<usize>() / 2
+        self.adjncy.len() / 2
     }
+
+    /// Degree of vertex `v`.
+    pub fn degree(&self, v: usize) -> usize {
+        self.xadj[v + 1] - self.xadj[v]
+    }
+
+    /// Iterate `(neighbor, edge_weight)` for vertex `v`.
+    pub fn neighbors(&self, v: usize) -> impl Iterator<Item = (usize, i64)> + '_ {
+        let r = self.xadj[v]..self.xadj[v + 1];
+        self.adjncy[r.clone()]
+            .iter()
+            .zip(&self.adjwgt[r])
+            .map(|(&u, &w)| (u as usize, w))
+    }
+
+    /// Sum of all vertex weights.
+    pub fn total_vwgt(&self) -> i64 {
+        self.vwgt.iter().sum()
+    }
+}
+
+/// Uniform adjacency access for the partitioner: implemented by the
+/// concrete CSR graph and by index-remapped subset views, so every
+/// partition phase runs unchanged on either (monomorphized, no dynamic
+/// dispatch on the hot path).
+pub trait Adjacency {
+    fn vertex_count(&self) -> usize;
+    /// Weight of vertex `v`.
+    fn vertex_weight(&self, v: usize) -> i64;
+    /// Visit every `(neighbor, edge_weight)` of `v`.
+    fn for_neighbors(&self, v: usize, f: impl FnMut(usize, i64));
+    /// Sum of all vertex weights.
+    fn total_vertex_weight(&self) -> i64 {
+        (0..self.vertex_count()).map(|v| self.vertex_weight(v)).sum()
+    }
+}
+
+impl Adjacency for MetisGraph {
+    fn vertex_count(&self) -> usize {
+        self.vwgt.len()
+    }
+
+    fn vertex_weight(&self, v: usize) -> i64 {
+        self.vwgt[v]
+    }
+
+    fn for_neighbors(&self, v: usize, mut f: impl FnMut(usize, i64)) {
+        let r = self.xadj[v]..self.xadj[v + 1];
+        for (&u, &w) in self.adjncy[r.clone()].iter().zip(&self.adjwgt[r]) {
+            f(u as usize, w);
+        }
+    }
+
+    fn total_vertex_weight(&self) -> i64 {
+        self.total_vwgt()
+    }
+}
+
+/// Incremental builder for [`MetisGraph`].
+///
+/// Edges are recorded once per undirected edge in a flat `(u, v, w)`
+/// list; `build` mirrors them, scatters into CSR with a counting sort,
+/// then sorts each vertex's slice and merges duplicate neighbors by
+/// summing weights — so antiparallel DAG edges and repeated `add_edge`
+/// calls coalesce exactly like the old per-vertex `HashMap` did, without
+/// any hashing or per-vertex allocation.
+#[derive(Debug, Clone, Default)]
+pub struct CsrBuilder {
+    vwgt: Vec<i64>,
+    edges: Vec<(u32, u32, i64)>,
+}
+
+impl CsrBuilder {
+    /// Builder over `n` vertices of weight 0.
+    pub fn new(n: usize) -> CsrBuilder {
+        Self::with_capacity(n, 0)
+    }
+
+    /// Builder over `n` vertices, reserving room for `m` edges.
+    pub fn with_capacity(n: usize, m: usize) -> CsrBuilder {
+        assert!(n < u32::MAX as usize, "vertex count exceeds u32 id space");
+        CsrBuilder { vwgt: vec![0; n], edges: Vec::with_capacity(m) }
+    }
+
+    pub fn vertex_count(&self) -> usize {
+        self.vwgt.len()
+    }
+
+    /// Set vertex `v`'s weight.
+    pub fn set_vertex_weight(&mut self, v: usize, w: i64) {
+        self.vwgt[v] = w;
+    }
+
+    /// Append a vertex with weight `w`; returns its id.
+    pub fn add_vertex(&mut self, w: i64) -> usize {
+        self.vwgt.push(w);
+        assert!(self.vwgt.len() < u32::MAX as usize, "vertex count exceeds u32 id space");
+        self.vwgt.len() - 1
+    }
+
+    /// Record an undirected edge `{u, v}` of weight `w`. Duplicate and
+    /// antiparallel records merge by summing at `build` time; self-loops
+    /// are ignored (a DAG never produces them).
+    pub fn add_edge(&mut self, u: usize, v: usize, w: i64) {
+        debug_assert!(u < self.vwgt.len() && v < self.vwgt.len(), "edge endpoint out of range");
+        if u == v {
+            return;
+        }
+        self.edges.push((u as u32, v as u32, w));
+    }
+
+    /// Assemble the CSR graph. Each vertex's neighbor list comes out
+    /// sorted by id with duplicates merged.
+    pub fn build(self) -> MetisGraph {
+        let CsrBuilder { vwgt, edges } = self;
+        let n = vwgt.len();
+        // Pass 1: directed degree count (each undirected edge mirrors).
+        let mut xadj = vec![0usize; n + 1];
+        for &(u, v, _) in &edges {
+            xadj[u as usize + 1] += 1;
+            xadj[v as usize + 1] += 1;
+        }
+        for v in 0..n {
+            xadj[v + 1] += xadj[v];
+        }
+        // Pass 2: scatter both directions.
+        let m2 = xadj[n];
+        let mut adjncy = vec![0u32; m2];
+        let mut adjwgt = vec![0i64; m2];
+        let mut cursor = xadj.clone();
+        for &(u, v, w) in &edges {
+            let cu = &mut cursor[u as usize];
+            adjncy[*cu] = v;
+            adjwgt[*cu] = w;
+            *cu += 1;
+            let cv = &mut cursor[v as usize];
+            adjncy[*cv] = u;
+            adjwgt[*cv] = w;
+            *cv += 1;
+        }
+        // Per-vertex sort + duplicate merge, compacting in place. The
+        // write cursor never overtakes the read window because merging
+        // only shrinks rows, and each row is staged in `scratch` before
+        // being written back.
+        let mut scratch: Vec<(u32, i64)> = Vec::new();
+        let mut write = 0usize;
+        let mut row_start = xadj[0];
+        for v in 0..n {
+            let row_end = xadj[v + 1];
+            scratch.clear();
+            scratch.extend(
+                adjncy[row_start..row_end]
+                    .iter()
+                    .copied()
+                    .zip(adjwgt[row_start..row_end].iter().copied()),
+            );
+            scratch.sort_unstable_by_key(|&(u, _)| u);
+            xadj[v] = write;
+            let mut i = 0;
+            while i < scratch.len() {
+                let (u, mut w) = scratch[i];
+                i += 1;
+                while i < scratch.len() && scratch[i].0 == u {
+                    w += scratch[i].1;
+                    i += 1;
+                }
+                adjncy[write] = u;
+                adjwgt[write] = w;
+                write += 1;
+            }
+            row_start = row_end;
+        }
+        xadj[n] = write;
+        adjncy.truncate(write);
+        adjwgt.truncate(write);
+        MetisGraph { vwgt, xadj, adjncy, adjwgt }
+    }
+}
+
+/// Lower a weighted DAG into a [`CsrBuilder`] (symmetrized, weights
+/// clamped to METIS's integral-positive domain). Callers that need to
+/// extend the graph — e.g. the gp scheduler's pinned host anchor — add
+/// vertices/edges to the builder before calling `build`.
+pub fn dag_to_builder(
+    dag: &Dag,
+    node_weight: impl Fn(NodeId) -> i64,
+    edge_weight: impl Fn(super::graph::EdgeId) -> i64,
+) -> CsrBuilder {
+    let n = dag.node_count();
+    let mut b = CsrBuilder::with_capacity(n, dag.edge_count());
+    for v in 0..n {
+        b.set_vertex_weight(v, node_weight(v).max(0));
+    }
+    for (eid, e) in dag.edges() {
+        b.add_edge(e.src, e.dst, edge_weight(eid).max(1));
+    }
+    b
 }
 
 /// Lower a weighted DAG to the symmetrized METIS structure.
@@ -48,25 +295,7 @@ pub fn dag_to_metis(
     node_weight: impl Fn(NodeId) -> i64,
     edge_weight: impl Fn(super::graph::EdgeId) -> i64,
 ) -> MetisGraph {
-    let n = dag.node_count();
-    let mut merged: Vec<HashMap<usize, i64>> = vec![HashMap::new(); n];
-    for (eid, e) in dag.edges() {
-        let w = edge_weight(eid).max(1);
-        *merged[e.src].entry(e.dst).or_insert(0) += w;
-        *merged[e.dst].entry(e.src).or_insert(0) += w;
-    }
-    let adj = merged
-        .into_iter()
-        .map(|m| {
-            let mut v: Vec<(usize, i64)> = m.into_iter().collect();
-            v.sort_unstable();
-            v
-        })
-        .collect();
-    MetisGraph {
-        vwgt: (0..n).map(|i| node_weight(i).max(0)).collect(),
-        adj,
-    }
+    dag_to_builder(dag, node_weight, edge_weight).build()
 }
 
 /// Serialize in `gpmetis` file format (fmt=011: vwgt + adjwgt).
@@ -75,7 +304,7 @@ pub fn write_metis(g: &MetisGraph) -> String {
     s.push_str(&format!("{} {} 011\n", g.vertex_count(), g.edge_count()));
     for v in 0..g.vertex_count() {
         let mut line = format!("{}", g.vwgt[v]);
-        for &(u, w) in &g.adj[v] {
+        for (u, w) in g.neighbors(v) {
             line.push_str(&format!(" {} {}", u + 1, w));
         }
         line.push('\n');
@@ -101,7 +330,8 @@ pub fn parse_metis(src: &str) -> Result<MetisGraph, String> {
     let has_vwgt = fmt.len() >= 2 && &fmt[fmt.len() - 2..fmt.len() - 1] == "1";
     let has_ewgt = fmt.ends_with('1');
 
-    let mut g = MetisGraph { vwgt: Vec::with_capacity(nv), adj: Vec::with_capacity(nv) };
+    let mut vwgt: Vec<i64> = Vec::with_capacity(nv);
+    let mut adj: Vec<Vec<(usize, i64)>> = Vec::with_capacity(nv);
     for (i, line) in lines.enumerate() {
         if i >= nv {
             return Err("too many vertex lines".into());
@@ -112,8 +342,8 @@ pub fn parse_metis(src: &str) -> Result<MetisGraph, String> {
         } else {
             1
         };
-        g.vwgt.push(vw);
-        let mut adj = Vec::new();
+        vwgt.push(vw);
+        let mut row = Vec::new();
         loop {
             let Some(u) = it.next() else { break };
             let u: usize = u.parse().map_err(|_| "bad adjacency id")?;
@@ -125,13 +355,14 @@ pub fn parse_metis(src: &str) -> Result<MetisGraph, String> {
             } else {
                 1
             };
-            adj.push((u - 1, w));
+            row.push((u - 1, w));
         }
-        g.adj.push(adj);
+        adj.push(row);
     }
-    if g.vwgt.len() != nv {
-        return Err(format!("expected {nv} vertex lines, got {}", g.vwgt.len()));
+    if vwgt.len() != nv {
+        return Err(format!("expected {nv} vertex lines, got {}", vwgt.len()));
     }
+    let g = MetisGraph::from_adj(vwgt, adj);
     if g.edge_count() != ne {
         return Err(format!("edge count mismatch: header {ne}, lines {}", g.edge_count()));
     }
@@ -173,13 +404,17 @@ mod tests {
         g
     }
 
+    fn adj_of(g: &MetisGraph, v: usize) -> Vec<(usize, i64)> {
+        g.neighbors(v).collect()
+    }
+
     #[test]
     fn dag_to_metis_symmetrizes() {
         let g = dag_to_metis(&sample_dag(), |_| 10, |_| 5);
         assert_eq!(g.vertex_count(), 3);
         assert_eq!(g.edge_count(), 3);
         // b's neighbors are a and c.
-        assert_eq!(g.adj[1], vec![(0, 5), (2, 5)]);
+        assert_eq!(adj_of(&g, 1), vec![(0, 5), (2, 5)]);
     }
 
     #[test]
@@ -191,7 +426,7 @@ mod tests {
         d.add_edge(b, a); // cyclic as a digraph, but METIS is undirected
         let g = dag_to_metis(&d, |_| 1, |_| 3);
         assert_eq!(g.edge_count(), 1);
-        assert_eq!(g.adj[0], vec![(1, 6)]);
+        assert_eq!(adj_of(&g, 0), vec![(1, 6)]);
     }
 
     #[test]
@@ -227,6 +462,73 @@ mod tests {
     fn zero_edge_weight_clamped_to_one() {
         // METIS requires positive edge weights.
         let g = dag_to_metis(&sample_dag(), |_| 1, |_| 0);
-        assert!(g.adj.iter().flatten().all(|&(_, w)| w >= 1));
+        assert!(g.adjwgt.iter().all(|&w| w >= 1));
+    }
+
+    #[test]
+    fn csr_invariants_hold() {
+        let g = dag_to_metis(&sample_dag(), |_| 2, |_| 4);
+        assert_eq!(g.xadj.len(), g.vertex_count() + 1);
+        assert_eq!(g.xadj[0], 0);
+        assert_eq!(*g.xadj.last().unwrap(), g.adjncy.len());
+        assert_eq!(g.adjncy.len(), g.adjwgt.len());
+        for v in 0..g.vertex_count() {
+            assert!(g.xadj[v] <= g.xadj[v + 1]);
+            for (u, w) in g.neighbors(v) {
+                assert_ne!(u, v, "self-loop at {v}");
+                assert!(
+                    g.neighbors(u).any(|(x, xw)| x == v && xw == w),
+                    "asymmetric edge {v}->{u}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn builder_merges_duplicate_records() {
+        let mut b = CsrBuilder::new(3);
+        b.set_vertex_weight(0, 1);
+        b.set_vertex_weight(1, 1);
+        b.set_vertex_weight(2, 1);
+        b.add_edge(0, 1, 2);
+        b.add_edge(1, 0, 3); // antiparallel record
+        b.add_edge(1, 2, 7);
+        b.add_edge(2, 2, 9); // self-loop dropped
+        let g = b.build();
+        assert_eq!(g.edge_count(), 2);
+        assert_eq!(adj_of(&g, 0), vec![(1, 5)]);
+        assert_eq!(adj_of(&g, 1), vec![(0, 5), (2, 7)]);
+        assert_eq!(adj_of(&g, 2), vec![(1, 7)]);
+    }
+
+    #[test]
+    fn builder_add_vertex_appends() {
+        let mut b = CsrBuilder::new(2);
+        let v = b.add_vertex(5);
+        assert_eq!(v, 2);
+        b.add_edge(v, 0, 1);
+        let g = b.build();
+        assert_eq!(g.vertex_count(), 3);
+        assert_eq!(g.vwgt[2], 5);
+        assert_eq!(adj_of(&g, 2), vec![(0, 1)]);
+    }
+
+    #[test]
+    fn from_adj_preserves_order() {
+        let g = MetisGraph::from_adj(
+            vec![1, 1, 1],
+            vec![vec![(2, 4), (1, 3)], vec![(0, 3)], vec![(0, 4)]],
+        );
+        assert_eq!(adj_of(&g, 0), vec![(2, 4), (1, 3)]);
+        assert_eq!(g.edge_count(), 2);
+        assert_eq!(g.degree(0), 2);
+    }
+
+    #[test]
+    fn empty_graph_wellformed() {
+        let g = MetisGraph::empty();
+        assert_eq!(g.vertex_count(), 0);
+        assert_eq!(g.edge_count(), 0);
+        assert_eq!(g.xadj, vec![0]);
     }
 }

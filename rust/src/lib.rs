@@ -12,7 +12,8 @@
 //! * [`data`] — MSI data coherence over discrete memory nodes;
 //! * [`sched`] — eager / dmda / graph-partition (and extra) policies;
 //! * [`sim`] — discrete-event engine for fast, deterministic sweeps;
-//! * [`runtime`] — PJRT loading/execution of AOT'd HLO artifacts;
+//! * [`runtime`] — manifest-gated kernel execution (interpreter backend
+//!   standing in for PJRT in this offline build);
 //! * [`coordinator`] — threaded real-compute execution engine;
 //! * [`metrics`], [`report`], [`benchkit`] — observability and harness.
 

@@ -6,17 +6,25 @@
 //! is the pair's sum; parallel coarse edges merge by summing weights, and
 //! intra-pair edges vanish (they can never be cut again at coarser
 //! levels — exactly why HEM preserves small cuts).
+//!
+//! The coarse graph is built directly in CSR form: fine vertices are
+//! grouped by coarse id with a counting sort, then each coarse row is
+//! accumulated through a scatter buffer and appended to the flat
+//! `adjncy`/`adjwgt` arrays — no per-vertex `Vec` allocations. All
+//! scratch lives in [`CoarsenScratch`], so repeated coarsening (across
+//! levels, bisections and `partition` calls sharing a workspace) runs
+//! allocation-free once buffers have grown to size.
 
-use crate::dag::metis_io::MetisGraph;
+use crate::dag::metis_io::{Adjacency, MetisGraph};
 use crate::util::Pcg32;
 
 /// One level of the coarsening hierarchy. Does NOT own the fine graph
 /// (§Perf iteration 1: cloning the fine graph per level dominated
 /// partitioner time on large inputs); callers keep the hierarchy stack.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct CoarseLevel {
     /// fine vertex -> coarse vertex.
-    pub map: Vec<usize>,
+    pub map: Vec<u32>,
     pub coarse: MetisGraph,
     /// Side pin per coarse vertex (-1 free; inherited from members).
     pub coarse_fixed: Vec<i8>,
@@ -25,123 +33,182 @@ pub struct CoarseLevel {
 impl CoarseLevel {
     /// Project a coarse partition back onto the fine graph.
     pub fn project(&self, coarse_side: &[usize]) -> Vec<usize> {
-        self.map.iter().map(|&c| coarse_side[c]).collect()
+        self.map.iter().map(|&c| coarse_side[c as usize]).collect()
+    }
+
+    /// Project into a reusable buffer.
+    pub fn project_into(&self, coarse_side: &[usize], out: &mut Vec<usize>) {
+        out.clear();
+        out.extend(self.map.iter().map(|&c| coarse_side[c as usize]));
     }
 }
 
-/// Perform one round of heavy-edge matching on `fine`.
+/// Reusable scratch buffers for [`coarsen_once_into`].
+#[derive(Debug, Clone, Default)]
+pub struct CoarsenScratch {
+    order: Vec<u32>,
+    matched: Vec<u32>,
+    counts: Vec<usize>,
+    cursor: Vec<usize>,
+    ordered: Vec<u32>,
+    acc: Vec<i64>,
+    touched: Vec<u32>,
+}
+
+/// Perform one round of heavy-edge matching on `fine`, allocating fresh
+/// output storage. Convenience wrapper over [`coarsen_once_into`].
+pub fn coarsen_once<G: Adjacency>(fine: &G, fixed: &[i8], rng: &mut Pcg32) -> CoarseLevel {
+    let mut ws = CoarsenScratch::default();
+    let mut out = CoarseLevel::default();
+    coarsen_once_into(fine, fixed, rng, &mut ws, &mut out);
+    out
+}
+
+/// Perform one round of heavy-edge matching on `fine`, writing the coarse
+/// level into `out` (whose buffers are reused) with scratch from `ws`.
 ///
 /// `fixed[v]` (-1 free, 0/1 pinned side): vertices pinned to different
 /// sides are never matched together; a pair with one pinned member pins
-/// the coarse vertex.
-pub fn coarsen_once(fine: &MetisGraph, fixed: &[i8], rng: &mut Pcg32) -> CoarseLevel {
+/// the coarse vertex. Edge weights must be positive (zero is the scatter
+/// buffer's "untouched" sentinel).
+pub fn coarsen_once_into<G: Adjacency>(
+    fine: &G,
+    fixed: &[i8],
+    rng: &mut Pcg32,
+    ws: &mut CoarsenScratch,
+    out: &mut CoarseLevel,
+) {
     let n = fine.vertex_count();
-    let mut matched = vec![usize::MAX; n];
-    let mut order: Vec<usize> = (0..n).collect();
-    rng.shuffle(&mut order);
+    let order = &mut ws.order;
+    order.clear();
+    order.extend(0..n as u32);
+    rng.shuffle(order);
+    let matched = &mut ws.matched;
+    matched.clear();
+    matched.resize(n, u32::MAX);
 
-    for &v in &order {
-        if matched[v] != usize::MAX {
+    for &v32 in order.iter() {
+        let v = v32 as usize;
+        if matched[v] != u32::MAX {
             continue;
         }
-        let mut best: Option<(usize, i64)> = None;
-        for &(u, w) in &fine.adj[v] {
+        let mut best_u = usize::MAX;
+        let mut best_w = i64::MIN;
+        fine.for_neighbors(v, |u, w| {
             let compatible = fixed[v] < 0 || fixed[u] < 0 || fixed[v] == fixed[u];
-            if u != v && matched[u] == usize::MAX && compatible {
-                match best {
-                    Some((_, bw)) if bw >= w => {}
-                    _ => best = Some((u, w)),
-                }
+            if u != v && matched[u] == u32::MAX && compatible && w > best_w {
+                best_u = u;
+                best_w = w;
             }
-        }
-        match best {
-            Some((u, _)) => {
-                matched[v] = u;
-                matched[u] = v;
-            }
-            None => matched[v] = v, // stays single
+        });
+        if best_u != usize::MAX {
+            matched[v] = best_u as u32;
+            matched[best_u] = v32;
+        } else {
+            matched[v] = v32; // stays single
         }
     }
 
     // Assign coarse ids (pair -> one id, singleton -> one id).
-    let mut map = vec![usize::MAX; n];
-    let mut next = 0usize;
+    let map = &mut out.map;
+    map.clear();
+    map.resize(n, u32::MAX);
+    let mut next = 0u32;
     for v in 0..n {
-        if map[v] != usize::MAX {
+        if map[v] != u32::MAX {
             continue;
         }
         map[v] = next;
-        let m = matched[v];
-        if m != v && m != usize::MAX {
+        let m = matched[v] as usize;
+        if m != v {
             map[m] = next;
         }
         next += 1;
     }
+    let nc = next as usize;
 
-    // Build the coarse graph.
-    let mut vwgt = vec![0i64; next];
+    // Coarse vertex weights.
+    let coarse = &mut out.coarse;
+    coarse.vwgt.clear();
+    coarse.vwgt.resize(nc, 0);
     for v in 0..n {
-        vwgt[map[v]] += fine.vwgt[v];
-    }
-    // Merge edges: accumulate per coarse source with a scatter buffer.
-    // Fine vertices are grouped by coarse id via counting sort (one flat
-    // buffer — §Perf: per-coarse-vertex Vec allocations dominated
-    // coarsening time on large graphs).
-    let mut counts = vec![0usize; next + 1];
-    for v in 0..n {
-        counts[map[v] + 1] += 1;
-    }
-    for c in 0..next {
-        counts[c + 1] += counts[c];
-    }
-    let mut ordered = vec![0usize; n];
-    {
-        let mut cursor = counts.clone();
-        for v in 0..n {
-            ordered[cursor[map[v]]] = v;
-            cursor[map[v]] += 1;
-        }
-    }
-    let mut adj: Vec<Vec<(usize, i64)>> = vec![Vec::new(); next];
-    let mut acc = vec![0i64; next];
-    let mut touched: Vec<usize> = Vec::new();
-    for c in 0..next {
-        for &v in &ordered[counts[c]..counts[c + 1]] {
-            for &(u, w) in &fine.adj[v] {
-                let cu = map[u];
-                if cu == c {
-                    continue; // interior edge disappears
-                }
-                if acc[cu] == 0 {
-                    touched.push(cu);
-                }
-                acc[cu] += w;
-            }
-        }
-        touched.sort_unstable();
-        let mut edges = Vec::with_capacity(touched.len());
-        for &cu in &touched {
-            edges.push((cu, acc[cu]));
-            acc[cu] = 0;
-        }
-        adj[c] = edges;
-        touched.clear();
+        coarse.vwgt[map[v] as usize] += fine.vertex_weight(v);
     }
 
     // Coarse pins: any pinned member pins the coarse vertex (matching
     // never pairs conflicting pins).
-    let mut coarse_fixed = vec![-1i8; next];
+    let coarse_fixed = &mut out.coarse_fixed;
+    coarse_fixed.clear();
+    coarse_fixed.resize(nc, -1);
     for v in 0..n {
         if fixed[v] >= 0 {
             debug_assert!(
-                coarse_fixed[map[v]] < 0 || coarse_fixed[map[v]] == fixed[v],
+                coarse_fixed[map[v] as usize] < 0 || coarse_fixed[map[v] as usize] == fixed[v],
                 "conflicting pins merged"
             );
-            coarse_fixed[map[v]] = fixed[v];
+            coarse_fixed[map[v] as usize] = fixed[v];
         }
     }
 
-    CoarseLevel { map, coarse: MetisGraph { vwgt, adj }, coarse_fixed }
+    // Group fine vertices by coarse id via counting sort (one flat
+    // buffer — §Perf: per-coarse-vertex Vec allocations dominated
+    // coarsening time on large graphs).
+    let counts = &mut ws.counts;
+    counts.clear();
+    counts.resize(nc + 1, 0);
+    for v in 0..n {
+        counts[map[v] as usize + 1] += 1;
+    }
+    for c in 0..nc {
+        counts[c + 1] += counts[c];
+    }
+    let ordered = &mut ws.ordered;
+    ordered.clear();
+    ordered.resize(n, 0);
+    {
+        let cursor = &mut ws.cursor;
+        cursor.clear();
+        cursor.extend_from_slice(counts);
+        for v in 0..n {
+            let c = map[v] as usize;
+            ordered[cursor[c]] = v as u32;
+            cursor[c] += 1;
+        }
+    }
+
+    // Merge edges per coarse vertex through a scatter buffer, appending
+    // each finished row to the flat CSR arrays (rows come out sorted).
+    coarse.xadj.clear();
+    coarse.xadj.push(0);
+    coarse.adjncy.clear();
+    coarse.adjwgt.clear();
+    let acc = &mut ws.acc;
+    acc.clear();
+    acc.resize(nc, 0);
+    let touched = &mut ws.touched;
+    touched.clear();
+    for c in 0..nc {
+        for &v32 in &ordered[counts[c]..counts[c + 1]] {
+            fine.for_neighbors(v32 as usize, |u, w| {
+                let cu = map[u] as usize;
+                if cu == c {
+                    return; // interior edge disappears
+                }
+                if acc[cu] == 0 {
+                    touched.push(cu as u32);
+                }
+                acc[cu] += w;
+            });
+        }
+        touched.sort_unstable();
+        for &cu in touched.iter() {
+            coarse.adjncy.push(cu);
+            coarse.adjwgt.push(acc[cu as usize]);
+            acc[cu as usize] = 0;
+        }
+        touched.clear();
+        coarse.xadj.push(coarse.adjncy.len());
+    }
 }
 
 #[cfg(test)]
@@ -154,7 +221,7 @@ mod tests {
             adj[i].push((i + 1, w));
             adj[i + 1].push((i, w));
         }
-        MetisGraph { vwgt: vec![1; n], adj }
+        MetisGraph::from_adj(vec![1; n], adj)
     }
 
     #[test]
@@ -181,9 +248,9 @@ mod tests {
         let lvl = coarsen_once(&g, &vec![-1i8; g.vertex_count()], &mut rng);
         let c = &lvl.coarse;
         for v in 0..c.vertex_count() {
-            for &(u, w) in &c.adj[v] {
+            for (u, w) in c.neighbors(v) {
                 assert!(
-                    c.adj[u].iter().any(|&(x, xw)| x == v && xw == w),
+                    c.neighbors(u).any(|(x, xw)| x == v && xw == w),
                     "asymmetric coarse edge {v}->{u}"
                 );
             }
@@ -201,13 +268,13 @@ mod tests {
         add(0, 1, 100, &mut adj);
         add(1, 2, 1, &mut adj);
         add(2, 3, 100, &mut adj);
-        let g = MetisGraph { vwgt: vec![1; 4], adj };
+        let g = MetisGraph::from_adj(vec![1; 4], adj);
         let mut rng = Pcg32::seeded(4);
         let lvl = coarsen_once(&g, &vec![-1i8; g.vertex_count()], &mut rng);
         // (0,1) and (2,3) collapse; only the light edge remains.
         assert_eq!(lvl.coarse.vertex_count(), 2);
         assert_eq!(lvl.coarse.edge_count(), 1);
-        assert_eq!(lvl.coarse.adj[0][0].1, 1);
+        assert_eq!(lvl.coarse.adjwgt[0], 1);
     }
 
     #[test]
@@ -219,18 +286,38 @@ mod tests {
         let fine_side = lvl.project(&coarse_side);
         assert_eq!(fine_side.len(), 10);
         for v in 0..10 {
-            assert_eq!(fine_side[v], coarse_side[lvl.map[v]]);
+            assert_eq!(fine_side[v], coarse_side[lvl.map[v] as usize]);
         }
+        let mut buf = Vec::new();
+        lvl.project_into(&coarse_side, &mut buf);
+        assert_eq!(buf, fine_side);
     }
 
     #[test]
     fn isolated_vertices_survive() {
-        let g = MetisGraph { vwgt: vec![5, 7, 9], adj: vec![vec![], vec![], vec![]] };
+        let g = MetisGraph::from_adj(vec![5, 7, 9], vec![vec![], vec![], vec![]]);
         let mut rng = Pcg32::seeded(6);
         let lvl = coarsen_once(&g, &vec![-1i8; g.vertex_count()], &mut rng);
         assert_eq!(lvl.coarse.vertex_count(), 3);
         let mut w = lvl.coarse.vwgt.clone();
         w.sort();
         assert_eq!(w, vec![5, 7, 9]);
+    }
+
+    #[test]
+    fn scratch_reuse_is_deterministic() {
+        let g = path(40, 2);
+        let fixed = vec![-1i8; g.vertex_count()];
+        let mut ws = CoarsenScratch::default();
+        let mut out = CoarseLevel::default();
+        let mut rng = Pcg32::seeded(9);
+        coarsen_once_into(&g, &fixed, &mut rng, &mut ws, &mut out);
+        let first = out.clone();
+        // Re-run with dirty buffers and the same seed: identical result.
+        let mut rng = Pcg32::seeded(9);
+        coarsen_once_into(&g, &fixed, &mut rng, &mut ws, &mut out);
+        assert_eq!(out.map, first.map);
+        assert_eq!(out.coarse, first.coarse);
+        assert_eq!(out.coarse_fixed, first.coarse_fixed);
     }
 }

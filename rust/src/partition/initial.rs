@@ -3,23 +3,24 @@
 //! From a random seed vertex, grow part 0 by repeatedly absorbing the
 //! frontier vertex with the highest gain (cut reduction) until part 0
 //! reaches its target weight. Several seeds are tried; the lowest-cut
-//! grown partition wins.
+//! grown partition wins. Runs only on the coarsest graph (at most
+//! `coarsen_until` vertices), so it allocates freely.
 
 use super::quality;
-use crate::dag::metis_io::MetisGraph;
+use crate::dag::metis_io::Adjacency;
 use crate::util::Pcg32;
 
 /// Grow a bipartition of `g` with part-0 weight fraction `frac0`.
 /// `fixed[v]` pins a vertex's side (-1 = free).
-pub fn greedy_growing(
-    g: &MetisGraph,
+pub fn greedy_growing<G: Adjacency>(
+    g: &G,
     frac0: f64,
     fixed: &[i8],
     cfg: &super::PartitionConfig,
     rng: &mut Pcg32,
 ) -> Vec<usize> {
     let n = g.vertex_count();
-    let total: i64 = g.vwgt.iter().sum();
+    let total: i64 = g.total_vertex_weight();
     let target0 = (frac0 * total as f64).round() as i64;
 
     let mut best: Option<(i64, Vec<usize>)> = None;
@@ -30,13 +31,12 @@ pub fn greedy_growing(
             best = Some((cut, side));
         }
     }
-    let (_, side) = best.unwrap_or_else(|| {
-        (0, (0..n).map(|v| if fixed[v] == 0 { 0 } else { 1 }).collect())
-    });
+    let (_, side) =
+        best.unwrap_or_else(|| (0, (0..n).map(|v| if fixed[v] == 0 { 0 } else { 1 }).collect()));
     side
 }
 
-fn grow_once(g: &MetisGraph, target0: i64, fixed: &[i8], rng: &mut Pcg32) -> Vec<usize> {
+fn grow_once<G: Adjacency>(g: &G, target0: i64, fixed: &[i8], rng: &mut Pcg32) -> Vec<usize> {
     let n = g.vertex_count();
     let mut side: Vec<usize> = (0..n).map(|v| if fixed[v] == 0 { 0 } else { 1 }).collect();
     if n == 0 {
@@ -49,7 +49,7 @@ fn grow_once(g: &MetisGraph, target0: i64, fixed: &[i8], rng: &mut Pcg32) -> Vec
     let mut pending: Vec<usize> = (0..n).filter(|&v| fixed[v] == 0).collect();
     for &v in &pending {
         in0[v] = true;
-        w0 += g.vwgt[v];
+        w0 += g.vertex_weight(v);
     }
     if w0 >= target0 && !pending.is_empty() {
         return side;
@@ -77,29 +77,30 @@ fn grow_once(g: &MetisGraph, target0: i64, fixed: &[i8], rng: &mut Pcg32) -> Vec
         if !in0[v] {
             in0[v] = true;
             side[v] = 0;
-            w0 += g.vwgt[v];
+            w0 += g.vertex_weight(v);
         }
         if w0 >= target0 && target0 > 0 {
             break;
         }
         // Update frontier gains: absorbing v strengthens its neighbors.
-        for &(u, w) in &g.adj[v] {
+        g.for_neighbors(v, |u, w| {
             if in0[u] || !eligible(u) {
-                continue;
+                return;
             }
             if !in_frontier[u] {
                 in_frontier[u] = true;
                 // gain starts at -(weight to part 1) + (weight to part 0)
-                gain[u] = g.adj[u]
-                    .iter()
-                    .map(|&(x, xw)| if in0[x] { xw } else { -xw })
-                    .sum();
+                let mut init = 0i64;
+                g.for_neighbors(u, |x, xw| {
+                    init += if in0[x] { xw } else { -xw };
+                });
+                gain[u] = init;
                 frontier.push(u);
             } else {
                 // Edge u-v flipped from cut-increasing to cut-decreasing.
                 gain[u] += 2 * w;
             }
-        }
+        });
         // Continue with remaining seeds first (pinned cluster frontiers),
         // then the best frontier vertex; if the frontier is empty (grew a
         // whole component), jump to a random unabsorbed free vertex.
@@ -111,9 +112,7 @@ fn grow_once(g: &MetisGraph, target0: i64, fixed: &[i8], rng: &mut Pcg32) -> Vec
             if let Some(&u) = frontier.iter().max_by_key(|&&u| gain[u]) {
                 Some(u)
             } else {
-                (0..n)
-                    .filter(|&u| !in0[u] && eligible(u))
-                    .max_by_key(|_| rng.next_u32())
+                (0..n).filter(|&u| !in0[u] && eligible(u)).max_by_key(|_| rng.next_u32())
             }
         };
         if next.is_none() {
@@ -126,6 +125,7 @@ fn grow_once(g: &MetisGraph, target0: i64, fixed: &[i8], rng: &mut Pcg32) -> Vec
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dag::metis_io::MetisGraph;
     use crate::partition::PartitionConfig;
 
     fn grid(r: usize, c: usize) -> MetisGraph {
@@ -144,7 +144,7 @@ mod tests {
                 }
             }
         }
-        MetisGraph { vwgt: vec![1; n], adj }
+        MetisGraph::from_adj(vec![1; n], adj)
     }
 
     #[test]
@@ -191,7 +191,7 @@ mod tests {
                 }
             }
         }
-        let g = MetisGraph { vwgt: vec![1; 6], adj };
+        let g = MetisGraph::from_adj(vec![1; 6], adj);
         let cfg = PartitionConfig::default();
         let mut rng = Pcg32::seeded(4);
         let side = greedy_growing(&g, 0.5, &vec![-1i8; g.vertex_count()], &cfg, &mut rng);

@@ -18,14 +18,52 @@
 //! workload ratio of Formula (1) becomes the target weight vector, so the
 //! partitioner balances load in proportion to device speed while
 //! minimizing edge cut (PCIe transfer time).
+//!
+//! # CSR substrate
+//!
+//! Every phase runs on the flat METIS-style CSR layout of
+//! [`MetisGraph`] (`xadj`/`adjncy`/`adjwgt`), via the [`Adjacency`]
+//! trait. Recursive bisection never copies an induced subgraph: a child
+//! vertex subset is partitioned through a [`SubsetView`] — the parent
+//! graph plus a full→local index remap — and the first coarsening level
+//! below the view materializes a concrete (smaller) CSR graph, so the
+//! per-level cost is one filtered adjacency sweep instead of an O(E)
+//! allocation + copy.
+//!
+//! # Workspace reuse
+//!
+//! All scratch state lives in [`PartitionWorkspace`]: coarsening scatter
+//! buffers, FM gain arrays + bucket queues, the projection ping-pong
+//! buffer, the bisection remap, and a pool of retired [`CoarseLevel`]s
+//! whose `Vec`s are recycled. Invariants:
+//!
+//! * a workspace carries **no information** between calls — every buffer
+//!   is reinitialized before use, so `partition_with(g, cfg, ws)` returns
+//!   bit-identical results for a fresh or a reused workspace (asserted by
+//!   the determinism tests);
+//! * the remap buffer is all-`u32::MAX` outside of an active
+//!   `SubsetView` scope (builders restore it after use);
+//! * once buffers have grown to the largest graph seen, steady-state
+//!   partitioning performs no heap allocation in the coarsen/refine hot
+//!   paths (coarse graphs and per-level side vectors recycle through the
+//!   level pool and projection buffer);
+//! * phase wall-times accumulate into `ws.timer` (a
+//!   [`crate::benchkit::PhaseTimer`]) under `"coarsen"`, `"initial"`,
+//!   `"project"`, `"refine"` and `"finish"` until the caller clears it.
 
 pub mod coarsen;
 pub mod initial;
 pub mod quality;
 pub mod refine;
 
-use crate::dag::metis_io::MetisGraph;
+use std::time::Instant;
+
+use crate::benchkit::PhaseTimer;
+use crate::dag::metis_io::{Adjacency, MetisGraph};
 use crate::util::Pcg32;
+
+use coarsen::{CoarseLevel, CoarsenScratch};
+use refine::FmScratch;
 
 /// Partitioning parameters.
 #[derive(Debug, Clone)]
@@ -72,11 +110,7 @@ impl PartitionConfig {
     /// Bipartition with explicit `(target_0, target_1)` fractions — the
     /// paper's `(R_cpu, R_gpu)` from Formula (1)/(2).
     pub fn bipartition(r0: f64, r1: f64) -> PartitionConfig {
-        PartitionConfig {
-            k: 2,
-            targets: Some(vec![r0, r1]),
-            ..Default::default()
-        }
+        PartitionConfig { k: 2, targets: Some(vec![r0, r1]), ..Default::default() }
     }
 }
 
@@ -102,14 +136,73 @@ impl PartitionResult {
     }
 }
 
-/// Partition `g` per `cfg`. Panics on `k == 0`; `k == 1` returns the
-/// trivial partition.
+/// Reusable scratch state for the whole partitioning pipeline. See the
+/// module docs for the reuse invariants.
+#[derive(Debug, Clone, Default)]
+pub struct PartitionWorkspace {
+    coarsen: CoarsenScratch,
+    fm: FmScratch,
+    level_pool: Vec<CoarseLevel>,
+    proj: Vec<usize>,
+    remap: Vec<u32>,
+    /// Accumulated per-phase wall time; caller-cleared.
+    pub timer: PhaseTimer,
+}
+
+impl PartitionWorkspace {
+    pub fn new() -> PartitionWorkspace {
+        PartitionWorkspace::default()
+    }
+}
+
+/// Zero-copy induced-subgraph view: vertex `v` of the view is
+/// `verts[v]` of the parent, and parent neighbors outside the subset are
+/// filtered through the `local` remap (`u32::MAX` = absent).
+struct SubsetView<'a> {
+    g: &'a MetisGraph,
+    verts: &'a [usize],
+    local: &'a [u32],
+}
+
+impl Adjacency for SubsetView<'_> {
+    fn vertex_count(&self) -> usize {
+        self.verts.len()
+    }
+
+    fn vertex_weight(&self, v: usize) -> i64 {
+        self.g.vwgt[self.verts[v]]
+    }
+
+    fn for_neighbors(&self, v: usize, mut f: impl FnMut(usize, i64)) {
+        for (u, w) in self.g.neighbors(self.verts[v]) {
+            let lu = self.local[u];
+            if lu != u32::MAX {
+                f(lu as usize, w);
+            }
+        }
+    }
+}
+
+/// Partition `g` per `cfg` with a throwaway workspace. Panics on
+/// `k == 0`; `k == 1` returns the trivial partition.
 pub fn partition(g: &MetisGraph, cfg: &PartitionConfig) -> PartitionResult {
+    let mut ws = PartitionWorkspace::new();
+    partition_with(g, cfg, &mut ws)
+}
+
+/// Partition `g` per `cfg`, reusing `ws` scratch buffers. Results are
+/// identical to [`partition`]; steady-state callers (the gp scheduler,
+/// benches) avoid reallocating per plan.
+pub fn partition_with(
+    g: &MetisGraph,
+    cfg: &PartitionConfig,
+    ws: &mut PartitionWorkspace,
+) -> PartitionResult {
     assert!(cfg.k >= 1, "k must be >= 1");
     let n = g.vertex_count();
     if cfg.k == 1 || n == 0 {
         let parts = vec![0usize; n];
-        return finish(g, parts, 1.max(cfg.k));
+        return finish(g, parts, 1.max(cfg.k), ws);
     }
     let targets = match &cfg.targets {
         Some(t) => {
@@ -132,19 +225,27 @@ pub fn partition(g: &MetisGraph, cfg: &PartitionConfig) -> PartitionResult {
 
     let mut rng = Pcg32::seeded(cfg.seed);
     let mut parts = vec![0usize; n];
-    let t0 = std::time::Instant::now();
     let all: Vec<usize> = (0..n).collect();
-    recursive_bisect(g, &all, &targets, 0, &fixed, cfg, &mut rng, &mut parts);
-    if std::env::var("HETSCHED_PROF").is_ok() { eprintln!("recursive_bisect: {:?}", t0.elapsed()); }
-    let t1 = std::time::Instant::now();
-    let r = finish(g, parts, cfg.k);
-    if std::env::var("HETSCHED_PROF").is_ok() { eprintln!("finish: {:?}", t1.elapsed()); }
-    r
+    // The remap travels outside the workspace while subset views borrow
+    // it; taken here and restored below.
+    let mut remap = std::mem::take(&mut ws.remap);
+    remap.clear();
+    remap.resize(n, u32::MAX);
+    recursive_bisect(g, &all, &targets, 0, &fixed, cfg, &mut rng, &mut parts, &mut remap, ws);
+    ws.remap = remap;
+    finish(g, parts, cfg.k, ws)
 }
 
-fn finish(g: &MetisGraph, parts: Vec<usize>, k: usize) -> PartitionResult {
+fn finish(
+    g: &MetisGraph,
+    parts: Vec<usize>,
+    k: usize,
+    ws: &mut PartitionWorkspace,
+) -> PartitionResult {
+    let t0 = Instant::now();
     let edge_cut = quality::edge_cut(g, &parts);
     let part_weights = quality::part_weights(g, &parts, k);
+    ws.timer.lap("finish", t0);
     PartitionResult { parts, edge_cut, part_weights }
 }
 
@@ -159,6 +260,8 @@ fn recursive_bisect(
     cfg: &PartitionConfig,
     rng: &mut Pcg32,
     parts: &mut [usize],
+    remap: &mut [u32],
+    ws: &mut PartitionWorkspace,
 ) {
     let k = targets.len();
     if k == 1 {
@@ -168,7 +271,7 @@ fn recursive_bisect(
         return;
     }
     // Split the target vector in two halves; bisect with the summed
-    // fractions, then recurse into each side's induced subgraph.
+    // fractions, then recurse into each side through subset views.
     let k_left = k / 2;
     let t_left: f64 = targets[..k_left].iter().sum();
     let t_right: f64 = targets[k_left..].iter().sum();
@@ -185,15 +288,25 @@ fn recursive_bisect(
             1
         }
     };
-    // Top level: the subset is the whole graph — skip the induced copy
-    // (§Perf: the full-graph `induce` cost ~25% of a k=2 partition).
+    // Top level: the subset is the whole graph — skip the remap and run
+    // directly on the concrete CSR graph.
     let side = if vs.len() == g.vertex_count() {
         let sub_fixed: Vec<i8> = (0..g.vertex_count()).map(side_pin).collect();
-        bisect(g, frac_left, &sub_fixed, cfg, rng)
+        bisect_ws(g, frac_left, &sub_fixed, cfg, rng, ws)
     } else {
-        let (sub, sub_to_full) = induce(g, vs);
-        let sub_fixed: Vec<i8> = sub_to_full.iter().map(|&v| side_pin(v)).collect();
-        bisect(&sub, frac_left, &sub_fixed, cfg, rng)
+        let sub_fixed: Vec<i8> = vs.iter().map(|&v| side_pin(v)).collect();
+        for (i, &v) in vs.iter().enumerate() {
+            remap[v] = i as u32;
+        }
+        let side = {
+            let view = SubsetView { g, verts: vs, local: &remap[..] };
+            bisect_ws(&view, frac_left, &sub_fixed, cfg, rng, ws)
+        };
+        // Restore the all-absent invariant for sibling/child views.
+        for &v in vs {
+            remap[v] = u32::MAX;
+        }
+        side
     };
 
     let mut left = Vec::new();
@@ -208,35 +321,13 @@ fn recursive_bisect(
     // Renormalize child target vectors.
     let lt: Vec<f64> = targets[..k_left].iter().map(|x| x / t_left.max(1e-12)).collect();
     let rt: Vec<f64> = targets[k_left..].iter().map(|x| x / t_right.max(1e-12)).collect();
-    recursive_bisect(g, &left, &lt, part_base, fixed, cfg, rng, parts);
-    recursive_bisect(g, &right, &rt, part_base + k_left, fixed, cfg, rng, parts);
+    recursive_bisect(g, &left, &lt, part_base, fixed, cfg, rng, parts, remap, ws);
+    recursive_bisect(g, &right, &rt, part_base + k_left, fixed, cfg, rng, parts, remap, ws);
 }
 
-/// Induced subgraph over `vs`; returns (subgraph, sub-index -> full-index).
-fn induce(g: &MetisGraph, vs: &[usize]) -> (MetisGraph, Vec<usize>) {
-    let mut full_to_sub = vec![usize::MAX; g.vertex_count()];
-    for (i, &v) in vs.iter().enumerate() {
-        full_to_sub[v] = i;
-    }
-    let vwgt = vs.iter().map(|&v| g.vwgt[v]).collect();
-    let adj = vs
-        .iter()
-        .map(|&v| {
-            g.adj[v]
-                .iter()
-                .filter_map(|&(u, w)| {
-                    let su = full_to_sub[u];
-                    (su != usize::MAX).then_some((su, w))
-                })
-                .collect()
-        })
-        .collect();
-    (MetisGraph { vwgt, adj }, vs.to_vec())
-}
-
-/// Multilevel bisection of `g` with part-0 target fraction `frac0`.
-/// `fixed[v]` pins vertex `v` to side 0/1 (-1 = free).
-/// Returns a 0/1 side per vertex.
+/// Multilevel bisection of `g` with part-0 target fraction `frac0`, using
+/// a throwaway workspace. `fixed[v]` pins vertex `v` to side 0/1 (-1 =
+/// free). Returns a 0/1 side per vertex.
 pub fn bisect(
     g: &MetisGraph,
     frac0: f64,
@@ -244,16 +335,29 @@ pub fn bisect(
     cfg: &PartitionConfig,
     rng: &mut Pcg32,
 ) -> Vec<usize> {
+    bisect_ws(g, frac0, fixed, cfg, rng, &mut PartitionWorkspace::new())
+}
+
+/// Multilevel bisection over any [`Adjacency`] (concrete CSR graph or
+/// subset view), reusing workspace scratch.
+fn bisect_ws<G: Adjacency>(
+    g: &G,
+    frac0: f64,
+    fixed: &[i8],
+    cfg: &PartitionConfig,
+    rng: &mut Pcg32,
+    ws: &mut PartitionWorkspace,
+) -> Vec<usize> {
     let n = g.vertex_count();
     if n == 0 {
         return Vec::new();
     }
-    let total: i64 = g.vwgt.iter().sum();
+    let total: i64 = g.total_vertex_weight();
     // Degenerate target: everything (except pins) lands on one side.
     // Mirrors the paper's MM observation — Formula (1) drives R_cpu toward
     // 0 and the whole graph onto the GPU.
     let target0 = frac0 * total as f64;
-    let min_w = g.vwgt.iter().copied().filter(|&w| w > 0).min().unwrap_or(1);
+    let min_w = (0..n).map(|v| g.vertex_weight(v)).filter(|&w| w > 0).min().unwrap_or(1);
     if target0 < min_w as f64 / 2.0 {
         return (0..n).map(|v| if fixed[v] == 0 { 0 } else { 1 }).collect();
     }
@@ -264,38 +368,69 @@ pub fn bisect(
     // --- coarsening phase ---
     // levels[i] maps level-i fine vertices to level-(i+1) coarse ones;
     // the level-0 fine graph is `g` itself (never cloned — §Perf 1).
-    let mut levels: Vec<coarsen::CoarseLevel> = Vec::new();
-    while levels.last().map(|l| &l.coarse).unwrap_or(g).vertex_count() > cfg.coarsen_until {
-        let (cur_g, cur_fixed): (&MetisGraph, &[i8]) = match levels.last() {
-            Some(l) => (&l.coarse, &l.coarse_fixed),
-            None => (g, fixed),
-        };
-        let lvl = coarsen::coarsen_once(cur_g, cur_fixed, rng);
+    let mut t0 = Instant::now();
+    let mut levels: Vec<CoarseLevel> = Vec::new();
+    loop {
+        let cur_n = levels.last().map(|l| l.coarse.vertex_count()).unwrap_or(n);
+        if cur_n <= cfg.coarsen_until {
+            break;
+        }
+        let mut lvl = ws.level_pool.pop().unwrap_or_default();
+        match levels.last() {
+            Some(l) => {
+                let (cg, cf) = (&l.coarse, &l.coarse_fixed);
+                coarsen::coarsen_once_into(cg, cf, rng, &mut ws.coarsen, &mut lvl);
+            }
+            None => coarsen::coarsen_once_into(g, fixed, rng, &mut ws.coarsen, &mut lvl),
+        }
         // Matching stalled (e.g. star graphs): stop coarsening.
-        if lvl.coarse.vertex_count() as f64 > 0.95 * cur_g.vertex_count() as f64 {
+        if lvl.coarse.vertex_count() as f64 > 0.95 * cur_n as f64 {
+            ws.level_pool.push(lvl);
             break;
         }
         levels.push(lvl);
     }
+    t0 = ws.timer.lap("coarsen", t0);
 
     // --- initial partition on the coarsest graph ---
-    let (coarsest, coarsest_fixed): (&MetisGraph, &[i8]) = match levels.last() {
-        Some(l) => (&l.coarse, &l.coarse_fixed),
-        None => (g, fixed),
+    let mut side = match levels.last() {
+        Some(l) => {
+            let mut s = initial::greedy_growing(&l.coarse, frac0, &l.coarse_fixed, cfg, rng);
+            refine::fm_refine_ws(&l.coarse, &mut s, frac0, &l.coarse_fixed, cfg, rng, &mut ws.fm);
+            s
+        }
+        None => {
+            let mut s = initial::greedy_growing(g, frac0, fixed, cfg, rng);
+            refine::fm_refine_ws(g, &mut s, frac0, fixed, cfg, rng, &mut ws.fm);
+            s
+        }
     };
-    let mut side = initial::greedy_growing(coarsest, frac0, coarsest_fixed, cfg, rng);
-    refine::fm_refine(coarsest, &mut side, frac0, coarsest_fixed, cfg, rng);
+    ws.timer.lap("initial", t0);
 
     // --- uncoarsen + refine ---
     for i in (0..levels.len()).rev() {
-        side = levels[i].project(&side);
-        let (fine_g, fine_fixed): (&MetisGraph, &[i8]) = if i == 0 {
-            (g, fixed)
+        let tp = Instant::now();
+        levels[i].project_into(&side, &mut ws.proj);
+        std::mem::swap(&mut side, &mut ws.proj);
+        let tr = ws.timer.lap("project", tp);
+        if i == 0 {
+            refine::fm_refine_ws(g, &mut side, frac0, fixed, cfg, rng, &mut ws.fm);
         } else {
-            (&levels[i - 1].coarse, &levels[i - 1].coarse_fixed)
-        };
-        refine::fm_refine(fine_g, &mut side, frac0, fine_fixed, cfg, rng);
+            let fine = &levels[i - 1];
+            refine::fm_refine_ws(
+                &fine.coarse,
+                &mut side,
+                frac0,
+                &fine.coarse_fixed,
+                cfg,
+                rng,
+                &mut ws.fm,
+            );
+        }
+        ws.timer.lap("refine", tr);
     }
+    // Retire the hierarchy into the pool for buffer reuse.
+    ws.level_pool.append(&mut levels);
     side
 }
 
@@ -319,7 +454,7 @@ mod tests {
         }
         adj[0].push((sz, light));
         adj[sz].push((0, light));
-        MetisGraph { vwgt: vec![1; n], adj }
+        MetisGraph::from_adj(vec![1; n], adj)
     }
 
     #[test]
@@ -356,7 +491,7 @@ mod tests {
 
     #[test]
     fn empty_graph() {
-        let g = MetisGraph { vwgt: vec![], adj: vec![] };
+        let g = MetisGraph::empty();
         let res = partition(&g, &PartitionConfig::default());
         assert!(res.parts.is_empty());
     }
@@ -370,7 +505,7 @@ mod tests {
             adj[i].push((i + 1, 1));
             adj[i + 1].push((i, 1));
         }
-        let g = MetisGraph { vwgt: vec![1; n], adj };
+        let g = MetisGraph::from_adj(vec![1; n], adj);
         let cfg = PartitionConfig::bipartition(1.0 / 3.0, 2.0 / 3.0);
         let res = partition(&g, &cfg);
         let f = res.fractions();
@@ -401,7 +536,7 @@ mod tests {
             adj[a].push((b, 1));
             adj[b].push((a, 1));
         }
-        let g = MetisGraph { vwgt: vec![1; n], adj };
+        let g = MetisGraph::from_adj(vec![1; n], adj);
         let res = partition(&g, &PartitionConfig { k: 4, seed: 3, ..Default::default() });
         assert_eq!(res.part_weights, vec![sz as i64; 4]);
         assert!(res.edge_cut <= 4, "cut {} should be the ring only", res.edge_cut);
@@ -420,53 +555,60 @@ mod tests {
         let b = partition(&g, &cfg);
         assert_eq!(a.parts, b.parts);
     }
-// temporary profiling harness (appended to partition/mod.rs tests)
-#[test]
-#[ignore]
-fn profile_phases() {
-    use std::time::Instant;
-    let n = 100_000usize;
-    let cols = (n as f64).sqrt().ceil() as usize;
-    let mut adj: Vec<Vec<(usize, i64)>> = vec![Vec::new(); n];
-    for v in 0..n {
-        if v + 1 < n && (v + 1) % cols != 0 { adj[v].push((v + 1, 10)); adj[v + 1].push((v, 10)); }
-        if v + cols < n { adj[v].push((v + cols, 10)); adj[v + cols].push((v, 10)); }
+
+    #[test]
+    fn workspace_reuse_matches_fresh() {
+        // One workspace across differently-shaped problems must yield the
+        // same results as fresh workspaces — the reuse invariant.
+        let graphs = [
+            two_cliques(8, 10, 1),
+            two_cliques(3, 4, 2),
+            MetisGraph::from_adj(vec![7], vec![vec![]]),
+        ];
+        let mut ws = PartitionWorkspace::new();
+        for (i, g) in graphs.iter().enumerate() {
+            for k in [1usize, 2, 3] {
+                let cfg = PartitionConfig {
+                    k: k.min(g.vertex_count().max(1)),
+                    seed: 7 + i as u64,
+                    ..Default::default()
+                };
+                let fresh = partition(g, &cfg);
+                let reused = partition_with(g, &cfg, &mut ws);
+                assert_eq!(fresh.parts, reused.parts, "graph {i} k={k}");
+                assert_eq!(fresh.edge_cut, reused.edge_cut, "graph {i} k={k}");
+            }
+        }
     }
-    let g = MetisGraph { vwgt: vec![1; n], adj };
-    let cfg = PartitionConfig::default();
-    let mut rng = Pcg32::seeded(1);
-    let fixed = vec![-1i8; n];
 
-    // coarsening only
-    let t0 = Instant::now();
-    let mut levels: Vec<coarsen::CoarseLevel> = Vec::new();
-    while levels.last().map(|l| &l.coarse).unwrap_or(&g).vertex_count() > cfg.coarsen_until {
-        let (cur_g, cur_fixed): (&MetisGraph, &[i8]) = match levels.last() {
-            Some(l) => (&l.coarse, &l.coarse_fixed),
-            None => (&g, &fixed),
-        };
-        let lvl = coarsen::coarsen_once(cur_g, cur_fixed, &mut rng);
-        if lvl.coarse.vertex_count() as f64 > 0.95 * cur_g.vertex_count() as f64 { break; }
-        levels.push(lvl);
+    #[test]
+    fn workspace_timer_reports_phases() {
+        let g = two_cliques(40, 10, 1);
+        let mut ws = PartitionWorkspace::new();
+        let cfg = PartitionConfig::default();
+        let _ = partition_with(&g, &cfg, &mut ws);
+        assert!(ws.timer.ms("coarsen") >= 0.0);
+        assert!(ws.timer.total_ms() > 0.0);
+        let phases: Vec<&str> = ws.timer.entries().iter().map(|(p, _)| *p).collect();
+        assert!(phases.contains(&"finish"));
+        assert!(phases.contains(&"initial"));
+        ws.timer.clear();
+        assert_eq!(ws.timer.entries().len(), 0);
     }
-    let t_coarsen = t0.elapsed();
-    eprintln!("coarsen: {:?} ({} levels)", t_coarsen, levels.len());
 
-    let (coarsest, coarsest_fixed): (&MetisGraph, &[i8]) = (&levels.last().unwrap().coarse, &levels.last().unwrap().coarse_fixed);
-    let t0 = Instant::now();
-    let mut side = initial::greedy_growing(coarsest, 0.5, coarsest_fixed, &cfg, &mut rng);
-    refine::fm_refine(coarsest, &mut side, 0.5, coarsest_fixed, &cfg, &mut rng);
-    eprintln!("initial: {:?}", t0.elapsed());
-
-    let t0 = Instant::now();
-    for i in (0..levels.len()).rev() {
-        side = levels[i].project(&side);
-        let (fine_g, fine_fixed): (&MetisGraph, &[i8]) = if i == 0 { (&g, &fixed[..]) } else { (&levels[i-1].coarse, &levels[i-1].coarse_fixed) };
-        let tl = Instant::now();
-        refine::fm_refine(fine_g, &mut side, 0.5, fine_fixed, &cfg, &mut rng);
-        eprintln!("  refine level {i} ({} verts): {:?}", fine_g.vertex_count(), tl.elapsed());
+    #[test]
+    fn kway_with_pins_through_views() {
+        // Pins must survive the subset-view recursion (k=3 exercises an
+        // uneven split with views on both sides).
+        let g = two_cliques(9, 6, 1); // 18 vertices
+        let mut fixed = vec![-1i32; 18];
+        fixed[0] = 2;
+        fixed[17] = 0;
+        let cfg =
+            PartitionConfig { k: 3, fixed: Some(fixed.clone()), seed: 5, ..Default::default() };
+        let res = partition(&g, &cfg);
+        assert_eq!(res.parts[0], 2, "pin to part 2 violated");
+        assert_eq!(res.parts[17], 0, "pin to part 0 violated");
+        assert!(res.parts.iter().all(|&p| p < 3));
     }
-    eprintln!("refine total: {:?}", t0.elapsed());
-}
-
 }

@@ -1,25 +1,29 @@
 //! Partition quality metrics: edge cut, per-part weights, imbalance.
+//!
+//! All metrics are generic over [`Adjacency`] so they evaluate both the
+//! concrete CSR graph and the partitioner's internal subset views.
 
-use crate::dag::metis_io::MetisGraph;
+use crate::dag::metis_io::Adjacency;
 
 /// Total weight of edges whose endpoints lie in different parts.
-pub fn edge_cut(g: &MetisGraph, parts: &[usize]) -> i64 {
+pub fn edge_cut<G: Adjacency>(g: &G, parts: &[usize]) -> i64 {
     let mut cut = 0i64;
     for v in 0..g.vertex_count() {
-        for &(u, w) in &g.adj[v] {
-            if parts[u] != parts[v] {
+        let pv = parts[v];
+        g.for_neighbors(v, |u, w| {
+            if parts[u] != pv {
                 cut += w;
             }
-        }
+        });
     }
-    cut / 2 // each undirected edge stored twice
+    cut / 2 // each undirected edge visited from both endpoints
 }
 
 /// Sum of vertex weights per part.
-pub fn part_weights(g: &MetisGraph, parts: &[usize], k: usize) -> Vec<i64> {
+pub fn part_weights<G: Adjacency>(g: &G, parts: &[usize], k: usize) -> Vec<i64> {
     let mut w = vec![0i64; k];
     for v in 0..g.vertex_count() {
-        w[parts[v]] += g.vwgt[v];
+        w[parts[v]] += g.vertex_weight(v);
     }
     w
 }
@@ -27,7 +31,7 @@ pub fn part_weights(g: &MetisGraph, parts: &[usize], k: usize) -> Vec<i64> {
 /// Per-part imbalance relative to target fractions:
 /// `achieved_fraction / target_fraction` (1.0 = perfect). Parts with a
 /// zero target report 1.0 when empty and +inf when non-empty.
-pub fn imbalance(g: &MetisGraph, parts: &[usize], targets: &[f64]) -> Vec<f64> {
+pub fn imbalance<G: Adjacency>(g: &G, parts: &[usize], targets: &[f64]) -> Vec<f64> {
     let w = part_weights(g, parts, targets.len());
     let total: i64 = w.iter().sum();
     targets
@@ -50,14 +54,15 @@ pub fn imbalance(g: &MetisGraph, parts: &[usize], targets: &[f64]) -> Vec<f64> {
 
 /// Number of cut edges (unweighted) — the paper's "data transfer
 /// frequency" proxy for a pinned partition.
-pub fn cut_edge_count(g: &MetisGraph, parts: &[usize]) -> usize {
+pub fn cut_edge_count<G: Adjacency>(g: &G, parts: &[usize]) -> usize {
     let mut cnt = 0usize;
     for v in 0..g.vertex_count() {
-        for &(u, _) in &g.adj[v] {
-            if parts[u] != parts[v] {
+        let pv = parts[v];
+        g.for_neighbors(v, |u, _| {
+            if parts[u] != pv {
                 cnt += 1;
             }
-        }
+        });
     }
     cnt / 2
 }
@@ -65,6 +70,7 @@ pub fn cut_edge_count(g: &MetisGraph, parts: &[usize]) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dag::metis_io::MetisGraph;
 
     fn triangle() -> MetisGraph {
         let mut adj = vec![Vec::new(); 3];
@@ -75,7 +81,7 @@ mod tests {
         add(0, 1, 5, &mut adj);
         add(1, 2, 7, &mut adj);
         add(0, 2, 11, &mut adj);
-        MetisGraph { vwgt: vec![1, 2, 3], adj }
+        MetisGraph::from_adj(vec![1, 2, 3], adj)
     }
 
     #[test]

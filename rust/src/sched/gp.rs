@@ -17,9 +17,9 @@
 //!    lookup — the amortized "singular decision" of §IV.D.
 
 use super::{DispatchCtx, Scheduler};
-use crate::dag::metis_io::dag_to_metis;
+use crate::dag::metis_io::dag_to_builder;
 use crate::dag::{Dag, KernelKind, NodeId};
-use crate::partition::{partition, PartitionConfig, PartitionResult};
+use crate::partition::{partition_with, PartitionConfig, PartitionResult, PartitionWorkspace};
 use crate::perfmodel::{edge_weight_us, node_weight_us, NodeWeightPolicy, PerfModel};
 use crate::platform::{DeviceId, Platform};
 
@@ -48,11 +48,20 @@ pub struct GraphPartition {
     parts: Vec<DeviceId>,
     last_result: Option<PartitionResult>,
     ratios: Vec<f64>,
+    /// Partitioner scratch, reused across `plan` calls (replanning a
+    /// stream of DAGs allocates nothing once buffers are warm).
+    workspace: PartitionWorkspace,
 }
 
 impl GraphPartition {
     pub fn new(config: GpConfig) -> GraphPartition {
-        GraphPartition { config, parts: Vec::new(), last_result: None, ratios: Vec::new() }
+        GraphPartition {
+            config,
+            parts: Vec::new(),
+            last_result: None,
+            ratios: Vec::new(),
+            workspace: PartitionWorkspace::new(),
+        }
     }
 
     /// The pinned device per node (valid after `plan`).
@@ -99,7 +108,7 @@ impl Scheduler for GraphPartition {
     fn plan(&mut self, dag: &Dag, platform: &Platform, model: &dyn PerfModel) {
         let policy = self.config.node_weight;
         let n = dag.node_count();
-        let mut metis = dag_to_metis(
+        let mut builder = dag_to_builder(
             dag,
             |id: NodeId| {
                 let node = dag.node(id);
@@ -113,9 +122,7 @@ impl Scheduler for GraphPartition {
         // modelling both as edges to a vertex *pinned to the host
         // partition* lets the cut metric see initial-load and write-back
         // transfers, not just inter-kernel ones.
-        let anchor = metis.vwgt.len();
-        metis.vwgt.push(0);
-        metis.adj.push(Vec::new());
+        let anchor = builder.add_vertex(0);
         for (id, node) in dag.nodes() {
             if node.kernel == KernelKind::Source {
                 continue;
@@ -130,10 +137,10 @@ impl Scheduler for GraphPartition {
                 w += edge_weight_us(model, mat_bytes);
             }
             if w > 0 {
-                metis.adj[anchor].push((id, w));
-                metis.adj[id].push((anchor, w));
+                builder.add_edge(anchor, id, w);
             }
         }
+        let metis = builder.build();
         let mut fixed = vec![-1i32; n + 1];
         fixed[anchor] = 0; // host partition = device 0's memory node
 
@@ -146,7 +153,7 @@ impl Scheduler for GraphPartition {
             fixed: Some(fixed),
             ..Default::default()
         };
-        let result = partition(&metis, &cfg);
+        let result = partition_with(&metis, &cfg, &mut self.workspace);
         self.parts = result.parts[..n].to_vec();
         self.last_result = Some(result);
     }
@@ -238,8 +245,14 @@ mod tests {
         let dag = generate_layered(&GeneratorConfig::paper(KernelKind::Ma, 512));
         let platform = Platform::paper();
         let model = CalibratedModel::default();
-        let mut a = GraphPartition::new(GpConfig { node_weight: NodeWeightPolicy::GpuTime, ..Default::default() });
-        let mut b = GraphPartition::new(GpConfig { node_weight: NodeWeightPolicy::CpuTime, ..Default::default() });
+        let mut a = GraphPartition::new(GpConfig {
+            node_weight: NodeWeightPolicy::GpuTime,
+            ..Default::default()
+        });
+        let mut b = GraphPartition::new(GpConfig {
+            node_weight: NodeWeightPolicy::CpuTime,
+            ..Default::default()
+        });
         a.plan(&dag, &platform, &model);
         b.plan(&dag, &platform, &model);
         // Both must produce complete pinnings.

@@ -51,12 +51,19 @@ impl Json {
 }
 
 /// Parse error with byte offset.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {at}: {msg}")]
+#[derive(Debug)]
 pub struct JsonError {
     pub at: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.at, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 struct P<'a> {
     b: &'a [u8],
@@ -204,7 +211,9 @@ impl<'a> P<'a> {
                         }
                         self.i += 1;
                     }
-                    s.push_str(std::str::from_utf8(&self.b[start..self.i]).map_err(|_| self.err("bad utf8"))?);
+                    let run = std::str::from_utf8(&self.b[start..self.i])
+                        .map_err(|_| self.err("bad utf8"))?;
+                    s.push_str(run);
                 }
                 None => return Err(self.err("unterminated string")),
             }

@@ -1,0 +1,142 @@
+//! CSR-partitioner parity: the flat-CSR substrate (bucket-gain FM,
+//! view-based recursive bisection, workspace reuse) must reproduce the
+//! seed implementation's results on the historical test corpus —
+//! two-clique bridges, ring-connected clique k-way splits, and weighted
+//! paths — under fixed seeds, and must be bit-deterministic across
+//! repeated runs and workspace reuse.
+
+use hetsched::dag::metis_io::MetisGraph;
+use hetsched::partition::{partition, partition_with, quality, PartitionConfig, PartitionWorkspace};
+
+/// Two dense cliques joined by a single light edge (the seed corpus
+/// graph from `partition::tests`).
+fn two_cliques(sz: usize, heavy: i64, light: i64) -> MetisGraph {
+    let n = 2 * sz;
+    let mut adj = vec![Vec::new(); n];
+    for c in 0..2 {
+        for i in 0..sz {
+            for j in 0..sz {
+                if i != j {
+                    adj[c * sz + i].push((c * sz + j, heavy));
+                }
+            }
+        }
+    }
+    adj[0].push((sz, light));
+    adj[sz].push((0, light));
+    MetisGraph::from_adj(vec![1; n], adj)
+}
+
+/// 4 cliques of `sz`, ring-connected by unit edges (seed corpus).
+fn four_cliques(sz: usize) -> MetisGraph {
+    let n = 4 * sz;
+    let mut adj = vec![Vec::new(); n];
+    for c in 0..4 {
+        for i in 0..sz {
+            for j in 0..sz {
+                if i != j {
+                    adj[c * sz + i].push((c * sz + j, 20));
+                }
+            }
+        }
+    }
+    for c in 0..4 {
+        let a = c * sz;
+        let b = ((c + 1) % 4) * sz;
+        adj[a].push((b, 1));
+        adj[b].push((a, 1));
+    }
+    MetisGraph::from_adj(vec![1; n], adj)
+}
+
+fn path(n: usize, w: i64) -> MetisGraph {
+    let mut adj = vec![Vec::new(); n];
+    for i in 0..n - 1 {
+        adj[i].push((i + 1, w));
+        adj[i + 1].push((i, w));
+    }
+    MetisGraph::from_adj(vec![1; n], adj)
+}
+
+/// The seed implementation's pinned outcomes on `two_cliques(8, 10, 1)`:
+/// exactly the bridge is cut, parts are the two cliques, weights 8/8.
+#[test]
+fn parity_two_cliques_bridge_cut() {
+    let g = two_cliques(8, 10, 1);
+    let res = partition(&g, &PartitionConfig::default());
+    assert_eq!(res.edge_cut, 1, "seed cut only the light bridge");
+    assert_eq!(res.part_weights, vec![8, 8]);
+    assert!(res.parts[..8].iter().all(|&p| p == res.parts[0]));
+    assert!(res.parts[8..].iter().all(|&p| p == res.parts[8]));
+    assert_ne!(res.parts[0], res.parts[8]);
+}
+
+/// Seed outcome on the k=4 clique ring (seed 3): perfectly balanced
+/// parts, only ring edges cut, cliques kept whole.
+#[test]
+fn parity_kway_four_cliques() {
+    let sz = 6;
+    let g = four_cliques(sz);
+    let res = partition(&g, &PartitionConfig { k: 4, seed: 3, ..Default::default() });
+    assert_eq!(res.part_weights, vec![sz as i64; 4]);
+    assert!(res.edge_cut <= 4, "cut {} exceeds the ring", res.edge_cut);
+    for c in 0..4 {
+        let p0 = res.parts[c * sz];
+        assert!((0..sz).all(|i| res.parts[c * sz + i] == p0), "clique {c} split");
+    }
+}
+
+/// Seed outcomes on paths: a balanced bisection of a path cuts ~1 edge;
+/// a 1:2 split respects the target within the seed's tolerance.
+#[test]
+fn parity_paths() {
+    let g = path(64, 5);
+    let res = partition(&g, &PartitionConfig::default());
+    assert!(res.edge_cut <= 10, "path bisection cut {} too high", res.edge_cut);
+    let f = res.fractions();
+    assert!((f[0] - 0.5).abs() < 0.1, "path split fractions {f:?}");
+
+    let g = path(30, 1);
+    let res = partition(&g, &PartitionConfig::bipartition(1.0 / 3.0, 2.0 / 3.0));
+    let f = res.fractions();
+    assert!((f[0] - 1.0 / 3.0).abs() < 0.12, "got fractions {f:?}");
+    assert!(res.edge_cut <= 3, "cut {} too high for a path", res.edge_cut);
+}
+
+/// Fixed seed => bit-identical parts, across runs AND across workspace
+/// reuse, on the whole corpus.
+#[test]
+fn fixed_seed_determinism_with_and_without_workspace() {
+    let corpus: Vec<(MetisGraph, PartitionConfig)> = vec![
+        (two_cliques(8, 10, 1), PartitionConfig::default()),
+        (two_cliques(10, 5, 1), PartitionConfig { seed: 42, ..Default::default() }),
+        (four_cliques(6), PartitionConfig { k: 4, seed: 3, ..Default::default() }),
+        (path(30, 1), PartitionConfig::bipartition(1.0 / 3.0, 2.0 / 3.0)),
+        (path(200, 2), PartitionConfig { k: 3, seed: 9, ..Default::default() }),
+    ];
+    let mut ws = PartitionWorkspace::new();
+    for (i, (g, cfg)) in corpus.iter().enumerate() {
+        let a = partition(g, cfg);
+        let b = partition(g, cfg);
+        assert_eq!(a.parts, b.parts, "case {i}: rerun differs");
+        // Workspace-reusing runs interleaved with other problems must
+        // still match the fresh-workspace result exactly.
+        let c = partition_with(g, cfg, &mut ws);
+        assert_eq!(a.parts, c.parts, "case {i}: workspace reuse differs");
+        assert_eq!(a.edge_cut, c.edge_cut, "case {i}: cut differs");
+        assert_eq!(a.part_weights, c.part_weights, "case {i}: weights differ");
+        // Reported metrics are recounts, not stale accumulators.
+        assert_eq!(a.edge_cut, quality::edge_cut(g, &a.parts), "case {i}");
+        assert_eq!(
+            a.part_weights,
+            quality::part_weights(g, &a.parts, cfg.k),
+            "case {i}"
+        );
+    }
+    // Second sweep over the same corpus with the warm workspace.
+    for (i, (g, cfg)) in corpus.iter().enumerate() {
+        let a = partition(g, cfg);
+        let c = partition_with(g, cfg, &mut ws);
+        assert_eq!(a.parts, c.parts, "case {i}: warm workspace differs");
+    }
+}

@@ -44,7 +44,11 @@ fn forall_schedules_are_feasible_and_bounded() {
         );
         for name in SCHEDULERS {
             let mut s = sched::by_name(name).unwrap();
-            let cfg = SimConfig { return_results_to_host: false, collect_trace: true, ..Default::default() };
+            let cfg = SimConfig {
+                return_results_to_host: false,
+                collect_trace: true,
+                ..Default::default()
+            };
             let r = simulate(&dag, s.as_mut(), &platform, &model, &cfg);
             assert!(
                 r.makespan_ms >= cp - 1e-9,
@@ -149,7 +153,7 @@ fn forall_partitions_consistent() {
             }
         }
         let vwgt: Vec<i64> = (0..n).map(|_| 1 + rng.gen_range(9) as i64).collect();
-        let g = metis_io::MetisGraph { vwgt, adj };
+        let g = metis_io::MetisGraph::from_adj(vwgt, adj);
 
         let k = rng.gen_range_usize(1, 5.min(n + 1));
         let targets: Option<Vec<f64>> = if rng.gen_bool(0.5) {
@@ -187,7 +191,7 @@ fn forall_fixed_vertices_respected() {
             let w = adj[v][adj[v].len() - 1].1;
             adj[u].push((v, w));
         }
-        let g = metis_io::MetisGraph { vwgt: vec![1; n], adj };
+        let g = metis_io::MetisGraph::from_adj(vec![1; n], adj);
         let mut fixed = vec![-1i32; n];
         for _ in 0..rng.gen_range_usize(1, 1 + n / 4) {
             let v = rng.gen_range_usize(0, n);
@@ -219,6 +223,77 @@ fn forall_dot_roundtrip() {
             assert_eq!(p.dag.node(rid).size, n.size);
             let _ = id;
         }
+    }
+}
+
+/// CSR construction round-trips `dag_to_metis`: for random weighted
+/// digraphs (antiparallel edges included), the CSR graph matches a
+/// from-scratch per-vertex-HashMap symmetrization (the seed
+/// implementation's construction), is structurally symmetric, merges
+/// antiparallel duplicates, and its degree sums equal twice the edge
+/// count.
+#[test]
+fn forall_csr_construction_roundtrips() {
+    use std::collections::HashMap;
+    let mut rng = Pcg32::seeded(0xC52);
+    for trial in 0..40 {
+        // Random digraph over a Dag shell; ~1/8 of edges get an
+        // antiparallel twin so duplicate merging is always exercised.
+        let n = rng.gen_range_usize(2, 60);
+        let mut dag = hetsched::dag::Dag::new();
+        for i in 0..n {
+            dag.add_node(format!("n{i}"), KernelKind::Ma, 64);
+        }
+        let m = rng.gen_range_usize(1, 3 * n);
+        let mut pairs: Vec<(usize, usize)> = Vec::new();
+        for _ in 0..m {
+            let a = rng.gen_range_usize(0, n);
+            let b = rng.gen_range_usize(0, n);
+            if a == b {
+                continue;
+            }
+            dag.add_edge(a, b);
+            pairs.push((a, b));
+            if rng.gen_bool(0.125) {
+                dag.add_edge(b, a);
+                pairs.push((b, a));
+            }
+        }
+        let edge_w = |e: hetsched::dag::EdgeId| 1 + (e as i64 * 7) % 13;
+        let node_w = |v: hetsched::dag::NodeId| 1 + v as i64;
+        let g = metis_io::dag_to_metis(&dag, node_w, edge_w);
+
+        // Reference: the seed's HashMap-merged symmetrization.
+        let mut merged: Vec<HashMap<usize, i64>> = vec![HashMap::new(); n];
+        for (eid, &(a, b)) in pairs.iter().enumerate() {
+            let w = edge_w(eid).max(1);
+            *merged[a].entry(b).or_insert(0) += w;
+            *merged[b].entry(a).or_insert(0) += w;
+        }
+        let mut undirected = 0usize;
+        for v in 0..n {
+            let mut want: Vec<(usize, i64)> = merged[v].iter().map(|(&u, &w)| (u, w)).collect();
+            want.sort_unstable();
+            let got: Vec<(usize, i64)> = g.neighbors(v).collect();
+            assert_eq!(got, want, "trial {trial}: vertex {v} adjacency mismatch");
+            undirected += want.len();
+            assert_eq!(g.vwgt[v], node_w(v), "trial {trial}: vwgt {v}");
+        }
+        // Degree sum = directed entry count = 2 * undirected edges.
+        assert_eq!(undirected, g.adjncy.len(), "trial {trial}: degree sum");
+        assert_eq!(g.edge_count() * 2, g.adjncy.len(), "trial {trial}: edge count");
+        // Symmetry with equal weights.
+        for v in 0..n {
+            for (u, w) in g.neighbors(v) {
+                assert!(
+                    g.neighbors(u).any(|(x, xw)| x == v && xw == w),
+                    "trial {trial}: asymmetric {v}<->{u}"
+                );
+            }
+        }
+        // Text roundtrip preserves the CSR exactly.
+        let text = metis_io::write_metis(&g);
+        assert_eq!(metis_io::parse_metis(&text).unwrap(), g, "trial {trial}: text roundtrip");
     }
 }
 
