@@ -409,6 +409,7 @@ class GainBuckets:
         self.leaf = []
         self.shift = 0
         self.highest = 0
+        self.gain_shift = 0
 
     def reset(self, n):
         self.lists = {}
@@ -417,8 +418,13 @@ class GainBuckets:
         while n > (NCHUNK << self.shift):
             self.shift += 1
         self.highest = 0
+        self.gain_shift = 0
+
+    def set_gain_shift(self, shift):
+        self.gain_shift = shift
 
     def leaf_of(self, v, gain):
+        gain = gain >> self.gain_shift
         if -EXACT_GAIN <= gain <= EXACT_GAIN:
             return EXACT_BASE + (gain + EXACT_GAIN) * NCHUNK + (v >> self.shift)
         if gain > 0:
@@ -490,6 +496,8 @@ def fm_pass(g, side, lo0, hi0, fixed, cut):
     buckets.reset(n)
 
     w0 = 0
+    min_w = None
+    seeds = []
     for v in range(n):
         sv = side[v]
         if sv == 0:
@@ -499,6 +507,8 @@ def fm_pass(g, side, lo0, hi0, fixed, cut):
         boundary = False
         for (u, w) in g.neighbors(v):
             deg += 1
+            if w > 0 and (min_w is None or w < min_w):
+                min_w = w
             if side[u] != sv:
                 gsum += w
                 boundary = True
@@ -507,7 +517,11 @@ def fm_pass(g, side, lo0, hi0, fixed, cut):
         gain[v] = gsum
         locked[v] = fixed[v] >= 0
         if not locked[v] and (boundary or deg == 0):
-            buckets.insert(v, gsum)
+            seeds.append(v)
+    gain_shift = 0 if min_w is None else min_w.bit_length() - 1
+    buckets.set_gain_shift(gain_shift)
+    for v in seeds:
+        buckets.insert(v, gain[v])
 
     running_cut = cut
     best_cut = cut

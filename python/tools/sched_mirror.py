@@ -1,0 +1,961 @@
+"""Python mirror of the Rust scheduling stack (model + generator + sim).
+
+Extends ``partition_mirror`` (the bit-exact PCG32 + multilevel
+partitioner transliteration from PR 1) with line-for-line mirrors of:
+
+* ``perfmodel::CalibratedModel`` (f64 op order preserved — ``powi(3)``
+  becomes ``(x*x)*x`` exactly as LLVM expands it);
+* ``dag::generator::generate_layered`` and ``dag::workloads`` (phased,
+  chain);
+* ``sched``: eager / dmda / gp / windowed-gp policies, Formula (1)/(2)
+  ratios, the µs node/edge weighting of the gp plan;
+* ``sim::engine::simulate`` (ready-heap order, MSI directory, bus
+  channels, prefetch, return-to-host) — transfer *counts* are exact
+  integers; makespans are f64s that match the Rust engine to the last
+  bit when the transliteration is faithful, and goldens derived from
+  here are compared with 1e-9 relative tolerance on the Rust side.
+
+Used to validate behavior-dependent test assertions and to generate the
+golden no-drift numbers + mirror-harness ``BENCH_sched_session.json``
+in environments without a Rust toolchain.
+
+Run:  python3 python/tools/sched_mirror.py checks   # assertion sweep
+      python3 python/tools/sched_mirror.py golden   # golden test values
+      python3 python/tools/sched_mirror.py bench    # session bench json
+      python3 python/tools/sched_mirror.py tune     # gp-window sweep
+"""
+
+import math
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import partition_mirror as pm  # noqa: E402
+
+MA, MM, MMADD, SOURCE = "ma", "mm", "mm_add", "source"
+ARITY = {MA: 2, MM: 2, MMADD: 3, SOURCE: 0}
+
+EFF_SIZES = [64, 128, 256, 384, 512, 768, 1024, 1280, 1536, 1792, 2048]
+GPU_MM_EFF = [0.008, 0.040, 0.100, 0.240, 0.260, 0.340, 0.420, 0.480, 0.520, 0.550, 0.680]
+
+
+class CalibratedModel:
+    """Mirror of perfmodel::CalibratedModel (paper / tri_device)."""
+
+    def __init__(self, tri=False):
+        self.cpu_mm_gflops = 20.0
+        self.cpu_ma_bw_gbs = 8.0
+        self.cpu_launch_ms = 0.020
+        self.gpu_peak_gflops = 4700.0
+        self.gpu_ma_bw_gbs = 90.0
+        self.gpu_launch_mm_ms = 0.080
+        self.gpu_launch_ma_ms = 0.050
+        self.fpga_mm_gflops = 500.0
+        self.fpga_ma_bw_gbs = 25.0
+        self.fpga_launch_ms = 0.100
+        self.bus_bandwidth_gbs = 12.5
+        self.bus_latency_ms = 0.020
+        self.device_kinds = ["cpu", "gpu", "fpga"] if tri else ["cpu", "gpu"]
+
+    def gpu_mm_eff(self, n):
+        sizes = EFF_SIZES
+        if n <= sizes[0]:
+            return GPU_MM_EFF[0]
+        if n >= sizes[-1]:
+            return GPU_MM_EFF[-1]
+        idx = next(i for i, s in enumerate(sizes) if s >= n)
+        s0, s1 = float(sizes[idx - 1]), float(sizes[idx])
+        e0, e1 = GPU_MM_EFF[idx - 1], GPU_MM_EFF[idx]
+        t = (float(n) - s0) / (s1 - s0)
+        return e0 + t * (e1 - e0)
+
+    @staticmethod
+    def _ma_time(n, bw_gbs, launch):
+        fb = 3.0 * 4.0 * float(n) * float(n)
+        return launch + fb / (bw_gbs * 1e9) * 1e3
+
+    @staticmethod
+    def _mm_time(n, gflops, launch):
+        x = float(n)
+        flops = 2.0 * ((x * x) * x)  # f64::powi(3) expands to (x*x)*x
+        return launch + flops / (gflops * 1e9) * 1e3
+
+    def kernel_time_ms(self, kernel, n, device):
+        if kernel == SOURCE:
+            return 0.0
+        kind = self.device_kinds[device]
+        if kind == "cpu":
+            if kernel == MA:
+                return self._ma_time(n, self.cpu_ma_bw_gbs, self.cpu_launch_ms)
+            if kernel == MM:
+                return self._mm_time(n, self.cpu_mm_gflops, self.cpu_launch_ms)
+            if kernel == MMADD:
+                return self._mm_time(n, self.cpu_mm_gflops, self.cpu_launch_ms) + self._ma_time(
+                    n, self.cpu_ma_bw_gbs, 0.0
+                )
+        elif kind == "gpu":
+            if kernel == MA:
+                return self._ma_time(n, self.gpu_ma_bw_gbs, self.gpu_launch_ma_ms)
+            if kernel == MM:
+                return self._mm_time(
+                    n, self.gpu_peak_gflops * self.gpu_mm_eff(n), self.gpu_launch_mm_ms
+                )
+            if kernel == MMADD:
+                return self._mm_time(
+                    n, self.gpu_peak_gflops * self.gpu_mm_eff(n), self.gpu_launch_mm_ms
+                ) + self._ma_time(n, self.gpu_ma_bw_gbs, 0.0)
+        elif kind == "fpga":
+            if kernel == MA:
+                return self._ma_time(n, self.fpga_ma_bw_gbs, self.fpga_launch_ms)
+            if kernel == MM:
+                return self._mm_time(n, self.fpga_mm_gflops, self.fpga_launch_ms)
+            if kernel == MMADD:
+                return self._mm_time(n, self.fpga_mm_gflops, self.fpga_launch_ms) + self._ma_time(
+                    n, self.fpga_ma_bw_gbs, 0.0
+                )
+        raise ValueError(f"unmirrored kernel {kernel!r} on {kind}")
+
+    def transfer_time_ms(self, nbytes):
+        return self.bus_latency_ms + float(nbytes) / (self.bus_bandwidth_gbs * 1e9) * 1e3
+
+
+# ------------------------------------------------------------------- dag
+
+class Dag:
+    """Mirror of dag::graph::Dag (arena of nodes + edges)."""
+
+    def __init__(self):
+        self.nodes = []  # (name, kernel, size)
+        self.edges = []  # (src, dst, bytes)
+        self.succs = []  # list[list[eid]]
+        self.preds = []
+
+    def add_node(self, name, kernel, size):
+        self.nodes.append((name, kernel, size))
+        self.succs.append([])
+        self.preds.append([])
+        return len(self.nodes) - 1
+
+    def add_edge(self, src, dst, nbytes=None):
+        if nbytes is None:
+            size = self.nodes[src][2]
+            nbytes = 4 * size * size
+        eid = len(self.edges)
+        self.edges.append((src, dst, nbytes))
+        self.succs[src].append(eid)
+        self.preds[dst].append(eid)
+        return eid
+
+    def node_count(self):
+        return len(self.nodes)
+
+    def in_degree(self, v):
+        return len(self.preds[v])
+
+    def out_degree(self, v):
+        return len(self.succs[v])
+
+    def sinks(self):
+        return [v for v in range(len(self.nodes)) if not self.succs[v]]
+
+
+def paper_gen_cfg(kernel, size):
+    return dict(kernels=38, edges=75, layers=7, kernel=kernel, size=size, seed=2015, source=False)
+
+
+def scaled_gen_cfg(kernels, kernel, size, seed):
+    return dict(
+        kernels=kernels,
+        edges=kernels * 2 - 1,
+        layers=int(math.ceil(math.sqrt(kernels))),
+        kernel=kernel,
+        size=size,
+        seed=seed,
+        source=False,
+    )
+
+
+def generate_layered(cfg):
+    """Mirror of dag::generator::generate_layered (PCG32 call order)."""
+    rng = pm.Pcg32.seeded(cfg["seed"])
+    n = cfg["kernels"]
+    layers = max(1, min(cfg["layers"], n))
+
+    layer_of = [0] * n
+    for l in range(min(layers, n)):
+        layer_of[l] = l
+    for i in range(layers, n):
+        layer_of[i] = rng.gen_range(layers)
+    rng.shuffle(layer_of)
+
+    per_layer = [0] * layers
+    for l in layer_of:
+        per_layer[l] += 1
+    prefix = total = 0
+    for l in range(layers):
+        total += per_layer[l] * prefix
+        prefix += per_layer[l]
+    assert cfg["edges"] <= total, "edge target infeasible"
+
+    dag = Dag()
+    ids = [dag.add_node(f"k{i}", cfg["kernel"], cfg["size"]) for i in range(n)]
+
+    by_layer = [[] for _ in range(layers)]
+    for i, l in enumerate(layer_of):
+        by_layer[l].append(ids[i])
+    earlier = []
+    acc = []
+    for l in range(layers):
+        earlier.append(list(acc))
+        acc.extend(by_layer[l])
+
+    have = set()
+    edges_left = cfg["edges"]
+
+    for l in range(1, layers):
+        for v in by_layer[l]:
+            pool = earlier[l]
+            parents = min(2, len(pool), edges_left)
+            tries = 0
+            added = 0
+            while added < parents and tries < 32:
+                tries += 1
+                u = rng.choose(pool)
+                if (u, v) not in have:
+                    have.add((u, v))
+                    dag.add_edge(u, v)
+                    edges_left -= 1
+                    added += 1
+            if edges_left == 0:
+                break
+
+    guard = 0
+    while edges_left > 0:
+        guard += 1
+        assert guard < 1_000_000
+        l = 1 + rng.gen_range(layers - 1)
+        if not by_layer[l] or not earlier[l]:
+            continue
+        v = rng.choose(by_layer[l])
+        u = rng.choose(earlier[l])
+        if (u, v) not in have:
+            have.add((u, v))
+            dag.add_edge(u, v)
+            edges_left -= 1
+
+    if cfg["source"]:
+        src = dag.add_node("__source", SOURCE, cfg["size"])
+        for i in ids:
+            if dag.in_degree(i) == 0:
+                dag.add_edge(src, i)
+    return dag
+
+
+def phased(width, depth, size):
+    """Mirror of workloads::phased."""
+    g = Dag()
+    prev = []
+    for phase, kernel in [(0, MM), (1, MA)]:
+        for layer in range(depth):
+            tag = "mm" if phase == 0 else "ma"
+            cur = [g.add_node(f"{tag}_{layer}_{i}", kernel, size) for i in range(width)]
+            if prev:
+                for i, v in enumerate(cur):
+                    g.add_edge(prev[i], v)
+                    g.add_edge(prev[(i + 1) % width], v)
+            prev = cur
+    return g
+
+
+def chain(length, kernel, size):
+    g = Dag()
+    ids = [g.add_node(f"c{i}", kernel, size) for i in range(length)]
+    for a, b in zip(ids, ids[1:]):
+        g.add_edge(a, b)
+    return g
+
+
+# ------------------------------------------------------------ gp weights
+
+def _round_half_away(x):
+    return math.floor(x + 0.5)  # positive domain only
+
+
+def node_weight_us(model, kernel, n, k_devices, policy="gpu"):
+    if kernel == SOURCE:
+        return 0
+    cpu = model.kernel_time_ms(kernel, n, 0)
+    last = k_devices - 1
+    gpu = model.kernel_time_ms(kernel, n, 1 if last >= 1 else last)
+    ms = {"gpu": gpu, "cpu": cpu, "mean": 0.5 * (cpu + gpu)}[policy]
+    return int(max(_round_half_away(ms * 1000.0), 1))
+
+
+def edge_weight_us(model, nbytes):
+    return int(_round_half_away(model.transfer_time_ms(nbytes) * 1000.0))
+
+
+def aggregate_ratios(dag, k, model, only=None):
+    totals = [0.0] * k
+    for v, (_, kernel, size) in enumerate(dag.nodes):
+        if kernel == SOURCE or (only is not None and not only[v]):
+            continue
+        for d in range(k):
+            totals[d] += model.kernel_time_ms(kernel, size, d)
+    inv = [1.0 / max(t, 1e-12) for t in totals]
+    s = sum(inv)
+    return [i / s for i in inv]
+
+
+def build_gp_graph(dag, model, k, policy="gpu"):
+    """Mirror of GraphPartition::build_graph: node/edge µs weights plus
+    the pinned host anchor as vertex n."""
+    n = dag.node_count()
+    vwgt = [
+        max(node_weight_us(model, kernel, size, k, policy), 0)
+        for (_, kernel, size) in dag.nodes
+    ]
+    edges = [(s, d, max(edge_weight_us(model, b), 1)) for (s, d, b) in dag.edges]
+    anchor = n
+    vwgt.append(0)
+    anchor_w = [0] * n
+    for v, (_, kernel, size) in enumerate(dag.nodes):
+        if kernel == SOURCE:
+            continue
+        mat_bytes = 4 * size * size
+        w = (ARITY[kernel] - min(dag.in_degree(v), ARITY[kernel])) * edge_weight_us(
+            model, mat_bytes
+        )
+        if dag.out_degree(v) == 0:
+            w += edge_weight_us(model, mat_bytes)
+        if w > 0:
+            edges.append((anchor, v, w))
+            anchor_w[v] = w
+    return vwgt, edges, anchor_w
+
+
+def gp_plan(dag, k, model, epsilon=0.05, seed=1, node_weight="gpu"):
+    n = dag.node_count()
+    vwgt, edges, _ = build_gp_graph(dag, model, k, node_weight)
+    g = pm.csr_build(vwgt, edges)
+    fixed = [-1] * n + [0]
+    ratios = aggregate_ratios(dag, k, model)
+    cfg = pm.default_cfg(k=k, targets=list(ratios), epsilon=epsilon, seed=seed, fixed=fixed)
+    res = pm.partition(g, cfg)
+    return res["parts"][:n], ratios, res
+
+
+# --------------------------------------------------------------- policies
+
+class Eager:
+    name = "eager"
+
+    def select(self, ctx):
+        free = ctx["device_free"]
+        best = 0
+        for d in range(1, len(free)):
+            if free[d] <= free[best]:
+                best = d
+        return best
+
+    def on_task_finish(self, task, dev, finish_ms):
+        pass
+
+
+def _transfer_cost(ctx, dev):
+    cost = 0.0
+    for (nbytes, mask) in ctx["inputs"]:
+        if not (mask >> dev) & 1:  # memory_node(dev) == dev (identity)
+            cost += ctx["model"].transfer_time_ms(nbytes)
+    return cost
+
+
+def _estimated_finish(ctx, dev):
+    data_ready = ctx["ready"] + _transfer_cost(ctx, dev)
+    start = max(ctx["device_free"][dev], data_ready)
+    return start + ctx["model"].kernel_time_ms(ctx["kernel"], ctx["size"], dev)
+
+
+class Dmda:
+    name = "dmda"
+
+    def select(self, ctx):
+        best = 0
+        best_t = math.inf
+        for d in range(len(ctx["device_free"])):
+            t = _estimated_finish(ctx, d)
+            if t < best_t:
+                best_t = t
+                best = d
+        return best
+
+    def on_task_finish(self, task, dev, finish_ms):
+        pass
+
+
+class PinAll:
+    def __init__(self, device):
+        self.device = device
+        self.name = {0: "cpu-only", 1: "gpu-only"}.get(device, "pin")
+
+    def select(self, ctx):
+        return self.device
+
+    def on_task_finish(self, task, dev, finish_ms):
+        pass
+
+
+class Gp:
+    """One-shot graph partition (plan once, table lookup)."""
+
+    def __init__(self, dag, k, model, epsilon=0.05, seed=1, node_weight="gpu"):
+        self.name = "gp"
+        self.parts, self.ratios, self.result = gp_plan(
+            dag, k, model, epsilon, seed, node_weight
+        )
+
+    def select(self, ctx):
+        return self.parts[ctx["task"]]
+
+    def on_task_finish(self, task, dev, finish_ms):
+        pass
+
+
+class GpWindow:
+    """Mirror of GraphPartition with window=W (frontier replanning)."""
+
+    def __init__(self, dag, k, model, window, epsilon=0.05, seed=1, node_weight="gpu"):
+        self.name = "gp-window"
+        self.window = window
+        self.epsilon = epsilon
+        self.seed = seed
+        self.k = k
+        self.parts, self.ratios, self.result = gp_plan(
+            dag, k, model, epsilon, seed, node_weight
+        )
+        n = dag.node_count()
+        self.node_w, all_edges, self.anchor_w = build_gp_graph(dag, model, k, node_weight)
+        self.node_w = self.node_w[:n]
+        self.dag_edges = [(s, d, max(edge_weight_us(model, b), 1)) for (s, d, b) in dag.edges]
+        self.dev_time = [
+            [model.kernel_time_ms(kernel, size, d) for d in range(k)]
+            for (_, kernel, size) in dag.nodes
+        ]
+        self.real = [kernel != SOURCE for (_, kernel, _) in dag.nodes]
+        self.dispatched = [False] * n
+        self.finishes = 0
+        self.replans = 0
+
+    def select(self, ctx):
+        self.dispatched[ctx["task"]] = True
+        return self.parts[ctx["task"]]
+
+    def on_task_finish(self, task, dev, finish_ms):
+        self.finishes += 1
+        if self.finishes < self.window:
+            return
+        self.finishes = 0
+        self._replan()
+
+    def _replan(self):
+        n = len(self.node_w)
+        totals = [0.0] * self.k
+        remaining = 0
+        for v in range(n):
+            if not self.real[v] or self.dispatched[v]:
+                continue
+            remaining += 1
+            for d in range(self.k):
+                totals[d] += self.dev_time[v][d]
+        if remaining == 0:
+            return
+        inv = [1.0 / max(t, 1e-12) for t in totals]
+        s = sum(inv)
+        ratios = [i / s for i in inv]
+
+        vwgt = list(self.node_w) + [0]
+        anchor = n
+        edges = [(anchor, v, self.anchor_w[v]) for v in range(n) if self.anchor_w[v] > 0]
+        edges.extend(self.dag_edges)
+        fixed = [-1] * (n + 1)
+        fixed[anchor] = 0
+        for v in range(n):
+            if self.dispatched[v]:
+                fixed[v] = self.parts[v]
+        g = pm.csr_build(vwgt, edges)
+        cfg = pm.default_cfg(
+            k=self.k, targets=ratios, epsilon=self.epsilon, seed=self.seed, fixed=fixed
+        )
+        res = pm.partition(g, cfg)
+        self.parts = res["parts"][:n]
+        self.ratios = ratios
+        self.result = res
+        self.replans += 1
+
+
+# ----------------------------------------------------------------- engine
+
+def simulate(dag, policy, workers, model, bus_channels=1, prefetch=False, return_to_host=True):
+    """Mirror of sim::engine::simulate (list-scheduling discrete-event)."""
+    import heapq
+
+    n = dag.node_count()
+    k = len(workers)
+    host = 0
+
+    # Data directory: out handles 0..n-1, then initial buffers.
+    bytes_of = []
+    mask_of = []
+
+    def alloc(nbytes, mask):
+        bytes_of.append(nbytes)
+        mask_of.append(mask)
+        return len(bytes_of) - 1
+
+    out = []
+    for v, (_, kernel, size) in enumerate(dag.nodes):
+        out.append(alloc(4 * size * size, 0))
+    initial = []
+    for v, (_, kernel, size) in enumerate(dag.nodes):
+        missing = max(ARITY[kernel] - dag.in_degree(v), 0)
+        initial.append([alloc(4 * size * size, 1 << host) for _ in range(missing)])
+
+    worker_free = [[0.0] * w for w in workers]
+    bus = [0.0] * max(bus_channels, 1)
+    avail = [0.0] * len(bytes_of)
+    ledger_count = 0
+    ledger_bytes = 0
+    indeg = [dag.in_degree(v) for v in range(n)]
+    ready_time = [0.0] * n
+    finish = [0.0] * n
+    assignments = [None] * n
+    device_busy = [0.0] * k
+    tasks_per_device = [0] * k
+
+    heap = [(0.0, v) for v in range(n) if indeg[v] == 0]
+    heapq.heapify(heap)
+
+    executed = 0
+    while heap:
+        ready, v = heapq.heappop(heap)
+        executed += 1
+        name, kernel, size = dag.nodes[v]
+
+        if kernel == SOURCE:
+            mask_of[out[v]] = 1 << host
+            finish[v] = ready
+            assignments[v] = host
+            for e in dag.succs[v]:
+                w = dag.edges[e][1]
+                indeg[w] -= 1
+                ready_time[w] = max(ready_time[w], ready)
+                if indeg[w] == 0:
+                    heapq.heappush(heap, (ready_time[w], w))
+            continue
+
+        handles = [out[dag.edges[e][0]] for e in dag.preds[v]] + initial[v]
+        inputs = [(bytes_of[h], mask_of[h]) for h in handles]
+        device_free = [min(ws) for ws in worker_free]
+
+        ctx = dict(
+            task=v,
+            kernel=kernel,
+            size=size,
+            ready=ready,
+            device_free=device_free,
+            inputs=inputs,
+            model=model,
+        )
+        dev = policy.select(ctx)
+        mem = dev  # Platform::memory_node is the identity today
+
+        data_ready = ready
+        for h in handles:
+            if not (mask_of[h] >> mem) & 1:
+                # acquire_read: src = lowest set bit, new copy Shared.
+                src = (mask_of[h] & -mask_of[h]).bit_length() - 1
+                mask_of[h] |= 1 << mem
+                t = model.transfer_time_ms(bytes_of[h])
+                ch = min(range(len(bus)), key=lambda c: bus[c])
+                earliest = avail[h] if prefetch else ready
+                start = max(bus[ch], earliest)
+                bus[ch] = start + t
+                ledger_count += 1
+                ledger_bytes += bytes_of[h]
+                data_ready = max(data_ready, bus[ch])
+                del src
+        mask_of[out[v]] = 1 << mem
+
+        worker = min(range(len(worker_free[dev])), key=lambda i: worker_free[dev][i])
+        exec_ms = model.kernel_time_ms(kernel, size, dev)
+        start = max(worker_free[dev][worker], data_ready)
+        end = start + exec_ms
+        worker_free[dev][worker] = end
+        finish[v] = end
+        avail[out[v]] = end
+        assignments[v] = dev
+        device_busy[dev] += exec_ms
+        tasks_per_device[dev] += 1
+        policy.on_task_finish(v, dev, end)
+
+        for e in dag.succs[v]:
+            w = dag.edges[e][1]
+            indeg[w] -= 1
+            ready_time[w] = max(ready_time[w], end)
+            if indeg[w] == 0:
+                heapq.heappush(heap, (ready_time[w], w))
+
+    assert executed == n, "cyclic graph or unreachable tasks"
+
+    makespan = 0.0
+    for f in finish:
+        makespan = max(makespan, f)
+
+    if return_to_host:
+        for v in dag.sinks():
+            if dag.nodes[v][1] == SOURCE:
+                continue
+            h = out[v]
+            if not (mask_of[h] >> host) & 1:
+                mask_of[h] |= 1 << host
+                t = model.transfer_time_ms(bytes_of[h])
+                ch = min(range(len(bus)), key=lambda c: bus[c])
+                start = max(bus[ch], finish[v])
+                bus[ch] = start + t
+                ledger_count += 1
+                ledger_bytes += bytes_of[h]
+                makespan = max(makespan, bus[ch])
+
+    return dict(
+        makespan=makespan,
+        assignments=assignments,
+        ledger_count=ledger_count,
+        ledger_bytes=ledger_bytes,
+        tasks_per_device=tasks_per_device,
+        device_busy=device_busy,
+    )
+
+
+PAPER_WORKERS = [3, 1]
+TRI_WORKERS = [3, 1, 1]
+
+
+def make_policy(name, dag, model, k, **kw):
+    if name == "eager":
+        return Eager()
+    if name == "dmda":
+        return Dmda()
+    if name == "gp":
+        return Gp(dag, k, model, **kw)
+    if name == "gp-window":
+        return GpWindow(dag, k, model, **kw)
+    if name == "cpu-only":
+        return PinAll(0)
+    if name == "gpu-only":
+        return PinAll(1)
+    raise ValueError(name)
+
+
+def run(dag, name, model=None, workers=None, **kw):
+    model = model or CalibratedModel()
+    workers = workers or PAPER_WORKERS
+    sim_kw = {key: kw.pop(key) for key in list(kw) if key in ("bus_channels", "prefetch", "return_to_host")}
+    policy = make_policy(name, dag, model, len(workers), **kw)
+    r = simulate(dag, policy, workers, model, **sim_kw)
+    r["policy"] = policy
+    return r
+
+
+# ----------------------------------------------------------------- checks
+
+OK = True
+
+
+def check(name, cond, detail=""):
+    global OK
+    mark = "ok" if cond else "FAIL"
+    if not cond:
+        OK = False
+    print(f"  [{mark}] {name} {detail}")
+
+
+def run_checks():
+    model = CalibratedModel()
+
+    print("engine sanity (pinned policies, structural counts)")
+    d1 = chain(1, MA, 256)
+    r = run(d1, "cpu-only")
+    check("chain1 cpu-only zero transfers", r["ledger_count"] == 0)
+    r = run(d1, "gpu-only")
+    check("chain1 gpu-only 3 transfers", r["ledger_count"] == 3, r["ledger_count"])
+    r = run(chain(5, MA, 256), "gpu-only")
+    check("chain5 gpu-only 7 transfers", r["ledger_count"] == 7, r["ledger_count"])
+
+    print("gp plan shapes (gp.rs tests)")
+    gp2048 = Gp(generate_layered(paper_gen_cfg(MM, 2048)), 2, model)
+    cpu_nodes = sum(1 for p in gp2048.parts if p == 0)
+    check("mm 2048 pins to gpu", cpu_nodes <= 1, f"cpu={cpu_nodes}")
+    check("mm 2048 ratio tiny", gp2048.ratios[0] < 0.02, f"{gp2048.ratios[0]:.4f}")
+    gpma = Gp(generate_layered(paper_gen_cfg(MA, 2048)), 2, model)
+    cpu_nodes = sum(1 for p in gpma.parts if p == 0)
+    gpu_nodes = sum(1 for p in gpma.parts if p == 1)
+    check("ma 2048 splits", cpu_nodes >= 2 and gpu_nodes > cpu_nodes, f"{cpu_nodes}/{gpu_nodes}")
+    tri = CalibratedModel(tri=True)
+    gptri = Gp(generate_layered(scaled_gen_cfg(200, MA, 2048, 5)), 3, tri)
+    counts = [0, 0, 0]
+    for p in gptri.parts:
+        counts[p] += 1
+    check("tri ma coverage", counts[1] > 0 and sum(1 for c in counts if c > 0) >= 2, counts)
+
+    print("fig5/fig6 shapes (pipeline_integration)")
+    for n in [512, 1024, 2048]:
+        dag = generate_layered(paper_gen_cfg(MA, n))
+        e = run(dag, "eager")["makespan"]
+        d = run(dag, "dmda")["makespan"]
+        g = run(dag, "gp")["makespan"]
+        check(f"fig5 MA@{n} comparable", max(e, d, g) / min(e, d, g) < 2.0,
+              f"{e:.2f} {d:.2f} {g:.2f}")
+    for n in [512, 1024, 2048]:
+        dag = generate_layered(paper_gen_cfg(MM, n))
+        e = run(dag, "eager")["makespan"]
+        d = run(dag, "dmda")["makespan"]
+        g = run(dag, "gp")["makespan"]
+        check(f"fig6 MM@{n} eager loses", e > 2.0 * g, f"{e:.2f} vs {g:.2f}")
+        check(f"fig6 MM@{n} dmda~gp", abs(d - g) / g < 0.15, f"{d:.2f} vs {g:.2f}")
+        if n == 1024:
+            check("eager_slower_than_dmda (engine test)", e > 1.5 * d, f"{e:.2f} vs {d:.2f}")
+
+    print("transfer shapes")
+    dag = generate_layered(paper_gen_cfg(MA, 1024))
+    e = run(dag, "eager")["ledger_count"]
+    d = run(dag, "dmda")["ledger_count"]
+    g = run(dag, "gp")["ledger_count"]
+    check("ma 1024 gp minimizes transfers", e > d >= g, f"e={e} d={d} g={g}")
+    totals = [0, 0, 0]
+    for n in [256, 512, 1024, 2048]:
+        dag = generate_layered(paper_gen_cfg(MA, n))
+        for i, name in enumerate(["eager", "dmda", "gp"]):
+            totals[i] += run(dag, name)["ledger_count"]
+    check("sweep gp < eager", totals[2] < totals[0], totals)
+    check("sweep gp < dmda", totals[2] < totals[1], totals)
+    dag = generate_layered(paper_gen_cfg(MM, 2048))
+    check("mm 2048 gp cpu<=1 tasks", run(dag, "gp")["tasks_per_device"][0] <= 1)
+    check("mm 2048 dmda cpu==0 tasks", run(dag, "dmda")["tasks_per_device"][0] == 0)
+
+    print("dual copy engines / prefetch / channels (engine tests)")
+    dag = generate_layered(paper_gen_cfg(MA, 1024))
+    for name in ["gp", "gpu-only"]:
+        b = run(dag, name)
+        du = run(dag, name, bus_channels=2)
+        check(f"{name} dual no regress", du["makespan"] <= b["makespan"] + 1e-9)
+        check(f"{name} dual same transfers", du["ledger_count"] == b["ledger_count"])
+        check(f"{name} dual same pins", du["assignments"] == b["assignments"])
+    b = run(dag, "gp")
+    du = run(dag, "gp", bus_channels=2)
+    check("gp MA dual helps >5%", du["makespan"] < 0.95 * b["makespan"],
+          f"{du['makespan']:.2f} vs {b['makespan']:.2f}")
+    for kernel in [MA, MM]:
+        dag_k = generate_layered(paper_gen_cfg(kernel, 1024))
+        for name in ["gp", "gpu-only", "cpu-only"]:
+            b = run(dag_k, name)
+            p = run(dag_k, name, prefetch=True)
+            check(f"prefetch never hurts {name}/{kernel}", p["makespan"] <= b["makespan"] + 1e-9)
+    dag = generate_layered(paper_gen_cfg(MA, 512))
+    a = run(dag, "gp", bus_channels=64)["makespan"]
+    b = run(dag, "gp", bus_channels=128)["makespan"]
+    check("extra channels bounded", abs(a - b) < 1e-9)
+
+    print("virtual source (engine test)")
+    cfg = paper_gen_cfg(MA, 512)
+    cfg["source"] = True
+    dag = generate_layered(cfg)
+    r = run(dag, "dmda")
+    src = next(v for v, (name, _, _) in enumerate(dag.nodes) if name == "__source")
+    check("source on host", r["assignments"][src] == 0)
+    check("38 real kernels on workers", sum(r["tasks_per_device"]) == 38)
+
+    print("tri-device pipeline (pipeline_integration)")
+    dag = generate_layered(scaled_gen_cfg(120, MA, 1024, 3))
+    tri = CalibratedModel(tri=True)
+    for name in ["eager", "dmda", "gp"]:
+        r = run(dag, name, model=tri, workers=TRI_WORKERS)
+        check(f"tri {name} all assigned", sum(r["tasks_per_device"]) == 120,
+              r["tasks_per_device"])
+
+    print("gp seed-corpus cut quality (adaptive EXACT_GAIN satellite)")
+    for kernel, n, bound in [(MA, 1024, None), (MA, 2048, None), (MM, 512, None)]:
+        dag = generate_layered(paper_gen_cfg(kernel, n))
+        gp = Gp(dag, 2, model)
+        cut = gp.result["edge_cut"]
+        tot = sum(gp.result["part_weights"])
+        print(f"    gp {kernel}@{n}: cut={cut}us weights={gp.result['part_weights']}")
+
+    print("windowed gp on the phased workload (acceptance headline)")
+    best = None
+    for window in [8, 12, 16]:
+        dag = phased(8, 4, 256)
+        one = run(dag, "gp")
+        win = run(dag, "gp-window", window=window)
+        gain = (one["makespan"] - win["makespan"]) / one["makespan"]
+        replans = win["policy"].replans
+        print(
+            f"    window={window}: gp {one['makespan']:.2f} ms vs gp-window "
+            f"{win['makespan']:.2f} ms ({gain * 100:+.1f}%, {replans} replans)"
+        )
+        if best is None or win["makespan"] < best:
+            best = win["makespan"]
+    check("gp-window beats gp on phased", best < one["makespan"], f"{best:.2f} vs {one['makespan']:.2f}")
+
+    print("ALL OK" if OK else "FAILURES PRESENT")
+    return OK
+
+
+# ----------------------------------------------------------------- golden
+
+GOLDEN_CASES = [
+    (MA, 1024, "eager"),
+    (MA, 1024, "dmda"),
+    (MA, 1024, "gp"),
+    (MM, 1024, "eager"),
+    (MM, 1024, "dmda"),
+    (MM, 1024, "gp"),
+]
+
+
+def golden_rows():
+    rows = []
+    for kernel, size, name in GOLDEN_CASES:
+        dag = generate_layered(paper_gen_cfg(kernel, size))
+        r = run(dag, name)
+        rows.append(
+            dict(
+                kernel=kernel,
+                size=size,
+                policy=name,
+                assignments="".join(str(a) for a in r["assignments"]),
+                transfers=r["ledger_count"],
+                transfer_bytes=r["ledger_bytes"],
+                makespan=r["makespan"],
+            )
+        )
+    return rows
+
+
+def print_golden():
+    print("// generated by python/tools/sched_mirror.py golden")
+    for row in golden_rows():
+        print(
+            f'    ("{row["kernel"]}", {row["size"]}, "{row["policy"]}", '
+            f'"{row["assignments"]}", {row["transfers"]}, {row["transfer_bytes"]}, '
+            f'{row["makespan"]!r}),'
+        )
+
+
+# ------------------------------------------------------------------ bench
+
+def bench_json(jobs=8, window=12, size=1024):
+    model = CalibratedModel()
+    rows = []
+    scenarios = [
+        ("repeat-mm", [generate_layered(paper_gen_cfg(MM, size)) for _ in range(jobs)]),
+        ("repeat-ma", [generate_layered(paper_gen_cfg(MA, size)) for _ in range(jobs)]),
+        ("phased", [phased(8, 4, 256) for _ in range(min(jobs, 4))]),
+    ]
+    for scenario, dags in scenarios:
+        for spec in ["eager", "dmda", "heft", "gp", f"gp:window={window}"]:
+            makespan = 0.0
+            transfers = 0
+            import time
+
+            plan_ns = 0
+            first_plan_ns = 0
+            for i, dag in enumerate(dags):
+                t0 = time.perf_counter_ns()
+                if spec.startswith("gp:window"):
+                    r = run(dag, "gp-window", window=window)
+                elif spec == "heft":
+                    # heft's select rule is dmda's EFT estimator; ranks are
+                    # untouched by select, so the schedule coincides.
+                    r = run(dag, "dmda")
+                else:
+                    r = run(dag, spec)
+                t1 = time.perf_counter_ns()
+                makespan += r["makespan"]
+                transfers += r["ledger_count"]
+                # First job pays the (mirror) planning cost; repeats would
+                # hit the plan cache in the Rust runtime.
+                if i == 0 and spec.startswith("gp"):
+                    first_plan_ns = t1 - t0
+                    plan_ns += t1 - t0
+            hit_rate = 0.0 if len(dags) <= 1 else (len(dags) - 1) / len(dags)
+            rows.append(
+                dict(
+                    scenario=scenario,
+                    policy=spec,
+                    jobs=len(dags),
+                    makespan_ms=makespan,
+                    transfers=transfers,
+                    plan_ns=plan_ns,
+                    first_plan_ns=first_plan_ns,
+                    repeat_plan_ns=0,
+                    cache_hit_rate=hit_rate,
+                    decision_ns=0,
+                )
+            )
+    lines = [
+        "{",
+        '  "bench": "sched_session",',
+        '  "harness": "python-mirror",',
+        f'  "requested_jobs": {jobs},',
+        f'  "window": {window},',
+        f'  "size": {size},',
+        '  "rows": [',
+    ]
+    for i, r in enumerate(rows):
+        comma = "" if i + 1 == len(rows) else ","
+        lines.append(
+            f'    {{"scenario": "{r["scenario"]}", "policy": "{r["policy"]}", '
+            f'"jobs": {r["jobs"]}, "makespan_ms": {r["makespan_ms"]:.6f}, '
+            f'"transfers": {r["transfers"]}, "plan_ns": {r["plan_ns"]}, '
+            f'"first_plan_ns": {r["first_plan_ns"]}, "repeat_plan_ns": {r["repeat_plan_ns"]}, '
+            f'"cache_hit_rate": {r["cache_hit_rate"]:.4f}, "decision_ns": {r["decision_ns"]}}}{comma}'
+        )
+    lines.append("  ]")
+    lines.append("}")
+    return "\n".join(lines) + "\n"
+
+
+def tune():
+    model = CalibratedModel()
+    for width, depth, size in [(8, 4, 1024), (8, 4, 512), (12, 3, 1024), (6, 6, 1024)]:
+        dag = phased(width, depth, size)
+        one = run(dag, "gp")
+        e = run(dag, "eager")
+        d = run(dag, "dmda")
+        line = f"phased({width},{depth},{size}): eager {e['makespan']:.2f} dmda {d['makespan']:.2f} gp {one['makespan']:.2f}"
+        for window in [4, 8, 12, 16, 24]:
+            win = run(dag, "gp-window", window=window)
+            line += f" | w{window} {win['makespan']:.2f}"
+        print(line)
+
+
+if __name__ == "__main__":
+    cmd = sys.argv[1] if len(sys.argv) > 1 else "checks"
+    if cmd == "checks":
+        sys.exit(0 if run_checks() else 1)
+    elif cmd == "golden":
+        print_golden()
+    elif cmd == "bench":
+        out = bench_json()
+        path = os.path.join(
+            os.path.dirname(os.path.abspath(__file__)),
+            "..", "..", "rust", "bench_results", "BENCH_sched_session.json",
+        )
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            f.write(out)
+        print(f"written {os.path.normpath(path)}")
+    elif cmd == "tune":
+        tune()
+    else:
+        raise SystemExit(f"unknown command {cmd!r}")

@@ -13,7 +13,7 @@ use hetsched::perfmodel::CalibratedModel;
 use hetsched::platform::Platform;
 use hetsched::report::{fmt_ms, fmt_ratio, Table};
 use hetsched::sched;
-use hetsched::sched::{GpConfig, GraphPartition, Scheduler as _};
+use hetsched::sched::{GpConfig, GraphPartition};
 use hetsched::sim::{simulate, SimConfig};
 
 fn main() {
@@ -67,7 +67,7 @@ fn main() {
     // Paper's Formula (1) observation, printed for the record.
     let dag = generate_layered(&GeneratorConfig::paper(KernelKind::Mm, 2048));
     let mut gp = GraphPartition::new(GpConfig::default());
-    gp.plan(&dag, &platform, &model);
+    gp.plan_now(&dag, &platform, &model);
     println!(
         "Formula (1) at size 2048: R_cpu={:.4} R_gpu={:.4} (paper: \"workload on the CPU is almost 0\")",
         gp.ratios()[0],

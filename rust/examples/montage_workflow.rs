@@ -12,7 +12,7 @@ use hetsched::dag::{dot, workloads};
 use hetsched::perfmodel::CalibratedModel;
 use hetsched::platform::Platform;
 use hetsched::report::{fmt_ms, Table};
-use hetsched::sched::{self, GpConfig, GraphPartition, Scheduler as _};
+use hetsched::sched::{self, GpConfig, GraphPartition};
 use hetsched::sim::{simulate, SimConfig};
 
 fn main() {
@@ -46,7 +46,7 @@ fn main() {
     // Partition the widest mosaic and dump the colored DOT.
     let dag = workloads::montage(32, size);
     let mut gp = GraphPartition::new(GpConfig::default());
-    gp.plan(&dag, &platform, &model);
+    gp.plan_now(&dag, &platform, &model);
     let result = gp.last_result().unwrap();
     println!(
         "width-32 partition: edge-cut={} us, weights={:?}, R=({:.3}, {:.3})",

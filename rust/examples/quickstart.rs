@@ -9,7 +9,7 @@ use hetsched::dag::{dot, Dag, KernelKind};
 use hetsched::metrics;
 use hetsched::perfmodel::CalibratedModel;
 use hetsched::platform::Platform;
-use hetsched::sched::{self, GpConfig, GraphPartition, Scheduler as _};
+use hetsched::sched::{self, GpConfig, GraphPartition};
 use hetsched::sim::{simulate, SimConfig};
 
 fn main() {
@@ -44,7 +44,7 @@ fn main() {
     // 3. Offline graph-partition plan (Formula (1) ratios -> multilevel
     //    partition -> pin).
     let mut gp = GraphPartition::new(GpConfig::default());
-    gp.plan(&dag, &platform, &model);
+    gp.plan_now(&dag, &platform, &model);
     println!(
         "workload ratios (Formula 1): R_cpu={:.3} R_gpu={:.3}",
         gp.ratios()[0],

@@ -12,7 +12,7 @@ use hetsched::dag::{generate_layered, GeneratorConfig, KernelKind};
 use hetsched::perfmodel::{CalibratedModel, PerfModel};
 use hetsched::platform::Platform;
 use hetsched::report::{fmt_ms, Table};
-use hetsched::sched::{self, GpConfig, GraphPartition, Scheduler as _};
+use hetsched::sched::{self, GpConfig, GraphPartition};
 use hetsched::sim::{simulate, SimConfig};
 
 fn main() {
@@ -47,7 +47,7 @@ fn main() {
     // Show the generalized Formula (1) targets and achieved split.
     let dag = generate_layered(&GeneratorConfig::scaled(200, KernelKind::Ma, 2048, 17));
     let mut gp = GraphPartition::new(GpConfig::default());
-    gp.plan(&dag, &platform, &model);
+    gp.plan_now(&dag, &platform, &model);
     println!("generalized Formula (1) targets: {:?}", gp.ratios());
     println!(
         "achieved part weights: {:?} (edge cut {} us)",

@@ -111,6 +111,18 @@ pub fn preamble(name: &str, platform: &Platform) {
     println!("{}", platform.table1());
 }
 
+/// Write machine-readable bench output to
+/// `bench_results/BENCH_<name>.json` and return the path. Every bench
+/// and bench-like CLI verb routes its JSON through here so the perf
+/// trajectory is tracked under one directory across PRs.
+pub fn save_bench_json(name: &str, contents: &str) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("bench_results");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("BENCH_{name}.json"));
+    std::fs::write(&path, contents)?;
+    Ok(path)
+}
+
 /// The size sweep used by the paper's figures (square matrix side).
 pub const PAPER_SIZES: [u32; 11] = [64, 128, 256, 384, 512, 768, 1024, 1280, 1536, 1792, 2048];
 

@@ -84,13 +84,20 @@ USAGE: hetsched <command> [flags]
 
 COMMANDS:
   run        Run one workload under a scheduler (simulated or real PJRT).
-             --scheduler eager|dmda|gp|heft|random|roundrobin|cpu-only|gpu-only
+             --scheduler SPEC (a registry config string: eager | dmda |
+               heft | random[:seed=N] | roundrobin | cpu-only | gpu-only |
+               pin:device=N | gp[:epsilon=F,seed=N,window=N,
+               node-weight=gpu|cpu|mean], e.g. \"gp:epsilon=0.02,window=64\")
              --workload paper|scaled|montage|cholesky|stencil|forkjoin|chain
              --kernel ma|mm|mm_add  --size N  --kernels N  --iterations N
              --config FILE  --real  --tri  --trace FILE  --dump-dot FILE
   partition  Partition a DOT task graph (gpmetis-like).
              --dot FILE [--out FILE] [--k N] [--kernel K] [--size N]
   figures    Reproduce all paper tables quickly (sim, 1 iteration/size).
+  bench      Built-in bench verbs. `bench stream` runs streaming
+             multi-DAG sessions over the policy matrix and writes
+             bench_results/BENCH_sched_session.json.
+             [--jobs N] [--window W] [--size N]
   measure    Measure real PJRT kernel times for the shipped artifacts.
              [--reps N]
   stats      Structural statistics of a DOT graph or built-in workload.

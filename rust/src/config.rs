@@ -12,11 +12,16 @@
 //! kernels = 38          # node count for scaled workloads
 //!
 //! [run]
-//! scheduler = gp
+//! scheduler = gp        # any registry config string, e.g.
+//!                       # "gp:epsilon=0.02,seed=7,window=64"
 //! iterations = 100
 //! platform = paper      # paper | tri
 //! return-to-host = true
 //! ```
+//!
+//! The `scheduler` value is passed verbatim to
+//! [`crate::sched::SchedulerRegistry::create`], so every policy variant
+//! is reachable from a config file without recompiling.
 
 use std::collections::BTreeMap;
 
@@ -233,6 +238,16 @@ mod tests {
         assert!(!cfg.return_to_host);
         assert_eq!(cfg.build_platform().device_count(), 3);
         assert!(cfg.build_dag().node_count() > 0);
+    }
+
+    #[test]
+    fn scheduler_spec_strings_pass_through_to_registry() {
+        use crate::sched::Scheduler as _;
+        let src = "[run]\nscheduler = \"gp:epsilon=0.02,seed=7,window=64\"\n";
+        let cfg = RunConfig::parse(src).unwrap();
+        assert_eq!(cfg.scheduler, "gp:epsilon=0.02,seed=7,window=64");
+        let s = crate::sched::SchedulerRegistry::builtin().create(&cfg.scheduler).unwrap();
+        assert_eq!(s.name(), "gp-window");
     }
 
     #[test]

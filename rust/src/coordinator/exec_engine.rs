@@ -4,12 +4,13 @@
 //! ready queue, MSI [`Directory`], per-memory-node [`HostStore`], transfer
 //! ledger — and one worker thread runs per device worker (the paper: 3 CPU
 //! workers + 1 GPU worker). Kernels execute for real through the shared
-//! PJRT [`KernelRuntime`]; "bus transfers" are real buffer copies between
+//! PJRT [`crate::runtime::KernelRuntime`]; "bus transfers" are real buffer copies between
 //! per-node address spaces, counted exactly like the simulator counts
 //! them.
 
 use std::collections::HashMap;
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -20,8 +21,8 @@ use crate::data::{DataHandle, Directory, HostStore, TransferLedger};
 use crate::perfmodel::PerfModel;
 use crate::platform::Platform;
 use crate::runtime::RuntimeService;
-use crate::sched::{DispatchCtx, InputInfo, Scheduler};
-use crate::sim::{RunReport, TraceEvent};
+use crate::sched::{DispatchCtx, InputInfo, Plan, PlanCache, PlanKey, Planner as _, Scheduler};
+use crate::sim::{RunReport, SessionReport, TraceEvent};
 
 /// Options for a real run.
 #[derive(Debug, Clone)]
@@ -72,8 +73,9 @@ impl ExecEngine {
         ExecEngine { runtime, platform }
     }
 
-    /// Execute `dag` under `scheduler` with real kernels; returns the run
-    /// report and (if verification is on) checks outputs in-line.
+    /// Execute `dag` under `scheduler` with real kernels, planning from
+    /// scratch; returns the run report and (if verification is on)
+    /// checks outputs in-line.
     pub fn run(
         &self,
         dag: &Dag,
@@ -81,15 +83,33 @@ impl ExecEngine {
         model: &dyn PerfModel,
         opts: &ExecOptions,
     ) -> Result<RunReport> {
+        self.run_with_plan(dag, scheduler, model, opts, None)
+    }
+
+    /// Execute `dag` under `scheduler`, consuming `plan` when supplied
+    /// (e.g. from a [`PlanCache`]) instead of running the planner — the
+    /// real-compute twin of [`crate::sim::simulate_with_plan`].
+    pub fn run_with_plan(
+        &self,
+        dag: &Dag,
+        scheduler: &mut dyn Scheduler,
+        model: &dyn PerfModel,
+        opts: &ExecOptions,
+        plan: Option<&Arc<Plan>>,
+    ) -> Result<RunReport> {
         let n_nodes = dag.node_count();
         let k = self.platform.device_count();
         let host = self.platform.host_node();
         let epoch = Instant::now();
         let now_ms = move || epoch.elapsed().as_secs_f64() * 1e3;
 
-        // --- offline plan ---
+        // --- plan + submit lifecycle ---
         let t0 = Instant::now();
-        scheduler.plan(dag, &self.platform, model);
+        let plan: Arc<Plan> = match plan {
+            Some(p) => Arc::clone(p),
+            None => Arc::new(scheduler.build_plan(dag, &self.platform, model)),
+        };
+        scheduler.on_submit(dag, &plan, &self.platform, model);
         let plan_ns = t0.elapsed().as_nanos() as u64;
 
         // --- data state ---
@@ -225,18 +245,21 @@ impl ExecEngine {
                 let td = Instant::now();
                 let dev = scheduler.select(&ctx);
                 decision_ns += td.elapsed().as_nanos() as u64;
+                let mem = self.platform.memory_node(dev);
 
                 // MSI acquisition: real buffer copies between node spaces.
                 for &h in &handles {
-                    if let Some(src) = dir.acquire_read(h, dev) {
-                        let bytes = store.transfer(h, src, dev);
-                        ledger.record(src, dev, bytes, model.transfer_time_ms(bytes));
+                    if let Some(src) = dir.acquire_read(h, mem) {
+                        let bytes = store.transfer(h, src, mem);
+                        ledger.record(src, mem, bytes, model.transfer_time_ms(bytes));
                     }
                 }
-                dir.acquire_write(out[v], dev);
-                // MSI write invalidation drops stale copies physically.
-                for other in 0..k {
-                    if other != dev && store.get(out[v], other).is_some() {
+                dir.acquire_write(out[v], mem);
+                // MSI write invalidation drops stale copies physically,
+                // sweeping *memory nodes* (not devices — the store is
+                // node-indexed and the mapping may diverge).
+                for other in 0..store.mem_nodes() {
+                    if other != mem && store.get(out[v], other).is_some() {
                         store.invalidate(out[v], other);
                     }
                 }
@@ -246,7 +269,7 @@ impl ExecEngine {
                 let input_bufs: Vec<Vec<f32>> = handles
                     .iter()
                     .take(arity)
-                    .map(|&h| store.get(h, dev).expect("input resident after acquire").clone())
+                    .map(|&h| store.get(h, mem).expect("input resident after acquire").clone())
                     .collect();
 
                 assignments[v] = dev;
@@ -273,7 +296,7 @@ impl ExecEngine {
             in_flight -= 1;
             outputs_done += 1;
             finished[c.task] = true;
-            store.put(out[c.task], c.device, c.output.clone());
+            store.put(out[c.task], self.platform.memory_node(c.device), c.output.clone());
             node_outputs.insert(c.task, c.output);
             device_busy[c.device] += c.end_ms - c.start_ms;
             let node = dag.node(c.task);
@@ -288,6 +311,12 @@ impl ExecEngine {
                     end_ms: c.end_ms,
                 });
             }
+            // Completion lifecycle event — real engines deliver these in
+            // true completion order, which is what lets online policies
+            // observe the machine instead of trusting backlog estimates.
+            let th = Instant::now();
+            scheduler.on_task_finish(c.task, c.device, c.end_ms);
+            decision_ns += th.elapsed().as_nanos() as u64;
             for &e in dag.out_edges(c.task) {
                 let wv = dag.edge(e).dst;
                 indeg[wv] -= 1;
@@ -296,6 +325,8 @@ impl ExecEngine {
                 }
             }
         }
+
+        scheduler.on_drain();
 
         // --- shutdown workers ---
         for dev_senders in &senders {
@@ -393,6 +424,29 @@ impl ExecEngine {
             trace,
         })
     }
+
+    /// Execute a stream of DAGs back-to-back through one policy, sharing
+    /// `cache` for plan reuse — the real-compute twin of
+    /// [`crate::sim::simulate_stream`].
+    pub fn run_stream(
+        &self,
+        dags: &[Dag],
+        scheduler: &mut dyn Scheduler,
+        model: &dyn PerfModel,
+        opts: &ExecOptions,
+        cache: &mut PlanCache,
+    ) -> Result<SessionReport> {
+        let mut session = SessionReport::new(scheduler.name());
+        for dag in dags {
+            let key = PlanKey::of(dag, &self.platform, model, scheduler);
+            let (plan, hit, build_ns) =
+                cache.get_or_build(key, || scheduler.build_plan(dag, &self.platform, model));
+            let mut report = self.run_with_plan(dag, scheduler, model, opts, Some(&plan))?;
+            report.plan_ns += build_ns;
+            session.push(report, hit);
+        }
+        Ok(session)
+    }
 }
 
 #[cfg(test)]
@@ -466,6 +520,25 @@ mod tests {
             );
             assert_eq!(real.assignments, sim.assignments, "{name}: assignments");
         }
+    }
+
+    #[test]
+    fn stream_of_identical_jobs_reuses_plan() {
+        let Some(eng) = engine() else { return };
+        let dag = generate_layered(&GeneratorConfig::paper(KernelKind::Ma, 64));
+        let dags = vec![dag.clone(), dag.clone(), dag];
+        let model = CalibratedModel::default();
+        let mut s = sched::by_name("gp").unwrap();
+        let mut cache = crate::sched::PlanCache::new();
+        let session = eng
+            .run_stream(&dags, s.as_mut(), &model, &ExecOptions::default(), &mut cache)
+            .unwrap();
+        assert_eq!(session.job_count(), 3);
+        assert_eq!(session.cache_misses, 1);
+        assert_eq!(session.cache_hits, 2);
+        // Same plan => same pins on every job.
+        assert_eq!(session.jobs[0].assignments, session.jobs[1].assignments);
+        assert_eq!(session.jobs[1].assignments, session.jobs[2].assignments);
     }
 
     #[test]

@@ -4,12 +4,17 @@
 //! coordinator thread owns the ready queue, the MSI directory and the
 //! per-memory-node buffer store; one worker thread per device worker
 //! executes kernels through the shared PJRT runtime. The same
-//! [`Scheduler`] objects drive dispatch as in the simulator, so policy
-//! behaviour (assignments, transfer counts) is engine-independent; only
-//! the clock differs (wall time here, virtual time there).
+//! [`crate::sched::Scheduler`] objects drive dispatch as in the simulator, so policy
+//! behaviour (assignments, transfer counts) is engine-independent for
+//! offline and snapshot-driven policies; only the clock differs (wall
+//! time here, virtual time there). Policies that react to
+//! `on_task_finish` (windowed gp) additionally see *event timing*
+//! differences: this engine delivers completions in true completion
+//! order, the simulator in dispatch order, so their replan points — and
+//! hence assignments — may legitimately differ across engines.
 //!
 //! Also home of the paper's offline pieces:
-//! * [`measure`] — fills a [`MeasuredModel`] from real PJRT kernel
+//! * [`measure`] — fills a [`crate::perfmodel::MeasuredModel`] from real PJRT kernel
 //!   timings (the paper's "offline measurements");
 //! * [`oracle`] — pure-Rust DAG evaluation used to verify every real
 //!   run's numerics end-to-end.

@@ -162,6 +162,40 @@ pub fn mixed_random(kernels: usize, size: u32, mm_fraction: f64, seed: u64) -> D
     dag
 }
 
+/// Two-phase workload: `depth` layers of `width` compute-bound MM
+/// kernels feeding `depth` layers of `width` bandwidth-bound MA kernels
+/// (each node depends on two nodes of the previous layer, wrap-around).
+///
+/// The streaming-bench workload that exposes the paper's §IV.D
+/// single-decision limitation: a one-shot Formula (1)/(2) ratio is an
+/// aggregate over both phases — dominated by the MM totals — so the MA
+/// phase inherits a near-zero CPU share it does not deserve. Windowed gp
+/// replans the frontier once the MM phase drains and recovers the MA
+/// phase's own balance.
+pub fn phased(width: usize, depth: usize, size: u32) -> Dag {
+    assert!(width >= 2 && depth >= 1);
+    let mut g = Dag::new();
+    let mut prev: Vec<NodeId> = Vec::new();
+    for (phase, kernel) in [(0usize, KernelKind::Mm), (1, KernelKind::Ma)] {
+        for layer in 0..depth {
+            let cur: Vec<NodeId> = (0..width)
+                .map(|i| {
+                    let tag = if phase == 0 { "mm" } else { "ma" };
+                    g.add_node(format!("{tag}_{layer}_{i}"), kernel, size)
+                })
+                .collect();
+            if !prev.is_empty() {
+                for (i, &v) in cur.iter().enumerate() {
+                    g.add_edge(prev[i], v);
+                    g.add_edge(prev[(i + 1) % width], v);
+                }
+            }
+            prev = cur;
+        }
+    }
+    g
+}
+
 /// Linear chain of `len` kernels (worst case for parallel scheduling:
 /// zero task parallelism, every edge a potential transfer).
 pub fn chain(len: usize, kernel: KernelKind, size: u32) -> Dag {
@@ -180,6 +214,24 @@ pub fn chain(len: usize, kernel: KernelKind, size: u32) -> Dag {
 mod tests {
     use super::*;
     use crate::dag::topo::{is_acyclic, levels};
+
+    #[test]
+    fn phased_structure() {
+        let g = phased(6, 3, 256);
+        assert!(is_acyclic(&g));
+        assert_eq!(g.node_count(), 6 * 3 * 2);
+        let mm = g.nodes().filter(|(_, n)| n.kernel == KernelKind::Mm).count();
+        let ma = g.nodes().filter(|(_, n)| n.kernel == KernelKind::Ma).count();
+        assert_eq!((mm, ma), (18, 18));
+        // Every non-first-layer node has exactly two parents; the MM->MA
+        // seam is wired like any other layer boundary.
+        for (id, _) in g.nodes() {
+            let indeg = g.in_degree(id);
+            assert!(indeg == 0 || indeg == 2, "node {id} indeg {indeg}");
+        }
+        assert_eq!(g.sources().len(), 6);
+        assert_eq!(g.sinks().len(), 6);
+    }
 
     #[test]
     fn montage_structure() {

@@ -10,8 +10,10 @@
 //! * [`perfmodel`] — calibrated/measured timing models;
 //! * [`platform`] — device + bus descriptions (Table I as data);
 //! * [`data`] — MSI data coherence over discrete memory nodes;
-//! * [`sched`] — eager / dmda / graph-partition (and extra) policies;
+//! * [`sched`] — eager / dmda / graph-partition (and extra) policies,
+//!   `Plan` artifacts, the plan cache and the scheduler registry;
 //! * [`sim`] — discrete-event engine for fast, deterministic sweeps;
+//! * [`session`] — streaming multi-DAG scheduling sessions;
 //! * [`runtime`] — manifest-gated kernel execution (interpreter backend
 //!   standing in for PJRT in this offline build);
 //! * [`coordinator`] — threaded real-compute execution engine;
@@ -30,5 +32,6 @@ pub mod platform;
 pub mod report;
 pub mod runtime;
 pub mod sched;
+pub mod session;
 pub mod sim;
 pub mod util;

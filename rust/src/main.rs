@@ -8,15 +8,14 @@ use hetsched::benchkit;
 use hetsched::cli::{Args, USAGE};
 use hetsched::config::RunConfig;
 use hetsched::coordinator::{measure_kernels, ExecEngine, ExecOptions};
-use hetsched::dag::{dot, KernelKind};
+use hetsched::dag::{dot, generate_layered, workloads, GeneratorConfig, KernelKind};
 use hetsched::metrics;
 use hetsched::perfmodel::{CalibratedModel, PerfModel};
 use hetsched::platform::Platform;
 use hetsched::report::{fmt_ms, fmt_ratio, Table};
 use hetsched::runtime::{KernelRuntime, RuntimeService};
-use hetsched::sched;
-use hetsched::sched::Scheduler as _;
-use hetsched::sim::{simulate, SimConfig};
+use hetsched::sched::{self, PlanCache, SchedulerRegistry};
+use hetsched::sim::{simulate, simulate_stream, SessionReport, SimConfig};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -32,6 +31,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         "run" => cmd_run(&args),
         "partition" => cmd_partition(&args),
         "figures" => cmd_figures(&args),
+        "bench" => cmd_bench(&args),
         "measure" => cmd_measure(&args),
         "stats" => cmd_stats(&args),
         "gen" => cmd_gen(&args),
@@ -107,8 +107,10 @@ fn cmd_run(args: &Args) -> Result<()> {
         dag.edge_count()
     );
 
-    let mut scheduler = sched::by_name(&cfg.scheduler)
-        .with_context(|| format!("unknown scheduler {:?}", cfg.scheduler))?;
+    let registry = SchedulerRegistry::builtin();
+    let mut scheduler = registry.create(&cfg.scheduler).with_context(|| {
+        format!("scheduler spec {:?}; policies:\n{}", cfg.scheduler, registry.help())
+    })?;
 
     let report = if args.has("real") {
         let rt = RuntimeService::spawn(artifacts_dir())?;
@@ -178,7 +180,7 @@ fn cmd_partition(args: &Args) -> Result<()> {
     let model = if k >= 3 { CalibratedModel::tri_device() } else { CalibratedModel::paper() };
 
     let mut gp = sched::GraphPartition::new(sched::GpConfig::default());
-    gp.plan(&dag, &platform, &model);
+    gp.plan_now(&dag, &platform, &model);
     let result = gp.last_result().unwrap();
     println!(
         "partitioned {} nodes / {} edges: edge-cut={} part-weights={:?} targets={:?}",
@@ -241,6 +243,145 @@ fn cmd_figures(_args: &Args) -> Result<()> {
         println!("{}", t.render());
     }
     Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("stream") => cmd_bench_stream(args),
+        other => bail!("unknown bench target {other:?} (available: stream)"),
+    }
+}
+
+/// `hetsched bench stream`: streaming multi-DAG sessions across the
+/// policy matrix. Reports plan-cache amortization (repeat-submission
+/// plan_ns ≈ 0), per-policy stream makespans, and the windowed-gp vs
+/// one-shot-gp comparison on the phased workload; emits
+/// `bench_results/BENCH_sched_session.json`.
+fn cmd_bench_stream(args: &Args) -> Result<()> {
+    let jobs = args.flag_usize("jobs", 8)?;
+    let window = args.flag_usize("window", 12)?;
+    let size = args.flag_u32("size", 1024)?;
+    let platform = Platform::paper();
+    let model = CalibratedModel::paper();
+    benchkit::preamble("sched_session — streaming multi-DAG sessions", &platform);
+
+    // Scenario streams: repeated identical jobs (cache amortization) and
+    // the two-phase workload (windowed replanning headline). The phased
+    // stream is pinned at size 256 — the regime where the two phases'
+    // Formula (1) ratios diverge strongly while per-task misassignment
+    // penalties stay small, which is where frontier replanning pays.
+    let repeat_mm: Vec<_> = (0..jobs)
+        .map(|_| generate_layered(&GeneratorConfig::paper(KernelKind::Mm, size)))
+        .collect();
+    let repeat_ma: Vec<_> = (0..jobs)
+        .map(|_| generate_layered(&GeneratorConfig::paper(KernelKind::Ma, size)))
+        .collect();
+    let phased: Vec<_> = (0..jobs.min(4)).map(|_| workloads::phased(8, 4, 256)).collect();
+    let scenarios: [(&str, &[hetsched::dag::Dag]); 3] =
+        [("repeat-mm", &repeat_mm), ("repeat-ma", &repeat_ma), ("phased", &phased)];
+
+    let specs: Vec<String> = vec![
+        "eager".into(),
+        "dmda".into(),
+        "heft".into(),
+        "gp".into(),
+        format!("gp:window={window}"),
+    ];
+
+    let registry = SchedulerRegistry::builtin();
+    let mut rows: Vec<(String, String, SessionReport)> = Vec::new();
+    // Per-row job counts are authoritative (the phased stream is capped
+    // at 4 jobs regardless of --jobs); the title carries only the size.
+    let mut table = Table::new(
+        format!("streaming sessions (size {size})"),
+        &[
+            "scenario", "policy", "jobs", "makespan_ms", "transfers", "plan_ms",
+            "repeat_plan_ms", "hit%",
+        ],
+    );
+    for (scenario, dags) in scenarios {
+        for spec in &specs {
+            let mut scheduler = registry.create(spec)?;
+            let mut cache = PlanCache::new();
+            let session = simulate_stream(
+                dags,
+                scheduler.as_mut(),
+                &platform,
+                &model,
+                &SimConfig::default(),
+                &mut cache,
+            );
+            table.row(vec![
+                scenario.to_string(),
+                spec.clone(),
+                session.job_count().to_string(),
+                fmt_ms(session.makespan_ms),
+                session.ledger.count.to_string(),
+                fmt_ms(session.plan_ns as f64 / 1e6),
+                fmt_ms(session.repeat_plan_ns() as f64 / 1e6),
+                format!("{:.0}", session.hit_rate() * 100.0),
+            ]);
+            rows.push((scenario.to_string(), spec.clone(), session));
+        }
+    }
+    println!("{}", table.render());
+
+    let find = |s: &str, p: &str| {
+        rows.iter().find(|(sc, sp, _)| sc == s && sp == p).map(|(_, _, r)| r)
+    };
+    if let (Some(one_shot), Some(windowed)) =
+        (find("phased", "gp"), find("phased", &format!("gp:window={window}")))
+    {
+        let gain = (one_shot.makespan_ms - windowed.makespan_ms) / one_shot.makespan_ms;
+        println!(
+            "phased stream: gp {} ms vs gp:window={window} {} ms ({:+.1}% makespan)",
+            fmt_ms(one_shot.makespan_ms),
+            fmt_ms(windowed.makespan_ms),
+            -gain * 100.0
+        );
+    }
+
+    let json = render_session_json(jobs, window, size, "cargo-run", &rows);
+    let path = benchkit::save_bench_json("sched_session", &json)?;
+    println!("json written to {}", path.display());
+    Ok(())
+}
+
+/// Render the `BENCH_sched_session.json` document.
+fn render_session_json(
+    jobs: usize,
+    window: usize,
+    size: u32,
+    harness: &str,
+    rows: &[(String, String, SessionReport)],
+) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    s.push_str("{\n  \"bench\": \"sched_session\",\n");
+    let _ = writeln!(s, "  \"harness\": \"{harness}\",");
+    let _ = writeln!(s, "  \"requested_jobs\": {jobs},");
+    let _ = writeln!(s, "  \"window\": {window},\n  \"size\": {size},");
+    s.push_str("  \"rows\": [\n");
+    for (i, (scenario, policy, r)) in rows.iter().enumerate() {
+        let _ = writeln!(
+            s,
+            "    {{\"scenario\": \"{scenario}\", \"policy\": \"{policy}\", \"jobs\": {}, \
+             \"makespan_ms\": {:.6}, \"transfers\": {}, \"plan_ns\": {}, \
+             \"first_plan_ns\": {}, \"repeat_plan_ns\": {}, \"cache_hit_rate\": {:.4}, \
+             \"decision_ns\": {}}}{}",
+            r.job_count(),
+            r.makespan_ms,
+            r.ledger.count,
+            r.plan_ns,
+            r.jobs.first().map(|j| j.plan_ns).unwrap_or(0),
+            r.repeat_plan_ns(),
+            r.hit_rate(),
+            r.decision_ns,
+            if i + 1 == rows.len() { "" } else { "," }
+        );
+    }
+    s.push_str("  ]\n}\n");
+    s
 }
 
 fn cmd_measure(args: &Args) -> Result<()> {

@@ -24,7 +24,7 @@
 //! Every phase runs on the flat METIS-style CSR layout of
 //! [`MetisGraph`] (`xadj`/`adjncy`/`adjwgt`), via the [`Adjacency`]
 //! trait. Recursive bisection never copies an induced subgraph: a child
-//! vertex subset is partitioned through a [`SubsetView`] — the parent
+//! vertex subset is partitioned through a `SubsetView` — the parent
 //! graph plus a full→local index remap — and the first coarsening level
 //! below the view materializes a concrete (smaller) CSR graph, so the
 //! per-level cost is one filtered adjacency sweep instead of an O(E)

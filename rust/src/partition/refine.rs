@@ -5,7 +5,7 @@
 //! finally rolls back to the best prefix seen. Passes repeat until no
 //! pass improves the cut (or `refine_passes` is exhausted).
 //!
-//! Move selection uses a *bucket-gain* structure ([`GainBuckets`])
+//! Move selection uses a *bucket-gain* structure (`GainBuckets`)
 //! instead of a lazy-deletion `BinaryHeap`: vertices sit in intrusive
 //! doubly-linked lists keyed by `(gain class, vertex-id chunk)`, with a
 //! three-level bitmap over the leaf lists, so the best move pops in
@@ -15,13 +15,26 @@
 //! heap size and pop cost).
 //!
 //! Key layout: gains in `±EXACT_GAIN` get one class per exact value —
-//! subdivided into [`NCHUNK`] vertex-id chunks so ties break toward the
+//! subdivided into `NCHUNK` vertex-id chunks so ties break toward the
 //! highest chunk, reproducing the old heap's `(gain, v)` max-pop
 //! sweep-like order that measurably improves fine-level cuts on large
 //! graphs; larger gains fall into power-of-two tail classes (one list
 //! per class, LIFO) where coarse-level merged weights live and relative
 //! order within a band matters little. FM's prefix rollback makes the
 //! pass robust to the tail approximation.
+//!
+//! **Adaptive gain scale**: every gain is an integer combination of edge
+//! weights, so the smallest nonzero edge weight is the distribution's
+//! quantum. Each pass right-shifts gains by `floor(log2(min_w))` before
+//! keying them into a leaf: microsecond-magnitude gp edge weights — whose
+//! gains land in the thousands and previously collapsed into a handful of
+//! log2 tail classes — map onto the exact classes at their natural
+//! resolution (gains a full quantum apart always land in distinct
+//! classes), while unit-weight graphs keep a shift of 0 and behave
+//! bit-identically to the unscaled structure. Scaling from the *minimum*
+//! weight rather than the maximum gain deliberately leaves rare oversized
+//! coarse-level gains in the tails instead of sacrificing near-zero
+//! granularity to pull them in.
 //!
 //! Only boundary vertices (plus isolated ones, movable for balance) are
 //! scanned into the buckets at pass start; interior vertices enter
@@ -72,6 +85,9 @@ pub(crate) struct GainBuckets {
     bits2: u64,
     /// `chunk(v) = v >> shift`, chosen so chunks stay below [`NCHUNK`].
     shift: u32,
+    /// Per-pass adaptive gain scale: gains are right-shifted by this many
+    /// bits before leaf keying (see module docs).
+    gain_shift: u32,
 }
 
 impl GainBuckets {
@@ -99,11 +115,20 @@ impl GainBuckets {
         while n > (NCHUNK << self.shift) {
             self.shift += 1;
         }
+        self.gain_shift = 0;
+    }
+
+    /// Install the adaptive gain scale for this pass. Must be called
+    /// while the queue is empty (leaf keys are not rebuilt).
+    fn set_gain_shift(&mut self, shift: u32) {
+        self.gain_shift = shift;
     }
 
     /// `(gain, v)` -> leaf index, monotone in the gain and (within the
-    /// exact range) in the vertex chunk.
+    /// exact range) in the vertex chunk. The gain is scaled by the
+    /// per-pass `gain_shift` first (arithmetic shift: order-preserving).
     fn leaf_of(&self, v: usize, gain: i64) -> usize {
+        let gain = gain >> self.gain_shift;
         if (-EXACT_GAIN..=EXACT_GAIN).contains(&gain) {
             EXACT_BASE + (gain + EXACT_GAIN) as usize * NCHUNK + (v >> self.shift)
         } else if gain > 0 {
@@ -202,6 +227,9 @@ pub struct FmScratch {
     gain: Vec<i64>,
     locked: Vec<bool>,
     log: Vec<u32>,
+    /// Boundary/isolated vertices eligible for the initial queue fill
+    /// (staged so the adaptive gain scale is known before any insert).
+    seeds: Vec<u32>,
     buckets: GainBuckets,
 }
 
@@ -271,6 +299,7 @@ fn fm_pass<G: Adjacency>(
     let gain = &mut ws.gain;
     let locked = &mut ws.locked;
     let log = &mut ws.log;
+    let seeds = &mut ws.seeds;
     let buckets = &mut ws.buckets;
 
     gain.clear();
@@ -278,11 +307,15 @@ fn fm_pass<G: Adjacency>(
     locked.clear();
     locked.resize(n, false);
     log.clear();
+    seeds.clear();
     buckets.reset(n);
 
-    // gain[v] = cut reduction if v switches sides; seed the queue with
-    // free boundary vertices (and isolated ones — movable for balance).
+    // gain[v] = cut reduction if v switches sides; stage the free
+    // boundary vertices (and isolated ones — movable for balance) and
+    // observe the smallest edge weight — the gain quantum — for the
+    // adaptive scale before anything enters the queue.
     let mut w0 = 0i64;
+    let mut min_w = i64::MAX;
     for v in 0..n {
         let sv = side[v];
         if sv == 0 {
@@ -293,6 +326,9 @@ fn fm_pass<G: Adjacency>(
         let mut boundary = false;
         g.for_neighbors(v, |u, w| {
             deg += 1;
+            if w > 0 && w < min_w {
+                min_w = w;
+            }
             if side[u] != sv {
                 gsum += w;
                 boundary = true;
@@ -303,8 +339,15 @@ fn fm_pass<G: Adjacency>(
         gain[v] = gsum;
         locked[v] = fixed[v] >= 0;
         if !locked[v] && (boundary || deg == 0) {
-            buckets.insert(v, gsum);
+            seeds.push(v as u32);
         }
+    }
+    // One exact class per weight quantum; 0 for unit-weight graphs
+    // (bit-identical to the unscaled structure).
+    let gain_shift = if min_w == i64::MAX { 0 } else { (min_w as u64).ilog2() };
+    buckets.set_gain_shift(gain_shift);
+    for &v in seeds.iter() {
+        buckets.insert(v as usize, gain[v as usize]);
     }
 
     let mut running_cut = *cut;
@@ -486,6 +529,59 @@ mod tests {
         fm_refine(&g, &mut side, 0.5, &fixed, &cfg, &mut rng);
         assert_eq!(side[0], fixed[0] as usize);
         assert_eq!(side[7], fixed[7] as usize);
+    }
+
+    fn ladder_weighted(n: usize, w: i64) -> MetisGraph {
+        let mut adj = vec![Vec::new(); 2 * n];
+        let mut add = |a: usize, b: usize, adj: &mut Vec<Vec<(usize, i64)>>| {
+            adj[a].push((b, w));
+            adj[b].push((a, w));
+        };
+        for i in 0..n - 1 {
+            add(i, i + 1, &mut adj);
+            add(n + i, n + i + 1, &mut adj);
+        }
+        for i in 0..n {
+            add(i, n + i, &mut adj);
+        }
+        MetisGraph::from_adj(vec![1; 2 * n], adj)
+    }
+
+    #[test]
+    fn adaptive_scale_neutral_for_power_of_two_weights() {
+        // Uniformly scaling all edge weights by 2^20 scales every gain by
+        // 2^20; the adaptive shift maps them back onto the exact same
+        // leaves, so the move sequence — and hence the partition — must
+        // be identical, with the cut scaled exactly.
+        let cfg = PartitionConfig::default();
+        for seed in [1u64, 5, 9] {
+            let mut side_a: Vec<usize> = (0..24).map(|v| v % 2).collect();
+            let mut side_b = side_a.clone();
+            let ga = ladder_weighted(12, 1);
+            let gb = ladder_weighted(12, 1 << 20);
+            let mut rng_a = Pcg32::seeded(seed);
+            let mut rng_b = Pcg32::seeded(seed);
+            let fixed = vec![-1i8; 24];
+            let ca = fm_refine(&ga, &mut side_a, 0.5, &fixed, &cfg, &mut rng_a);
+            let cb = fm_refine(&gb, &mut side_b, 0.5, &fixed, &cfg, &mut rng_b);
+            assert_eq!(side_a, side_b, "seed {seed}: scaled moves must match");
+            assert_eq!(cb, ca << 20, "seed {seed}: cut must scale exactly");
+        }
+    }
+
+    #[test]
+    fn adaptive_scale_improves_heavy_weight_partitions() {
+        // Heavy (µs-magnitude) weights must still be refinable down to
+        // the optimal ladder cut — previously every gain sat in one of a
+        // few log2 tail classes.
+        let g = ladder_weighted(16, 3000);
+        let mut side: Vec<usize> = (0..32).map(|v| v % 2).collect();
+        let before = quality::edge_cut(&g, &side);
+        let cfg = PartitionConfig::default();
+        let mut rng = Pcg32::seeded(2);
+        let after = fm_refine(&g, &mut side, 0.5, &vec![-1i8; 32], &cfg, &mut rng);
+        assert!(after < before / 4, "cut {before} -> {after} should collapse");
+        assert_eq!(after, quality::edge_cut(&g, &side));
     }
 
     #[test]

@@ -95,6 +95,20 @@ impl Platform {
         0
     }
 
+    /// The memory node owned by device `dev`.
+    ///
+    /// Today the mapping is the identity — every device owns exactly one
+    /// discrete memory node with the same index — but all device→memory
+    /// translation in the engines and in
+    /// [`crate::sched::DispatchCtx::transfer_cost_ms`] routes through
+    /// this method, so the mapping can diverge (shared memory pools,
+    /// NUMA nodes, unified-memory accelerators) without silently
+    /// corrupting `valid_mask` indexing.
+    pub fn memory_node(&self, dev: DeviceId) -> MemNode {
+        debug_assert!(dev < self.devices.len(), "memory_node of unknown device {dev}");
+        dev
+    }
+
     /// Render the Table I-style header printed by every bench.
     pub fn table1(&self) -> String {
         let mut s = String::from("platform      | description\n");
@@ -148,6 +162,16 @@ mod tests {
         let p = Platform::tri_device();
         assert_eq!(p.device_count(), 3);
         assert_eq!(p.devices[2].kind, DeviceKind::Fpga);
+    }
+
+    #[test]
+    fn memory_node_mapping_is_identity_today() {
+        for p in [Platform::paper(), Platform::tri_device()] {
+            for d in 0..p.device_count() {
+                assert_eq!(p.memory_node(d), d);
+            }
+            assert_eq!(p.host_node(), p.memory_node(0), "host = CPU's memory node");
+        }
     }
 
     #[test]

@@ -14,8 +14,10 @@
 //! devices for compute-bound kernels and avoids re-fetching data; the
 //! paper measures fewer transfers than eager but more than gp.
 
-use super::{DispatchCtx, Scheduler};
-use crate::platform::DeviceId;
+use super::{DispatchCtx, Plan, Planner, Scheduler};
+use crate::dag::Dag;
+use crate::perfmodel::PerfModel;
+use crate::platform::{DeviceId, Platform};
 
 /// Data-aware earliest-estimated-finish dispatch.
 #[derive(Debug, Default)]
@@ -27,12 +29,21 @@ impl Dmda {
     }
 }
 
+impl Planner for Dmda {
+    /// Online policy: nothing to decide before tasks run.
+    fn build_plan(&mut self, _dag: &Dag, _platform: &Platform, _model: &dyn PerfModel) -> Plan {
+        Plan::trivial("dmda")
+    }
+}
+
 impl Scheduler for Dmda {
     fn name(&self) -> &'static str {
         "dmda"
     }
 
     fn select(&mut self, ctx: &DispatchCtx) -> DeviceId {
+        // Strict `<` keeps ties on the lowest device id — pinned by the
+        // tie-break determinism tests.
         let mut best = 0usize;
         let mut best_t = f64::INFINITY;
         for d in 0..ctx.device_free_ms.len() {

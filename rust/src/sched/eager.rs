@@ -7,8 +7,10 @@
 //! losing baseline (Fig 6); its transfer count is the highest of the
 //! three policies.
 
-use super::{DispatchCtx, Scheduler};
-use crate::platform::DeviceId;
+use super::{DispatchCtx, Plan, Planner, Scheduler};
+use crate::dag::Dag;
+use crate::perfmodel::PerfModel;
+use crate::platform::{DeviceId, Platform};
 
 /// Greedy idle-worker dispatch.
 #[derive(Debug, Default)]
@@ -17,6 +19,13 @@ pub struct Eager;
 impl Eager {
     pub fn new() -> Eager {
         Eager
+    }
+}
+
+impl Planner for Eager {
+    /// Online policy: nothing to decide before tasks run.
+    fn build_plan(&mut self, _dag: &Dag, _platform: &Platform, _model: &dyn PerfModel) -> Plan {
+        Plan::trivial("eager")
     }
 }
 

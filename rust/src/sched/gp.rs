@@ -15,9 +15,38 @@
 //! 4. **Pinning** — each kernel is pinned to its partition's device; the
 //!    runtime "cannot schedule them again" (§III.B). `select` is a table
 //!    lookup — the amortized "singular decision" of §IV.D.
+//!
+//! The pipeline's product is an immutable [`Plan`]
+//! ([`Planner::build_plan`]); [`Scheduler::on_submit`] installs a plan —
+//! freshly built or served from a [`crate::sched::PlanCache`] — before
+//! the engine dispatches.
+//!
+//! # Windowed replanning (`GpConfig::window`)
+//!
+//! The paper concedes that gp "makes a singular decision and uses the
+//! same decision for all following tasks" (§IV.D). With `window = W` the
+//! policy attacks exactly that: every `W` task completions
+//! ([`Scheduler::on_task_finish`]) it re-partitions the
+//! not-yet-dispatched frontier, pinning already-dispatched tasks to
+//! their devices (their data is already placed) and recomputing the
+//! Formula (1)/(2) ratios over the *remaining* kernels only. On phased
+//! workloads — e.g. a compute-bound MM stage feeding a bandwidth-bound
+//! MA stage — the aggregate one-shot ratio misallocates both stages,
+//! while the windowed frontier ratio tracks each stage's own device
+//! balance. Weights are snapshotted at submit, so replanning needs no
+//! model access and stays allocation-light through the reused
+//! [`PartitionWorkspace`].
+//!
+//! Windowed decisions depend on *when* `on_task_finish` fires: the
+//! simulator delivers completions in dispatch order, the real engine in
+//! true completion order, so — unlike every offline policy — windowed
+//! gp's assignments are pinned per engine, not across engines (the
+//! golden and bench suites exercise the simulator).
 
-use super::{DispatchCtx, Scheduler};
-use crate::dag::metis_io::dag_to_builder;
+use std::sync::Arc;
+
+use super::{plan, DispatchCtx, Plan, Planner, Scheduler};
+use crate::dag::metis_io::{dag_to_builder, CsrBuilder};
 use crate::dag::{Dag, KernelKind, NodeId};
 use crate::partition::{partition_with, PartitionConfig, PartitionResult, PartitionWorkspace};
 use crate::perfmodel::{edge_weight_us, node_weight_us, NodeWeightPolicy, PerfModel};
@@ -34,12 +63,32 @@ pub struct GpConfig {
     pub epsilon: f64,
     /// Partitioner seed.
     pub seed: u64,
+    /// Re-partition the undispatched frontier every `window` completions
+    /// (`None` = the paper's one-shot §IV.D behavior).
+    pub window: Option<usize>,
 }
 
 impl Default for GpConfig {
     fn default() -> Self {
-        GpConfig { node_weight: NodeWeightPolicy::GpuTime, epsilon: 0.05, seed: 1 }
+        GpConfig { node_weight: NodeWeightPolicy::GpuTime, epsilon: 0.05, seed: 1, window: None }
     }
+}
+
+/// Weight snapshot taken at submit so windowed replans need no model.
+#[derive(Debug, Clone, Default)]
+struct FrontierState {
+    /// Node weight (µs) per vertex.
+    node_w: Vec<i64>,
+    /// Host-anchor edge weight (µs) per vertex (0 = no anchor edge).
+    anchor_w: Vec<i64>,
+    /// DAG edges as `(src, dst, µs)`.
+    edges: Vec<(u32, u32, i64)>,
+    /// `kernel_time_ms(v, d)` flattened as `v * k + d`.
+    dev_time: Vec<f64>,
+    /// Real kernel (not a virtual source)?
+    real: Vec<bool>,
+    /// Device count.
+    k: usize,
 }
 
 /// Offline graph-partition scheduler.
@@ -48,9 +97,14 @@ pub struct GraphPartition {
     parts: Vec<DeviceId>,
     last_result: Option<PartitionResult>,
     ratios: Vec<f64>,
-    /// Partitioner scratch, reused across `plan` calls (replanning a
+    /// Partitioner scratch, reused across plans and replans (replanning a
     /// stream of DAGs allocates nothing once buffers are warm).
     workspace: PartitionWorkspace,
+    // --- windowed-replanning state (empty in one-shot mode) ---
+    frontier: FrontierState,
+    dispatched: Vec<bool>,
+    finishes_since_replan: usize,
+    replans: u64,
 }
 
 impl GraphPartition {
@@ -61,22 +115,41 @@ impl GraphPartition {
             last_result: None,
             ratios: Vec::new(),
             workspace: PartitionWorkspace::new(),
+            frontier: FrontierState::default(),
+            dispatched: Vec::new(),
+            finishes_since_replan: 0,
+            replans: 0,
         }
     }
 
-    /// The pinned device per node (valid after `plan`).
+    /// The pinned device per node (valid after a plan is installed).
     pub fn parts(&self) -> &[DeviceId] {
         &self.parts
     }
 
-    /// Partition quality of the last plan.
+    /// Partition quality of the last (re)plan.
     pub fn last_result(&self) -> Option<&PartitionResult> {
         self.last_result.as_ref()
     }
 
-    /// Workload ratios used for the last plan (Formula 1/2).
+    /// Workload ratios used for the last (re)plan (Formula 1/2).
     pub fn ratios(&self) -> &[f64] {
         &self.ratios
+    }
+
+    /// Number of windowed replans performed since the last submit.
+    pub fn replans(&self) -> u64 {
+        self.replans
+    }
+
+    /// Build a plan and install it in one step — the offline-tool path
+    /// (`hetsched partition`, examples, tests). Engines instead pair
+    /// [`Planner::build_plan`] (or a cache hit) with
+    /// [`Scheduler::on_submit`].
+    pub fn plan_now(&mut self, dag: &Dag, platform: &Platform, model: &dyn PerfModel) -> Arc<Plan> {
+        let plan = Arc::new(self.build_plan(dag, platform, model));
+        self.on_submit(dag, &plan, platform, model);
+        plan
     }
 
     /// Aggregate workload ratios over a whole (possibly heterogeneous)
@@ -94,35 +167,14 @@ impl GraphPartition {
                 *t += model.kernel_time_ms(node.kernel, node.size, d);
             }
         }
-        let inv: Vec<f64> = totals.iter().map(|&t| 1.0 / t.max(1e-12)).collect();
-        let sum: f64 = inv.iter().sum();
-        inv.iter().map(|i| i / sum).collect()
-    }
-}
-
-impl Scheduler for GraphPartition {
-    fn name(&self) -> &'static str {
-        "gp"
+        ratios_from_totals(&totals)
     }
 
-    fn plan(&mut self, dag: &Dag, platform: &Platform, model: &dyn PerfModel) {
-        let policy = self.config.node_weight;
-        let n = dag.node_count();
-        let mut builder = dag_to_builder(
-            dag,
-            |id: NodeId| {
-                let node = dag.node(id);
-                node_weight_us(model, node.kernel, node.size, platform, policy)
-            },
-            |eid| edge_weight_us(model, dag.edge(eid).bytes),
-        );
-
-        // Host anchor: the paper's zero-weight "empty kernel" (§III.B).
-        // All initial data lives on host memory, and results return there;
-        // modelling both as edges to a vertex *pinned to the host
-        // partition* lets the cut metric see initial-load and write-back
-        // transfers, not just inter-kernel ones.
-        let anchor = builder.add_vertex(0);
+    /// Host-anchor edge weight per node: the transfer time of initial
+    /// inputs not fed by an in-edge plus the result write-back for sinks
+    /// (0 = no anchor edge).
+    fn anchor_weights(dag: &Dag, model: &dyn PerfModel) -> Vec<i64> {
+        let mut anchor_w = vec![0i64; dag.node_count()];
         for (id, node) in dag.nodes() {
             if node.kernel == KernelKind::Source {
                 continue;
@@ -136,18 +188,51 @@ impl Scheduler for GraphPartition {
             if dag.out_degree(id) == 0 {
                 w += edge_weight_us(model, mat_bytes);
             }
+            anchor_w[id] = w;
+        }
+        anchor_w
+    }
+
+    /// The weighted METIS graph of the plan: DAG nodes/edges plus the
+    /// paper's zero-weight "empty kernel" host anchor as vertex `n`.
+    ///
+    /// All initial data lives on host memory, and results return there;
+    /// modelling both as edges to a vertex *pinned to the host partition*
+    /// lets the cut metric see initial-load and write-back transfers, not
+    /// just inter-kernel ones.
+    fn build_graph(&self, dag: &Dag, platform: &Platform, model: &dyn PerfModel) -> CsrBuilder {
+        let policy = self.config.node_weight;
+        let mut builder = dag_to_builder(
+            dag,
+            |id: NodeId| {
+                let node = dag.node(id);
+                node_weight_us(model, node.kernel, node.size, platform, policy)
+            },
+            |eid| edge_weight_us(model, dag.edge(eid).bytes),
+        );
+        let anchor = builder.add_vertex(0);
+        for (id, &w) in Self::anchor_weights(dag, model).iter().enumerate() {
             if w > 0 {
                 builder.add_edge(anchor, id, w);
             }
         }
-        let metis = builder.build();
-        let mut fixed = vec![-1i32; n + 1];
-        fixed[anchor] = 0; // host partition = device 0's memory node
+        builder
+    }
 
-        self.ratios = Self::aggregate_ratios(dag, platform, model);
+    /// Partition the builder's graph with `fixed` pins and `ratios`
+    /// targets; installs `parts`/`last_result`/`ratios`.
+    fn run_partition(
+        &mut self,
+        builder: CsrBuilder,
+        n: usize,
+        k: usize,
+        fixed: Vec<i32>,
+        ratios: Vec<f64>,
+    ) {
+        let metis = builder.build();
         let cfg = PartitionConfig {
-            k: platform.device_count(),
-            targets: Some(self.ratios.clone()),
+            k,
+            targets: Some(ratios.clone()),
             epsilon: self.config.epsilon,
             seed: self.config.seed,
             fixed: Some(fixed),
@@ -155,16 +240,175 @@ impl Scheduler for GraphPartition {
         };
         let result = partition_with(&metis, &cfg, &mut self.workspace);
         self.parts = result.parts[..n].to_vec();
+        self.ratios = ratios;
         self.last_result = Some(result);
+    }
+
+    /// Windowed replan: re-partition the undispatched frontier with
+    /// dispatched tasks pinned to their devices and ratios recomputed
+    /// over the remaining kernels.
+    ///
+    /// Balance semantics (deliberate): the ratio vector comes from the
+    /// *remaining* work, but each part's balance target still spans the
+    /// *total* snapshot weight, with pinned (dispatched) weight counting
+    /// toward its part. A device that the aggregate plan starved
+    /// therefore receives more than its proportional share of the
+    /// frontier — mirror-measured to beat both one-shot gp and the
+    /// remaining-weight-only alternative (which re-creates Formula (1)'s
+    /// blindness to idle multi-worker devices) on the phased workload.
+    fn replan_frontier(&mut self) {
+        let f = &self.frontier;
+        let n = f.node_w.len();
+        let k = f.k;
+        let mut totals = vec![0.0f64; k];
+        let mut remaining = 0usize;
+        for v in 0..n {
+            if !f.real[v] || self.dispatched[v] {
+                continue;
+            }
+            remaining += 1;
+            for (d, t) in totals.iter_mut().enumerate() {
+                *t += f.dev_time[v * k + d];
+            }
+        }
+        if remaining == 0 {
+            return;
+        }
+        let ratios = ratios_from_totals(&totals);
+
+        let mut builder = CsrBuilder::with_capacity(n, f.edges.len() + n);
+        for (v, &w) in f.node_w.iter().enumerate() {
+            builder.set_vertex_weight(v, w);
+        }
+        let anchor = builder.add_vertex(0);
+        for v in 0..n {
+            if f.anchor_w[v] > 0 {
+                builder.add_edge(anchor, v, f.anchor_w[v]);
+            }
+        }
+        for &(u, v, w) in &f.edges {
+            builder.add_edge(u as usize, v as usize, w);
+        }
+
+        let mut fixed = vec![-1i32; n + 1];
+        fixed[anchor] = 0; // host partition = device 0's memory node
+        for v in 0..n {
+            if self.dispatched[v] {
+                fixed[v] = self.parts[v] as i32;
+            }
+        }
+        self.run_partition(builder, n, k, fixed, ratios);
+        self.replans += 1;
+    }
+}
+
+/// `R_d ∝ 1 / T_d`, normalized.
+fn ratios_from_totals(totals: &[f64]) -> Vec<f64> {
+    let inv: Vec<f64> = totals.iter().map(|&t| 1.0 / t.max(1e-12)).collect();
+    let sum: f64 = inv.iter().sum();
+    inv.iter().map(|i| i / sum).collect()
+}
+
+impl Planner for GraphPartition {
+    fn build_plan(&mut self, dag: &Dag, platform: &Platform, model: &dyn PerfModel) -> Plan {
+        let t0 = std::time::Instant::now();
+        let n = dag.node_count();
+        let k = platform.device_count();
+        let builder = self.build_graph(dag, platform, model);
+        let mut fixed = vec![-1i32; n + 1];
+        fixed[n] = 0; // host anchor
+        let ratios = Self::aggregate_ratios(dag, platform, model);
+        self.run_partition(builder, n, k, fixed, ratios);
+        Plan {
+            policy: self.name(),
+            pins: self.parts.clone(),
+            ratios: self.ratios.clone(),
+            quality: self.last_result.clone(),
+            cost_ns: t0.elapsed().as_nanos() as u64,
+        }
+    }
+}
+
+impl Scheduler for GraphPartition {
+    fn name(&self) -> &'static str {
+        if self.config.window.is_some() {
+            "gp-window"
+        } else {
+            "gp"
+        }
+    }
+
+    fn fingerprint(&self) -> u64 {
+        let mut h = plan::fnv1a(self.name().as_bytes());
+        h ^= self.config.epsilon.to_bits().rotate_left(1);
+        h = h.wrapping_mul(0x100000001b3).wrapping_add(self.config.seed);
+        h = h.wrapping_mul(0x100000001b3).wrapping_add(match self.config.node_weight {
+            NodeWeightPolicy::GpuTime => 1,
+            NodeWeightPolicy::CpuTime => 2,
+            NodeWeightPolicy::MeanTime => 3,
+        });
+        h.wrapping_mul(0x100000001b3)
+            .wrapping_add(self.config.window.map(|w| w as u64 + 1).unwrap_or(0))
+    }
+
+    fn on_submit(
+        &mut self,
+        dag: &Dag,
+        plan: &Arc<Plan>,
+        platform: &Platform,
+        model: &dyn PerfModel,
+    ) {
+        self.parts = plan.pins.clone();
+        self.ratios = plan.ratios.clone();
+        self.last_result = plan.quality.clone();
+        self.replans = 0;
+        self.finishes_since_replan = 0;
+        if self.config.window.is_none() {
+            return;
+        }
+        // Snapshot the weighting so replans are model-free.
+        let n = dag.node_count();
+        let k = platform.device_count();
+        let policy = self.config.node_weight;
+        let anchor_w = Self::anchor_weights(dag, model);
+        let mut node_w = Vec::with_capacity(n);
+        let mut dev_time = Vec::with_capacity(n * k);
+        let mut real = Vec::with_capacity(n);
+        for (_, node) in dag.nodes() {
+            node_w.push(node_weight_us(model, node.kernel, node.size, platform, policy));
+            real.push(node.kernel != KernelKind::Source);
+            for d in 0..k {
+                dev_time.push(model.kernel_time_ms(node.kernel, node.size, d));
+            }
+        }
+        let edges = dag
+            .edges()
+            .map(|(_, e)| (e.src as u32, e.dst as u32, edge_weight_us(model, e.bytes).max(1)))
+            .collect();
+        self.frontier = FrontierState { node_w, anchor_w, edges, dev_time, real, k };
+        self.dispatched = vec![false; n];
     }
 
     fn select(&mut self, ctx: &DispatchCtx) -> DeviceId {
         // Pure table lookup: the singular offline decision, amortized.
+        if self.config.window.is_some() {
+            self.dispatched[ctx.task] = true;
+        }
         self.parts[ctx.task]
     }
 
+    fn on_task_finish(&mut self, _task: NodeId, _dev: DeviceId, _finish_ms: f64) {
+        let Some(window) = self.config.window else { return };
+        self.finishes_since_replan += 1;
+        if self.finishes_since_replan >= window {
+            self.finishes_since_replan = 0;
+            self.replan_frontier();
+        }
+    }
+
     fn is_offline(&self) -> bool {
-        true
+        // Windowed gp revises its table while the job runs.
+        self.config.window.is_none()
     }
 }
 
@@ -179,7 +423,7 @@ mod tests {
         let platform = Platform::paper();
         let model = CalibratedModel::default();
         let mut gp = GraphPartition::new(GpConfig::default());
-        gp.plan(&dag, &platform, &model);
+        gp.plan_now(&dag, &platform, &model);
         gp
     }
 
@@ -253,8 +497,8 @@ mod tests {
             node_weight: NodeWeightPolicy::CpuTime,
             ..Default::default()
         });
-        a.plan(&dag, &platform, &model);
-        b.plan(&dag, &platform, &model);
+        a.plan_now(&dag, &platform, &model);
+        b.plan_now(&dag, &platform, &model);
         // Both must produce complete pinnings.
         assert_eq!(a.parts().len(), dag.node_count());
         assert_eq!(b.parts().len(), dag.node_count());
@@ -266,7 +510,7 @@ mod tests {
         let platform = Platform::tri_device();
         let model = CalibratedModel::tri_device();
         let mut gp = GraphPartition::new(GpConfig::default());
-        gp.plan(&dag, &platform, &model);
+        gp.plan_now(&dag, &platform, &model);
         let mut counts = [0usize; 3];
         for &p in gp.parts() {
             counts[p] += 1;
@@ -274,5 +518,88 @@ mod tests {
         assert!(counts[1] > 0, "GPU empty: {counts:?}");
         // The bandwidth-bound kernel leaves meaningful work for ≥2 devices.
         assert!(counts.iter().filter(|&&c| c > 0).count() >= 2, "{counts:?}");
+    }
+
+    #[test]
+    fn plan_artifact_matches_installed_state() {
+        let dag = generate_layered(&GeneratorConfig::paper(KernelKind::Ma, 1024));
+        let platform = Platform::paper();
+        let model = CalibratedModel::default();
+        let mut gp = GraphPartition::new(GpConfig::default());
+        let plan = gp.plan_now(&dag, &platform, &model);
+        assert_eq!(plan.policy, "gp");
+        assert_eq!(plan.pins, gp.parts());
+        assert_eq!(plan.ratios, gp.ratios());
+        assert!(plan.quality.is_some());
+        // Installing the same plan into a fresh instance reproduces the
+        // pinning without running the partitioner.
+        let mut fresh = GraphPartition::new(GpConfig::default());
+        fresh.on_submit(&dag, &plan, &platform, &model);
+        assert_eq!(fresh.parts(), gp.parts());
+    }
+
+    #[test]
+    fn windowed_replan_fires_and_stays_consistent() {
+        let dag = generate_layered(&GeneratorConfig::paper(KernelKind::Ma, 1024));
+        let platform = Platform::paper();
+        let model = CalibratedModel::default();
+        let mut gp = GraphPartition::new(GpConfig { window: Some(4), ..Default::default() });
+        assert_eq!(gp.name(), "gp-window");
+        assert!(!gp.is_offline());
+        gp.plan_now(&dag, &platform, &model);
+        let free = [0.0, 0.0];
+        // Dispatch half the tasks, completing them as we go.
+        let n = dag.node_count();
+        for task in 0..n / 2 {
+            let ctx = DispatchCtx {
+                task,
+                kernel: KernelKind::Ma,
+                size: 1024,
+                ready_ms: 0.0,
+                device_free_ms: &free,
+                inputs: &[],
+                platform: &platform,
+                model: &model,
+            };
+            let before = gp.parts()[task];
+            let got = gp.select(&ctx);
+            assert_eq!(got, before, "select must honor the current table");
+            gp.on_task_finish(task, got, 1.0);
+        }
+        assert_eq!(gp.replans(), (n / 2 / 4) as u64, "one replan per window");
+        // Dispatched pins survive every replan.
+        for task in 0..n / 2 {
+            assert!(gp.parts()[task] < platform.device_count());
+        }
+        assert_eq!(gp.parts().len(), n);
+        gp.on_drain();
+    }
+
+    #[test]
+    fn windowed_replan_is_deterministic() {
+        let dag = generate_layered(&GeneratorConfig::paper(KernelKind::Ma, 1024));
+        let platform = Platform::paper();
+        let model = CalibratedModel::default();
+        let run = || {
+            let mut gp = GraphPartition::new(GpConfig { window: Some(3), ..Default::default() });
+            gp.plan_now(&dag, &platform, &model);
+            let free = [0.0, 0.0];
+            for task in 0..12 {
+                let ctx = DispatchCtx {
+                    task,
+                    kernel: KernelKind::Ma,
+                    size: 1024,
+                    ready_ms: 0.0,
+                    device_free_ms: &free,
+                    inputs: &[],
+                    platform: &platform,
+                    model: &model,
+                };
+                let d = gp.select(&ctx);
+                gp.on_task_finish(task, d, 0.0);
+            }
+            gp.parts().to_vec()
+        };
+        assert_eq!(run(), run());
     }
 }

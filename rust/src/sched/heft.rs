@@ -6,10 +6,14 @@
 //! earliest-finish-time processor. Our engines dispatch in dependency-
 //! readiness order, so the rank is used as a tiebreak/insertion hint and
 //! the device choice is the EFT rule — the part of HEFT that matters for
-//! device selection. The upward ranks are computed in `plan` with mean
-//! execution and mean transfer costs, per the original formulation.
+//! device selection. The upward ranks are per-job *online* state — they
+//! inform no pinned decision — so they are recomputed in `on_submit`
+//! with mean execution and mean transfer costs, per the original
+//! formulation, and the plan artifact stays trivial.
 
-use super::{DispatchCtx, Scheduler};
+use std::sync::Arc;
+
+use super::{DispatchCtx, Plan, Planner, Scheduler};
 use crate::dag::{topo, Dag};
 use crate::perfmodel::PerfModel;
 use crate::platform::{DeviceId, Platform};
@@ -17,7 +21,8 @@ use crate::platform::{DeviceId, Platform};
 /// Earliest-finish-time selection with precomputed upward ranks.
 #[derive(Debug, Default)]
 pub struct Heft {
-    /// Upward rank per node (exposed for tests/analysis).
+    /// Upward rank per node of the current job (exposed for
+    /// tests/analysis).
     ranks: Vec<f64>,
 }
 
@@ -29,20 +34,15 @@ impl Heft {
     pub fn ranks(&self) -> &[f64] {
         &self.ranks
     }
-}
 
-impl Scheduler for Heft {
-    fn name(&self) -> &'static str {
-        "heft"
-    }
-
-    fn plan(&mut self, dag: &Dag, platform: &Platform, model: &dyn PerfModel) {
+    /// Recompute the upward ranks for `dag`:
+    /// `rank_u(v) = mean_exec(v) + max over succs (mean_comm + rank_u)`.
+    pub fn compute_ranks(&mut self, dag: &Dag, platform: &Platform, model: &dyn PerfModel) {
         let k = platform.device_count();
         let mean_exec = |id: usize| -> f64 {
             let n = dag.node(id);
             (0..k).map(|d| model.kernel_time_ms(n.kernel, n.size, d)).sum::<f64>() / k as f64
         };
-        // rank_u(v) = mean_exec(v) + max over succs (mean_comm + rank_u).
         let order = topo::topo_order(dag).expect("HEFT requires a DAG");
         let mut ranks = vec![0.0f64; dag.node_count()];
         for &u in order.iter().rev() {
@@ -58,9 +58,33 @@ impl Scheduler for Heft {
         }
         self.ranks = ranks;
     }
+}
+
+impl Planner for Heft {
+    /// Online policy: the ranks are per-job state, not a plan.
+    fn build_plan(&mut self, _dag: &Dag, _platform: &Platform, _model: &dyn PerfModel) -> Plan {
+        Plan::trivial("heft")
+    }
+}
+
+impl Scheduler for Heft {
+    fn name(&self) -> &'static str {
+        "heft"
+    }
+
+    fn on_submit(
+        &mut self,
+        dag: &Dag,
+        _plan: &Arc<Plan>,
+        platform: &Platform,
+        model: &dyn PerfModel,
+    ) {
+        self.compute_ranks(dag, platform, model);
+    }
 
     fn select(&mut self, ctx: &DispatchCtx) -> DeviceId {
-        // EFT rule — identical objective to dmda's estimator.
+        // EFT rule — identical objective to dmda's estimator; strict `<`
+        // keeps ties on the lowest device id.
         let mut best = 0usize;
         let mut best_t = f64::INFINITY;
         for d in 0..ctx.device_free_ms.len() {
@@ -86,7 +110,7 @@ mod tests {
         let platform = Platform::paper();
         let model = CalibratedModel::default();
         let mut h = Heft::new();
-        h.plan(&dag, &platform, &model);
+        h.compute_ranks(&dag, &platform, &model);
         for (_, e) in dag.edges() {
             assert!(
                 h.ranks()[e.src] > h.ranks()[e.dst],
@@ -101,7 +125,7 @@ mod tests {
         let platform = Platform::paper();
         let model = CalibratedModel::default();
         let mut h = Heft::new();
-        h.plan(&dag, &platform, &model);
+        h.compute_ranks(&dag, &platform, &model);
         let sink = 2;
         let mean = (model.kernel_time_ms(KernelKind::Ma, 256, 0)
             + model.kernel_time_ms(KernelKind::Ma, 256, 1))
@@ -115,7 +139,7 @@ mod tests {
         let platform = Platform::paper();
         let model = CalibratedModel::default();
         let mut h = Heft::new();
-        h.plan(&dag, &platform, &model);
+        h.compute_ranks(&dag, &platform, &model);
         let free = [0.0, 0.0];
         let ctx = DispatchCtx {
             task: 0,

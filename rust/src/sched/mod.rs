@@ -1,36 +1,79 @@
-//! Scheduling policies.
+//! Scheduling policies: plans, lifecycle hooks, and the policy registry.
 //!
-//! Every policy implements [`Scheduler`]; both execution engines (the
-//! discrete-event simulator and the threaded real-compute coordinator)
-//! call the same `select` at each task's dispatch point, so a policy's
-//! behaviour — and its transfer footprint — is engine-independent.
+//! # The Plan / lifecycle / session model
 //!
-//! Paper policies:
-//! * [`eager::Eager`] — StarPU's greedy idle-worker policy;
-//! * [`dmda::Dmda`] — StarPU's data-aware minimal-completion-time policy;
-//! * [`gp::GraphPartition`] — the paper's contribution: offline METIS-style
-//!   partition with Formula (1) target ratios, then pinning.
+//! The crate's central seam is split into three concepts:
 //!
-//! Extra baselines for the ablations: [`random::RandomSched`],
+//! 1. **[`Plan`] artifacts** — a [`Planner`] turns `(dag, platform,
+//!    model)` into an immutable, `Arc`-shareable [`Plan`] (pinning
+//!    table, Formula (1)/(2) target ratios, partition quality, plan
+//!    cost). Engines *consume* plans instead of mutating schedulers, and
+//!    a [`PlanCache`] keyed by *(DAG structural hash × platform/model
+//!    fingerprint × policy fingerprint)* turns replanning a stream of
+//!    identical DAGs into a lookup. Online policies return
+//!    [`Plan::trivial`].
+//!
+//! 2. **Event-driven policy lifecycle** — a [`Scheduler`] observes its
+//!    jobs through hooks, every one defaulted to a no-op:
+//!    * [`Scheduler::on_submit`] — a DAG (with its plan) enters the
+//!      engine; policies install the plan or precompute per-job state;
+//!    * [`Scheduler::select`] — pick the device for one ready task;
+//!    * [`Scheduler::on_task_finish`] — a task completed on a device;
+//!      online policies can finally *observe* completions instead of
+//!      trusting `device_free_ms` snapshots, and windowed gp replans the
+//!      undispatched frontier here (attacking the paper's §IV.D
+//!      single-decision limitation);
+//!    * [`Scheduler::on_drain`] — all submitted work has drained.
+//!
+//! 3. **Streaming sessions** — [`crate::session::SchedSession`] (and the
+//!    engine entry points [`crate::sim::simulate_stream`],
+//!    [`crate::coordinator::ExecEngine::run_stream`]) feed a policy a
+//!    *sequence* of DAGs, merge per-job [`crate::sim::RunReport`]s into a
+//!    [`crate::sim::SessionReport`], and amortize planning through the
+//!    shared [`PlanCache`].
+//!
+//! Single-DAG behavior is unchanged by the redesign: for every policy,
+//! a fixed-seed run produces the same assignments, transfer ledger and
+//! makespan as the pre-redesign one-shot API (pinned by the golden
+//! tests in `tests/sched_session.rs`).
+//!
+//! # Policies
+//!
+//! Paper policies: [`eager::Eager`] (StarPU's greedy idle-worker),
+//! [`dmda::Dmda`] (data-aware minimal completion time),
+//! [`gp::GraphPartition`] (the paper's contribution: offline METIS-style
+//! partition with Formula (1) ratios, then pinning — plus the `window`
+//! extension that re-partitions the not-yet-dispatched frontier every W
+//! completions). Extra baselines: [`random::RandomSched`],
 //! [`random::RoundRobin`], [`pin::PinAll`], [`heft::Heft`].
+//!
+//! Policies are constructed through the [`SchedulerRegistry`] from
+//! config strings such as `"gp:epsilon=0.02,seed=7,window=64"` — see the
+//! registry docs for the full syntax.
 
 pub mod dmda;
 pub mod eager;
 pub mod gp;
 pub mod heft;
 pub mod pin;
+pub mod plan;
 pub mod random;
+pub mod registry;
 
 pub use dmda::Dmda;
 pub use eager::Eager;
-pub use gp::{GraphPartition, GpConfig};
+pub use gp::{GpConfig, GraphPartition};
 pub use heft::Heft;
 pub use pin::PinAll;
+pub use plan::{dag_fingerprint, env_fingerprint, Plan, PlanCache, PlanKey};
 pub use random::{RandomSched, RoundRobin};
+pub use registry::{SchedParams, SchedulerRegistry};
+
+use std::sync::Arc;
 
 use crate::dag::{Dag, KernelKind, NodeId};
 use crate::perfmodel::PerfModel;
-use crate::platform::{DeviceId, Platform};
+use crate::platform::{DeviceId, MemNode, Platform};
 
 /// Location info for one input of a dispatching task.
 #[derive(Debug, Clone, Copy)]
@@ -42,8 +85,14 @@ pub struct InputInfo {
 }
 
 impl InputInfo {
-    /// Is a valid copy already resident on `node`?
-    pub fn on(&self, node: usize) -> bool {
+    /// Is a valid copy already resident on memory node `node`?
+    ///
+    /// Note the argument is a [`MemNode`], not a [`DeviceId`]: callers
+    /// asking "is the input local to device `d`" must translate through
+    /// [`Platform::memory_node`] first (as
+    /// [`DispatchCtx::transfer_cost_ms`] does), so the device→memory
+    /// mapping can diverge from identity without silent corruption.
+    pub fn on(&self, node: MemNode) -> bool {
         self.valid_mask & (1u64 << node) != 0
     }
 }
@@ -64,11 +113,13 @@ pub struct DispatchCtx<'a> {
 }
 
 impl<'a> DispatchCtx<'a> {
-    /// Total estimated transfer time to make all inputs valid on `dev`.
+    /// Total estimated transfer time to make all inputs valid on `dev`'s
+    /// memory node.
     pub fn transfer_cost_ms(&self, dev: DeviceId) -> f64 {
+        let node = self.platform.memory_node(dev);
         self.inputs
             .iter()
-            .filter(|i| !i.on(dev))
+            .filter(|i| !i.on(node))
             .map(|i| self.model.transfer_time_ms(i.bytes))
             .sum()
     }
@@ -82,19 +133,60 @@ impl<'a> DispatchCtx<'a> {
     }
 }
 
-/// A scheduling policy.
-pub trait Scheduler: Send {
+/// Builds immutable [`Plan`] artifacts — the offline half of a policy.
+///
+/// The paper's gp policy does all of its work here ("makes a singular
+/// decision and uses the same decision for all following tasks", §IV.D);
+/// online policies return [`Plan::trivial`].
+pub trait Planner: Send {
+    /// Build the plan artifact for `dag`. Must not depend on prior
+    /// submissions: a plan is a pure function of `(dag, platform, model,
+    /// policy config)`, which is what makes it cacheable under
+    /// [`PlanKey`].
+    fn build_plan(&mut self, dag: &Dag, platform: &Platform, model: &dyn PerfModel) -> Plan;
+}
+
+/// A scheduling policy, driven by engine lifecycle events.
+///
+/// Engines call, in order: [`Planner::build_plan`] (or a [`PlanCache`]
+/// lookup), [`Scheduler::on_submit`] with the resulting plan, then
+/// [`Scheduler::select`] per ready task interleaved with
+/// [`Scheduler::on_task_finish`] per completion, and finally
+/// [`Scheduler::on_drain`] when the job's last task has completed.
+pub trait Scheduler: Planner {
     /// Short stable name used in reports ("eager", "dmda", "gp", ...).
     fn name(&self) -> &'static str;
 
-    /// Offline planning pass before any task runs. Online policies leave
-    /// this empty; the graph-partition policy does all its work here
-    /// (paper §IV.D: "makes a singular decision and uses the same decision
-    /// for all following tasks").
-    fn plan(&mut self, _dag: &Dag, _platform: &Platform, _model: &dyn PerfModel) {}
+    /// Identity of this policy *configuration* for [`PlanKey`]s.
+    /// Policies with tunables must mix them in (see
+    /// [`gp::GraphPartition`]); the default hashes the name only.
+    fn fingerprint(&self) -> u64 {
+        plan::fnv1a(self.name().as_bytes())
+    }
+
+    /// Lifecycle: `dag` enters an engine with its `plan`. Policies that
+    /// consult a plan install it here; online policies may precompute
+    /// per-job state (e.g. HEFT's upward ranks).
+    fn on_submit(
+        &mut self,
+        dag: &Dag,
+        plan: &Arc<Plan>,
+        platform: &Platform,
+        model: &dyn PerfModel,
+    ) {
+        let _ = (dag, plan, platform, model);
+    }
 
     /// Pick the device for one ready task.
     fn select(&mut self, ctx: &DispatchCtx) -> DeviceId;
+
+    /// Lifecycle: `task` finished on `dev` at engine time `finish_ms`.
+    fn on_task_finish(&mut self, task: NodeId, dev: DeviceId, finish_ms: f64) {
+        let _ = (task, dev, finish_ms);
+    }
+
+    /// Lifecycle: every submitted task has completed.
+    fn on_drain(&mut self) {}
 
     /// True for policies whose decisions are fixed before execution.
     fn is_offline(&self) -> bool {
@@ -102,20 +194,12 @@ pub trait Scheduler: Send {
     }
 }
 
-/// Construct a named scheduler: "eager", "dmda", "gp", "random",
-/// "roundrobin", "heft", "cpu-only", "gpu-only".
-pub fn by_name(name: &str) -> Option<Box<dyn Scheduler>> {
-    Some(match name {
-        "eager" => Box::new(Eager::new()),
-        "dmda" => Box::new(Dmda::new()),
-        "gp" => Box::new(GraphPartition::new(GpConfig::default())),
-        "random" => Box::new(RandomSched::new(7)),
-        "roundrobin" => Box::new(RoundRobin::new()),
-        "heft" => Box::new(Heft::new()),
-        "cpu-only" => Box::new(PinAll::new(0)),
-        "gpu-only" => Box::new(PinAll::new(1)),
-        _ => return None,
-    })
+/// Construct a named scheduler from a registry config string: `"eager"`,
+/// `"dmda"`, `"gp"`, `"gp:window=64"`, ... — see [`SchedulerRegistry`]
+/// for the syntax. Returns `None` for unknown names or malformed specs
+/// (use [`SchedulerRegistry::create`] for the error message).
+pub fn by_name(spec: &str) -> Option<Box<dyn Scheduler>> {
+    SchedulerRegistry::builtin().create(spec).ok()
 }
 
 /// The paper's three evaluated policies, in its order.
@@ -193,5 +277,34 @@ mod tests {
     fn paper_set_order() {
         let names: Vec<_> = paper_set().iter().map(|s| s.name()).collect();
         assert_eq!(names, vec!["eager", "dmda", "gp"]);
+    }
+
+    #[test]
+    fn default_lifecycle_hooks_are_noops() {
+        // A minimal policy exercising every defaulted hook.
+        struct Fixed;
+        impl Planner for Fixed {
+            fn build_plan(&mut self, _: &Dag, _: &Platform, _: &dyn PerfModel) -> Plan {
+                Plan::trivial("fixed")
+            }
+        }
+        impl Scheduler for Fixed {
+            fn name(&self) -> &'static str {
+                "fixed"
+            }
+            fn select(&mut self, _ctx: &DispatchCtx) -> DeviceId {
+                0
+            }
+        }
+        let mut s = Fixed;
+        let dag = Dag::new();
+        let platform = Platform::paper();
+        let model = CalibratedModel::default();
+        let plan = Arc::new(s.build_plan(&dag, &platform, &model));
+        s.on_submit(&dag, &plan, &platform, &model);
+        s.on_task_finish(0, 0, 1.0);
+        s.on_drain();
+        assert!(!s.is_offline());
+        assert_eq!(s.fingerprint(), plan::fnv1a(b"fixed"));
     }
 }

@@ -5,8 +5,10 @@
 //! case. Also the baseline for measuring what any multi-device policy
 //! actually buys.
 
-use super::{DispatchCtx, Scheduler};
-use crate::platform::DeviceId;
+use super::{plan, DispatchCtx, Plan, Planner, Scheduler};
+use crate::dag::Dag;
+use crate::perfmodel::PerfModel;
+use crate::platform::{DeviceId, Platform};
 
 /// Pin every task to one fixed device.
 #[derive(Debug)]
@@ -26,9 +28,26 @@ impl PinAll {
     }
 }
 
+impl Planner for PinAll {
+    /// The degenerate plan: every task pinned to the one device.
+    fn build_plan(&mut self, dag: &Dag, _platform: &Platform, _model: &dyn PerfModel) -> Plan {
+        Plan {
+            policy: self.name,
+            pins: vec![self.device; dag.node_count()],
+            ratios: Vec::new(),
+            quality: None,
+            cost_ns: 0,
+        }
+    }
+}
+
 impl Scheduler for PinAll {
     fn name(&self) -> &'static str {
         self.name
+    }
+
+    fn fingerprint(&self) -> u64 {
+        plan::fnv1a(self.name.as_bytes()).wrapping_add(self.device as u64)
     }
 
     fn select(&mut self, _ctx: &DispatchCtx) -> DeviceId {

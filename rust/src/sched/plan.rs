@@ -1,0 +1,288 @@
+//! Plan artifacts and the keyed plan cache.
+//!
+//! A [`Plan`] is the immutable outcome of a policy's offline pass: the
+//! pinning table, the Formula (1)/(2) target ratios, the partition
+//! quality and the wall-clock cost of producing it. Engines *consume*
+//! plans ([`crate::sim::simulate_with_plan`],
+//! [`crate::coordinator::ExecEngine::run_with_plan`]) instead of asking a
+//! scheduler to mutate itself, which makes a plan `Arc`-shareable across
+//! jobs, threads and engines.
+//!
+//! [`PlanCache`] keys plans by *(DAG structural hash × platform/model
+//! fingerprint × policy fingerprint)*: replanning a stream of identical
+//! DAGs — the common shape of a steady-traffic session — becomes a hash
+//! lookup instead of a partitioner run. Hit/miss counters feed the
+//! `bench stream` report.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::Scheduler;
+use crate::dag::{Dag, KernelKind};
+use crate::partition::PartitionResult;
+use crate::perfmodel::PerfModel;
+use crate::platform::{DeviceId, Platform};
+
+/// Immutable artifact of one planning pass over one DAG.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    /// Name of the policy that produced the plan.
+    pub policy: &'static str,
+    /// Pinned device per task. Empty for online policies, which decide at
+    /// dispatch time.
+    pub pins: Vec<DeviceId>,
+    /// Per-device target workload ratios (Formula (1)/(2)); empty when
+    /// the policy computes none.
+    pub ratios: Vec<f64>,
+    /// Partition quality of the planning run, when one happened.
+    pub quality: Option<PartitionResult>,
+    /// Wall-clock nanoseconds spent building this plan.
+    pub cost_ns: u64,
+}
+
+impl Plan {
+    /// The no-op plan of an online policy.
+    pub fn trivial(policy: &'static str) -> Plan {
+        Plan { policy, pins: Vec::new(), ratios: Vec::new(), quality: None, cost_ns: 0 }
+    }
+
+    /// True when the plan carries no pinning decisions.
+    pub fn is_trivial(&self) -> bool {
+        self.pins.is_empty()
+    }
+}
+
+/// FNV-1a over a byte slice (no std hasher: `DefaultHasher` is not
+/// stable across releases, and plan keys may be persisted in reports).
+pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn mix(h: u64, x: u64) -> u64 {
+    let mut h = h ^ x.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    h ^ (h >> 29)
+}
+
+/// Structural hash of a DAG: node kernels/sizes plus the edge list with
+/// payload sizes. Names are deliberately excluded — two jobs differing
+/// only in labels share a plan.
+pub fn dag_fingerprint(dag: &Dag) -> u64 {
+    let mut h = fnv1a(b"dag");
+    h = mix(h, dag.node_count() as u64);
+    for (_, node) in dag.nodes() {
+        h = mix(h, node.kernel as u64);
+        h = mix(h, node.size as u64);
+    }
+    for (_, e) in dag.edges() {
+        h = mix(h, e.src as u64);
+        h = mix(h, e.dst as u64);
+        h = mix(h, e.bytes);
+    }
+    h
+}
+
+/// Behavioral fingerprint of a platform + performance model: device
+/// specs, bus parameters, and probed kernel/transfer times. Probing keeps
+/// the trait object-safe (no `Hash` bound on [`PerfModel`]) while still
+/// distinguishing differently-calibrated models.
+pub fn env_fingerprint(platform: &Platform, model: &dyn PerfModel) -> u64 {
+    let mut h = fnv1a(b"env");
+    h = mix(h, platform.device_count() as u64);
+    for d in &platform.devices {
+        h = mix(h, d.workers as u64);
+        h = mix(h, fnv1a(d.name.as_bytes()));
+    }
+    h = mix(h, platform.bus.bandwidth_gbs.to_bits());
+    h = mix(h, platform.bus.latency_ms.to_bits());
+    for kernel in [KernelKind::Ma, KernelKind::Mm, KernelKind::MmAdd] {
+        for n in [64u32, 512, 2048] {
+            for dev in 0..platform.device_count() {
+                h = mix(h, model.kernel_time_ms(kernel, n, dev).to_bits());
+            }
+            h = mix(h, model.transfer_time_ms(4 * n as u64 * n as u64).to_bits());
+        }
+    }
+    h
+}
+
+/// Cache key: what must match for a cached plan to be reusable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    /// [`dag_fingerprint`] of the submitted DAG.
+    pub dag: u64,
+    /// [`env_fingerprint`] of the platform + model.
+    pub env: u64,
+    /// [`super::Scheduler::fingerprint`] of the policy configuration.
+    pub policy: u64,
+}
+
+impl PlanKey {
+    /// Assemble the key for one (dag, platform, model, policy) tuple.
+    pub fn of(
+        dag: &Dag,
+        platform: &Platform,
+        model: &dyn PerfModel,
+        scheduler: &dyn Scheduler,
+    ) -> PlanKey {
+        PlanKey {
+            dag: dag_fingerprint(dag),
+            env: env_fingerprint(platform, model),
+            policy: scheduler.fingerprint(),
+        }
+    }
+}
+
+/// Keyed store of `Arc<Plan>`s with hit/miss accounting.
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    map: HashMap<PlanKey, Arc<Plan>>,
+    hits: u64,
+    misses: u64,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    /// Cached plan for `key`, counting a hit or miss.
+    pub fn get(&mut self, key: &PlanKey) -> Option<Arc<Plan>> {
+        match self.map.get(key) {
+            Some(p) => {
+                self.hits += 1;
+                Some(Arc::clone(p))
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Store a plan under `key` (replacing any previous entry).
+    pub fn insert(&mut self, key: PlanKey, plan: Arc<Plan>) {
+        self.map.insert(key, plan);
+    }
+
+    /// Serve `key` from cache or build, cache and return a fresh plan.
+    /// Returns `(plan, cache_hit, lookup_or_build_ns)` — the shared
+    /// plan-acquisition step of both engines' stream loops, so hit
+    /// accounting and plan-cost attribution cannot drift apart.
+    pub fn get_or_build(
+        &mut self,
+        key: PlanKey,
+        build: impl FnOnce() -> Plan,
+    ) -> (Arc<Plan>, bool, u64) {
+        let t0 = std::time::Instant::now();
+        let (plan, hit) = match self.get(&key) {
+            Some(p) => (p, true),
+            None => {
+                let p = Arc::new(build());
+                self.insert(key, Arc::clone(&p));
+                (p, false)
+            }
+        };
+        (plan, hit, t0.elapsed().as_nanos() as u64)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Fraction of lookups served from cache (0 when never queried).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Drop all entries (counters keep accumulating).
+    pub fn clear(&mut self) {
+        self.map.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::generator::{generate_layered, GeneratorConfig};
+    use crate::perfmodel::CalibratedModel;
+
+    #[test]
+    fn dag_fingerprint_structural_not_nominal() {
+        let mut a = Dag::new();
+        let x = a.add_node("x", KernelKind::Mm, 256);
+        let y = a.add_node("y", KernelKind::Ma, 256);
+        a.add_edge(x, y);
+        let mut b = Dag::new();
+        let p = b.add_node("totally", KernelKind::Mm, 256);
+        let q = b.add_node("different", KernelKind::Ma, 256);
+        b.add_edge(p, q);
+        assert_eq!(dag_fingerprint(&a), dag_fingerprint(&b), "names must not matter");
+
+        let mut c = Dag::new();
+        let p = c.add_node("x", KernelKind::Mm, 512); // size differs
+        let q = c.add_node("y", KernelKind::Ma, 256);
+        c.add_edge(p, q);
+        assert_ne!(dag_fingerprint(&a), dag_fingerprint(&c), "sizes must matter");
+    }
+
+    #[test]
+    fn env_fingerprint_distinguishes_platforms_and_models() {
+        let paper = env_fingerprint(&Platform::paper(), &CalibratedModel::paper());
+        let tri = env_fingerprint(&Platform::tri_device(), &CalibratedModel::tri_device());
+        assert_ne!(paper, tri);
+        let mut slow = CalibratedModel::paper();
+        slow.gpu_peak_gflops /= 2.0;
+        assert_ne!(paper, env_fingerprint(&Platform::paper(), &slow));
+        assert_eq!(paper, env_fingerprint(&Platform::paper(), &CalibratedModel::paper()));
+    }
+
+    #[test]
+    fn cache_counts_hits_and_misses() {
+        let dag = generate_layered(&GeneratorConfig::paper(KernelKind::Mm, 512));
+        let platform = Platform::paper();
+        let model = CalibratedModel::paper();
+        let sched = crate::sched::by_name("gp").unwrap();
+        let key = PlanKey::of(&dag, &platform, &model, sched.as_ref());
+
+        let mut cache = PlanCache::new();
+        assert!(cache.get(&key).is_none());
+        cache.insert(key, Arc::new(Plan::trivial("gp")));
+        assert!(cache.get(&key).is_some());
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        assert!((cache.hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(cache.len(), 1);
+        cache.clear();
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn plan_trivial_shape() {
+        let p = Plan::trivial("eager");
+        assert!(p.is_trivial());
+        assert_eq!(p.policy, "eager");
+        assert_eq!(p.cost_ns, 0);
+    }
+}

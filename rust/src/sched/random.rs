@@ -2,18 +2,32 @@
 //! device choice. Neither consults time or data location; they bound the
 //! "no information" end of the policy space.
 
-use super::{DispatchCtx, Scheduler};
-use crate::platform::DeviceId;
+use std::sync::Arc;
+
+use super::{DispatchCtx, Plan, Planner, Scheduler};
+use crate::dag::Dag;
+use crate::perfmodel::PerfModel;
+use crate::platform::{DeviceId, Platform};
 use crate::util::Pcg32;
 
-/// Uniform-random device choice.
+/// Uniform-random device choice. The PRNG stream runs across a whole
+/// session (submitting the same DAG twice draws different devices —
+/// deliberately, so streams exercise varied placements), but a given
+/// seed always reproduces the same session.
 pub struct RandomSched {
+    seed: u64,
     rng: Pcg32,
 }
 
 impl RandomSched {
     pub fn new(seed: u64) -> RandomSched {
-        RandomSched { rng: Pcg32::seeded(seed) }
+        RandomSched { seed, rng: Pcg32::seeded(seed) }
+    }
+}
+
+impl Planner for RandomSched {
+    fn build_plan(&mut self, _dag: &Dag, _platform: &Platform, _model: &dyn PerfModel) -> Plan {
+        Plan::trivial("random")
     }
 }
 
@@ -22,12 +36,19 @@ impl Scheduler for RandomSched {
         "random"
     }
 
+    fn fingerprint(&self) -> u64 {
+        // Differently-seeded configs must not share a PlanKey, even
+        // though the plan itself is trivial today.
+        super::plan::fnv1a(b"random").wrapping_add(self.seed)
+    }
+
     fn select(&mut self, ctx: &DispatchCtx) -> DeviceId {
         self.rng.gen_range(ctx.device_free_ms.len() as u32) as DeviceId
     }
 }
 
-/// Cyclic device choice.
+/// Cyclic device choice; the cycle restarts at device 0 on every job
+/// submission so each job's schedule is reproducible in isolation.
 #[derive(Debug, Default)]
 pub struct RoundRobin {
     next: usize,
@@ -39,9 +60,25 @@ impl RoundRobin {
     }
 }
 
+impl Planner for RoundRobin {
+    fn build_plan(&mut self, _dag: &Dag, _platform: &Platform, _model: &dyn PerfModel) -> Plan {
+        Plan::trivial("roundrobin")
+    }
+}
+
 impl Scheduler for RoundRobin {
     fn name(&self) -> &'static str {
         "roundrobin"
+    }
+
+    fn on_submit(
+        &mut self,
+        _dag: &Dag,
+        _plan: &Arc<Plan>,
+        _platform: &Platform,
+        _model: &dyn PerfModel,
+    ) {
+        self.next = 0;
     }
 
     fn select(&mut self, ctx: &DispatchCtx) -> DeviceId {

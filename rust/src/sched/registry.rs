@@ -1,0 +1,287 @@
+//! The scheduler registry: config-string → policy construction.
+//!
+//! # Config-string syntax
+//!
+//! ```text
+//! spec     := name [ ":" params ]
+//! params   := key "=" value { "," key "=" value }
+//! ```
+//!
+//! Examples:
+//!
+//! * `"eager"`, `"dmda"`, `"heft"`, `"roundrobin"` — no parameters;
+//! * `"random:seed=9"` — uniform-random policy with PRNG seed 9;
+//! * `"gp:epsilon=0.02,seed=7"` — graph partition with a 2% imbalance
+//!   tolerance and partitioner seed 7;
+//! * `"gp:window=64"` — windowed gp: re-partition the not-yet-dispatched
+//!   frontier every 64 task completions (reported as `gp-window`);
+//! * `"gp:node-weight=cpu"` — node-weight policy `gpu` | `cpu` | `mean`;
+//! * `"cpu-only"`, `"gpu-only"`, `"pin:device=2"` — pin every task to
+//!   one device.
+//!
+//! Unknown names, unknown keys and malformed values are hard errors —
+//! a typo must never silently fall back to a default policy. Every
+//! scenario is reachable from a string, so CLI flags, config files and
+//! bench matrices need no recompilation to sweep policy variants.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::{Dmda, Eager, GpConfig, GraphPartition, Heft, PinAll, RandomSched, RoundRobin};
+use crate::perfmodel::NodeWeightPolicy;
+
+/// Parsed `key=value` parameter bag with used-key tracking: every key
+/// must be consumed by the policy builder or the registry rejects the
+/// spec as carrying unknown parameters.
+#[derive(Debug, Clone)]
+pub struct SchedParams {
+    map: BTreeMap<String, String>,
+    used: Vec<String>,
+}
+
+impl SchedParams {
+    fn parse(src: &str) -> Result<SchedParams> {
+        let mut map = BTreeMap::new();
+        for item in src.split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            let (k, v) = item
+                .split_once('=')
+                .with_context(|| format!("expected key=value, got {item:?}"))?;
+            if map.insert(k.trim().to_string(), v.trim().to_string()).is_some() {
+                bail!("duplicate parameter {:?}", k.trim());
+            }
+        }
+        Ok(SchedParams { map, used: Vec::new() })
+    }
+
+    /// Raw value of `key`, marking it consumed.
+    pub fn get(&mut self, key: &str) -> Option<String> {
+        let v = self.map.get(key).cloned();
+        if v.is_some() {
+            self.used.push(key.to_string());
+        }
+        v
+    }
+
+    /// `f64` value of `key`, or `default` when absent.
+    pub fn f64(&mut self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("bad {key}={v:?}")),
+            None => Ok(default),
+        }
+    }
+
+    /// `u64` value of `key`, or `default` when absent.
+    pub fn u64(&mut self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("bad {key}={v:?}")),
+            None => Ok(default),
+        }
+    }
+
+    /// Optional `usize` value of `key`.
+    pub fn usize_opt(&mut self, key: &str) -> Result<Option<usize>> {
+        match self.get(key) {
+            Some(v) => Ok(Some(v.parse().with_context(|| format!("bad {key}={v:?}"))?)),
+            None => Ok(None),
+        }
+    }
+
+    /// Error on any parameter no builder consumed.
+    fn finish(&self) -> Result<()> {
+        for k in self.map.keys() {
+            if !self.used.iter().any(|u| u == k) {
+                bail!("unknown parameter {k:?}");
+            }
+        }
+        Ok(())
+    }
+}
+
+type BuildFn = fn(&mut SchedParams) -> Result<Box<dyn super::Scheduler>>;
+
+struct Entry {
+    name: &'static str,
+    help: &'static str,
+    build: BuildFn,
+}
+
+/// Name-indexed policy constructors. See the module docs for the
+/// config-string syntax.
+pub struct SchedulerRegistry {
+    entries: Vec<Entry>,
+}
+
+fn build_gp(p: &mut SchedParams) -> Result<Box<dyn super::Scheduler>> {
+    let defaults = GpConfig::default();
+    let window = p.usize_opt("window")?;
+    if window == Some(0) {
+        bail!("window must be >= 1");
+    }
+    let node_weight = match p.get("node-weight").as_deref() {
+        None => defaults.node_weight,
+        Some("gpu") => NodeWeightPolicy::GpuTime,
+        Some("cpu") => NodeWeightPolicy::CpuTime,
+        Some("mean") => NodeWeightPolicy::MeanTime,
+        Some(other) => bail!("bad node-weight {other:?} (gpu | cpu | mean)"),
+    };
+    let cfg = GpConfig {
+        node_weight,
+        epsilon: p.f64("epsilon", defaults.epsilon)?,
+        seed: p.u64("seed", defaults.seed)?,
+        window,
+    };
+    Ok(Box::new(GraphPartition::new(cfg)))
+}
+
+impl SchedulerRegistry {
+    /// The built-in policy set.
+    pub fn builtin() -> SchedulerRegistry {
+        SchedulerRegistry {
+            entries: vec![
+                Entry {
+                    name: "eager",
+                    help: "greedy idle-worker (StarPU eager)",
+                    build: |_| Ok(Box::new(Eager::new())),
+                },
+                Entry {
+                    name: "dmda",
+                    help: "data-aware minimal completion time (StarPU dmda)",
+                    build: |_| Ok(Box::new(Dmda::new())),
+                },
+                Entry {
+                    name: "gp",
+                    help: "graph partition [epsilon=F, seed=N, window=N, node-weight=gpu|cpu|mean]",
+                    build: build_gp,
+                },
+                Entry {
+                    name: "heft",
+                    help: "earliest finish time with upward ranks",
+                    build: |_| Ok(Box::new(Heft::new())),
+                },
+                Entry {
+                    name: "random",
+                    help: "uniform-random device [seed=N]",
+                    build: |p| Ok(Box::new(RandomSched::new(p.u64("seed", 7)?))),
+                },
+                Entry {
+                    name: "roundrobin",
+                    help: "cyclic device choice",
+                    build: |_| Ok(Box::new(RoundRobin::new())),
+                },
+                Entry {
+                    name: "cpu-only",
+                    help: "pin every task to device 0",
+                    build: |_| Ok(Box::new(PinAll::new(0))),
+                },
+                Entry {
+                    name: "gpu-only",
+                    help: "pin every task to device 1",
+                    build: |_| Ok(Box::new(PinAll::new(1))),
+                },
+                Entry {
+                    name: "pin",
+                    help: "pin every task to one device [device=N]",
+                    build: |p| Ok(Box::new(PinAll::new(p.u64("device", 0)? as usize))),
+                },
+            ],
+        }
+    }
+
+    /// Registered policy names.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.entries.iter().map(|e| e.name).collect()
+    }
+
+    /// One-line help per policy, for CLI error messages.
+    pub fn help(&self) -> String {
+        self.entries
+            .iter()
+            .map(|e| format!("  {:<10} {}", e.name, e.help))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
+    /// Construct a policy from a config string (see module docs).
+    pub fn create(&self, spec: &str) -> Result<Box<dyn super::Scheduler>> {
+        let (name, params) = match spec.split_once(':') {
+            Some((n, p)) => (n.trim(), p),
+            None => (spec.trim(), ""),
+        };
+        let entry = self
+            .entries
+            .iter()
+            .find(|e| e.name == name)
+            .with_context(|| format!("unknown scheduler {name:?} (known: {:?})", self.names()))?;
+        let mut p = SchedParams::parse(params)
+            .with_context(|| format!("parsing parameters of {spec:?}"))?;
+        let built = (entry.build)(&mut p).with_context(|| format!("building {spec:?}"))?;
+        p.finish().with_context(|| format!("building {spec:?}"))?;
+        Ok(built)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::Scheduler as _;
+
+    #[test]
+    fn plain_names_build() {
+        let reg = SchedulerRegistry::builtin();
+        for n in ["eager", "dmda", "gp", "heft", "random", "roundrobin", "cpu-only", "gpu-only"] {
+            assert_eq!(reg.create(n).unwrap().name(), n, "{n}");
+        }
+        assert_eq!(reg.create("pin").unwrap().name(), "cpu-only");
+    }
+
+    #[test]
+    fn gp_config_string_full() {
+        let reg = SchedulerRegistry::builtin();
+        let s = reg.create("gp:epsilon=0.02,seed=7,window=64").unwrap();
+        assert_eq!(s.name(), "gp-window");
+        // Distinct configs must produce distinct plan-cache fingerprints.
+        let base = reg.create("gp").unwrap();
+        let seeded = reg.create("gp:seed=7").unwrap();
+        assert_ne!(s.fingerprint(), base.fingerprint());
+        assert_ne!(seeded.fingerprint(), base.fingerprint());
+        assert_eq!(
+            reg.create("gp:seed=7").unwrap().fingerprint(),
+            seeded.fingerprint(),
+            "same spec, same fingerprint"
+        );
+    }
+
+    #[test]
+    fn gp_node_weight_values() {
+        let reg = SchedulerRegistry::builtin();
+        for v in ["gpu", "cpu", "mean"] {
+            assert!(reg.create(&format!("gp:node-weight={v}")).is_ok(), "{v}");
+        }
+        assert!(reg.create("gp:node-weight=fpga").is_err());
+    }
+
+    #[test]
+    fn errors_are_loud() {
+        let reg = SchedulerRegistry::builtin();
+        assert!(reg.create("mystery").is_err(), "unknown name");
+        assert!(reg.create("gp:bogus=1").is_err(), "unknown key");
+        assert!(reg.create("gp:epsilon=asdf").is_err(), "bad value");
+        assert!(reg.create("gp:epsilon").is_err(), "missing =");
+        assert!(reg.create("gp:window=0").is_err(), "zero window");
+        assert!(reg.create("gp:seed=1,seed=2").is_err(), "duplicate key");
+        assert!(reg.create("eager:seed=1").is_err(), "param on paramless policy");
+    }
+
+    #[test]
+    fn pin_device_param() {
+        let reg = SchedulerRegistry::builtin();
+        assert_eq!(reg.create("pin:device=1").unwrap().name(), "gpu-only");
+        let help = reg.help();
+        assert!(help.contains("gp") && help.contains("window"));
+    }
+}

@@ -1,7 +1,8 @@
 //! Discrete-event platform simulator.
 //!
-//! Runs any [`Scheduler`] over any [`Dag`] against a [`PerfModel`] and a
-//! [`Platform`], producing makespan, the MSI transfer ledger, per-device
+//! Runs any [`crate::sched::Scheduler`] over any [`crate::dag::Dag`]
+//! against a [`crate::perfmodel::PerfModel`] and a
+//! [`crate::platform::Platform`], producing makespan, the MSI transfer ledger, per-device
 //! utilization and an execution trace — deterministically and in
 //! microseconds of wall time, which is what lets the figure benches sweep
 //! 100 iterations × 11 sizes × several schedulers as the paper does.
@@ -10,7 +11,7 @@
 //! * one shared bus, serialized transfers (GTX: no dual copy engines);
 //! * no compute/transfer overlap (§I: the overlapping technique is
 //!   orthogonal and unused in the paper's experiments);
-//! * data coherence is MSI via [`Directory`], identical to the real
+//! * data coherence is MSI via [`crate::data::Directory`], identical to the real
 //!   engine, so transfer counts agree between sim and real runs;
 //! * all initial data starts on host memory; each kernel with fewer
 //!   in-edges than its arity reads the remainder from host-resident
@@ -19,5 +20,5 @@
 pub mod engine;
 pub mod report;
 
-pub use engine::{simulate, SimConfig};
-pub use report::{RunReport, TraceEvent};
+pub use engine::{simulate, simulate_stream, simulate_with_plan, SimConfig};
+pub use report::{RunReport, SessionReport, TraceEvent};

@@ -28,9 +28,11 @@ pub struct RunReport {
     pub device_busy_ms: Vec<f64>,
     /// Tasks executed per device.
     pub tasks_per_device: Vec<usize>,
-    /// Wall-clock nanoseconds spent inside `Scheduler::select`.
+    /// Wall-clock nanoseconds spent inside the policy's online hooks
+    /// (`select` and `on_task_finish`).
     pub decision_ns: u64,
-    /// Wall-clock nanoseconds spent inside `Scheduler::plan`.
+    /// Wall-clock nanoseconds spent planning for this run: building (or
+    /// fetching) the `Plan` plus installing it via `on_submit`.
     pub plan_ns: u64,
     /// Per-task execution trace.
     pub trace: Vec<TraceEvent>,
@@ -59,6 +61,77 @@ impl RunReport {
     }
 }
 
+/// Merged outcome of a streaming session: a sequence of jobs run
+/// back-to-back through one policy and one [`crate::sched::PlanCache`].
+#[derive(Debug, Clone, Default)]
+pub struct SessionReport {
+    /// Policy name (as reported on the first job).
+    pub scheduler: String,
+    /// Per-job reports, in submission order.
+    pub jobs: Vec<RunReport>,
+    /// Sum of job makespans (jobs run back-to-back).
+    pub makespan_ms: f64,
+    /// Merged transfer ledger across jobs.
+    pub ledger: TransferLedger,
+    /// Total planning nanoseconds across jobs (cache hits ≈ 0).
+    pub plan_ns: u64,
+    /// Total online-hook nanoseconds across jobs.
+    pub decision_ns: u64,
+    /// Jobs whose plan came from the cache.
+    pub cache_hits: u64,
+    /// Jobs whose plan had to be built.
+    pub cache_misses: u64,
+}
+
+impl SessionReport {
+    pub fn new(scheduler: &str) -> SessionReport {
+        SessionReport { scheduler: scheduler.to_string(), ..Default::default() }
+    }
+
+    /// Fold one job into the session.
+    pub fn push(&mut self, job: RunReport, cache_hit: bool) {
+        self.makespan_ms += job.makespan_ms;
+        self.ledger.merge(&job.ledger);
+        self.plan_ns += job.plan_ns;
+        self.decision_ns += job.decision_ns;
+        if cache_hit {
+            self.cache_hits += 1;
+        } else {
+            self.cache_misses += 1;
+        }
+        self.jobs.push(job);
+    }
+
+    pub fn job_count(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Fraction of jobs served by a cached plan.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+
+    /// Mean planning nanoseconds per job — the amortization headline.
+    pub fn mean_plan_ns(&self) -> f64 {
+        if self.jobs.is_empty() {
+            0.0
+        } else {
+            self.plan_ns as f64 / self.jobs.len() as f64
+        }
+    }
+
+    /// Planning nanoseconds of jobs after the first — ≈ 0 once the
+    /// cache is warm on a homogeneous stream.
+    pub fn repeat_plan_ns(&self) -> u64 {
+        self.jobs.iter().skip(1).map(|j| j.plan_ns).sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -80,6 +153,33 @@ mod tests {
         assert!((u[0] - 0.5).abs() < 1e-12);
         assert!((u[1] - 0.5).abs() < 1e-12);
         assert!((r.decision_ns_per_task() - 1000.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn session_report_merges_jobs() {
+        let job = |ms: f64, plan: u64| RunReport {
+            scheduler: "test",
+            makespan_ms: ms,
+            ledger: TransferLedger::new(),
+            assignments: vec![0],
+            device_busy_ms: vec![ms],
+            tasks_per_device: vec![1],
+            decision_ns: 100,
+            plan_ns: plan,
+            trace: vec![],
+        };
+        let mut s = SessionReport::new("test");
+        s.push(job(10.0, 5000), false);
+        s.push(job(20.0, 10), true);
+        s.push(job(30.0, 20), true);
+        assert_eq!(s.job_count(), 3);
+        assert!((s.makespan_ms - 60.0).abs() < 1e-12);
+        assert_eq!(s.plan_ns, 5030);
+        assert_eq!(s.decision_ns, 300);
+        assert_eq!((s.cache_hits, s.cache_misses), (2, 1));
+        assert!((s.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.repeat_plan_ns(), 30);
+        assert!((s.mean_plan_ns() - 5030.0 / 3.0).abs() < 1e-9);
     }
 
     #[test]

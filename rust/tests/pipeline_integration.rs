@@ -5,7 +5,7 @@
 use hetsched::dag::{dot, generate_layered, metis_io, GeneratorConfig, KernelKind};
 use hetsched::perfmodel::{CalibratedModel, PerfModel};
 use hetsched::platform::Platform;
-use hetsched::sched::{self, GpConfig, GraphPartition, Scheduler as _};
+use hetsched::sched::{self, GpConfig, GraphPartition};
 use hetsched::sim::{simulate, SimConfig};
 
 fn run(dag: &hetsched::dag::Dag, name: &str) -> hetsched::sim::RunReport {
@@ -45,7 +45,7 @@ fn partition_roundtrips_through_dot() {
     let platform = Platform::paper();
     let model = CalibratedModel::paper();
     let mut gp = GraphPartition::new(GpConfig::default());
-    gp.plan(&dag, &platform, &model);
+    gp.plan_now(&dag, &platform, &model);
     let text = dot::write(&dag, "g", Some(gp.parts()));
     let reparsed = dot::parse(&text, 1024).unwrap();
     for (id, node) in dag.nodes() {

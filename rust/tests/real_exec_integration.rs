@@ -75,8 +75,7 @@ fn measured_model_drives_gp_plan() {
     let r = measured.workload_ratios(KernelKind::Mm, 128, &platform);
     assert!((r[0] - 0.5).abs() < 1e-6, "identical measurements -> even split");
     let mut gp = sched::GraphPartition::new(sched::GpConfig::default());
-    use hetsched::sched::Scheduler as _;
-    gp.plan(&dag, &platform, &measured);
+    gp.plan_now(&dag, &platform, &measured);
     let cpu = gp.parts().iter().filter(|&&p| p == 0).count();
     let gpu = gp.parts().iter().filter(|&&p| p == 1).count();
     assert!(cpu > 5 && gpu > 5, "even ratio must split work: {cpu}/{gpu}");
