@@ -670,8 +670,23 @@ def recursive_bisect(g, vs, targets, part_base, fixed, cfg, rng, parts, remap):
     right = [vs[i] for i, s in enumerate(side) if s != 0]
     lt = [x / max(t_left, 1e-12) for x in targets[:k_left]]
     rt = [x / max(t_right, 1e-12) for x in targets[k_left:]]
-    recursive_bisect(g, left, lt, part_base, fixed, cfg, rng, parts, remap)
-    recursive_bisect(g, right, rt, part_base + k_left, fixed, cfg, rng, parts, remap)
+    # Children draw from per-node derived PCG32 streams (mirrors
+    # partition::child_rng) so the Rust side can fork the two recursions
+    # onto scoped threads while staying bit-identical to this sequential
+    # transliteration.
+    lrng = child_rng(cfg["seed"], part_base, k_left)
+    rrng = child_rng(cfg["seed"], part_base + k_left, k - k_left)
+    recursive_bisect(g, left, lt, part_base, fixed, cfg, lrng, parts, remap)
+    recursive_bisect(g, right, rt, part_base + k_left, fixed, cfg, rrng, parts, remap)
+
+
+CHILD_STREAM = 0x9E3779B9
+
+
+def child_rng(seed, part_base, k):
+    """Mirror of partition::child_rng: the RNG of the recursion node that
+    covers parts [part_base, part_base + k)."""
+    return Pcg32(seed, CHILD_STREAM ^ ((part_base & M32) << 16) ^ k)
 
 
 def partition(g, cfg):

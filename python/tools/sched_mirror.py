@@ -666,6 +666,545 @@ def run(dag, name, model=None, workers=None, **kw):
     return r
 
 
+# -------------------------------------------------- open-system engine
+#
+# Transliteration of sim::engine::EngineCore (PR 4): one global event
+# heap ordered by (time, kind, job, task) with kind 0=drain, 1=arrival,
+# 2=ready; many jobs share worker_free / bus / directory; a bounded
+# admission window (queue) holds excess arrivals FIFO.
+
+from collections import deque  # noqa: E402
+
+
+def dag_signature(dag):
+    """Structural plan-cache key (mirror of PlanKey's dag fingerprint
+    role: names excluded, structure + sizes included)."""
+    return (
+        tuple((kernel, size) for (_, kernel, size) in dag.nodes),
+        tuple(dag.edges),
+    )
+
+
+class OpenEager(Eager):
+    def on_submit(self, job, dag):
+        pass
+
+    def on_task_finish(self, job, task, dev, finish_ms):
+        pass
+
+    def on_job_drain(self, job):
+        pass
+
+
+class OpenDmda(Dmda):
+    def on_submit(self, job, dag):
+        pass
+
+    def on_task_finish(self, job, task, dev, finish_ms):
+        pass
+
+    def on_job_drain(self, job):
+        pass
+
+
+class OpenPin(PinAll):
+    def on_submit(self, job, dag):
+        pass
+
+    def on_task_finish(self, job, task, dev, finish_ms):
+        pass
+
+    def on_job_drain(self, job):
+        pass
+
+
+class OpenGp:
+    """Mirror of GraphPartition (one-shot) under the job-tagged
+    lifecycle: per-job pin tables, plans cached by structure."""
+
+    name = "gp"
+
+    def __init__(self, k, model, epsilon=0.05, seed=1, node_weight="gpu"):
+        self.k = k
+        self.model = model
+        self.epsilon = epsilon
+        self.seed = seed
+        self.node_weight = node_weight
+        self.plan_cache = {}
+        self.hits = 0
+        self.misses = 0
+        self.parts = {}
+
+    def _pins(self, dag):
+        key = dag_signature(dag)
+        if key in self.plan_cache:
+            self.hits += 1
+            return self.plan_cache[key]
+        self.misses += 1
+        pins, _, _ = gp_plan(
+            dag, self.k, self.model, self.epsilon, self.seed, self.node_weight
+        )
+        self.plan_cache[key] = pins
+        return pins
+
+    def on_submit(self, job, dag):
+        self.parts[job] = list(self._pins(dag))
+
+    def select(self, ctx):
+        return self.parts[ctx["job"]][ctx["task"]]
+
+    def on_task_finish(self, job, task, dev, finish_ms):
+        pass
+
+    def on_job_drain(self, job):
+        pass
+
+
+class OpenGpWindow:
+    """Mirror of GraphPartition with window=W under the open system:
+    every W completions, re-partition the undispatched *union frontier*
+    of all in-flight jobs (their vertices concatenated in job-id order
+    plus one shared host anchor), dispatched tasks pinned."""
+
+    name = "gp-window"
+
+    def __init__(self, k, model, window, epsilon=0.05, seed=1, node_weight="gpu"):
+        self.k = k
+        self.model = model
+        self.window = window
+        self.epsilon = epsilon
+        self.seed = seed
+        self.node_weight = node_weight
+        self.plan_cache = {}
+        self.hits = 0
+        self.misses = 0
+        self.jobs = {}
+        self.finishes = 0
+        self.replans = 0
+
+    def _pins(self, dag):
+        key = dag_signature(dag)
+        if key in self.plan_cache:
+            self.hits += 1
+            return self.plan_cache[key]
+        self.misses += 1
+        pins, _, _ = gp_plan(
+            dag, self.k, self.model, self.epsilon, self.seed, self.node_weight
+        )
+        self.plan_cache[key] = pins
+        return pins
+
+    def on_submit(self, job, dag):
+        pins = self._pins(dag)
+        # Reset the window counter only when the system was idle (an
+        # admission must not starve the in-flight jobs' replan cadence).
+        if not any(st["active"] for st in self.jobs.values()):
+            self.replans = 0
+            self.finishes = 0
+        n = dag.node_count()
+        node_w, _, anchor_w = build_gp_graph(dag, self.model, self.k, self.node_weight)
+        self.jobs[job] = dict(
+            active=True,
+            parts=list(pins),
+            dispatched=[False] * n,
+            node_w=node_w[:n],
+            anchor_w=anchor_w,
+            edges=[
+                (s, d, max(edge_weight_us(self.model, b), 1)) for (s, d, b) in dag.edges
+            ],
+            dev_time=[
+                [self.model.kernel_time_ms(kernel, size, d) for d in range(self.k)]
+                for (_, kernel, size) in dag.nodes
+            ],
+            real=[kernel != SOURCE for (_, kernel, _) in dag.nodes],
+        )
+
+    def select(self, ctx):
+        st = self.jobs[ctx["job"]]
+        st["dispatched"][ctx["task"]] = True
+        return st["parts"][ctx["task"]]
+
+    def on_task_finish(self, job, task, dev, finish_ms):
+        self.finishes += 1
+        if self.finishes >= self.window:
+            self.finishes = 0
+            self._replan()
+
+    def on_job_drain(self, job):
+        self.jobs[job]["active"] = False
+
+    def _replan(self):
+        active = [j for j in sorted(self.jobs) if self.jobs[j]["active"]]
+        if not active:
+            return
+        totals = [0.0] * self.k
+        remaining = 0
+        for j in active:
+            st = self.jobs[j]
+            for v in range(len(st["node_w"])):
+                if not st["real"][v] or st["dispatched"][v]:
+                    continue
+                remaining += 1
+                for d in range(self.k):
+                    totals[d] += st["dev_time"][v][d]
+        if remaining == 0:
+            return
+        inv = [1.0 / max(t, 1e-12) for t in totals]
+        s = sum(inv)
+        ratios = [i / s for i in inv]
+
+        offsets = {}
+        vwgt = []
+        for j in active:
+            offsets[j] = len(vwgt)
+            vwgt.extend(self.jobs[j]["node_w"])
+        total_n = len(vwgt)
+        anchor = total_n
+        vwgt.append(0)
+        edges = []
+        for j in active:
+            st = self.jobs[j]
+            off = offsets[j]
+            for v in range(len(st["node_w"])):
+                if st["anchor_w"][v] > 0:
+                    edges.append((anchor, off + v, st["anchor_w"][v]))
+        for j in active:
+            st = self.jobs[j]
+            off = offsets[j]
+            for (u, v, w) in st["edges"]:
+                edges.append((off + u, off + v, w))
+        fixed = [-1] * (total_n + 1)
+        fixed[anchor] = 0
+        for j in active:
+            st = self.jobs[j]
+            off = offsets[j]
+            for v in range(len(st["dispatched"])):
+                if st["dispatched"][v]:
+                    fixed[off + v] = st["parts"][v]
+        g = pm.csr_build(vwgt, edges)
+        cfg = pm.default_cfg(
+            k=self.k, targets=ratios, epsilon=self.epsilon, seed=self.seed, fixed=fixed
+        )
+        res = pm.partition(g, cfg)
+        for j in active:
+            off = offsets[j]
+            n = len(self.jobs[j]["node_w"])
+            self.jobs[j]["parts"] = res["parts"][off:off + n]
+        self.replans += 1
+
+
+def simulate_open_engine(
+    jobs_in,
+    policy,
+    workers,
+    model,
+    queue,
+    bus_channels=1,
+    prefetch=False,
+    return_to_host=True,
+    collect_trace=False,
+):
+    """Mirror of EngineCore::run: jobs_in = [(dag, submit_ms)]."""
+    import heapq
+
+    k = len(workers)
+    host = 0
+    worker_free = [[0.0] * w for w in workers]
+    bus = [0.0] * max(bus_channels, 1)
+    bytes_of = []
+    mask_of = []
+    avail = []
+    heap = []
+    pending = deque()
+    state = dict(inflight=0)
+    queue = max(queue, 1)
+
+    jobs = []
+    for j, (dag, submit) in enumerate(jobs_in):
+        jobs.append(
+            dict(
+                dag=dag,
+                submit=submit,
+                admit=0.0,
+                complete=0.0,
+                out=None,
+                initial=None,
+                indeg=None,
+                ready_time=None,
+                finish=None,
+                assignments=None,
+                device_busy=[0.0] * k,
+                tasks_per_device=[0] * k,
+                ledger_count=0,
+                ledger_bytes=0,
+                trace=[],
+                remaining=-1,
+            )
+        )
+        heapq.heappush(heap, (submit, 1, j, 0))
+
+    def alloc(nbytes, mask, t):
+        # New data exists no earlier than its job's admission instant.
+        bytes_of.append(nbytes)
+        mask_of.append(mask)
+        avail.append(t)
+        return len(bytes_of) - 1
+
+    def complete_job(j):
+        st = jobs[j]
+        dag = st["dag"]
+        makespan = 0.0
+        for f in st["finish"]:
+            makespan = max(makespan, f)
+        if return_to_host:
+            for v in dag.sinks():
+                if dag.nodes[v][1] == SOURCE:
+                    continue
+                h = st["out"][v]
+                if not (mask_of[h] >> host) & 1:
+                    mask_of[h] |= 1 << host
+                    t = model.transfer_time_ms(bytes_of[h])
+                    ch = min(range(len(bus)), key=lambda c: bus[c])
+                    start = max(bus[ch], st["finish"][v])
+                    bus[ch] = start + t
+                    st["ledger_count"] += 1
+                    st["ledger_bytes"] += bytes_of[h]
+                    makespan = max(makespan, bus[ch])
+        st["complete"] = max(makespan, st["admit"])
+        policy.on_job_drain(j)
+        heapq.heappush(heap, (st["complete"], 0, j, 0))
+
+    def admit(j, now):
+        st = jobs[j]
+        st["admit"] = now
+        policy.on_submit(j, st["dag"])
+        dag = st["dag"]
+        n = dag.node_count()
+        st["out"] = [alloc(4 * size * size, 0, now) for (_, _, size) in dag.nodes]
+        st["initial"] = [
+            [
+                alloc(4 * size * size, 1 << host, now)
+                for _ in range(max(ARITY[kernel] - dag.in_degree(v), 0))
+            ]
+            for v, (_, kernel, size) in enumerate(dag.nodes)
+        ]
+        st["indeg"] = [dag.in_degree(v) for v in range(n)]
+        st["ready_time"] = [now] * n
+        st["finish"] = [0.0] * n
+        st["assignments"] = [None] * n
+        st["remaining"] = n
+        for v in range(n):
+            if st["indeg"][v] == 0:
+                heapq.heappush(heap, (now, 2, j, v))
+        state["inflight"] += 1
+        if st["remaining"] == 0:
+            complete_job(j)
+
+    def dispatch(j, v, ready):
+        st = jobs[j]
+        dag = st["dag"]
+        name, kernel, size = dag.nodes[v]
+
+        if kernel == SOURCE:
+            mask_of[st["out"][v]] = 1 << host
+            st["finish"][v] = ready
+            st["assignments"][v] = host
+            for e in dag.succs[v]:
+                w = dag.edges[e][1]
+                st["indeg"][w] -= 1
+                st["ready_time"][w] = max(st["ready_time"][w], ready)
+                if st["indeg"][w] == 0:
+                    heapq.heappush(heap, (st["ready_time"][w], 2, j, w))
+            st["remaining"] -= 1
+            if st["remaining"] == 0:
+                complete_job(j)
+            return
+
+        handles = [st["out"][dag.edges[e][0]] for e in dag.preds[v]] + st["initial"][v]
+        inputs = [(bytes_of[h], mask_of[h]) for h in handles]
+        device_free = [min(ws) for ws in worker_free]
+
+        ctx = dict(
+            job=j,
+            task=v,
+            kernel=kernel,
+            size=size,
+            ready=ready,
+            device_free=device_free,
+            inputs=inputs,
+            model=model,
+        )
+        dev = policy.select(ctx)
+        mem = dev  # Platform::memory_node is the identity today
+
+        data_ready = ready
+        for h in handles:
+            if not (mask_of[h] >> mem) & 1:
+                mask_of[h] |= 1 << mem
+                t = model.transfer_time_ms(bytes_of[h])
+                ch = min(range(len(bus)), key=lambda c: bus[c])
+                earliest = avail[h] if prefetch else ready
+                start = max(bus[ch], earliest)
+                bus[ch] = start + t
+                st["ledger_count"] += 1
+                st["ledger_bytes"] += bytes_of[h]
+                data_ready = max(data_ready, bus[ch])
+        mask_of[st["out"][v]] = 1 << mem
+
+        worker = min(range(len(worker_free[dev])), key=lambda i: worker_free[dev][i])
+        exec_ms = model.kernel_time_ms(kernel, size, dev)
+        start = max(worker_free[dev][worker], data_ready)
+        end = start + exec_ms
+        worker_free[dev][worker] = end
+        st["finish"][v] = end
+        avail[st["out"][v]] = end
+        st["assignments"][v] = dev
+        st["device_busy"][dev] += exec_ms
+        st["tasks_per_device"][dev] += 1
+        if collect_trace:
+            st["trace"].append(dict(job=j, task=v, device=dev, worker=worker, start=start, end=end))
+        policy.on_task_finish(j, v, dev, end)
+
+        for e in dag.succs[v]:
+            w = dag.edges[e][1]
+            st["indeg"][w] -= 1
+            st["ready_time"][w] = max(st["ready_time"][w], end)
+            if st["indeg"][w] == 0:
+                heapq.heappush(heap, (st["ready_time"][w], 2, j, w))
+        st["remaining"] -= 1
+        if st["remaining"] == 0:
+            complete_job(j)
+
+    while heap:
+        t, kind, j, v = heapq.heappop(heap)
+        if kind == 1:
+            if state["inflight"] < queue:
+                admit(j, t)
+            else:
+                pending.append(j)
+        elif kind == 0:
+            state["inflight"] -= 1
+            if pending:
+                admit(pending.popleft(), t)
+        else:
+            dispatch(j, v, t)
+
+    for j, st in enumerate(jobs):
+        assert st["remaining"] == 0, f"job {j}: stuck ({st['remaining']} left)"
+
+    return [
+        dict(
+            makespan=st["complete"] - st["submit"],
+            submit=st["submit"],
+            admit=st["admit"],
+            complete=st["complete"],
+            assignments=st["assignments"],
+            ledger_count=st["ledger_count"],
+            ledger_bytes=st["ledger_bytes"],
+            tasks_per_device=st["tasks_per_device"],
+            device_busy=st["device_busy"],
+            trace=st["trace"],
+        )
+        for st in jobs
+    ]
+
+
+# ------------------------------------------ arrivals + queueing metrics
+
+def fixed_times(rate_jps, n):
+    return [i * (1000.0 / rate_jps) for i in range(n)]
+
+
+def poisson_times(rate_jps, seed, n):
+    rng = pm.Pcg32.seeded(seed)
+    t = 0.0
+    out = []
+    for _ in range(n):
+        t += -math.log(1.0 - rng.gen_f64()) * (1000.0 / rate_jps)
+        out.append(t)
+    return out
+
+
+def bursty_times(rate_jps, burst, seed, n):
+    rng = pm.Pcg32.seeded(seed)
+    epoch_rate = rate_jps / burst
+    t = 0.0
+    out = []
+    while len(out) < n:
+        t += -math.log(1.0 - rng.gen_f64()) * (1000.0 / epoch_rate)
+        for _ in range(burst):
+            if len(out) == n:
+                break
+            out.append(t)
+    return out
+
+
+def percentile_nearest_rank(sorted_vals, p):
+    rank = math.ceil(p / 100.0 * len(sorted_vals))
+    rank = min(max(rank, 1), len(sorted_vals))
+    return sorted_vals[rank - 1]
+
+
+def session_metrics(results, workers):
+    sojourns = sorted(r["complete"] - r["submit"] for r in results)
+    qdelays = [r["admit"] - r["submit"] for r in results]
+    span = max((r["complete"] for r in results), default=0.0)
+    busy = [0.0] * len(workers)
+    for r in results:
+        for d, b in enumerate(r["device_busy"]):
+            busy[d] += b
+    events = []
+    for r in results:
+        events.append((r["admit"], 1))
+        events.append((r["complete"], -1))
+    events.sort()
+    cur = best = 0
+    for _, delta in events:
+        cur += delta
+        best = max(best, cur)
+    return dict(
+        span=span,
+        p50=percentile_nearest_rank(sojourns, 50.0) if sojourns else 0.0,
+        p95=percentile_nearest_rank(sojourns, 95.0) if sojourns else 0.0,
+        p99=percentile_nearest_rank(sojourns, 99.0) if sojourns else 0.0,
+        mean_sojourn=sum(sojourns) / len(sojourns) if sojourns else 0.0,
+        mean_qdelay=sum(qdelays) / len(qdelays) if qdelays else 0.0,
+        throughput=len(results) / (span / 1000.0) if span > 0 else 0.0,
+        max_concurrent=best,
+        utilization=[
+            (b / (span * w) if span > 0 else 0.0) for b, w in zip(busy, workers)
+        ],
+    )
+
+
+def make_open_policy(spec, k, model, window=12):
+    if spec == "eager":
+        return OpenEager()
+    if spec in ("dmda", "heft"):
+        # heft's select rule is dmda's EFT estimator; ranks are untouched
+        # by select, so the schedule coincides (as in the Rust engines).
+        return OpenDmda()
+    if spec == "gp":
+        return OpenGp(k, model)
+    if spec.startswith("gp:window"):
+        return OpenGpWindow(k, model, window=int(spec.split("=")[1]))
+    if spec == "cpu-only":
+        return OpenPin(0)
+    if spec == "gpu-only":
+        return OpenPin(1)
+    raise ValueError(spec)
+
+
+def open_run(dags, spec, submits, queue, model=None, workers=None, collect_trace=False):
+    model = model or CalibratedModel()
+    workers = workers or PAPER_WORKERS
+    policy = make_open_policy(spec, len(workers), model)
+    results = simulate_open_engine(
+        list(zip(dags, submits)), policy, workers, model, queue, collect_trace=collect_trace
+    )
+    return results, policy
+
+
 # ----------------------------------------------------------------- checks
 
 OK = True
@@ -806,6 +1345,86 @@ def run_checks():
             best = win["makespan"]
     check("gp-window beats gp on phased", best < one["makespan"], f"{best:.2f} vs {one['makespan']:.2f}")
 
+    print("open engine: single-job equivalence (unified core vs closed engine)")
+    cases = [
+        (generate_layered(paper_gen_cfg(MA, 1024)), ["eager", "dmda", "gp", "gpu-only"]),
+        (generate_layered(paper_gen_cfg(MM, 1024)), ["eager", "dmda", "gp"]),
+        (phased(8, 4, 256), ["dmda", "gp"]),
+        (chain(5, MA, 256), ["gpu-only", "cpu-only"]),
+    ]
+    for dag, names in cases:
+        for nm in names:
+            ref = run(dag, nm)
+            got = open_run([dag], nm, [0.0], 1)[0][0]
+            check(
+                f"single {nm} n={dag.node_count()} exact",
+                got["assignments"] == ref["assignments"]
+                and got["ledger_count"] == ref["ledger_count"]
+                and got["makespan"] == ref["makespan"],
+                f"{got['makespan']:.6f} vs {ref['makespan']:.6f}",
+            )
+
+    print("open engine: single-job gp-window equivalence")
+    dag = phased(8, 4, 256)
+    ref = run(dag, "gp-window", window=12)
+    got = open_run([dag], "gp:window=12", [0.0], 1)[0][0]
+    check(
+        "gp:window=12 single-job exact",
+        got["assignments"] == ref["assignments"] and got["makespan"] == ref["makespan"],
+        f"{got['makespan']:.6f} vs {ref['makespan']:.6f}",
+    )
+
+    print("open engine: poisson concurrency + determinism (default bench scenario)")
+    jobs = [phased(8, 4, 256) for _ in range(24)]
+    submits = poisson_times(220.0, 7, 24)
+    for nm in ["dmda", "gp"]:
+        results, _ = open_run(jobs, nm, submits, 8, collect_trace=True)
+        m = session_metrics(results, PAPER_WORKERS)
+        overlap = False
+        spans = [(min(e["start"] for e in r["trace"]), max(e["end"] for e in r["trace"]))
+                 for r in results]
+        for i in range(len(spans)):
+            for j2 in range(i + 1, len(spans)):
+                if spans[i][0] < spans[j2][1] and spans[j2][0] < spans[i][1]:
+                    overlap = True
+        check(f"{nm} >=2 jobs overlap (trace)", overlap and m["max_concurrent"] >= 2,
+              f"maxconc={m['max_concurrent']}")
+        again, _ = open_run(jobs, nm, submits, 8, collect_trace=True)
+        check(f"{nm} deterministic", [r["trace"] for r in again] == [r["trace"] for r in results])
+        check(f"{nm} timings sane",
+              all(r["admit"] >= r["submit"] and r["complete"] >= r["admit"] for r in results))
+
+    print("open engine: queue=1 serializes and queues")
+    results, _ = open_run(jobs[:8], "dmda", poisson_times(400.0, 7, 8), 1)
+    m = session_metrics(results, PAPER_WORKERS)
+    check("queue=1 max concurrent == 1", m["max_concurrent"] == 1, m["max_concurrent"])
+    check("queue=1 positive queueing delay", m["mean_qdelay"] > 0.0,
+          f"{m['mean_qdelay']:.3f} ms")
+
+    print("open engine: cross-job gp-window vs per-job gp (mean sojourn)")
+    win_found = False
+    for rate in [120.0, 180.0, 220.0, 300.0]:
+        submits = poisson_times(rate, 7, 24)
+        gp_res, _ = open_run(jobs, "gp", submits, 8)
+        win_res, _ = open_run(jobs, "gp:window=12", submits, 8)
+        gp_m = session_metrics(gp_res, PAPER_WORKERS)
+        win_m = session_metrics(win_res, PAPER_WORKERS)
+        gain = (gp_m["mean_sojourn"] - win_m["mean_sojourn"]) / gp_m["mean_sojourn"]
+        print(
+            f"    rate={rate:.0f}: gp mean sojourn {gp_m['mean_sojourn']:.2f} ms vs "
+            f"gp:window=12 {win_m['mean_sojourn']:.2f} ms ({gain * 100:+.1f}%)"
+        )
+        if rate == 220.0 and win_m["mean_sojourn"] < gp_m["mean_sojourn"]:
+            win_found = True
+    check("cross-job window wins at rate=220", win_found)
+
+    print("percentiles (nearest rank)")
+    hundred = [float(x) for x in range(1, 101)]
+    check("p50 of 1..100 == 50", percentile_nearest_rank(hundred, 50.0) == 50.0)
+    check("p95 of 1..100 == 95", percentile_nearest_rank(hundred, 95.0) == 95.0)
+    check("p99 of 1..100 == 99", percentile_nearest_rank(hundred, 99.0) == 99.0)
+    check("p50 of [4,6,10] == 6", percentile_nearest_rank([4.0, 6.0, 10.0], 50.0) == 6.0)
+
     print("ALL OK" if OK else "FAILURES PRESENT")
     return OK
 
@@ -853,53 +1472,112 @@ def print_golden():
 
 # ------------------------------------------------------------------ bench
 
-def bench_json(jobs=8, window=12, size=1024):
-    model = CalibratedModel()
-    rows = []
-    scenarios = [
-        ("repeat-mm", [generate_layered(paper_gen_cfg(MM, size)) for _ in range(jobs)]),
-        ("repeat-ma", [generate_layered(paper_gen_cfg(MA, size)) for _ in range(jobs)]),
-        ("phased", [phased(8, 4, 256) for _ in range(min(jobs, 4))]),
-    ]
-    for scenario, dags in scenarios:
-        for spec in ["eager", "dmda", "heft", "gp", f"gp:window={window}"]:
-            makespan = 0.0
-            transfers = 0
-            import time
+DEFAULT_OPEN_STREAM = "stream:arrival=poisson,rate=220,queue=8"
 
+
+def job_mix(jobs, size, seed):
+    """Mirror of workloads::job_mix."""
+    out = []
+    for i in range(jobs):
+        if i % 2 == 0:
+            out.append(phased(8, 4, size))
+        else:
+            out.append(generate_layered(scaled_gen_cfg(24, MA, size, seed + i)))
+    return out
+
+
+def structural_hit_rate(dags):
+    """Plan-cache hit pattern by structure (mirror of PlanKey's dag
+    fingerprint role): hits = jobs whose signature was seen before."""
+    seen = set()
+    hits = 0
+    for dag in dags:
+        sig = dag_signature(dag)
+        if sig in seen:
+            hits += 1
+        else:
+            seen.add(sig)
+    return hits / len(dags) if dags else 0.0
+
+
+def bench_json(jobs=8, window=12, size=1024, open_jobs=24, rate=220.0, queue=8):
+    import time
+
+    model = CalibratedModel()
+    workers = PAPER_WORKERS
+    open_submits = poisson_times(rate, 7, open_jobs)
+    stream_spec = f"stream:arrival=poisson,rate={rate:g},queue={queue},seed=7"
+    scenarios = [
+        ("repeat-mm", [generate_layered(paper_gen_cfg(MM, size)) for _ in range(jobs)], None),
+        ("repeat-ma", [generate_layered(paper_gen_cfg(MA, size)) for _ in range(jobs)], None),
+        ("phased", [phased(8, 4, 256) for _ in range(min(jobs, 4))], None),
+        ("open-poisson", [phased(8, 4, 256) for _ in range(open_jobs)], open_submits),
+        ("open-mix", job_mix(open_jobs, 256, 2015), open_submits),
+    ]
+    rows = []
+    for scenario, dags, submits in scenarios:
+        for spec in ["eager", "dmda", "heft", "gp", f"gp:window={window}"]:
             plan_ns = 0
             first_plan_ns = 0
-            for i, dag in enumerate(dags):
+            if submits is None:
+                # Closed loop: back-to-back fresh-machine runs.
+                results = []
+                clock = 0.0
+                for i, dag in enumerate(dags):
+                    t0 = time.perf_counter_ns()
+                    if spec.startswith("gp:window"):
+                        r = run(dag, "gp-window", window=window)
+                    elif spec == "heft":
+                        r = run(dag, "dmda")
+                    else:
+                        r = run(dag, spec)
+                    t1 = time.perf_counter_ns()
+                    if i == 0 and spec.startswith("gp"):
+                        first_plan_ns = t1 - t0
+                        plan_ns += t1 - t0
+                    results.append(
+                        dict(
+                            makespan=r["makespan"],
+                            submit=clock,
+                            admit=clock,
+                            complete=clock + r["makespan"],
+                            ledger_count=r["ledger_count"],
+                            device_busy=r["device_busy"],
+                        )
+                    )
+                    clock += r["makespan"]
+                stream = "stream:arrival=closed"
+            else:
                 t0 = time.perf_counter_ns()
-                if spec.startswith("gp:window"):
-                    r = run(dag, "gp-window", window=window)
-                elif spec == "heft":
-                    # heft's select rule is dmda's EFT estimator; ranks are
-                    # untouched by select, so the schedule coincides.
-                    r = run(dag, "dmda")
-                else:
-                    r = run(dag, spec)
+                results, _policy = open_run(dags, spec, submits, queue, model=model)
                 t1 = time.perf_counter_ns()
-                makespan += r["makespan"]
-                transfers += r["ledger_count"]
-                # First job pays the (mirror) planning cost; repeats would
-                # hit the plan cache in the Rust runtime.
-                if i == 0 and spec.startswith("gp"):
+                if spec.startswith("gp"):
                     first_plan_ns = t1 - t0
                     plan_ns += t1 - t0
-            hit_rate = 0.0 if len(dags) <= 1 else (len(dags) - 1) / len(dags)
+                stream = stream_spec
+            m = session_metrics(results, workers)
             rows.append(
                 dict(
                     scenario=scenario,
                     policy=spec,
+                    stream=stream,
                     jobs=len(dags),
-                    makespan_ms=makespan,
-                    transfers=transfers,
+                    makespan_ms=sum(r["makespan"] for r in results),
+                    span_ms=m["span"],
+                    transfers=sum(r["ledger_count"] for r in results),
                     plan_ns=plan_ns,
                     first_plan_ns=first_plan_ns,
                     repeat_plan_ns=0,
-                    cache_hit_rate=hit_rate,
+                    cache_hit_rate=structural_hit_rate(dags),
                     decision_ns=0,
+                    p50_sojourn_ms=m["p50"],
+                    p95_sojourn_ms=m["p95"],
+                    p99_sojourn_ms=m["p99"],
+                    mean_sojourn_ms=m["mean_sojourn"],
+                    mean_queue_delay_ms=m["mean_qdelay"],
+                    throughput_jps=m["throughput"],
+                    max_concurrent_jobs=m["max_concurrent"],
+                    utilization=m["utilization"],
                 )
             )
     lines = [
@@ -913,12 +1591,22 @@ def bench_json(jobs=8, window=12, size=1024):
     ]
     for i, r in enumerate(rows):
         comma = "" if i + 1 == len(rows) else ","
+        util = ", ".join(f"{u:.4f}" for u in r["utilization"])
         lines.append(
             f'    {{"scenario": "{r["scenario"]}", "policy": "{r["policy"]}", '
-            f'"jobs": {r["jobs"]}, "makespan_ms": {r["makespan_ms"]:.6f}, '
+            f'"stream": "{r["stream"]}", "jobs": {r["jobs"]}, '
+            f'"makespan_ms": {r["makespan_ms"]:.6f}, "span_ms": {r["span_ms"]:.6f}, '
             f'"transfers": {r["transfers"]}, "plan_ns": {r["plan_ns"]}, '
             f'"first_plan_ns": {r["first_plan_ns"]}, "repeat_plan_ns": {r["repeat_plan_ns"]}, '
-            f'"cache_hit_rate": {r["cache_hit_rate"]:.4f}, "decision_ns": {r["decision_ns"]}}}{comma}'
+            f'"cache_hit_rate": {r["cache_hit_rate"]:.4f}, "decision_ns": {r["decision_ns"]}, '
+            f'"p50_sojourn_ms": {r["p50_sojourn_ms"]:.6f}, '
+            f'"p95_sojourn_ms": {r["p95_sojourn_ms"]:.6f}, '
+            f'"p99_sojourn_ms": {r["p99_sojourn_ms"]:.6f}, '
+            f'"mean_sojourn_ms": {r["mean_sojourn_ms"]:.6f}, '
+            f'"mean_queue_delay_ms": {r["mean_queue_delay_ms"]:.6f}, '
+            f'"throughput_jps": {r["throughput_jps"]:.6f}, '
+            f'"max_concurrent_jobs": {r["max_concurrent_jobs"]}, '
+            f'"utilization": [{util}]}}{comma}'
         )
     lines.append("  ]")
     lines.append("}")

@@ -95,9 +95,13 @@ COMMANDS:
              --dot FILE [--out FILE] [--k N] [--kernel K] [--size N]
   figures    Reproduce all paper tables quickly (sim, 1 iteration/size).
   bench      Built-in bench verbs. `bench stream` runs streaming
-             multi-DAG sessions over the policy matrix and writes
+             multi-DAG sessions over the policy matrix — closed-loop
+             and open-system (arrival processes, bounded admission,
+             sojourn percentiles) — and writes
              bench_results/BENCH_sched_session.json.
-             [--jobs N] [--window W] [--size N]
+             [--jobs N] [--window W] [--size N] [--open-jobs N]
+             [--stream SPEC]  (e.g. \"stream:arrival=poisson,rate=220,
+             queue=8\"; arrival = closed|fixed|poisson|bursty)
   measure    Measure real PJRT kernel times for the shipped artifacts.
              [--reps N]
   stats      Structural statistics of a DOT graph or built-in workload.

@@ -17,11 +17,14 @@
 //! iterations = 100
 //! platform = paper      # paper | tri
 //! return-to-host = true
+//! stream = "stream:arrival=poisson,rate=120,queue=32"
 //! ```
 //!
 //! The `scheduler` value is passed verbatim to
-//! [`crate::sched::SchedulerRegistry::create`], so every policy variant
-//! is reachable from a config file without recompiling.
+//! [`crate::sched::SchedulerRegistry::create`] and the `stream` value to
+//! [`crate::sim::StreamConfig::from_spec`], so every policy variant and
+//! every open-system traffic scenario is reachable from a config file
+//! without recompiling.
 
 use std::collections::BTreeMap;
 
@@ -30,6 +33,7 @@ use anyhow::{bail, Context, Result};
 use crate::dag::generator::{generate_layered, GeneratorConfig};
 use crate::dag::{workloads, Dag, KernelKind};
 use crate::platform::Platform;
+use crate::sim::StreamConfig;
 
 /// Raw parsed config: section -> key -> value.
 pub type RawConfig = BTreeMap<String, BTreeMap<String, String>>;
@@ -86,6 +90,9 @@ pub struct RunConfig {
     pub iterations: usize,
     pub tri_platform: bool,
     pub return_to_host: bool,
+    /// Open-system traffic scenario for stream runs (closed loop by
+    /// default; see [`StreamConfig::from_spec`] for the spec syntax).
+    pub stream: StreamConfig,
 }
 
 impl Default for RunConfig {
@@ -98,6 +105,7 @@ impl Default for RunConfig {
             iterations: 1,
             tri_platform: false,
             return_to_host: true,
+            stream: StreamConfig::closed(),
         }
     }
 }
@@ -158,6 +166,10 @@ impl RunConfig {
         }
         if let Some(b) = r.get("return-to-host") {
             cfg.return_to_host = b == "true";
+        }
+        if let Some(spec) = r.get("stream") {
+            cfg.stream = StreamConfig::from_spec(spec)
+                .with_context(|| format!("stream spec {spec:?}"))?;
         }
         Ok(cfg)
     }
@@ -248,6 +260,20 @@ mod tests {
         assert_eq!(cfg.scheduler, "gp:epsilon=0.02,seed=7,window=64");
         let s = crate::sched::SchedulerRegistry::builtin().create(&cfg.scheduler).unwrap();
         assert_eq!(s.name(), "gp-window");
+    }
+
+    #[test]
+    fn stream_spec_parses_into_config() {
+        use crate::sim::ArrivalProcess;
+        let src = "[run]\nstream = \"stream:arrival=poisson,rate=120,queue=8\"\n";
+        let cfg = RunConfig::parse(src).unwrap();
+        assert_eq!(
+            cfg.stream.arrival,
+            ArrivalProcess::Poisson { rate_jps: 120.0, seed: 7 }
+        );
+        assert_eq!(cfg.stream.queue, 8);
+        assert!(RunConfig::parse("[run]\nstream = \"stream:arrival=warp\"\n").is_err());
+        assert_eq!(RunConfig::parse("").unwrap().stream, StreamConfig::closed());
     }
 
     #[test]

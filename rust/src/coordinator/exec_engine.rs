@@ -22,7 +22,7 @@ use crate::perfmodel::PerfModel;
 use crate::platform::Platform;
 use crate::runtime::RuntimeService;
 use crate::sched::{DispatchCtx, InputInfo, Plan, PlanCache, PlanKey, Planner as _, Scheduler};
-use crate::sim::{RunReport, SessionReport, TraceEvent};
+use crate::sim::{JobTiming, RunReport, SessionReport, StreamConfig, TraceEvent};
 
 /// Options for a real run.
 #[derive(Debug, Clone)]
@@ -109,7 +109,7 @@ impl ExecEngine {
             Some(p) => Arc::clone(p),
             None => Arc::new(scheduler.build_plan(dag, &self.platform, model)),
         };
-        scheduler.on_submit(dag, &plan, &self.platform, model);
+        scheduler.on_submit(0, dag, &plan, &self.platform, model);
         let plan_ns = t0.elapsed().as_nanos() as u64;
 
         // --- data state ---
@@ -233,6 +233,7 @@ impl ExecEngine {
                 let device_free: Vec<f64> =
                     device_backlog.iter().map(|&b| t_now + b).collect();
                 let ctx = DispatchCtx {
+                    job: 0,
                     task: v,
                     kernel: node.kernel,
                     size: node.size,
@@ -304,6 +305,7 @@ impl ExecEngine {
             device_backlog[c.device] = (device_backlog[c.device] - est).max(0.0);
             if opts.collect_trace {
                 trace.push(TraceEvent {
+                    job: 0,
                     task: c.task,
                     device: c.device,
                     worker: c.worker,
@@ -315,7 +317,7 @@ impl ExecEngine {
             // true completion order, which is what lets online policies
             // observe the machine instead of trusting backlog estimates.
             let th = Instant::now();
-            scheduler.on_task_finish(c.task, c.device, c.end_ms);
+            scheduler.on_task_finish(0, c.task, c.device, c.end_ms);
             decision_ns += th.elapsed().as_nanos() as u64;
             for &e in dag.out_edges(c.task) {
                 let wv = dag.edge(e).dst;
@@ -326,6 +328,7 @@ impl ExecEngine {
             }
         }
 
+        scheduler.on_job_drain(0);
         scheduler.on_drain();
 
         // --- shutdown workers ---
@@ -425,9 +428,20 @@ impl ExecEngine {
         })
     }
 
-    /// Execute a stream of DAGs back-to-back through one policy, sharing
-    /// `cache` for plan reuse — the real-compute twin of
-    /// [`crate::sim::simulate_stream`].
+    /// Execute a stream of DAGs through one policy, sharing `cache` for
+    /// plan reuse — the real-compute twin of
+    /// [`crate::sim::simulate_stream`] / [`crate::sim::simulate_open`].
+    ///
+    /// The machine is real, so the open-system semantics differ from the
+    /// simulator's: `stream`'s arrival process *paces* submissions on
+    /// the wall clock (the coordinator sleeps until each job's submit
+    /// time), while execution itself stays serial — one job owns the
+    /// workers at a time, an admission window of 1. A job that arrives
+    /// while its predecessor is still draining therefore accrues real
+    /// queueing delay, and the merged [`SessionReport`] carries the same
+    /// sojourn/percentile/throughput metrics as the simulated sessions.
+    /// `arrival=closed` submits each job the instant the previous one
+    /// completes (PR 2 semantics, no pacing).
     pub fn run_stream(
         &self,
         dags: &[Dag],
@@ -435,15 +449,42 @@ impl ExecEngine {
         model: &dyn PerfModel,
         opts: &ExecOptions,
         cache: &mut PlanCache,
+        stream: &StreamConfig,
     ) -> Result<SessionReport> {
         let mut session = SessionReport::new(scheduler.name());
-        for dag in dags {
+        let submit_times = stream.arrival.submit_times_ms(dags.len());
+        let epoch = Instant::now();
+        let now_ms = || epoch.elapsed().as_secs_f64() * 1e3;
+        for (i, dag) in dags.iter().enumerate() {
+            let submit_ms = match &submit_times {
+                Some(times) => {
+                    let target = times[i];
+                    let now = now_ms();
+                    if now < target {
+                        std::thread::sleep(std::time::Duration::from_secs_f64(
+                            (target - now) / 1e3,
+                        ));
+                    }
+                    target
+                }
+                None => now_ms(),
+            };
+            let admit_ms = now_ms().max(submit_ms);
             let key = PlanKey::of(dag, &self.platform, model, scheduler);
             let (plan, hit, build_ns) =
                 cache.get_or_build(key, || scheduler.build_plan(dag, &self.platform, model));
             let mut report = self.run_with_plan(dag, scheduler, model, opts, Some(&plan))?;
             report.plan_ns += build_ns;
-            session.push(report, hit);
+            // run_with_plan stamps trace times on its own epoch, which
+            // starts at this job's admission on the session clock.
+            for ev in &mut report.trace {
+                ev.job = i;
+                ev.start_ms += admit_ms;
+                ev.end_ms += admit_ms;
+            }
+            let timing =
+                JobTiming { submit_ms, admit_ms, complete_ms: now_ms().max(admit_ms) };
+            session.push_timed(report, hit, timing);
         }
         Ok(session)
     }
@@ -531,7 +572,14 @@ mod tests {
         let mut s = sched::by_name("gp").unwrap();
         let mut cache = crate::sched::PlanCache::new();
         let session = eng
-            .run_stream(&dags, s.as_mut(), &model, &ExecOptions::default(), &mut cache)
+            .run_stream(
+                &dags,
+                s.as_mut(),
+                &model,
+                &ExecOptions::default(),
+                &mut cache,
+                &StreamConfig::closed(),
+            )
             .unwrap();
         assert_eq!(session.job_count(), 3);
         assert_eq!(session.cache_misses, 1);
@@ -539,6 +587,39 @@ mod tests {
         // Same plan => same pins on every job.
         assert_eq!(session.jobs[0].assignments, session.jobs[1].assignments);
         assert_eq!(session.jobs[1].assignments, session.jobs[2].assignments);
+        // Wall-clock lifecycle timings are coherent and job-tagged.
+        assert_eq!(session.timings.len(), 3);
+        for (i, t) in session.timings.iter().enumerate() {
+            assert!(t.submit_ms <= t.admit_ms && t.admit_ms <= t.complete_ms, "job {i}");
+        }
+        for (i, job) in session.jobs.iter().enumerate() {
+            assert!(job.trace.iter().all(|ev| ev.job == i), "job {i} trace tags");
+        }
+    }
+
+    #[test]
+    fn paced_stream_records_queueing_delay() {
+        // A paced (fixed-rate) real stream: job 1 submits on the pacing
+        // clock; if job 0 is still draining, the wait shows up as
+        // queueing delay. Either way the timing invariants hold.
+        let Some(eng) = engine() else { return };
+        let dag = workloads::chain(2, KernelKind::Ma, 64);
+        let dags = vec![dag.clone(), dag];
+        let model = CalibratedModel::default();
+        let mut s = sched::by_name("eager").unwrap();
+        let mut cache = crate::sched::PlanCache::new();
+        let stream = StreamConfig::from_spec("stream:arrival=fixed,rate=2000").unwrap();
+        let session = eng
+            .run_stream(&dags, s.as_mut(), &model, &ExecOptions::default(), &mut cache, &stream)
+            .unwrap();
+        assert_eq!(session.job_count(), 2);
+        assert_eq!(session.timings[0].submit_ms, 0.0);
+        assert_eq!(session.timings[1].submit_ms, 0.5, "paced at 2000 jobs/s");
+        for t in &session.timings {
+            assert!(t.queueing_delay_ms() >= 0.0);
+            assert!(t.sojourn_ms() > 0.0);
+        }
+        assert!(session.throughput_jps() > 0.0);
     }
 
     #[test]

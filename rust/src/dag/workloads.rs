@@ -196,6 +196,29 @@ pub fn phased(width: usize, depth: usize, size: u32) -> Dag {
     g
 }
 
+/// A deterministic job stream for open-system scenarios: `jobs` small
+/// DAGs alternating between the two-phase [`phased`] shape (the
+/// windowed-gp headline workload) and random layered DAGs seeded by the
+/// job index. Millisecond-scale service times at `size` ≈ 256 make
+/// arrival processes generate real contention in the open engine.
+pub fn job_mix(jobs: usize, size: u32, seed: u64) -> Vec<Dag> {
+    use crate::dag::generator::{generate_layered, GeneratorConfig};
+    (0..jobs)
+        .map(|i| {
+            if i % 2 == 0 {
+                phased(8, 4, size)
+            } else {
+                generate_layered(&GeneratorConfig::scaled(
+                    24,
+                    KernelKind::Ma,
+                    size,
+                    seed + i as u64,
+                ))
+            }
+        })
+        .collect()
+}
+
 /// Linear chain of `len` kernels (worst case for parallel scheduling:
 /// zero task parallelism, every edge a potential transfer).
 pub fn chain(len: usize, kernel: KernelKind, size: u32) -> Dag {
@@ -310,6 +333,22 @@ mod tests {
         assert!(g.nodes().all(|(_, n)| n.kernel == KernelKind::Ma));
         let g = mixed_random(50, 256, 1.0, 3);
         assert!(g.nodes().all(|(_, n)| n.kernel == KernelKind::Mm));
+    }
+
+    #[test]
+    fn job_mix_is_deterministic_and_acyclic() {
+        let a = job_mix(6, 256, 9);
+        let b = job_mix(6, 256, 9);
+        assert_eq!(a.len(), 6);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.node_count(), y.node_count());
+            assert_eq!(x.edge_count(), y.edge_count());
+            assert!(is_acyclic(x));
+        }
+        // Alternating shapes: even jobs are phased (64 nodes), odd are
+        // 24-kernel layered DAGs.
+        assert_eq!(a[0].node_count(), 64);
+        assert_eq!(a[1].node_count(), 24);
     }
 
     #[test]

@@ -12,8 +12,10 @@
 //! * [`data`] — MSI data coherence over discrete memory nodes;
 //! * [`sched`] — eager / dmda / graph-partition (and extra) policies,
 //!   `Plan` artifacts, the plan cache and the scheduler registry;
-//! * [`sim`] — discrete-event engine for fast, deterministic sweeps;
-//! * [`session`] — streaming multi-DAG scheduling sessions;
+//! * [`sim`] — open-system discrete-event engine: many jobs in flight,
+//!   arrival processes, bounded admission, queueing metrics;
+//! * [`session`] — streaming multi-DAG scheduling sessions (closed-loop
+//!   and open-system submission);
 //! * [`runtime`] — manifest-gated kernel execution (interpreter backend
 //!   standing in for PJRT in this offline build);
 //! * [`coordinator`] — threaded real-compute execution engine;

@@ -15,7 +15,7 @@ use hetsched::platform::Platform;
 use hetsched::report::{fmt_ms, fmt_ratio, Table};
 use hetsched::runtime::{KernelRuntime, RuntimeService};
 use hetsched::sched::{self, PlanCache, SchedulerRegistry};
-use hetsched::sim::{simulate, simulate_stream, SessionReport, SimConfig};
+use hetsched::sim::{simulate, simulate_open, SessionReport, SimConfig, StreamConfig};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -252,24 +252,42 @@ fn cmd_bench(args: &Args) -> Result<()> {
     }
 }
 
+/// Default open-system traffic scenario for `bench stream` (rate chosen
+/// so several phased jobs overlap in flight on the paper platform —
+/// mirror-tuned; override with `--stream`).
+const DEFAULT_OPEN_STREAM: &str = "stream:arrival=poisson,rate=220,queue=8";
+
 /// `hetsched bench stream`: streaming multi-DAG sessions across the
-/// policy matrix. Reports plan-cache amortization (repeat-submission
-/// plan_ns ≈ 0), per-policy stream makespans, and the windowed-gp vs
-/// one-shot-gp comparison on the phased workload; emits
+/// policy matrix — closed-loop scenarios (plan-cache amortization,
+/// windowed-gp vs one-shot-gp on the phased workload) plus open-system
+/// scenarios (Poisson arrivals, concurrent in-flight jobs, sojourn
+/// percentiles, throughput); emits
 /// `bench_results/BENCH_sched_session.json`.
 fn cmd_bench_stream(args: &Args) -> Result<()> {
     let jobs = args.flag_usize("jobs", 8)?;
     let window = args.flag_usize("window", 12)?;
     let size = args.flag_u32("size", 1024)?;
+    let open_jobs = args.flag_usize("open-jobs", 24)?;
+    // Scenario resolution: --stream flag > config-file [run] stream >
+    // the mirror-tuned default.
+    let open_stream = match args.flag("stream") {
+        Some(spec) => StreamConfig::from_spec(spec)?,
+        None if args.flag("config").is_some() => build_config(args)?.stream,
+        None => StreamConfig::from_spec(DEFAULT_OPEN_STREAM)?,
+    };
+    let stream_spec = open_stream.spec_string();
     let platform = Platform::paper();
     let model = CalibratedModel::paper();
     benchkit::preamble("sched_session — streaming multi-DAG sessions", &platform);
 
-    // Scenario streams: repeated identical jobs (cache amortization) and
-    // the two-phase workload (windowed replanning headline). The phased
-    // stream is pinned at size 256 — the regime where the two phases'
-    // Formula (1) ratios diverge strongly while per-task misassignment
-    // penalties stay small, which is where frontier replanning pays.
+    // Closed scenario streams: repeated identical jobs (cache
+    // amortization) and the two-phase workload (windowed replanning
+    // headline). The phased stream is pinned at size 256 — the regime
+    // where the two phases' Formula (1) ratios diverge strongly while
+    // per-task misassignment penalties stay small, which is where
+    // frontier replanning pays. Open scenarios run the same phased jobs
+    // (and a mixed-shape job stream) through the shared-machine engine
+    // under the arrival process.
     let repeat_mm: Vec<_> = (0..jobs)
         .map(|_| generate_layered(&GeneratorConfig::paper(KernelKind::Mm, size)))
         .collect();
@@ -277,8 +295,16 @@ fn cmd_bench_stream(args: &Args) -> Result<()> {
         .map(|_| generate_layered(&GeneratorConfig::paper(KernelKind::Ma, size)))
         .collect();
     let phased: Vec<_> = (0..jobs.min(4)).map(|_| workloads::phased(8, 4, 256)).collect();
-    let scenarios: [(&str, &[hetsched::dag::Dag]); 3] =
-        [("repeat-mm", &repeat_mm), ("repeat-ma", &repeat_ma), ("phased", &phased)];
+    let open_phased: Vec<_> = (0..open_jobs).map(|_| workloads::phased(8, 4, 256)).collect();
+    let open_mix = workloads::job_mix(open_jobs, 256, 2015);
+    let closed = StreamConfig::closed();
+    let scenarios: [(&str, &[hetsched::dag::Dag], &StreamConfig); 5] = [
+        ("repeat-mm", &repeat_mm, &closed),
+        ("repeat-ma", &repeat_ma, &closed),
+        ("phased", &phased, &closed),
+        ("open-poisson", &open_phased, &open_stream),
+        ("open-mix", &open_mix, &open_stream),
+    ];
 
     let specs: Vec<String> = vec![
         "eager".into(),
@@ -289,7 +315,7 @@ fn cmd_bench_stream(args: &Args) -> Result<()> {
     ];
 
     let registry = SchedulerRegistry::builtin();
-    let mut rows: Vec<(String, String, SessionReport)> = Vec::new();
+    let mut rows: Vec<(String, String, String, SessionReport)> = Vec::new();
     // Per-row job counts are authoritative (the phased stream is capped
     // at 4 jobs regardless of --jobs); the title carries only the size.
     let mut table = Table::new(
@@ -299,38 +325,68 @@ fn cmd_bench_stream(args: &Args) -> Result<()> {
             "repeat_plan_ms", "hit%",
         ],
     );
-    for (scenario, dags) in scenarios {
+    let mut open_table = Table::new(
+        format!("open-system sessions ({stream_spec})"),
+        &[
+            "scenario", "policy", "jobs", "span_ms", "p50_ms", "p95_ms", "p99_ms",
+            "qdelay_ms", "jobs/s", "maxconc",
+        ],
+    );
+    for (scenario, dags, stream) in scenarios {
         for spec in &specs {
             let mut scheduler = registry.create(spec)?;
             let mut cache = PlanCache::new();
-            let session = simulate_stream(
+            let session = simulate_open(
                 dags,
                 scheduler.as_mut(),
                 &platform,
                 &model,
                 &SimConfig::default(),
+                stream,
                 &mut cache,
             );
-            table.row(vec![
+            if stream.arrival == hetsched::sim::ArrivalProcess::Closed {
+                table.row(vec![
+                    scenario.to_string(),
+                    spec.clone(),
+                    session.job_count().to_string(),
+                    fmt_ms(session.makespan_ms),
+                    session.ledger.count.to_string(),
+                    fmt_ms(session.plan_ns as f64 / 1e6),
+                    fmt_ms(session.repeat_plan_ns() as f64 / 1e6),
+                    format!("{:.0}", session.hit_rate() * 100.0),
+                ]);
+            } else {
+                open_table.row(vec![
+                    scenario.to_string(),
+                    spec.clone(),
+                    session.job_count().to_string(),
+                    fmt_ms(session.span_ms),
+                    fmt_ms(session.p50_sojourn_ms()),
+                    fmt_ms(session.p95_sojourn_ms()),
+                    fmt_ms(session.p99_sojourn_ms()),
+                    fmt_ms(session.mean_queueing_delay_ms()),
+                    format!("{:.1}", session.throughput_jps()),
+                    session.max_concurrent_jobs().to_string(),
+                ]);
+            }
+            rows.push((
                 scenario.to_string(),
                 spec.clone(),
-                session.job_count().to_string(),
-                fmt_ms(session.makespan_ms),
-                session.ledger.count.to_string(),
-                fmt_ms(session.plan_ns as f64 / 1e6),
-                fmt_ms(session.repeat_plan_ns() as f64 / 1e6),
-                format!("{:.0}", session.hit_rate() * 100.0),
-            ]);
-            rows.push((scenario.to_string(), spec.clone(), session));
+                stream.spec_string(),
+                session,
+            ));
         }
     }
     println!("{}", table.render());
+    println!("{}", open_table.render());
 
     let find = |s: &str, p: &str| {
-        rows.iter().find(|(sc, sp, _)| sc == s && sp == p).map(|(_, _, r)| r)
+        rows.iter().find(|(sc, sp, _, _)| sc == s && sp == p).map(|(_, _, _, r)| r)
     };
+    let windowed_spec = format!("gp:window={window}");
     if let (Some(one_shot), Some(windowed)) =
-        (find("phased", "gp"), find("phased", &format!("gp:window={window}")))
+        (find("phased", "gp"), find("phased", &windowed_spec))
     {
         let gain = (one_shot.makespan_ms - windowed.makespan_ms) / one_shot.makespan_ms;
         println!(
@@ -340,43 +396,78 @@ fn cmd_bench_stream(args: &Args) -> Result<()> {
             -gain * 100.0
         );
     }
+    if let (Some(one_shot), Some(windowed)) =
+        (find("open-poisson", "gp"), find("open-poisson", &windowed_spec))
+    {
+        let gain = (one_shot.mean_sojourn_ms() - windowed.mean_sojourn_ms())
+            / one_shot.mean_sojourn_ms();
+        println!(
+            "open poisson stream: per-job gp mean sojourn {} ms vs cross-job gp:window={window} \
+             {} ms ({:+.1}% sojourn)",
+            fmt_ms(one_shot.mean_sojourn_ms()),
+            fmt_ms(windowed.mean_sojourn_ms()),
+            -gain * 100.0
+        );
+    }
 
-    let json = render_session_json(jobs, window, size, "cargo-run", &rows);
+    let json = render_session_json(jobs, window, size, "cargo-run", &platform, &rows);
     let path = benchkit::save_bench_json("sched_session", &json)?;
     println!("json written to {}", path.display());
     Ok(())
 }
 
-/// Render the `BENCH_sched_session.json` document.
+/// Render the `BENCH_sched_session.json` document. Every row carries
+/// the queueing report (percentiles, throughput, utilization) — the
+/// schema `python/tools/validate_bench.py` checks in CI.
 fn render_session_json(
     jobs: usize,
     window: usize,
     size: u32,
     harness: &str,
-    rows: &[(String, String, SessionReport)],
+    platform: &Platform,
+    rows: &[(String, String, String, SessionReport)],
 ) -> String {
     use std::fmt::Write as _;
+    let workers: Vec<usize> = platform.devices.iter().map(|d| d.workers).collect();
     let mut s = String::new();
     s.push_str("{\n  \"bench\": \"sched_session\",\n");
     let _ = writeln!(s, "  \"harness\": \"{harness}\",");
     let _ = writeln!(s, "  \"requested_jobs\": {jobs},");
     let _ = writeln!(s, "  \"window\": {window},\n  \"size\": {size},");
     s.push_str("  \"rows\": [\n");
-    for (i, (scenario, policy, r)) in rows.iter().enumerate() {
+    for (i, (scenario, policy, stream, r)) in rows.iter().enumerate() {
+        let util = r
+            .device_utilization(&workers)
+            .iter()
+            .map(|u| format!("{u:.4}"))
+            .collect::<Vec<_>>()
+            .join(", ");
         let _ = writeln!(
             s,
-            "    {{\"scenario\": \"{scenario}\", \"policy\": \"{policy}\", \"jobs\": {}, \
-             \"makespan_ms\": {:.6}, \"transfers\": {}, \"plan_ns\": {}, \
+            "    {{\"scenario\": \"{scenario}\", \"policy\": \"{policy}\", \
+             \"stream\": \"{stream}\", \"jobs\": {}, \
+             \"makespan_ms\": {:.6}, \"span_ms\": {:.6}, \"transfers\": {}, \"plan_ns\": {}, \
              \"first_plan_ns\": {}, \"repeat_plan_ns\": {}, \"cache_hit_rate\": {:.4}, \
-             \"decision_ns\": {}}}{}",
+             \"decision_ns\": {}, \"p50_sojourn_ms\": {:.6}, \"p95_sojourn_ms\": {:.6}, \
+             \"p99_sojourn_ms\": {:.6}, \"mean_sojourn_ms\": {:.6}, \
+             \"mean_queue_delay_ms\": {:.6}, \"throughput_jps\": {:.6}, \
+             \"max_concurrent_jobs\": {}, \"utilization\": [{util}]}}{}",
             r.job_count(),
             r.makespan_ms,
+            r.span_ms,
             r.ledger.count,
             r.plan_ns,
             r.jobs.first().map(|j| j.plan_ns).unwrap_or(0),
             r.repeat_plan_ns(),
             r.hit_rate(),
             r.decision_ns,
+            r.p50_sojourn_ms(),
+            r.p95_sojourn_ms(),
+            r.p99_sojourn_ms(),
+            r.mean_sojourn_ms(),
+            r.mean_queueing_delay_ms(),
+            r.throughput_jps(),
+            r.max_concurrent_jobs(),
             if i + 1 == rows.len() { "" } else { "," }
         );
     }

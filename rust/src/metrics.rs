@@ -24,13 +24,15 @@ pub fn chrome_trace(report: &RunReport, platform: &Platform) -> String {
         let dev = &platform.devices[ev.device];
         let _ = write!(
             s,
-            r#"  {{"name": "task{}", "cat": "kernel", "ph": "X", "ts": {:.3}, "dur": {:.3}, "pid": {}, "tid": {}, "args": {{"device": "{}"}}}}"#,
+            r#"  {{"name": "j{}.task{}", "cat": "kernel", "ph": "X", "ts": {:.3}, "dur": {:.3}, "pid": {}, "tid": {}, "args": {{"device": "{}", "job": {}}}}}"#,
+            ev.job,
             ev.task,
             ev.start_ms * 1000.0,
             (ev.end_ms - ev.start_ms) * 1000.0,
             ev.device,
             ev.worker,
             json::escape(&dev.name),
+            ev.job,
         );
     }
     s.push_str("\n]\n");

@@ -30,6 +30,20 @@
 //! per-level cost is one filtered adjacency sweep instead of an O(E)
 //! allocation + copy.
 //!
+//! # Parallel recursive bisection
+//!
+//! Every node of the bisection recursion draws from its own derived
+//! PCG32 stream keyed by `(seed, part_base, k)` instead of threading one
+//! generator depth-first through the tree. Child bisections are
+//! therefore order-independent, and for `k >= 4` (both children
+//! non-trivial) with large sides the two recursions fork onto scoped
+//! `std::thread`s, each with a fresh [`PartitionWorkspace`] — with
+//! results bit-identical to the sequential path
+//! (`PartitionConfig::parallel = false`), asserted on the seed corpus by
+//! the parity tests. rayon is unavailable offline; plain scoped threads
+//! at the top levels capture most of the win since work halves per
+//! level.
+//!
 //! # Workspace reuse
 //!
 //! All scratch state lives in [`PartitionWorkspace`]: coarsening scatter
@@ -89,6 +103,13 @@ pub struct PartitionConfig {
     /// paper's zero-weight "empty kernel" — and hence all initial data —
     /// on the host partition.
     pub fixed: Option<Vec<i32>>,
+    /// Fork independent child bisections onto scoped threads at the top
+    /// recursion levels (`k >= 4`, both sides large). Results are
+    /// bit-identical to the sequential path because every recursion node
+    /// draws from its own derived PCG32 stream (`child_rng`) and
+    /// workspaces carry no information; disable only to keep the whole
+    /// pipeline on one thread (e.g. when the caller manages threading).
+    pub parallel: bool,
 }
 
 impl Default for PartitionConfig {
@@ -102,6 +123,7 @@ impl Default for PartitionConfig {
             initial_tries: 8,
             refine_passes: 4,
             fixed: None,
+            parallel: true,
         }
     }
 }
@@ -249,6 +271,23 @@ fn finish(
     PartitionResult { parts, edge_cut, part_weights }
 }
 
+/// Stream id of the PCG32 that drives the recursion node covering parts
+/// `[part_base, part_base + k)`. Deriving a fresh stream per node (rather
+/// than threading one generator through the whole recursion) makes the
+/// left/right child bisections order-independent, which is what lets
+/// [`recursive_bisect`] fork them onto scoped threads with bit-identical
+/// results. `(part_base, k)` uniquely identifies a node of the recursion
+/// tree. Mirrored by `python/tools/partition_mirror.py::child_rng`.
+const CHILD_STREAM: u64 = 0x9E37_79B9;
+
+fn child_rng(seed: u64, part_base: usize, k: usize) -> Pcg32 {
+    Pcg32::new(seed, CHILD_STREAM ^ ((part_base as u64 & 0xFFFF_FFFF) << 16) ^ k as u64)
+}
+
+/// Minimum vertices on *both* sides before a child fork pays for the
+/// thread spawn and the fresh workspace.
+const PAR_MIN_SIDE: usize = 512;
+
 /// Recursively bisect the vertex subset `vs` over `targets[part_base..]`.
 #[allow(clippy::too_many_arguments)]
 fn recursive_bisect(
@@ -321,8 +360,53 @@ fn recursive_bisect(
     // Renormalize child target vectors.
     let lt: Vec<f64> = targets[..k_left].iter().map(|x| x / t_left.max(1e-12)).collect();
     let rt: Vec<f64> = targets[k_left..].iter().map(|x| x / t_right.max(1e-12)).collect();
-    recursive_bisect(g, &left, &lt, part_base, fixed, cfg, rng, parts, remap, ws);
-    recursive_bisect(g, &right, &rt, part_base + k_left, fixed, cfg, rng, parts, remap, ws);
+    // Each child draws from its own derived stream (never from `rng`,
+    // which only feeds this level's bisect), so the two recursions are
+    // independent and may run concurrently with identical results.
+    let k_right = k - k_left;
+    if cfg.parallel
+        && k_left >= 2
+        && k_right >= 2
+        && left.len().min(right.len()) >= PAR_MIN_SIDE
+    {
+        let n = g.vertex_count();
+        let (lp, rp) = std::thread::scope(|scope| {
+            let (left_ref, lt_ref) = (&left, &lt);
+            let handle = scope.spawn(move || {
+                let mut lws = PartitionWorkspace::new();
+                let mut lparts = vec![0usize; n];
+                let mut lremap = vec![u32::MAX; n];
+                let mut lrng = child_rng(cfg.seed, part_base, k_left);
+                recursive_bisect(
+                    g, left_ref, lt_ref, part_base, fixed, cfg, &mut lrng, &mut lparts,
+                    &mut lremap, &mut lws,
+                );
+                lparts
+            });
+            let mut rws = PartitionWorkspace::new();
+            let mut rparts = vec![0usize; n];
+            let mut rremap = vec![u32::MAX; n];
+            let mut rrng = child_rng(cfg.seed, part_base + k_left, k_right);
+            recursive_bisect(
+                g, &right, &rt, part_base + k_left, fixed, cfg, &mut rrng, &mut rparts,
+                &mut rremap, &mut rws,
+            );
+            (handle.join().expect("left bisection thread panicked"), rparts)
+        });
+        for &v in &left {
+            parts[v] = lp[v];
+        }
+        for &v in &right {
+            parts[v] = rp[v];
+        }
+    } else {
+        let mut lrng = child_rng(cfg.seed, part_base, k_left);
+        recursive_bisect(g, &left, &lt, part_base, fixed, cfg, &mut lrng, parts, remap, ws);
+        let mut rrng = child_rng(cfg.seed, part_base + k_left, k_right);
+        recursive_bisect(
+            g, &right, &rt, part_base + k_left, fixed, cfg, &mut rrng, parts, remap, ws,
+        );
+    }
 }
 
 /// Multilevel bisection of `g` with part-0 target fraction `frac0`, using
@@ -594,6 +678,62 @@ mod tests {
         assert!(phases.contains(&"initial"));
         ws.timer.clear();
         assert_eq!(ws.timer.entries().len(), 0);
+    }
+
+    /// Ring of `c` cliques of `sz` unit-weight vertices (generalizes the
+    /// four-clique corpus graph to sizes that cross `PAR_MIN_SIDE`).
+    fn clique_ring(c: usize, sz: usize) -> MetisGraph {
+        let n = c * sz;
+        let mut adj = vec![Vec::new(); n];
+        for q in 0..c {
+            for i in 0..sz {
+                for j in 0..sz {
+                    if i != j {
+                        adj[q * sz + i].push((q * sz + j, 20));
+                    }
+                }
+            }
+        }
+        for q in 0..c {
+            let a = q * sz;
+            let b = ((q + 1) % c) * sz;
+            adj[a].push((b, 1));
+            adj[b].push((a, 1));
+        }
+        MetisGraph::from_adj(vec![1; n], adj)
+    }
+
+    #[test]
+    fn parallel_bisection_matches_sequential() {
+        // Above PAR_MIN_SIDE on both sides, k=4 forks the child
+        // bisections onto threads; the cuts must be bit-identical to the
+        // sequential path (derived per-node RNG streams + workspace
+        // independence make this exact, not approximate).
+        let g = clique_ring(4, 300); // 1200 vertices, ~600 per side
+        for seed in [1u64, 3, 9] {
+            let par = PartitionConfig { k: 4, seed, ..Default::default() };
+            let seq = PartitionConfig { k: 4, seed, parallel: false, ..Default::default() };
+            let a = partition(&g, &par);
+            let b = partition(&g, &seq);
+            assert_eq!(a.parts, b.parts, "seed {seed}: parallel/sequential drift");
+            assert_eq!(a.edge_cut, b.edge_cut, "seed {seed}");
+            assert_eq!(a.part_weights, b.part_weights, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn parallel_bisection_respects_pins_and_targets() {
+        let g = clique_ring(8, 150); // 1200 vertices, k=8 forks two levels
+        let mut fixed = vec![-1i32; 1200];
+        fixed[0] = 7;
+        fixed[1199] = 0;
+        let cfg = PartitionConfig { k: 8, seed: 5, fixed: Some(fixed), ..Default::default() };
+        let a = partition(&g, &cfg);
+        let b = partition(&g, &PartitionConfig { parallel: false, ..cfg.clone() });
+        assert_eq!(a.parts, b.parts);
+        assert_eq!(a.parts[0], 7, "pin must survive the forked recursion");
+        assert_eq!(a.parts[1199], 0);
+        assert!(a.parts.iter().all(|&p| p < 8));
     }
 
     #[test]

@@ -74,6 +74,7 @@ mod tests {
         let platform = Platform::paper();
         let model = CalibratedModel::default();
         let ctx = DispatchCtx {
+            job: 0,
             task: 0,
             kernel,
             size,

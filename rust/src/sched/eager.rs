@@ -63,6 +63,7 @@ mod tests {
         model: &'a CalibratedModel,
     ) -> DispatchCtx<'a> {
         DispatchCtx {
+            job: 0,
             task: 0,
             kernel: KernelKind::Mm,
             size: 1024,

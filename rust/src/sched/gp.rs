@@ -18,8 +18,9 @@
 //!
 //! The pipeline's product is an immutable [`Plan`]
 //! ([`Planner::build_plan`]); [`Scheduler::on_submit`] installs a plan —
-//! freshly built or served from a [`crate::sched::PlanCache`] — before
-//! the engine dispatches.
+//! freshly built or served from a [`crate::sched::PlanCache`] — under the
+//! submitting job's [`JobId`], so many jobs can be pinned and in flight
+//! simultaneously (the open-system engine).
 //!
 //! # Windowed replanning (`GpConfig::window`)
 //!
@@ -27,15 +28,18 @@
 //! same decision for all following tasks" (§IV.D). With `window = W` the
 //! policy attacks exactly that: every `W` task completions
 //! ([`Scheduler::on_task_finish`]) it re-partitions the
-//! not-yet-dispatched frontier, pinning already-dispatched tasks to
-//! their devices (their data is already placed) and recomputing the
-//! Formula (1)/(2) ratios over the *remaining* kernels only. On phased
-//! workloads — e.g. a compute-bound MM stage feeding a bandwidth-bound
-//! MA stage — the aggregate one-shot ratio misallocates both stages,
-//! while the windowed frontier ratio tracks each stage's own device
-//! balance. Weights are snapshotted at submit, so replanning needs no
-//! model access and stays allocation-light through the reused
-//! [`PartitionWorkspace`].
+//! not-yet-dispatched **union frontier of every in-flight job** — one
+//! merged graph holding each admitted job's undispatched vertices plus a
+//! single shared host anchor — pinning already-dispatched tasks to their
+//! devices (their data is already placed) and recomputing the Formula
+//! (1)/(2) ratios over the union's *remaining* kernels only. With one
+//! job in flight this degenerates to PR 2's per-job frontier replan
+//! bit-for-bit; with several, the partitioner balances the devices
+//! across job boundaries — e.g. a fresh job's compute-bound stage is
+//! weighed against an old job's draining bandwidth-bound tail, which a
+//! per-job plan cannot see. Weights are snapshotted at submit, so
+//! replanning needs no model access and stays allocation-light through
+//! the reused [`PartitionWorkspace`].
 //!
 //! Windowed decisions depend on *when* `on_task_finish` fires: the
 //! simulator delivers completions in dispatch order, the real engine in
@@ -45,7 +49,7 @@
 
 use std::sync::Arc;
 
-use super::{plan, DispatchCtx, Plan, Planner, Scheduler};
+use super::{plan, DispatchCtx, JobId, Plan, Planner, Scheduler};
 use crate::dag::metis_io::{dag_to_builder, CsrBuilder};
 use crate::dag::{Dag, KernelKind, NodeId};
 use crate::partition::{partition_with, PartitionConfig, PartitionResult, PartitionWorkspace};
@@ -63,8 +67,8 @@ pub struct GpConfig {
     pub epsilon: f64,
     /// Partitioner seed.
     pub seed: u64,
-    /// Re-partition the undispatched frontier every `window` completions
-    /// (`None` = the paper's one-shot §IV.D behavior).
+    /// Re-partition the undispatched union frontier every `window`
+    /// completions (`None` = the paper's one-shot §IV.D behavior).
     pub window: Option<usize>,
 }
 
@@ -91,18 +95,32 @@ struct FrontierState {
     k: usize,
 }
 
+/// Per-job policy state, indexed by [`JobId`].
+#[derive(Debug, Clone, Default)]
+struct JobState {
+    /// In flight (admitted, not yet drained)? Drained jobs keep their
+    /// pin table for inspection but leave the union frontier.
+    active: bool,
+    /// Pinned device per node.
+    parts: Vec<DeviceId>,
+    /// Dispatch bitmap (windowed mode only).
+    dispatched: Vec<bool>,
+    /// Weight snapshot (windowed mode only).
+    frontier: FrontierState,
+}
+
 /// Offline graph-partition scheduler.
 pub struct GraphPartition {
     config: GpConfig,
-    parts: Vec<DeviceId>,
+    /// Per-job state; grows with submissions, entries retire on drain.
+    jobs: Vec<JobState>,
+    /// Most recently submitted job (target of the inspection accessors).
+    current: usize,
     last_result: Option<PartitionResult>,
     ratios: Vec<f64>,
     /// Partitioner scratch, reused across plans and replans (replanning a
     /// stream of DAGs allocates nothing once buffers are warm).
     workspace: PartitionWorkspace,
-    // --- windowed-replanning state (empty in one-shot mode) ---
-    frontier: FrontierState,
-    dispatched: Vec<bool>,
     finishes_since_replan: usize,
     replans: u64,
 }
@@ -111,20 +129,25 @@ impl GraphPartition {
     pub fn new(config: GpConfig) -> GraphPartition {
         GraphPartition {
             config,
-            parts: Vec::new(),
+            jobs: Vec::new(),
+            current: 0,
             last_result: None,
             ratios: Vec::new(),
             workspace: PartitionWorkspace::new(),
-            frontier: FrontierState::default(),
-            dispatched: Vec::new(),
             finishes_since_replan: 0,
             replans: 0,
         }
     }
 
-    /// The pinned device per node (valid after a plan is installed).
+    /// The pinned device per node of the most recently submitted job
+    /// (valid after a plan is installed).
     pub fn parts(&self) -> &[DeviceId] {
-        &self.parts
+        self.jobs.get(self.current).map(|j| j.parts.as_slice()).unwrap_or(&[])
+    }
+
+    /// Pin table of one specific job (empty if never submitted).
+    pub fn job_parts(&self, job: JobId) -> &[DeviceId] {
+        self.jobs.get(job).map(|j| j.parts.as_slice()).unwrap_or(&[])
     }
 
     /// Partition quality of the last (re)plan.
@@ -137,18 +160,20 @@ impl GraphPartition {
         &self.ratios
     }
 
-    /// Number of windowed replans performed since the last submit.
+    /// Number of windowed replans performed since the system last went
+    /// idle (the counter survives admissions that interleave with
+    /// in-flight completions).
     pub fn replans(&self) -> u64 {
         self.replans
     }
 
-    /// Build a plan and install it in one step — the offline-tool path
-    /// (`hetsched partition`, examples, tests). Engines instead pair
-    /// [`Planner::build_plan`] (or a cache hit) with
-    /// [`Scheduler::on_submit`].
+    /// Build a plan and install it (as job 0) in one step — the
+    /// offline-tool path (`hetsched partition`, examples, tests).
+    /// Engines instead pair [`Planner::build_plan`] (or a cache hit)
+    /// with [`Scheduler::on_submit`].
     pub fn plan_now(&mut self, dag: &Dag, platform: &Platform, model: &dyn PerfModel) -> Arc<Plan> {
         let plan = Arc::new(self.build_plan(dag, platform, model));
-        self.on_submit(dag, &plan, platform, model);
+        self.on_submit(0, dag, &plan, platform, model);
         plan
     }
 
@@ -219,16 +244,15 @@ impl GraphPartition {
         builder
     }
 
-    /// Partition the builder's graph with `fixed` pins and `ratios`
-    /// targets; installs `parts`/`last_result`/`ratios`.
+    /// Partition `builder`'s graph with `fixed` pins and `ratios`
+    /// targets, updating the inspection state; returns the result.
     fn run_partition(
         &mut self,
         builder: CsrBuilder,
-        n: usize,
         k: usize,
         fixed: Vec<i32>,
         ratios: Vec<f64>,
-    ) {
+    ) -> PartitionResult {
         let metis = builder.build();
         let cfg = PartitionConfig {
             k,
@@ -239,36 +263,46 @@ impl GraphPartition {
             ..Default::default()
         };
         let result = partition_with(&metis, &cfg, &mut self.workspace);
-        self.parts = result.parts[..n].to_vec();
         self.ratios = ratios;
-        self.last_result = Some(result);
+        self.last_result = Some(result.clone());
+        result
     }
 
-    /// Windowed replan: re-partition the undispatched frontier with
-    /// dispatched tasks pinned to their devices and ratios recomputed
-    /// over the remaining kernels.
+    /// Windowed replan: re-partition the undispatched **union frontier**
+    /// of every in-flight job — their vertices concatenated in job-id
+    /// order plus one shared host anchor — with dispatched tasks pinned
+    /// to their devices and ratios recomputed over the union's remaining
+    /// kernels. With a single in-flight job this is exactly the per-job
+    /// frontier replan.
     ///
     /// Balance semantics (deliberate): the ratio vector comes from the
     /// *remaining* work, but each part's balance target still spans the
     /// *total* snapshot weight, with pinned (dispatched) weight counting
-    /// toward its part. A device that the aggregate plan starved
+    /// toward its part. A device that the aggregate plans starved
     /// therefore receives more than its proportional share of the
     /// frontier — mirror-measured to beat both one-shot gp and the
     /// remaining-weight-only alternative (which re-creates Formula (1)'s
     /// blindness to idle multi-worker devices) on the phased workload.
     fn replan_frontier(&mut self) {
-        let f = &self.frontier;
-        let n = f.node_w.len();
-        let k = f.k;
+        let active: Vec<usize> =
+            (0..self.jobs.len()).filter(|&j| self.jobs[j].active).collect();
+        let Some(&first) = active.first() else { return };
+        let k = self.jobs[first].frontier.k;
+
+        // Union remaining-work ratios.
         let mut totals = vec![0.0f64; k];
         let mut remaining = 0usize;
-        for v in 0..n {
-            if !f.real[v] || self.dispatched[v] {
-                continue;
-            }
-            remaining += 1;
-            for (d, t) in totals.iter_mut().enumerate() {
-                *t += f.dev_time[v * k + d];
+        for &j in &active {
+            let s = &self.jobs[j];
+            let f = &s.frontier;
+            for v in 0..f.node_w.len() {
+                if !f.real[v] || s.dispatched[v] {
+                    continue;
+                }
+                remaining += 1;
+                for (d, t) in totals.iter_mut().enumerate() {
+                    *t += f.dev_time[v * k + d];
+                }
             }
         }
         if remaining == 0 {
@@ -276,28 +310,51 @@ impl GraphPartition {
         }
         let ratios = ratios_from_totals(&totals);
 
-        let mut builder = CsrBuilder::with_capacity(n, f.edges.len() + n);
-        for (v, &w) in f.node_w.iter().enumerate() {
-            builder.set_vertex_weight(v, w);
+        // Merged graph: each job's vertices at its offset, one anchor.
+        let total_n: usize = active.iter().map(|&j| self.jobs[j].frontier.node_w.len()).sum();
+        let total_m: usize =
+            active.iter().map(|&j| self.jobs[j].frontier.edges.len()).sum::<usize>() + total_n;
+        let mut builder = CsrBuilder::with_capacity(total_n, total_m);
+        let mut offsets = Vec::with_capacity(active.len());
+        let mut base = 0usize;
+        for &j in &active {
+            offsets.push(base);
+            for (v, &w) in self.jobs[j].frontier.node_w.iter().enumerate() {
+                builder.set_vertex_weight(base + v, w);
+            }
+            base += self.jobs[j].frontier.node_w.len();
         }
         let anchor = builder.add_vertex(0);
-        for v in 0..n {
-            if f.anchor_w[v] > 0 {
-                builder.add_edge(anchor, v, f.anchor_w[v]);
+        for (&j, &off) in active.iter().zip(&offsets) {
+            let f = &self.jobs[j].frontier;
+            for v in 0..f.node_w.len() {
+                if f.anchor_w[v] > 0 {
+                    builder.add_edge(anchor, off + v, f.anchor_w[v]);
+                }
             }
         }
-        for &(u, v, w) in &f.edges {
-            builder.add_edge(u as usize, v as usize, w);
+        for (&j, &off) in active.iter().zip(&offsets) {
+            for &(u, v, w) in &self.jobs[j].frontier.edges {
+                builder.add_edge(off + u as usize, off + v as usize, w);
+            }
         }
 
-        let mut fixed = vec![-1i32; n + 1];
+        let mut fixed = vec![-1i32; total_n + 1];
         fixed[anchor] = 0; // host partition = device 0's memory node
-        for v in 0..n {
-            if self.dispatched[v] {
-                fixed[v] = self.parts[v] as i32;
+        for (&j, &off) in active.iter().zip(&offsets) {
+            let s = &self.jobs[j];
+            for v in 0..s.dispatched.len() {
+                if s.dispatched[v] {
+                    fixed[off + v] = s.parts[v] as i32;
+                }
             }
         }
-        self.run_partition(builder, n, k, fixed, ratios);
+
+        let result = self.run_partition(builder, k, fixed, ratios);
+        for (&j, &off) in active.iter().zip(&offsets) {
+            let n = self.jobs[j].frontier.node_w.len();
+            self.jobs[j].parts = result.parts[off..off + n].to_vec();
+        }
         self.replans += 1;
     }
 }
@@ -318,10 +375,10 @@ impl Planner for GraphPartition {
         let mut fixed = vec![-1i32; n + 1];
         fixed[n] = 0; // host anchor
         let ratios = Self::aggregate_ratios(dag, platform, model);
-        self.run_partition(builder, n, k, fixed, ratios);
+        let result = self.run_partition(builder, k, fixed, ratios);
         Plan {
             policy: self.name(),
-            pins: self.parts.clone(),
+            pins: result.parts[..n].to_vec(),
             ratios: self.ratios.clone(),
             quality: self.last_result.clone(),
             cost_ns: t0.elapsed().as_nanos() as u64,
@@ -353,16 +410,32 @@ impl Scheduler for GraphPartition {
 
     fn on_submit(
         &mut self,
+        job: JobId,
         dag: &Dag,
         plan: &Arc<Plan>,
         platform: &Platform,
         model: &dyn PerfModel,
     ) {
-        self.parts = plan.pins.clone();
-        self.ratios = plan.ratios.clone();
+        if self.jobs.len() <= job {
+            self.jobs.resize_with(job + 1, JobState::default);
+        }
+        self.current = job;
+        // Reset the window counter only when the system was idle: under
+        // sustained arrivals an admission must not starve the replan
+        // cadence of the jobs already in flight (a reset per admission
+        // would silently degenerate gp:window to one-shot gp whenever
+        // jobs arrive more often than every `window` completions).
+        if !self.jobs.iter().any(|s| s.active) {
+            self.replans = 0;
+            self.finishes_since_replan = 0;
+        }
         self.last_result = plan.quality.clone();
-        self.replans = 0;
-        self.finishes_since_replan = 0;
+        self.ratios = plan.ratios.clone();
+        let state = &mut self.jobs[job];
+        state.active = true;
+        state.parts = plan.pins.clone();
+        state.dispatched = vec![false; dag.node_count()];
+        state.frontier = FrontierState::default();
         if self.config.window.is_none() {
             return;
         }
@@ -385,19 +458,19 @@ impl Scheduler for GraphPartition {
             .edges()
             .map(|(_, e)| (e.src as u32, e.dst as u32, edge_weight_us(model, e.bytes).max(1)))
             .collect();
-        self.frontier = FrontierState { node_w, anchor_w, edges, dev_time, real, k };
-        self.dispatched = vec![false; n];
+        self.jobs[job].frontier = FrontierState { node_w, anchor_w, edges, dev_time, real, k };
     }
 
     fn select(&mut self, ctx: &DispatchCtx) -> DeviceId {
         // Pure table lookup: the singular offline decision, amortized.
+        let state = &mut self.jobs[ctx.job];
         if self.config.window.is_some() {
-            self.dispatched[ctx.task] = true;
+            state.dispatched[ctx.task] = true;
         }
-        self.parts[ctx.task]
+        state.parts[ctx.task]
     }
 
-    fn on_task_finish(&mut self, _task: NodeId, _dev: DeviceId, _finish_ms: f64) {
+    fn on_task_finish(&mut self, _job: JobId, _task: NodeId, _dev: DeviceId, _finish_ms: f64) {
         let Some(window) = self.config.window else { return };
         self.finishes_since_replan += 1;
         if self.finishes_since_replan >= window {
@@ -406,8 +479,18 @@ impl Scheduler for GraphPartition {
         }
     }
 
+    fn on_job_drain(&mut self, job: JobId) {
+        // Retire the job from the union frontier; keep the pin table so
+        // inspection accessors stay valid after a run.
+        if let Some(state) = self.jobs.get_mut(job) {
+            state.active = false;
+            state.dispatched = Vec::new();
+            state.frontier = FrontierState::default();
+        }
+    }
+
     fn is_offline(&self) -> bool {
-        // Windowed gp revises its table while the job runs.
+        // Windowed gp revises its table while jobs run.
         self.config.window.is_none()
     }
 }
@@ -469,6 +552,7 @@ mod tests {
         for task in 0..parts.len() {
             let free = [999.0, 0.0];
             let ctx = DispatchCtx {
+                job: 0,
                 task,
                 kernel: KernelKind::Ma,
                 size: 1024,
@@ -534,8 +618,42 @@ mod tests {
         // Installing the same plan into a fresh instance reproduces the
         // pinning without running the partitioner.
         let mut fresh = GraphPartition::new(GpConfig::default());
-        fresh.on_submit(&dag, &plan, &platform, &model);
+        fresh.on_submit(0, &dag, &plan, &platform, &model);
         assert_eq!(fresh.parts(), gp.parts());
+    }
+
+    #[test]
+    fn per_job_pins_are_independent() {
+        // Two concurrently submitted jobs keep separate tables; select
+        // routes through the ctx's job id.
+        let platform = Platform::paper();
+        let model = CalibratedModel::default();
+        let a = generate_layered(&GeneratorConfig::paper(KernelKind::Mm, 2048));
+        let b = generate_layered(&GeneratorConfig::paper(KernelKind::Ma, 2048));
+        let mut gp = GraphPartition::new(GpConfig::default());
+        let plan_a = Arc::new(gp.build_plan(&a, &platform, &model));
+        let plan_b = Arc::new(gp.build_plan(&b, &platform, &model));
+        gp.on_submit(0, &a, &plan_a, &platform, &model);
+        gp.on_submit(1, &b, &plan_b, &platform, &model);
+        assert_eq!(gp.job_parts(0), plan_a.pins.as_slice());
+        assert_eq!(gp.job_parts(1), plan_b.pins.as_slice());
+        let free = [0.0, 0.0];
+        for task in 0..a.node_count() {
+            let ctx = DispatchCtx {
+                job: 0,
+                task,
+                kernel: KernelKind::Mm,
+                size: 2048,
+                ready_ms: 0.0,
+                device_free_ms: &free,
+                inputs: &[],
+                platform: &platform,
+                model: &model,
+            };
+            assert_eq!(gp.select(&ctx), plan_a.pins[task], "job 0 must use its own table");
+        }
+        gp.on_job_drain(0);
+        assert_eq!(gp.job_parts(0), plan_a.pins.as_slice(), "pins survive drain");
     }
 
     #[test]
@@ -552,6 +670,7 @@ mod tests {
         let n = dag.node_count();
         for task in 0..n / 2 {
             let ctx = DispatchCtx {
+                job: 0,
                 task,
                 kernel: KernelKind::Ma,
                 size: 1024,
@@ -564,7 +683,7 @@ mod tests {
             let before = gp.parts()[task];
             let got = gp.select(&ctx);
             assert_eq!(got, before, "select must honor the current table");
-            gp.on_task_finish(task, got, 1.0);
+            gp.on_task_finish(0, task, got, 1.0);
         }
         assert_eq!(gp.replans(), (n / 2 / 4) as u64, "one replan per window");
         // Dispatched pins survive every replan.
@@ -572,6 +691,7 @@ mod tests {
             assert!(gp.parts()[task] < platform.device_count());
         }
         assert_eq!(gp.parts().len(), n);
+        gp.on_job_drain(0);
         gp.on_drain();
     }
 
@@ -586,6 +706,7 @@ mod tests {
             let free = [0.0, 0.0];
             for task in 0..12 {
                 let ctx = DispatchCtx {
+                    job: 0,
                     task,
                     kernel: KernelKind::Ma,
                     size: 1024,
@@ -596,10 +717,52 @@ mod tests {
                     model: &model,
                 };
                 let d = gp.select(&ctx);
-                gp.on_task_finish(task, d, 0.0);
+                gp.on_task_finish(0, task, d, 0.0);
             }
             gp.parts().to_vec()
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn union_replan_spans_in_flight_jobs() {
+        // With two phased jobs in flight, a replan must re-pin both
+        // jobs' frontiers (the union graph), keeping dispatched pins.
+        let platform = Platform::paper();
+        let model = CalibratedModel::default();
+        let a = crate::dag::workloads::phased(8, 4, 256);
+        let b = crate::dag::workloads::phased(8, 4, 256);
+        let mut gp = GraphPartition::new(GpConfig { window: Some(6), ..Default::default() });
+        let plan_a = Arc::new(gp.build_plan(&a, &platform, &model));
+        let plan_b = Arc::new(gp.build_plan(&b, &platform, &model));
+        gp.on_submit(0, &a, &plan_a, &platform, &model);
+        gp.on_submit(1, &b, &plan_b, &platform, &model);
+        let free = [0.0, 0.0];
+        // Dispatch + finish 6 tasks of job 0 -> one union replan.
+        for task in 0..6 {
+            let ctx = DispatchCtx {
+                job: 0,
+                task,
+                kernel: KernelKind::Mm,
+                size: 256,
+                ready_ms: 0.0,
+                device_free_ms: &free,
+                inputs: &[],
+                platform: &platform,
+                model: &model,
+            };
+            let d = gp.select(&ctx);
+            gp.on_task_finish(0, task, d, 1.0);
+        }
+        assert_eq!(gp.replans(), 1, "window of 6 -> one replan");
+        // Both jobs still fully pinned to valid devices.
+        assert_eq!(gp.job_parts(0).len(), a.node_count());
+        assert_eq!(gp.job_parts(1).len(), b.node_count());
+        assert!(gp.job_parts(0).iter().all(|&p| p < 2));
+        assert!(gp.job_parts(1).iter().all(|&p| p < 2));
+        // Dispatched tasks of job 0 kept their pins.
+        for task in 0..6 {
+            assert_eq!(gp.job_parts(0)[task], plan_a.pins[task], "dispatched pin moved");
+        }
     }
 }

@@ -13,7 +13,7 @@
 
 use std::sync::Arc;
 
-use super::{DispatchCtx, Plan, Planner, Scheduler};
+use super::{DispatchCtx, JobId, Plan, Planner, Scheduler};
 use crate::dag::{topo, Dag};
 use crate::perfmodel::PerfModel;
 use crate::platform::{DeviceId, Platform};
@@ -74,11 +74,16 @@ impl Scheduler for Heft {
 
     fn on_submit(
         &mut self,
+        _job: JobId,
         dag: &Dag,
         _plan: &Arc<Plan>,
         platform: &Platform,
         model: &dyn PerfModel,
     ) {
+        // Ranks of the most recently admitted job. `select` uses only
+        // the EFT estimator (rank is an ordering hint our
+        // readiness-ordered engines already provide), so concurrent jobs
+        // sharing this buffer cannot change any decision.
         self.compute_ranks(dag, platform, model);
     }
 
@@ -142,6 +147,7 @@ mod tests {
         h.compute_ranks(&dag, &platform, &model);
         let free = [0.0, 0.0];
         let ctx = DispatchCtx {
+            job: 0,
             task: 0,
             kernel: KernelKind::Mm,
             size: 1024,

@@ -1,6 +1,6 @@
 //! Scheduling policies: plans, lifecycle hooks, and the policy registry.
 //!
-//! # The Plan / lifecycle / session model
+//! # The Plan / lifecycle / open-system model
 //!
 //! The crate's central seam is split into three concepts:
 //!
@@ -13,29 +13,42 @@
 //!    identical DAGs into a lookup. Online policies return
 //!    [`Plan::trivial`].
 //!
-//! 2. **Event-driven policy lifecycle** — a [`Scheduler`] observes its
-//!    jobs through hooks, every one defaulted to a no-op:
-//!    * [`Scheduler::on_submit`] — a DAG (with its plan) enters the
-//!      engine; policies install the plan or precompute per-job state;
-//!    * [`Scheduler::select`] — pick the device for one ready task;
-//!    * [`Scheduler::on_task_finish`] — a task completed on a device;
-//!      online policies can finally *observe* completions instead of
-//!      trusting `device_free_ms` snapshots, and windowed gp replans the
-//!      undispatched frontier here (attacking the paper's §IV.D
-//!      single-decision limitation);
-//!    * [`Scheduler::on_drain`] — all submitted work has drained.
+//! 2. **Event-driven, job-tagged policy lifecycle** — engines run an
+//!    *open system*: many jobs can be simultaneously in flight, sharing
+//!    the devices, the bus and the policy, so every lifecycle event
+//!    carries the [`JobId`] it belongs to (dense ids in submission
+//!    order). A [`Scheduler`] observes:
+//!    * [`Scheduler::on_submit`] — job `job` (with its plan) is
+//!      *admitted*; policies install per-job state keyed by the id;
+//!    * [`Scheduler::select`] — pick the device for one ready task; the
+//!      [`DispatchCtx`] names the owning job, and the engine's ready
+//!      frontier merges every admitted job's ready tasks;
+//!    * [`Scheduler::on_task_finish`] — task `task` of job `job`
+//!      completed on a device; windowed gp replans the *union*
+//!      undispatched frontier of all in-flight jobs here (the paper's
+//!      §IV.D replanning, lifted across job boundaries);
+//!    * [`Scheduler::on_job_drain`] — every task of one job has
+//!      completed; policies may retire that job's state;
+//!    * [`Scheduler::on_drain`] — the whole session has drained.
 //!
 //! 3. **Streaming sessions** — [`crate::session::SchedSession`] (and the
-//!    engine entry points [`crate::sim::simulate_stream`],
+//!    engine entry points [`crate::sim::simulate_open`],
+//!    [`crate::sim::simulate_stream`],
 //!    [`crate::coordinator::ExecEngine::run_stream`]) feed a policy a
-//!    *sequence* of DAGs, merge per-job [`crate::sim::RunReport`]s into a
-//!    [`crate::sim::SessionReport`], and amortize planning through the
-//!    shared [`PlanCache`].
+//!    *sequence* of DAGs whose submit times come from an
+//!    [`crate::sim::ArrivalProcess`] (closed-loop back-to-back,
+//!    fixed-rate, Poisson or bursty), admit them through a bounded
+//!    window, merge per-job [`crate::sim::RunReport`]s into a
+//!    [`crate::sim::SessionReport`] carrying queueing metrics (sojourn
+//!    percentiles, queueing delay, throughput), and amortize planning
+//!    through the shared [`PlanCache`].
 //!
 //! Single-DAG behavior is unchanged by the redesign: for every policy,
 //! a fixed-seed run produces the same assignments, transfer ledger and
 //! makespan as the pre-redesign one-shot API (pinned by the golden
-//! tests in `tests/sched_session.rs`).
+//! tests in `tests/sched_session.rs`), and `arrival=closed` streams
+//! through the unified engine reproduce the per-job one-shot reports
+//! exactly (pinned by `tests/open_system.rs`).
 //!
 //! # Policies
 //!
@@ -75,6 +88,11 @@ use crate::dag::{Dag, KernelKind, NodeId};
 use crate::perfmodel::PerfModel;
 use crate::platform::{DeviceId, MemNode, Platform};
 
+/// Identifier of one job within an engine session: dense indices in
+/// submission order (job 0 is the first submitted DAG). Single-job
+/// entry points use job 0 throughout.
+pub type JobId = usize;
+
 /// Location info for one input of a dispatching task.
 #[derive(Debug, Clone, Copy)]
 pub struct InputInfo {
@@ -99,6 +117,8 @@ impl InputInfo {
 
 /// Everything a policy may consult at one dispatch point.
 pub struct DispatchCtx<'a> {
+    /// The job the dispatching task belongs to (0 for single-job runs).
+    pub job: JobId,
     pub task: NodeId,
     pub kernel: KernelKind,
     pub size: u32,
@@ -146,13 +166,15 @@ pub trait Planner: Send {
     fn build_plan(&mut self, dag: &Dag, platform: &Platform, model: &dyn PerfModel) -> Plan;
 }
 
-/// A scheduling policy, driven by engine lifecycle events.
+/// A scheduling policy, driven by job-tagged engine lifecycle events.
 ///
-/// Engines call, in order: [`Planner::build_plan`] (or a [`PlanCache`]
-/// lookup), [`Scheduler::on_submit`] with the resulting plan, then
-/// [`Scheduler::select`] per ready task interleaved with
-/// [`Scheduler::on_task_finish`] per completion, and finally
-/// [`Scheduler::on_drain`] when the job's last task has completed.
+/// Engines call, per job: [`Planner::build_plan`] (or a [`PlanCache`]
+/// lookup), [`Scheduler::on_submit`] with the job id and its plan at
+/// admission, then — interleaved across every in-flight job —
+/// [`Scheduler::select`] per ready task and
+/// [`Scheduler::on_task_finish`] per completion,
+/// [`Scheduler::on_job_drain`] when one job's last task completes, and
+/// finally [`Scheduler::on_drain`] when the whole session has drained.
 pub trait Scheduler: Planner {
     /// Short stable name used in reports ("eager", "dmda", "gp", ...).
     fn name(&self) -> &'static str;
@@ -164,28 +186,38 @@ pub trait Scheduler: Planner {
         plan::fnv1a(self.name().as_bytes())
     }
 
-    /// Lifecycle: `dag` enters an engine with its `plan`. Policies that
-    /// consult a plan install it here; online policies may precompute
-    /// per-job state (e.g. HEFT's upward ranks).
+    /// Lifecycle: job `job` (its `dag` + `plan`) is admitted into an
+    /// engine. Policies that consult a plan install it here under the
+    /// job id; online policies may precompute per-job state (e.g.
+    /// HEFT's upward ranks). Many jobs may be in flight at once, so
+    /// state installed here must not clobber other jobs'.
     fn on_submit(
         &mut self,
+        job: JobId,
         dag: &Dag,
         plan: &Arc<Plan>,
         platform: &Platform,
         model: &dyn PerfModel,
     ) {
-        let _ = (dag, plan, platform, model);
+        let _ = (job, dag, plan, platform, model);
     }
 
-    /// Pick the device for one ready task.
+    /// Pick the device for one ready task (`ctx.job` names its job).
     fn select(&mut self, ctx: &DispatchCtx) -> DeviceId;
 
-    /// Lifecycle: `task` finished on `dev` at engine time `finish_ms`.
-    fn on_task_finish(&mut self, task: NodeId, dev: DeviceId, finish_ms: f64) {
-        let _ = (task, dev, finish_ms);
+    /// Lifecycle: `task` of job `job` finished on `dev` at engine time
+    /// `finish_ms`.
+    fn on_task_finish(&mut self, job: JobId, task: NodeId, dev: DeviceId, finish_ms: f64) {
+        let _ = (job, task, dev, finish_ms);
     }
 
-    /// Lifecycle: every submitted task has completed.
+    /// Lifecycle: every task of job `job` has completed; per-job state
+    /// may be retired.
+    fn on_job_drain(&mut self, job: JobId) {
+        let _ = job;
+    }
+
+    /// Lifecycle: every submitted job has drained.
     fn on_drain(&mut self) {}
 
     /// True for policies whose decisions are fixed before execution.
@@ -235,6 +267,7 @@ mod tests {
         ];
         let free = [0.0, 0.0];
         let ctx = DispatchCtx {
+            job: 0,
             task: 0,
             kernel: KernelKind::Ma,
             size: 512,
@@ -256,6 +289,7 @@ mod tests {
         let inputs: [InputInfo; 0] = [];
         let free = [5.0, 0.0];
         let ctx = DispatchCtx {
+            job: 0,
             task: 0,
             kernel: KernelKind::Mm,
             size: 256,
@@ -301,8 +335,9 @@ mod tests {
         let platform = Platform::paper();
         let model = CalibratedModel::default();
         let plan = Arc::new(s.build_plan(&dag, &platform, &model));
-        s.on_submit(&dag, &plan, &platform, &model);
-        s.on_task_finish(0, 0, 1.0);
+        s.on_submit(0, &dag, &plan, &platform, &model);
+        s.on_task_finish(0, 0, 0, 1.0);
+        s.on_job_drain(0);
         s.on_drain();
         assert!(!s.is_offline());
         assert_eq!(s.fingerprint(), plan::fnv1a(b"fixed"));

@@ -72,6 +72,7 @@ mod tests {
         let model = CalibratedModel::default();
         let free = [0.0, 100.0];
         let ctx = DispatchCtx {
+            job: 0,
             task: 3,
             kernel: KernelKind::Mm,
             size: 512,

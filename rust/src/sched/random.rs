@@ -4,7 +4,7 @@
 
 use std::sync::Arc;
 
-use super::{DispatchCtx, Plan, Planner, Scheduler};
+use super::{DispatchCtx, JobId, Plan, Planner, Scheduler};
 use crate::dag::Dag;
 use crate::perfmodel::PerfModel;
 use crate::platform::{DeviceId, Platform};
@@ -73,6 +73,7 @@ impl Scheduler for RoundRobin {
 
     fn on_submit(
         &mut self,
+        _job: JobId,
         _dag: &Dag,
         _plan: &Arc<Plan>,
         _platform: &Platform,
@@ -101,6 +102,7 @@ mod tests {
         model: &'a CalibratedModel,
     ) -> DispatchCtx<'a> {
         DispatchCtx {
+            job: 0,
             task: 0,
             kernel: KernelKind::Ma,
             size: 64,

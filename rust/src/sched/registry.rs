@@ -23,6 +23,23 @@
 //! a typo must never silently fall back to a default policy. Every
 //! scenario is reachable from a string, so CLI flags, config files and
 //! bench matrices need no recompilation to sweep policy variants.
+//!
+//! # Stream specs
+//!
+//! Open-system *traffic* scenarios use the same `name:key=value,...`
+//! grammar under the reserved name `stream`, parsed by
+//! [`crate::sim::StreamConfig::from_spec`] (not by this registry, which
+//! owns policy names only):
+//!
+//! * `"stream:arrival=closed"` — back-to-back jobs (the default);
+//! * `"stream:arrival=fixed,rate=200"` — one job every 5 ms;
+//! * `"stream:arrival=poisson,rate=120,queue=32,seed=7"` — Poisson
+//!   arrivals at 120 jobs/s through a 32-job admission window;
+//! * `"stream:arrival=bursty,rate=120,burst=4"` — 4-job batches at
+//!   Poisson epochs.
+//!
+//! The same strictness rules apply: unknown keys and keys the chosen
+//! arrival kind does not use are hard errors.
 
 use std::collections::BTreeMap;
 
@@ -41,7 +58,10 @@ pub struct SchedParams {
 }
 
 impl SchedParams {
-    fn parse(src: &str) -> Result<SchedParams> {
+    /// Parse a `key=value{,key=value}` parameter list. Shared by the
+    /// policy builders and [`crate::sim::StreamConfig::from_spec`], so
+    /// every config-string surface has one grammar.
+    pub fn parse(src: &str) -> Result<SchedParams> {
         let mut map = BTreeMap::new();
         for item in src.split(',') {
             let item = item.trim();
@@ -92,7 +112,7 @@ impl SchedParams {
     }
 
     /// Error on any parameter no builder consumed.
-    fn finish(&self) -> Result<()> {
+    pub fn finish(&self) -> Result<()> {
         for k in self.map.keys() {
             if !self.used.iter().any(|u| u == k) {
                 bail!("unknown parameter {k:?}");

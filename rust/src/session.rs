@@ -1,16 +1,30 @@
-//! Streaming scheduling sessions.
+//! Streaming scheduling sessions over the open-system engine.
 //!
 //! A [`SchedSession`] is the long-lived façade the ROADMAP's
 //! heavy-traffic north star needs: it owns a policy, a platform, a
-//! performance model and a [`PlanCache`], accepts DAGs one at a time
-//! (jobs arriving over a stream rather than one offline batch), and
-//! merges the per-job [`RunReport`]s into a [`SessionReport`].
+//! performance model and a [`PlanCache`], and accepts work two ways:
+//!
+//! * [`SchedSession::submit`] — one DAG at a time, closed-loop: the job
+//!   runs to completion on an otherwise-idle platform and its report
+//!   folds into the session back-to-back (PR 2 semantics, preserved
+//!   bit-for-bit);
+//! * [`SchedSession::submit_stream`] — a batch of DAGs through an
+//!   open-system scenario ([`StreamConfig`]): submit times from an
+//!   arrival process (fixed-rate, Poisson, bursty), many jobs
+//!   simultaneously in flight sharing devices and bus, a bounded
+//!   admission window queueing the excess.
+//!
+//! Either way the merged [`SessionReport`] accumulates per-job reports
+//! *and* lifecycle timings, so queueing metrics — sojourn p50/p95/p99,
+//! mean queueing delay, throughput, session-level device utilization —
+//! come from one place.
 //!
 //! ```no_run
 //! use hetsched::dag::{generate_layered, GeneratorConfig, KernelKind};
 //! use hetsched::perfmodel::CalibratedModel;
 //! use hetsched::platform::Platform;
 //! use hetsched::session::SchedSession;
+//! use hetsched::sim::StreamConfig;
 //!
 //! let mut session = SchedSession::from_spec(
 //!     "gp:window=16",
@@ -18,12 +32,20 @@
 //!     Box::new(CalibratedModel::paper()),
 //! )
 //! .unwrap();
+//! // Closed-loop submissions: the plan cache makes repeats a lookup.
 //! for _ in 0..100 {
 //!     let job = generate_layered(&GeneratorConfig::paper(KernelKind::Mm, 1024));
-//!     session.submit(&job); // plan cache makes repeats a lookup
+//!     session.submit(&job);
 //! }
+//! // Open-system burst: Poisson arrivals, 8 jobs in flight at most.
+//! let jobs: Vec<_> = (0..32)
+//!     .map(|_| generate_layered(&GeneratorConfig::paper(KernelKind::Mm, 1024)))
+//!     .collect();
+//! let stream = StreamConfig::from_spec("stream:arrival=poisson,rate=120,queue=8").unwrap();
+//! session.submit_stream(&jobs, &stream);
 //! let report = session.finish();
-//! assert_eq!(report.job_count(), 100);
+//! assert_eq!(report.job_count(), 132);
+//! println!("p95 sojourn: {:.2} ms", report.p95_sojourn_ms());
 //! ```
 
 use anyhow::Result;
@@ -32,7 +54,7 @@ use crate::dag::Dag;
 use crate::perfmodel::PerfModel;
 use crate::platform::Platform;
 use crate::sched::{PlanCache, Scheduler, SchedulerRegistry};
-use crate::sim::{simulate_stream, RunReport, SessionReport, SimConfig};
+use crate::sim::{simulate_open, RunReport, SessionReport, SimConfig, StreamConfig};
 
 /// A streaming scheduling session over the discrete-event engine.
 pub struct SchedSession {
@@ -78,21 +100,52 @@ impl SchedSession {
         self
     }
 
-    /// Submit one job: plan (cached when possible), run, merge. Returns
-    /// the job's report.
+    /// Submit one job closed-loop: plan (cached when possible), run on
+    /// the idle platform, merge back-to-back. Returns the job's report.
     pub fn submit(&mut self, dag: &Dag) -> &RunReport {
-        let one = simulate_stream(
-            std::slice::from_ref(dag),
+        self.submit_stream(std::slice::from_ref(dag), &StreamConfig::closed());
+        self.report.jobs.last().expect("one job in, one report out")
+    }
+
+    /// Submit a batch of jobs through an open-system scenario: arrival
+    /// process + bounded admission window from `stream`. Jobs run
+    /// concurrently in flight (or back-to-back for
+    /// `arrival=closed`), and their reports and timings merge into the
+    /// session. Returns the reports of the submitted batch.
+    pub fn submit_stream(&mut self, dags: &[Dag], stream: &StreamConfig) -> &[RunReport] {
+        let first = self.report.jobs.len();
+        let batch = simulate_open(
+            dags,
             self.scheduler.as_mut(),
             &self.platform,
             self.model.as_ref(),
             &self.sim,
+            stream,
             &mut self.cache,
         );
-        let hit = one.cache_hits > 0;
-        let job = one.jobs.into_iter().next().expect("one job in, one report out");
-        self.report.push(job, hit);
-        self.report.jobs.last().expect("just pushed")
+        // Offset the batch — timings AND trace times — onto the session
+        // clock so successive batches (and closed-loop submits) share
+        // one monotonic timeline and merged_trace() stays coherent.
+        let base = self.report.span_ms;
+        for (i, (mut job, mut timing)) in
+            batch.jobs.into_iter().zip(batch.timings).enumerate()
+        {
+            timing.submit_ms += base;
+            timing.admit_ms += base;
+            timing.complete_ms += base;
+            for ev in &mut job.trace {
+                ev.job = first + i;
+                ev.start_ms += base;
+                ev.end_ms += base;
+            }
+            self.report.push_timed(job, false, timing);
+        }
+        // push_timed counted every batch job as a miss; restore the
+        // engine's exact hit/miss totals.
+        self.report.cache_misses =
+            self.report.cache_misses - dags.len() as u64 + batch.cache_misses;
+        self.report.cache_hits += batch.cache_hits;
+        &self.report.jobs[first..]
     }
 
     /// The shared plan cache (hit/miss counters included).
@@ -119,7 +172,7 @@ impl SchedSession {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dag::{generate_layered, GeneratorConfig, KernelKind};
+    use crate::dag::{generate_layered, workloads, GeneratorConfig, KernelKind};
     use crate::perfmodel::CalibratedModel;
 
     #[test]
@@ -145,6 +198,9 @@ mod tests {
             assert_eq!(job.makespan_ms, first.makespan_ms);
             assert_eq!(job.ledger.count, first.ledger.count);
         }
+        // Closed-loop timeline: back-to-back on the session clock.
+        assert!((report.span_ms - report.makespan_ms).abs() < 1e-9);
+        assert_eq!(report.mean_queueing_delay_ms(), 0.0);
     }
 
     #[test]
@@ -192,5 +248,33 @@ mod tests {
         assert!(r.makespan_ms > 0.0);
         // Trivial plans cache too (the hit avoids even the no-op build).
         assert_eq!(r.cache_hits, 1);
+    }
+
+    #[test]
+    fn open_batch_merges_onto_session_clock() {
+        let mut session = SchedSession::from_spec(
+            "dmda",
+            Platform::paper(),
+            Box::new(CalibratedModel::paper()),
+        )
+        .unwrap();
+        // One closed job first, then an open batch: the batch's clock
+        // must start where the closed job ended, and job tags must be
+        // session-wide.
+        let solo = workloads::phased(6, 2, 256);
+        session.submit(&solo);
+        let solo_end = session.report().span_ms;
+        let jobs: Vec<_> = (0..4).map(|_| workloads::phased(6, 2, 256)).collect();
+        let stream = StreamConfig::from_spec("stream:arrival=fixed,rate=500,queue=4").unwrap();
+        let batch = session.submit_stream(&jobs, &stream);
+        assert_eq!(batch.len(), 4);
+        let report = session.finish();
+        assert_eq!(report.job_count(), 5);
+        for t in &report.timings[1..] {
+            assert!(t.submit_ms >= solo_end - 1e-9, "batch rides the session clock");
+        }
+        assert!(report.span_ms >= solo_end);
+        assert!(report.throughput_jps() > 0.0);
+        assert!(report.p95_sojourn_ms() >= report.p50_sojourn_ms());
     }
 }

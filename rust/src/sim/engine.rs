@@ -1,24 +1,44 @@
-//! The list-scheduling discrete-event engine.
+//! The open-system discrete-event engine.
 //!
-//! Drives the [`Scheduler`] lifecycle: a plan is built (or supplied
-//! pre-built — see [`simulate_with_plan`]) and installed via
-//! `on_submit`, `select` fires per ready task, `on_task_finish` per
-//! completed kernel, and `on_drain` when the job empties.
-//! [`simulate_stream`] runs a sequence of jobs through one policy and a
-//! shared [`PlanCache`], merging the per-job reports into a
-//! [`SessionReport`].
+//! One global event queue drives *many jobs simultaneously in flight*:
+//! every event — job arrival, job drain, task ready — is tagged with its
+//! [`JobId`] and totally ordered by `(time, kind, job, task)`, so merged
+//! traces and ledgers are reproducible regardless of how admissions
+//! interleave. Jobs share the devices, the bus channels, the MSI
+//! [`Directory`] and the policy; a bounded admission window (the
+//! [`StreamConfig::queue`]) holds excess arrivals in FIFO order, and the
+//! wait is reported as queueing delay.
+//!
+//! Entry points:
+//! * [`simulate`] / [`simulate_with_plan`] — thin single-job wrappers
+//!   over the core (one job, submitted at t = 0); bit-for-bit equal to
+//!   the closed-world engine they replaced;
+//! * [`simulate_open`] — an open stream: submit times from an
+//!   [`super::stream::ArrivalProcess`], plans from a shared [`PlanCache`], one engine
+//!   run with a merged multi-job ready frontier;
+//! * [`simulate_stream`] — the closed loop (`arrival=closed`): each job
+//!   runs back-to-back on an otherwise-idle platform, exactly PR 2's
+//!   stream semantics (pinned by the golden equivalence tests).
+//!
+//! The scheduler observes the open system through the job-tagged
+//! lifecycle ([`Scheduler::on_submit`] at admission, [`Scheduler::select`]
+//! per ready task, [`Scheduler::on_task_finish`] per completion,
+//! [`Scheduler::on_job_drain`] / [`Scheduler::on_drain`] at drain).
 
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 use std::sync::Arc;
 use std::time::Instant;
 
-use super::report::{RunReport, SessionReport, TraceEvent};
+use super::report::{JobTiming, RunReport, SessionReport, TraceEvent};
+use super::stream::StreamConfig;
 use crate::dag::{Dag, KernelKind};
 use crate::data::{DataHandle, Directory, TransferLedger};
 use crate::perfmodel::PerfModel;
 use crate::platform::Platform;
-use crate::sched::{DispatchCtx, InputInfo, Plan, PlanCache, PlanKey, Planner as _, Scheduler};
+use crate::sched::{
+    DispatchCtx, InputInfo, JobId, Plan, PlanCache, PlanKey, Planner as _, Scheduler,
+};
 
 /// Simulation options.
 #[derive(Debug, Clone)]
@@ -50,7 +70,7 @@ impl Default for SimConfig {
     }
 }
 
-/// Totally ordered f64 for the ready heap (times are finite by
+/// Totally ordered f64 for the event heap (times are finite by
 /// construction).
 #[derive(PartialEq, PartialOrd)]
 struct Ord64(f64);
@@ -60,6 +80,406 @@ impl Ord for Ord64 {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
         self.partial_cmp(other).unwrap()
     }
+}
+
+/// Event kinds, in tie-break order at equal times: a drain frees an
+/// admission slot before a simultaneous arrival claims one, and both
+/// precede task dispatch.
+const EV_DRAIN: u8 = 0;
+const EV_ARRIVAL: u8 = 1;
+const EV_READY: u8 = 2;
+
+/// One job entering the engine.
+pub(crate) struct JobInput<'a> {
+    pub dag: &'a Dag,
+    pub plan: Arc<Plan>,
+    pub submit_ms: f64,
+    /// Plan acquisition cost (cache lookup or build) attributed to this
+    /// job's `plan_ns`.
+    pub build_ns: u64,
+}
+
+/// Per-job engine state.
+struct JobRun<'a> {
+    dag: &'a Dag,
+    plan: Arc<Plan>,
+    submit_ms: f64,
+    admit_ms: f64,
+    complete_ms: f64,
+    plan_ns: u64,
+    decision_ns: u64,
+    out: Vec<DataHandle>,
+    initial: Vec<Vec<DataHandle>>,
+    indeg: Vec<usize>,
+    ready_time: Vec<f64>,
+    finish: Vec<f64>,
+    assignments: Vec<usize>,
+    device_busy: Vec<f64>,
+    tasks_per_device: Vec<usize>,
+    ledger: TransferLedger,
+    trace: Vec<TraceEvent>,
+    remaining: usize,
+}
+
+/// The job-agnostic open-system core: shared machine state plus per-job
+/// slots, driven by the global event heap.
+struct EngineCore<'a> {
+    platform: &'a Platform,
+    model: &'a dyn PerfModel,
+    config: &'a SimConfig,
+    worker_free: Vec<Vec<f64>>,
+    bus: Vec<f64>,
+    dir: Directory,
+    /// Time each datum becomes available at its producer (prefetch).
+    avail: Vec<f64>,
+    heap: BinaryHeap<Reverse<(Ord64, u8, usize, usize)>>,
+    pending: VecDeque<JobId>,
+    inflight: usize,
+    queue: usize,
+    jobs: Vec<JobRun<'a>>,
+}
+
+impl<'a> EngineCore<'a> {
+    fn new(
+        inputs: Vec<JobInput<'a>>,
+        platform: &'a Platform,
+        model: &'a dyn PerfModel,
+        config: &'a SimConfig,
+        queue: usize,
+    ) -> EngineCore<'a> {
+        let worker_free = platform.devices.iter().map(|d| vec![0.0; d.workers]).collect();
+        let bus = vec![0.0; config.bus_channels.max(1)];
+        let mut heap = BinaryHeap::new();
+        let jobs: Vec<JobRun> = inputs
+            .into_iter()
+            .map(|input| JobRun {
+                dag: input.dag,
+                plan: input.plan,
+                submit_ms: input.submit_ms,
+                admit_ms: 0.0,
+                complete_ms: 0.0,
+                plan_ns: input.build_ns,
+                decision_ns: 0,
+                out: Vec::new(),
+                initial: Vec::new(),
+                indeg: Vec::new(),
+                ready_time: Vec::new(),
+                finish: Vec::new(),
+                assignments: Vec::new(),
+                device_busy: Vec::new(),
+                tasks_per_device: Vec::new(),
+                ledger: TransferLedger::new(),
+                trace: Vec::new(),
+                remaining: usize::MAX,
+            })
+            .collect();
+        for (j, job) in jobs.iter().enumerate() {
+            heap.push(Reverse((Ord64(job.submit_ms), EV_ARRIVAL, j, 0)));
+        }
+        EngineCore {
+            platform,
+            model,
+            config,
+            worker_free,
+            bus,
+            dir: Directory::new(),
+            avail: Vec::new(),
+            heap,
+            pending: VecDeque::new(),
+            inflight: 0,
+            queue: queue.max(1),
+            jobs,
+        }
+    }
+
+    /// Admit job `j` at engine time `now`: install its plan, allocate
+    /// its data handles, and release its root tasks into the merged
+    /// ready frontier.
+    fn admit(&mut self, scheduler: &mut dyn Scheduler, j: JobId, now: f64) {
+        let k = self.platform.device_count();
+        let host = self.platform.host_node();
+        let job = &mut self.jobs[j];
+        let dag = job.dag;
+        job.admit_ms = now;
+        let t0 = Instant::now();
+        scheduler.on_submit(j, dag, &job.plan, self.platform, self.model);
+        job.plan_ns += t0.elapsed().as_nanos() as u64;
+
+        // Data handles: one output per node, then host-resident initial
+        // inputs for under-fed kernels (paper §III.B: all initial data
+        // on host).
+        let n = dag.node_count();
+        job.out = Vec::with_capacity(n);
+        for i in 0..n {
+            let sz = dag.node(i).size as u64;
+            job.out.push(self.dir.alloc_unwritten(4 * sz * sz));
+        }
+        job.initial = Vec::with_capacity(n);
+        for i in 0..n {
+            let node = dag.node(i);
+            let missing = node.kernel.arity().saturating_sub(dag.in_degree(i));
+            let sz = node.size as u64;
+            let mut handles = Vec::with_capacity(missing);
+            for _ in 0..missing {
+                handles.push(self.dir.alloc(4 * sz * sz, host));
+            }
+            job.initial.push(handles);
+        }
+        // New data exists no earlier than the admission instant: a
+        // prefetch must not schedule a copy before the job arrived.
+        self.avail.resize(self.dir.len(), now);
+
+        job.indeg = (0..n).map(|i| dag.in_degree(i)).collect();
+        job.ready_time = vec![now; n];
+        job.finish = vec![0.0; n];
+        job.assignments = vec![usize::MAX; n];
+        job.device_busy = vec![0.0; k];
+        job.tasks_per_device = vec![0; k];
+        job.remaining = n;
+        for v in 0..n {
+            if job.indeg[v] == 0 {
+                self.heap.push(Reverse((Ord64(now), EV_READY, j, v)));
+            }
+        }
+        self.inflight += 1;
+        if self.jobs[j].remaining == 0 {
+            self.complete_job(scheduler, j);
+        }
+    }
+
+    /// Dispatch one ready task: the scheduling decision, MSI data
+    /// acquisition over the shared bus, execution on the earliest-free
+    /// worker, lifecycle hooks and successor release.
+    fn dispatch(&mut self, scheduler: &mut dyn Scheduler, j: JobId, v: usize, ready: f64) {
+        let k = self.platform.device_count();
+        let host = self.platform.host_node();
+        let job = &mut self.jobs[j];
+        let dag = job.dag;
+        let node = dag.node(v);
+
+        // Virtual source kernels: zero time, output = host-resident data.
+        if node.kernel == KernelKind::Source {
+            self.dir.acquire_write(job.out[v], host);
+            job.finish[v] = ready;
+            job.assignments[v] = host;
+            for &e in dag.out_edges(v) {
+                let w = dag.edge(e).dst;
+                job.indeg[w] -= 1;
+                job.ready_time[w] = job.ready_time[w].max(ready);
+                if job.indeg[w] == 0 {
+                    self.heap.push(Reverse((Ord64(job.ready_time[w]), EV_READY, j, w)));
+                }
+            }
+            job.remaining -= 1;
+            if job.remaining == 0 {
+                self.complete_job(scheduler, j);
+            }
+            return;
+        }
+
+        // Inputs: predecessor outputs + initial host buffers.
+        let mut handles: Vec<DataHandle> = dag
+            .in_edges(v)
+            .iter()
+            .map(|&e| job.out[dag.edge(e).src])
+            .collect();
+        handles.extend(&job.initial[v]);
+        let inputs: Vec<InputInfo> = handles
+            .iter()
+            .map(|&h| InputInfo { bytes: self.dir.bytes(h), valid_mask: self.dir.valid_mask(h) })
+            .collect();
+
+        // Device availability snapshot (earliest-free worker per device).
+        let device_free: Vec<f64> = self
+            .worker_free
+            .iter()
+            .map(|ws| ws.iter().cloned().fold(f64::INFINITY, f64::min))
+            .collect();
+
+        // --- the scheduling decision ---
+        let ctx = DispatchCtx {
+            job: j,
+            task: v,
+            kernel: node.kernel,
+            size: node.size,
+            ready_ms: ready,
+            device_free_ms: &device_free,
+            inputs: &inputs,
+            platform: self.platform,
+            model: self.model,
+        };
+        let t0 = Instant::now();
+        let dev = scheduler.select(&ctx);
+        job.decision_ns += t0.elapsed().as_nanos() as u64;
+        assert!(dev < k, "scheduler returned invalid device {dev}");
+        let mem = self.platform.memory_node(dev);
+
+        // --- data acquisition: MSI reads, serialized per bus channel ---
+        let mut data_ready = ready;
+        for &h in &handles {
+            if let Some(src) = self.dir.acquire_read(h, mem) {
+                let t = self.model.transfer_time_ms(self.dir.bytes(h));
+                // Earliest-free channel; with prefetch the copy may begin
+                // as soon as the datum exists at its producer.
+                let ch = (0..self.bus.len())
+                    .min_by(|&a, &b| self.bus[a].partial_cmp(&self.bus[b]).unwrap())
+                    .unwrap();
+                let earliest = if self.config.prefetch { self.avail[h.0 as usize] } else { ready };
+                let start = self.bus[ch].max(earliest);
+                self.bus[ch] = start + t;
+                job.ledger.record(src, mem, self.dir.bytes(h), t);
+                data_ready = data_ready.max(self.bus[ch]);
+            }
+        }
+        // Output: exclusive write on the executing node.
+        self.dir.acquire_write(job.out[v], mem);
+
+        // --- execute on the earliest-free worker ---
+        let (worker, &wfree) = self.worker_free[dev]
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        let exec = self.model.kernel_time_ms(node.kernel, node.size, dev);
+        let start = wfree.max(data_ready);
+        let end = start + exec;
+        self.worker_free[dev][worker] = end;
+        job.finish[v] = end;
+        self.avail[job.out[v].0 as usize] = end;
+        job.assignments[v] = dev;
+        job.device_busy[dev] += exec;
+        job.tasks_per_device[dev] += 1;
+        if self.config.collect_trace {
+            job.trace.push(TraceEvent {
+                job: j,
+                task: v,
+                device: dev,
+                worker,
+                start_ms: start,
+                end_ms: end,
+            });
+        }
+        // Completion lifecycle event (the sim delivers it in dispatch
+        // order; its virtual completion time rides along). Hook time
+        // counts toward the policy's decision overhead.
+        let t0 = Instant::now();
+        scheduler.on_task_finish(j, v, dev, end);
+        job.decision_ns += t0.elapsed().as_nanos() as u64;
+
+        // --- fire successors ---
+        for &e in dag.out_edges(v) {
+            let w = dag.edge(e).dst;
+            job.indeg[w] -= 1;
+            job.ready_time[w] = job.ready_time[w].max(end);
+            if job.indeg[w] == 0 {
+                self.heap.push(Reverse((Ord64(job.ready_time[w]), EV_READY, j, w)));
+            }
+        }
+        job.remaining -= 1;
+        if job.remaining == 0 {
+            self.complete_job(scheduler, j);
+        }
+    }
+
+    /// All of job `j`'s tasks have been dispatched (their finish times
+    /// are committed): perform its result write-backs on the shared bus,
+    /// stamp its completion, retire it from the policy, and schedule the
+    /// drain event that frees its admission slot.
+    fn complete_job(&mut self, scheduler: &mut dyn Scheduler, j: JobId) {
+        let host = self.platform.host_node();
+        let job = &mut self.jobs[j];
+        let dag = job.dag;
+        let mut makespan = job.finish.iter().cloned().fold(0.0f64, f64::max);
+
+        // --- return results to host ---
+        if self.config.return_results_to_host {
+            for v in dag.sinks() {
+                if dag.node(v).kernel == KernelKind::Source {
+                    continue;
+                }
+                if let Some(src) = self.dir.acquire_read(job.out[v], host) {
+                    let t = self.model.transfer_time_ms(self.dir.bytes(job.out[v]));
+                    let ch = (0..self.bus.len())
+                        .min_by(|&a, &b| self.bus[a].partial_cmp(&self.bus[b]).unwrap())
+                        .unwrap();
+                    let start = self.bus[ch].max(job.finish[v]);
+                    self.bus[ch] = start + t;
+                    job.ledger.record(src, host, self.dir.bytes(job.out[v]), t);
+                    makespan = makespan.max(self.bus[ch]);
+                }
+            }
+        }
+        job.complete_ms = makespan.max(job.admit_ms);
+        let t0 = Instant::now();
+        scheduler.on_job_drain(j);
+        job.decision_ns += t0.elapsed().as_nanos() as u64;
+        self.heap.push(Reverse((Ord64(job.complete_ms), EV_DRAIN, j, 0)));
+    }
+
+    /// Drain the event heap, then assemble per-job reports in job order.
+    fn run(mut self, scheduler: &mut dyn Scheduler) -> Vec<(RunReport, JobTiming)> {
+        while let Some(Reverse((Ord64(t), kind, j, v))) = self.heap.pop() {
+            match kind {
+                EV_ARRIVAL => {
+                    if self.inflight < self.queue {
+                        self.admit(scheduler, j, t);
+                    } else {
+                        self.pending.push_back(j);
+                    }
+                }
+                EV_DRAIN => {
+                    self.inflight -= 1;
+                    if let Some(next) = self.pending.pop_front() {
+                        self.admit(scheduler, next, t);
+                    }
+                }
+                _ => self.dispatch(scheduler, j, v, t),
+            }
+        }
+        scheduler.on_drain();
+        for (j, job) in self.jobs.iter().enumerate() {
+            assert_eq!(
+                job.remaining, 0,
+                "job {j}: cyclic graph or unreachable tasks ({} left)",
+                job.remaining
+            );
+        }
+        self.jobs
+            .into_iter()
+            .map(|job| {
+                (
+                    RunReport {
+                        scheduler: scheduler.name(),
+                        makespan_ms: job.complete_ms - job.submit_ms,
+                        ledger: job.ledger,
+                        assignments: job.assignments,
+                        device_busy_ms: job.device_busy,
+                        tasks_per_device: job.tasks_per_device,
+                        decision_ns: job.decision_ns,
+                        plan_ns: job.plan_ns,
+                        trace: job.trace,
+                    },
+                    JobTiming {
+                        submit_ms: job.submit_ms,
+                        admit_ms: job.admit_ms,
+                        complete_ms: job.complete_ms,
+                    },
+                )
+            })
+            .collect()
+    }
+}
+
+/// Run `inputs` through one engine core with admission window `queue`.
+pub(crate) fn run_jobs<'a>(
+    inputs: Vec<JobInput<'a>>,
+    scheduler: &mut dyn Scheduler,
+    platform: &'a Platform,
+    model: &'a dyn PerfModel,
+    config: &'a SimConfig,
+    queue: usize,
+) -> Vec<(RunReport, JobTiming)> {
+    EngineCore::new(inputs, platform, model, config, queue).run(scheduler)
 }
 
 /// Simulate `dag` under `scheduler`, planning from scratch. See module
@@ -77,7 +497,8 @@ pub fn simulate(
 /// Simulate `dag` under `scheduler`, consuming `plan` when one is
 /// supplied (e.g. from a [`PlanCache`]) instead of running the policy's
 /// planner; `plan_ns` then measures only plan installation, which is the
-/// amortization the streaming session buys.
+/// amortization the streaming session buys. A thin single-job wrapper
+/// over the open-system core: one job, submitted at t = 0.
 pub fn simulate_with_plan(
     dag: &Dag,
     scheduler: &mut dyn Scheduler,
@@ -86,221 +507,95 @@ pub fn simulate_with_plan(
     config: &SimConfig,
     plan: Option<&Arc<Plan>>,
 ) -> RunReport {
-    let n = dag.node_count();
-    let k = platform.device_count();
-    let host = platform.host_node();
-
-    // --- plan + submit lifecycle ---
     let t0 = Instant::now();
     let plan: Arc<Plan> = match plan {
         Some(p) => Arc::clone(p),
         None => Arc::new(scheduler.build_plan(dag, platform, model)),
     };
-    scheduler.on_submit(dag, &plan, platform, model);
-    let plan_ns = t0.elapsed().as_nanos() as u64;
-
-    // --- data handles ---
-    let mut dir = Directory::new();
-    // Output handle per node.
-    let out: Vec<DataHandle> = (0..n)
-        .map(|i| {
-            let sz = dag.node(i).size as u64;
-            dir.alloc_unwritten(4 * sz * sz)
-        })
-        .collect();
-    // Initial host-resident inputs for under-fed kernels (paper §III.B:
-    // all initial data on host).
-    let initial: Vec<Vec<DataHandle>> = (0..n)
-        .map(|i| {
-            let node = dag.node(i);
-            let missing = node.kernel.arity().saturating_sub(dag.in_degree(i));
-            let sz = node.size as u64;
-            (0..missing).map(|_| dir.alloc(4 * sz * sz, host)).collect()
-        })
-        .collect();
-
-    // --- engine state ---
-    let mut worker_free: Vec<Vec<f64>> = platform
-        .devices
-        .iter()
-        .map(|d| vec![0.0; d.workers])
-        .collect();
-    // Bus channels (1 unless modelling dual copy engines).
-    let mut bus: Vec<f64> = vec![0.0; config.bus_channels.max(1)];
-    // Time each datum becomes available at its producer (prefetch mode).
-    let mut avail: Vec<f64> = vec![0.0; dir.len()];
-    let mut ledger = TransferLedger::new();
-    let mut indeg: Vec<usize> = (0..n).map(|i| dag.in_degree(i)).collect();
-    let mut ready_time = vec![0.0f64; n];
-    let mut finish = vec![0.0f64; n];
-    let mut assignments = vec![usize::MAX; n];
-    let mut device_busy = vec![0.0f64; k];
-    let mut tasks_per_device = vec![0usize; k];
-    let mut decision_ns = 0u64;
-    let mut trace = Vec::new();
-
-    // Ready heap ordered by (ready time, node id) for determinism.
-    let mut heap: BinaryHeap<Reverse<(Ord64, usize)>> = BinaryHeap::new();
-    for v in 0..n {
-        if indeg[v] == 0 {
-            heap.push(Reverse((Ord64(0.0), v)));
-        }
-    }
-
-    let mut executed = 0usize;
-    while let Some(Reverse((Ord64(ready), v))) = heap.pop() {
-        executed += 1;
-        let node = dag.node(v);
-
-        // Virtual source kernels: zero time, output = host-resident data.
-        if node.kernel == KernelKind::Source {
-            dir.acquire_write(out[v], host);
-            finish[v] = ready;
-            assignments[v] = host;
-            for &e in dag.out_edges(v) {
-                let w = dag.edge(e).dst;
-                indeg[w] -= 1;
-                ready_time[w] = ready_time[w].max(ready);
-                if indeg[w] == 0 {
-                    heap.push(Reverse((Ord64(ready_time[w]), w)));
-                }
-            }
-            continue;
-        }
-
-        // Inputs: predecessor outputs + initial host buffers.
-        let mut handles: Vec<DataHandle> = dag
-            .in_edges(v)
-            .iter()
-            .map(|&e| out[dag.edge(e).src])
-            .collect();
-        handles.extend(&initial[v]);
-        let inputs: Vec<InputInfo> = handles
-            .iter()
-            .map(|&h| InputInfo { bytes: dir.bytes(h), valid_mask: dir.valid_mask(h) })
-            .collect();
-
-        // Device availability snapshot (earliest-free worker per device).
-        let device_free: Vec<f64> = worker_free
-            .iter()
-            .map(|ws| ws.iter().cloned().fold(f64::INFINITY, f64::min))
-            .collect();
-
-        // --- the scheduling decision ---
-        let ctx = DispatchCtx {
-            task: v,
-            kernel: node.kernel,
-            size: node.size,
-            ready_ms: ready,
-            device_free_ms: &device_free,
-            inputs: &inputs,
-            platform,
-            model,
-        };
-        let t0 = Instant::now();
-        let dev = scheduler.select(&ctx);
-        decision_ns += t0.elapsed().as_nanos() as u64;
-        assert!(dev < k, "scheduler returned invalid device {dev}");
-        let mem = platform.memory_node(dev);
-
-        // --- data acquisition: MSI reads, serialized per bus channel ---
-        let mut data_ready = ready;
-        for &h in &handles {
-            if let Some(src) = dir.acquire_read(h, mem) {
-                let t = model.transfer_time_ms(dir.bytes(h));
-                // Earliest-free channel; with prefetch the copy may begin
-                // as soon as the datum exists at its producer.
-                let ch = (0..bus.len())
-                    .min_by(|&a, &b| bus[a].partial_cmp(&bus[b]).unwrap())
-                    .unwrap();
-                let earliest = if config.prefetch { avail[h.0 as usize] } else { ready };
-                let start = bus[ch].max(earliest);
-                bus[ch] = start + t;
-                ledger.record(src, mem, dir.bytes(h), t);
-                data_ready = data_ready.max(bus[ch]);
-            }
-        }
-        // Output: exclusive write on the executing node.
-        dir.acquire_write(out[v], mem);
-
-        // --- execute on the earliest-free worker ---
-        let (worker, &wfree) = worker_free[dev]
-            .iter()
-            .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap();
-        let exec = model.kernel_time_ms(node.kernel, node.size, dev);
-        let start = wfree.max(data_ready);
-        let end = start + exec;
-        worker_free[dev][worker] = end;
-        finish[v] = end;
-        avail[out[v].0 as usize] = end;
-        assignments[v] = dev;
-        device_busy[dev] += exec;
-        tasks_per_device[dev] += 1;
-        if config.collect_trace {
-            trace.push(TraceEvent { task: v, device: dev, worker, start_ms: start, end_ms: end });
-        }
-        // Completion lifecycle event (the sim delivers it in dispatch
-        // order; its virtual completion time rides along). Hook time
-        // counts toward the policy's decision overhead.
-        let t0 = Instant::now();
-        scheduler.on_task_finish(v, dev, end);
-        decision_ns += t0.elapsed().as_nanos() as u64;
-
-        // --- fire successors ---
-        for &e in dag.out_edges(v) {
-            let w = dag.edge(e).dst;
-            indeg[w] -= 1;
-            ready_time[w] = ready_time[w].max(end);
-            if indeg[w] == 0 {
-                heap.push(Reverse((Ord64(ready_time[w]), w)));
-            }
-        }
-    }
-    assert_eq!(executed, n, "cyclic graph or unreachable tasks");
-    scheduler.on_drain();
-
-    let mut makespan = finish.iter().cloned().fold(0.0f64, f64::max);
-
-    // --- return results to host ---
-    if config.return_results_to_host {
-        for v in dag.sinks() {
-            if dag.node(v).kernel == KernelKind::Source {
-                continue;
-            }
-            if let Some(src) = dir.acquire_read(out[v], host) {
-                let t = model.transfer_time_ms(dir.bytes(out[v]));
-                let ch = (0..bus.len())
-                    .min_by(|&a, &b| bus[a].partial_cmp(&bus[b]).unwrap())
-                    .unwrap();
-                let start = bus[ch].max(finish[v]);
-                bus[ch] = start + t;
-                ledger.record(src, host, dir.bytes(out[v]), t);
-                makespan = makespan.max(bus[ch]);
-            }
-        }
-    }
-
-    RunReport {
-        scheduler: scheduler.name(),
-        makespan_ms: makespan,
-        ledger,
-        assignments,
-        device_busy_ms: device_busy,
-        tasks_per_device,
-        decision_ns,
-        plan_ns,
-        trace,
-    }
+    let build_ns = t0.elapsed().as_nanos() as u64;
+    let inputs = vec![JobInput { dag, plan, submit_ms: 0.0, build_ns }];
+    let (report, _) = run_jobs(inputs, scheduler, platform, model, config, 1)
+        .pop()
+        .expect("one job in, one report out");
+    report
 }
 
-/// Simulate a *stream* of submitted DAGs through one policy, sharing
-/// `cache` for plan reuse: job `i`'s plan is a cache lookup keyed by
-/// [`PlanKey`] and only built (then cached) on a miss, so a stream of
-/// structurally identical jobs pays the planning cost once. Jobs run
-/// back-to-back; the merged [`SessionReport`] accumulates makespans,
-/// ledgers and plan/decision overhead.
+/// Simulate a *stream* of submitted DAGs through one policy and one
+/// shared [`PlanCache`] under `stream`'s arrival process and admission
+/// window, merging per-job reports and timings into a queueing-aware
+/// [`SessionReport`].
+///
+/// * `arrival=closed` — jobs run back-to-back, each on an otherwise-idle
+///   platform (fresh worker/bus/directory state), with job `i + 1`
+///   submitting the instant job `i` completes; per-job reports are
+///   bit-for-bit those of [`simulate_with_plan`], and the session clock
+///   is the running sum of makespans. This is PR 2's stream exactly.
+/// * timed arrivals (`fixed` / `poisson` / `bursty`) — one engine core
+///   runs every job on the *shared* machine: contention on workers and
+///   bus, a merged ready frontier, at most `stream.queue` jobs admitted
+///   at once, later submissions queued FIFO (their wait = queueing
+///   delay).
+pub fn simulate_open(
+    dags: &[Dag],
+    scheduler: &mut dyn Scheduler,
+    platform: &Platform,
+    model: &dyn PerfModel,
+    config: &SimConfig,
+    stream: &StreamConfig,
+    cache: &mut PlanCache,
+) -> SessionReport {
+    let mut session = SessionReport::new(scheduler.name());
+    match stream.arrival.submit_times_ms(dags.len()) {
+        // Closed loop: sequential fresh cores, back-to-back clock.
+        None => {
+            let mut clock = 0.0f64;
+            for (i, dag) in dags.iter().enumerate() {
+                let key = PlanKey::of(dag, platform, model, scheduler);
+                let (plan, hit, build_ns) =
+                    cache.get_or_build(key, || scheduler.build_plan(dag, platform, model));
+                let inputs = vec![JobInput { dag, plan, submit_ms: 0.0, build_ns }];
+                let (mut report, _) = run_jobs(inputs, scheduler, platform, model, config, 1)
+                    .pop()
+                    .expect("one job in, one report out");
+                // Tag and shift the trace onto the session clock so the
+                // merged timeline agrees with the job timings.
+                for ev in &mut report.trace {
+                    ev.job = i;
+                    ev.start_ms += clock;
+                    ev.end_ms += clock;
+                }
+                let timing = JobTiming {
+                    submit_ms: clock,
+                    admit_ms: clock,
+                    complete_ms: clock + report.makespan_ms,
+                };
+                clock = timing.complete_ms;
+                session.push_timed(report, hit, timing);
+            }
+        }
+        // Open system: one shared core, every job tagged.
+        Some(times) => {
+            let mut inputs = Vec::with_capacity(dags.len());
+            let mut hits = Vec::with_capacity(dags.len());
+            for (dag, &submit_ms) in dags.iter().zip(&times) {
+                let key = PlanKey::of(dag, platform, model, scheduler);
+                let (plan, hit, build_ns) =
+                    cache.get_or_build(key, || scheduler.build_plan(dag, platform, model));
+                inputs.push(JobInput { dag, plan, submit_ms, build_ns });
+                hits.push(hit);
+            }
+            let results = run_jobs(inputs, scheduler, platform, model, config, stream.queue);
+            for ((report, timing), hit) in results.into_iter().zip(hits) {
+                session.push_timed(report, hit, timing);
+            }
+        }
+    }
+    session
+}
+
+/// Closed-loop stream (PR 2's API): a sequence of jobs run back-to-back
+/// through one policy and a shared `cache`. Equivalent to
+/// [`simulate_open`] with [`super::stream::ArrivalProcess::Closed`].
 pub fn simulate_stream(
     dags: &[Dag],
     scheduler: &mut dyn Scheduler,
@@ -309,17 +604,7 @@ pub fn simulate_stream(
     config: &SimConfig,
     cache: &mut PlanCache,
 ) -> SessionReport {
-    let mut session = SessionReport::new(scheduler.name());
-    for dag in dags {
-        let key = PlanKey::of(dag, platform, model, scheduler);
-        let (plan, hit, build_ns) =
-            cache.get_or_build(key, || scheduler.build_plan(dag, platform, model));
-        let mut report = simulate_with_plan(dag, scheduler, platform, model, config, Some(&plan));
-        // Attribute the (lookup or build) cost to this job's plan time.
-        report.plan_ns += build_ns;
-        session.push(report, hit);
-    }
-    session
+    simulate_open(dags, scheduler, platform, model, config, &StreamConfig::closed(), cache)
 }
 
 #[cfg(test)]
@@ -330,6 +615,7 @@ mod tests {
     use crate::perfmodel::CalibratedModel;
     use crate::sched;
     use crate::sched::Planner as _;
+    use crate::sim::stream::ArrivalProcess;
 
     fn run(
         dag: &Dag,
@@ -415,6 +701,7 @@ mod tests {
         let dag = generate_layered(&GeneratorConfig::paper(KernelKind::Ma, 512));
         let r = run(&dag, "eager", &SimConfig { return_results_to_host: true, collect_trace: true, ..Default::default() });
         assert_eq!(r.trace.len(), 38);
+        assert!(r.trace.iter().all(|ev| ev.job == 0), "single runs are job 0");
         // No two events on the same (device, worker) may overlap.
         for a in &r.trace {
             for b in &r.trace {
@@ -577,6 +864,11 @@ mod tests {
             "repeat plan_ns {best_repeat} should be tiny vs first {first}"
         );
         assert!((session.makespan_ms - 3.0 * solo.makespan_ms).abs() < 1e-9);
+        // Closed-loop timings: back-to-back on the session clock.
+        assert_eq!(session.timings.len(), 3);
+        assert!((session.span_ms - session.makespan_ms).abs() < 1e-9);
+        assert_eq!(session.timings[1].submit_ms, session.timings[0].complete_ms);
+        assert_eq!(session.mean_queueing_delay_ms(), 0.0, "closed loop never queues");
     }
 
     #[test]
@@ -614,6 +906,70 @@ mod tests {
         }
         for d in 0..2 {
             assert!((expect[d] - r.device_busy_ms[d]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn open_fixed_rate_admits_fifo_through_bounded_window() {
+        // Fast arrivals + a 2-job window: later jobs must wait their
+        // turn (admit >= submit, FIFO order), every job completes, and
+        // at least one job observes a positive queueing delay.
+        let platform = Platform::paper();
+        let model = CalibratedModel::default();
+        let dags: Vec<Dag> =
+            (0..6).map(|_| workloads::chain(3, KernelKind::Ma, 512)).collect();
+        let mut s = sched::by_name("dmda").unwrap();
+        let mut cache = crate::sched::PlanCache::new();
+        let stream =
+            StreamConfig { arrival: ArrivalProcess::Fixed { rate_jps: 10_000.0 }, queue: 2 };
+        let session = simulate_open(
+            &dags,
+            s.as_mut(),
+            &platform,
+            &model,
+            &SimConfig::default(),
+            &stream,
+            &mut cache,
+        );
+        assert_eq!(session.job_count(), 6);
+        for (i, t) in session.timings.iter().enumerate() {
+            assert!(t.admit_ms >= t.submit_ms - 1e-12, "job {i} admitted before submit");
+            assert!(t.complete_ms >= t.admit_ms, "job {i} completed before admit");
+        }
+        // FIFO: admissions never reorder.
+        for w in session.timings.windows(2) {
+            assert!(w[0].admit_ms <= w[1].admit_ms + 1e-12);
+        }
+        assert!(
+            session.timings.iter().any(|t| t.queueing_delay_ms() > 0.0),
+            "a 2-job window at 10k jobs/s must queue someone"
+        );
+        assert!(session.span_ms > 0.0);
+        assert!(session.throughput_jps() > 0.0);
+    }
+
+    #[test]
+    fn open_engine_is_deterministic() {
+        let platform = Platform::paper();
+        let model = CalibratedModel::default();
+        let dags: Vec<Dag> =
+            (0..5).map(|_| workloads::phased(6, 2, 256)).collect();
+        let stream = StreamConfig {
+            arrival: ArrivalProcess::Poisson { rate_jps: 400.0, seed: 7 },
+            queue: 4,
+        };
+        let cfg = SimConfig { collect_trace: true, ..Default::default() };
+        let mut go = || {
+            let mut s = sched::by_name("dmda").unwrap();
+            let mut cache = crate::sched::PlanCache::new();
+            simulate_open(&dags, s.as_mut(), &platform, &model, &cfg, &stream, &mut cache)
+        };
+        let a = go();
+        let b = go();
+        assert_eq!(a.merged_trace(), b.merged_trace(), "traces must reproduce");
+        assert_eq!(a.ledger.count, b.ledger.count);
+        for (x, y) in a.timings.iter().zip(&b.timings) {
+            assert_eq!(x.complete_ms, y.complete_ms);
         }
     }
 }

@@ -1,11 +1,20 @@
-//! Discrete-event platform simulator.
+//! Discrete-event platform simulator — the open-system core.
 //!
-//! Runs any [`crate::sched::Scheduler`] over any [`crate::dag::Dag`]
-//! against a [`crate::perfmodel::PerfModel`] and a
-//! [`crate::platform::Platform`], producing makespan, the MSI transfer ledger, per-device
-//! utilization and an execution trace — deterministically and in
-//! microseconds of wall time, which is what lets the figure benches sweep
-//! 100 iterations × 11 sizes × several schedulers as the paper does.
+//! Runs any [`crate::sched::Scheduler`] over *streams* of
+//! [`crate::dag::Dag`] jobs against a [`crate::perfmodel::PerfModel`]
+//! and a [`crate::platform::Platform`]. One global event queue holds
+//! every in-flight job's events, tagged with their [`crate::sched::JobId`]
+//! and totally ordered by `(time, kind, job, task)`: jobs share the
+//! devices, the bus channels and the MSI [`crate::data::Directory`], an
+//! [`ArrivalProcess`] generates submit times (closed-loop, fixed-rate,
+//! Poisson, bursty), and a bounded admission window queues the excess —
+//! so the simulator measures what an open system actually exhibits:
+//! contention, queueing delay, pipelined drain, sojourn percentiles and
+//! throughput ([`SessionReport`]). Single-DAG [`simulate`] is a thin
+//! one-job wrapper over the same core — deterministically and in
+//! microseconds of wall time, which is what lets the figure benches
+//! sweep 100 iterations × 11 sizes × several schedulers as the paper
+//! does.
 //!
 //! Fidelity notes (matching the paper's runtime):
 //! * one shared bus, serialized transfers (GTX: no dual copy engines);
@@ -15,10 +24,15 @@
 //!   engine, so transfer counts agree between sim and real runs;
 //! * all initial data starts on host memory; each kernel with fewer
 //!   in-edges than its arity reads the remainder from host-resident
-//!   initial buffers (paper §III.B).
+//!   initial buffers (paper §III.B);
+//! * `arrival=closed` reproduces the pre-open-system engine bit-for-bit:
+//!   each job runs back-to-back on an otherwise-idle platform (golden
+//!   tests pin this).
 
 pub mod engine;
 pub mod report;
+pub mod stream;
 
-pub use engine::{simulate, simulate_stream, simulate_with_plan, SimConfig};
-pub use report::{RunReport, SessionReport, TraceEvent};
+pub use engine::{simulate, simulate_open, simulate_stream, simulate_with_plan, SimConfig};
+pub use report::{JobTiming, RunReport, SessionReport, TraceEvent};
+pub use stream::{ArrivalProcess, StreamConfig, DEFAULT_QUEUE};

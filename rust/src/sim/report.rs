@@ -1,11 +1,27 @@
-//! Run reports shared by the simulator and the real execution engine.
+//! Run, timing and session reports shared by the simulator and the real
+//! execution engine.
+//!
+//! The open-system model makes a session more than a list of runs: jobs
+//! *submit* at arrival times, *admit* when the bounded window has room,
+//! and *complete* when their last result lands — so a [`SessionReport`]
+//! carries one [`JobTiming`] per job and derives the queueing metrics
+//! the ROADMAP's heavy-traffic north star asks for: per-job sojourn
+//! (submit → completion), queueing delay (submit → admission),
+//! nearest-rank latency percentiles (p50/p95/p99), throughput (jobs/s
+//! over the session span) and session-level device utilization.
 
 use crate::data::TransferLedger;
 use crate::platform::DeviceId;
+use crate::sched::JobId;
+use crate::util::stats::percentile_nearest_rank;
 
 /// One task execution in the timeline.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TraceEvent {
+    /// Owning job (0 for single-job runs). Part of the engine's event
+    /// total order `(time, kind, job, task)`, which is what makes merged
+    /// multi-job traces reproducible across runs.
+    pub job: JobId,
     pub task: usize,
     pub device: DeviceId,
     pub worker: usize,
@@ -18,7 +34,9 @@ pub struct TraceEvent {
 pub struct RunReport {
     /// Scheduler name ("eager" / "dmda" / "gp" / ...).
     pub scheduler: &'static str,
-    /// Total completion time (ms, virtual for sim / measured for real).
+    /// Sojourn time of the job (ms): submit → last completion
+    /// (including result write-backs). For a single job submitted at
+    /// t = 0 on an idle platform this is the classical makespan.
     pub makespan_ms: f64,
     /// All bus transfers (the paper's "data transfer frequency").
     pub ledger: TransferLedger,
@@ -29,7 +47,7 @@ pub struct RunReport {
     /// Tasks executed per device.
     pub tasks_per_device: Vec<usize>,
     /// Wall-clock nanoseconds spent inside the policy's online hooks
-    /// (`select` and `on_task_finish`).
+    /// (`select`, `on_task_finish`, `on_job_drain`).
     pub decision_ns: u64,
     /// Wall-clock nanoseconds spent planning for this run: building (or
     /// fetching) the `Plan` plus installing it via `on_submit`.
@@ -61,16 +79,48 @@ impl RunReport {
     }
 }
 
-/// Merged outcome of a streaming session: a sequence of jobs run
-/// back-to-back through one policy and one [`crate::sched::PlanCache`].
+/// Lifecycle timestamps of one job on the session clock (ms).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct JobTiming {
+    /// Arrival: the job enters the system.
+    pub submit_ms: f64,
+    /// Admission: the bounded window accepts it (= submit when a slot
+    /// was free; later when it waited in the FIFO).
+    pub admit_ms: f64,
+    /// Last completion, including result write-backs.
+    pub complete_ms: f64,
+}
+
+impl JobTiming {
+    /// Time spent waiting for admission.
+    pub fn queueing_delay_ms(&self) -> f64 {
+        self.admit_ms - self.submit_ms
+    }
+
+    /// Sojourn: total time in system, submit → completion.
+    pub fn sojourn_ms(&self) -> f64 {
+        self.complete_ms - self.submit_ms
+    }
+}
+
+/// Merged outcome of a streaming session: a sequence of jobs run through
+/// one policy and one [`crate::sched::PlanCache`], either back-to-back
+/// (closed loop) or concurrently in flight (open system).
 #[derive(Debug, Clone, Default)]
 pub struct SessionReport {
     /// Policy name (as reported on the first job).
     pub scheduler: String,
     /// Per-job reports, in submission order.
     pub jobs: Vec<RunReport>,
-    /// Sum of job makespans (jobs run back-to-back).
+    /// Per-job lifecycle timings, in submission order.
+    pub timings: Vec<JobTiming>,
+    /// Sum of per-job sojourns (ms). In a closed loop this equals the
+    /// session span; in an open system concurrent jobs overlap, so it
+    /// exceeds [`SessionReport::span_ms`].
     pub makespan_ms: f64,
+    /// Session span (ms): the latest job completion on the session
+    /// clock — the wall-clock cost of the whole stream.
+    pub span_ms: f64,
     /// Merged transfer ledger across jobs.
     pub ledger: TransferLedger,
     /// Total planning nanoseconds across jobs (cache hits ≈ 0).
@@ -88,9 +138,22 @@ impl SessionReport {
         SessionReport { scheduler: scheduler.to_string(), ..Default::default() }
     }
 
-    /// Fold one job into the session.
+    /// Fold one job into the session with back-to-back timing (the job
+    /// starts when its predecessor completed): the closed-loop default
+    /// for callers without an arrival process.
     pub fn push(&mut self, job: RunReport, cache_hit: bool) {
+        let timing = JobTiming {
+            submit_ms: self.span_ms,
+            admit_ms: self.span_ms,
+            complete_ms: self.span_ms + job.makespan_ms,
+        };
+        self.push_timed(job, cache_hit, timing);
+    }
+
+    /// Fold one job into the session with explicit lifecycle timing.
+    pub fn push_timed(&mut self, job: RunReport, cache_hit: bool, timing: JobTiming) {
         self.makespan_ms += job.makespan_ms;
+        self.span_ms = self.span_ms.max(timing.complete_ms);
         self.ledger.merge(&job.ledger);
         self.plan_ns += job.plan_ns;
         self.decision_ns += job.decision_ns;
@@ -99,6 +162,7 @@ impl SessionReport {
         } else {
             self.cache_misses += 1;
         }
+        self.timings.push(timing);
         self.jobs.push(job);
     }
 
@@ -130,11 +194,147 @@ impl SessionReport {
     pub fn repeat_plan_ns(&self) -> u64 {
         self.jobs.iter().skip(1).map(|j| j.plan_ns).sum()
     }
+
+    // --- queueing metrics -------------------------------------------
+
+    /// Per-job sojourn times (submit → completion), submission order.
+    pub fn sojourns_ms(&self) -> Vec<f64> {
+        self.timings.iter().map(|t| t.sojourn_ms()).collect()
+    }
+
+    /// Per-job queueing delays (submit → admission), submission order.
+    pub fn queueing_delays_ms(&self) -> Vec<f64> {
+        self.timings.iter().map(|t| t.queueing_delay_ms()).collect()
+    }
+
+    /// Nearest-rank percentile of the sojourn distribution (`p` in
+    /// (0, 100]); 0.0 for an empty session.
+    pub fn sojourn_percentile_ms(&self, p: f64) -> f64 {
+        if self.timings.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.sojourns_ms();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        percentile_nearest_rank(&sorted, p)
+    }
+
+    /// Median sojourn (nearest-rank p50).
+    pub fn p50_sojourn_ms(&self) -> f64 {
+        self.sojourn_percentile_ms(50.0)
+    }
+
+    /// Tail sojourn (nearest-rank p95).
+    pub fn p95_sojourn_ms(&self) -> f64 {
+        self.sojourn_percentile_ms(95.0)
+    }
+
+    /// Extreme-tail sojourn (nearest-rank p99).
+    pub fn p99_sojourn_ms(&self) -> f64 {
+        self.sojourn_percentile_ms(99.0)
+    }
+
+    /// Mean sojourn (ms); 0.0 for an empty session.
+    pub fn mean_sojourn_ms(&self) -> f64 {
+        if self.timings.is_empty() {
+            0.0
+        } else {
+            self.sojourns_ms().iter().sum::<f64>() / self.timings.len() as f64
+        }
+    }
+
+    /// Mean queueing delay (ms); 0.0 for an empty session.
+    pub fn mean_queueing_delay_ms(&self) -> f64 {
+        if self.timings.is_empty() {
+            0.0
+        } else {
+            self.queueing_delays_ms().iter().sum::<f64>() / self.timings.len() as f64
+        }
+    }
+
+    /// Session throughput in jobs per second: completed jobs over the
+    /// session span.
+    pub fn throughput_jps(&self) -> f64 {
+        if self.span_ms <= 0.0 {
+            0.0
+        } else {
+            self.jobs.len() as f64 / (self.span_ms / 1000.0)
+        }
+    }
+
+    /// Session-level utilization per device: total busy time across
+    /// jobs over `span * workers`.
+    pub fn device_utilization(&self, workers_per_device: &[usize]) -> Vec<f64> {
+        let mut busy = vec![0.0f64; workers_per_device.len()];
+        for job in &self.jobs {
+            for (d, &b) in job.device_busy_ms.iter().enumerate() {
+                if d < busy.len() {
+                    busy[d] += b;
+                }
+            }
+        }
+        busy.iter()
+            .zip(workers_per_device)
+            .map(|(&b, &w)| {
+                if self.span_ms <= 0.0 {
+                    0.0
+                } else {
+                    b / (self.span_ms * w as f64)
+                }
+            })
+            .collect()
+    }
+
+    /// Highest number of jobs simultaneously in flight (admitted, not
+    /// yet complete) at any instant of the session.
+    pub fn max_concurrent_jobs(&self) -> usize {
+        let mut events: Vec<(f64, i32)> = Vec::with_capacity(self.timings.len() * 2);
+        for t in &self.timings {
+            events.push((t.admit_ms, 1));
+            events.push((t.complete_ms, -1));
+        }
+        // Close before open at equal times: touching intervals don't
+        // count as concurrent.
+        events.sort_by(|a, b| (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap());
+        let mut cur = 0i32;
+        let mut best = 0i32;
+        for (_, delta) in events {
+            cur += delta;
+            best = best.max(cur);
+        }
+        best.max(0) as usize
+    }
+
+    /// All jobs' trace events merged and ordered by
+    /// `(start, end, job, task)` — the reproducible session timeline.
+    pub fn merged_trace(&self) -> Vec<TraceEvent> {
+        let mut all: Vec<TraceEvent> =
+            self.jobs.iter().flat_map(|j| j.trace.iter().cloned()).collect();
+        all.sort_by(|a, b| {
+            (a.start_ms, a.end_ms, a.job, a.task)
+                .partial_cmp(&(b.start_ms, b.end_ms, b.job, b.task))
+                .unwrap()
+        });
+        all
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn job(ms: f64, plan: u64) -> RunReport {
+        RunReport {
+            scheduler: "test",
+            makespan_ms: ms,
+            ledger: TransferLedger::new(),
+            assignments: vec![0],
+            device_busy_ms: vec![ms],
+            tasks_per_device: vec![1],
+            decision_ns: 100,
+            plan_ns: plan,
+            trace: vec![],
+        }
+    }
 
     #[test]
     fn utilization_math() {
@@ -157,29 +357,92 @@ mod tests {
 
     #[test]
     fn session_report_merges_jobs() {
-        let job = |ms: f64, plan: u64| RunReport {
-            scheduler: "test",
-            makespan_ms: ms,
-            ledger: TransferLedger::new(),
-            assignments: vec![0],
-            device_busy_ms: vec![ms],
-            tasks_per_device: vec![1],
-            decision_ns: 100,
-            plan_ns: plan,
-            trace: vec![],
-        };
         let mut s = SessionReport::new("test");
         s.push(job(10.0, 5000), false);
         s.push(job(20.0, 10), true);
         s.push(job(30.0, 20), true);
         assert_eq!(s.job_count(), 3);
         assert!((s.makespan_ms - 60.0).abs() < 1e-12);
+        assert!((s.span_ms - 60.0).abs() < 1e-12, "closed loop: span == sum");
         assert_eq!(s.plan_ns, 5030);
         assert_eq!(s.decision_ns, 300);
         assert_eq!((s.cache_hits, s.cache_misses), (2, 1));
         assert!((s.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
         assert_eq!(s.repeat_plan_ns(), 30);
         assert!((s.mean_plan_ns() - 5030.0 / 3.0).abs() < 1e-9);
+        // Back-to-back synthesized timings.
+        assert_eq!(s.timings[1].submit_ms, 10.0);
+        assert_eq!(s.timings[2].complete_ms, 60.0);
+        assert_eq!(s.sojourns_ms(), vec![10.0, 20.0, 30.0]);
+        assert_eq!(s.queueing_delays_ms(), vec![0.0, 0.0, 0.0]);
+        assert_eq!(s.max_concurrent_jobs(), 1, "closed loop never overlaps");
+        assert!((s.throughput_jps() - 3.0 / 0.060).abs() < 1e-9);
+    }
+
+    #[test]
+    fn queueing_metrics_from_explicit_timings() {
+        let mut s = SessionReport::new("test");
+        // Three overlapping jobs: sojourns 4, 6, 10; one queued 2 ms.
+        let t = |sub: f64, adm: f64, comp: f64| JobTiming {
+            submit_ms: sub,
+            admit_ms: adm,
+            complete_ms: comp,
+        };
+        s.push_timed(job(4.0, 0), false, t(0.0, 0.0, 4.0));
+        s.push_timed(job(6.0, 0), true, t(1.0, 1.0, 7.0));
+        s.push_timed(job(10.0, 0), true, t(2.0, 4.0, 12.0));
+        assert_eq!(s.sojourns_ms(), vec![4.0, 6.0, 10.0]);
+        assert_eq!(s.queueing_delays_ms(), vec![0.0, 0.0, 2.0]);
+        assert!((s.span_ms - 12.0).abs() < 1e-12);
+        assert!((s.makespan_ms - 20.0).abs() < 1e-12, "sum of sojourns");
+        assert_eq!(s.p50_sojourn_ms(), 6.0, "nearest rank: 2nd of 3");
+        assert_eq!(s.p95_sojourn_ms(), 10.0);
+        assert_eq!(s.p99_sojourn_ms(), 10.0);
+        assert!((s.mean_sojourn_ms() - 20.0 / 3.0).abs() < 1e-12);
+        assert!((s.mean_queueing_delay_ms() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((s.throughput_jps() - 3.0 / 0.012).abs() < 1e-9);
+        assert_eq!(s.max_concurrent_jobs(), 3);
+        // Utilization: busy 4 + 6 + 10 = 20 on device 0 over span 12.
+        let u = s.device_utilization(&[2]);
+        assert!((u[0] - 20.0 / 24.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merged_trace_orders_across_jobs() {
+        let mut s = SessionReport::new("test");
+        let mut a = job(5.0, 0);
+        a.trace = vec![
+            TraceEvent { job: 0, task: 1, device: 0, worker: 0, start_ms: 2.0, end_ms: 3.0 },
+            TraceEvent { job: 0, task: 0, device: 0, worker: 0, start_ms: 0.0, end_ms: 2.0 },
+        ];
+        let mut b = job(5.0, 0);
+        b.trace = vec![TraceEvent {
+            job: 1,
+            task: 0,
+            device: 1,
+            worker: 0,
+            start_ms: 1.0,
+            end_ms: 4.0,
+        }];
+        s.push_timed(a, false, JobTiming { submit_ms: 0.0, admit_ms: 0.0, complete_ms: 5.0 });
+        s.push_timed(b, false, JobTiming { submit_ms: 1.0, admit_ms: 1.0, complete_ms: 6.0 });
+        let merged = s.merged_trace();
+        assert_eq!(merged.len(), 3);
+        assert_eq!((merged[0].job, merged[0].task), (0, 0));
+        assert_eq!((merged[1].job, merged[1].task), (1, 0));
+        assert_eq!((merged[2].job, merged[2].task), (0, 1));
+        assert_eq!(s.max_concurrent_jobs(), 2);
+    }
+
+    #[test]
+    fn empty_session_metrics_are_zero() {
+        let s = SessionReport::new("test");
+        assert_eq!(s.sojourn_percentile_ms(50.0), 0.0);
+        assert_eq!(s.mean_sojourn_ms(), 0.0);
+        assert_eq!(s.mean_queueing_delay_ms(), 0.0);
+        assert_eq!(s.throughput_jps(), 0.0);
+        assert_eq!(s.max_concurrent_jobs(), 0);
+        assert_eq!(s.device_utilization(&[3, 1]), vec![0.0, 0.0]);
     }
 
     #[test]

@@ -1,0 +1,270 @@
+//! Arrival processes and open-stream configuration.
+//!
+//! An [`ArrivalProcess`] turns a job count into deterministic submit
+//! times (virtual milliseconds); a [`StreamConfig`] pairs it with the
+//! bounded admission window the open-system engine enforces. Both are
+//! reachable from the registry config-string syntax
+//! (`"stream:arrival=poisson,rate=120,queue=32"` — see
+//! [`StreamConfig::from_spec`] and the syntax notes on
+//! [`crate::sched::SchedulerRegistry`]), so CLI flags, config files and
+//! bench matrices can sweep traffic scenarios without recompiling.
+//!
+//! Randomized processes draw from the in-tree deterministic
+//! [`Pcg32`], so a `(process, seed, n)` triple always produces the same
+//! arrival trace — the property every reproducibility test leans on.
+
+use anyhow::{bail, Context, Result};
+
+use crate::sched::SchedParams;
+use crate::util::Pcg32;
+
+/// Default admission window (max concurrently admitted jobs).
+pub const DEFAULT_QUEUE: usize = 32;
+
+/// How job submit times are generated.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalProcess {
+    /// Closed loop: job `i + 1` submits the instant job `i` completes,
+    /// each on an otherwise-idle platform — PR 2's back-to-back stream
+    /// semantics, preserved bit-for-bit.
+    Closed,
+    /// Deterministic fixed-rate arrivals: job `i` submits at
+    /// `i * 1000 / rate_jps` ms.
+    Fixed { rate_jps: f64 },
+    /// Poisson process: exponential interarrivals of mean
+    /// `1000 / rate_jps` ms, drawn from a seeded [`Pcg32`].
+    Poisson { rate_jps: f64, seed: u64 },
+    /// Bursty arrivals: batches of `burst` simultaneous submissions at
+    /// Poisson epochs, with the epoch rate scaled so the long-run job
+    /// rate stays `rate_jps`.
+    Bursty { rate_jps: f64, burst: usize, seed: u64 },
+}
+
+impl ArrivalProcess {
+    /// Submit times (ms, non-decreasing) for `n` jobs, or `None` for the
+    /// closed loop (whose submit times are defined by completions).
+    pub fn submit_times_ms(&self, n: usize) -> Option<Vec<f64>> {
+        match *self {
+            ArrivalProcess::Closed => None,
+            ArrivalProcess::Fixed { rate_jps } => {
+                let period = 1000.0 / rate_jps;
+                Some((0..n).map(|i| i as f64 * period).collect())
+            }
+            ArrivalProcess::Poisson { rate_jps, seed } => {
+                let mut rng = Pcg32::seeded(seed);
+                let mut t = 0.0f64;
+                Some(
+                    (0..n)
+                        .map(|_| {
+                            t += exponential_ms(&mut rng, rate_jps);
+                            t
+                        })
+                        .collect(),
+                )
+            }
+            ArrivalProcess::Bursty { rate_jps, burst, seed } => {
+                let mut rng = Pcg32::seeded(seed);
+                let epoch_rate = rate_jps / burst as f64;
+                let mut t = 0.0f64;
+                let mut out = Vec::with_capacity(n);
+                while out.len() < n {
+                    t += exponential_ms(&mut rng, epoch_rate);
+                    for _ in 0..burst {
+                        if out.len() == n {
+                            break;
+                        }
+                        out.push(t);
+                    }
+                }
+                Some(out)
+            }
+        }
+    }
+}
+
+/// One exponential interarrival draw (ms) at `rate` jobs/second.
+fn exponential_ms(rng: &mut Pcg32, rate_jps: f64) -> f64 {
+    // gen_f64 ∈ [0, 1) ⇒ 1 - u ∈ (0, 1] ⇒ ln finite, draw ≥ 0.
+    -(1.0 - rng.gen_f64()).ln() * (1000.0 / rate_jps)
+}
+
+/// Open-stream scenario: arrival process + bounded admission window.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamConfig {
+    /// How submit times are generated.
+    pub arrival: ArrivalProcess,
+    /// Admission window: at most this many jobs may be admitted (in
+    /// flight) at once; later submissions wait in FIFO order, and their
+    /// wait is the session's *queueing delay* metric.
+    pub queue: usize,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig::closed()
+    }
+}
+
+impl StreamConfig {
+    /// The closed-loop stream (PR 2 semantics).
+    pub fn closed() -> StreamConfig {
+        StreamConfig { arrival: ArrivalProcess::Closed, queue: DEFAULT_QUEUE }
+    }
+
+    /// Parse a stream spec in the registry config-string syntax:
+    ///
+    /// ```text
+    /// spec    := "stream" [ ":" params ] | params
+    /// params  := key "=" value { "," key "=" value }
+    /// keys    := arrival = closed | fixed | poisson | bursty
+    ///            rate    = jobs per second   (required unless closed)
+    ///            queue   = admission window  (default 32, >= 1)
+    ///            seed    = PRNG seed         (poisson/bursty, default 7)
+    ///            burst   = batch size        (bursty only, default 4)
+    /// ```
+    ///
+    /// Examples: `"stream:arrival=poisson,rate=120,queue=32"`,
+    /// `"arrival=fixed,rate=200"`, `"stream"` (closed). Unknown keys,
+    /// keys that the selected arrival kind does not consume, and
+    /// malformed values are hard errors.
+    pub fn from_spec(spec: &str) -> Result<StreamConfig> {
+        let params_src = match spec.trim().split_once(':') {
+            Some((name, rest)) => {
+                if name.trim() != "stream" {
+                    bail!("stream spec must start with \"stream:\", got {spec:?}");
+                }
+                rest
+            }
+            None if spec.trim() == "stream" || spec.trim().is_empty() => "",
+            None => spec,
+        };
+        fn need_rate(p: &mut SchedParams, kind: &str) -> Result<f64> {
+            let r = p.f64("rate", 0.0)?;
+            if r <= 0.0 {
+                bail!("arrival={kind} requires rate > 0 (jobs/s)");
+            }
+            Ok(r)
+        }
+        let mut p = SchedParams::parse(params_src)
+            .with_context(|| format!("parsing stream spec {spec:?}"))?;
+        let arrival_kind = p.get("arrival").unwrap_or_else(|| "closed".to_string());
+        let queue = p.u64("queue", DEFAULT_QUEUE as u64)? as usize;
+        if queue == 0 {
+            bail!("queue must be >= 1");
+        }
+        let arrival = match arrival_kind.as_str() {
+            "closed" => ArrivalProcess::Closed,
+            "fixed" => ArrivalProcess::Fixed { rate_jps: need_rate(&mut p, "fixed")? },
+            "poisson" => {
+                let rate_jps = need_rate(&mut p, "poisson")?;
+                ArrivalProcess::Poisson { rate_jps, seed: p.u64("seed", 7)? }
+            }
+            "bursty" => {
+                let rate_jps = need_rate(&mut p, "bursty")?;
+                let burst = p.u64("burst", 4)? as usize;
+                if burst == 0 {
+                    bail!("burst must be >= 1");
+                }
+                ArrivalProcess::Bursty { rate_jps, burst, seed: p.u64("seed", 7)? }
+            }
+            other => bail!("unknown arrival {other:?} (closed | fixed | poisson | bursty)"),
+        };
+        p.finish().with_context(|| format!("parsing stream spec {spec:?}"))?;
+        Ok(StreamConfig { arrival, queue })
+    }
+
+    /// Render back to the canonical spec string (diagnostics, bench
+    /// JSON rows).
+    pub fn spec_string(&self) -> String {
+        match &self.arrival {
+            ArrivalProcess::Closed => "stream:arrival=closed".to_string(),
+            ArrivalProcess::Fixed { rate_jps } => {
+                format!("stream:arrival=fixed,rate={rate_jps},queue={}", self.queue)
+            }
+            ArrivalProcess::Poisson { rate_jps, seed } => {
+                format!("stream:arrival=poisson,rate={rate_jps},queue={},seed={seed}", self.queue)
+            }
+            ArrivalProcess::Bursty { rate_jps, burst, seed } => format!(
+                "stream:arrival=bursty,rate={rate_jps},burst={burst},queue={},seed={seed}",
+                self.queue
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_times_are_evenly_spaced() {
+        let t = ArrivalProcess::Fixed { rate_jps: 200.0 }.submit_times_ms(4).unwrap();
+        assert_eq!(t, vec![0.0, 5.0, 10.0, 15.0]);
+    }
+
+    #[test]
+    fn poisson_times_deterministic_and_monotone() {
+        let p = ArrivalProcess::Poisson { rate_jps: 100.0, seed: 7 };
+        let a = p.submit_times_ms(32).unwrap();
+        let b = p.submit_times_ms(32).unwrap();
+        assert_eq!(a, b, "same seed, same trace");
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "non-decreasing");
+        assert!(a[0] >= 0.0);
+        // Mean interarrival should be in the right ballpark (10 ms).
+        let mean = a.last().unwrap() / 32.0;
+        assert!(mean > 2.0 && mean < 40.0, "mean interarrival {mean} ms");
+        let c = ArrivalProcess::Poisson { rate_jps: 100.0, seed: 8 }.submit_times_ms(32).unwrap();
+        assert_ne!(a, c, "different seeds differ");
+    }
+
+    #[test]
+    fn bursty_batches_share_epochs() {
+        let p = ArrivalProcess::Bursty { rate_jps: 100.0, burst: 4, seed: 3 };
+        let t = p.submit_times_ms(10).unwrap();
+        assert_eq!(t.len(), 10);
+        assert_eq!(t[0], t[1]);
+        assert_eq!(t[0], t[3]);
+        assert!(t[4] > t[3], "next batch strictly later");
+        assert_eq!(t[4], t[7]);
+    }
+
+    #[test]
+    fn closed_has_no_precomputed_times() {
+        assert!(ArrivalProcess::Closed.submit_times_ms(5).is_none());
+    }
+
+    #[test]
+    fn spec_round_trips() {
+        let s = StreamConfig::from_spec("stream:arrival=poisson,rate=120,queue=32").unwrap();
+        assert_eq!(
+            s.arrival,
+            ArrivalProcess::Poisson { rate_jps: 120.0, seed: 7 }
+        );
+        assert_eq!(s.queue, 32);
+        assert_eq!(StreamConfig::from_spec(&s.spec_string()).unwrap(), s);
+
+        assert_eq!(StreamConfig::from_spec("stream").unwrap(), StreamConfig::closed());
+        assert_eq!(StreamConfig::from_spec("arrival=closed").unwrap(), StreamConfig::closed());
+        let b = StreamConfig::from_spec("arrival=bursty,rate=50,burst=8,seed=11,queue=4").unwrap();
+        assert_eq!(
+            b.arrival,
+            ArrivalProcess::Bursty { rate_jps: 50.0, burst: 8, seed: 11 }
+        );
+        assert_eq!(b.queue, 4);
+    }
+
+    #[test]
+    fn spec_errors_are_loud() {
+        assert!(StreamConfig::from_spec("stream:arrival=uniform").is_err(), "unknown kind");
+        assert!(StreamConfig::from_spec("stream:arrival=poisson").is_err(), "missing rate");
+        assert!(StreamConfig::from_spec("stream:arrival=poisson,rate=0").is_err(), "zero rate");
+        assert!(StreamConfig::from_spec("stream:arrival=closed,rate=10").is_err(), "stray rate");
+        assert!(StreamConfig::from_spec("stream:queue=0,arrival=fixed,rate=1").is_err());
+        assert!(StreamConfig::from_spec("stream:bogus=1").is_err(), "unknown key");
+        assert!(StreamConfig::from_spec("session:arrival=closed").is_err(), "wrong name");
+        assert!(
+            StreamConfig::from_spec("stream:arrival=bursty,rate=10,burst=0").is_err(),
+            "zero burst"
+        );
+    }
+}

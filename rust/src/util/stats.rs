@@ -53,6 +53,19 @@ pub fn percentile_sorted(sorted: &[f64], pct: f64) -> f64 {
     sorted[lo] * (1.0 - frac) + sorted[hi] * frac
 }
 
+/// Nearest-rank percentile of a pre-sorted slice (Hyndman–Fan's
+/// "inverted CDF"): the smallest sample whose rank is at least
+/// `ceil(p/100 * n)`, for `p` in (0, 100]. Unlike
+/// [`percentile_sorted`] this never interpolates — the result is always
+/// an observed sample, which is the convention for reporting latency
+/// percentiles (p50/p95/p99) in the queueing [`crate::sim::SessionReport`].
+pub fn percentile_nearest_rank(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of empty sample");
+    assert!(p > 0.0 && p <= 100.0, "p must be in (0, 100], got {p}");
+    let rank = (p / 100.0 * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
 /// Geometric mean; requires strictly positive samples.
 pub fn geomean(samples: &[f64]) -> f64 {
     assert!(!samples.is_empty());
@@ -96,6 +109,33 @@ mod tests {
         let sorted = [0.0, 10.0];
         assert!((percentile_sorted(&sorted, 50.0) - 5.0).abs() < 1e-12);
         assert!((percentile_sorted(&sorted, 95.0) - 9.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nearest_rank_known_distribution() {
+        // 1..=100: pN is exactly N (the classic nearest-rank identity).
+        let sorted: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        for p in [1.0, 25.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+            assert_eq!(percentile_nearest_rank(&sorted, p), p, "p{p}");
+        }
+        // Fractional p rounds the rank up.
+        assert_eq!(percentile_nearest_rank(&sorted, 0.5), 1.0);
+        assert_eq!(percentile_nearest_rank(&sorted, 94.1), 95.0);
+    }
+
+    #[test]
+    fn nearest_rank_small_samples() {
+        assert_eq!(percentile_nearest_rank(&[7.5], 50.0), 7.5);
+        assert_eq!(percentile_nearest_rank(&[7.5], 99.0), 7.5);
+        let two = [1.0, 2.0];
+        assert_eq!(percentile_nearest_rank(&two, 50.0), 1.0, "ceil(1.0) = 1st");
+        assert_eq!(percentile_nearest_rank(&two, 51.0), 2.0, "ceil(1.02) = 2nd");
+        assert_eq!(percentile_nearest_rank(&two, 100.0), 2.0);
+        // Never interpolates: results are observed samples.
+        let three = [0.0, 10.0, 20.0];
+        for p in [10.0, 33.4, 50.0, 66.7, 95.0] {
+            assert!(three.contains(&percentile_nearest_rank(&three, p)), "p{p}");
+        }
     }
 
     #[test]

@@ -140,3 +140,45 @@ fn fixed_seed_determinism_with_and_without_workspace() {
         assert_eq!(a.parts, c.parts, "case {i}: warm workspace differs");
     }
 }
+
+/// Parallel recursive bisection (scoped-thread fork with derived
+/// per-node RNG streams) must reproduce the sequential path exactly on
+/// the seed corpus — small graphs (below the fork threshold, trivially
+/// equal) and a large k-way ring that actually forks.
+#[test]
+fn parallel_bisection_parity_on_corpus() {
+    let big = {
+        // 4 cliques of 300 ring-connected: forks at the top level.
+        let sz = 300;
+        let n = 4 * sz;
+        let mut adj = vec![Vec::new(); n];
+        for c in 0..4 {
+            for i in 0..sz {
+                for j in 0..sz {
+                    if i != j {
+                        adj[c * sz + i].push((c * sz + j, 20));
+                    }
+                }
+            }
+        }
+        for c in 0..4 {
+            let a = c * sz;
+            let b = ((c + 1) % 4) * sz;
+            adj[a].push((b, 1));
+            adj[b].push((a, 1));
+        }
+        MetisGraph::from_adj(vec![1; n], adj)
+    };
+    let corpus: Vec<(MetisGraph, PartitionConfig)> = vec![
+        (four_cliques(6), PartitionConfig { k: 4, seed: 3, ..Default::default() }),
+        (path(200, 2), PartitionConfig { k: 3, seed: 9, ..Default::default() }),
+        (big, PartitionConfig { k: 4, seed: 3, ..Default::default() }),
+    ];
+    for (i, (g, cfg)) in corpus.iter().enumerate() {
+        let par = partition(g, cfg);
+        let seq = partition(g, &PartitionConfig { parallel: false, ..cfg.clone() });
+        assert_eq!(par.parts, seq.parts, "case {i}: parallel/sequential drift");
+        assert_eq!(par.edge_cut, seq.edge_cut, "case {i}: cut drift");
+        assert_eq!(par.part_weights, seq.part_weights, "case {i}: weights drift");
+    }
+}
