@@ -668,12 +668,12 @@ def run(dag, name, model=None, workers=None, **kw):
 
 # -------------------------------------------------- open-system engine
 #
-# Transliteration of sim::engine::EngineCore (PR 4): one global event
-# heap ordered by (time, kind, job, task) with kind 0=drain, 1=arrival,
-# 2=ready; many jobs share worker_free / bus / directory; a bounded
-# admission window (queue) holds excess arrivals FIFO.
-
-from collections import deque  # noqa: E402
+# Transliteration of sim::engine::EngineCore (PR 4 + PR 5 QoS): one
+# global event heap ordered by (time, kind, job, task) with kind
+# 0=drain, 1=arrival, 2=ready, 3=reject; many jobs share worker_free /
+# bus / directory; a bounded admission window (queue) holds excess
+# arrivals in a pending queue ordered by the admission policy
+# (fifo / edf / sjf / reject with wait budgets).
 
 
 def dag_signature(dag):
@@ -893,6 +893,26 @@ class OpenGpWindow:
         self.replans += 1
 
 
+def est_total_work(dag, model, k):
+    """Mirror of sim::engine::est_total_work_ms: sum of best-device
+    kernel times."""
+    total = 0.0
+    for (_, kernel, size) in dag.nodes:
+        if kernel == SOURCE:
+            continue
+        best = math.inf
+        for d in range(k):
+            t = model.kernel_time_ms(kernel, size, d)
+            if t < best:
+                best = t
+        total += best
+    return total
+
+
+def default_qos():
+    return dict(cls=0, prio=0, deadline=math.inf, budget=math.inf)
+
+
 def simulate_open_engine(
     jobs_in,
     policy,
@@ -903,8 +923,15 @@ def simulate_open_engine(
     prefetch=False,
     return_to_host=True,
     collect_trace=False,
+    qos=None,
+    admit="fifo",
+    stream_budget=math.inf,
 ):
-    """Mirror of EngineCore::run: jobs_in = [(dag, submit_ms)]."""
+    """Mirror of EngineCore::run: jobs_in = [(dag, submit_ms)]; qos[i]
+    (optional) = dict(cls, prio, deadline, budget) with deadline/budget
+    relative to submit; admit = fifo | edf | sjf | reject. Under reject
+    each job's effective budget is min(per-job, stream_budget) — the
+    mirror of StreamConfig::effective_budget_ms."""
     import heapq
 
     k = len(workers)
@@ -915,18 +942,25 @@ def simulate_open_engine(
     mask_of = []
     avail = []
     heap = []
-    pending = deque()
+    pending = []
     state = dict(inflight=0)
     queue = max(queue, 1)
 
     jobs = []
     for j, (dag, submit) in enumerate(jobs_in):
+        q = qos[j] if qos else default_qos()
         jobs.append(
             dict(
                 dag=dag,
                 submit=submit,
                 admit=0.0,
                 complete=0.0,
+                cls=q["cls"],
+                prio=q["prio"],
+                deadline_abs=submit + q["deadline"],
+                est_work=est_total_work(dag, model, k),
+                budget=(min(q["budget"], stream_budget) if admit == "reject" else math.inf),
+                rejected=False,
                 out=None,
                 initial=None,
                 indeg=None,
@@ -942,6 +976,22 @@ def simulate_open_engine(
             )
         )
         heapq.heappush(heap, (submit, 1, j, 0))
+
+    def pending_key(j):
+        st = jobs[j]
+        if admit in ("fifo", "reject"):
+            return (0, 0.0, 0.0, j)
+        if admit == "edf":
+            return (st["prio"], st["deadline_abs"], 0.0, j)
+        if admit == "sjf":
+            return (st["prio"], st["est_work"], 0.0, j)
+        raise ValueError(admit)
+
+    def pop_pending():
+        if not pending:
+            return None
+        best = min(range(len(pending)), key=lambda i: pending_key(pending[i]))
+        return pending.pop(best)
 
     def alloc(nbytes, mask, t):
         # New data exists no earlier than its job's admission instant.
@@ -974,7 +1024,7 @@ def simulate_open_engine(
         policy.on_job_drain(j)
         heapq.heappush(heap, (st["complete"], 0, j, 0))
 
-    def admit(j, now):
+    def admit_job(j, now):
         st = jobs[j]
         st["admit"] = now
         policy.on_submit(j, st["dag"])
@@ -1079,25 +1129,40 @@ def simulate_open_engine(
         t, kind, j, v = heapq.heappop(heap)
         if kind == 1:
             if state["inflight"] < queue:
-                admit(j, t)
+                admit_job(j, t)
             else:
                 pending.append(j)
+                if jobs[j]["budget"] != math.inf:
+                    heapq.heappush(heap, (t + jobs[j]["budget"], 3, j, 0))
         elif kind == 0:
             state["inflight"] -= 1
-            if pending:
-                admit(pending.popleft(), t)
+            nxt = pop_pending()
+            if nxt is not None:
+                admit_job(nxt, t)
+        elif kind == 3:
+            if j in pending:
+                pending.remove(j)
+                st = jobs[j]
+                st["rejected"] = True
+                st["remaining"] = 0
+                st["admit"] = t
+                st["complete"] = t
         else:
             dispatch(j, v, t)
 
     for j, st in enumerate(jobs):
-        assert st["remaining"] == 0, f"job {j}: stuck ({st['remaining']} left)"
+        assert st["rejected"] or st["remaining"] == 0, f"job {j}: stuck"
 
     return [
         dict(
-            makespan=st["complete"] - st["submit"],
+            makespan=0.0 if st["rejected"] else st["complete"] - st["submit"],
             submit=st["submit"],
             admit=st["admit"],
             complete=st["complete"],
+            cls=st["cls"],
+            prio=st["prio"],
+            deadline_abs=st["deadline_abs"],
+            rejected=st["rejected"],
             assignments=st["assignments"],
             ledger_count=st["ledger_count"],
             ledger_bytes=st["ledger_bytes"],
@@ -1145,16 +1210,25 @@ def percentile_nearest_rank(sorted_vals, p):
     return sorted_vals[rank - 1]
 
 
+def deadline_hit(r):
+    if r.get("deadline_abs", math.inf) == math.inf:
+        return True
+    return (not r.get("rejected", False)) and r["complete"] <= r["deadline_abs"] + 1e-9
+
+
 def session_metrics(results, workers):
-    sojourns = sorted(r["complete"] - r["submit"] for r in results)
-    qdelays = [r["admit"] - r["submit"] for r in results]
+    # Latency metrics describe served traffic; rejected jobs are
+    # excluded and counted separately (mirror of SessionReport).
+    done = [r for r in results if not r.get("rejected", False)]
+    sojourns = sorted(r["complete"] - r["submit"] for r in done)
+    qdelays = [r["admit"] - r["submit"] for r in done]
     span = max((r["complete"] for r in results), default=0.0)
     busy = [0.0] * len(workers)
     for r in results:
         for d, b in enumerate(r["device_busy"]):
             busy[d] += b
     events = []
-    for r in results:
+    for r in done:
         events.append((r["admit"], 1))
         events.append((r["complete"], -1))
     events.sort()
@@ -1162,6 +1236,7 @@ def session_metrics(results, workers):
     for _, delta in events:
         cur += delta
         best = max(best, cur)
+    with_ddl = [r for r in results if r.get("deadline_abs", math.inf) != math.inf]
     return dict(
         span=span,
         p50=percentile_nearest_rank(sojourns, 50.0) if sojourns else 0.0,
@@ -1169,12 +1244,47 @@ def session_metrics(results, workers):
         p99=percentile_nearest_rank(sojourns, 99.0) if sojourns else 0.0,
         mean_sojourn=sum(sojourns) / len(sojourns) if sojourns else 0.0,
         mean_qdelay=sum(qdelays) / len(qdelays) if qdelays else 0.0,
-        throughput=len(results) / (span / 1000.0) if span > 0 else 0.0,
+        throughput=len(done) / (span / 1000.0) if span > 0 else 0.0,
         max_concurrent=best,
+        rejected=len(results) - len(done),
+        deadline_hit_rate=(
+            sum(1 for r in with_ddl if deadline_hit(r)) / len(with_ddl)
+            if with_ddl
+            else 1.0
+        ),
         utilization=[
             (b / (span * w) if span > 0 else 0.0) for b, w in zip(busy, workers)
         ],
     )
+
+
+def class_metrics(results, span, n_classes, names):
+    """Mirror of SessionReport::per_class."""
+    out = []
+    for c in range(n_classes):
+        of_class = [r for r in results if r.get("cls", 0) == c]
+        done = sorted(
+            (r["complete"] - r["submit"] for r in of_class if not r.get("rejected", False))
+        )
+        with_ddl = [r for r in of_class if r.get("deadline_abs", math.inf) != math.inf]
+        out.append(
+            dict(
+                name=names[c] if c < len(names) else f"class{c}",
+                jobs=len(of_class),
+                rejected=sum(1 for r in of_class if r.get("rejected", False)),
+                p50=percentile_nearest_rank(done, 50.0) if done else 0.0,
+                p95=percentile_nearest_rank(done, 95.0) if done else 0.0,
+                p99=percentile_nearest_rank(done, 99.0) if done else 0.0,
+                mean_sojourn=sum(done) / len(done) if done else 0.0,
+                deadline_hit_rate=(
+                    sum(1 for r in with_ddl if deadline_hit(r)) / len(with_ddl)
+                    if with_ddl
+                    else 1.0
+                ),
+                throughput=(len(done) / (span / 1000.0)) if span > 0 else 0.0,
+            )
+        )
+    return out
 
 
 def make_open_policy(spec, k, model, window=12):
@@ -1195,14 +1305,85 @@ def make_open_policy(spec, k, model, window=12):
     raise ValueError(spec)
 
 
-def open_run(dags, spec, submits, queue, model=None, workers=None, collect_trace=False):
+def open_run(
+    dags,
+    spec,
+    submits,
+    queue,
+    model=None,
+    workers=None,
+    collect_trace=False,
+    qos=None,
+    admit="fifo",
+    stream_budget=math.inf,
+):
     model = model or CalibratedModel()
     workers = workers or PAPER_WORKERS
     policy = make_open_policy(spec, len(workers), model)
     results = simulate_open_engine(
-        list(zip(dags, submits)), policy, workers, model, queue, collect_trace=collect_trace
+        list(zip(dags, submits)),
+        policy,
+        workers,
+        model,
+        queue,
+        collect_trace=collect_trace,
+        qos=qos,
+        admit=admit,
+        stream_budget=stream_budget,
     )
     return results, policy
+
+
+# ----------------------------------------------------- QoS job classes
+
+def default_qos_mix():
+    """Mirror of workloads::default_qos_mix (keep in sync)."""
+    return [
+        dict(name="interactive", weight=3.0, family=("layered", 12, MA),
+             size=256, prio=0, deadline=12.0, budget=8.0),
+        dict(name="standard", weight=2.0, family=("layered", 24, MA),
+             size=256, prio=0, deadline=30.0, budget=20.0),
+        dict(name="batch", weight=1.0, family=("phased", 8, 4),
+             size=256, prio=0, deadline=math.inf, budget=math.inf),
+    ]
+
+
+def build_family(family, size, seed):
+    """Mirror of workloads::JobFamily::build."""
+    kind = family[0]
+    if kind == "phased":
+        return phased(family[1], family[2], size)
+    if kind == "layered":
+        return generate_layered(scaled_gen_cfg(family[1], family[2], size, seed))
+    if kind == "chain":
+        return chain(family[1], family[2], size)
+    raise ValueError(kind)
+
+
+def job_classes(classes, n, seed):
+    """Mirror of workloads::job_classes: one weighted gen_f64 pick plus
+    one next_u64 DAG seed per job, PCG stream seed ^ 0x514F5321."""
+    total = sum(c["weight"] for c in classes)
+    rng = pm.Pcg32.seeded(seed ^ 0x514F5321)
+    out = []
+    for _ in range(n):
+        x = rng.gen_f64() * total
+        job_seed = rng.next_u64()
+        idx = len(classes) - 1
+        acc = 0.0
+        for i, c in enumerate(classes):
+            acc += c["weight"]
+            if x < acc:
+                idx = i
+                break
+        c = classes[idx]
+        out.append(
+            dict(
+                dag=build_family(c["family"], c["size"], job_seed),
+                qos=dict(cls=idx, prio=c["prio"], deadline=c["deadline"], budget=c["budget"]),
+            )
+        )
+    return out
 
 
 # ----------------------------------------------------------------- checks
@@ -1418,6 +1599,119 @@ def run_checks():
             win_found = True
     check("cross-job window wins at rate=220", win_found)
 
+    print("QoS: admit=fifo is the pre-QoS engine bit-for-bit")
+    mix = default_qos_mix()
+    classed = job_classes(mix, 24, 2015)
+    qdags = [j["dag"] for j in classed]
+    qqos = [j["qos"] for j in classed]
+    qsubmits = bursty_times(380.0, 8, 7, 24)
+    plain, _ = open_run(qdags, "dmda", qsubmits, 2)
+    tagged, _ = open_run(qdags, "dmda", qsubmits, 2, qos=qqos, admit="fifo")
+    check(
+        "fifo ignores qos (same schedule)",
+        all(
+            a["admit"] == b["admit"] and a["complete"] == b["complete"]
+            and a["assignments"] == b["assignments"]
+            for a, b in zip(plain, tagged)
+        ),
+    )
+
+    print("QoS: edf/sjf pending-queue order (5-job table test)")
+    # queue=1, arrivals at 0/.01/.02/.03/.04 ms while job 0 runs ~5 ms:
+    # jobs 1..4 all pend; admissions then pop in key order.
+    tdags = [phased(8, 4, 256)] + [chain(3, MA, 256) for _ in range(4)]
+    tsub = [i * 0.01 for i in range(5)]
+    tqos = [default_qos()]
+    for i, (ddl, work_len) in enumerate([(100.0, 2), (50.0, 4), (80.0, 6), (20.0, 8)]):
+        tqos.append(dict(cls=0, prio=0, deadline=ddl, budget=math.inf))
+        tdags[1 + i] = chain(work_len, MA, 256)
+    res, _ = open_run(tdags, "dmda", tsub, 1, qos=tqos, admit="edf")
+    order = sorted(range(1, 5), key=lambda j: res[j]["admit"])
+    check("edf order = deadline order", order == [4, 2, 3, 1], order)
+    res, _ = open_run(tdags, "dmda", tsub, 1, qos=tqos, admit="sjf")
+    order = sorted(range(1, 5), key=lambda j: res[j]["admit"])
+    check("sjf order = est-work order", order == [1, 2, 3, 4], order)
+    # Priority bands dominate both keys.
+    pqos = list(tqos)
+    pqos[4] = dict(cls=0, prio=1, deadline=20.0, budget=math.inf)
+    res, _ = open_run(tdags, "dmda", tsub, 1, qos=pqos, admit="edf")
+    order = sorted(range(1, 5), key=lambda j: res[j]["admit"])
+    check("edf priority bands first", order == [2, 3, 1, 4], order)
+
+    print("QoS: reject never admits past its budget (property)")
+    rng = pm.Pcg32.seeded(0xB7D6E7)
+    ok_budget = True
+    saw_reject = 0
+    for _ in range(12):
+        nn = 12 + rng.gen_range(12)
+        budgets = [rng.gen_f64() * 10.0 for _ in range(nn)]
+        pqos = [dict(cls=0, prio=0, deadline=math.inf, budget=b) for b in budgets]
+        pdags = [chain(2 + rng.gen_range(6), MA, 256) for _ in range(nn)]
+        psub = bursty_times(300.0 + rng.gen_f64() * 400.0, 6, rng.next_u64(), nn)
+        res, _ = open_run(pdags, "dmda", psub, 1 + rng.gen_range(2), qos=pqos, admit="reject")
+        for r, b in zip(res, budgets):
+            if r["rejected"]:
+                saw_reject += 1
+            elif r["admit"] - r["submit"] > b + 1e-9:
+                ok_budget = False
+    check("admitted waits within budgets", ok_budget)
+    check("rejections occur across trials", saw_reject > 0, saw_reject)
+    # Session-wide budget (admit=reject,budget=MS) caps jobs whose own
+    # budget is infinite — mirror of StreamConfig::effective_budget_ms.
+    sdags = [chain(4, MA, 256) for _ in range(12)]
+    ssub = bursty_times(400.0, 6, 9, 12)
+    sqos = [default_qos() for _ in range(12)]
+    res, _ = open_run(sdags, "dmda", ssub, 1, qos=sqos, admit="reject", stream_budget=1.0)
+    check(
+        "stream budget caps default-qos waits",
+        all(r["rejected"] or r["admit"] - r["submit"] <= 1.0 + 1e-9 for r in res),
+    )
+    check("stream budget causes rejections", any(r["rejected"] for r in res),
+          sum(r["rejected"] for r in res))
+
+    print("QoS: open-qos headline (bursty 380/s, burst 8, queue 2)")
+    rows = {}
+    for adm in ["fifo", "edf", "sjf", "reject"]:
+        res, _ = open_run(qdags, "dmda", qsubmits, 2, qos=qqos, admit=adm)
+        rows[adm] = session_metrics(res, PAPER_WORKERS)
+        per = class_metrics(res, rows[adm]["span"], len(mix), [c["name"] for c in mix])
+        print(
+            f"    {adm:>6}: hit={rows[adm]['deadline_hit_rate']:.2f} "
+            f"mean={rows[adm]['mean_sojourn']:.2f} ms p95={rows[adm]['p95']:.2f} "
+            f"rej={rows[adm]['rejected']} "
+            f"interactive(p95={per[0]['p95']:.2f}, hit={per[0]['deadline_hit_rate']:.2f})"
+        )
+    check(
+        "edf beats fifo on deadline-hit",
+        rows["edf"]["deadline_hit_rate"] >= rows["fifo"]["deadline_hit_rate"] + 0.15,
+        f"{rows['edf']['deadline_hit_rate']:.2f} vs {rows['fifo']['deadline_hit_rate']:.2f}",
+    )
+    check(
+        "sjf beats fifo on mean sojourn",
+        rows["sjf"]["mean_sojourn"] < 0.85 * rows["fifo"]["mean_sojourn"],
+        f"{rows['sjf']['mean_sojourn']:.2f} vs {rows['fifo']['mean_sojourn']:.2f}",
+    )
+    check("reject sheds load", rows["reject"]["rejected"] > 0, rows["reject"]["rejected"])
+
+    print("QoS: classed stream determinism")
+    c2 = job_classes(mix, 24, 2015)
+    check(
+        "job_classes deterministic",
+        [j["qos"] for j in c2] == [j["qos"] for j in classed]
+        and all(
+            a["dag"].nodes == b["dag"].nodes and a["dag"].edges == b["dag"].edges
+            for a, b in zip(c2, classed)
+        ),
+    )
+    r1, _ = open_run(qdags, "dmda", qsubmits, 2, qos=qqos, admit="reject", collect_trace=True)
+    r2, _ = open_run(qdags, "dmda", qsubmits, 2, qos=qqos, admit="reject", collect_trace=True)
+    check(
+        "open-qos scenario deterministic",
+        [r["trace"] for r in r1] == [r["trace"] for r in r2]
+        and [r["rejected"] for r in r1] == [r["rejected"] for r in r2]
+        and [r["complete"] for r in r1] == [r["complete"] for r in r2],
+    )
+
     print("percentiles (nearest rank)")
     hundred = [float(x) for x in range(1, 101)]
     check("p50 of 1..100 == 50", percentile_nearest_rank(hundred, 50.0) == 50.0)
@@ -1500,6 +1794,9 @@ def structural_hit_rate(dags):
     return hits / len(dags) if dags else 0.0
 
 
+DEFAULT_QOS_STREAM = "stream:arrival=bursty,rate=380,burst=8,queue=2,seed=7"
+
+
 def bench_json(jobs=8, window=12, size=1024, open_jobs=24, rate=220.0, queue=8):
     import time
 
@@ -1515,6 +1812,38 @@ def bench_json(jobs=8, window=12, size=1024, open_jobs=24, rate=220.0, queue=8):
         ("open-mix", job_mix(open_jobs, 256, 2015), open_submits),
     ]
     rows = []
+
+    def push_row(scenario, spec, stream, dags, results, plan_ns, first_plan_ns,
+                 n_classes=1, names=()):
+        m = session_metrics(results, workers)
+        rows.append(
+            dict(
+                scenario=scenario,
+                policy=spec,
+                stream=stream,
+                jobs=len(dags),
+                makespan_ms=sum(r["makespan"] for r in results),
+                span_ms=m["span"],
+                transfers=sum(r["ledger_count"] for r in results),
+                plan_ns=plan_ns,
+                first_plan_ns=first_plan_ns,
+                repeat_plan_ns=0,
+                cache_hit_rate=structural_hit_rate(dags),
+                decision_ns=0,
+                p50_sojourn_ms=m["p50"],
+                p95_sojourn_ms=m["p95"],
+                p99_sojourn_ms=m["p99"],
+                mean_sojourn_ms=m["mean_sojourn"],
+                mean_queue_delay_ms=m["mean_qdelay"],
+                throughput_jps=m["throughput"],
+                max_concurrent_jobs=m["max_concurrent"],
+                rejected=m["rejected"],
+                deadline_hit_rate=m["deadline_hit_rate"],
+                utilization=m["utilization"],
+                classes=class_metrics(results, m["span"], n_classes, list(names)),
+            )
+        )
+
     for scenario, dags, submits in scenarios:
         for spec in ["eager", "dmda", "heft", "gp", f"gp:window={window}"]:
             plan_ns = 0
@@ -1555,31 +1884,22 @@ def bench_json(jobs=8, window=12, size=1024, open_jobs=24, rate=220.0, queue=8):
                     first_plan_ns = t1 - t0
                     plan_ns += t1 - t0
                 stream = stream_spec
-            m = session_metrics(results, workers)
-            rows.append(
-                dict(
-                    scenario=scenario,
-                    policy=spec,
-                    stream=stream,
-                    jobs=len(dags),
-                    makespan_ms=sum(r["makespan"] for r in results),
-                    span_ms=m["span"],
-                    transfers=sum(r["ledger_count"] for r in results),
-                    plan_ns=plan_ns,
-                    first_plan_ns=first_plan_ns,
-                    repeat_plan_ns=0,
-                    cache_hit_rate=structural_hit_rate(dags),
-                    decision_ns=0,
-                    p50_sojourn_ms=m["p50"],
-                    p95_sojourn_ms=m["p95"],
-                    p99_sojourn_ms=m["p99"],
-                    mean_sojourn_ms=m["mean_sojourn"],
-                    mean_queue_delay_ms=m["mean_qdelay"],
-                    throughput_jps=m["throughput"],
-                    max_concurrent_jobs=m["max_concurrent"],
-                    utilization=m["utilization"],
-                )
-            )
+            push_row(scenario, spec, stream, dags, results, plan_ns, first_plan_ns)
+
+    # open-qos: classed traffic, admission-policy sweep under one
+    # scheduler (mirror of cmd_bench_stream's sweep).
+    mix = default_qos_mix()
+    classed = job_classes(mix, open_jobs, 2015)
+    qdags = [j["dag"] for j in classed]
+    qqos = [j["qos"] for j in classed]
+    qsubmits = bursty_times(380.0, 8, 7, open_jobs)
+    for adm in ["fifo", "edf", "sjf", "reject"]:
+        results, _ = open_run(qdags, "dmda", qsubmits, 2, model=model, qos=qqos, admit=adm)
+        stream = DEFAULT_QOS_STREAM if adm == "fifo" else f"{DEFAULT_QOS_STREAM},admit={adm}"
+        push_row(
+            "open-qos", "dmda", stream, qdags, results, 0, 0,
+            n_classes=len(mix), names=[c["name"] for c in mix],
+        )
     lines = [
         "{",
         '  "bench": "sched_session",',
@@ -1589,9 +1909,31 @@ def bench_json(jobs=8, window=12, size=1024, open_jobs=24, rate=220.0, queue=8):
         f'  "size": {size},',
         '  "rows": [',
     ]
+    def esc(s):
+        # Mirror of main.rs json_escape: backslash, quote, control chars.
+        out = []
+        for ch in s:
+            if ch == "\\":
+                out.append("\\\\")
+            elif ch == '"':
+                out.append('\\"')
+            elif ord(ch) < 0x20:
+                out.append(f"\\u{ord(ch):04x}")
+            else:
+                out.append(ch)
+        return "".join(out)
+
     for i, r in enumerate(rows):
         comma = "" if i + 1 == len(rows) else ","
         util = ", ".join(f"{u:.4f}" for u in r["utilization"])
+        classes = ", ".join(
+            f'{{"name": "{esc(c["name"])}", "jobs": {c["jobs"]}, "rejected": {c["rejected"]}, '
+            f'"p50_sojourn_ms": {c["p50"]:.6f}, "p95_sojourn_ms": {c["p95"]:.6f}, '
+            f'"p99_sojourn_ms": {c["p99"]:.6f}, "mean_sojourn_ms": {c["mean_sojourn"]:.6f}, '
+            f'"deadline_hit_rate": {c["deadline_hit_rate"]:.4f}, '
+            f'"throughput_jps": {c["throughput"]:.6f}}}'
+            for c in r["classes"]
+        )
         lines.append(
             f'    {{"scenario": "{r["scenario"]}", "policy": "{r["policy"]}", '
             f'"stream": "{r["stream"]}", "jobs": {r["jobs"]}, '
@@ -1606,7 +1948,9 @@ def bench_json(jobs=8, window=12, size=1024, open_jobs=24, rate=220.0, queue=8):
             f'"mean_queue_delay_ms": {r["mean_queue_delay_ms"]:.6f}, '
             f'"throughput_jps": {r["throughput_jps"]:.6f}, '
             f'"max_concurrent_jobs": {r["max_concurrent_jobs"]}, '
-            f'"utilization": [{util}]}}{comma}'
+            f'"rejected": {r["rejected"]}, '
+            f'"deadline_hit_rate": {r["deadline_hit_rate"]:.4f}, '
+            f'"utilization": [{util}], "classes": [{classes}]}}{comma}'
         )
     lines.append("  ]")
     lines.append("}")

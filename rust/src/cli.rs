@@ -95,13 +95,17 @@ COMMANDS:
              --dot FILE [--out FILE] [--k N] [--kernel K] [--size N]
   figures    Reproduce all paper tables quickly (sim, 1 iteration/size).
   bench      Built-in bench verbs. `bench stream` runs streaming
-             multi-DAG sessions over the policy matrix — closed-loop
-             and open-system (arrival processes, bounded admission,
-             sojourn percentiles) — and writes
+             multi-DAG sessions over the policy matrix — closed-loop,
+             open-system (arrival processes, bounded admission, sojourn
+             percentiles) and open-qos (QoS job classes, admission
+             policies, per-class SLO breakdowns) — and writes
              bench_results/BENCH_sched_session.json.
              [--jobs N] [--window W] [--size N] [--open-jobs N]
              [--stream SPEC]  (e.g. \"stream:arrival=poisson,rate=220,
-             queue=8\"; arrival = closed|fixed|poisson|bursty)
+             queue=8,admit=edf\"; arrival = closed|fixed|poisson|bursty,
+             admit = fifo|edf|sjf|reject[,budget=MS])
+             [--classes SPEC] (QoS mix, e.g. \"name=hot,deadline=25,
+             weight=3;name=cold,family=phased\"; or \"default\")
   measure    Measure real PJRT kernel times for the shipped artifacts.
              [--reps N]
   stats      Structural statistics of a DOT graph or built-in workload.

@@ -17,14 +17,16 @@
 //! iterations = 100
 //! platform = paper      # paper | tri
 //! return-to-host = true
-//! stream = "stream:arrival=poisson,rate=120,queue=32"
+//! stream = "stream:arrival=poisson,rate=120,queue=32,admit=edf"
+//! classes = "default"   # or a full class-mix spec
 //! ```
 //!
 //! The `scheduler` value is passed verbatim to
-//! [`crate::sched::SchedulerRegistry::create`] and the `stream` value to
-//! [`crate::sim::StreamConfig::from_spec`], so every policy variant and
-//! every open-system traffic scenario is reachable from a config file
-//! without recompiling.
+//! [`crate::sched::SchedulerRegistry::create`], the `stream` value to
+//! [`crate::sim::StreamConfig::from_spec`] and the `classes` value to
+//! [`crate::dag::workloads::parse_class_mix`], so every policy variant,
+//! every open-system traffic scenario and every QoS job mix is
+//! reachable from a config file without recompiling.
 
 use std::collections::BTreeMap;
 
@@ -93,6 +95,10 @@ pub struct RunConfig {
     /// Open-system traffic scenario for stream runs (closed loop by
     /// default; see [`StreamConfig::from_spec`] for the spec syntax).
     pub stream: StreamConfig,
+    /// QoS class mix for classed stream scenarios (`bench stream`'s
+    /// `open-qos`); [`workloads::default_qos_mix`] by default. See
+    /// [`workloads::parse_class_mix`] for the spec syntax.
+    pub classes: Vec<workloads::JobClass>,
 }
 
 impl Default for RunConfig {
@@ -106,6 +112,7 @@ impl Default for RunConfig {
             tri_platform: false,
             return_to_host: true,
             stream: StreamConfig::closed(),
+            classes: workloads::default_qos_mix(),
         }
     }
 }
@@ -170,6 +177,10 @@ impl RunConfig {
         if let Some(spec) = r.get("stream") {
             cfg.stream = StreamConfig::from_spec(spec)
                 .with_context(|| format!("stream spec {spec:?}"))?;
+        }
+        if let Some(spec) = r.get("classes") {
+            cfg.classes = workloads::parse_class_mix(spec)
+                .with_context(|| format!("class-mix spec {spec:?}"))?;
         }
         Ok(cfg)
     }
@@ -264,16 +275,28 @@ mod tests {
 
     #[test]
     fn stream_spec_parses_into_config() {
-        use crate::sim::ArrivalProcess;
-        let src = "[run]\nstream = \"stream:arrival=poisson,rate=120,queue=8\"\n";
+        use crate::sim::{AdmissionPolicy, ArrivalProcess};
+        let src = "[run]\nstream = \"stream:arrival=poisson,rate=120,queue=8,admit=sjf\"\n";
         let cfg = RunConfig::parse(src).unwrap();
         assert_eq!(
             cfg.stream.arrival,
             ArrivalProcess::Poisson { rate_jps: 120.0, seed: 7 }
         );
         assert_eq!(cfg.stream.queue, 8);
+        assert_eq!(cfg.stream.admit, AdmissionPolicy::Sjf);
         assert!(RunConfig::parse("[run]\nstream = \"stream:arrival=warp\"\n").is_err());
         assert_eq!(RunConfig::parse("").unwrap().stream, StreamConfig::closed());
+    }
+
+    #[test]
+    fn class_mix_parses_into_config() {
+        let src = "[run]\nclasses = \"name=hot,deadline=20,weight=4;name=cold,family=phased\"\n";
+        let cfg = RunConfig::parse(src).unwrap();
+        assert_eq!(cfg.classes.len(), 2);
+        assert_eq!(cfg.classes[0].name, "hot");
+        assert_eq!(cfg.classes[0].deadline_ms, 20.0);
+        assert!(RunConfig::parse("[run]\nclasses = \"family=ring\"\n").is_err());
+        assert_eq!(RunConfig::parse("").unwrap().classes, workloads::default_qos_mix());
     }
 
     #[test]

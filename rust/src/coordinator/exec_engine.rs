@@ -238,6 +238,7 @@ impl ExecEngine {
                     kernel: node.kernel,
                     size: node.size,
                     ready_ms: t_now,
+                    deadline_ms: f64::INFINITY,
                     device_free_ms: &device_free,
                     inputs: &inputs_info,
                     platform: &self.platform,
@@ -436,12 +437,23 @@ impl ExecEngine {
     /// simulator's: `stream`'s arrival process *paces* submissions on
     /// the wall clock (the coordinator sleeps until each job's submit
     /// time), while execution itself stays serial — one job owns the
-    /// workers at a time, an admission window of 1. A job that arrives
-    /// while its predecessor is still draining therefore accrues real
-    /// queueing delay, and the merged [`SessionReport`] carries the same
+    /// workers at a time. Admission bookkeeping honors
+    /// [`StreamConfig::queue`]: job `i` is *admitted* (stops accruing
+    /// queueing delay) as soon as a window slot frees, i.e. at
+    /// `max(submit_i, complete_{i-queue})` — the same rule the
+    /// simulator's FIFO window implements (see [`serial_window_admit`])
+    /// — even though its kernels only start once the machine is free.
+    /// The merged [`SessionReport`] carries the same
     /// sojourn/percentile/throughput metrics as the simulated sessions.
     /// `arrival=closed` submits each job the instant the previous one
-    /// completes (PR 2 semantics, no pacing).
+    /// completes (PR 2 semantics, no pacing, and a window that never
+    /// fills).
+    ///
+    /// Admission *policies* are simulator-only for now: the serial real
+    /// engine cannot reorder or reject waiting jobs, so any
+    /// `admit=` other than `fifo` is a loud error here rather than a
+    /// silent FIFO fallback (see the ROADMAP's open-system real-engine
+    /// item).
     pub fn run_stream(
         &self,
         dags: &[Dag],
@@ -451,10 +463,19 @@ impl ExecEngine {
         cache: &mut PlanCache,
         stream: &StreamConfig,
     ) -> Result<SessionReport> {
+        anyhow::ensure!(
+            stream.admit == crate::sim::AdmissionPolicy::Fifo,
+            "ExecEngine::run_stream supports admit=fifo only (got admit={}); \
+             edf/sjf/reject are simulator-only until the real engine gains a \
+             concurrent admission window",
+            stream.admit.as_str()
+        );
         let mut session = SessionReport::new(scheduler.name());
         let submit_times = stream.arrival.submit_times_ms(dags.len());
+        let queue = stream.queue.max(1);
         let epoch = Instant::now();
         let now_ms = || epoch.elapsed().as_secs_f64() * 1e3;
+        let mut completes: Vec<f64> = Vec::with_capacity(dags.len());
         for (i, dag) in dags.iter().enumerate() {
             let submit_ms = match &submit_times {
                 Some(times) => {
@@ -469,25 +490,50 @@ impl ExecEngine {
                 }
                 None => now_ms(),
             };
-            let admit_ms = now_ms().max(submit_ms);
+            // Window bookkeeping: a slot frees when job i - queue
+            // completes, so that is when job i stops queueing — even
+            // while execution stays serial behind job i - 1.
+            let admit_ms = serial_window_admit(submit_ms, i, queue, &completes);
+            // Kernels start only once the machine is free (serial).
+            let start_ms = now_ms().max(submit_ms);
             let key = PlanKey::of(dag, &self.platform, model, scheduler);
             let (plan, hit, build_ns) =
                 cache.get_or_build(key, || scheduler.build_plan(dag, &self.platform, model));
             let mut report = self.run_with_plan(dag, scheduler, model, opts, Some(&plan))?;
             report.plan_ns += build_ns;
             // run_with_plan stamps trace times on its own epoch, which
-            // starts at this job's admission on the session clock.
+            // starts at this job's execution start on the session clock.
             for ev in &mut report.trace {
                 ev.job = i;
-                ev.start_ms += admit_ms;
-                ev.end_ms += admit_ms;
+                ev.start_ms += start_ms;
+                ev.end_ms += start_ms;
             }
+            let complete_ms = now_ms().max(admit_ms);
+            completes.push(complete_ms);
             let timing =
-                JobTiming { submit_ms, admit_ms, complete_ms: now_ms().max(admit_ms) };
+                JobTiming { submit_ms, admit_ms, complete_ms, ..Default::default() };
             session.push_timed(report, hit, timing);
         }
         Ok(session)
     }
+}
+
+/// FIFO-window admission instant of job `i` in a *serial* engine: the
+/// later of its submit time and the completion of the job `queue`
+/// positions ahead of it (whose drain frees the slot). This is exactly
+/// the rule the simulator's bounded FIFO window yields when completions
+/// happen in submission order, which the regression tests pin on
+/// `arrival=fixed`.
+pub fn serial_window_admit(
+    submit_ms: f64,
+    index: usize,
+    queue: usize,
+    completes: &[f64],
+) -> f64 {
+    if index < queue {
+        return submit_ms;
+    }
+    submit_ms.max(completes[index - queue])
 }
 
 #[cfg(test)]
@@ -595,6 +641,76 @@ mod tests {
         for (i, job) in session.jobs.iter().enumerate() {
             assert!(job.trace.iter().all(|ev| ev.job == i), "job {i} trace tags");
         }
+    }
+
+    #[test]
+    fn run_stream_rejects_non_fifo_admission() {
+        // The real engine cannot reorder or reject waiting jobs yet;
+        // a non-fifo admit= spec must be a loud error, not silent FIFO.
+        let Some(eng) = engine() else { return };
+        let dags = vec![workloads::chain(2, KernelKind::Ma, 64)];
+        let model = CalibratedModel::default();
+        let mut s = sched::by_name("eager").unwrap();
+        let mut cache = crate::sched::PlanCache::new();
+        let stream =
+            StreamConfig::from_spec("stream:arrival=fixed,rate=100,queue=2,admit=edf").unwrap();
+        let err = eng
+            .run_stream(&dags, s.as_mut(), &model, &ExecOptions::default(), &mut cache, &stream)
+            .unwrap_err();
+        assert!(err.to_string().contains("admit=fifo only"), "{err}");
+    }
+
+    #[test]
+    fn serial_window_admit_rule() {
+        // Window 1 = serial admission behind the previous completion;
+        // a window at least as large as the stream never queues.
+        let completes = [5.0, 9.0, 14.0];
+        assert_eq!(serial_window_admit(0.0, 0, 1, &[]), 0.0);
+        assert_eq!(serial_window_admit(1.0, 1, 1, &completes), 5.0);
+        assert_eq!(serial_window_admit(2.0, 2, 1, &completes), 9.0);
+        assert_eq!(serial_window_admit(1.0, 1, 2, &completes), 1.0);
+        assert_eq!(serial_window_admit(2.0, 2, 2, &completes), 5.0);
+        assert_eq!(serial_window_admit(2.0, 2, 8, &completes), 2.0);
+        // A late submit dominates a long-freed slot.
+        assert_eq!(serial_window_admit(30.0, 2, 1, &completes), 30.0);
+    }
+
+    #[test]
+    fn paced_stream_honors_admission_window() {
+        // Fast fixed-rate arrivals against a 2-slot window: job i is
+        // admitted at max(submit_i, complete_{i-2}) — queueing delay is
+        // measured against the *window*, not the serial machine — and
+        // the sim's FIFO window implements the identical rule
+        // (regression-tested on arrival=fixed in tests/open_system.rs).
+        let Some(eng) = engine() else { return };
+        let dags: Vec<Dag> = (0..4).map(|_| workloads::chain(2, KernelKind::Ma, 64)).collect();
+        let model = CalibratedModel::default();
+        let mut s = sched::by_name("eager").unwrap();
+        let mut cache = crate::sched::PlanCache::new();
+        let stream =
+            StreamConfig::from_spec("stream:arrival=fixed,rate=10000,queue=2").unwrap();
+        let session = eng
+            .run_stream(&dags, s.as_mut(), &model, &ExecOptions::default(), &mut cache, &stream)
+            .unwrap();
+        assert_eq!(session.job_count(), 4);
+        let t = &session.timings;
+        for (i, w) in t.iter().enumerate() {
+            let expect = serial_window_admit(
+                w.submit_ms,
+                i,
+                2,
+                &t[..i].iter().map(|x| x.complete_ms).collect::<Vec<_>>(),
+            );
+            assert!(
+                (w.admit_ms - expect).abs() < 1e-9,
+                "job {i}: admit {} != window rule {expect}",
+                w.admit_ms
+            );
+            assert!(w.queueing_delay_ms() >= 0.0 && w.complete_ms >= w.admit_ms);
+        }
+        // The first `queue` jobs never queue.
+        assert_eq!(t[0].queueing_delay_ms(), 0.0);
+        assert_eq!(t[1].queueing_delay_ms(), 0.0);
     }
 
     #[test]

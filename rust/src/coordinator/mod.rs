@@ -23,5 +23,5 @@ pub mod exec_engine;
 pub mod measure;
 pub mod oracle;
 
-pub use exec_engine::{ExecEngine, ExecOptions};
+pub use exec_engine::{serial_window_admit, ExecEngine, ExecOptions};
 pub use measure::measure_kernels;

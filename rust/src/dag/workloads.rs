@@ -1,12 +1,46 @@
-//! Named workload builders.
+//! Named workload builders and QoS-classed job streams.
 //!
 //! Beyond the paper's random instance, these are the DAG families its
 //! introduction and related work motivate: Montage-style astronomy
 //! workflows (Tanaka & Tatebe's multi-constraint partitioning target),
 //! tiled Cholesky factorization (Ltaief et al., the classic dense-linear-
 //! algebra data-flow workload), wavefront stencils, and fork-join maps.
+//!
+//! # Classed job streams
+//!
+//! Open-system traffic is described by a weighted mix of [`JobClass`]es
+//! — each a DAG family × size × priority × relative deadline × wait
+//! budget — drawn per job by the in-tree PCG32 ([`job_classes`]). The
+//! mix is reachable from a spec string ([`parse_class_mix`]):
+//!
+//! ```text
+//! mix    := "default" | class { ";" class }
+//! class  := key "=" value { "," key "=" value }
+//! keys   := family  = phased | layered | chain | forkjoin
+//!           name    = class label        (default "class{i}")
+//!           weight  = draw weight        (default 1, > 0)
+//!           size    = matrix size        (default 256)
+//!           prio    = priority band      (default 0; lower admits
+//!                                         first under edf/sjf)
+//!           deadline= relative deadline ms   (default none)
+//!           budget  = wait budget ms         (default none)
+//!           width/depth      (phased: default 8/4; forkjoin width 8)
+//!           kernels          (layered: node count, default 24)
+//!           len              (chain: default 5)
+//!           kernel  = ma|mm|mm_add   (layered/chain/forkjoin, default ma)
+//! ```
+//!
+//! Example: `"name=interactive,family=layered,kernels=12,deadline=25,
+//! weight=3;name=batch,family=phased,width=8,depth=4"`. Unknown keys and
+//! keys the chosen family does not consume are hard errors, matching
+//! the registry's strictness.
+
+use anyhow::{bail, Context, Result};
 
 use super::graph::{Dag, KernelKind, NodeId};
+use crate::sched::SchedParams;
+use crate::sim::JobQos;
+use crate::util::Pcg32;
 
 /// Montage-like mosaic workflow.
 ///
@@ -150,7 +184,6 @@ pub fn fork_join(width: usize, kernel: KernelKind, size: u32) -> Dag {
 /// comes from the layered generator.
 pub fn mixed_random(kernels: usize, size: u32, mm_fraction: f64, seed: u64) -> Dag {
     use crate::dag::generator::{generate_layered, GeneratorConfig};
-    use crate::util::Pcg32;
     let cfg = GeneratorConfig::scaled(kernels, KernelKind::Ma, size, seed);
     let mut dag = generate_layered(&cfg);
     let mut rng = Pcg32::seeded(seed ^ 0x4D495845 /* "MIXE" */);
@@ -196,24 +229,238 @@ pub fn phased(width: usize, depth: usize, size: u32) -> Dag {
     g
 }
 
+/// A DAG family a [`JobClass`] materializes jobs from.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum JobFamily {
+    /// Two-phase MM→MA stream job ([`phased`]); seed-independent.
+    Phased { width: usize, depth: usize },
+    /// Random layered DAG (`GeneratorConfig::scaled`), seeded per job.
+    Layered { kernels: usize, kernel: KernelKind },
+    /// Linear chain ([`chain`]); seed-independent.
+    Chain { len: usize, kernel: KernelKind },
+    /// Fork-join map ([`fork_join`]); seed-independent.
+    ForkJoin { width: usize, kernel: KernelKind },
+}
+
+impl JobFamily {
+    /// Materialize one job of this family (`seed` only matters for
+    /// randomized families).
+    pub fn build(&self, size: u32, seed: u64) -> Dag {
+        use crate::dag::generator::{generate_layered, GeneratorConfig};
+        match *self {
+            JobFamily::Phased { width, depth } => phased(width, depth, size),
+            JobFamily::Layered { kernels, kernel } => {
+                generate_layered(&GeneratorConfig::scaled(kernels, kernel, size, seed))
+            }
+            JobFamily::Chain { len, kernel } => chain(len, kernel, size),
+            JobFamily::ForkJoin { width, kernel } => fork_join(width, kernel, size),
+        }
+    }
+}
+
+/// One QoS class of open-system traffic: a weighted DAG family with the
+/// size, priority, relative deadline and wait budget its jobs carry.
+/// See the module docs for the spec-string grammar.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobClass {
+    pub name: String,
+    /// Draw weight within the mix (relative, > 0).
+    pub weight: f64,
+    pub family: JobFamily,
+    pub size: u32,
+    /// Priority band (lower admits first under `edf`/`sjf`).
+    pub priority: u32,
+    /// Relative deadline (ms after submit); `f64::INFINITY` = none.
+    pub deadline_ms: f64,
+    /// Wait budget (ms) under `admit=reject`; `f64::INFINITY` = none.
+    pub wait_budget_ms: f64,
+}
+
+impl JobClass {
+    /// A class with defaults: weight 1, size 256, priority 0, no
+    /// deadline, no budget.
+    pub fn new(name: &str, family: JobFamily) -> JobClass {
+        JobClass {
+            name: name.to_string(),
+            weight: 1.0,
+            family,
+            size: 256,
+            priority: 0,
+            deadline_ms: f64::INFINITY,
+            wait_budget_ms: f64::INFINITY,
+        }
+    }
+}
+
+/// One drawn job of a classed stream: the materialized DAG plus the QoS
+/// attributes the open-system engine consumes.
+#[derive(Debug, Clone)]
+pub struct ClassedJob {
+    pub dag: Dag,
+    pub qos: JobQos,
+}
+
+/// The display names of a class mix, index-aligned with
+/// [`JobQos::class`] (for [`crate::sim::SessionReport::class_names`]).
+pub fn class_names(classes: &[JobClass]) -> Vec<String> {
+    classes.iter().map(|c| c.name.clone()).collect()
+}
+
+/// The default QoS traffic mix for `bench stream`'s `open-qos`
+/// scenario: latency-sensitive small jobs dominating the arrival count,
+/// a mid tier, and heavyweight batch jobs with no deadline —
+/// mirror-tuned so admission policies separate under bursty overload.
+pub fn default_qos_mix() -> Vec<JobClass> {
+    vec![
+        JobClass {
+            weight: 3.0,
+            deadline_ms: 12.0,
+            wait_budget_ms: 8.0,
+            ..JobClass::new(
+                "interactive",
+                JobFamily::Layered { kernels: 12, kernel: KernelKind::Ma },
+            )
+        },
+        JobClass {
+            weight: 2.0,
+            deadline_ms: 30.0,
+            wait_budget_ms: 20.0,
+            ..JobClass::new(
+                "standard",
+                JobFamily::Layered { kernels: 24, kernel: KernelKind::Ma },
+            )
+        },
+        JobClass {
+            weight: 1.0,
+            ..JobClass::new("batch", JobFamily::Phased { width: 8, depth: 4 })
+        },
+    ]
+}
+
+/// Draw `n` jobs from the weighted class mix with the in-tree PCG32:
+/// per job, one weighted class pick plus one per-job DAG seed — so a
+/// `(classes, n, seed)` triple always yields the same stream
+/// (bit-exact with `python/tools/sched_mirror.py`'s transliteration).
+pub fn job_classes(classes: &[JobClass], n: usize, seed: u64) -> Vec<ClassedJob> {
+    assert!(!classes.is_empty(), "job_classes needs at least one class");
+    let total: f64 = classes.iter().map(|c| c.weight).sum();
+    assert!(total > 0.0 && classes.iter().all(|c| c.weight >= 0.0), "bad class weights");
+    let mut rng = Pcg32::seeded(seed ^ 0x514F_5321 /* "QOS!" */);
+    (0..n)
+        .map(|_| {
+            let x = rng.gen_f64() * total;
+            let job_seed = rng.next_u64();
+            let mut acc = 0.0;
+            let mut idx = classes.len() - 1;
+            for (i, c) in classes.iter().enumerate() {
+                acc += c.weight;
+                if x < acc {
+                    idx = i;
+                    break;
+                }
+            }
+            let c = &classes[idx];
+            ClassedJob {
+                dag: c.family.build(c.size, job_seed),
+                qos: JobQos {
+                    class: idx,
+                    priority: c.priority,
+                    deadline_ms: c.deadline_ms,
+                    wait_budget_ms: c.wait_budget_ms,
+                },
+            }
+        })
+        .collect()
+}
+
+/// Parse a class-mix spec string (see the module docs for the grammar);
+/// `"default"` yields [`default_qos_mix`].
+pub fn parse_class_mix(spec: &str) -> Result<Vec<JobClass>> {
+    if spec.trim() == "default" {
+        return Ok(default_qos_mix());
+    }
+    let mut out = Vec::new();
+    for (i, part) in spec.split(';').enumerate() {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let mut p = SchedParams::parse(part)
+            .with_context(|| format!("parsing class {i} of mix {spec:?}"))?;
+        // `kernel=` is consumed only by the families that use it, so a
+        // stray one on family=phased fails finish() as unknown.
+        let kernel = |p: &mut SchedParams| -> Result<KernelKind> {
+            match p.get("kernel") {
+                Some(k) => KernelKind::parse(&k)
+                    .with_context(|| format!("class {i}: bad kernel {k:?}")),
+                None => Ok(KernelKind::Ma),
+            }
+        };
+        let family = match p.get("family").as_deref() {
+            Some("phased") => JobFamily::Phased {
+                width: p.u64("width", 8)? as usize,
+                depth: p.u64("depth", 4)? as usize,
+            },
+            Some("layered") | None => JobFamily::Layered {
+                kernels: p.u64("kernels", 24)? as usize,
+                kernel: kernel(&mut p)?,
+            },
+            Some("chain") => {
+                JobFamily::Chain { len: p.u64("len", 5)? as usize, kernel: kernel(&mut p)? }
+            }
+            Some("forkjoin") => JobFamily::ForkJoin {
+                width: p.u64("width", 8)? as usize,
+                kernel: kernel(&mut p)?,
+            },
+            Some(other) => {
+                bail!("class {i}: unknown family {other:?} (phased | layered | chain | forkjoin)")
+            }
+        };
+        let weight = p.f64("weight", 1.0)?;
+        if weight <= 0.0 {
+            bail!("class {i}: weight must be > 0");
+        }
+        let deadline_ms = p.f64("deadline", f64::INFINITY)?;
+        let wait_budget_ms = p.f64("budget", f64::INFINITY)?;
+        if deadline_ms <= 0.0 || wait_budget_ms < 0.0 {
+            bail!("class {i}: deadline must be > 0 and budget >= 0");
+        }
+        let class = JobClass {
+            name: p.get("name").unwrap_or_else(|| format!("class{i}")),
+            weight,
+            family,
+            size: p.u64("size", 256)? as u32,
+            priority: p.u64("prio", 0)? as u32,
+            deadline_ms,
+            wait_budget_ms,
+        };
+        p.finish().with_context(|| format!("parsing class {i} of mix {spec:?}"))?;
+        out.push(class);
+    }
+    if out.is_empty() {
+        bail!("class mix {spec:?} defines no classes");
+    }
+    Ok(out)
+}
+
 /// A deterministic job stream for open-system scenarios: `jobs` small
 /// DAGs alternating between the two-phase [`phased`] shape (the
 /// windowed-gp headline workload) and random layered DAGs seeded by the
 /// job index. Millisecond-scale service times at `size` ≈ 256 make
 /// arrival processes generate real contention in the open engine.
+///
+/// Kept as a thin wrapper over the [`JobFamily`] builders with the
+/// pre-QoS deterministic alternation (not a PCG draw), so the
+/// `open-mix` bench scenario and its goldens are bit-stable.
 pub fn job_mix(jobs: usize, size: u32, seed: u64) -> Vec<Dag> {
-    use crate::dag::generator::{generate_layered, GeneratorConfig};
+    let even = JobFamily::Phased { width: 8, depth: 4 };
+    let odd = JobFamily::Layered { kernels: 24, kernel: KernelKind::Ma };
     (0..jobs)
         .map(|i| {
             if i % 2 == 0 {
-                phased(8, 4, size)
+                even.build(size, 0)
             } else {
-                generate_layered(&GeneratorConfig::scaled(
-                    24,
-                    KernelKind::Ma,
-                    size,
-                    seed + i as u64,
-                ))
+                odd.build(size, seed + i as u64)
             }
         })
         .collect()
@@ -357,5 +604,96 @@ mod tests {
         assert_eq!(g.node_count(), 5);
         assert_eq!(g.edge_count(), 4);
         assert_eq!(levels(&g)[4], 4);
+    }
+
+    #[test]
+    fn job_classes_deterministic_and_weighted() {
+        let mix = default_qos_mix();
+        let a = job_classes(&mix, 64, 2015);
+        let b = job_classes(&mix, 64, 2015);
+        assert_eq!(a.len(), 64);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.qos, y.qos, "same seed, same class stream");
+            assert_eq!(x.dag.node_count(), y.dag.node_count());
+            assert_eq!(x.dag.edge_count(), y.dag.edge_count());
+            assert!(is_acyclic(&x.dag));
+        }
+        let c = job_classes(&mix, 64, 2016);
+        assert_ne!(
+            a.iter().map(|j| j.qos.class).collect::<Vec<_>>(),
+            c.iter().map(|j| j.qos.class).collect::<Vec<_>>(),
+            "different seeds draw different class streams"
+        );
+        // Every class appears and the 3:2:1 weighting shows: the
+        // heaviest class draws strictly more jobs than the lightest.
+        let mut counts = vec![0usize; mix.len()];
+        for j in &a {
+            counts[j.qos.class] += 1;
+        }
+        assert!(counts.iter().all(|&n| n > 0), "all classes drawn: {counts:?}");
+        assert!(counts[0] > counts[2], "weight 3 beats weight 1: {counts:?}");
+        // QoS attributes come from the drawn class verbatim.
+        for j in &a {
+            let c = &mix[j.qos.class];
+            assert_eq!(j.qos.priority, c.priority);
+            assert_eq!(j.qos.deadline_ms, c.deadline_ms);
+            assert_eq!(j.qos.wait_budget_ms, c.wait_budget_ms);
+        }
+    }
+
+    #[test]
+    fn class_mix_spec_parses() {
+        let mix = parse_class_mix(
+            "name=fast,family=layered,kernels=12,deadline=25,weight=3,prio=0,budget=10;\
+             name=slow,family=phased,width=6,depth=2,size=512,prio=2",
+        )
+        .unwrap();
+        assert_eq!(mix.len(), 2);
+        assert_eq!(mix[0].name, "fast");
+        assert_eq!(mix[0].family, JobFamily::Layered { kernels: 12, kernel: KernelKind::Ma });
+        assert_eq!((mix[0].weight, mix[0].deadline_ms, mix[0].wait_budget_ms), (3.0, 25.0, 10.0));
+        assert_eq!(mix[1].family, JobFamily::Phased { width: 6, depth: 2 });
+        assert_eq!((mix[1].size, mix[1].priority), (512, 2));
+        assert!(mix[1].deadline_ms.is_infinite());
+        assert_eq!(parse_class_mix("default").unwrap(), default_qos_mix());
+        assert_eq!(class_names(&mix), vec!["fast".to_string(), "slow".to_string()]);
+        // Defaulted names and families.
+        let d = parse_class_mix("weight=2;family=chain,len=3,kernel=mm").unwrap();
+        assert_eq!(d[0].name, "class0");
+        assert_eq!(d[0].family, JobFamily::Layered { kernels: 24, kernel: KernelKind::Ma });
+        assert_eq!(d[1].family, JobFamily::Chain { len: 3, kernel: KernelKind::Mm });
+    }
+
+    #[test]
+    fn class_mix_spec_errors_are_loud() {
+        assert!(parse_class_mix("").is_err(), "empty mix");
+        assert!(parse_class_mix("family=ring").is_err(), "unknown family");
+        assert!(parse_class_mix("bogus=1").is_err(), "unknown key");
+        assert!(parse_class_mix("family=phased,kernel=mm").is_err(), "phased has fixed kernels");
+        assert!(parse_class_mix("family=layered,len=3").is_err(), "len is chain-only");
+        assert!(parse_class_mix("weight=0").is_err(), "zero weight");
+        assert!(parse_class_mix("deadline=-5").is_err(), "negative deadline");
+        assert!(parse_class_mix("kernel=conv").is_err(), "bad kernel");
+    }
+
+    #[test]
+    fn job_mix_wrapper_matches_family_builders() {
+        // The wrapper must keep the pre-QoS stream bit-stable: phased
+        // evens, layered odds seeded seed + i.
+        use crate::dag::generator::{generate_layered, GeneratorConfig};
+        let jobs = job_mix(4, 256, 9);
+        let even = phased(8, 4, 256);
+        assert_eq!(jobs[0].node_count(), even.node_count());
+        assert_eq!(jobs[0].edge_count(), even.edge_count());
+        let odd = generate_layered(&GeneratorConfig::scaled(24, KernelKind::Ma, 256, 10));
+        assert_eq!(jobs[1].node_count(), odd.node_count());
+        assert_eq!(jobs[1].edge_count(), odd.edge_count());
+        for (a, b) in jobs[1].nodes().zip(odd.nodes()) {
+            assert_eq!(a.1.kernel, b.1.kernel);
+            assert_eq!(a.1.size, b.1.size);
+        }
+        for (a, b) in jobs[1].edges().zip(odd.edges()) {
+            assert_eq!((a.1.src, a.1.dst), (b.1.src, b.1.dst));
+        }
     }
 }

@@ -15,7 +15,9 @@ use hetsched::platform::Platform;
 use hetsched::report::{fmt_ms, fmt_ratio, Table};
 use hetsched::runtime::{KernelRuntime, RuntimeService};
 use hetsched::sched::{self, PlanCache, SchedulerRegistry};
-use hetsched::sim::{simulate, simulate_open, SessionReport, SimConfig, StreamConfig};
+use hetsched::sim::{
+    simulate, simulate_open, simulate_open_qos, JobQos, SessionReport, SimConfig, StreamConfig,
+};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -257,6 +259,15 @@ fn cmd_bench(args: &Args) -> Result<()> {
 /// mirror-tuned; override with `--stream`).
 const DEFAULT_OPEN_STREAM: &str = "stream:arrival=poisson,rate=220,queue=8";
 
+/// Default traffic for the `open-qos` scenario: bursts large enough to
+/// overflow the admission window, so the pending queue actually orders
+/// (mirror-tuned; the `admit=` key is swept over fifo/edf/sjf/reject).
+const DEFAULT_QOS_STREAM: &str = "stream:arrival=bursty,rate=380,burst=8,queue=2,seed=7";
+
+/// Scheduler driving the `open-qos` admission-policy sweep (dispatch
+/// policy held fixed so rows isolate the admission dimension).
+const QOS_POLICY: &str = "dmda";
+
 /// `hetsched bench stream`: streaming multi-DAG sessions across the
 /// policy matrix — closed-loop scenarios (plan-cache amortization,
 /// windowed-gp vs one-shot-gp on the phased workload) plus open-system
@@ -269,11 +280,21 @@ fn cmd_bench_stream(args: &Args) -> Result<()> {
     let size = args.flag_u32("size", 1024)?;
     let open_jobs = args.flag_usize("open-jobs", 24)?;
     // Scenario resolution: --stream flag > config-file [run] stream >
-    // the mirror-tuned default.
-    let open_stream = match args.flag("stream") {
-        Some(spec) => StreamConfig::from_spec(spec)?,
-        None if args.flag("config").is_some() => build_config(args)?.stream,
-        None => StreamConfig::from_spec(DEFAULT_OPEN_STREAM)?,
+    // the mirror-tuned default. Same precedence for --classes (the
+    // config file, when given, is parsed once for both).
+    let file_cfg = match args.flag("config") {
+        Some(_) => Some(build_config(args)?),
+        None => None,
+    };
+    let open_stream = match (args.flag("stream"), &file_cfg) {
+        (Some(spec), _) => StreamConfig::from_spec(spec)?,
+        (None, Some(cfg)) => cfg.stream.clone(),
+        (None, None) => StreamConfig::from_spec(DEFAULT_OPEN_STREAM)?,
+    };
+    let classes = match (args.flag("classes"), file_cfg) {
+        (Some(spec), _) => workloads::parse_class_mix(spec)?,
+        (None, Some(cfg)) => cfg.classes,
+        (None, None) => workloads::default_qos_mix(),
     };
     let stream_spec = open_stream.spec_string();
     let platform = Platform::paper();
@@ -381,9 +402,90 @@ fn cmd_bench_stream(args: &Args) -> Result<()> {
     println!("{}", table.render());
     println!("{}", open_table.render());
 
+    // --- open-qos: QoS-classed traffic, admission-policy sweep ------
+    //
+    // One scheduler (QOS_POLICY), one bursty arrival trace, one classed
+    // job stream; only `admit=` varies — so the rows isolate what the
+    // admission policy buys (deadline hits for edf, mean sojourn for
+    // sjf, bounded waits for reject).
+    let classed = workloads::job_classes(&classes, open_jobs, 2015);
+    let qos_dags: Vec<hetsched::dag::Dag> = classed.iter().map(|j| j.dag.clone()).collect();
+    let qos: Vec<JobQos> = classed.iter().map(|j| j.qos).collect();
+    let names = workloads::class_names(&classes);
+    let mut qos_table = Table::new(
+        format!("open-qos admission sweep ({DEFAULT_QOS_STREAM}, policy {QOS_POLICY})"),
+        &[
+            "admit", "jobs", "rejected", "ddl-hit%", "p50_ms", "p95_ms", "mean_ms",
+            "qdelay_ms", "jobs/s",
+        ],
+    );
+    for admit in ["fifo", "edf", "sjf", "reject"] {
+        let spec = if admit == "fifo" {
+            DEFAULT_QOS_STREAM.to_string()
+        } else {
+            format!("{DEFAULT_QOS_STREAM},admit={admit}")
+        };
+        let stream = StreamConfig::from_spec(&spec)?;
+        let mut scheduler = registry.create(QOS_POLICY)?;
+        let mut cache = PlanCache::new();
+        let session = simulate_open_qos(
+            &qos_dags,
+            &qos,
+            &names,
+            scheduler.as_mut(),
+            &platform,
+            &model,
+            &SimConfig::default(),
+            &stream,
+            &mut cache,
+        );
+        qos_table.row(vec![
+            admit.to_string(),
+            session.job_count().to_string(),
+            session.rejected_count().to_string(),
+            format!("{:.0}", session.deadline_hit_rate() * 100.0),
+            fmt_ms(session.p50_sojourn_ms()),
+            fmt_ms(session.p95_sojourn_ms()),
+            fmt_ms(session.mean_sojourn_ms()),
+            fmt_ms(session.mean_queueing_delay_ms()),
+            format!("{:.1}", session.throughput_jps()),
+        ]);
+        rows.push((
+            "open-qos".to_string(),
+            QOS_POLICY.to_string(),
+            stream.spec_string(),
+            session,
+        ));
+    }
+    println!("{}", qos_table.render());
+
     let find = |s: &str, p: &str| {
         rows.iter().find(|(sc, sp, _, _)| sc == s && sp == p).map(|(_, _, _, r)| r)
     };
+    let find_admit = |admit: &str| {
+        rows.iter()
+            .find(|(sc, _, st, _)| {
+                sc == "open-qos"
+                    && if admit == "fifo" {
+                        !st.contains("admit=")
+                    } else {
+                        st.contains(&format!("admit={admit}"))
+                    }
+            })
+            .map(|(_, _, _, r)| r)
+    };
+    if let (Some(fifo), Some(edf), Some(sjf)) =
+        (find_admit("fifo"), find_admit("edf"), find_admit("sjf"))
+    {
+        println!(
+            "open-qos: deadline-hit fifo {:.0}% vs edf {:.0}% | mean sojourn fifo {} ms vs \
+             sjf {} ms",
+            fifo.deadline_hit_rate() * 100.0,
+            edf.deadline_hit_rate() * 100.0,
+            fmt_ms(fifo.mean_sojourn_ms()),
+            fmt_ms(sjf.mean_sojourn_ms()),
+        );
+    }
     let windowed_spec = format!("gp:window={window}");
     if let (Some(one_shot), Some(windowed)) =
         (find("phased", "gp"), find("phased", &windowed_spec))
@@ -416,9 +518,26 @@ fn cmd_bench_stream(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Minimal JSON string escaping for user-supplied values (class names
+/// come from `--classes` specs): backslash, quote, and control chars.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 /// Render the `BENCH_sched_session.json` document. Every row carries
-/// the queueing report (percentiles, throughput, utilization) — the
-/// schema `python/tools/validate_bench.py` checks in CI.
+/// the queueing report (percentiles, throughput, utilization) plus the
+/// QoS surface (rejection count, deadline-hit rate, per-class SLO
+/// breakdown) — the schema `python/tools/validate_bench.py` checks in
+/// CI.
 fn render_session_json(
     jobs: usize,
     window: usize,
@@ -442,6 +561,28 @@ fn render_session_json(
             .map(|u| format!("{u:.4}"))
             .collect::<Vec<_>>()
             .join(", ");
+        let classes = r
+            .per_class()
+            .iter()
+            .map(|c| {
+                format!(
+                    "{{\"name\": \"{}\", \"jobs\": {}, \"rejected\": {}, \
+                     \"p50_sojourn_ms\": {:.6}, \"p95_sojourn_ms\": {:.6}, \
+                     \"p99_sojourn_ms\": {:.6}, \"mean_sojourn_ms\": {:.6}, \
+                     \"deadline_hit_rate\": {:.4}, \"throughput_jps\": {:.6}}}",
+                    json_escape(&c.name),
+                    c.jobs,
+                    c.rejected,
+                    c.p50_sojourn_ms,
+                    c.p95_sojourn_ms,
+                    c.p99_sojourn_ms,
+                    c.mean_sojourn_ms,
+                    c.deadline_hit_rate,
+                    c.throughput_jps,
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(", ");
         let _ = writeln!(
             s,
             "    {{\"scenario\": \"{scenario}\", \"policy\": \"{policy}\", \
@@ -451,7 +592,8 @@ fn render_session_json(
              \"decision_ns\": {}, \"p50_sojourn_ms\": {:.6}, \"p95_sojourn_ms\": {:.6}, \
              \"p99_sojourn_ms\": {:.6}, \"mean_sojourn_ms\": {:.6}, \
              \"mean_queue_delay_ms\": {:.6}, \"throughput_jps\": {:.6}, \
-             \"max_concurrent_jobs\": {}, \"utilization\": [{util}]}}{}",
+             \"max_concurrent_jobs\": {}, \"rejected\": {}, \"deadline_hit_rate\": {:.4}, \
+             \"utilization\": [{util}], \"classes\": [{classes}]}}{}",
             r.job_count(),
             r.makespan_ms,
             r.span_ms,
@@ -468,6 +610,8 @@ fn render_session_json(
             r.mean_queueing_delay_ms(),
             r.throughput_jps(),
             r.max_concurrent_jobs(),
+            r.rejected_count(),
+            r.deadline_hit_rate(),
             if i + 1 == rows.len() { "" } else { "," }
         );
     }

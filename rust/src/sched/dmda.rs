@@ -79,6 +79,7 @@ mod tests {
             kernel,
             size,
             ready_ms: 0.0,
+            deadline_ms: f64::INFINITY,
             device_free_ms: free,
             inputs,
             platform: &platform,

@@ -68,6 +68,7 @@ mod tests {
             kernel: KernelKind::Mm,
             size: 1024,
             ready_ms: 0.0,
+            deadline_ms: f64::INFINITY,
             device_free_ms: free,
             inputs,
             platform,

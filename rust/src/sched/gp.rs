@@ -557,6 +557,7 @@ mod tests {
                 kernel: KernelKind::Ma,
                 size: 1024,
                 ready_ms: 0.0,
+                deadline_ms: f64::INFINITY,
                 device_free_ms: &free,
                 inputs: &[],
                 platform: &platform,
@@ -645,6 +646,7 @@ mod tests {
                 kernel: KernelKind::Mm,
                 size: 2048,
                 ready_ms: 0.0,
+                deadline_ms: f64::INFINITY,
                 device_free_ms: &free,
                 inputs: &[],
                 platform: &platform,
@@ -675,6 +677,7 @@ mod tests {
                 kernel: KernelKind::Ma,
                 size: 1024,
                 ready_ms: 0.0,
+                deadline_ms: f64::INFINITY,
                 device_free_ms: &free,
                 inputs: &[],
                 platform: &platform,
@@ -711,6 +714,7 @@ mod tests {
                     kernel: KernelKind::Ma,
                     size: 1024,
                     ready_ms: 0.0,
+                    deadline_ms: f64::INFINITY,
                     device_free_ms: &free,
                     inputs: &[],
                     platform: &platform,
@@ -746,6 +750,7 @@ mod tests {
                 kernel: KernelKind::Mm,
                 size: 256,
                 ready_ms: 0.0,
+                deadline_ms: f64::INFINITY,
                 device_free_ms: &free,
                 inputs: &[],
                 platform: &platform,

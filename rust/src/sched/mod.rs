@@ -124,6 +124,12 @@ pub struct DispatchCtx<'a> {
     pub size: u32,
     /// Virtual/real time at which the task's dependencies are satisfied.
     pub ready_ms: f64,
+    /// Absolute deadline of the owning job on the engine clock
+    /// (`f64::INFINITY` when it has none). None of the built-in
+    /// policies consult it yet — it is the open system's QoS signal,
+    /// exposed here so deadline-aware dispatch policies need no seam
+    /// change.
+    pub deadline_ms: f64,
     /// Earliest time a worker of each device becomes free.
     pub device_free_ms: &'a [f64],
     /// Current location of each input.
@@ -272,6 +278,7 @@ mod tests {
             kernel: KernelKind::Ma,
             size: 512,
             ready_ms: 0.0,
+            deadline_ms: f64::INFINITY,
             device_free_ms: &free,
             inputs: &inputs,
             platform: &platform,
@@ -294,6 +301,7 @@ mod tests {
             kernel: KernelKind::Mm,
             size: 256,
             ready_ms: 1.0,
+            deadline_ms: f64::INFINITY,
             device_free_ms: &free,
             inputs: &inputs,
             platform: &platform,

@@ -77,6 +77,7 @@ mod tests {
             kernel: KernelKind::Mm,
             size: 512,
             ready_ms: 0.0,
+            deadline_ms: f64::INFINITY,
             device_free_ms: &free,
             inputs: &[],
             platform: &platform,

@@ -107,6 +107,7 @@ mod tests {
             kernel: KernelKind::Ma,
             size: 64,
             ready_ms: 0.0,
+            deadline_ms: f64::INFINITY,
             device_free_ms: free,
             inputs: &[],
             platform,

@@ -36,10 +36,31 @@
 //! * `"stream:arrival=poisson,rate=120,queue=32,seed=7"` — Poisson
 //!   arrivals at 120 jobs/s through a 32-job admission window;
 //! * `"stream:arrival=bursty,rate=120,burst=4"` — 4-job batches at
-//!   Poisson epochs.
+//!   Poisson epochs;
+//! * `"stream:arrival=poisson,rate=220,queue=8,admit=edf"` — the same
+//!   window, but jobs waiting for a slot admit earliest-deadline-first
+//!   (`admit = fifo | edf | sjf | reject`; `reject` bounds every wait
+//!   by the job's budget — or a session-wide `budget=MS` — and rejects
+//!   instead of admitting late). See
+//!   [`crate::sim::AdmissionPolicy`] for the pending-queue key.
 //!
-//! The same strictness rules apply: unknown keys and keys the chosen
-//! arrival kind does not use are hard errors.
+//! # Class-mix specs
+//!
+//! QoS *traffic composition* (which jobs arrive, with what deadlines)
+//! uses a third grammar — semicolon-separated `key=value` classes,
+//! parsed by [`crate::dag::workloads::parse_class_mix`]:
+//!
+//! * `"default"` — the built-in interactive/standard/batch mix;
+//! * `"name=hot,family=layered,kernels=12,deadline=25,weight=3;\
+//!   name=cold,family=phased,width=8,depth=4"` — a bespoke two-class
+//!   mix.
+//!
+//! Reachable from `bench stream --classes` and the `[run] classes`
+//! config key; [`crate::dag::workloads::job_classes`] draws the jobs.
+//!
+//! The same strictness rules apply across all three grammars: unknown
+//! keys and keys the chosen arrival kind / admission policy / DAG
+//! family does not use are hard errors.
 
 use std::collections::BTreeMap;
 

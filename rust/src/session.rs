@@ -12,7 +12,12 @@
 //!   open-system scenario ([`StreamConfig`]): submit times from an
 //!   arrival process (fixed-rate, Poisson, bursty), many jobs
 //!   simultaneously in flight sharing devices and bus, a bounded
-//!   admission window queueing the excess.
+//!   admission window queueing the excess;
+//! * [`SchedSession::submit_classed`] — the same, with QoS-classed jobs
+//!   ([`crate::dag::workloads::job_classes`]): per-job priorities,
+//!   deadlines and wait budgets feed the window's admission policy
+//!   (`admit=fifo|edf|sjf|reject`), and the report grows a per-class
+//!   SLO breakdown ([`crate::sim::SessionReport::per_class`]).
 //!
 //! Either way the merged [`SessionReport`] accumulates per-job reports
 //! *and* lifecycle timings, so queueing metrics — sojourn p50/p95/p99,
@@ -50,11 +55,14 @@
 
 use anyhow::Result;
 
+use crate::dag::workloads::{class_names, ClassedJob, JobClass};
 use crate::dag::Dag;
 use crate::perfmodel::PerfModel;
 use crate::platform::Platform;
 use crate::sched::{PlanCache, Scheduler, SchedulerRegistry};
-use crate::sim::{simulate_open, RunReport, SessionReport, SimConfig, StreamConfig};
+use crate::sim::{
+    simulate_open_qos, JobQos, RunReport, SessionReport, SimConfig, StreamConfig,
+};
 
 /// A streaming scheduling session over the discrete-event engine.
 pub struct SchedSession {
@@ -113,9 +121,53 @@ impl SchedSession {
     /// `arrival=closed`), and their reports and timings merge into the
     /// session. Returns the reports of the submitted batch.
     pub fn submit_stream(&mut self, dags: &[Dag], stream: &StreamConfig) -> &[RunReport] {
+        self.submit_qos(dags, &[], stream)
+    }
+
+    /// Submit a batch of QoS-classed jobs (see
+    /// [`crate::dag::workloads::job_classes`]) through an open-system
+    /// scenario: class/priority/deadline/budget attributes feed the
+    /// admission policy, and the session report grows the per-class SLO
+    /// breakdown ([`SessionReport::per_class`]). `classes` labels the
+    /// class indices the jobs carry — one session pools one class
+    /// vocabulary, so every classed batch must use the same mix
+    /// (earlier batches' class indices would otherwise be silently
+    /// reattributed to the new labels; that is a contract violation,
+    /// not a fallback).
+    pub fn submit_classed(
+        &mut self,
+        jobs: &[ClassedJob],
+        classes: &[JobClass],
+        stream: &StreamConfig,
+    ) -> &[RunReport] {
+        let names = class_names(classes);
+        assert!(
+            self.report.class_names.is_empty() || self.report.class_names == names,
+            "submit_classed: class mix must stay consistent within a session \
+             (have {:?}, got {:?})",
+            self.report.class_names,
+            names
+        );
+        self.report.class_names = names;
+        let dags: Vec<Dag> = jobs.iter().map(|j| j.dag.clone()).collect();
+        let qos: Vec<JobQos> = jobs.iter().map(|j| j.qos).collect();
+        self.submit_qos(&dags, &qos, stream)
+    }
+
+    /// Shared open-system submission path: `qos` may be empty (all
+    /// defaults) or parallel to `dags`.
+    fn submit_qos(
+        &mut self,
+        dags: &[Dag],
+        qos: &[JobQos],
+        stream: &StreamConfig,
+    ) -> &[RunReport] {
         let first = self.report.jobs.len();
-        let batch = simulate_open(
+        let names = self.report.class_names.clone();
+        let batch = simulate_open_qos(
             dags,
+            qos,
+            &names,
             self.scheduler.as_mut(),
             &self.platform,
             self.model.as_ref(),
@@ -133,6 +185,8 @@ impl SchedSession {
             timing.submit_ms += base;
             timing.admit_ms += base;
             timing.complete_ms += base;
+            // Absolute deadlines ride the same clock shift (∞ stays ∞).
+            timing.deadline_ms += base;
             for ev in &mut job.trace {
                 ev.job = first + i;
                 ev.start_ms += base;
@@ -276,5 +330,52 @@ mod tests {
         assert!(report.span_ms >= solo_end);
         assert!(report.throughput_jps() > 0.0);
         assert!(report.p95_sojourn_ms() >= report.p50_sojourn_ms());
+    }
+
+    #[test]
+    fn classed_batch_reports_per_class() {
+        let mut session = SchedSession::from_spec(
+            "dmda",
+            Platform::paper(),
+            Box::new(CalibratedModel::paper()),
+        )
+        .unwrap();
+        let mix = workloads::default_qos_mix();
+        let jobs = workloads::job_classes(&mix, 12, 2015);
+        let stream =
+            StreamConfig::from_spec("stream:arrival=poisson,rate=260,queue=4,admit=edf")
+                .unwrap();
+        session.submit_classed(&jobs, &mix, &stream);
+        let report = session.finish();
+        assert_eq!(report.job_count(), 12);
+        assert_eq!(report.class_names, workloads::class_names(&mix));
+        let per = report.per_class();
+        assert_eq!(per.len(), mix.len());
+        assert_eq!(per.iter().map(|c| c.jobs).sum::<usize>(), 12);
+        for c in &per {
+            assert!((0.0..=1.0).contains(&c.deadline_hit_rate), "{c:?}");
+            assert!(c.p50_sojourn_ms <= c.p95_sojourn_ms && c.p95_sojourn_ms <= c.p99_sojourn_ms);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "class mix must stay consistent")]
+    fn classed_batches_must_share_one_mix() {
+        // Switching class vocabularies mid-session would reattribute
+        // earlier batches' class indices to the new labels — loud
+        // contract violation, not a silent fallback.
+        let mut session = SchedSession::from_spec(
+            "dmda",
+            Platform::paper(),
+            Box::new(CalibratedModel::paper()),
+        )
+        .unwrap();
+        let mix_a = workloads::parse_class_mix("name=hot,deadline=20").unwrap();
+        let mix_b = workloads::parse_class_mix("name=cold,family=chain,len=3").unwrap();
+        let stream = StreamConfig::from_spec("stream:arrival=fixed,rate=500,queue=2").unwrap();
+        let jobs_a = workloads::job_classes(&mix_a, 2, 1);
+        let jobs_b = workloads::job_classes(&mix_b, 2, 2);
+        session.submit_classed(&jobs_a, &mix_a, &stream);
+        session.submit_classed(&jobs_b, &mix_b, &stream);
     }
 }

@@ -26,12 +26,12 @@
 //! [`Scheduler::on_job_drain`] / [`Scheduler::on_drain`] at drain).
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::BinaryHeap;
 use std::sync::Arc;
 use std::time::Instant;
 
 use super::report::{JobTiming, RunReport, SessionReport, TraceEvent};
-use super::stream::StreamConfig;
+use super::stream::{AdmissionPolicy, JobQos, StreamConfig};
 use crate::dag::{Dag, KernelKind};
 use crate::data::{DataHandle, Directory, TransferLedger};
 use crate::perfmodel::PerfModel;
@@ -83,11 +83,32 @@ impl Ord for Ord64 {
 }
 
 /// Event kinds, in tie-break order at equal times: a drain frees an
-/// admission slot before a simultaneous arrival claims one, and both
-/// precede task dispatch.
+/// admission slot before a simultaneous arrival claims one, both
+/// precede task dispatch, and a wait-budget expiry fires last — so a
+/// job whose slot frees exactly at its budget is admitted (wait ==
+/// budget counts as within budget), never rejected.
 const EV_DRAIN: u8 = 0;
 const EV_ARRIVAL: u8 = 1;
 const EV_READY: u8 = 2;
+const EV_REJECT: u8 = 3;
+
+/// Calibrated total-work estimate of one job (ms): the sum over its
+/// kernels of the best-device execution time — the size signal
+/// [`AdmissionPolicy::Sjf`] orders the pending queue by.
+pub fn est_total_work_ms(dag: &Dag, platform: &Platform, model: &dyn PerfModel) -> f64 {
+    let k = platform.device_count();
+    (0..dag.node_count())
+        .map(|v| {
+            let n = dag.node(v);
+            if n.kernel == KernelKind::Source {
+                return 0.0;
+            }
+            (0..k)
+                .map(|d| model.kernel_time_ms(n.kernel, n.size, d))
+                .fold(f64::INFINITY, f64::min)
+        })
+        .sum()
+}
 
 /// One job entering the engine.
 pub(crate) struct JobInput<'a> {
@@ -97,6 +118,30 @@ pub(crate) struct JobInput<'a> {
     /// Plan acquisition cost (cache lookup or build) attributed to this
     /// job's `plan_ns`.
     pub build_ns: u64,
+    /// QoS attributes (class / priority / deadline / wait budget).
+    pub qos: JobQos,
+    /// Calibrated total-work estimate ([`est_total_work_ms`]).
+    pub est_work_ms: f64,
+    /// Effective wait budget on the session clock
+    /// ([`StreamConfig::effective_budget_ms`]); infinite = never
+    /// rejected.
+    pub budget_ms: f64,
+}
+
+impl<'a> JobInput<'a> {
+    /// A plain input with default QoS (single-job wrappers, closed
+    /// streams): no class, no deadline, no budget.
+    fn plain(dag: &'a Dag, plan: Arc<Plan>, submit_ms: f64, build_ns: u64) -> JobInput<'a> {
+        JobInput {
+            dag,
+            plan,
+            submit_ms,
+            build_ns,
+            qos: JobQos::default(),
+            est_work_ms: 0.0,
+            budget_ms: f64::INFINITY,
+        }
+    }
 }
 
 /// Per-job engine state.
@@ -106,6 +151,13 @@ struct JobRun<'a> {
     submit_ms: f64,
     admit_ms: f64,
     complete_ms: f64,
+    qos: JobQos,
+    /// Absolute deadline on the session clock (`submit + relative`);
+    /// infinite when the job has none.
+    deadline_abs: f64,
+    est_work_ms: f64,
+    budget_ms: f64,
+    rejected: bool,
     plan_ns: u64,
     decision_ns: u64,
     out: Vec<DataHandle>,
@@ -133,7 +185,10 @@ struct EngineCore<'a> {
     /// Time each datum becomes available at its producer (prefetch).
     avail: Vec<f64>,
     heap: BinaryHeap<Reverse<(Ord64, u8, usize, usize)>>,
-    pending: VecDeque<JobId>,
+    /// Jobs waiting for an admission slot, in arrival order; pops are
+    /// ordered by the admission policy via [`EngineCore::pop_pending`].
+    pending: Vec<JobId>,
+    admit_policy: AdmissionPolicy,
     inflight: usize,
     queue: usize,
     jobs: Vec<JobRun<'a>>,
@@ -146,6 +201,7 @@ impl<'a> EngineCore<'a> {
         model: &'a dyn PerfModel,
         config: &'a SimConfig,
         queue: usize,
+        admit_policy: AdmissionPolicy,
     ) -> EngineCore<'a> {
         let worker_free = platform.devices.iter().map(|d| vec![0.0; d.workers]).collect();
         let bus = vec![0.0; config.bus_channels.max(1)];
@@ -158,6 +214,11 @@ impl<'a> EngineCore<'a> {
                 submit_ms: input.submit_ms,
                 admit_ms: 0.0,
                 complete_ms: 0.0,
+                deadline_abs: input.submit_ms + input.qos.deadline_ms,
+                qos: input.qos,
+                est_work_ms: input.est_work_ms,
+                budget_ms: input.budget_ms,
+                rejected: false,
                 plan_ns: input.build_ns,
                 decision_ns: 0,
                 out: Vec::new(),
@@ -185,11 +246,41 @@ impl<'a> EngineCore<'a> {
             dir: Directory::new(),
             avail: Vec::new(),
             heap,
-            pending: VecDeque::new(),
+            pending: Vec::new(),
+            admit_policy,
             inflight: 0,
             queue: queue.max(1),
             jobs,
         }
+    }
+
+    /// Remove and return the next pending job under the admission
+    /// policy. The full composite key is `(priority, deadline,
+    /// est_work, submit_seq)`; each policy consults the documented
+    /// prefix, and `submit_seq` (the dense job id, submission order)
+    /// breaks every tie deterministically.
+    fn pop_pending(&mut self) -> Option<JobId> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        let key = |jobs: &[JobRun], j: JobId| -> (u32, f64, f64, usize) {
+            let job = &jobs[j];
+            match self.admit_policy {
+                // FIFO (and reject, which is FIFO + budgets): arrival
+                // order only.
+                AdmissionPolicy::Fifo | AdmissionPolicy::Reject => (0, 0.0, 0.0, j),
+                AdmissionPolicy::Edf => (job.qos.priority, job.deadline_abs, 0.0, j),
+                AdmissionPolicy::Sjf => (job.qos.priority, job.est_work_ms, 0.0, j),
+            }
+        };
+        let best = (0..self.pending.len())
+            .min_by(|&a, &b| {
+                key(&self.jobs, self.pending[a])
+                    .partial_cmp(&key(&self.jobs, self.pending[b]))
+                    .expect("pending keys are never NaN")
+            })
+            .expect("pending is non-empty");
+        Some(self.pending.remove(best))
     }
 
     /// Admit job `j` at engine time `now`: install its plan, allocate
@@ -303,6 +394,7 @@ impl<'a> EngineCore<'a> {
             kernel: node.kernel,
             size: node.size,
             ready_ms: ready,
+            deadline_ms: job.deadline_abs,
             device_free_ms: &device_free,
             inputs: &inputs,
             platform: self.platform,
@@ -424,13 +516,31 @@ impl<'a> EngineCore<'a> {
                     if self.inflight < self.queue {
                         self.admit(scheduler, j, t);
                     } else {
-                        self.pending.push_back(j);
+                        self.pending.push(j);
+                        // Backpressure: schedule the wait-budget expiry.
+                        // The event is a no-op if the job admits first.
+                        let budget = self.jobs[j].budget_ms;
+                        if budget.is_finite() {
+                            self.heap.push(Reverse((Ord64(t + budget), EV_REJECT, j, 0)));
+                        }
                     }
                 }
                 EV_DRAIN => {
                     self.inflight -= 1;
-                    if let Some(next) = self.pending.pop_front() {
+                    if let Some(next) = self.pop_pending() {
                         self.admit(scheduler, next, t);
+                    }
+                }
+                EV_REJECT => {
+                    // Still pending at budget expiry: reject instead of
+                    // ever admitting past the budget.
+                    if let Some(pos) = self.pending.iter().position(|&p| p == j) {
+                        self.pending.remove(pos);
+                        let job = &mut self.jobs[j];
+                        job.rejected = true;
+                        job.remaining = 0;
+                        job.admit_ms = t;
+                        job.complete_ms = t;
                     }
                 }
                 _ => self.dispatch(scheduler, j, v, t),
@@ -438,8 +548,8 @@ impl<'a> EngineCore<'a> {
         }
         scheduler.on_drain();
         for (j, job) in self.jobs.iter().enumerate() {
-            assert_eq!(
-                job.remaining, 0,
+            assert!(
+                job.rejected || job.remaining == 0,
                 "job {j}: cyclic graph or unreachable tasks ({} left)",
                 job.remaining
             );
@@ -450,7 +560,11 @@ impl<'a> EngineCore<'a> {
                 (
                     RunReport {
                         scheduler: scheduler.name(),
-                        makespan_ms: job.complete_ms - job.submit_ms,
+                        makespan_ms: if job.rejected {
+                            0.0
+                        } else {
+                            job.complete_ms - job.submit_ms
+                        },
                         ledger: job.ledger,
                         assignments: job.assignments,
                         device_busy_ms: job.device_busy,
@@ -463,6 +577,10 @@ impl<'a> EngineCore<'a> {
                         submit_ms: job.submit_ms,
                         admit_ms: job.admit_ms,
                         complete_ms: job.complete_ms,
+                        class: job.qos.class,
+                        priority: job.qos.priority,
+                        deadline_ms: job.deadline_abs,
+                        rejected: job.rejected,
                     },
                 )
             })
@@ -470,7 +588,8 @@ impl<'a> EngineCore<'a> {
     }
 }
 
-/// Run `inputs` through one engine core with admission window `queue`.
+/// Run `inputs` through one engine core with admission window `queue`
+/// ordered by `admit_policy`.
 pub(crate) fn run_jobs<'a>(
     inputs: Vec<JobInput<'a>>,
     scheduler: &mut dyn Scheduler,
@@ -478,8 +597,9 @@ pub(crate) fn run_jobs<'a>(
     model: &'a dyn PerfModel,
     config: &'a SimConfig,
     queue: usize,
+    admit_policy: AdmissionPolicy,
 ) -> Vec<(RunReport, JobTiming)> {
-    EngineCore::new(inputs, platform, model, config, queue).run(scheduler)
+    EngineCore::new(inputs, platform, model, config, queue, admit_policy).run(scheduler)
 }
 
 /// Simulate `dag` under `scheduler`, planning from scratch. See module
@@ -513,10 +633,11 @@ pub fn simulate_with_plan(
         None => Arc::new(scheduler.build_plan(dag, platform, model)),
     };
     let build_ns = t0.elapsed().as_nanos() as u64;
-    let inputs = vec![JobInput { dag, plan, submit_ms: 0.0, build_ns }];
-    let (report, _) = run_jobs(inputs, scheduler, platform, model, config, 1)
-        .pop()
-        .expect("one job in, one report out");
+    let inputs = vec![JobInput::plain(dag, plan, 0.0, build_ns)];
+    let (report, _) =
+        run_jobs(inputs, scheduler, platform, model, config, 1, AdmissionPolicy::Fifo)
+            .pop()
+            .expect("one job in, one report out");
     report
 }
 
@@ -544,19 +665,59 @@ pub fn simulate_open(
     stream: &StreamConfig,
     cache: &mut PlanCache,
 ) -> SessionReport {
+    simulate_open_qos(dags, &[], &[], scheduler, platform, model, config, stream, cache)
+}
+
+/// [`simulate_open`] with per-job QoS: `qos[i]` carries job `i`'s class
+/// / priority / deadline / wait budget (empty slice = all defaults),
+/// and `class_names` labels the class indices in the returned
+/// [`SessionReport`] (empty = `class{i}` fallbacks). Deadlines and
+/// budgets are relative to each job's submit time; the report stores
+/// them absolute. Under `stream.admit` the pending queue is ordered by
+/// `(priority, deadline, est_work, submit_seq)` (see
+/// [`super::stream::AdmissionPolicy`]), and `admit=reject` jobs whose
+/// wait budget expires before a slot frees are rejected and counted
+/// instead of admitted.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_open_qos(
+    dags: &[Dag],
+    qos: &[JobQos],
+    class_names: &[String],
+    scheduler: &mut dyn Scheduler,
+    platform: &Platform,
+    model: &dyn PerfModel,
+    config: &SimConfig,
+    stream: &StreamConfig,
+    cache: &mut PlanCache,
+) -> SessionReport {
+    assert!(
+        qos.is_empty() || qos.len() == dags.len(),
+        "qos must be empty or match the job count"
+    );
+    let qos_of = |i: usize| qos.get(i).copied().unwrap_or_default();
     let mut session = SessionReport::new(scheduler.name());
+    session.class_names = class_names.to_vec();
     match stream.arrival.submit_times_ms(dags.len()) {
         // Closed loop: sequential fresh cores, back-to-back clock.
+        // Admission never queues, so QoS only tags the timings.
         None => {
             let mut clock = 0.0f64;
             for (i, dag) in dags.iter().enumerate() {
                 let key = PlanKey::of(dag, platform, model, scheduler);
                 let (plan, hit, build_ns) =
                     cache.get_or_build(key, || scheduler.build_plan(dag, platform, model));
-                let inputs = vec![JobInput { dag, plan, submit_ms: 0.0, build_ns }];
-                let (mut report, _) = run_jobs(inputs, scheduler, platform, model, config, 1)
-                    .pop()
-                    .expect("one job in, one report out");
+                let inputs = vec![JobInput::plain(dag, plan, 0.0, build_ns)];
+                let (mut report, _) = run_jobs(
+                    inputs,
+                    scheduler,
+                    platform,
+                    model,
+                    config,
+                    1,
+                    AdmissionPolicy::Fifo,
+                )
+                .pop()
+                .expect("one job in, one report out");
                 // Tag and shift the trace onto the session clock so the
                 // merged timeline agrees with the job timings.
                 for ev in &mut report.trace {
@@ -564,10 +725,15 @@ pub fn simulate_open(
                     ev.start_ms += clock;
                     ev.end_ms += clock;
                 }
+                let q = qos_of(i);
                 let timing = JobTiming {
                     submit_ms: clock,
                     admit_ms: clock,
                     complete_ms: clock + report.makespan_ms,
+                    class: q.class,
+                    priority: q.priority,
+                    deadline_ms: clock + q.deadline_ms,
+                    rejected: false,
                 };
                 clock = timing.complete_ms;
                 session.push_timed(report, hit, timing);
@@ -577,14 +743,31 @@ pub fn simulate_open(
         Some(times) => {
             let mut inputs = Vec::with_capacity(dags.len());
             let mut hits = Vec::with_capacity(dags.len());
-            for (dag, &submit_ms) in dags.iter().zip(&times) {
+            for (i, (dag, &submit_ms)) in dags.iter().zip(&times).enumerate() {
                 let key = PlanKey::of(dag, platform, model, scheduler);
                 let (plan, hit, build_ns) =
                     cache.get_or_build(key, || scheduler.build_plan(dag, platform, model));
-                inputs.push(JobInput { dag, plan, submit_ms, build_ns });
+                let q = qos_of(i);
+                inputs.push(JobInput {
+                    dag,
+                    plan,
+                    submit_ms,
+                    build_ns,
+                    qos: q,
+                    est_work_ms: est_total_work_ms(dag, platform, model),
+                    budget_ms: stream.effective_budget_ms(&q),
+                });
                 hits.push(hit);
             }
-            let results = run_jobs(inputs, scheduler, platform, model, config, stream.queue);
+            let results = run_jobs(
+                inputs,
+                scheduler,
+                platform,
+                model,
+                config,
+                stream.queue,
+                stream.admit,
+            );
             for ((report, timing), hit) in results.into_iter().zip(hits) {
                 session.push_timed(report, hit, timing);
             }
@@ -920,8 +1103,7 @@ mod tests {
             (0..6).map(|_| workloads::chain(3, KernelKind::Ma, 512)).collect();
         let mut s = sched::by_name("dmda").unwrap();
         let mut cache = crate::sched::PlanCache::new();
-        let stream =
-            StreamConfig { arrival: ArrivalProcess::Fixed { rate_jps: 10_000.0 }, queue: 2 };
+        let stream = StreamConfig::open(ArrivalProcess::Fixed { rate_jps: 10_000.0 }, 2);
         let session = simulate_open(
             &dags,
             s.as_mut(),
@@ -954,10 +1136,7 @@ mod tests {
         let model = CalibratedModel::default();
         let dags: Vec<Dag> =
             (0..5).map(|_| workloads::phased(6, 2, 256)).collect();
-        let stream = StreamConfig {
-            arrival: ArrivalProcess::Poisson { rate_jps: 400.0, seed: 7 },
-            queue: 4,
-        };
+        let stream = StreamConfig::open(ArrivalProcess::Poisson { rate_jps: 400.0, seed: 7 }, 4);
         let cfg = SimConfig { collect_trace: true, ..Default::default() };
         let mut go = || {
             let mut s = sched::by_name("dmda").unwrap();

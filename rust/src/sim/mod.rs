@@ -7,10 +7,13 @@
 //! and totally ordered by `(time, kind, job, task)`: jobs share the
 //! devices, the bus channels and the MSI [`crate::data::Directory`], an
 //! [`ArrivalProcess`] generates submit times (closed-loop, fixed-rate,
-//! Poisson, bursty), and a bounded admission window queues the excess —
-//! so the simulator measures what an open system actually exhibits:
-//! contention, queueing delay, pipelined drain, sojourn percentiles and
-//! throughput ([`SessionReport`]). Single-DAG [`simulate`] is a thin
+//! Poisson, bursty), and a bounded admission window queues the excess
+//! under an [`AdmissionPolicy`] (FIFO, earliest-deadline-first,
+//! shortest-job-first, or FIFO-with-rejection under per-job wait
+//! budgets) — so the simulator measures what an open system actually
+//! exhibits: contention, queueing delay, pipelined drain, sojourn
+//! percentiles, per-class SLO outcomes and throughput
+//! ([`SessionReport`]). Single-DAG [`simulate`] is a thin
 //! one-job wrapper over the same core — deterministically and in
 //! microseconds of wall time, which is what lets the figure benches
 //! sweep 100 iterations × 11 sizes × several schedulers as the paper
@@ -33,6 +36,9 @@ pub mod engine;
 pub mod report;
 pub mod stream;
 
-pub use engine::{simulate, simulate_open, simulate_stream, simulate_with_plan, SimConfig};
-pub use report::{JobTiming, RunReport, SessionReport, TraceEvent};
-pub use stream::{ArrivalProcess, StreamConfig, DEFAULT_QUEUE};
+pub use engine::{
+    est_total_work_ms, simulate, simulate_open, simulate_open_qos, simulate_stream,
+    simulate_with_plan, SimConfig,
+};
+pub use report::{ClassReport, JobTiming, RunReport, SessionReport, TraceEvent};
+pub use stream::{AdmissionPolicy, ArrivalProcess, JobQos, StreamConfig, DEFAULT_QUEUE};

@@ -79,16 +79,43 @@ impl RunReport {
     }
 }
 
-/// Lifecycle timestamps of one job on the session clock (ms).
-#[derive(Debug, Clone, Copy, PartialEq, Default)]
+/// Lifecycle timestamps and QoS outcome of one job on the session
+/// clock (ms).
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct JobTiming {
     /// Arrival: the job enters the system.
     pub submit_ms: f64,
     /// Admission: the bounded window accepts it (= submit when a slot
-    /// was free; later when it waited in the FIFO).
+    /// was free; later when it waited in the pending queue). For a
+    /// rejected job this is the rejection instant.
     pub admit_ms: f64,
-    /// Last completion, including result write-backs.
+    /// Last completion, including result write-backs (= the rejection
+    /// instant for a rejected job).
     pub complete_ms: f64,
+    /// QoS class index, resolved through
+    /// [`SessionReport::class_names`] (0 for unclassed jobs).
+    pub class: usize,
+    /// Priority band (lower admits first under `edf`/`sjf`).
+    pub priority: u32,
+    /// Absolute deadline on the session clock; `f64::INFINITY` = none.
+    pub deadline_ms: f64,
+    /// True when the job's wait budget expired before admission
+    /// (`admit=reject` backpressure): no task of it ever ran.
+    pub rejected: bool,
+}
+
+impl Default for JobTiming {
+    fn default() -> Self {
+        JobTiming {
+            submit_ms: 0.0,
+            admit_ms: 0.0,
+            complete_ms: 0.0,
+            class: 0,
+            priority: 0,
+            deadline_ms: f64::INFINITY,
+            rejected: false,
+        }
+    }
 }
 
 impl JobTiming {
@@ -101,6 +128,42 @@ impl JobTiming {
     pub fn sojourn_ms(&self) -> f64 {
         self.complete_ms - self.submit_ms
     }
+
+    /// Did the job finish within its deadline? Jobs without a deadline
+    /// always hit; rejected jobs with one always miss.
+    pub fn deadline_hit(&self) -> bool {
+        if self.deadline_ms.is_infinite() {
+            return true;
+        }
+        !self.rejected && self.complete_ms <= self.deadline_ms + 1e-9
+    }
+}
+
+/// The SLO breakdown of one QoS class within a session: how that slice
+/// of the traffic fared (latency percentiles over its *completed* jobs,
+/// rejection count, deadline-hit rate, completed-job throughput over
+/// the whole session span).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassReport {
+    /// Class index ([`JobTiming::class`]).
+    pub class: usize,
+    /// Display name ([`SessionReport::class_name`]).
+    pub name: String,
+    /// Jobs submitted in this class (completed + rejected).
+    pub jobs: usize,
+    /// Jobs rejected by wait-budget backpressure.
+    pub rejected: usize,
+    /// Nearest-rank sojourn percentiles over the class's completed jobs.
+    pub p50_sojourn_ms: f64,
+    pub p95_sojourn_ms: f64,
+    pub p99_sojourn_ms: f64,
+    pub mean_sojourn_ms: f64,
+    pub mean_queueing_delay_ms: f64,
+    /// Fraction of the class's deadline-carrying jobs that completed in
+    /// time (rejected = miss); 1.0 when none carry a deadline.
+    pub deadline_hit_rate: f64,
+    /// Completed jobs of this class per second of session span.
+    pub throughput_jps: f64,
 }
 
 /// Merged outcome of a streaming session: a sequence of jobs run through
@@ -110,10 +173,14 @@ impl JobTiming {
 pub struct SessionReport {
     /// Policy name (as reported on the first job).
     pub scheduler: String,
-    /// Per-job reports, in submission order.
+    /// Per-job reports, in submission order. A rejected job keeps its
+    /// slot (empty report) so `jobs` and `timings` stay parallel.
     pub jobs: Vec<RunReport>,
     /// Per-job lifecycle timings, in submission order.
     pub timings: Vec<JobTiming>,
+    /// Names of the QoS classes indexed by [`JobTiming::class`]; empty
+    /// when the session is unclassed (every job class 0).
+    pub class_names: Vec<String>,
     /// Sum of per-job sojourns (ms). In a closed loop this equals the
     /// session span; in an open system concurrent jobs overlap, so it
     /// exceeds [`SessionReport::span_ms`].
@@ -146,6 +213,7 @@ impl SessionReport {
             submit_ms: self.span_ms,
             admit_ms: self.span_ms,
             complete_ms: self.span_ms + job.makespan_ms,
+            ..Default::default()
         };
         self.push_timed(job, cache_hit, timing);
     }
@@ -196,24 +264,41 @@ impl SessionReport {
     }
 
     // --- queueing metrics -------------------------------------------
+    //
+    // Latency metrics describe *served* traffic: rejected jobs never
+    // ran, so they are excluded from sojourn/queueing-delay/throughput
+    // figures and accounted separately ([`SessionReport::rejected_count`],
+    // per-class rejection counts, deadline-hit rates).
 
-    /// Per-job sojourn times (submit → completion), submission order.
-    pub fn sojourns_ms(&self) -> Vec<f64> {
-        self.timings.iter().map(|t| t.sojourn_ms()).collect()
+    /// Timings of the jobs that actually ran (admitted + completed).
+    fn completed(&self) -> impl Iterator<Item = &JobTiming> {
+        self.timings.iter().filter(|t| !t.rejected)
     }
 
-    /// Per-job queueing delays (submit → admission), submission order.
+    /// Jobs rejected by `admit=reject` backpressure.
+    pub fn rejected_count(&self) -> usize {
+        self.timings.iter().filter(|t| t.rejected).count()
+    }
+
+    /// Per-job sojourn times (submit → completion) of completed jobs,
+    /// submission order.
+    pub fn sojourns_ms(&self) -> Vec<f64> {
+        self.completed().map(|t| t.sojourn_ms()).collect()
+    }
+
+    /// Per-job queueing delays (submit → admission) of completed jobs,
+    /// submission order.
     pub fn queueing_delays_ms(&self) -> Vec<f64> {
-        self.timings.iter().map(|t| t.queueing_delay_ms()).collect()
+        self.completed().map(|t| t.queueing_delay_ms()).collect()
     }
 
     /// Nearest-rank percentile of the sojourn distribution (`p` in
     /// (0, 100]); 0.0 for an empty session.
     pub fn sojourn_percentile_ms(&self, p: f64) -> f64 {
-        if self.timings.is_empty() {
+        let mut sorted = self.sojourns_ms();
+        if sorted.is_empty() {
             return 0.0;
         }
-        let mut sorted = self.sojourns_ms();
         sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
         percentile_nearest_rank(&sorted, p)
     }
@@ -233,21 +318,24 @@ impl SessionReport {
         self.sojourn_percentile_ms(99.0)
     }
 
-    /// Mean sojourn (ms); 0.0 for an empty session.
+    /// Mean sojourn (ms) of completed jobs; 0.0 for an empty session.
     pub fn mean_sojourn_ms(&self) -> f64 {
-        if self.timings.is_empty() {
+        let s = self.sojourns_ms();
+        if s.is_empty() {
             0.0
         } else {
-            self.sojourns_ms().iter().sum::<f64>() / self.timings.len() as f64
+            s.iter().sum::<f64>() / s.len() as f64
         }
     }
 
-    /// Mean queueing delay (ms); 0.0 for an empty session.
+    /// Mean queueing delay (ms) of completed jobs; 0.0 for an empty
+    /// session.
     pub fn mean_queueing_delay_ms(&self) -> f64 {
-        if self.timings.is_empty() {
+        let q = self.queueing_delays_ms();
+        if q.is_empty() {
             0.0
         } else {
-            self.queueing_delays_ms().iter().sum::<f64>() / self.timings.len() as f64
+            q.iter().sum::<f64>() / q.len() as f64
         }
     }
 
@@ -257,8 +345,20 @@ impl SessionReport {
         if self.span_ms <= 0.0 {
             0.0
         } else {
-            self.jobs.len() as f64 / (self.span_ms / 1000.0)
+            self.completed().count() as f64 / (self.span_ms / 1000.0)
         }
+    }
+
+    /// Fraction of deadline-carrying jobs that completed within their
+    /// deadline (rejected ones count as misses); 1.0 when no job has a
+    /// deadline.
+    pub fn deadline_hit_rate(&self) -> f64 {
+        let with: Vec<&JobTiming> =
+            self.timings.iter().filter(|t| t.deadline_ms.is_finite()).collect();
+        if with.is_empty() {
+            return 1.0;
+        }
+        with.iter().filter(|t| t.deadline_hit()).count() as f64 / with.len() as f64
     }
 
     /// Session-level utilization per device: total busy time across
@@ -288,7 +388,7 @@ impl SessionReport {
     /// yet complete) at any instant of the session.
     pub fn max_concurrent_jobs(&self) -> usize {
         let mut events: Vec<(f64, i32)> = Vec::with_capacity(self.timings.len() * 2);
-        for t in &self.timings {
+        for t in self.completed() {
             events.push((t.admit_ms, 1));
             events.push((t.complete_ms, -1));
         }
@@ -302,6 +402,85 @@ impl SessionReport {
             best = best.max(cur);
         }
         best.max(0) as usize
+    }
+
+    // --- per-class SLO breakdown ------------------------------------
+
+    /// Number of QoS classes present: enough to cover both the declared
+    /// names and the highest class index any job carries.
+    pub fn class_count(&self) -> usize {
+        let seen = self.timings.iter().map(|t| t.class + 1).max().unwrap_or(0);
+        seen.max(self.class_names.len()).max(usize::from(!self.timings.is_empty()))
+    }
+
+    /// Display name of class `c` (declared name or a `class{c}`
+    /// fallback).
+    pub fn class_name(&self, c: usize) -> String {
+        self.class_names.get(c).cloned().unwrap_or_else(|| format!("class{c}"))
+    }
+
+    /// The SLO breakdown of one class (`c` may be empty of jobs).
+    pub fn class_report(&self, c: usize) -> ClassReport {
+        let of_class: Vec<&JobTiming> =
+            self.timings.iter().filter(|t| t.class == c).collect();
+        let mut sojourns: Vec<f64> = of_class
+            .iter()
+            .filter(|t| !t.rejected)
+            .map(|t| t.sojourn_ms())
+            .collect();
+        sojourns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let delays: Vec<f64> = of_class
+            .iter()
+            .filter(|t| !t.rejected)
+            .map(|t| t.queueing_delay_ms())
+            .collect();
+        let pct = |p: f64| {
+            if sojourns.is_empty() {
+                0.0
+            } else {
+                percentile_nearest_rank(&sojourns, p)
+            }
+        };
+        let with_deadline = of_class.iter().filter(|t| t.deadline_ms.is_finite()).count();
+        let hits = of_class
+            .iter()
+            .filter(|t| t.deadline_ms.is_finite() && t.deadline_hit())
+            .count();
+        ClassReport {
+            class: c,
+            name: self.class_name(c),
+            jobs: of_class.len(),
+            rejected: of_class.iter().filter(|t| t.rejected).count(),
+            p50_sojourn_ms: pct(50.0),
+            p95_sojourn_ms: pct(95.0),
+            p99_sojourn_ms: pct(99.0),
+            mean_sojourn_ms: if sojourns.is_empty() {
+                0.0
+            } else {
+                sojourns.iter().sum::<f64>() / sojourns.len() as f64
+            },
+            mean_queueing_delay_ms: if delays.is_empty() {
+                0.0
+            } else {
+                delays.iter().sum::<f64>() / delays.len() as f64
+            },
+            deadline_hit_rate: if with_deadline == 0 {
+                1.0
+            } else {
+                hits as f64 / with_deadline as f64
+            },
+            throughput_jps: if self.span_ms <= 0.0 {
+                0.0
+            } else {
+                (of_class.len() - of_class.iter().filter(|t| t.rejected).count()) as f64
+                    / (self.span_ms / 1000.0)
+            },
+        }
+    }
+
+    /// Per-class SLO breakdowns for every class, index order.
+    pub fn per_class(&self) -> Vec<ClassReport> {
+        (0..self.class_count()).map(|c| self.class_report(c)).collect()
     }
 
     /// All jobs' trace events merged and ordered by
@@ -387,6 +566,7 @@ mod tests {
             submit_ms: sub,
             admit_ms: adm,
             complete_ms: comp,
+            ..Default::default()
         };
         s.push_timed(job(4.0, 0), false, t(0.0, 0.0, 4.0));
         s.push_timed(job(6.0, 0), true, t(1.0, 1.0, 7.0));
@@ -424,8 +604,16 @@ mod tests {
             start_ms: 1.0,
             end_ms: 4.0,
         }];
-        s.push_timed(a, false, JobTiming { submit_ms: 0.0, admit_ms: 0.0, complete_ms: 5.0 });
-        s.push_timed(b, false, JobTiming { submit_ms: 1.0, admit_ms: 1.0, complete_ms: 6.0 });
+        s.push_timed(
+            a,
+            false,
+            JobTiming { submit_ms: 0.0, admit_ms: 0.0, complete_ms: 5.0, ..Default::default() },
+        );
+        s.push_timed(
+            b,
+            false,
+            JobTiming { submit_ms: 1.0, admit_ms: 1.0, complete_ms: 6.0, ..Default::default() },
+        );
         let merged = s.merged_trace();
         assert_eq!(merged.len(), 3);
         assert_eq!((merged[0].job, merged[0].task), (0, 0));
@@ -443,6 +631,85 @@ mod tests {
         assert_eq!(s.throughput_jps(), 0.0);
         assert_eq!(s.max_concurrent_jobs(), 0);
         assert_eq!(s.device_utilization(&[3, 1]), vec![0.0, 0.0]);
+        assert_eq!(s.rejected_count(), 0);
+        assert_eq!(s.deadline_hit_rate(), 1.0, "no deadlines = vacuous hit");
+        assert_eq!(s.class_count(), 0);
+        assert!(s.per_class().is_empty());
+    }
+
+    #[test]
+    fn per_class_breakdown_partitions_the_session() {
+        let mut s = SessionReport::new("test");
+        s.class_names = vec!["interactive".into(), "batch".into()];
+        let t = |sub: f64, comp: f64, class: usize, ddl: f64| JobTiming {
+            submit_ms: sub,
+            admit_ms: sub,
+            complete_ms: comp,
+            class,
+            deadline_ms: ddl,
+            ..Default::default()
+        };
+        // interactive: sojourns 2 and 4, one deadline miss.
+        s.push_timed(job(2.0, 0), false, t(0.0, 2.0, 0, 3.0));
+        s.push_timed(job(4.0, 0), false, t(1.0, 5.0, 0, 3.0));
+        // batch: sojourn 10, no deadline.
+        s.push_timed(job(10.0, 0), false, t(0.0, 10.0, 1, f64::INFINITY));
+        assert_eq!(s.class_count(), 2);
+        let per = s.per_class();
+        assert_eq!(per.len(), 2);
+        assert_eq!(per[0].name, "interactive");
+        assert_eq!((per[0].jobs, per[0].rejected), (2, 0));
+        assert_eq!(per[0].p50_sojourn_ms, 2.0);
+        assert_eq!(per[0].p95_sojourn_ms, 4.0);
+        assert_eq!(per[0].p99_sojourn_ms, 4.0);
+        assert!((per[0].deadline_hit_rate - 0.5).abs() < 1e-12, "one of two in time");
+        assert_eq!(per[1].name, "batch");
+        assert_eq!(per[1].jobs, 1);
+        assert_eq!(per[1].p50_sojourn_ms, 10.0);
+        assert_eq!(per[1].deadline_hit_rate, 1.0, "no deadline = vacuous hit");
+        // Class job counts partition the session.
+        assert_eq!(per.iter().map(|c| c.jobs).sum::<usize>(), s.job_count());
+        // Session-wide hit rate pools the deadline-carrying jobs.
+        assert!((s.deadline_hit_rate() - 0.5).abs() < 1e-12);
+        // Per-class throughput sums to session throughput.
+        let tp: f64 = per.iter().map(|c| c.throughput_jps).sum();
+        assert!((tp - s.throughput_jps()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejected_jobs_leave_latency_metrics_untouched() {
+        let mut s = SessionReport::new("test");
+        let served = JobTiming {
+            submit_ms: 0.0,
+            admit_ms: 0.0,
+            complete_ms: 8.0,
+            deadline_ms: 10.0,
+            ..Default::default()
+        };
+        let rejected = JobTiming {
+            submit_ms: 1.0,
+            admit_ms: 6.0,
+            complete_ms: 6.0,
+            deadline_ms: 20.0,
+            rejected: true,
+            ..Default::default()
+        };
+        s.push_timed(job(8.0, 0), false, served);
+        s.push_timed(job(0.0, 0), false, rejected);
+        assert_eq!(s.job_count(), 2);
+        assert_eq!(s.rejected_count(), 1);
+        // Latency metrics describe served traffic only.
+        assert_eq!(s.sojourns_ms(), vec![8.0]);
+        assert_eq!(s.p99_sojourn_ms(), 8.0);
+        assert_eq!(s.mean_sojourn_ms(), 8.0);
+        assert_eq!(s.max_concurrent_jobs(), 1);
+        assert!((s.throughput_jps() - 1.0 / 0.008).abs() < 1e-9);
+        // The rejected job's deadline counts as a miss.
+        assert!((s.deadline_hit_rate() - 0.5).abs() < 1e-12);
+        let c = s.class_report(0);
+        assert_eq!((c.jobs, c.rejected), (2, 1));
+        assert!(!served.rejected && served.deadline_hit());
+        assert!(!rejected.deadline_hit());
     }
 
     #[test]

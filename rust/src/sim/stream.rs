@@ -1,13 +1,33 @@
-//! Arrival processes and open-stream configuration.
+//! Arrival processes, admission policies and open-stream configuration.
 //!
 //! An [`ArrivalProcess`] turns a job count into deterministic submit
 //! times (virtual milliseconds); a [`StreamConfig`] pairs it with the
-//! bounded admission window the open-system engine enforces. Both are
-//! reachable from the registry config-string syntax
-//! (`"stream:arrival=poisson,rate=120,queue=32"` — see
+//! bounded admission window the open-system engine enforces and the
+//! [`AdmissionPolicy`] that orders the jobs waiting for a slot. Both
+//! are reachable from the registry config-string syntax
+//! (`"stream:arrival=poisson,rate=220,queue=8,admit=edf"` — see
 //! [`StreamConfig::from_spec`] and the syntax notes on
 //! [`crate::sched::SchedulerRegistry`]), so CLI flags, config files and
 //! bench matrices can sweep traffic scenarios without recompiling.
+//!
+//! # QoS model
+//!
+//! Every job carries a [`JobQos`]: a class index (for per-class SLO
+//! reporting in [`crate::sim::SessionReport`]), a priority, a relative
+//! deadline and a wait budget. The engine's pending queue is ordered by
+//! the composite key `(priority, deadline, est_work, submit_seq)`, of
+//! which each admission policy consults a prefix:
+//!
+//! * [`AdmissionPolicy::Fifo`] — `submit_seq` only (arrival order; the
+//!   default, bit-identical to the pre-QoS engine);
+//! * [`AdmissionPolicy::Edf`] — `(priority, deadline, submit_seq)`:
+//!   earliest absolute job deadline first within a priority band;
+//! * [`AdmissionPolicy::Sjf`] — `(priority, est_work, submit_seq)`:
+//!   smallest calibrated total-work estimate first within a band;
+//! * [`AdmissionPolicy::Reject`] — FIFO order plus backpressure: a job
+//!   still waiting when its wait budget expires is rejected (counted in
+//!   the session report) instead of admitted, so no job is ever
+//!   admitted later than `submit + budget`.
 //!
 //! Randomized processes draw from the in-tree deterministic
 //! [`Pcg32`], so a `(process, seed, n)` triple always produces the same
@@ -88,15 +108,83 @@ fn exponential_ms(rng: &mut Pcg32, rate_jps: f64) -> f64 {
     -(1.0 - rng.gen_f64()).ln() * (1000.0 / rate_jps)
 }
 
+/// How jobs waiting for an admission slot are ordered (and whether they
+/// may be rejected). See the module docs for the composite pending-queue
+/// key each policy consults.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Arrival order (`submit_seq`) — the default; bit-identical to the
+    /// pre-QoS FIFO window.
+    Fifo,
+    /// Earliest (absolute) job deadline first, within a priority band:
+    /// key `(priority, deadline, submit_seq)`.
+    Edf,
+    /// Shortest job first by the calibrated cost model's total-work
+    /// estimate, within a priority band: key
+    /// `(priority, est_work, submit_seq)`.
+    Sjf,
+    /// FIFO with a bounded wait budget: a job still pending when its
+    /// budget expires is rejected (backpressure) and counted, so every
+    /// *admitted* job satisfies `admit - submit <= budget`.
+    Reject,
+}
+
+impl AdmissionPolicy {
+    /// Canonical spec-string value (`admit=<this>`).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AdmissionPolicy::Fifo => "fifo",
+            AdmissionPolicy::Edf => "edf",
+            AdmissionPolicy::Sjf => "sjf",
+            AdmissionPolicy::Reject => "reject",
+        }
+    }
+}
+
+/// Per-job quality-of-service attributes consumed by the open-system
+/// engine: the class index keys the per-class breakdown in
+/// [`crate::sim::SessionReport`], the rest feed the admission policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct JobQos {
+    /// Class index (dense, `0` for unclassed jobs) — resolved to a name
+    /// through [`crate::sim::SessionReport::class_names`].
+    pub class: usize,
+    /// Priority band: lower values admit first under `edf`/`sjf`.
+    pub priority: u32,
+    /// Relative deadline (ms after submit); `f64::INFINITY` = none.
+    pub deadline_ms: f64,
+    /// Wait budget (ms after submit) for [`AdmissionPolicy::Reject`];
+    /// `f64::INFINITY` = never rejected.
+    pub wait_budget_ms: f64,
+}
+
+impl Default for JobQos {
+    fn default() -> Self {
+        JobQos {
+            class: 0,
+            priority: 0,
+            deadline_ms: f64::INFINITY,
+            wait_budget_ms: f64::INFINITY,
+        }
+    }
+}
+
 /// Open-stream scenario: arrival process + bounded admission window.
 #[derive(Debug, Clone, PartialEq)]
 pub struct StreamConfig {
     /// How submit times are generated.
     pub arrival: ArrivalProcess,
     /// Admission window: at most this many jobs may be admitted (in
-    /// flight) at once; later submissions wait in FIFO order, and their
-    /// wait is the session's *queueing delay* metric.
+    /// flight) at once; later submissions wait in the pending queue, and
+    /// their wait is the session's *queueing delay* metric.
     pub queue: usize,
+    /// How the pending queue is ordered (and whether waits are bounded).
+    pub admit: AdmissionPolicy,
+    /// Session-wide wait budget (ms) applied under
+    /// [`AdmissionPolicy::Reject`] to jobs without a tighter per-job
+    /// [`JobQos::wait_budget_ms`]; `f64::INFINITY` = per-job budgets
+    /// only.
+    pub budget_ms: f64,
 }
 
 impl Default for StreamConfig {
@@ -108,7 +196,28 @@ impl Default for StreamConfig {
 impl StreamConfig {
     /// The closed-loop stream (PR 2 semantics).
     pub fn closed() -> StreamConfig {
-        StreamConfig { arrival: ArrivalProcess::Closed, queue: DEFAULT_QUEUE }
+        StreamConfig {
+            arrival: ArrivalProcess::Closed,
+            queue: DEFAULT_QUEUE,
+            admit: AdmissionPolicy::Fifo,
+            budget_ms: f64::INFINITY,
+        }
+    }
+
+    /// `config` with timed arrivals and everything else defaulted —
+    /// the shorthand the open-system tests construct scenarios with.
+    pub fn open(arrival: ArrivalProcess, queue: usize) -> StreamConfig {
+        StreamConfig { arrival, queue, ..StreamConfig::closed() }
+    }
+
+    /// Effective wait budget of one job under this stream: the tighter
+    /// of the per-job and session-wide budgets (infinite unless the
+    /// admission policy is `reject`).
+    pub fn effective_budget_ms(&self, qos: &JobQos) -> f64 {
+        if self.admit != AdmissionPolicy::Reject {
+            return f64::INFINITY;
+        }
+        qos.wait_budget_ms.min(self.budget_ms)
     }
 
     /// Parse a stream spec in the registry config-string syntax:
@@ -121,12 +230,19 @@ impl StreamConfig {
     ///            queue   = admission window  (default 32, >= 1)
     ///            seed    = PRNG seed         (poisson/bursty, default 7)
     ///            burst   = batch size        (bursty only, default 4)
+    ///            admit   = fifo | edf | sjf | reject   (default fifo;
+    ///                      timed arrivals only — closed loops never
+    ///                      queue, so a non-fifo policy there is an
+    ///                      error, not a silent no-op)
+    ///            budget  = session-wide wait budget in ms
+    ///                      (admit=reject only)
     /// ```
     ///
-    /// Examples: `"stream:arrival=poisson,rate=120,queue=32"`,
-    /// `"arrival=fixed,rate=200"`, `"stream"` (closed). Unknown keys,
-    /// keys that the selected arrival kind does not consume, and
-    /// malformed values are hard errors.
+    /// Examples: `"stream:arrival=poisson,rate=220,queue=8,admit=edf"`,
+    /// `"arrival=bursty,rate=260,burst=6,admit=reject,budget=25"`,
+    /// `"stream"` (closed). Unknown keys, keys that the selected arrival
+    /// kind or admission policy does not consume, and malformed values
+    /// are hard errors.
     pub fn from_spec(spec: &str) -> Result<StreamConfig> {
         let params_src = match spec.trim().split_once(':') {
             Some((name, rest)) => {
@@ -152,6 +268,26 @@ impl StreamConfig {
         if queue == 0 {
             bail!("queue must be >= 1");
         }
+        let admit = match p.get("admit").as_deref() {
+            None | Some("fifo") => AdmissionPolicy::Fifo,
+            Some("edf") => AdmissionPolicy::Edf,
+            Some("sjf") => AdmissionPolicy::Sjf,
+            Some("reject") => AdmissionPolicy::Reject,
+            Some(other) => bail!("unknown admit {other:?} (fifo | edf | sjf | reject)"),
+        };
+        if admit != AdmissionPolicy::Fifo && arrival_kind == "closed" {
+            bail!("admit={} requires timed arrivals (closed loops never queue)", admit.as_str());
+        }
+        let budget_ms = match admit {
+            AdmissionPolicy::Reject => {
+                let b = p.f64("budget", f64::INFINITY)?;
+                if b < 0.0 {
+                    bail!("budget must be >= 0 ms");
+                }
+                b
+            }
+            _ => f64::INFINITY,
+        };
         let arrival = match arrival_kind.as_str() {
             "closed" => ArrivalProcess::Closed,
             "fixed" => ArrivalProcess::Fixed { rate_jps: need_rate(&mut p, "fixed")? },
@@ -170,13 +306,14 @@ impl StreamConfig {
             other => bail!("unknown arrival {other:?} (closed | fixed | poisson | bursty)"),
         };
         p.finish().with_context(|| format!("parsing stream spec {spec:?}"))?;
-        Ok(StreamConfig { arrival, queue })
+        Ok(StreamConfig { arrival, queue, admit, budget_ms })
     }
 
     /// Render back to the canonical spec string (diagnostics, bench
-    /// JSON rows).
+    /// JSON rows). `admit=`/`budget=` appear only when non-default, so
+    /// pre-QoS specs round-trip to their exact pre-QoS strings.
     pub fn spec_string(&self) -> String {
-        match &self.arrival {
+        let mut s = match &self.arrival {
             ArrivalProcess::Closed => "stream:arrival=closed".to_string(),
             ArrivalProcess::Fixed { rate_jps } => {
                 format!("stream:arrival=fixed,rate={rate_jps},queue={}", self.queue)
@@ -188,7 +325,14 @@ impl StreamConfig {
                 "stream:arrival=bursty,rate={rate_jps},burst={burst},queue={},seed={seed}",
                 self.queue
             ),
+        };
+        if self.admit != AdmissionPolicy::Fifo {
+            s.push_str(&format!(",admit={}", self.admit.as_str()));
         }
+        if self.budget_ms.is_finite() {
+            s.push_str(&format!(",budget={}", self.budget_ms));
+        }
+        s
     }
 }
 
@@ -251,6 +395,68 @@ mod tests {
             ArrivalProcess::Bursty { rate_jps: 50.0, burst: 8, seed: 11 }
         );
         assert_eq!(b.queue, 4);
+    }
+
+    #[test]
+    fn admit_spec_round_trips() {
+        let s = StreamConfig::from_spec("stream:arrival=poisson,rate=220,queue=8,admit=edf")
+            .unwrap();
+        assert_eq!(s.admit, AdmissionPolicy::Edf);
+        assert!(s.budget_ms.is_infinite());
+        assert_eq!(
+            s.spec_string(),
+            "stream:arrival=poisson,rate=220,queue=8,seed=7,admit=edf"
+        );
+        assert_eq!(StreamConfig::from_spec(&s.spec_string()).unwrap(), s);
+
+        let r = StreamConfig::from_spec("arrival=bursty,rate=260,burst=6,admit=reject,budget=25")
+            .unwrap();
+        assert_eq!(r.admit, AdmissionPolicy::Reject);
+        assert_eq!(r.budget_ms, 25.0);
+        assert_eq!(StreamConfig::from_spec(&r.spec_string()).unwrap(), r);
+
+        // admit=fifo is the default and never printed, so pre-QoS specs
+        // round-trip unchanged.
+        let f = StreamConfig::from_spec("stream:arrival=poisson,rate=120,queue=32,admit=fifo")
+            .unwrap();
+        assert_eq!(f.admit, AdmissionPolicy::Fifo);
+        assert_eq!(f.spec_string(), "stream:arrival=poisson,rate=120,queue=32,seed=7");
+        assert_eq!(
+            f,
+            StreamConfig::from_spec("stream:arrival=poisson,rate=120,queue=32").unwrap()
+        );
+    }
+
+    #[test]
+    fn effective_budget_combines_job_and_stream() {
+        let r = StreamConfig::from_spec("arrival=fixed,rate=100,admit=reject,budget=30").unwrap();
+        let tight = JobQos { wait_budget_ms: 10.0, ..Default::default() };
+        let loose = JobQos { wait_budget_ms: 80.0, ..Default::default() };
+        let none = JobQos::default();
+        assert_eq!(r.effective_budget_ms(&tight), 10.0);
+        assert_eq!(r.effective_budget_ms(&loose), 30.0);
+        assert_eq!(r.effective_budget_ms(&none), 30.0);
+        // Budgets only bite under admit=reject.
+        let f = StreamConfig::from_spec("arrival=fixed,rate=100").unwrap();
+        assert!(f.effective_budget_ms(&tight).is_infinite());
+    }
+
+    #[test]
+    fn admit_spec_errors_are_loud() {
+        assert!(StreamConfig::from_spec("stream:arrival=fixed,rate=1,admit=lifo").is_err());
+        assert!(
+            StreamConfig::from_spec("stream:arrival=closed,admit=edf").is_err(),
+            "closed loops never queue"
+        );
+        assert!(
+            StreamConfig::from_spec("stream:arrival=fixed,rate=1,admit=edf,budget=9").is_err(),
+            "budget requires admit=reject"
+        );
+        assert!(
+            StreamConfig::from_spec("stream:arrival=fixed,rate=1,admit=reject,budget=-2")
+                .is_err(),
+            "negative budget"
+        );
     }
 
     #[test]

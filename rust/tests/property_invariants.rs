@@ -297,6 +297,123 @@ fn forall_csr_construction_roundtrips() {
     }
 }
 
+/// Class-partitioned nearest-rank percentiles recombine consistently
+/// with the session-wide ones: for random sessions (random class
+/// counts, timings, deadlines, rejection flags), every class p50 lies
+/// within that class's own sojourn min/max, class percentiles are
+/// monotone (p50 ≤ p95 ≤ p99), class job counts partition the session,
+/// deadline-hit rates live in [0, 1], and the session percentile is
+/// bracketed by the per-class extremes.
+#[test]
+fn forall_per_class_percentiles_recombine() {
+    use hetsched::data::TransferLedger;
+    use hetsched::sim::{JobTiming, RunReport, SessionReport};
+    let empty_job = || RunReport {
+        scheduler: "test",
+        makespan_ms: 0.0,
+        ledger: TransferLedger::new(),
+        assignments: vec![],
+        device_busy_ms: vec![],
+        tasks_per_device: vec![],
+        decision_ns: 0,
+        plan_ns: 0,
+        trace: vec![],
+    };
+    let mut rng = Pcg32::seeded(0xC1A55);
+    for trial in 0..40 {
+        let n_classes = rng.gen_range_usize(1, 5);
+        let n_jobs = rng.gen_range_usize(1, 40);
+        let mut s = SessionReport::new("test");
+        s.class_names = (0..n_classes).map(|c| format!("c{c}")).collect();
+        for _ in 0..n_jobs {
+            let submit = rng.gen_f64() * 50.0;
+            let wait = rng.gen_f64() * 5.0;
+            let service = 0.1 + rng.gen_f64() * 20.0;
+            let rejected = rng.gen_bool(0.15);
+            let complete = if rejected { submit + wait } else { submit + wait + service };
+            s.push_timed(
+                empty_job(),
+                false,
+                JobTiming {
+                    submit_ms: submit,
+                    admit_ms: submit + wait,
+                    complete_ms: complete,
+                    class: rng.gen_range_usize(0, n_classes),
+                    priority: rng.gen_range(3),
+                    deadline_ms: if rng.gen_bool(0.5) {
+                        submit + rng.gen_f64() * 25.0
+                    } else {
+                        f64::INFINITY
+                    },
+                    rejected,
+                },
+            );
+        }
+        let per = s.per_class();
+        assert_eq!(per.len(), s.class_count(), "trial {trial}");
+        assert_eq!(
+            per.iter().map(|c| c.jobs).sum::<usize>(),
+            s.job_count(),
+            "trial {trial}: class jobs must partition the session"
+        );
+        assert_eq!(
+            per.iter().map(|c| c.rejected).sum::<usize>(),
+            s.rejected_count(),
+            "trial {trial}: class rejections must partition the session"
+        );
+        let mut class_mins = Vec::new();
+        let mut class_maxs = Vec::new();
+        for c in &per {
+            assert!((0.0..=1.0).contains(&c.deadline_hit_rate), "trial {trial}: {c:?}");
+            assert!(
+                c.p50_sojourn_ms <= c.p95_sojourn_ms + 1e-12
+                    && c.p95_sojourn_ms <= c.p99_sojourn_ms + 1e-12,
+                "trial {trial}: class percentiles must be monotone: {c:?}"
+            );
+            // Recompute the class's served sojourns from the timings.
+            let sojourns: Vec<f64> = s
+                .timings
+                .iter()
+                .filter(|t| t.class == c.class && !t.rejected)
+                .map(|t| t.sojourn_ms())
+                .collect();
+            assert_eq!(sojourns.len() + c.rejected, c.jobs, "trial {trial}");
+            if sojourns.is_empty() {
+                assert_eq!(c.p50_sojourn_ms, 0.0, "trial {trial}: empty class");
+                continue;
+            }
+            let lo = sojourns.iter().cloned().fold(f64::INFINITY, f64::min);
+            let hi = sojourns.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            for p in [c.p50_sojourn_ms, c.p95_sojourn_ms, c.p99_sojourn_ms] {
+                assert!(
+                    (lo - 1e-12..=hi + 1e-12).contains(&p),
+                    "trial {trial}: class {c:?} percentile {p} outside [{lo}, {hi}]"
+                );
+                assert!(
+                    sojourns.iter().any(|&x| (x - p).abs() < 1e-12),
+                    "trial {trial}: nearest-rank value must be an observed sojourn"
+                );
+            }
+            assert!(
+                c.mean_sojourn_ms >= lo - 1e-12 && c.mean_sojourn_ms <= hi + 1e-12,
+                "trial {trial}"
+            );
+            class_mins.push(lo);
+            class_maxs.push(hi);
+        }
+        // Session-wide percentiles are bracketed by class extremes, and
+        // the session deadline-hit rate is in range.
+        if !class_mins.is_empty() {
+            let lo = class_mins.iter().cloned().fold(f64::INFINITY, f64::min);
+            let hi = class_maxs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            for p in [s.p50_sojourn_ms(), s.p95_sojourn_ms(), s.p99_sojourn_ms()] {
+                assert!((lo - 1e-12..=hi + 1e-12).contains(&p), "trial {trial}");
+            }
+        }
+        assert!((0.0..=1.0).contains(&s.deadline_hit_rate()), "trial {trial}");
+    }
+}
+
 /// Workload ratios always form a probability vector, and Formula (1)
 /// holds pairwise for two devices.
 #[test]
