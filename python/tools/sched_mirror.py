@@ -376,10 +376,28 @@ def _estimated_finish(ctx, dev):
     return start + ctx["model"].kernel_time_ms(ctx["kernel"], ctx["size"], dev)
 
 
+def _least_slack_meeting(ctx):
+    """Mirror of sched::dmda::least_slack_meeting: among devices whose
+    EFT meets the deadline, the one finishing *latest* (least slack)."""
+    deadline = ctx["deadline"]
+    best = None
+    best_t = -math.inf
+    for d in range(len(ctx["device_free"])):
+        t = _estimated_finish(ctx, d)
+        if t <= deadline and t > best_t:
+            best_t = t
+            best = d
+    return best
+
+
 class Dmda:
     name = "dmda"
 
     def select(self, ctx):
+        if math.isfinite(ctx["deadline"]):
+            d = _least_slack_meeting(ctx)
+            if d is not None:
+                return d
         best = 0
         best_t = math.inf
         for d in range(len(ctx["device_free"])):
@@ -447,8 +465,13 @@ class GpWindow:
         self.replans = 0
 
     def select(self, ctx):
-        self.dispatched[ctx["task"]] = True
-        return self.parts[ctx["task"]]
+        v = ctx["task"]
+        if math.isfinite(ctx["deadline"]) and _estimated_finish(ctx, self.parts[v]) > ctx["deadline"]:
+            d = _least_slack_meeting(ctx)
+            if d is not None:
+                self.parts[v] = d
+        self.dispatched[v] = True
+        return self.parts[v]
 
     def on_task_finish(self, task, dev, finish_ms):
         self.finishes += 1
@@ -536,6 +559,7 @@ def simulate(dag, policy, workers, model, bus_channels=1, prefetch=False, return
     heapq.heapify(heap)
 
     executed = 0
+    executed_ms = 0.0
     while heap:
         ready, v = heapq.heappop(heap)
         executed += 1
@@ -565,6 +589,7 @@ def simulate(dag, policy, workers, model, bus_channels=1, prefetch=False, return
             device_free=device_free,
             inputs=inputs,
             model=model,
+            deadline=math.inf,  # closed jobs are untagged
         )
         dev = policy.select(ctx)
         mem = dev  # Platform::memory_node is the identity today
@@ -588,6 +613,7 @@ def simulate(dag, policy, workers, model, bus_channels=1, prefetch=False, return
 
         worker = min(range(len(worker_free[dev])), key=lambda i: worker_free[dev][i])
         exec_ms = model.kernel_time_ms(kernel, size, dev)
+        executed_ms += exec_ms
         start = max(worker_free[dev][worker], data_ready)
         end = start + exec_ms
         worker_free[dev][worker] = end
@@ -633,6 +659,7 @@ def simulate(dag, policy, workers, model, bus_channels=1, prefetch=False, return
         ledger_bytes=ledger_bytes,
         tasks_per_device=tasks_per_device,
         device_busy=device_busy,
+        executed_ms=executed_ms,
     )
 
 
@@ -668,12 +695,22 @@ def run(dag, name, model=None, workers=None, **kw):
 
 # -------------------------------------------------- open-system engine
 #
-# Transliteration of sim::engine::EngineCore (PR 4 + PR 5 QoS): one
-# global event heap ordered by (time, kind, job, task) with kind
-# 0=drain, 1=arrival, 2=ready, 3=reject; many jobs share worker_free /
-# bus / directory; a bounded admission window (queue) holds excess
-# arrivals in a pending queue ordered by the admission policy
-# (fifo / edf / sjf / reject with wait budgets).
+# Transliteration of sim::engine::EngineCore (PR 4 + PR 5 QoS + PR 6
+# faults): one global event heap ordered by (time, kind, job, task,
+# epoch) with kind 0=dev-down, 1=dev-up, 2=drain, 3=arrival, 4=ready,
+# 5=reject; many jobs share worker_free / bus / directory; a bounded
+# admission window (queue) holds excess arrivals in a pending queue
+# ordered by the admission policy (fifo / edf / sjf / reject with wait
+# budgets); a FaultSpec-mirror dict injects device failures/drains and
+# the engine rolls in-flight work back (epoch-tagged ready events kill
+# stale dispatches).
+
+EV_DOWN, EV_UP, EV_DRAIN, EV_ARRIVAL, EV_READY, EV_REJECT = 0, 1, 2, 3, 4, 5
+
+
+def exp_mean_ms(rng, mean):
+    """Mirror of sim::engine::exp_mean_ms."""
+    return -math.log(1.0 - rng.gen_f64()) * mean
 
 
 def dag_signature(dag):
@@ -695,6 +732,15 @@ class OpenEager(Eager):
     def on_job_drain(self, job):
         pass
 
+    def on_task_killed(self, job, task):
+        pass
+
+    def on_device_down(self, dev):
+        return 0
+
+    def on_device_up(self, dev):
+        return 0
+
 
 class OpenDmda(Dmda):
     def on_submit(self, job, dag):
@@ -706,6 +752,15 @@ class OpenDmda(Dmda):
     def on_job_drain(self, job):
         pass
 
+    def on_task_killed(self, job, task):
+        pass
+
+    def on_device_down(self, dev):
+        return 0
+
+    def on_device_up(self, dev):
+        return 0
+
 
 class OpenPin(PinAll):
     def on_submit(self, job, dag):
@@ -716,6 +771,15 @@ class OpenPin(PinAll):
 
     def on_job_drain(self, job):
         pass
+
+    def on_task_killed(self, job, task):
+        pass
+
+    def on_device_down(self, dev):
+        return 0
+
+    def on_device_up(self, dev):
+        return 0
 
 
 class OpenGp:
@@ -758,6 +822,17 @@ class OpenGp:
 
     def on_job_drain(self, job):
         pass
+
+    def on_task_killed(self, job, task):
+        # One-shot plans re-dispatch from the same table (window=None in
+        # the Rust scheduler: no frontier state to roll back).
+        pass
+
+    def on_device_down(self, dev):
+        return 0
+
+    def on_device_up(self, dev):
+        return 0
 
 
 class OpenGpWindow:
@@ -821,8 +896,13 @@ class OpenGpWindow:
 
     def select(self, ctx):
         st = self.jobs[ctx["job"]]
-        st["dispatched"][ctx["task"]] = True
-        return st["parts"][ctx["task"]]
+        v = ctx["task"]
+        if math.isfinite(ctx["deadline"]) and _estimated_finish(ctx, st["parts"][v]) > ctx["deadline"]:
+            d = _least_slack_meeting(ctx)
+            if d is not None:
+                st["parts"][v] = d
+        st["dispatched"][v] = True
+        return st["parts"][v]
 
     def on_task_finish(self, job, task, dev, finish_ms):
         self.finishes += 1
@@ -832,6 +912,26 @@ class OpenGpWindow:
 
     def on_job_drain(self, job):
         self.jobs[job]["active"] = False
+
+    def on_task_killed(self, job, task):
+        # Mirror of GraphPartition::on_task_killed: the job is live
+        # again and the victim re-enters the replan frontier.
+        st = self.jobs[job]
+        st["active"] = True
+        if task < len(st["dispatched"]):
+            st["dispatched"][task] = False
+
+    def on_device_down(self, dev):
+        before = self.replans
+        self.finishes = 0
+        self._replan()
+        return self.replans - before
+
+    def on_device_up(self, dev):
+        before = self.replans
+        self.finishes = 0
+        self._replan()
+        return self.replans - before
 
     def _replan(self):
         active = [j for j in sorted(self.jobs) if self.jobs[j]["active"]]
@@ -926,12 +1026,18 @@ def simulate_open_engine(
     qos=None,
     admit="fifo",
     stream_budget=math.inf,
+    fault=None,
 ):
     """Mirror of EngineCore::run: jobs_in = [(dag, submit_ms)]; qos[i]
     (optional) = dict(cls, prio, deadline, budget) with deadline/budget
     relative to submit; admit = fifo | edf | sjf | reject. Under reject
     each job's effective budget is min(per-job, stream_budget) — the
-    mirror of StreamConfig::effective_budget_ms."""
+    mirror of StreamConfig::effective_budget_ms. fault (optional) =
+    dict(mtbf, mttr, seed, refetch, scripted=[(at, dev, down, drain)]),
+    the mirror of FaultSpec; an inert spec (no scripted outages and
+    mtbf=inf) behaves exactly like fault=None. Returns (results,
+    stats) with stats = the RecoveryStats mirror."""
+    import collections
     import heapq
 
     k = len(workers)
@@ -943,8 +1049,10 @@ def simulate_open_engine(
     avail = []
     heap = []
     pending = []
-    state = dict(inflight=0)
+    state = dict(inflight=0, completed=0)
     queue = max(queue, 1)
+    dev_state = ["up"] * k  # DeviceState mirror: up | draining | down
+    stats = dict(failures=0, reexec=0, wasted=0.0, executed=0.0, replans=0)
 
     jobs = []
     for j, (dag, submit) in enumerate(jobs_in):
@@ -973,9 +1081,28 @@ def simulate_open_engine(
                 ledger_bytes=0,
                 trace=[],
                 remaining=-1,
+                task_epoch=None,
+                drain_epoch=0,
             )
         )
-        heapq.heappush(heap, (submit, 1, j, 0))
+        heapq.heappush(heap, (submit, EV_ARRIVAL, j, 0, 0))
+
+    # Fault clocks (mirror of FaultState::new): device 0 never fails —
+    # it owns the host checkpoint, so a dispatch target always exists.
+    fault_state = None
+    if fault is not None and (fault["scripted"] or math.isfinite(fault["mtbf"])):
+        frng = pm.Pcg32.seeded(fault["seed"])
+        scripted = [collections.deque() for _ in range(k)]
+        if not fault["scripted"]:
+            for d in range(1, k):
+                heapq.heappush(heap, (exp_mean_ms(frng, fault["mtbf"]), EV_DOWN, d, 0, 0))
+        else:
+            for (at, dev, down, drain) in sorted(fault["scripted"], key=lambda f: f[0]):
+                assert 0 < dev < k, f"scripted fault device {dev} out of range"
+                scripted[dev].append((at, down, drain))
+                heapq.heappush(heap, (at, EV_DOWN, dev, 1 if drain else 0, 0))
+                heapq.heappush(heap, (at + down, EV_UP, dev, 0, 0))
+        fault_state = dict(spec=fault, rng=frng, scripted=scripted, commits=[])
 
     def pending_key(j):
         st = jobs[j]
@@ -1022,7 +1149,7 @@ def simulate_open_engine(
                     makespan = max(makespan, bus[ch])
         st["complete"] = max(makespan, st["admit"])
         policy.on_job_drain(j)
-        heapq.heappush(heap, (st["complete"], 0, j, 0))
+        heapq.heappush(heap, (st["complete"], EV_DRAIN, j, 0, st["drain_epoch"]))
 
     def admit_job(j, now):
         st = jobs[j]
@@ -1042,10 +1169,11 @@ def simulate_open_engine(
         st["ready_time"] = [now] * n
         st["finish"] = [0.0] * n
         st["assignments"] = [None] * n
+        st["task_epoch"] = [0] * n
         st["remaining"] = n
         for v in range(n):
             if st["indeg"][v] == 0:
-                heapq.heappush(heap, (now, 2, j, v))
+                heapq.heappush(heap, (now, EV_READY, j, v, 0))
         state["inflight"] += 1
         if st["remaining"] == 0:
             complete_job(j)
@@ -1064,7 +1192,9 @@ def simulate_open_engine(
                 st["indeg"][w] -= 1
                 st["ready_time"][w] = max(st["ready_time"][w], ready)
                 if st["indeg"][w] == 0:
-                    heapq.heappush(heap, (st["ready_time"][w], 2, j, w))
+                    heapq.heappush(
+                        heap, (st["ready_time"][w], EV_READY, j, w, st["task_epoch"][w])
+                    )
             st["remaining"] -= 1
             if st["remaining"] == 0:
                 complete_job(j)
@@ -1072,7 +1202,11 @@ def simulate_open_engine(
 
         handles = [st["out"][dag.edges[e][0]] for e in dag.preds[v]] + st["initial"][v]
         inputs = [(bytes_of[h], mask_of[h]) for h in handles]
-        device_free = [min(ws) for ws in worker_free]
+        # Non-Up devices look infinitely busy so estimators avoid them.
+        device_free = [
+            min(ws) if dev_state[d] == "up" else math.inf
+            for d, ws in enumerate(worker_free)
+        ]
 
         ctx = dict(
             job=j,
@@ -1083,8 +1217,23 @@ def simulate_open_engine(
             device_free=device_free,
             inputs=inputs,
             model=model,
+            deadline=st["deadline_abs"],
         )
         dev = policy.select(ctx)
+        if dev_state[dev] != "up":
+            # Reroute pinned/planned work off a dead device: cheapest
+            # finish over live devices (kernel time only; mirror of
+            # EngineCore::dispatch's reroute).
+            best = None
+            best_t = math.inf
+            for d in range(k):
+                if dev_state[d] != "up":
+                    continue
+                t2 = max(min(worker_free[d]), ready) + model.kernel_time_ms(kernel, size, d)
+                if t2 < best_t:
+                    best_t = t2
+                    best = d
+            dev = best
         mem = dev  # Platform::memory_node is the identity today
 
         data_ready = ready
@@ -1111,6 +1260,9 @@ def simulate_open_engine(
         st["assignments"][v] = dev
         st["device_busy"][dev] += exec_ms
         st["tasks_per_device"][dev] += 1
+        stats["executed"] += exec_ms
+        if fault_state is not None:
+            fault_state["commits"].append((j, v, dev, worker, start, end, exec_ms))
         if collect_trace:
             st["trace"].append(dict(job=j, task=v, device=dev, worker=worker, start=start, end=end))
         policy.on_task_finish(j, v, dev, end)
@@ -1120,26 +1272,151 @@ def simulate_open_engine(
             st["indeg"][w] -= 1
             st["ready_time"][w] = max(st["ready_time"][w], end)
             if st["indeg"][w] == 0:
-                heapq.heappush(heap, (st["ready_time"][w], 2, j, w))
+                heapq.heappush(
+                    heap, (st["ready_time"][w], EV_READY, j, w, st["task_epoch"][w])
+                )
         st["remaining"] -= 1
         if st["remaining"] == 0:
             complete_job(j)
 
+    def requeue_job(jid, killed_tasks, t):
+        """Mirror of EngineCore::requeue_job: recompute the ready
+        frontier of a job after kills; epoch bumps invalidate stale
+        ready events already in the heap."""
+        refetch = fault_state["spec"]["refetch"] if fault_state is not None else 0.0
+        st = jobs[jid]
+        dag = st["dag"]
+        was_complete = st["remaining"] == 0
+        remaining = 0
+        pushes = []
+        for v in range(dag.node_count()):
+            if st["assignments"][v] is not None:
+                continue  # already executed and not killed
+            remaining += 1
+            indeg = 0
+            ready = st["admit"]
+            for e in dag.preds[v]:
+                u = dag.edges[e][0]
+                if st["assignments"][u] is None:
+                    indeg += 1
+                else:
+                    ready = max(ready, st["finish"][u])
+            st["ready_time"][v] = ready
+            if v in killed_tasks:
+                st["task_epoch"][v] += 1
+                st["indeg"][v] = indeg
+                if indeg == 0:
+                    pushes.append((max(ready, t) + refetch, v, st["task_epoch"][v]))
+            elif indeg != st["indeg"][v]:
+                st["task_epoch"][v] += 1
+                st["indeg"][v] = indeg
+        st["remaining"] = remaining
+        if was_complete and remaining > 0:
+            # Revoke the pending drain: the job came back to life.
+            st["drain_epoch"] += 1
+            st["complete"] = 0.0
+        for (at, v, ep) in pushes:
+            heapq.heappush(heap, (at, EV_READY, jid, v, ep))
+
+    def device_down(dev, drain, t):
+        """Mirror of EngineCore::device_down: kill (or drain around)
+        in-flight work on the victim, roll back coherence, requeue."""
+        fs = fault_state
+        stats["failures"] += 1
+        if not fs["spec"]["scripted"]:
+            down_ms = exp_mean_ms(fs["rng"], fs["spec"]["mttr"])
+            heapq.heappush(heap, (t + down_ms, EV_UP, dev, 0, 0))
+        else:
+            (_, down_ms, _) = fs["scripted"][dev].popleft()
+        up_at = t + down_ms
+        dev_state[dev] = "draining" if drain else "down"
+        if drain:
+            return  # in-flight work runs to completion; only dispatch stops
+        killed = []
+        kept = []
+        for c in fs["commits"]:
+            if c[5] <= t:
+                continue  # already retired
+            if c[2] == dev:
+                killed.append(c)
+            else:
+                kept.append(c)
+        fs["commits"] = kept
+        for (cj, cv, cd, cw, cs, ce, cx) in killed:
+            st = jobs[cj]
+            done = max(t - cs, 0.0)
+            stats["wasted"] += done
+            stats["executed"] -= cx - done
+            stats["reexec"] += 1
+            st["device_busy"][cd] -= cx
+            st["tasks_per_device"][cd] -= 1
+            st["finish"][cv] = 0.0
+            st["assignments"][cv] = None
+            mask_of[st["out"][cv]] = 0  # Directory::clear
+            if collect_trace:
+                st["trace"] = [ev for ev in st["trace"] if ev["task"] != cv]
+            policy.on_task_killed(cj, cv)
+        # Directory::invalidate_node: every replica on the dead memory
+        # node is lost; sole copies fall back to the host checkpoint.
+        bit = 1 << dev
+        for h in range(len(mask_of)):
+            if mask_of[h] & bit:
+                mask_of[h] &= ~bit
+                if mask_of[h] == 0:
+                    mask_of[h] = 1
+        for w in range(len(worker_free[dev])):
+            worker_free[dev][w] = up_at
+        affected = sorted({c[0] for c in killed})
+        for jid in affected:
+            requeue_job(jid, [c[1] for c in killed if c[0] == jid], t)
+        stats["replans"] += policy.on_device_down(dev)
+
+    def device_up(dev, t):
+        dev_state[dev] = "up"
+        for w in range(len(worker_free[dev])):
+            worker_free[dev][w] = max(worker_free[dev][w], t)
+        fs = fault_state
+        if not fs["spec"]["scripted"]:
+            heapq.heappush(heap, (t + exp_mean_ms(fs["rng"], fs["spec"]["mtbf"]), EV_DOWN, dev, 0, 0))
+        stats["replans"] += policy.on_device_up(dev)
+
     while heap:
-        t, kind, j, v = heapq.heappop(heap)
-        if kind == 1:
+        t, kind, j, v, heap_epoch = heapq.heappop(heap)
+        if kind == EV_DOWN:
+            device_down(j, v == 1, t)
+        elif kind == EV_UP:
+            device_up(j, t)
+        elif kind == EV_ARRIVAL:
             if state["inflight"] < queue:
                 admit_job(j, t)
             else:
-                pending.append(j)
-                if jobs[j]["budget"] != math.inf:
-                    heapq.heappush(heap, (t + jobs[j]["budget"], 3, j, 0))
-        elif kind == 0:
-            state["inflight"] -= 1
-            nxt = pop_pending()
-            if nxt is not None:
-                admit_job(nxt, t)
-        elif kind == 3:
+                budget = jobs[j]["budget"]
+                doomed = (
+                    admit == "reject"
+                    and budget != math.inf
+                    and sum(jobs[p]["est_work"] for p in pending) > budget
+                )
+                if doomed:
+                    # Predictive rejection: the pending backlog alone
+                    # already exceeds this job's wait budget.
+                    st = jobs[j]
+                    st["rejected"] = True
+                    st["remaining"] = 0
+                    st["admit"] = t
+                    st["complete"] = t
+                    state["completed"] += 1
+                else:
+                    pending.append(j)
+                    if budget != math.inf:
+                        heapq.heappush(heap, (t + budget, EV_REJECT, j, 0, 0))
+        elif kind == EV_DRAIN:
+            if heap_epoch == jobs[j]["drain_epoch"]:
+                state["inflight"] -= 1
+                state["completed"] += 1
+                nxt = pop_pending()
+                if nxt is not None:
+                    admit_job(nxt, t)
+        elif kind == EV_REJECT:
             if j in pending:
                 pending.remove(j)
                 st = jobs[j]
@@ -1147,8 +1424,14 @@ def simulate_open_engine(
                 st["remaining"] = 0
                 st["admit"] = t
                 st["complete"] = t
+                state["completed"] += 1
         else:
-            dispatch(j, v, t)
+            if heap_epoch == jobs[j]["task_epoch"][v]:
+                dispatch(j, v, t)
+        # Stop once every job resolved: fault clocks would otherwise
+        # tick forever.
+        if fault_state is not None and state["completed"] == len(jobs):
+            break
 
     for j, st in enumerate(jobs):
         assert st["rejected"] or st["remaining"] == 0, f"job {j}: stuck"
@@ -1171,7 +1454,7 @@ def simulate_open_engine(
             trace=st["trace"],
         )
         for st in jobs
-    ]
+    ], stats
 
 
 # ------------------------------------------ arrivals + queueing metrics
@@ -1316,11 +1599,12 @@ def open_run(
     qos=None,
     admit="fifo",
     stream_budget=math.inf,
+    fault=None,
 ):
     model = model or CalibratedModel()
     workers = workers or PAPER_WORKERS
     policy = make_open_policy(spec, len(workers), model)
-    results = simulate_open_engine(
+    results, stats = simulate_open_engine(
         list(zip(dags, submits)),
         policy,
         workers,
@@ -1330,8 +1614,9 @@ def open_run(
         qos=qos,
         admit=admit,
         stream_budget=stream_budget,
+        fault=fault,
     )
-    return results, policy
+    return results, policy, stats
 
 
 # ----------------------------------------------------- QoS job classes
@@ -1384,6 +1669,13 @@ def job_classes(classes, n, seed):
             )
         )
     return out
+
+
+# Mirror of main.rs DEFAULT_FAULT ("fault:at=60:dev=1:down=40;refetch=2"):
+# kill the GPU 60 ms into the burst for 40 ms, 2 ms re-fetch per retry.
+DEFAULT_FAULT = dict(
+    mtbf=math.inf, mttr=80.0, seed=9, refetch=2.0, scripted=[(60.0, 1, 40.0, False)]
+)
 
 
 # ----------------------------------------------------------------- checks
@@ -1559,7 +1851,7 @@ def run_checks():
     jobs = [phased(8, 4, 256) for _ in range(24)]
     submits = poisson_times(220.0, 7, 24)
     for nm in ["dmda", "gp"]:
-        results, _ = open_run(jobs, nm, submits, 8, collect_trace=True)
+        results, _, _ = open_run(jobs, nm, submits, 8, collect_trace=True)
         m = session_metrics(results, PAPER_WORKERS)
         overlap = False
         spans = [(min(e["start"] for e in r["trace"]), max(e["end"] for e in r["trace"]))
@@ -1570,13 +1862,13 @@ def run_checks():
                     overlap = True
         check(f"{nm} >=2 jobs overlap (trace)", overlap and m["max_concurrent"] >= 2,
               f"maxconc={m['max_concurrent']}")
-        again, _ = open_run(jobs, nm, submits, 8, collect_trace=True)
+        again, _, _ = open_run(jobs, nm, submits, 8, collect_trace=True)
         check(f"{nm} deterministic", [r["trace"] for r in again] == [r["trace"] for r in results])
         check(f"{nm} timings sane",
               all(r["admit"] >= r["submit"] and r["complete"] >= r["admit"] for r in results))
 
     print("open engine: queue=1 serializes and queues")
-    results, _ = open_run(jobs[:8], "dmda", poisson_times(400.0, 7, 8), 1)
+    results, _, _ = open_run(jobs[:8], "dmda", poisson_times(400.0, 7, 8), 1)
     m = session_metrics(results, PAPER_WORKERS)
     check("queue=1 max concurrent == 1", m["max_concurrent"] == 1, m["max_concurrent"])
     check("queue=1 positive queueing delay", m["mean_qdelay"] > 0.0,
@@ -1586,8 +1878,8 @@ def run_checks():
     win_found = False
     for rate in [120.0, 180.0, 220.0, 300.0]:
         submits = poisson_times(rate, 7, 24)
-        gp_res, _ = open_run(jobs, "gp", submits, 8)
-        win_res, _ = open_run(jobs, "gp:window=12", submits, 8)
+        gp_res, _, _ = open_run(jobs, "gp", submits, 8)
+        win_res, _, _ = open_run(jobs, "gp:window=12", submits, 8)
         gp_m = session_metrics(gp_res, PAPER_WORKERS)
         win_m = session_metrics(win_res, PAPER_WORKERS)
         gain = (gp_m["mean_sojourn"] - win_m["mean_sojourn"]) / gp_m["mean_sojourn"]
@@ -1599,16 +1891,19 @@ def run_checks():
             win_found = True
     check("cross-job window wins at rate=220", win_found)
 
-    print("QoS: admit=fifo is the pre-QoS engine bit-for-bit")
+    print("QoS: admit=fifo with deadline-free tags is the pre-QoS engine bit-for-bit")
+    # Finite deadlines now steer dmda's device choice (least-slack
+    # dispatch), so bit-identity holds for deadline-free tags only.
     mix = default_qos_mix()
     classed = job_classes(mix, 24, 2015)
     qdags = [j["dag"] for j in classed]
     qqos = [j["qos"] for j in classed]
     qsubmits = bursty_times(380.0, 8, 7, 24)
-    plain, _ = open_run(qdags, "dmda", qsubmits, 2)
-    tagged, _ = open_run(qdags, "dmda", qsubmits, 2, qos=qqos, admit="fifo")
+    free_qos = [dict(q, deadline=math.inf) for q in qqos]
+    plain, _, _ = open_run(qdags, "dmda", qsubmits, 2)
+    tagged, _, _ = open_run(qdags, "dmda", qsubmits, 2, qos=free_qos, admit="fifo")
     check(
-        "fifo ignores qos (same schedule)",
+        "fifo ignores deadline-free qos (same schedule)",
         all(
             a["admit"] == b["admit"] and a["complete"] == b["complete"]
             and a["assignments"] == b["assignments"]
@@ -1625,16 +1920,16 @@ def run_checks():
     for i, (ddl, work_len) in enumerate([(100.0, 2), (50.0, 4), (80.0, 6), (20.0, 8)]):
         tqos.append(dict(cls=0, prio=0, deadline=ddl, budget=math.inf))
         tdags[1 + i] = chain(work_len, MA, 256)
-    res, _ = open_run(tdags, "dmda", tsub, 1, qos=tqos, admit="edf")
+    res, _, _ = open_run(tdags, "dmda", tsub, 1, qos=tqos, admit="edf")
     order = sorted(range(1, 5), key=lambda j: res[j]["admit"])
     check("edf order = deadline order", order == [4, 2, 3, 1], order)
-    res, _ = open_run(tdags, "dmda", tsub, 1, qos=tqos, admit="sjf")
+    res, _, _ = open_run(tdags, "dmda", tsub, 1, qos=tqos, admit="sjf")
     order = sorted(range(1, 5), key=lambda j: res[j]["admit"])
     check("sjf order = est-work order", order == [1, 2, 3, 4], order)
     # Priority bands dominate both keys.
     pqos = list(tqos)
     pqos[4] = dict(cls=0, prio=1, deadline=20.0, budget=math.inf)
-    res, _ = open_run(tdags, "dmda", tsub, 1, qos=pqos, admit="edf")
+    res, _, _ = open_run(tdags, "dmda", tsub, 1, qos=pqos, admit="edf")
     order = sorted(range(1, 5), key=lambda j: res[j]["admit"])
     check("edf priority bands first", order == [2, 3, 1, 4], order)
 
@@ -1648,7 +1943,7 @@ def run_checks():
         pqos = [dict(cls=0, prio=0, deadline=math.inf, budget=b) for b in budgets]
         pdags = [chain(2 + rng.gen_range(6), MA, 256) for _ in range(nn)]
         psub = bursty_times(300.0 + rng.gen_f64() * 400.0, 6, rng.next_u64(), nn)
-        res, _ = open_run(pdags, "dmda", psub, 1 + rng.gen_range(2), qos=pqos, admit="reject")
+        res, _, _ = open_run(pdags, "dmda", psub, 1 + rng.gen_range(2), qos=pqos, admit="reject")
         for r, b in zip(res, budgets):
             if r["rejected"]:
                 saw_reject += 1
@@ -1661,7 +1956,7 @@ def run_checks():
     sdags = [chain(4, MA, 256) for _ in range(12)]
     ssub = bursty_times(400.0, 6, 9, 12)
     sqos = [default_qos() for _ in range(12)]
-    res, _ = open_run(sdags, "dmda", ssub, 1, qos=sqos, admit="reject", stream_budget=1.0)
+    res, _, _ = open_run(sdags, "dmda", ssub, 1, qos=sqos, admit="reject", stream_budget=1.0)
     check(
         "stream budget caps default-qos waits",
         all(r["rejected"] or r["admit"] - r["submit"] <= 1.0 + 1e-9 for r in res),
@@ -1672,7 +1967,7 @@ def run_checks():
     print("QoS: open-qos headline (bursty 380/s, burst 8, queue 2)")
     rows = {}
     for adm in ["fifo", "edf", "sjf", "reject"]:
-        res, _ = open_run(qdags, "dmda", qsubmits, 2, qos=qqos, admit=adm)
+        res, _, _ = open_run(qdags, "dmda", qsubmits, 2, qos=qqos, admit=adm)
         rows[adm] = session_metrics(res, PAPER_WORKERS)
         per = class_metrics(res, rows[adm]["span"], len(mix), [c["name"] for c in mix])
         print(
@@ -1703,14 +1998,89 @@ def run_checks():
             for a, b in zip(c2, classed)
         ),
     )
-    r1, _ = open_run(qdags, "dmda", qsubmits, 2, qos=qqos, admit="reject", collect_trace=True)
-    r2, _ = open_run(qdags, "dmda", qsubmits, 2, qos=qqos, admit="reject", collect_trace=True)
+    r1, _, _ = open_run(qdags, "dmda", qsubmits, 2, qos=qqos, admit="reject", collect_trace=True)
+    r2, _, _ = open_run(qdags, "dmda", qsubmits, 2, qos=qqos, admit="reject", collect_trace=True)
     check(
         "open-qos scenario deterministic",
         [r["trace"] for r in r1] == [r["trace"] for r in r2]
         and [r["rejected"] for r in r1] == [r["rejected"] for r in r2]
         and [r["complete"] for r in r1] == [r["complete"] for r in r2],
     )
+
+    print("faults: inert spec is the failure-free engine bit-for-bit")
+    fjobs = [phased(8, 4, 256) for _ in range(24)]
+    fsubmits = poisson_times(220.0, 7, 24)
+    inert = dict(mtbf=math.inf, mttr=80.0, seed=9, refetch=0.0, scripted=[])
+    base, _, base_stats = open_run(fjobs, "dmda", fsubmits, 8, collect_trace=True)
+    same, _, inert_stats = open_run(fjobs, "dmda", fsubmits, 8, collect_trace=True, fault=inert)
+    check(
+        "mtbf=inf bit-identical",
+        [r["trace"] for r in base] == [r["trace"] for r in same]
+        and [r["complete"] for r in base] == [r["complete"] for r in same],
+    )
+    check(
+        "inert recovery stats all zero",
+        inert_stats["failures"] == 0 and inert_stats["reexec"] == 0
+        and inert_stats["wasted"] == 0.0 and inert_stats["replans"] == 0,
+    )
+    check(
+        "executed matches useful when failure-free",
+        abs(base_stats["executed"] - sum(sum(r["device_busy"]) for r in base)) < 1e-6,
+    )
+
+    print("faults: stochastic injection is seed-deterministic")
+    sf = dict(mtbf=120.0, mttr=40.0, seed=9, refetch=2.0, scripted=[])
+    r1, _, s1 = open_run(fjobs, "dmda", fsubmits, 8, collect_trace=True, fault=sf)
+    r2, _, s2 = open_run(fjobs, "dmda", fsubmits, 8, collect_trace=True, fault=sf)
+    check(
+        "fixed seed reproduces traces + stats",
+        [r["trace"] for r in r1] == [r["trace"] for r in r2] and s1 == s2,
+    )
+    check("stochastic faults fire", s1["failures"] > 0, s1["failures"])
+    check("stochastic all jobs complete", all(not r["rejected"] for r in r1))
+    sf2 = dict(sf, seed=10)
+    _, _, s3 = open_run(fjobs, "dmda", fsubmits, 8, fault=sf2)
+    check("different seed, different schedule", s3 != s1)
+
+    print("faults: scripted GPU kill mid-burst (accounting balance)")
+    kres, _, ks = open_run(fjobs, "dmda", fsubmits, 8, fault=DEFAULT_FAULT)
+    useful = sum(sum(r["device_busy"]) for r in kres)
+    check("one failure injected", ks["failures"] == 1, ks["failures"])
+    check("tasks re-executed", ks["reexec"] >= 1, ks["reexec"])
+    check("wasted work positive", ks["wasted"] > 0.0, f"{ks['wasted']:.3f}")
+    check(
+        "executed == useful + wasted",
+        abs(ks["executed"] - (useful + ks["wasted"])) < 1e-6,
+        f"{ks['executed']:.6f} vs {useful + ks['wasted']:.6f}",
+    )
+    check("all jobs complete despite the kill", all(not r["rejected"] for r in kres))
+
+    print("faults: drain stops dispatch without killing")
+    df = dict(mtbf=math.inf, mttr=80.0, seed=9, refetch=0.0, scripted=[(0.0, 1, 50.0, True)])
+    dres, _, ds = open_run(fjobs, "dmda", fsubmits, 8, collect_trace=True, fault=df)
+    check(
+        "no gpu dispatch during the drain window",
+        all(ev["start"] >= 50.0 for r in dres for ev in r["trace"] if ev["device"] == 1),
+    )
+    check("drain kills nothing", ds["reexec"] == 0 and ds["wasted"] == 0.0)
+    check("drain counts as one injected event", ds["failures"] == 1, ds["failures"])
+
+    print("faults: gp:window recovery replanning vs one-shot gp re-dispatch")
+    gp_res, _, gp_s = open_run(fjobs, "gp", fsubmits, 8, fault=DEFAULT_FAULT)
+    win_res, _, win_s = open_run(fjobs, "gp:window=12", fsubmits, 8, fault=DEFAULT_FAULT)
+    gp_m = session_metrics(gp_res, PAPER_WORKERS)
+    win_m = session_metrics(win_res, PAPER_WORKERS)
+    print(
+        f"    gp mean sojourn {gp_m['mean_sojourn']:.2f} ms vs gp:window=12 "
+        f"{win_m['mean_sojourn']:.2f} ms (replans {win_s['replans']})"
+    )
+    check(
+        "recovery replanning beats naive re-dispatch (>3% sojourn)",
+        win_m["mean_sojourn"] < 0.97 * gp_m["mean_sojourn"],
+        f"{win_m['mean_sojourn']:.2f} vs {gp_m['mean_sojourn']:.2f}",
+    )
+    check("gp:window fired recovery replans", win_s["replans"] >= 1, win_s["replans"])
+    check("one-shot gp never replans", gp_s["replans"] == 0, gp_s["replans"])
 
     print("percentiles (nearest rank)")
     hundred = [float(x) for x in range(1, 101)]
@@ -1814,8 +2184,14 @@ def bench_json(jobs=8, window=12, size=1024, open_jobs=24, rate=220.0, queue=8):
     rows = []
 
     def push_row(scenario, spec, stream, dags, results, plan_ns, first_plan_ns,
-                 n_classes=1, names=()):
+                 n_classes=1, names=(), stats=None):
         m = session_metrics(results, workers)
+        st = stats or dict(failures=0, reexec=0, wasted=0.0, executed=0.0, replans=0)
+        # Mirror of SessionReport::goodput_jps: throughput weighted by
+        # the useful share of all executed work.
+        useful = sum(sum(r["device_busy"]) for r in results)
+        total = useful + st["wasted"]
+        goodput = m["throughput"] if total <= 0.0 else m["throughput"] * useful / total
         rows.append(
             dict(
                 scenario=scenario,
@@ -1839,6 +2215,13 @@ def bench_json(jobs=8, window=12, size=1024, open_jobs=24, rate=220.0, queue=8):
                 max_concurrent_jobs=m["max_concurrent"],
                 rejected=m["rejected"],
                 deadline_hit_rate=m["deadline_hit_rate"],
+                failures_injected=st["failures"],
+                tasks_reexecuted=st["reexec"],
+                wasted_work_ms=st["wasted"],
+                useful_work_ms=useful,
+                executed_work_ms=st["executed"],
+                recovery_replans=st["replans"],
+                goodput_jps=goodput,
                 utilization=m["utilization"],
                 classes=class_metrics(results, m["span"], n_classes, list(names)),
             )
@@ -1848,10 +2231,14 @@ def bench_json(jobs=8, window=12, size=1024, open_jobs=24, rate=220.0, queue=8):
         for spec in ["eager", "dmda", "heft", "gp", f"gp:window={window}"]:
             plan_ns = 0
             first_plan_ns = 0
+            row_stats = None
             if submits is None:
-                # Closed loop: back-to-back fresh-machine runs.
+                # Closed loop: back-to-back fresh-machine runs; the
+                # recovery counters accumulate across the per-job
+                # engines (all zero but executed, which equals useful).
                 results = []
                 clock = 0.0
+                executed = 0.0
                 for i, dag in enumerate(dags):
                     t0 = time.perf_counter_ns()
                     if spec.startswith("gp:window"):
@@ -1864,6 +2251,7 @@ def bench_json(jobs=8, window=12, size=1024, open_jobs=24, rate=220.0, queue=8):
                     if i == 0 and spec.startswith("gp"):
                         first_plan_ns = t1 - t0
                         plan_ns += t1 - t0
+                    executed += r["executed_ms"]
                     results.append(
                         dict(
                             makespan=r["makespan"],
@@ -1875,16 +2263,18 @@ def bench_json(jobs=8, window=12, size=1024, open_jobs=24, rate=220.0, queue=8):
                         )
                     )
                     clock += r["makespan"]
+                row_stats = dict(failures=0, reexec=0, wasted=0.0, executed=executed, replans=0)
                 stream = "stream:arrival=closed"
             else:
                 t0 = time.perf_counter_ns()
-                results, _policy = open_run(dags, spec, submits, queue, model=model)
+                results, _policy, row_stats = open_run(dags, spec, submits, queue, model=model)
                 t1 = time.perf_counter_ns()
                 if spec.startswith("gp"):
                     first_plan_ns = t1 - t0
                     plan_ns += t1 - t0
                 stream = stream_spec
-            push_row(scenario, spec, stream, dags, results, plan_ns, first_plan_ns)
+            push_row(scenario, spec, stream, dags, results, plan_ns, first_plan_ns,
+                     stats=row_stats)
 
     # open-qos: classed traffic, admission-policy sweep under one
     # scheduler (mirror of cmd_bench_stream's sweep).
@@ -1894,12 +2284,31 @@ def bench_json(jobs=8, window=12, size=1024, open_jobs=24, rate=220.0, queue=8):
     qqos = [j["qos"] for j in classed]
     qsubmits = bursty_times(380.0, 8, 7, open_jobs)
     for adm in ["fifo", "edf", "sjf", "reject"]:
-        results, _ = open_run(qdags, "dmda", qsubmits, 2, model=model, qos=qqos, admit=adm)
+        results, _, qstats = open_run(qdags, "dmda", qsubmits, 2, model=model, qos=qqos, admit=adm)
         stream = DEFAULT_QOS_STREAM if adm == "fifo" else f"{DEFAULT_QOS_STREAM},admit={adm}"
         push_row(
             "open-qos", "dmda", stream, qdags, results, 0, 0,
-            n_classes=len(mix), names=[c["name"] for c in mix],
+            n_classes=len(mix), names=[c["name"] for c in mix], stats=qstats,
         )
+
+    # open-fault: the scripted mid-burst GPU kill under each recovery
+    # strategy (mirror of cmd_bench_stream's open-fault sweep; the
+    # stream column carries the arrival spec, the fault spec is fixed).
+    fault_stream = stream_spec
+    fault_dags = [phased(8, 4, 256) for _ in range(open_jobs)]
+    for spec in ["dmda", "gp", f"gp:window={window}"]:
+        plan_ns = 0
+        first_plan_ns = 0
+        t0 = time.perf_counter_ns()
+        results, _policy, fstats = open_run(
+            fault_dags, spec, open_submits, queue, model=model, fault=DEFAULT_FAULT
+        )
+        t1 = time.perf_counter_ns()
+        if spec.startswith("gp"):
+            first_plan_ns = t1 - t0
+            plan_ns += t1 - t0
+        push_row("open-fault", spec, fault_stream, fault_dags, results,
+                 plan_ns, first_plan_ns, stats=fstats)
     lines = [
         "{",
         '  "bench": "sched_session",',
@@ -1950,6 +2359,13 @@ def bench_json(jobs=8, window=12, size=1024, open_jobs=24, rate=220.0, queue=8):
             f'"max_concurrent_jobs": {r["max_concurrent_jobs"]}, '
             f'"rejected": {r["rejected"]}, '
             f'"deadline_hit_rate": {r["deadline_hit_rate"]:.4f}, '
+            f'"failures_injected": {r["failures_injected"]}, '
+            f'"tasks_reexecuted": {r["tasks_reexecuted"]}, '
+            f'"wasted_work_ms": {r["wasted_work_ms"]:.6f}, '
+            f'"useful_work_ms": {r["useful_work_ms"]:.6f}, '
+            f'"executed_work_ms": {r["executed_work_ms"]:.6f}, '
+            f'"recovery_replans": {r["recovery_replans"]}, '
+            f'"goodput_jps": {r["goodput_jps"]:.6f}, '
             f'"utilization": [{util}], "classes": [{classes}]}}{comma}'
         )
     lines.append("  ]")

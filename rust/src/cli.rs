@@ -106,6 +106,10 @@ COMMANDS:
              admit = fifo|edf|sjf|reject[,budget=MS])
              [--classes SPEC] (QoS mix, e.g. \"name=hot,deadline=25,
              weight=3;name=cold,family=phased\"; or \"default\")
+             [--fault SPEC] (device failure injection, e.g.
+             \"fault:mtbf=500,mttr=80,seed=9\" or scripted
+             \"fault:at=120:dev=1:down=50;refetch=2\"; drain=MS drains
+             instead of killing)
   measure    Measure real PJRT kernel times for the shipped artifacts.
              [--reps N]
   stats      Structural statistics of a DOT graph or built-in workload.

@@ -19,14 +19,16 @@
 //! return-to-host = true
 //! stream = "stream:arrival=poisson,rate=120,queue=32,admit=edf"
 //! classes = "default"   # or a full class-mix spec
+//! fault = "fault:mtbf=500,mttr=80,seed=9"
 //! ```
 //!
 //! The `scheduler` value is passed verbatim to
 //! [`crate::sched::SchedulerRegistry::create`], the `stream` value to
-//! [`crate::sim::StreamConfig::from_spec`] and the `classes` value to
-//! [`crate::dag::workloads::parse_class_mix`], so every policy variant,
-//! every open-system traffic scenario and every QoS job mix is
-//! reachable from a config file without recompiling.
+//! [`crate::sim::StreamConfig::from_spec`], the `classes` value to
+//! [`crate::dag::workloads::parse_class_mix`] and the `fault` value to
+//! [`crate::sim::FaultSpec::from_spec`], so every policy variant, every
+//! open-system traffic scenario, every QoS job mix and every failure
+//! scenario is reachable from a config file without recompiling.
 
 use std::collections::BTreeMap;
 
@@ -35,7 +37,7 @@ use anyhow::{bail, Context, Result};
 use crate::dag::generator::{generate_layered, GeneratorConfig};
 use crate::dag::{workloads, Dag, KernelKind};
 use crate::platform::Platform;
-use crate::sim::StreamConfig;
+use crate::sim::{FaultSpec, StreamConfig};
 
 /// Raw parsed config: section -> key -> value.
 pub type RawConfig = BTreeMap<String, BTreeMap<String, String>>;
@@ -99,6 +101,9 @@ pub struct RunConfig {
     /// `open-qos`); [`workloads::default_qos_mix`] by default. See
     /// [`workloads::parse_class_mix`] for the spec syntax.
     pub classes: Vec<workloads::JobClass>,
+    /// Device failure injection (`None` = failure-free). See
+    /// [`FaultSpec::from_spec`] for the spec syntax.
+    pub fault: Option<FaultSpec>,
 }
 
 impl Default for RunConfig {
@@ -113,6 +118,7 @@ impl Default for RunConfig {
             return_to_host: true,
             stream: StreamConfig::closed(),
             classes: workloads::default_qos_mix(),
+            fault: None,
         }
     }
 }
@@ -181,6 +187,10 @@ impl RunConfig {
         if let Some(spec) = r.get("classes") {
             cfg.classes = workloads::parse_class_mix(spec)
                 .with_context(|| format!("class-mix spec {spec:?}"))?;
+        }
+        if let Some(spec) = r.get("fault") {
+            cfg.fault =
+                Some(FaultSpec::from_spec(spec).with_context(|| format!("fault spec {spec:?}"))?);
         }
         Ok(cfg)
     }
@@ -286,6 +296,18 @@ mod tests {
         assert_eq!(cfg.stream.admit, AdmissionPolicy::Sjf);
         assert!(RunConfig::parse("[run]\nstream = \"stream:arrival=warp\"\n").is_err());
         assert_eq!(RunConfig::parse("").unwrap().stream, StreamConfig::closed());
+    }
+
+    #[test]
+    fn fault_spec_parses_into_config() {
+        let src = "[run]\nfault = \"fault:mtbf=500,mttr=80,seed=9\"\n";
+        let cfg = RunConfig::parse(src).unwrap();
+        let fault = cfg.fault.unwrap();
+        assert_eq!(fault.mtbf_ms, 500.0);
+        assert_eq!(fault.mttr_ms, 80.0);
+        assert_eq!(fault.seed, 9);
+        assert!(RunConfig::parse("[run]\nfault = \"fault:at=10:dev=0:down=5\"\n").is_err());
+        assert!(RunConfig::parse("").unwrap().fault.is_none());
     }
 
     #[test]

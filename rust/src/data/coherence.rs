@@ -97,6 +97,37 @@ impl Directory {
     pub fn copy_count(&self, h: DataHandle) -> u32 {
         self.masks[h.0 as usize].count_ones()
     }
+
+    /// Device failure: invalidate every copy held by `node`.
+    ///
+    /// A datum whose *only* valid copy lived on the failed node is
+    /// restored from the host checkpoint (host bit set) — the open
+    /// engine's recovery model assumes initial buffers and committed
+    /// results are re-materializable from host memory, and charges the
+    /// re-fetch as an ordinary bus transfer on the next `acquire_read`.
+    /// Returns how many handles lost a copy.
+    pub fn invalidate_node(&mut self, node: MemNode) -> usize {
+        assert!(node < 64, "memory node out of bitmask range");
+        let bit = 1u64 << node;
+        let mut lost = 0;
+        for mask in &mut self.masks {
+            if *mask & bit != 0 {
+                *mask &= !bit;
+                lost += 1;
+                if *mask == 0 {
+                    // Sole copy died: fall back to the host checkpoint.
+                    *mask = 1;
+                }
+            }
+        }
+        lost
+    }
+
+    /// Revoke a killed task's output: back to the unwritten state (no
+    /// valid copies anywhere), as if the producer never ran.
+    pub fn clear(&mut self, h: DataHandle) {
+        self.masks[h.0 as usize] = 0;
+    }
 }
 
 #[cfg(test)]
@@ -163,6 +194,33 @@ mod tests {
         assert!(d.is_valid(b, 1) && !d.is_valid(b, 0));
         assert!(d.is_valid(a, 1) && !d.is_valid(a, 0));
         assert_eq!(d.len(), 2);
+    }
+
+    #[test]
+    fn invalidate_node_restores_sole_copies_from_host() {
+        let mut d = Directory::new();
+        let shared = d.alloc(8, 0); // host + device copy after the read
+        d.acquire_read(shared, 1);
+        let only = d.alloc(8, 0);
+        d.acquire_write(only, 1); // sole copy on device 1
+        let untouched = d.alloc(8, 0);
+        assert_eq!(d.invalidate_node(1), 2, "two handles held device-1 copies");
+        assert_eq!(d.valid_mask(shared), 0b01, "host copy survives alone");
+        assert_eq!(d.valid_mask(only), 0b01, "sole victim copy restored on host");
+        assert_eq!(d.valid_mask(untouched), 0b01);
+        // The restored datum is re-fetched as a plain transfer.
+        assert_eq!(d.acquire_read(only, 1), Some(0));
+    }
+
+    #[test]
+    fn clear_reverts_to_unwritten() {
+        let mut d = Directory::new();
+        let h = d.alloc_unwritten(64);
+        d.acquire_write(h, 1);
+        d.acquire_read(h, 0);
+        d.clear(h);
+        assert_eq!(d.any_holder(h), None, "killed output must be unwritten again");
+        assert_eq!(d.copy_count(h), 0);
     }
 
     #[test]

@@ -16,7 +16,8 @@ use hetsched::report::{fmt_ms, fmt_ratio, Table};
 use hetsched::runtime::{KernelRuntime, RuntimeService};
 use hetsched::sched::{self, PlanCache, SchedulerRegistry};
 use hetsched::sim::{
-    simulate, simulate_open, simulate_open_qos, JobQos, SessionReport, SimConfig, StreamConfig,
+    simulate, simulate_open, simulate_open_qos, FaultSpec, JobQos, SessionReport, SimConfig,
+    StreamConfig,
 };
 
 fn main() {
@@ -135,6 +136,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             collect_trace: args.flag("trace").is_some(),
             bus_channels: args.flag_usize("bus-channels", 1)?,
             prefetch: args.has("prefetch"),
+            fault: cfg.fault.clone(),
         };
         let mut last = None;
         for _ in 0..cfg.iterations.max(1) {
@@ -268,6 +270,12 @@ const DEFAULT_QOS_STREAM: &str = "stream:arrival=bursty,rate=380,burst=8,queue=2
 /// policy held fixed so rows isolate the admission dimension).
 const QOS_POLICY: &str = "dmda";
 
+/// Default failure injection for the `open-fault` scenario: a scripted
+/// mid-burst kill of the GPU (device 1) with a small re-fetch penalty,
+/// so recovery rows are deterministic and reproducible (mirror-tuned;
+/// override with `--fault` or the config file's `[run] fault` key).
+const DEFAULT_FAULT: &str = "fault:at=60:dev=1:down=40;refetch=2";
+
 /// `hetsched bench stream`: streaming multi-DAG sessions across the
 /// policy matrix — closed-loop scenarios (plan-cache amortization,
 /// windowed-gp vs one-shot-gp on the phased workload) plus open-system
@@ -290,6 +298,11 @@ fn cmd_bench_stream(args: &Args) -> Result<()> {
         (Some(spec), _) => StreamConfig::from_spec(spec)?,
         (None, Some(cfg)) => cfg.stream.clone(),
         (None, None) => StreamConfig::from_spec(DEFAULT_OPEN_STREAM)?,
+    };
+    let fault = match (args.flag("fault"), &file_cfg) {
+        (Some(spec), _) => FaultSpec::from_spec(spec)?,
+        (None, Some(cfg)) if cfg.fault.is_some() => cfg.fault.clone().unwrap(),
+        _ => FaultSpec::from_spec(DEFAULT_FAULT)?,
     };
     let classes = match (args.flag("classes"), file_cfg) {
         (Some(spec), _) => workloads::parse_class_mix(spec)?,
@@ -459,6 +472,49 @@ fn cmd_bench_stream(args: &Args) -> Result<()> {
     }
     println!("{}", qos_table.render());
 
+    // --- open-fault: device failure mid-burst, recovery sweep --------
+    //
+    // The open-poisson traffic replayed under a fault stream (scripted
+    // GPU kill by default): dmda re-enqueues naively, one-shot gp
+    // replays its static plan, gp:window replans the union frontier on
+    // the down/up events — so the rows isolate what recovery-aware
+    // replanning buys (mean sojourn, goodput).
+    let fault_cfg = SimConfig { fault: Some(fault.clone()), ..Default::default() };
+    let fault_specs = ["dmda".to_string(), "gp".to_string(), format!("gp:window={window}")];
+    let mut fault_table = Table::new(
+        format!("open-fault recovery sweep ({})", fault.spec_string()),
+        &[
+            "policy", "jobs", "span_ms", "mean_ms", "fails", "reexec", "wasted_ms",
+            "goodput/s", "replans",
+        ],
+    );
+    for spec in &fault_specs {
+        let mut scheduler = registry.create(spec)?;
+        let mut cache = PlanCache::new();
+        let session = simulate_open(
+            &open_phased,
+            scheduler.as_mut(),
+            &platform,
+            &model,
+            &fault_cfg,
+            &open_stream,
+            &mut cache,
+        );
+        fault_table.row(vec![
+            spec.clone(),
+            session.job_count().to_string(),
+            fmt_ms(session.span_ms),
+            fmt_ms(session.mean_sojourn_ms()),
+            session.failures_injected.to_string(),
+            session.tasks_reexecuted.to_string(),
+            fmt_ms(session.wasted_work_ms),
+            format!("{:.1}", session.goodput_jps()),
+            session.recovery_replans.to_string(),
+        ]);
+        rows.push(("open-fault".to_string(), spec.clone(), open_stream.spec_string(), session));
+    }
+    println!("{}", fault_table.render());
+
     let find = |s: &str, p: &str| {
         rows.iter().find(|(sc, sp, _, _)| sc == s && sp == p).map(|(_, _, _, r)| r)
     };
@@ -509,6 +565,21 @@ fn cmd_bench_stream(args: &Args) -> Result<()> {
             fmt_ms(one_shot.mean_sojourn_ms()),
             fmt_ms(windowed.mean_sojourn_ms()),
             -gain * 100.0
+        );
+    }
+    if let (Some(naive), Some(windowed)) =
+        (find("open-fault", "gp"), find("open-fault", &windowed_spec))
+    {
+        let gain =
+            (naive.mean_sojourn_ms() - windowed.mean_sojourn_ms()) / naive.mean_sojourn_ms();
+        println!(
+            "open fault stream: re-enqueue gp mean sojourn {} ms vs replanning \
+             gp:window={window} {} ms ({:+.1}% sojourn, goodput {:.1} vs {:.1} jobs/s)",
+            fmt_ms(naive.mean_sojourn_ms()),
+            fmt_ms(windowed.mean_sojourn_ms()),
+            -gain * 100.0,
+            naive.goodput_jps(),
+            windowed.goodput_jps(),
         );
     }
 
@@ -593,6 +664,9 @@ fn render_session_json(
              \"p99_sojourn_ms\": {:.6}, \"mean_sojourn_ms\": {:.6}, \
              \"mean_queue_delay_ms\": {:.6}, \"throughput_jps\": {:.6}, \
              \"max_concurrent_jobs\": {}, \"rejected\": {}, \"deadline_hit_rate\": {:.4}, \
+             \"failures_injected\": {}, \"tasks_reexecuted\": {}, \"wasted_work_ms\": {:.6}, \
+             \"useful_work_ms\": {:.6}, \"executed_work_ms\": {:.6}, \
+             \"recovery_replans\": {}, \"goodput_jps\": {:.6}, \
              \"utilization\": [{util}], \"classes\": [{classes}]}}{}",
             r.job_count(),
             r.makespan_ms,
@@ -612,6 +686,13 @@ fn render_session_json(
             r.max_concurrent_jobs(),
             r.rejected_count(),
             r.deadline_hit_rate(),
+            r.failures_injected,
+            r.tasks_reexecuted,
+            r.wasted_work_ms,
+            r.useful_work_ms,
+            r.executed_work_ms,
+            r.recovery_replans,
+            r.goodput_jps(),
             if i + 1 == rows.len() { "" } else { "," }
         );
     }

@@ -21,6 +21,34 @@ pub enum DeviceKind {
     Fpga,
 }
 
+/// Runtime availability of one device (the fault/maintenance seam).
+///
+/// The platform description itself stays static for a session; what
+/// changes under failures and drains is this per-device *state*, owned
+/// by the engines and driven by `fault:` event streams
+/// ([`crate::sim::FaultSpec`]). Dispatch is gated on
+/// [`DeviceState::can_dispatch`]:
+///
+/// * `Up` — accepts new tasks.
+/// * `Draining` — running tasks finish, but no new task may start
+///   (planned maintenance; nothing is killed, nothing is invalidated).
+/// * `Down` — failed: in-flight tasks were killed and rolled back, the
+///   device's memory-node coherence entries were invalidated, and its
+///   workers are unavailable until the matching up event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceState {
+    Up,
+    Draining,
+    Down,
+}
+
+impl DeviceState {
+    /// May the engine start a new task on a device in this state?
+    pub fn can_dispatch(self) -> bool {
+        self == DeviceState::Up
+    }
+}
+
 /// One device of the platform.
 #[derive(Debug, Clone)]
 pub struct DeviceSpec {
@@ -172,6 +200,13 @@ mod tests {
             }
             assert_eq!(p.host_node(), p.memory_node(0), "host = CPU's memory node");
         }
+    }
+
+    #[test]
+    fn only_up_devices_accept_dispatch() {
+        assert!(DeviceState::Up.can_dispatch());
+        assert!(!DeviceState::Draining.can_dispatch(), "draining finishes, never starts");
+        assert!(!DeviceState::Down.can_dispatch());
     }
 
     #[test]

@@ -13,6 +13,15 @@
 //! and dispatches to the argmin. Compared with eager it avoids slow
 //! devices for compute-bound kernels and avoids re-fetching data; the
 //! paper measures fewer transfers than eager but more than gp.
+//!
+//! When the owning job carries a finite deadline
+//! ([`DispatchCtx::deadline_ms`]), dmda applies a *least-slack*
+//! tie-break instead: among devices whose estimated finish still meets
+//! the deadline it picks the one finishing **latest**
+//! (slowest-that-still-meets), preserving fast capacity for tasks with
+//! tighter slack; when no device meets the deadline it falls back to
+//! the plain minimal-finish choice. Deadline-free jobs take the exact
+//! pre-QoS code path.
 
 use super::{DispatchCtx, Plan, Planner, Scheduler};
 use crate::dag::Dag;
@@ -42,6 +51,11 @@ impl Scheduler for Dmda {
     }
 
     fn select(&mut self, ctx: &DispatchCtx) -> DeviceId {
+        if ctx.deadline_ms.is_finite() {
+            if let Some(d) = least_slack_meeting(ctx) {
+                return d;
+            }
+        }
         // Strict `<` keeps ties on the lowest device id — pinned by the
         // tie-break determinism tests.
         let mut best = 0usize;
@@ -57,6 +71,22 @@ impl Scheduler for Dmda {
     }
 }
 
+/// Least-slack-first tie-break: among devices whose estimated finish
+/// meets the job deadline, the one finishing latest (strict `>` keeps
+/// ties on the lowest device id); `None` when no device meets it.
+pub(crate) fn least_slack_meeting(ctx: &DispatchCtx) -> Option<DeviceId> {
+    let mut best: Option<DeviceId> = None;
+    let mut best_t = f64::NEG_INFINITY;
+    for d in 0..ctx.device_free_ms.len() {
+        let t = ctx.estimated_finish_ms(d);
+        if t <= ctx.deadline_ms && t > best_t {
+            best_t = t;
+            best = Some(d);
+        }
+    }
+    best
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -65,11 +95,12 @@ mod tests {
     use crate::platform::Platform;
     use crate::sched::InputInfo;
 
-    fn dispatch(
+    fn dispatch_ddl(
         kernel: KernelKind,
         size: u32,
         free: &[f64],
         inputs: &[InputInfo],
+        deadline_ms: f64,
     ) -> DeviceId {
         let platform = Platform::paper();
         let model = CalibratedModel::default();
@@ -79,13 +110,22 @@ mod tests {
             kernel,
             size,
             ready_ms: 0.0,
-            deadline_ms: f64::INFINITY,
+            deadline_ms,
             device_free_ms: free,
             inputs,
             platform: &platform,
             model: &model,
         };
         Dmda::new().select(&ctx)
+    }
+
+    fn dispatch(
+        kernel: KernelKind,
+        size: u32,
+        free: &[f64],
+        inputs: &[InputInfo],
+    ) -> DeviceId {
+        dispatch_ddl(kernel, size, free, inputs, f64::INFINITY)
     }
 
     #[test]
@@ -108,6 +148,31 @@ mod tests {
         assert_eq!(dispatch(KernelKind::Ma, 256, &[0.0, 0.0], &on_host), 0);
         let on_gpu = [InputInfo { bytes: 50 << 20, valid_mask: 0b10 }];
         assert_eq!(dispatch(KernelKind::Ma, 256, &[0.0, 0.0], &on_gpu), 1);
+    }
+
+    #[test]
+    fn deadline_slack_table() {
+        // Least-slack-first: big MM finishes at ~exec_gpu on the GPU and
+        // ~exec_cpu (much later) on the CPU.
+        let model = CalibratedModel::default();
+        let exec_cpu = model.kernel_time_ms(KernelKind::Mm, 1024, 0);
+        let exec_gpu = model.kernel_time_ms(KernelKind::Mm, 1024, 1);
+        assert!(exec_gpu < exec_cpu);
+        let free = [0.0, 0.0];
+        for (deadline, want, why) in [
+            // Loose deadline: both meet it; the CPU finishes later but
+            // still in time, so least-slack picks it, keeping the GPU
+            // free for tighter tasks.
+            (exec_cpu * 2.0, 0, "both meet: pick slowest-that-meets"),
+            // Tight deadline: only the GPU meets it.
+            (exec_gpu * 1.5, 1, "only gpu meets"),
+            // Impossible deadline: fall back to plain min-finish (GPU).
+            (exec_gpu * 0.5, 1, "none meet: min-finish fallback"),
+        ] {
+            assert_eq!(dispatch_ddl(KernelKind::Mm, 1024, &free, &[], deadline), want, "{why}");
+        }
+        // Deadline-free jobs keep the pre-QoS argmin exactly.
+        assert_eq!(dispatch(KernelKind::Mm, 1024, &free, &[]), 1);
     }
 
     #[test]

@@ -46,6 +46,18 @@
 //! true completion order, so — unlike every offline policy — windowed
 //! gp's assignments are pinned per engine, not across engines (the
 //! golden and bench suites exercise the simulator).
+//!
+//! # Recovery (device failures)
+//!
+//! Windowed gp is the one policy that *replans* around elasticity
+//! events instead of merely re-enqueueing: [`Scheduler::on_task_killed`]
+//! returns a killed task to the union frontier (its dispatched bit is
+//! cleared, and a drained-but-revoked job re-enters the frontier), and
+//! [`Scheduler::on_device_down`] / [`Scheduler::on_device_up`] force an
+//! immediate frontier replan so the partitioner sees the shifted device
+//! balance right away — the "recovery-aware replanning" arm of the
+//! fault benchmarks. One-shot gp (and every other policy) takes the
+//! default no-op hooks and falls back to plain re-enqueue.
 
 use std::sync::Arc;
 
@@ -465,6 +477,17 @@ impl Scheduler for GraphPartition {
         // Pure table lookup: the singular offline decision, amortized.
         let state = &mut self.jobs[ctx.job];
         if self.config.window.is_some() {
+            // Deadline-slack override (windowed only — the one-shot policy
+            // honors the paper's immutable table): when the pin would blow
+            // a finite deadline but some other device still meets it,
+            // re-pin to the least-slack meeting device.
+            if ctx.deadline_ms.is_finite()
+                && ctx.estimated_finish_ms(state.parts[ctx.task]) > ctx.deadline_ms
+            {
+                if let Some(d) = super::dmda::least_slack_meeting(ctx) {
+                    state.parts[ctx.task] = d;
+                }
+            }
             state.dispatched[ctx.task] = true;
         }
         state.parts[ctx.task]
@@ -480,13 +503,48 @@ impl Scheduler for GraphPartition {
     }
 
     fn on_job_drain(&mut self, job: JobId) {
-        // Retire the job from the union frontier; keep the pin table so
-        // inspection accessors stay valid after a run.
+        // Retire the job from the union frontier. The dispatch bitmap and
+        // weight snapshot are kept: a device failure can *revoke* a drain
+        // (a committed-but-unfinished task gets killed), in which case
+        // `on_task_killed` re-activates the job and the frontier must
+        // still describe it.
         if let Some(state) = self.jobs.get_mut(job) {
             state.active = false;
-            state.dispatched = Vec::new();
-            state.frontier = FrontierState::default();
         }
+    }
+
+    fn on_task_killed(&mut self, job: JobId, task: NodeId) {
+        let Some(state) = self.jobs.get_mut(job) else { return };
+        // Revoked drain: the job is back in flight.
+        state.active = true;
+        if self.config.window.is_some() && task < state.dispatched.len() {
+            // Return the task to the union frontier; the next replan
+            // re-pins it knowing the post-failure device balance.
+            state.dispatched[task] = false;
+        }
+    }
+
+    fn on_device_down(&mut self, _dev: DeviceId) -> usize {
+        if self.config.window.is_none() {
+            return 0;
+        }
+        // Recovery replan: re-pin the whole union frontier (now including
+        // the killed tasks) immediately, and restart the window cadence.
+        let before = self.replans;
+        self.finishes_since_replan = 0;
+        self.replan_frontier();
+        (self.replans - before) as usize
+    }
+
+    fn on_device_up(&mut self, _dev: DeviceId) -> usize {
+        if self.config.window.is_none() {
+            return 0;
+        }
+        // The recovered device is idle capacity the last plan never saw.
+        let before = self.replans;
+        self.finishes_since_replan = 0;
+        self.replan_frontier();
+        (self.replans - before) as usize
     }
 
     fn is_offline(&self) -> bool {
@@ -769,5 +827,60 @@ mod tests {
         for task in 0..6 {
             assert_eq!(gp.job_parts(0)[task], plan_a.pins[task], "dispatched pin moved");
         }
+    }
+
+    #[test]
+    fn kill_and_device_down_trigger_recovery_replan() {
+        let dag = generate_layered(&GeneratorConfig::paper(KernelKind::Ma, 1024));
+        let platform = Platform::paper();
+        let model = CalibratedModel::default();
+        let mut gp = GraphPartition::new(GpConfig { window: Some(100), ..Default::default() });
+        gp.plan_now(&dag, &platform, &model);
+        let free = [0.0, 0.0];
+        for task in 0..4 {
+            let ctx = DispatchCtx {
+                job: 0,
+                task,
+                kernel: KernelKind::Ma,
+                size: 1024,
+                ready_ms: 0.0,
+                deadline_ms: f64::INFINITY,
+                device_free_ms: &free,
+                inputs: &[],
+                platform: &platform,
+                model: &model,
+            };
+            gp.select(&ctx);
+        }
+        assert_eq!(gp.replans(), 0, "window of 100 never fires on its own");
+        // A failure kills task 2 and forces an immediate frontier replan.
+        gp.on_task_killed(0, 2);
+        assert!(!gp.jobs[0].dispatched[2], "killed task re-enters the frontier");
+        assert_eq!(gp.on_device_down(1), 1, "forced recovery replan");
+        assert_eq!(gp.replans(), 1);
+        assert_eq!(gp.parts().len(), dag.node_count(), "table stays complete");
+        assert_eq!(gp.on_device_up(1), 1, "recovery replan on the way back up");
+        // One-shot gp takes the no-op defaults.
+        let mut oneshot = planned(KernelKind::Ma, 1024);
+        oneshot.on_task_killed(0, 0);
+        assert_eq!(oneshot.on_device_down(1), 0);
+        assert_eq!(oneshot.on_device_up(1), 0);
+    }
+
+    #[test]
+    fn drain_revocation_reactivates_job() {
+        // on_job_drain keeps the frontier snapshot so a revoked drain
+        // (kill after the last task committed) can resume replanning.
+        let dag = generate_layered(&GeneratorConfig::paper(KernelKind::Ma, 1024));
+        let platform = Platform::paper();
+        let model = CalibratedModel::default();
+        let mut gp = GraphPartition::new(GpConfig { window: Some(100), ..Default::default() });
+        gp.plan_now(&dag, &platform, &model);
+        gp.on_job_drain(0);
+        assert!(!gp.jobs[0].active);
+        assert!(!gp.jobs[0].dispatched.is_empty(), "bitmap survives drain");
+        gp.on_task_killed(0, 1);
+        assert!(gp.jobs[0].active, "revoked drain re-activates the job");
+        assert_eq!(gp.on_device_down(1), 1, "re-activated job is replannable");
     }
 }

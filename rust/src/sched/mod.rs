@@ -29,6 +29,12 @@
 //!      §IV.D replanning, lifted across job boundaries);
 //!    * [`Scheduler::on_job_drain`] — every task of one job has
 //!      completed; policies may retire that job's state;
+//!    * [`Scheduler::on_task_killed`] — a device failure killed an
+//!      in-flight task; policies un-pin it so it can re-dispatch;
+//!    * [`Scheduler::on_device_down`] / [`Scheduler::on_device_up`] —
+//!      the device set changed (failure, drain, recovery); windowed gp
+//!      forces a union-frontier replan here and reports it via the
+//!      returned count;
 //!    * [`Scheduler::on_drain`] — the whole session has drained.
 //!
 //! 3. **Streaming sessions** — [`crate::session::SchedSession`] (and the
@@ -125,10 +131,13 @@ pub struct DispatchCtx<'a> {
     /// Virtual/real time at which the task's dependencies are satisfied.
     pub ready_ms: f64,
     /// Absolute deadline of the owning job on the engine clock
-    /// (`f64::INFINITY` when it has none). None of the built-in
-    /// policies consult it yet — it is the open system's QoS signal,
-    /// exposed here so deadline-aware dispatch policies need no seam
-    /// change.
+    /// (`f64::INFINITY` when it has none) — the open system's QoS
+    /// signal at dispatch granularity. [`dmda::Dmda`] and windowed
+    /// [`gp::GraphPartition`] use it as a least-slack tie-break: among
+    /// devices that still meet the deadline, prefer the one finishing
+    /// *latest* (slowest-that-still-meets), preserving fast capacity
+    /// for tighter tasks; with no finite deadline the pre-QoS choice is
+    /// unchanged.
     pub deadline_ms: f64,
     /// Earliest time a worker of each device becomes free.
     pub device_free_ms: &'a [f64],
@@ -221,6 +230,36 @@ pub trait Scheduler: Planner {
     /// may be retired.
     fn on_job_drain(&mut self, job: JobId) {
         let _ = job;
+    }
+
+    /// Recovery: a device failure killed in-flight `task` of job `job`;
+    /// the engine rolled its state back and will re-dispatch it.
+    /// Policies holding per-task dispatch state (windowed gp's pin
+    /// bookkeeping) un-mark it here so the replanner sees it as
+    /// frontier again; the default is a no-op (online policies simply
+    /// re-select when the task re-enters the ready pool).
+    fn on_task_killed(&mut self, job: JobId, task: NodeId) {
+        let _ = (job, task);
+    }
+
+    /// Recovery: device `dev` went Down (failure) or Draining
+    /// (maintenance); no new task will dispatch to it until
+    /// [`Scheduler::on_device_up`]. Returns the number of forced
+    /// replans performed (windowed gp replans the union frontier here;
+    /// the engine accumulates the count into the session's
+    /// recovery-replan metric). Default: no reaction — killed tasks
+    /// just re-enter the ready pool.
+    fn on_device_down(&mut self, dev: DeviceId) -> usize {
+        let _ = dev;
+        0
+    }
+
+    /// Recovery: device `dev` is Up again. Same contract as
+    /// [`Scheduler::on_device_down`]; windowed gp replans so the
+    /// returned capacity is reclaimed immediately.
+    fn on_device_up(&mut self, dev: DeviceId) -> usize {
+        let _ = dev;
+        0
     }
 
     /// Lifecycle: every submitted job has drained.
@@ -345,6 +384,9 @@ mod tests {
         let plan = Arc::new(s.build_plan(&dag, &platform, &model));
         s.on_submit(0, &dag, &plan, &platform, &model);
         s.on_task_finish(0, 0, 0, 1.0);
+        s.on_task_killed(0, 0);
+        assert_eq!(s.on_device_down(1), 0, "default policies never force replans");
+        assert_eq!(s.on_device_up(1), 0);
         s.on_job_drain(0);
         s.on_drain();
         assert!(!s.is_offline());

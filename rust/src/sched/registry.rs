@@ -58,9 +58,27 @@
 //! Reachable from `bench stream --classes` and the `[run] classes`
 //! config key; [`crate::dag::workloads::job_classes`] draws the jobs.
 //!
-//! The same strictness rules apply across all three grammars: unknown
+//! # Fault specs
+//!
+//! Device failure/drain scenarios use the reserved name `fault`, parsed
+//! by [`crate::sim::FaultSpec::from_spec`]:
+//!
+//! * `"fault:mtbf=500,mttr=80,dist=exp,seed=9"` — stochastic: per
+//!   victim device, exponential failure gaps (mean `mtbf` ms) and
+//!   outage durations (mean `mttr` ms) from a seeded PCG32;
+//! * `"fault:at=120:dev=1:down=50"` — scripted: device 1 fails at
+//!   t=120 ms and returns at t=170 ms (in-flight tasks killed, state
+//!   rolled back, tasks re-dispatched);
+//! * `"fault:at=120:dev=1:drain=50"` — scripted drain: running tasks
+//!   finish, no new dispatches until the up event;
+//! * both accept `refetch=MS`, a re-fetch penalty on killed tasks.
+//!
+//! Reachable from `bench stream --fault` and the `[run] fault` config
+//! key; device 0 (the host) can never fail.
+//!
+//! The same strictness rules apply across all four grammars: unknown
 //! keys and keys the chosen arrival kind / admission policy / DAG
-//! family does not use are hard errors.
+//! family / fault mode does not use are hard errors.
 
 use std::collections::BTreeMap;
 

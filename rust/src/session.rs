@@ -199,6 +199,13 @@ impl SchedSession {
         self.report.cache_misses =
             self.report.cache_misses - dags.len() as u64 + batch.cache_misses;
         self.report.cache_hits += batch.cache_hits;
+        // Recovery metrics accumulate additively across batches.
+        self.report.failures_injected += batch.failures_injected;
+        self.report.tasks_reexecuted += batch.tasks_reexecuted;
+        self.report.wasted_work_ms += batch.wasted_work_ms;
+        self.report.useful_work_ms += batch.useful_work_ms;
+        self.report.executed_work_ms += batch.executed_work_ms;
+        self.report.recovery_replans += batch.recovery_replans;
         &self.report.jobs[first..]
     }
 

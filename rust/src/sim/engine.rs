@@ -24,21 +24,42 @@
 //! lifecycle ([`Scheduler::on_submit`] at admission, [`Scheduler::select`]
 //! per ready task, [`Scheduler::on_task_finish`] per completion,
 //! [`Scheduler::on_job_drain`] / [`Scheduler::on_drain`] at drain).
+//!
+//! # Device failures ([`SimConfig::fault`])
+//!
+//! With a non-inert [`FaultSpec`] the device set itself becomes an event
+//! stream: `EV_DEV_DOWN` kills every commitment still running on the
+//! victim (rolling back its finish, busy time, trace entry and output
+//! coherence, and charging the lost milliseconds as *wasted work*),
+//! invalidates the device's memory node in the MSI directory (sole
+//! copies fall back to the host checkpoint), re-enqueues the killed
+//! tasks through fresh `EV_READY` events — delayed by
+//! [`FaultSpec::refetch_ms`] — and tells the policy via
+//! [`Scheduler::on_task_killed`] / [`Scheduler::on_device_down`]
+//! (windowed gp replans the union frontier; everything else falls back
+//! to plain re-enqueue). A scripted `drain=` outage instead parks the
+//! device in [`DeviceState::Draining`]: running commitments finish, new
+//! dispatches are gated off. Device 0 (the CPU, whose memory node *is*
+//! the host checkpoint) never fails, so a ready task always has a live
+//! dispatch target. Stale events are skipped via per-task and per-drain
+//! epochs; with no fault spec every epoch is 0 and the engine is
+//! bit-for-bit the PR 5 engine.
 
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 use std::sync::Arc;
 use std::time::Instant;
 
 use super::report::{JobTiming, RunReport, SessionReport, TraceEvent};
-use super::stream::{AdmissionPolicy, JobQos, StreamConfig};
+use super::stream::{AdmissionPolicy, FaultSpec, JobQos, StreamConfig};
 use crate::dag::{Dag, KernelKind};
 use crate::data::{DataHandle, Directory, TransferLedger};
 use crate::perfmodel::PerfModel;
-use crate::platform::Platform;
+use crate::platform::{DeviceState, Platform};
 use crate::sched::{
     DispatchCtx, InputInfo, JobId, Plan, PlanCache, PlanKey, Planner as _, Scheduler,
 };
+use crate::util::rng::Pcg32;
 
 /// Simulation options.
 #[derive(Debug, Clone)]
@@ -57,6 +78,9 @@ pub struct SimConfig {
     /// source datum exists rather than when the consuming task is ready
     /// (the CUDA-streams technique of the paper's §I / Membarth et al.).
     pub prefetch: bool,
+    /// Device failure/drain injection (`None` or an inert spec = the
+    /// failure-free engine, bit-for-bit). See the module docs.
+    pub fault: Option<FaultSpec>,
 }
 
 impl Default for SimConfig {
@@ -66,6 +90,7 @@ impl Default for SimConfig {
             collect_trace: false,
             bus_channels: 1,
             prefetch: false,
+            fault: None,
         }
     }
 }
@@ -82,15 +107,23 @@ impl Ord for Ord64 {
     }
 }
 
-/// Event kinds, in tie-break order at equal times: a drain frees an
-/// admission slot before a simultaneous arrival claims one, both
-/// precede task dispatch, and a wait-budget expiry fires last — so a
-/// job whose slot frees exactly at its budget is admitted (wait ==
-/// budget counts as within budget), never rejected.
-const EV_DRAIN: u8 = 0;
-const EV_ARRIVAL: u8 = 1;
-const EV_READY: u8 = 2;
-const EV_REJECT: u8 = 3;
+/// Event kinds, in tie-break order at equal times: device failures and
+/// recoveries reshape the machine before anything else reacts to it,
+/// then a drain frees an admission slot before a simultaneous arrival
+/// claims one, both precede task dispatch, and a wait-budget expiry
+/// fires last — so a job whose slot frees exactly at its budget is
+/// admitted (wait == budget counts as within budget), never rejected.
+/// The relative order of the non-device kinds is PR 5's, so fault-free
+/// runs replay bit-for-bit.
+///
+/// Device events carry the device id in the `job` slot; `EV_DEV_DOWN`
+/// carries the drain flag (1 = drain, 0 = kill) in the `task` slot.
+const EV_DEV_DOWN: u8 = 0;
+const EV_DEV_UP: u8 = 1;
+const EV_DRAIN: u8 = 2;
+const EV_ARRIVAL: u8 = 3;
+const EV_READY: u8 = 4;
+const EV_REJECT: u8 = 5;
 
 /// Calibrated total-work estimate of one job (ms): the sum over its
 /// kernels of the best-device execution time — the size signal
@@ -171,6 +204,58 @@ struct JobRun<'a> {
     ledger: TransferLedger,
     trace: Vec<TraceEvent>,
     remaining: usize,
+    /// Per-task event generation: an `EV_READY` whose epoch is stale
+    /// (the task was killed or its indegree restored since the push) is
+    /// skipped. All zeros in fault-free runs.
+    task_epoch: Vec<u64>,
+    /// Drain generation: bumped when a failure revokes a completed job,
+    /// invalidating its pending `EV_DRAIN`.
+    drain_epoch: u64,
+}
+
+/// One committed task execution, remembered while a fault spec is
+/// active so a device failure can roll it back.
+#[derive(Debug, Clone, Copy)]
+struct Commit {
+    job: usize,
+    task: usize,
+    dev: usize,
+    worker: usize,
+    start: f64,
+    end: f64,
+    exec: f64,
+}
+
+/// Fault-injection state (present only for a non-inert spec).
+struct FaultState {
+    spec: FaultSpec,
+    rng: Pcg32,
+    /// Scripted outages per device as `(at, down, drain)`, time-ordered;
+    /// the front is popped when its `EV_DEV_DOWN` fires.
+    scripted: Vec<VecDeque<(f64, f64, bool)>>,
+    /// End of the current outage per device.
+    up_at: Vec<f64>,
+    /// In-flight commitments (pruned as failures observe them retired).
+    commits: Vec<Commit>,
+}
+
+/// Recovery accounting for one engine run, aggregated into
+/// [`SessionReport`]'s recovery metrics.
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct RecoveryStats {
+    pub failures_injected: u64,
+    pub tasks_reexecuted: u64,
+    pub wasted_work_ms: f64,
+    /// Every committed millisecond, including ones later rolled back:
+    /// `executed == useful + wasted` at drain.
+    pub executed_work_ms: f64,
+    pub recovery_replans: u64,
+}
+
+/// One exponential draw with the given mean (ms); strictly finite for
+/// finite means (`gen_f64 < 1`).
+fn exp_mean_ms(rng: &mut Pcg32, mean_ms: f64) -> f64 {
+    -(1.0 - rng.gen_f64()).ln() * mean_ms
 }
 
 /// The job-agnostic open-system core: shared machine state plus per-job
@@ -184,7 +269,7 @@ struct EngineCore<'a> {
     dir: Directory,
     /// Time each datum becomes available at its producer (prefetch).
     avail: Vec<f64>,
-    heap: BinaryHeap<Reverse<(Ord64, u8, usize, usize)>>,
+    heap: BinaryHeap<Reverse<(Ord64, u8, usize, usize, u64)>>,
     /// Jobs waiting for an admission slot, in arrival order; pops are
     /// ordered by the admission policy via [`EngineCore::pop_pending`].
     pending: Vec<JobId>,
@@ -192,6 +277,14 @@ struct EngineCore<'a> {
     inflight: usize,
     queue: usize,
     jobs: Vec<JobRun<'a>>,
+    /// Dispatch gate per device ([`DeviceState::can_dispatch`]).
+    device_state: Vec<DeviceState>,
+    fault: Option<FaultState>,
+    stats: RecoveryStats,
+    /// Jobs drained or rejected so far; when a fault stream is active
+    /// the run loop stops at `completed == jobs.len()` instead of
+    /// draining the (perpetual) device events.
+    completed: usize,
 }
 
 impl<'a> EngineCore<'a> {
@@ -232,11 +325,40 @@ impl<'a> EngineCore<'a> {
                 ledger: TransferLedger::new(),
                 trace: Vec::new(),
                 remaining: usize::MAX,
+                task_epoch: Vec::new(),
+                drain_epoch: 0,
             })
             .collect();
         for (j, job) in jobs.iter().enumerate() {
-            heap.push(Reverse((Ord64(job.submit_ms), EV_ARRIVAL, j, 0)));
+            heap.push(Reverse((Ord64(job.submit_ms), EV_ARRIVAL, j, 0, 0)));
         }
+        let k = platform.device_count();
+        let fault = config.fault.as_ref().filter(|f| !f.is_inert()).map(|spec| {
+            let mut rng = Pcg32::seeded(spec.seed);
+            let mut scripted: Vec<VecDeque<(f64, f64, bool)>> = vec![VecDeque::new(); k];
+            if spec.scripted.is_empty() {
+                // Stochastic: one exponential failure clock per non-host
+                // device (device 0 owns the checkpoint, it never fails).
+                for d in 1..k {
+                    let gap = exp_mean_ms(&mut rng, spec.mtbf_ms);
+                    heap.push(Reverse((Ord64(gap), EV_DEV_DOWN, d, 0, 0)));
+                }
+            } else {
+                let mut outages = spec.scripted.clone();
+                outages.sort_by(|a, b| a.at_ms.partial_cmp(&b.at_ms).unwrap());
+                for f in &outages {
+                    assert!(
+                        f.dev < k,
+                        "fault device {} out of range (platform has {k})",
+                        f.dev
+                    );
+                    scripted[f.dev].push_back((f.at_ms, f.down_ms, f.drain));
+                    heap.push(Reverse((Ord64(f.at_ms), EV_DEV_DOWN, f.dev, f.drain as usize, 0)));
+                    heap.push(Reverse((Ord64(f.at_ms + f.down_ms), EV_DEV_UP, f.dev, 0, 0)));
+                }
+            }
+            FaultState { spec: spec.clone(), rng, scripted, up_at: vec![0.0; k], commits: Vec::new() }
+        });
         EngineCore {
             platform,
             model,
@@ -251,6 +373,10 @@ impl<'a> EngineCore<'a> {
             inflight: 0,
             queue: queue.max(1),
             jobs,
+            device_state: vec![DeviceState::Up; k],
+            fault,
+            stats: RecoveryStats::default(),
+            completed: 0,
         }
     }
 
@@ -326,10 +452,11 @@ impl<'a> EngineCore<'a> {
         job.assignments = vec![usize::MAX; n];
         job.device_busy = vec![0.0; k];
         job.tasks_per_device = vec![0; k];
+        job.task_epoch = vec![0; n];
         job.remaining = n;
         for v in 0..n {
             if job.indeg[v] == 0 {
-                self.heap.push(Reverse((Ord64(now), EV_READY, j, v)));
+                self.heap.push(Reverse((Ord64(now), EV_READY, j, v, 0)));
             }
         }
         self.inflight += 1;
@@ -358,7 +485,8 @@ impl<'a> EngineCore<'a> {
                 job.indeg[w] -= 1;
                 job.ready_time[w] = job.ready_time[w].max(ready);
                 if job.indeg[w] == 0 {
-                    self.heap.push(Reverse((Ord64(job.ready_time[w]), EV_READY, j, w)));
+                    let ep = job.task_epoch[w];
+                    self.heap.push(Reverse((Ord64(job.ready_time[w]), EV_READY, j, w, ep)));
                 }
             }
             job.remaining -= 1;
@@ -380,11 +508,19 @@ impl<'a> EngineCore<'a> {
             .map(|&h| InputInfo { bytes: self.dir.bytes(h), valid_mask: self.dir.valid_mask(h) })
             .collect();
 
-        // Device availability snapshot (earliest-free worker per device).
+        // Device availability snapshot (earliest-free worker per device);
+        // a non-Up device reports ∞ so estimate-driven policies shun it.
         let device_free: Vec<f64> = self
             .worker_free
             .iter()
-            .map(|ws| ws.iter().cloned().fold(f64::INFINITY, f64::min))
+            .enumerate()
+            .map(|(d, ws)| {
+                if self.device_state[d].can_dispatch() {
+                    ws.iter().cloned().fold(f64::INFINITY, f64::min)
+                } else {
+                    f64::INFINITY
+                }
+            })
             .collect();
 
         // --- the scheduling decision ---
@@ -401,9 +537,33 @@ impl<'a> EngineCore<'a> {
             model: self.model,
         };
         let t0 = Instant::now();
-        let dev = scheduler.select(&ctx);
+        let mut dev = scheduler.select(&ctx);
         job.decision_ns += t0.elapsed().as_nanos() as u64;
         assert!(dev < k, "scheduler returned invalid device {dev}");
+        if !self.device_state[dev].can_dispatch() {
+            // Pinned to a failed/draining device: the engine reroutes to
+            // the live device with the earliest estimated finish (device
+            // 0 never fails, so one always exists).
+            let mut best = usize::MAX;
+            let mut best_t = f64::INFINITY;
+            for d in 0..k {
+                if !self.device_state[d].can_dispatch() {
+                    continue;
+                }
+                let t = self.worker_free[d]
+                    .iter()
+                    .cloned()
+                    .fold(f64::INFINITY, f64::min)
+                    .max(ready)
+                    + self.model.kernel_time_ms(node.kernel, node.size, d);
+                if t < best_t {
+                    best_t = t;
+                    best = d;
+                }
+            }
+            assert!(best != usize::MAX, "no dispatchable device (device 0 must stay up)");
+            dev = best;
+        }
         let mem = self.platform.memory_node(dev);
 
         // --- data acquisition: MSI reads, serialized per bus channel ---
@@ -441,6 +601,10 @@ impl<'a> EngineCore<'a> {
         job.assignments[v] = dev;
         job.device_busy[dev] += exec;
         job.tasks_per_device[dev] += 1;
+        self.stats.executed_work_ms += exec;
+        if let Some(fault) = self.fault.as_mut() {
+            fault.commits.push(Commit { job: j, task: v, dev, worker, start, end, exec });
+        }
         if self.config.collect_trace {
             job.trace.push(TraceEvent {
                 job: j,
@@ -464,7 +628,8 @@ impl<'a> EngineCore<'a> {
             job.indeg[w] -= 1;
             job.ready_time[w] = job.ready_time[w].max(end);
             if job.indeg[w] == 0 {
-                self.heap.push(Reverse((Ord64(job.ready_time[w]), EV_READY, j, w)));
+                let ep = job.task_epoch[w];
+                self.heap.push(Reverse((Ord64(job.ready_time[w]), EV_READY, j, w, ep)));
             }
         }
         job.remaining -= 1;
@@ -505,30 +670,210 @@ impl<'a> EngineCore<'a> {
         let t0 = Instant::now();
         scheduler.on_job_drain(j);
         job.decision_ns += t0.elapsed().as_nanos() as u64;
-        self.heap.push(Reverse((Ord64(job.complete_ms), EV_DRAIN, j, 0)));
+        self.heap.push(Reverse((Ord64(job.complete_ms), EV_DRAIN, j, 0, job.drain_epoch)));
+    }
+
+    /// `EV_DEV_DOWN`: park the device (Down or Draining), and for a kill
+    /// roll back every commitment still running on it — wasted-work
+    /// accounting, MSI invalidation, frontier re-enqueue, policy hooks.
+    fn device_down(&mut self, scheduler: &mut dyn Scheduler, dev: usize, drain: bool, t: f64) {
+        self.stats.failures_injected += 1;
+        let fault = self.fault.as_mut().expect("device events require a fault state");
+        let stochastic = fault.spec.scripted.is_empty();
+        let down_ms = if stochastic {
+            let d = exp_mean_ms(&mut fault.rng, fault.spec.mttr_ms);
+            // Scripted outages pushed their recovery at init.
+            self.heap.push(Reverse((Ord64(t + d), EV_DEV_UP, dev, 0, 0)));
+            d
+        } else {
+            let (_, down, _) = fault.scripted[dev].pop_front().expect("scripted outage queued");
+            down
+        };
+        let up_at = t + down_ms;
+        fault.up_at[dev] = up_at;
+        self.device_state[dev] = if drain { DeviceState::Draining } else { DeviceState::Down };
+        if drain {
+            // Draining: running commitments finish; only new dispatches
+            // are gated off. Nothing to roll back.
+            return;
+        }
+
+        // --- kill the commitments still running on the victim ---
+        // (`end == t` counts as finished: the failure strikes after the
+        // instant's completions, matching the event tie-break order.)
+        let fault = self.fault.as_mut().expect("checked above");
+        let mut killed: Vec<Commit> = Vec::new();
+        fault.commits.retain(|c| {
+            if c.end <= t {
+                return false; // retired: can never be killed
+            }
+            if c.dev == dev {
+                killed.push(*c);
+                return false;
+            }
+            true
+        });
+        for c in &killed {
+            let job = &mut self.jobs[c.job];
+            // Work done before the failure is wasted; work that was
+            // committed but never ran is simply un-executed.
+            let done = (t - c.start).max(0.0);
+            self.stats.wasted_work_ms += done;
+            self.stats.executed_work_ms -= c.exec - done;
+            self.stats.tasks_reexecuted += 1;
+            job.device_busy[c.dev] -= c.exec;
+            job.tasks_per_device[c.dev] -= 1;
+            job.finish[c.task] = 0.0;
+            job.assignments[c.task] = usize::MAX;
+            // The killed task's output is unwritten again.
+            self.dir.clear(job.out[c.task]);
+            if self.config.collect_trace {
+                job.trace.retain(|ev| ev.task != c.task);
+            }
+            scheduler.on_task_killed(c.job, c.task);
+        }
+        // The device's memory died with it: every copy it held is gone;
+        // sole copies fall back to the host checkpoint and are re-fetched
+        // as ordinary transfers on next use.
+        self.dir.invalidate_node(self.platform.memory_node(dev));
+        // The device restarts clean when it comes back.
+        for w in &mut self.worker_free[dev] {
+            *w = up_at;
+        }
+
+        // --- re-enqueue the killed frontier, job by job ---
+        let mut affected: Vec<usize> = killed.iter().map(|c| c.job).collect();
+        affected.sort_unstable();
+        affected.dedup();
+        for &jid in &affected {
+            let job_killed: Vec<usize> =
+                killed.iter().filter(|c| c.job == jid).map(|c| c.task).collect();
+            self.requeue_job(jid, &job_killed, t);
+        }
+        let replans = scheduler.on_device_down(dev);
+        self.stats.recovery_replans += replans as u64;
+    }
+
+    /// `EV_DEV_UP`: reopen the device; stochastic mode draws the next
+    /// failure, and the policy may replan around the recovered capacity.
+    fn device_up(&mut self, scheduler: &mut dyn Scheduler, dev: usize, t: f64) {
+        self.device_state[dev] = DeviceState::Up;
+        for w in &mut self.worker_free[dev] {
+            *w = w.max(t);
+        }
+        let fault = self.fault.as_mut().expect("device events require a fault state");
+        if fault.spec.scripted.is_empty() {
+            let gap = exp_mean_ms(&mut fault.rng, fault.spec.mtbf_ms);
+            self.heap.push(Reverse((Ord64(t + gap), EV_DEV_DOWN, dev, 0, 0)));
+        }
+        let replans = scheduler.on_device_up(dev);
+        self.stats.recovery_replans += replans as u64;
+    }
+
+    /// After a kill, restore job `jid`'s dependency frontier: recompute
+    /// indegrees and ready times over the *done* predecessor set, bump
+    /// epochs so stale ready/drain events die in the heap, and push
+    /// fresh `EV_READY`s (delayed by the re-fetch charge) for killed
+    /// tasks whose inputs are all still intact.
+    fn requeue_job(&mut self, jid: usize, killed_tasks: &[usize], t: f64) {
+        let refetch = self.fault.as_ref().map(|f| f.spec.refetch_ms).unwrap_or(0.0);
+        let mut pushes: Vec<(f64, usize, u64)> = Vec::new();
+        let job = &mut self.jobs[jid];
+        let dag = job.dag;
+        let was_complete = job.remaining == 0;
+        let mut remaining = 0usize;
+        for v in 0..dag.node_count() {
+            if job.assignments[v] != usize::MAX {
+                continue; // done (and not killed): untouched
+            }
+            remaining += 1;
+            let mut indeg = 0usize;
+            let mut ready = job.admit_ms;
+            for &e in dag.in_edges(v) {
+                let u = dag.edge(e).src;
+                if job.assignments[u] == usize::MAX {
+                    indeg += 1;
+                } else {
+                    ready = ready.max(job.finish[u]);
+                }
+            }
+            job.ready_time[v] = ready;
+            if killed_tasks.contains(&v) {
+                job.task_epoch[v] += 1;
+                job.indeg[v] = indeg;
+                if indeg == 0 {
+                    pushes.push((ready.max(t) + refetch, v, job.task_epoch[v]));
+                }
+            } else if indeg != job.indeg[v] {
+                // A predecessor was killed from under this never-run
+                // task: its pending EV_READY (if any) is now premature.
+                job.task_epoch[v] += 1;
+                job.indeg[v] = indeg;
+            }
+        }
+        job.remaining = remaining;
+        if was_complete && remaining > 0 {
+            // Revoke the drain: the job is back in flight. (Sound: its
+            // pending EV_DRAIN sits at complete_ms >= the killed end
+            // > t, so the stale event is still in the heap.) Any sink
+            // write-back already on the bus stays ledgered — a wasted
+            // transfer, like the wasted compute.
+            job.drain_epoch += 1;
+            job.complete_ms = 0.0;
+        }
+        for (at, v, ep) in pushes {
+            self.heap.push(Reverse((Ord64(at), EV_READY, jid, v, ep)));
+        }
     }
 
     /// Drain the event heap, then assemble per-job reports in job order.
-    fn run(mut self, scheduler: &mut dyn Scheduler) -> Vec<(RunReport, JobTiming)> {
-        while let Some(Reverse((Ord64(t), kind, j, v))) = self.heap.pop() {
+    fn run(mut self, scheduler: &mut dyn Scheduler) -> (Vec<(RunReport, JobTiming)>, RecoveryStats) {
+        while let Some(Reverse((Ord64(t), kind, j, v, epoch))) = self.heap.pop() {
             match kind {
+                EV_DEV_DOWN => self.device_down(scheduler, j, v == 1, t),
+                EV_DEV_UP => self.device_up(scheduler, j, t),
                 EV_ARRIVAL => {
                     if self.inflight < self.queue {
                         self.admit(scheduler, j, t);
                     } else {
-                        self.pending.push(j);
-                        // Backpressure: schedule the wait-budget expiry.
-                        // The event is a no-op if the job admits first.
                         let budget = self.jobs[j].budget_ms;
-                        if budget.is_finite() {
-                            self.heap.push(Reverse((Ord64(t + budget), EV_REJECT, j, 0)));
+                        // Predictive rejection (admit=reject only): if
+                        // the pending queue's summed work estimate
+                        // already implies the budget cannot be met,
+                        // reject at arrival instead of queueing a
+                        // doomed job. The expiry event stays as the
+                        // backstop for jobs this heuristic lets in.
+                        let doomed = self.admit_policy == AdmissionPolicy::Reject
+                            && budget.is_finite()
+                            && self.pending.iter().map(|&p| self.jobs[p].est_work_ms).sum::<f64>()
+                                > budget;
+                        if doomed {
+                            let job = &mut self.jobs[j];
+                            job.rejected = true;
+                            job.remaining = 0;
+                            job.admit_ms = t;
+                            job.complete_ms = t;
+                            self.completed += 1;
+                        } else {
+                            self.pending.push(j);
+                            // Backpressure: schedule the wait-budget
+                            // expiry. The event is a no-op if the job
+                            // admits first.
+                            if budget.is_finite() {
+                                self.heap.push(Reverse((Ord64(t + budget), EV_REJECT, j, 0, 0)));
+                            }
                         }
                     }
                 }
                 EV_DRAIN => {
-                    self.inflight -= 1;
-                    if let Some(next) = self.pop_pending() {
-                        self.admit(scheduler, next, t);
+                    // A stale epoch means a failure revoked this
+                    // completion; the job re-drains later.
+                    if epoch == self.jobs[j].drain_epoch {
+                        self.inflight -= 1;
+                        self.completed += 1;
+                        if let Some(next) = self.pop_pending() {
+                            self.admit(scheduler, next, t);
+                        }
                     }
                 }
                 EV_REJECT => {
@@ -541,9 +886,19 @@ impl<'a> EngineCore<'a> {
                         job.remaining = 0;
                         job.admit_ms = t;
                         job.complete_ms = t;
+                        self.completed += 1;
                     }
                 }
-                _ => self.dispatch(scheduler, j, v, t),
+                _ => {
+                    if epoch == self.jobs[j].task_epoch[v] {
+                        self.dispatch(scheduler, j, v, t);
+                    }
+                }
+            }
+            // A fault stream's device events regenerate forever; stop
+            // once every job has drained or been rejected.
+            if self.fault.is_some() && self.completed == self.jobs.len() {
+                break;
             }
         }
         scheduler.on_drain();
@@ -554,7 +909,9 @@ impl<'a> EngineCore<'a> {
                 job.remaining
             );
         }
-        self.jobs
+        let stats = self.stats;
+        let reports = self
+            .jobs
             .into_iter()
             .map(|job| {
                 (
@@ -584,12 +941,14 @@ impl<'a> EngineCore<'a> {
                     },
                 )
             })
-            .collect()
+            .collect();
+        (reports, stats)
     }
 }
 
 /// Run `inputs` through one engine core with admission window `queue`
-/// ordered by `admit_policy`.
+/// ordered by `admit_policy`; the second return is the run's recovery
+/// accounting (all zeros without a fault spec).
 pub(crate) fn run_jobs<'a>(
     inputs: Vec<JobInput<'a>>,
     scheduler: &mut dyn Scheduler,
@@ -598,7 +957,7 @@ pub(crate) fn run_jobs<'a>(
     config: &'a SimConfig,
     queue: usize,
     admit_policy: AdmissionPolicy,
-) -> Vec<(RunReport, JobTiming)> {
+) -> (Vec<(RunReport, JobTiming)>, RecoveryStats) {
     EngineCore::new(inputs, platform, model, config, queue, admit_policy).run(scheduler)
 }
 
@@ -636,6 +995,7 @@ pub fn simulate_with_plan(
     let inputs = vec![JobInput::plain(dag, plan, 0.0, build_ns)];
     let (report, _) =
         run_jobs(inputs, scheduler, platform, model, config, 1, AdmissionPolicy::Fifo)
+            .0
             .pop()
             .expect("one job in, one report out");
     report
@@ -697,9 +1057,13 @@ pub fn simulate_open_qos(
     let qos_of = |i: usize| qos.get(i).copied().unwrap_or_default();
     let mut session = SessionReport::new(scheduler.name());
     session.class_names = class_names.to_vec();
+    let mut stats = RecoveryStats::default();
     match stream.arrival.submit_times_ms(dags.len()) {
         // Closed loop: sequential fresh cores, back-to-back clock.
-        // Admission never queues, so QoS only tags the timings.
+        // Admission never queues, so QoS only tags the timings. With a
+        // fault spec, each job sees its own fresh fault schedule (the
+        // per-job engine restarts the failure clocks) and the recovery
+        // counters accumulate across jobs.
         None => {
             let mut clock = 0.0f64;
             for (i, dag) in dags.iter().enumerate() {
@@ -707,7 +1071,7 @@ pub fn simulate_open_qos(
                 let (plan, hit, build_ns) =
                     cache.get_or_build(key, || scheduler.build_plan(dag, platform, model));
                 let inputs = vec![JobInput::plain(dag, plan, 0.0, build_ns)];
-                let (mut report, _) = run_jobs(
+                let (results, job_stats) = run_jobs(
                     inputs,
                     scheduler,
                     platform,
@@ -715,9 +1079,14 @@ pub fn simulate_open_qos(
                     config,
                     1,
                     AdmissionPolicy::Fifo,
-                )
-                .pop()
-                .expect("one job in, one report out");
+                );
+                let (mut report, _) =
+                    results.into_iter().next().expect("one job in, one report out");
+                stats.failures_injected += job_stats.failures_injected;
+                stats.tasks_reexecuted += job_stats.tasks_reexecuted;
+                stats.wasted_work_ms += job_stats.wasted_work_ms;
+                stats.executed_work_ms += job_stats.executed_work_ms;
+                stats.recovery_replans += job_stats.recovery_replans;
                 // Tag and shift the trace onto the session clock so the
                 // merged timeline agrees with the job timings.
                 for ev in &mut report.trace {
@@ -759,7 +1128,7 @@ pub fn simulate_open_qos(
                 });
                 hits.push(hit);
             }
-            let results = run_jobs(
+            let (results, run_stats) = run_jobs(
                 inputs,
                 scheduler,
                 platform,
@@ -768,11 +1137,21 @@ pub fn simulate_open_qos(
                 stream.queue,
                 stream.admit,
             );
+            stats = run_stats;
             for ((report, timing), hit) in results.into_iter().zip(hits) {
                 session.push_timed(report, hit, timing);
             }
         }
     }
+    session.failures_injected = stats.failures_injected;
+    session.tasks_reexecuted = stats.tasks_reexecuted;
+    session.wasted_work_ms = stats.wasted_work_ms;
+    session.executed_work_ms = stats.executed_work_ms;
+    session.recovery_replans = stats.recovery_replans;
+    // Useful work = the busy time that survived to the drain; with a
+    // fault stream `executed == useful + wasted` balances exactly.
+    session.useful_work_ms =
+        session.jobs.iter().map(|r| r.device_busy_ms.iter().sum::<f64>()).sum();
     session
 }
 

@@ -30,7 +30,12 @@
 //!   initial buffers (paper §III.B);
 //! * `arrival=closed` reproduces the pre-open-system engine bit-for-bit:
 //!   each job runs back-to-back on an otherwise-idle platform (golden
-//!   tests pin this).
+//!   tests pin this);
+//! * device failures/drains are injected from a [`FaultSpec`]
+//!   ([`SimConfig::fault`]): in-flight work on the victim is killed and
+//!   re-dispatched, coherence rolls back to the host checkpoint, and
+//!   [`SessionReport`] grows recovery metrics (wasted work, goodput).
+//!   With no spec the engine is bit-for-bit the failure-free one.
 
 pub mod engine;
 pub mod report;
@@ -41,4 +46,7 @@ pub use engine::{
     simulate_with_plan, SimConfig,
 };
 pub use report::{ClassReport, JobTiming, RunReport, SessionReport, TraceEvent};
-pub use stream::{AdmissionPolicy, ArrivalProcess, JobQos, StreamConfig, DEFAULT_QUEUE};
+pub use stream::{
+    AdmissionPolicy, ArrivalProcess, FaultSpec, JobQos, ScriptedFault, StreamConfig,
+    DEFAULT_QUEUE,
+};

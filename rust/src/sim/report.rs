@@ -198,6 +198,28 @@ pub struct SessionReport {
     pub cache_hits: u64,
     /// Jobs whose plan had to be built.
     pub cache_misses: u64,
+
+    // --- recovery metrics (device failure injection) ----------------
+    //
+    // All zero without a fault spec. The work-accounting identity the
+    // engine maintains is `executed == useful + wasted`: every
+    // committed millisecond either survives to the drain (useful) or is
+    // rolled back by a kill (wasted).
+    /// Device failure/drain events injected into the session.
+    pub failures_injected: u64,
+    /// Task executions killed by a failure and re-dispatched.
+    pub tasks_reexecuted: u64,
+    /// Milliseconds of execution destroyed by kills (work done before
+    /// the failure struck).
+    pub wasted_work_ms: f64,
+    /// Milliseconds of execution that survived to job completion.
+    pub useful_work_ms: f64,
+    /// Total committed execution milliseconds, kills included.
+    pub executed_work_ms: f64,
+    /// Forced replans performed by the policy's
+    /// [`crate::sched::Scheduler::on_device_down`] /
+    /// [`crate::sched::Scheduler::on_device_up`] hooks.
+    pub recovery_replans: u64,
 }
 
 impl SessionReport {
@@ -347,6 +369,17 @@ impl SessionReport {
         } else {
             self.completed().count() as f64 / (self.span_ms / 1000.0)
         }
+    }
+
+    /// Goodput in jobs per second: throughput discounted by the wasted
+    /// fraction of the executed work (`throughput × useful / executed`).
+    /// Equal to [`SessionReport::throughput_jps`] in failure-free runs.
+    pub fn goodput_jps(&self) -> f64 {
+        let total = self.useful_work_ms + self.wasted_work_ms;
+        if total <= 0.0 {
+            return self.throughput_jps();
+        }
+        self.throughput_jps() * self.useful_work_ms / total
     }
 
     /// Fraction of deadline-carrying jobs that completed within their
@@ -710,6 +743,26 @@ mod tests {
         assert_eq!((c.jobs, c.rejected), (2, 1));
         assert!(!served.rejected && served.deadline_hit());
         assert!(!rejected.deadline_hit());
+    }
+
+    #[test]
+    fn goodput_discounts_wasted_work() {
+        let mut s = SessionReport::new("test");
+        s.push_timed(
+            job(10.0, 0),
+            false,
+            JobTiming { submit_ms: 0.0, admit_ms: 0.0, complete_ms: 10.0, ..Default::default() },
+        );
+        // Failure-free defaults: goodput == throughput.
+        assert_eq!(s.failures_injected, 0);
+        assert_eq!(s.wasted_work_ms, 0.0);
+        assert!((s.goodput_jps() - s.throughput_jps()).abs() < 1e-12);
+        // A third of the executed work was wasted.
+        s.useful_work_ms = 10.0;
+        s.wasted_work_ms = 5.0;
+        s.executed_work_ms = 15.0;
+        assert!((s.goodput_jps() - s.throughput_jps() * 10.0 / 15.0).abs() < 1e-12);
+        assert!(s.goodput_jps() < s.throughput_jps());
     }
 
     #[test]

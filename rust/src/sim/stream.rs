@@ -29,6 +29,28 @@
 //!   the session report) instead of admitted, so no job is ever
 //!   admitted later than `submit + budget`.
 //!
+//! # Fault model
+//!
+//! A [`FaultSpec`] makes the *device set* an event stream too: devices
+//! fail (in-flight tasks killed and rolled back, coherence entries
+//! invalidated, tasks re-dispatched) or drain (running tasks finish,
+//! no new dispatches) and later come back. Two grammars share the
+//! `fault:` prefix:
+//!
+//! * **Stochastic** — `"fault:mtbf=500,mttr=80,dist=exp,seed=9"`:
+//!   exponential time-between-failures (mean `mtbf` ms) and outage
+//!   durations (mean `mttr` ms) drawn per victim device from a seeded
+//!   [`Pcg32`], so a `(spec, platform)` pair always produces the same
+//!   failure schedule. `mtbf=inf` (the default) disables injection and
+//!   is bit-identical to running with no fault spec at all.
+//! * **Scripted** — `"fault:at=120:dev=1:down=50"`: deterministic
+//!   windows, `;`-separated; `drain=<ms>` in place of `down=<ms>`
+//!   drains instead of killing. Device 0 (the host, which owns the
+//!   checkpoint memory) can never fail.
+//!
+//! Both accept `refetch=<ms>`, a fixed re-fetch penalty added to every
+//! killed task's re-ready time. See [`FaultSpec::from_spec`].
+//!
 //! Randomized processes draw from the in-tree deterministic
 //! [`Pcg32`], so a `(process, seed, n)` triple always produces the same
 //! arrival trace — the property every reproducibility test leans on.
@@ -336,6 +358,222 @@ impl StreamConfig {
     }
 }
 
+/// One deterministic fault window of a scripted [`FaultSpec`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScriptedFault {
+    /// When the device goes down/draining (ms since session start).
+    pub at_ms: f64,
+    /// Victim device. Device 0 (the host) owns the checkpoint memory
+    /// and can never fail.
+    pub dev: usize,
+    /// Outage duration; the device comes back at `at_ms + down_ms`.
+    pub down_ms: f64,
+    /// Drain instead of fail: running tasks finish, nothing is killed
+    /// or invalidated, but no new task starts until the up event.
+    pub drain: bool,
+}
+
+/// Device-failure scenario for the open engine (see the module-level
+/// *Fault model* section for the two spec grammars). The default is
+/// inert — `mtbf=inf`, no scripted windows — which the engine treats
+/// exactly like running without a fault spec.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    /// Mean time between failures per victim device (ms); exponential
+    /// draws. `f64::INFINITY` = no stochastic injection.
+    pub mtbf_ms: f64,
+    /// Mean time to repair (ms); exponential outage durations.
+    pub mttr_ms: f64,
+    /// PCG32 seed driving both gap and outage draws.
+    pub seed: u64,
+    /// Fixed re-fetch penalty (ms) added to every killed task's
+    /// re-ready time (checkpoint restore cost).
+    pub refetch_ms: f64,
+    /// Deterministic fault windows; non-empty = scripted mode (the
+    /// stochastic fields are ignored except `refetch_ms`).
+    pub scripted: Vec<ScriptedFault>,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            mtbf_ms: f64::INFINITY,
+            mttr_ms: 80.0,
+            seed: 9,
+            refetch_ms: 0.0,
+            scripted: Vec::new(),
+        }
+    }
+}
+
+impl FaultSpec {
+    /// Does this spec inject nothing? An inert spec is bit-identical to
+    /// running the engine with no fault spec at all (pinned by tests).
+    pub fn is_inert(&self) -> bool {
+        self.scripted.is_empty() && !self.mtbf_ms.is_finite()
+    }
+
+    /// Parse a fault spec. Two grammars behind the `fault:` prefix:
+    ///
+    /// ```text
+    /// stochastic := "fault:" key "=" value { "," key "=" value }
+    ///    keys    := mtbf = mean ms between failures (default inf = off)
+    ///               mttr = mean outage ms           (default 80)
+    ///               dist = exp                      (the only one)
+    ///               seed = PRNG seed                (default 9)
+    ///               refetch = ms re-fetch penalty   (default 0)
+    /// scripted   := "fault:" window { ";" window } [ ";refetch=" ms ]
+    ///    window  := "at=" ms ":dev=" d ":down=" ms   (kill)
+    ///             | "at=" ms ":dev=" d ":drain=" ms  (drain)
+    /// ```
+    ///
+    /// Examples: `"fault:mtbf=500,mttr=80,seed=9"`,
+    /// `"fault:at=120:dev=1:down=50;at=300:dev=1:drain=40"`. Unknown
+    /// keys, `dev=0` (the host cannot fail), and overlapping windows on
+    /// one device are hard errors.
+    pub fn from_spec(spec: &str) -> Result<FaultSpec> {
+        let params_src = match spec.trim().split_once(':') {
+            Some((name, rest)) => {
+                if name.trim() != "fault" {
+                    bail!("fault spec must start with \"fault:\", got {spec:?}");
+                }
+                rest
+            }
+            None if spec.trim() == "fault" || spec.trim().is_empty() => "",
+            None => spec,
+        };
+        if params_src.contains("at=") {
+            return Self::parse_scripted(params_src)
+                .with_context(|| format!("parsing fault spec {spec:?}"));
+        }
+        let mut p = SchedParams::parse(params_src)
+            .with_context(|| format!("parsing fault spec {spec:?}"))?;
+        let mtbf_ms = p.f64("mtbf", f64::INFINITY)?;
+        let mttr_ms = p.f64("mttr", 80.0)?;
+        if let Some(dist) = p.get("dist") {
+            if dist != "exp" {
+                bail!("unknown dist {dist:?} (only exp)");
+            }
+        }
+        let seed = p.u64("seed", 9)?;
+        let refetch_ms = p.f64("refetch", 0.0)?;
+        p.finish().with_context(|| format!("parsing fault spec {spec:?}"))?;
+        if mtbf_ms <= 0.0 {
+            bail!("mtbf must be > 0 ms (use mtbf=inf to disable)");
+        }
+        if mtbf_ms.is_finite() && !(mttr_ms > 0.0) {
+            bail!("mttr must be > 0 ms");
+        }
+        if refetch_ms < 0.0 {
+            bail!("refetch must be >= 0 ms");
+        }
+        Ok(FaultSpec { mtbf_ms, mttr_ms, seed, refetch_ms, scripted: Vec::new() })
+    }
+
+    fn parse_scripted(src: &str) -> Result<FaultSpec> {
+        let mut out = FaultSpec::default();
+        for group in src.split(';') {
+            let group = group.trim();
+            if group.is_empty() {
+                bail!("empty fault window (stray ';')");
+            }
+            // A lone `refetch=R` window-slot configures the penalty.
+            if let Some(v) = group.strip_prefix("refetch=") {
+                out.refetch_ms =
+                    v.trim().parse().with_context(|| format!("bad refetch {v:?}"))?;
+                if out.refetch_ms < 0.0 {
+                    bail!("refetch must be >= 0 ms");
+                }
+                continue;
+            }
+            let (mut at, mut dev, mut down, mut drain) = (None, None, None, false);
+            for kv in group.split(':') {
+                let (k, v) = kv
+                    .split_once('=')
+                    .with_context(|| format!("expected key=value in fault window, got {kv:?}"))?;
+                let v = v.trim();
+                match k.trim() {
+                    "at" => at = Some(v.parse::<f64>().with_context(|| format!("bad at {v:?}"))?),
+                    "dev" => {
+                        dev = Some(v.parse::<usize>().with_context(|| format!("bad dev {v:?}"))?)
+                    }
+                    "down" | "drain" => {
+                        if down.is_some() {
+                            bail!("fault window {group:?} has both down= and drain=");
+                        }
+                        drain = k.trim() == "drain";
+                        down =
+                            Some(v.parse::<f64>().with_context(|| format!("bad {k} {v:?}"))?);
+                    }
+                    other => bail!("unknown fault window key {other:?} (at | dev | down | drain)"),
+                }
+            }
+            let at_ms = at.context("fault window missing at=")?;
+            let dev = dev.context("fault window missing dev=")?;
+            let down_ms = down.context("fault window missing down= (or drain=)")?;
+            if at_ms < 0.0 {
+                bail!("at must be >= 0 ms");
+            }
+            if dev == 0 {
+                bail!("device 0 (host) cannot fail — it owns the checkpoint memory");
+            }
+            if !(down_ms > 0.0) {
+                bail!("down/drain duration must be > 0 ms");
+            }
+            out.scripted.push(ScriptedFault { at_ms, dev, down_ms, drain });
+        }
+        if out.scripted.is_empty() {
+            bail!("scripted fault spec has no windows");
+        }
+        // Windows on one device must be disjoint and strictly separated,
+        // so every down event lands on an Up device.
+        let mut by_dev: Vec<&ScriptedFault> = out.scripted.iter().collect();
+        by_dev.sort_by(|a, b| (a.dev, a.at_ms).partial_cmp(&(b.dev, b.at_ms)).unwrap());
+        for w in by_dev.windows(2) {
+            if w[0].dev == w[1].dev && w[1].at_ms <= w[0].at_ms + w[0].down_ms {
+                bail!(
+                    "fault windows overlap on device {}: [{}, {}] then at={}",
+                    w[0].dev,
+                    w[0].at_ms,
+                    w[0].at_ms + w[0].down_ms,
+                    w[1].at_ms
+                );
+            }
+        }
+        Ok(out)
+    }
+
+    /// Render back to the canonical spec string (bench JSON rows,
+    /// diagnostics); `from_spec` round-trips it.
+    pub fn spec_string(&self) -> String {
+        if !self.scripted.is_empty() {
+            let windows: Vec<String> = self
+                .scripted
+                .iter()
+                .map(|f| {
+                    format!(
+                        "at={}:dev={}:{}={}",
+                        f.at_ms,
+                        f.dev,
+                        if f.drain { "drain" } else { "down" },
+                        f.down_ms
+                    )
+                })
+                .collect();
+            let mut s = format!("fault:{}", windows.join(";"));
+            if self.refetch_ms != 0.0 {
+                s.push_str(&format!(";refetch={}", self.refetch_ms));
+            }
+            return s;
+        }
+        let mut s = format!("fault:mtbf={},mttr={},seed={}", self.mtbf_ms, self.mttr_ms, self.seed);
+        if self.refetch_ms != 0.0 {
+            s.push_str(&format!(",refetch={}", self.refetch_ms));
+        }
+        s
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -471,6 +709,75 @@ mod tests {
         assert!(
             StreamConfig::from_spec("stream:arrival=bursty,rate=10,burst=0").is_err(),
             "zero burst"
+        );
+    }
+
+    #[test]
+    fn fault_spec_stochastic_round_trips() {
+        let f = FaultSpec::from_spec("fault:mtbf=500,mttr=80,dist=exp,seed=9").unwrap();
+        assert_eq!(f.mtbf_ms, 500.0);
+        assert_eq!(f.mttr_ms, 80.0);
+        assert_eq!(f.seed, 9);
+        assert_eq!(f.refetch_ms, 0.0);
+        assert!(f.scripted.is_empty());
+        assert!(!f.is_inert());
+        assert_eq!(FaultSpec::from_spec(&f.spec_string()).unwrap(), f);
+
+        let g = FaultSpec::from_spec("mtbf=200,mttr=40,seed=3,refetch=2.5").unwrap();
+        assert_eq!(g.refetch_ms, 2.5);
+        assert_eq!(FaultSpec::from_spec(&g.spec_string()).unwrap(), g);
+    }
+
+    #[test]
+    fn fault_spec_inert_forms() {
+        assert!(FaultSpec::default().is_inert());
+        assert!(FaultSpec::from_spec("fault").unwrap().is_inert());
+        assert!(FaultSpec::from_spec("").unwrap().is_inert());
+        let inf = FaultSpec::from_spec("fault:mtbf=inf,mttr=80,seed=9").unwrap();
+        assert!(inf.is_inert(), "mtbf=inf injects nothing");
+        assert_eq!(FaultSpec::from_spec(&inf.spec_string()).unwrap(), inf);
+    }
+
+    #[test]
+    fn fault_spec_scripted_round_trips() {
+        let f = FaultSpec::from_spec("fault:at=120:dev=1:down=50").unwrap();
+        assert_eq!(
+            f.scripted,
+            vec![ScriptedFault { at_ms: 120.0, dev: 1, down_ms: 50.0, drain: false }]
+        );
+        assert!(!f.is_inert());
+        assert_eq!(FaultSpec::from_spec(&f.spec_string()).unwrap(), f);
+
+        let g =
+            FaultSpec::from_spec("fault:at=120:dev=1:down=50;at=300:dev=1:drain=40;refetch=2")
+                .unwrap();
+        assert_eq!(g.scripted.len(), 2);
+        assert!(g.scripted[1].drain);
+        assert_eq!(g.refetch_ms, 2.0);
+        assert_eq!(FaultSpec::from_spec(&g.spec_string()).unwrap(), g);
+    }
+
+    #[test]
+    fn fault_spec_errors_are_loud() {
+        assert!(FaultSpec::from_spec("failure:mtbf=1").is_err(), "wrong name");
+        assert!(FaultSpec::from_spec("fault:mtbf=0").is_err(), "zero mtbf");
+        assert!(FaultSpec::from_spec("fault:mtbf=500,mttr=0").is_err(), "zero mttr");
+        assert!(FaultSpec::from_spec("fault:mtbf=500,dist=weibull").is_err(), "unknown dist");
+        assert!(FaultSpec::from_spec("fault:bogus=1").is_err(), "unknown key");
+        assert!(FaultSpec::from_spec("fault:at=10:dev=0:down=5").is_err(), "host cannot fail");
+        assert!(FaultSpec::from_spec("fault:at=10:dev=1").is_err(), "missing duration");
+        assert!(FaultSpec::from_spec("fault:at=10:dev=1:down=0").is_err(), "zero duration");
+        assert!(
+            FaultSpec::from_spec("fault:at=10:dev=1:down=5:drain=5").is_err(),
+            "down and drain together"
+        );
+        assert!(
+            FaultSpec::from_spec("fault:at=10:dev=1:down=50;at=30:dev=1:down=5").is_err(),
+            "overlapping windows on one device"
+        );
+        assert!(
+            FaultSpec::from_spec("fault:at=10:dev=2:down=50;at=30:dev=1:down=5").is_ok(),
+            "windows on different devices may overlap"
         );
     }
 }
