@@ -1678,6 +1678,647 @@ DEFAULT_FAULT = dict(
 )
 
 
+# ------------------------------------------------- scenario replication
+# Mirror of rust/src/scenario/ (keep in sync): declarative scenario
+# files, derived per-repetition seeds, and the replication statistics
+# (Welford mean/stddev + Student-t 95% CI) behind BENCH_scenarios.json.
+
+# Mirror of util::stats::t95: exact df 1..=30, conventional steps after.
+T95_TABLE = [
+    12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228,
+    2.201, 2.179, 2.160, 2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086,
+    2.080, 2.074, 2.069, 2.064, 2.060, 2.056, 2.052, 2.048, 2.045, 2.042,
+]
+
+
+def t95(df):
+    if df == 0:
+        return math.inf
+    if df <= 30:
+        return T95_TABLE[df - 1]
+    if df <= 40:
+        return 2.021
+    if df <= 60:
+        return 2.000
+    if df <= 120:
+        return 1.980
+    return 1.960
+
+
+class Welford:
+    """Mirror of util::stats::Welford (push + Chan merge)."""
+
+    def __init__(self):
+        self.n = 0
+        self.mean = 0.0
+        self.m2 = 0.0
+
+    def push(self, x):
+        self.n += 1
+        d = x - self.mean
+        self.mean += d / self.n
+        self.m2 += d * (x - self.mean)
+
+    def merge(self, other):
+        if other.n == 0:
+            return
+        if self.n == 0:
+            self.n, self.mean, self.m2 = other.n, other.mean, other.m2
+            return
+        n = self.n + other.n
+        d = other.mean - self.mean
+        mean = self.mean + d * (other.n / n)
+        self.m2 = self.m2 + other.m2 + d * d * (self.n * other.n / n)
+        self.n, self.mean = n, mean
+
+    def variance(self):
+        return 0.0 if self.n < 2 else self.m2 / (self.n - 1)
+
+    def stddev(self):
+        return math.sqrt(self.variance())
+
+    def ci95_half_width(self):
+        if self.n < 2:
+            return 0.0
+        return t95(self.n - 1) * self.stddev() / math.sqrt(self.n)
+
+
+# Mirror of scenario::runner's seed derivation: repetition 0 keeps the
+# base seeds verbatim; later reps open a PCG32 on a (rep, axis) stream.
+REP_STREAM = 0x5C3AAB5E
+WORKLOAD_AXIS, ARRIVAL_AXIS, FAULT_AXIS = 0, 1, 2
+
+
+def rep_seed(base, rep, axis):
+    if rep == 0:
+        return base
+    return pm.Pcg32(base, REP_STREAM ^ (rep << 8) ^ axis).next_u64()
+
+
+def parse_raw_config(src):
+    """Mirror of config::parse_raw: [section] / key = value / # comments;
+    duplicate keys within a section are hard errors."""
+    out = {}
+    section = ""
+    for lineno, raw in enumerate(src.splitlines()):
+        line = raw.split("#", 1)[0].strip()
+        if not line:
+            continue
+        if line.startswith("["):
+            if not line.endswith("]"):
+                raise ValueError(f"line {lineno + 1}: bad section header")
+            section = line[1:-1].strip()
+            out.setdefault(section, {})
+            continue
+        if "=" not in line:
+            raise ValueError(f"line {lineno + 1}: expected key = value")
+        k, v = line.split("=", 1)
+        key = k.strip()
+        sec = out.setdefault(section, {})
+        if key in sec:
+            raise ValueError(
+                f"line {lineno + 1}: duplicate key {key!r} in section [{section}]"
+            )
+        sec[key] = v.strip().strip('"')
+    return out
+
+
+def _parse_params(src):
+    out = {}
+    for part in src.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        if "=" not in part:
+            raise ValueError(f"expected key=value, got {part!r}")
+        k, v = part.split("=", 1)
+        out[k.strip()] = v.strip()
+    return out
+
+
+def parse_stream_spec(spec):
+    """Mirror of StreamConfig::from_spec (the subset scenarios use)."""
+    s = spec.strip()
+    if ":" in s:
+        name, src = s.split(":", 1)
+        if name.strip() != "stream":
+            raise ValueError(f'stream spec must start with "stream:", got {spec!r}')
+    elif s in ("stream", ""):
+        src = ""
+    else:
+        src = s
+    p = _parse_params(src)
+    arrival = p.pop("arrival", "closed")
+    queue = int(p.pop("queue", 32))
+    if queue < 1:
+        raise ValueError("queue must be >= 1")
+    admit = p.pop("admit", "fifo")
+    if admit not in ("fifo", "edf", "sjf", "reject"):
+        raise ValueError(f"unknown admit {admit!r}")
+    if admit != "fifo" and arrival == "closed":
+        raise ValueError(f"admit={admit} requires timed arrivals")
+    budget = float(p.pop("budget", math.inf)) if admit == "reject" else math.inf
+    out = dict(arrival=arrival, queue=queue, admit=admit, budget=budget)
+    if arrival in ("fixed", "poisson", "bursty"):
+        out["rate"] = float(p.pop("rate"))
+        if out["rate"] <= 0.0:
+            raise ValueError(f"arrival={arrival} requires rate > 0")
+    elif arrival != "closed":
+        raise ValueError(f"unknown arrival {arrival!r}")
+    if arrival in ("poisson", "bursty"):
+        out["seed"] = int(p.pop("seed", 7))
+    if arrival == "bursty":
+        out["burst"] = int(p.pop("burst", 4))
+    if p:
+        raise ValueError(f"unknown stream keys {sorted(p)} in {spec!r}")
+    return out
+
+
+def _rust_num(v):
+    """Rust {} Display for the f64s in spec strings: integral values
+    print without the trailing .0 (220.0 -> \"220\")."""
+    if isinstance(v, float) and v == int(v) and abs(v) < 1e15:
+        return str(int(v))
+    return repr(v)
+
+
+def stream_spec_string(st):
+    """Mirror of StreamConfig::spec_string (canonical round-trip form)."""
+    a = st["arrival"]
+    if a == "closed":
+        s = "stream:arrival=closed"
+    elif a == "fixed":
+        s = f"stream:arrival=fixed,rate={_rust_num(st['rate'])},queue={st['queue']}"
+    elif a == "poisson":
+        s = (
+            f"stream:arrival=poisson,rate={_rust_num(st['rate'])},"
+            f"queue={st['queue']},seed={st['seed']}"
+        )
+    else:
+        s = (
+            f"stream:arrival=bursty,rate={_rust_num(st['rate'])},burst={st['burst']},"
+            f"queue={st['queue']},seed={st['seed']}"
+        )
+    if st["admit"] != "fifo":
+        s += f",admit={st['admit']}"
+    if math.isfinite(st["budget"]):
+        s += f",budget={_rust_num(st['budget'])}"
+    return s
+
+
+def parse_fault_spec(spec):
+    """Mirror of FaultSpec::from_spec -> the open_run fault dict."""
+    s = spec.strip()
+    if ":" in s:
+        name, src = s.split(":", 1)
+        if name.strip() != "fault":
+            raise ValueError(f'fault spec must start with "fault:", got {spec!r}')
+    elif s in ("fault", ""):
+        src = ""
+    else:
+        src = s
+    if "at=" in src:
+        out = dict(mtbf=math.inf, mttr=80.0, seed=9, refetch=0.0, scripted=[])
+        for group in src.split(";"):
+            group = group.strip()
+            if not group:
+                raise ValueError("empty fault window (stray ';')")
+            if group.startswith("refetch="):
+                out["refetch"] = float(group[len("refetch="):])
+                continue
+            at = dev = down = None
+            drain = False
+            for kv in group.split(":"):
+                k, v = kv.split("=", 1)
+                k, v = k.strip(), v.strip()
+                if k == "at":
+                    at = float(v)
+                elif k == "dev":
+                    dev = int(v)
+                elif k in ("down", "drain"):
+                    drain = k == "drain"
+                    down = float(v)
+                else:
+                    raise ValueError(f"unknown fault window key {k!r}")
+            if at is None or dev is None or down is None:
+                raise ValueError(f"incomplete fault window {group!r}")
+            if dev == 0:
+                raise ValueError("device 0 (host) cannot fail")
+            out["scripted"].append((at, dev, down, drain))
+        return out
+    p = _parse_params(src)
+    out = dict(
+        mtbf=float(p.pop("mtbf", math.inf)),
+        mttr=float(p.pop("mttr", 80.0)),
+        seed=int(p.pop("seed", 9)),
+        refetch=float(p.pop("refetch", 0.0)),
+        scripted=[],
+    )
+    p.pop("dist", None)
+    if p:
+        raise ValueError(f"unknown fault keys {sorted(p)} in {spec!r}")
+    return out
+
+
+def fault_spec_string(f):
+    """Mirror of FaultSpec::spec_string (scripted form only — the one
+    scenarios commit; stochastic specs render their finite fields)."""
+    if f["scripted"]:
+        windows = ";".join(
+            f"at={_rust_num(at)}:dev={dev}:{'drain' if drain else 'down'}={_rust_num(down)}"
+            for at, dev, down, drain in f["scripted"]
+        )
+        s = f"fault:{windows}"
+        if f["refetch"] > 0.0:
+            s += f";refetch={_rust_num(f['refetch'])}"
+        return s
+    s = f"fault:mtbf={_rust_num(f['mtbf'])},mttr={_rust_num(f['mttr'])},seed={f['seed']}"
+    if f["refetch"] > 0.0:
+        s += f",refetch={_rust_num(f['refetch'])}"
+    return s
+
+
+_KERNELS = {"ma": MA, "mm": MM}
+
+
+def parse_class_mix(spec):
+    """Mirror of workloads::parse_class_mix (mirror family tuples)."""
+    if spec.strip() == "default":
+        return default_qos_mix()
+    out = []
+    for i, part in enumerate(spec.split(";")):
+        part = part.strip()
+        if not part:
+            continue
+        p = _parse_params(part)
+        fam = p.pop("family", "layered")
+        kernel = _KERNELS[p.pop("kernel", "ma")]
+        if fam == "phased":
+            family = ("phased", int(p.pop("width", 8)), int(p.pop("depth", 4)))
+        elif fam == "layered":
+            family = ("layered", int(p.pop("kernels", 24)), kernel)
+        elif fam == "chain":
+            family = ("chain", int(p.pop("len", 5)), kernel)
+        else:
+            raise ValueError(f"class {i}: unsupported family {fam!r} in the mirror")
+        cls = dict(
+            name=p.pop("name", f"class{i}"),
+            weight=float(p.pop("weight", 1.0)),
+            family=family,
+            size=int(p.pop("size", 256)),
+            prio=int(p.pop("prio", 0)),
+            deadline=float(p.pop("deadline", math.inf)),
+            budget=float(p.pop("budget", math.inf)),
+        )
+        if p:
+            raise ValueError(f"class {i}: unknown keys {sorted(p)}")
+        out.append(cls)
+    if not out:
+        raise ValueError(f"class mix {spec!r} defines no classes")
+    return out
+
+
+SCENARIO_SECTIONS = ("scenario", "platform", "workload", "stream", "fault", "sweep")
+
+
+def _parse_axis(what, value, default):
+    src = default if value is None else value
+    out = []
+    for part in src.split("|"):
+        part = part.strip()
+        if not part:
+            raise ValueError(f"{what} axis has an empty entry in {src!r}")
+        if part in out:
+            raise ValueError(f"{what} axis repeats {part!r}")
+        out.append(part)
+    return out
+
+
+def _take_section(raw, name, known):
+    keys = dict(raw.get(name, {}))
+    for k in keys:
+        if k not in known:
+            raise ValueError(f"unknown key {k!r} in [{name}]")
+    return keys
+
+
+def parse_scenario(src):
+    """Mirror of scenario::ScenarioSpec::parse."""
+    raw = parse_raw_config(src)
+    for section in raw:
+        if section == "":
+            raise ValueError("scenario files have no top-level keys")
+        if section not in SCENARIO_SECTIONS:
+            raise ValueError(f"unknown section [{section}]")
+    sc = _take_section(raw, "scenario", ("name", "jobs", "seed", "repetitions"))
+    if "name" not in sc:
+        raise ValueError("missing required [scenario] name")
+    pl = _take_section(raw, "platform", ("kind",))
+    kind = pl.get("kind", "paper")
+    if kind not in ("paper", "tri"):
+        raise ValueError(f"unknown [platform] kind {kind!r}")
+    wl = _take_section(raw, "workload", ("classes",))
+    fa = _take_section(raw, "fault", ("spec",))
+    st = _take_section(raw, "stream", ("spec",))
+    sw = _take_section(raw, "sweep", ("scheduler", "admit", "stream"))
+    if "spec" in st and "stream" in sw:
+        raise ValueError("[stream] spec and [sweep] stream are mutually exclusive")
+    if "spec" in st:
+        stream_axis = [st["spec"]]
+    elif "stream" in sw:
+        stream_axis = _parse_axis("sweep stream", sw["stream"], "")
+    else:
+        stream_axis = ["stream:arrival=closed"]
+    for s in stream_axis:
+        parse_stream_spec(s)
+    spec = dict(
+        name=sc["name"],
+        jobs=int(sc.get("jobs", 24)),
+        seed=int(sc.get("seed", 2015)),
+        repetitions=int(sc.get("repetitions", 8)),
+        tri=kind == "tri",
+        classes=parse_class_mix(wl.get("classes", "default")),
+        fault=parse_fault_spec(fa["spec"]) if "spec" in fa else None,
+        scheduler_axis=_parse_axis("sweep scheduler", sw.get("scheduler"), "gp"),
+        admit_axis=_parse_axis("sweep admit", sw.get("admit"), "fifo"),
+        stream_axis=stream_axis,
+    )
+    if spec["jobs"] <= 0 or spec["repetitions"] <= 0:
+        raise ValueError("[scenario] jobs and repetitions must be > 0")
+    scenario_cells(spec)  # validate the sweep expands
+    return spec
+
+
+def _distinguishing_tokens(axis):
+    token_sets = [[t.strip() for t in s.split(",")] for s in axis]
+    out = []
+    for i in range(len(axis)):
+        own = [
+            t
+            for t in token_sets[i]
+            if not all(j == i or t in token_sets[j] for j in range(len(axis)))
+        ]
+        out.append(",".join(own) if own else f"s{i}")
+    return out
+
+
+def scenario_cells(spec):
+    """Mirror of ScenarioSpec::cells: (stream, scheduler, admit) order."""
+    tags = _distinguishing_tokens(spec["stream_axis"])
+    cells = []
+    for si, base in enumerate(spec["stream_axis"]):
+        for sched in spec["scheduler_axis"]:
+            for admit in spec["admit_axis"]:
+                if admit == "fifo":
+                    sspec = base
+                else:
+                    if "admit=" in base:
+                        raise ValueError(f"stream spec {base!r} already pins admit=")
+                    sspec = f"{base},admit={admit}"
+                label = sched
+                if admit != "fifo" or len(spec["admit_axis"]) > 1:
+                    label += f"+{admit}"
+                if len(spec["stream_axis"]) > 1:
+                    label += f"@{tags[si]}"
+                cells.append(
+                    dict(
+                        label=label,
+                        scheduler=sched,
+                        admit=admit,
+                        stream=parse_stream_spec(sspec),
+                    )
+                )
+    return cells
+
+
+def load_scenario(name_or_path):
+    """Load a committed scenarios/NAME.toml (or an explicit path)."""
+    path = name_or_path
+    if not os.path.exists(path):
+        path = os.path.join(
+            os.path.dirname(os.path.abspath(__file__)), "..", "..",
+            "scenarios", f"{name_or_path}.toml",
+        )
+    with open(path) as fh:
+        return parse_scenario(fh.read())
+
+
+BUILTIN_SCENARIOS = ["open-poisson", "open-qos", "open-fault", "capacity-sweep"]
+
+# Mirror of sim::report::SCALAR_METRICS (same names, same order).
+SCENARIO_METRICS = [
+    "span_ms", "mean_sojourn_ms", "p50_sojourn_ms", "p95_sojourn_ms",
+    "p99_sojourn_ms", "mean_queue_delay_ms", "throughput_jps", "goodput_jps",
+    "deadline_hit_rate", "rejected_jobs", "max_concurrent_jobs",
+]
+
+
+def scenario_rep(spec, cell, rep):
+    """Mirror of scenario::runner::run_repetition: one repetition of one
+    sweep cell on seeds derived from (spec.seed, rep)."""
+    classed = job_classes(
+        spec["classes"], spec["jobs"], rep_seed(spec["seed"], rep, WORKLOAD_AXIS)
+    )
+    dags = [j["dag"] for j in classed]
+    qos = [j["qos"] for j in classed]
+    st = cell["stream"]
+    n = spec["jobs"]
+    arrival = st["arrival"]
+    if arrival == "fixed":
+        submits = fixed_times(st["rate"], n)
+    elif arrival == "poisson":
+        submits = poisson_times(st["rate"], rep_seed(st["seed"], rep, ARRIVAL_AXIS), n)
+    elif arrival == "bursty":
+        submits = bursty_times(
+            st["rate"], st["burst"], rep_seed(st["seed"], rep, ARRIVAL_AXIS), n
+        )
+    else:
+        raise ValueError("closed-loop scenarios are not mirrored (builtins are open)")
+    fault = spec["fault"]
+    if fault is not None and not fault["scripted"]:
+        # Scripted windows are the scenario's definition and replay
+        # identically; only the stochastic trace re-derives its seed.
+        fault = dict(fault, seed=rep_seed(fault["seed"], rep, FAULT_AXIS))
+    model = CalibratedModel(tri=True) if spec["tri"] else CalibratedModel()
+    workers = TRI_WORKERS if spec["tri"] else PAPER_WORKERS
+    results, _, stats = open_run(
+        dags, cell["scheduler"], submits, st["queue"],
+        model=model, workers=workers, qos=qos, admit=st["admit"],
+        stream_budget=st["budget"], fault=fault,
+    )
+    return results, stats, workers
+
+
+def scenario_rep_metrics(spec, cell, rep):
+    """One repetition reduced to the SCENARIO_METRICS dict plus the
+    per-class rows (mirror of SessionReport::scalar_metrics)."""
+    results, stats, workers = scenario_rep(spec, cell, rep)
+    m = session_metrics(results, workers)
+    useful = sum(sum(r["device_busy"]) for r in results)
+    total = useful + stats["wasted"]
+    goodput = m["throughput"] if total <= 0.0 else m["throughput"] * useful / total
+    metrics = {
+        "span_ms": m["span"],
+        "mean_sojourn_ms": m["mean_sojourn"],
+        "p50_sojourn_ms": m["p50"],
+        "p95_sojourn_ms": m["p95"],
+        "p99_sojourn_ms": m["p99"],
+        "mean_queue_delay_ms": m["mean_qdelay"],
+        "throughput_jps": m["throughput"],
+        "goodput_jps": goodput,
+        "deadline_hit_rate": m["deadline_hit_rate"],
+        "rejected_jobs": float(m["rejected"]),
+        "max_concurrent_jobs": float(m["max_concurrent"]),
+    }
+    names = [c["name"] for c in spec["classes"]]
+    classes = class_metrics(results, m["span"], len(names), names)
+    return metrics, classes
+
+
+def _stat(samples):
+    w = Welford()
+    for x in samples:
+        w.push(x)
+    return dict(n=w.n, mean=w.mean, std=w.stddev(), ci95=w.ci95_half_width())
+
+
+def run_scenario_mirror(spec, repetitions=None):
+    """Mirror of scenario::runner::run_scenario (serial; the Rust
+    fan-out merges in repetition order, so the statistics agree)."""
+    reps = max(repetitions or spec["repetitions"], 1)
+    names = [c["name"] for c in spec["classes"]]
+    cells_out = []
+    for cell in scenario_cells(spec):
+        per_rep = [scenario_rep_metrics(spec, cell, rep) for rep in range(reps)]
+        metrics = {
+            name: _stat([pr[0][name] for pr in per_rep]) for name in SCENARIO_METRICS
+        }
+        classes = []
+        for ci, cname in enumerate(names):
+            samples = [pr[1][ci] for pr in per_rep]
+            classes.append(
+                dict(
+                    name=cname,
+                    jobs=_stat([float(s["jobs"]) for s in samples]),
+                    rejected=_stat([float(s["rejected"]) for s in samples]),
+                    mean_sojourn_ms=_stat([s["mean_sojourn"] for s in samples]),
+                    p95_sojourn_ms=_stat([s["p95"] for s in samples]),
+                    deadline_hit_rate=_stat([s["deadline_hit_rate"] for s in samples]),
+                    throughput_jps=_stat([s["throughput"] for s in samples]),
+                )
+            )
+        cells_out.append(
+            dict(
+                label=cell["label"],
+                scheduler=cell["scheduler"],
+                stream=stream_spec_string(cell["stream"]),
+                fault=fault_spec_string(spec["fault"]) if spec["fault"] else None,
+                jobs=spec["jobs"],
+                repetitions=reps,
+                metrics=metrics,
+                classes=classes,
+            )
+        )
+    return dict(
+        name=spec["name"],
+        jobs=spec["jobs"],
+        seed=spec["seed"],
+        repetitions=reps,
+        scheduler_axis=spec["scheduler_axis"],
+        admit_axis=spec["admit_axis"],
+        stream_axis=spec["stream_axis"],
+        cells=cells_out,
+    )
+
+
+def scenarios_json(harness, reports):
+    """Mirror of scenario::report::scenarios_json (same shape and
+    indentation; floats via shortest-roundtrip repr)."""
+
+    def esc(s):
+        out = []
+        for ch in s:
+            if ch == "\\":
+                out.append("\\\\")
+            elif ch == '"':
+                out.append('\\"')
+            elif ord(ch) < 0x20:
+                out.append(f"\\u{ord(ch):04x}")
+            else:
+                out.append(ch)
+        return "".join(out)
+
+    def stat_json(s):
+        return (
+            f'{{"n": {s["n"]}, "mean": {_rust_num(s["mean"])}, '
+            f'"std": {_rust_num(s["std"])}, '
+            f'"ci95_lo": {_rust_num(s["mean"] - s["ci95"])}, '
+            f'"ci95_hi": {_rust_num(s["mean"] + s["ci95"])}}}'
+        )
+
+    def axis(values):
+        return ", ".join(f'"{esc(v)}"' for v in values)
+
+    lines = ["{", '  "bench": "scenarios",', f'  "harness": "{esc(harness)}",',
+             '  "scenarios": [']
+    for ri, rep in enumerate(reports):
+        lines.append("    {")
+        lines.append(f'      "name": "{esc(rep["name"])}",')
+        lines.append(f'      "jobs": {rep["jobs"]},')
+        lines.append(f'      "seed": {rep["seed"]},')
+        lines.append(f'      "repetitions": {rep["repetitions"]},')
+        lines.append(
+            f'      "axes": {{"scheduler": [{axis(rep["scheduler_axis"])}], '
+            f'"admit": [{axis(rep["admit_axis"])}], '
+            f'"stream": [{axis(rep["stream_axis"])}]}},'
+        )
+        lines.append('      "cells": [')
+        for ci, cell in enumerate(rep["cells"]):
+            lines.append("        {")
+            lines.append(f'          "label": "{esc(cell["label"])}",')
+            lines.append(f'          "scheduler": "{esc(cell["scheduler"])}",')
+            lines.append(f'          "stream": "{esc(cell["stream"])}",')
+            if cell["fault"] is None:
+                lines.append('          "fault": null,')
+            else:
+                lines.append(f'          "fault": "{esc(cell["fault"])}",')
+            lines.append(f'          "jobs": {cell["jobs"]},')
+            lines.append(f'          "repetitions": {cell["repetitions"]},')
+            lines.append('          "metrics": {')
+            for mi, name in enumerate(SCENARIO_METRICS):
+                comma = "" if mi + 1 == len(SCENARIO_METRICS) else ","
+                lines.append(
+                    f'            "{name}": {stat_json(cell["metrics"][name])}{comma}'
+                )
+            lines.append("          },")
+            lines.append('          "classes": [')
+            for cli, cls in enumerate(cell["classes"]):
+                comma = "" if cli + 1 == len(cell["classes"]) else ","
+                lines.append(
+                    f'            {{"name": "{esc(cls["name"])}", '
+                    f'"jobs": {stat_json(cls["jobs"])}, '
+                    f'"rejected": {stat_json(cls["rejected"])}, '
+                    f'"mean_sojourn_ms": {stat_json(cls["mean_sojourn_ms"])}, '
+                    f'"p95_sojourn_ms": {stat_json(cls["p95_sojourn_ms"])}, '
+                    f'"deadline_hit_rate": {stat_json(cls["deadline_hit_rate"])}, '
+                    f'"throughput_jps": {stat_json(cls["throughput_jps"])}}}{comma}'
+                )
+            lines.append("          ]")
+            comma = "" if ci + 1 == len(rep["cells"]) else ","
+            lines.append(f"        }}{comma}")
+        lines.append("      ]")
+        comma = "" if ri + 1 == len(reports) else ","
+        lines.append(f"    }}{comma}")
+    lines.append("  ]")
+    lines.append("}")
+    return "\n".join(lines) + "\n"
+
+
+def bench_scenarios_json():
+    reports = [run_scenario_mirror(load_scenario(n)) for n in BUILTIN_SCENARIOS]
+    return scenarios_json("python-mirror", reports)
+
+
 # ----------------------------------------------------------------- checks
 
 OK = True
@@ -2089,6 +2730,135 @@ def run_checks():
     check("p99 of 1..100 == 99", percentile_nearest_rank(hundred, 99.0) == 99.0)
     check("p50 of [4,6,10] == 6", percentile_nearest_rank([4.0, 6.0, 10.0], 50.0) == 6.0)
 
+    print("scenario stats (Welford + Student-t, mirror of util::stats)")
+    check("t95 anchors", t95(1) == 12.706 and t95(19) == 2.093 and t95(1000) == 1.960)
+    check("t95 monotone", all(t95(df + 1) <= t95(df) for df in range(1, 200)))
+    xs = [((i * 37 + 11) % 17) * 0.75 for i in range(40)]
+    seq = Welford()
+    for x in xs:
+        seq.push(x)
+    wa, wb = Welford(), Welford()
+    for x in xs[:13]:
+        wa.push(x)
+    for x in xs[13:]:
+        wb.push(x)
+    wa.merge(wb)
+    check(
+        "welford merge == sequential",
+        wa.n == seq.n
+        and abs(wa.mean - seq.mean) < 1e-9
+        and abs(wa.variance() - seq.variance()) < 1e-9,
+    )
+    one = Welford()
+    one.push(7.25)
+    check("one sample has no error bar", one.stddev() == 0.0 and one.ci95_half_width() == 0.0)
+
+    print("scenario files (mirror of rust/src/scenario)")
+    specs = {name: load_scenario(name) for name in BUILTIN_SCENARIOS}
+    counts = {n: len(scenario_cells(s)) for n, s in specs.items()}
+    check(
+        "builtin sweep cell counts 5/4/3/6",
+        counts
+        == {"open-poisson": 5, "open-qos": 4, "open-fault": 3, "capacity-sweep": 6},
+        counts,
+    )
+    check(
+        "declared names match file names",
+        all(s["name"] == n for n, s in specs.items()),
+    )
+    check(
+        "committed repetitions support CIs",
+        all(s["repetitions"] >= 2 for s in specs.values()),
+    )
+    # Rep 0 returns the base on every axis (by design), so uniqueness
+    # is claimed across the base plus every derived (rep >= 1) seed.
+    seeds = {2015} | {rep_seed(2015, r, a) for r in range(1, 8) for a in range(3)}
+    check("derived rep seeds never collide", len(seeds) == 22, len(seeds))
+    check("rep 0 keeps base seeds verbatim", rep_seed(2015, 0, FAULT_AXIS) == 2015)
+    for bad in ["[scenario]\nname = t\n[warp]\nx = 1\n",
+                "[scenario]\nname = t\nrepetitons = 3\n",
+                "[scenario]\nname = a\nname = b\n"]:
+        try:
+            parse_scenario(bad)
+            check(f"loud parse error for {bad.splitlines()[-1]!r}", False)
+        except ValueError:
+            check(f"loud parse error for {bad.splitlines()[-1]!r}", True)
+
+    print("scenario rep 0 reproduces the hard-coded bench runs")
+    sc_poisson = specs["open-poisson"]
+    open_dags = [phased(8, 4, 256) for _ in range(24)]
+    open_submits = poisson_times(220.0, 7, 24)
+    for cell in scenario_cells(sc_poisson):
+        old, _, _ = open_run(open_dags, cell["scheduler"], open_submits, 8, model=model)
+        old_m = session_metrics(old, PAPER_WORKERS)
+        new_m, _ = scenario_rep_metrics(sc_poisson, cell, 0)
+        check(
+            f"open-poisson {cell['label']} rep0 bit-identical",
+            new_m["mean_sojourn_ms"] == old_m["mean_sojourn"]
+            and new_m["span_ms"] == old_m["span"]
+            and new_m["p95_sojourn_ms"] == old_m["p95"],
+        )
+    sc_fault = specs["open-fault"]
+    check(
+        "open-fault carries the scripted kill",
+        sc_fault["fault"] == DEFAULT_FAULT
+        and fault_spec_string(sc_fault["fault"]) == "fault:at=60:dev=1:down=40;refetch=2",
+    )
+    old, _, _ = open_run(
+        open_dags, "gp", open_submits, 8, model=model, fault=DEFAULT_FAULT
+    )
+    old_m = session_metrics(old, PAPER_WORKERS)
+    new_m, _ = scenario_rep_metrics(sc_fault, scenario_cells(sc_fault)[1], 0)
+    check(
+        "open-fault gp rep0 bit-identical",
+        new_m["mean_sojourn_ms"] == old_m["mean_sojourn"]
+        and new_m["span_ms"] == old_m["span"],
+    )
+    sc_qos = specs["open-qos"]
+    qmix = default_qos_mix()
+    qclassed = job_classes(qmix, 24, 2015)
+    qsubmits = bursty_times(380.0, 8, 7, 24)
+    for cell in scenario_cells(sc_qos)[:2]:  # fifo + edf
+        old, _, _ = open_run(
+            [j["dag"] for j in qclassed], "dmda", qsubmits, 2, model=model,
+            qos=[j["qos"] for j in qclassed], admit=cell["admit"],
+        )
+        old_m = session_metrics(old, PAPER_WORKERS)
+        new_m, _ = scenario_rep_metrics(sc_qos, cell, 0)
+        check(
+            f"open-qos {cell['label']} rep0 bit-identical",
+            new_m["deadline_hit_rate"] == old_m["deadline_hit_rate"]
+            and new_m["mean_sojourn_ms"] == old_m["mean_sojourn"],
+        )
+    r0, _ = scenario_rep_metrics(sc_poisson, scenario_cells(sc_poisson)[1], 0)
+    r1, _ = scenario_rep_metrics(sc_poisson, scenario_cells(sc_poisson)[1], 1)
+    check(
+        "repetitions actually vary",
+        r0["mean_sojourn_ms"] != r1["mean_sojourn_ms"],
+    )
+
+    print("scenario replication: fifo vs edf CIs disjoint at 20 reps")
+    qos_report = run_scenario_mirror(sc_qos)
+    cells = {c["label"]: c for c in qos_report["cells"]}
+    fifo = cells["dmda+fifo"]["metrics"]["deadline_hit_rate"]
+    edf = cells["dmda+edf"]["metrics"]["deadline_hit_rate"]
+    check("committed open-qos runs 20 reps", qos_report["repetitions"] == 20)
+    check("edf beats fifo on deadline hits", edf["mean"] > fifo["mean"],
+          f"{edf['mean']:.3f} vs {fifo['mean']:.3f}")
+    check(
+        "fifo/edf 95% CIs disjoint (headline significant)",
+        fifo["mean"] + fifo["ci95"] < edf["mean"] - edf["ci95"],
+        f"fifo hi {fifo['mean'] + fifo['ci95']:.4f} vs edf lo {edf['mean'] - edf['ci95']:.4f}",
+    )
+    check(
+        "every cell merges 3 classes over 20 reps",
+        all(
+            len(c["classes"]) == 3
+            and all(s["n"] == 20 for m in c["metrics"].values() for s in [m])
+            for c in qos_report["cells"]
+        ),
+    )
+
     print("ALL OK" if OK else "FAILURES PRESENT")
     return OK
 
@@ -2398,6 +3168,16 @@ if __name__ == "__main__":
         path = os.path.join(
             os.path.dirname(os.path.abspath(__file__)),
             "..", "..", "rust", "bench_results", "BENCH_sched_session.json",
+        )
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            f.write(out)
+        print(f"written {os.path.normpath(path)}")
+    elif cmd == "scenarios":
+        out = bench_scenarios_json()
+        path = os.path.join(
+            os.path.dirname(os.path.abspath(__file__)),
+            "..", "..", "rust", "bench_results", "BENCH_scenarios.json",
         )
         os.makedirs(os.path.dirname(path), exist_ok=True)
         with open(path, "w") as f:

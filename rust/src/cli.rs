@@ -110,6 +110,19 @@ COMMANDS:
              \"fault:mtbf=500,mttr=80,seed=9\" or scripted
              \"fault:at=120:dev=1:down=50;refetch=2\"; drain=MS drains
              instead of killing)
+  scenario   Declarative experiments with replication + confidence
+             intervals (see scenarios/*.toml and the scenario module
+             docs for the file grammar).
+             scenario run FILE|NAME  [--repetitions N] [--threads N]
+               Run one scenario (builtin name or file path): every
+               sweep cell x N repetitions on derived seeds, merged
+               mean/stddev/95%-CI per metric. Results are bit-identical
+               at any --threads value.
+             scenario list
+               List the committed builtin scenarios.
+             scenario bench  [--repetitions N] [--threads N]
+               Run every builtin and write
+               bench_results/BENCH_scenarios.json.
   measure    Measure real PJRT kernel times for the shipped artifacts.
              [--reps N]
   stats      Structural statistics of a DOT graph or built-in workload.

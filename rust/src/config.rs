@@ -63,9 +63,14 @@ pub fn parse_raw(src: &str) -> Result<RawConfig> {
         let (k, v) = line
             .split_once('=')
             .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
-        out.entry(section.clone())
+        let key = k.trim().to_string();
+        let prev = out
+            .entry(section.clone())
             .or_default()
-            .insert(k.trim().to_string(), v.trim().trim_matches('"').to_string());
+            .insert(key.clone(), v.trim().trim_matches('"').to_string());
+        if prev.is_some() {
+            bail!("line {}: duplicate key {key:?} in section [{section}]", lineno + 1);
+        }
     }
     Ok(out)
 }
@@ -245,6 +250,14 @@ mod tests {
     fn parse_raw_rejects_bad_lines() {
         assert!(parse_raw("just a line").is_err());
         assert!(parse_raw("[unterminated").is_err());
+    }
+
+    #[test]
+    fn parse_raw_rejects_duplicate_keys() {
+        let err = parse_raw("[s]\na = 1\na = 2\n").unwrap_err().to_string();
+        assert!(err.contains("duplicate key"), "{err}");
+        // Re-opening a section is fine as long as keys stay distinct.
+        assert!(parse_raw("[s]\na = 1\n[t]\nx = 0\n[s]\nb = 2\n").is_ok());
     }
 
     #[test]

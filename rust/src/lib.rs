@@ -16,6 +16,8 @@
 //!   arrival processes, bounded admission, queueing metrics;
 //! * [`session`] — streaming multi-DAG scheduling sessions (closed-loop
 //!   and open-system submission);
+//! * [`scenario`] — declarative experiment files, sweep cells, and the
+//!   threaded replication harness with confidence intervals;
 //! * [`runtime`] — manifest-gated kernel execution (interpreter backend
 //!   standing in for PJRT in this offline build);
 //! * [`coordinator`] — threaded real-compute execution engine;
@@ -33,6 +35,7 @@ pub mod perfmodel;
 pub mod platform;
 pub mod report;
 pub mod runtime;
+pub mod scenario;
 pub mod sched;
 pub mod session;
 pub mod sim;

@@ -14,6 +14,7 @@ use hetsched::perfmodel::{CalibratedModel, PerfModel};
 use hetsched::platform::Platform;
 use hetsched::report::{fmt_ms, fmt_ratio, Table};
 use hetsched::runtime::{KernelRuntime, RuntimeService};
+use hetsched::scenario::{self, ScenarioReport, Stat};
 use hetsched::sched::{self, PlanCache, SchedulerRegistry};
 use hetsched::sim::{
     simulate, simulate_open, simulate_open_qos, FaultSpec, JobQos, SessionReport, SimConfig,
@@ -35,6 +36,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         "partition" => cmd_partition(&args),
         "figures" => cmd_figures(&args),
         "bench" => cmd_bench(&args),
+        "scenario" => cmd_scenario(&args),
         "measure" => cmd_measure(&args),
         "stats" => cmd_stats(&args),
         "gen" => cmd_gen(&args),
@@ -256,25 +258,19 @@ fn cmd_bench(args: &Args) -> Result<()> {
     }
 }
 
-/// Default open-system traffic scenario for `bench stream` (rate chosen
-/// so several phased jobs overlap in flight on the paper platform —
-/// mirror-tuned; override with `--stream`).
-const DEFAULT_OPEN_STREAM: &str = "stream:arrival=poisson,rate=220,queue=8";
-
-/// Default traffic for the `open-qos` scenario: bursts large enough to
-/// overflow the admission window, so the pending queue actually orders
-/// (mirror-tuned; the `admit=` key is swept over fifo/edf/sjf/reject).
-const DEFAULT_QOS_STREAM: &str = "stream:arrival=bursty,rate=380,burst=8,queue=2,seed=7";
-
-/// Scheduler driving the `open-qos` admission-policy sweep (dispatch
-/// policy held fixed so rows isolate the admission dimension).
-const QOS_POLICY: &str = "dmda";
-
-/// Default failure injection for the `open-fault` scenario: a scripted
-/// mid-burst kill of the GPU (device 1) with a small re-fetch penalty,
-/// so recovery rows are deterministic and reproducible (mirror-tuned;
-/// override with `--fault` or the config file's `[run] fault` key).
-const DEFAULT_FAULT: &str = "fault:at=60:dev=1:down=40;refetch=2";
+/// Rewrite `gp:window=...` sweep-axis entries to the CLI's `--window`
+/// value (the committed scenario files pin the default window).
+fn with_window(axis: &[String], window: usize) -> Vec<String> {
+    axis.iter()
+        .map(|s| {
+            if s.starts_with("gp:window=") {
+                format!("gp:window={window}")
+            } else {
+                s.clone()
+            }
+        })
+        .collect()
+}
 
 /// `hetsched bench stream`: streaming multi-DAG sessions across the
 /// policy matrix — closed-loop scenarios (plan-cache amortization,
@@ -286,9 +282,18 @@ fn cmd_bench_stream(args: &Args) -> Result<()> {
     let jobs = args.flag_usize("jobs", 8)?;
     let window = args.flag_usize("window", 12)?;
     let size = args.flag_u32("size", 1024)?;
-    let open_jobs = args.flag_usize("open-jobs", 24)?;
+    // The open scenarios are thin wrappers over the committed scenario
+    // library: default traffic, workload mix, fault injection and the
+    // sweep axes all come from `scenarios/*.toml`. A scenario's
+    // repetition 0 keeps its seeds verbatim, so these single-run rows
+    // stay bit-identical to the pre-scenario hard-coded flag tuples
+    // (pinned by tests/scenario.rs).
+    let sc_poisson = scenario::load_builtin("open-poisson")?;
+    let sc_qos = scenario::load_builtin("open-qos")?;
+    let sc_fault = scenario::load_builtin("open-fault")?;
+    let open_jobs = args.flag_usize("open-jobs", sc_poisson.jobs)?;
     // Scenario resolution: --stream flag > config-file [run] stream >
-    // the mirror-tuned default. Same precedence for --classes (the
+    // the committed scenario file. Same precedence for --classes (the
     // config file, when given, is parsed once for both).
     let file_cfg = match args.flag("config") {
         Some(_) => Some(build_config(args)?),
@@ -297,17 +302,17 @@ fn cmd_bench_stream(args: &Args) -> Result<()> {
     let open_stream = match (args.flag("stream"), &file_cfg) {
         (Some(spec), _) => StreamConfig::from_spec(spec)?,
         (None, Some(cfg)) => cfg.stream.clone(),
-        (None, None) => StreamConfig::from_spec(DEFAULT_OPEN_STREAM)?,
+        (None, None) => StreamConfig::from_spec(&sc_poisson.stream_axis[0])?,
     };
     let fault = match (args.flag("fault"), &file_cfg) {
         (Some(spec), _) => FaultSpec::from_spec(spec)?,
         (None, Some(cfg)) if cfg.fault.is_some() => cfg.fault.clone().unwrap(),
-        _ => FaultSpec::from_spec(DEFAULT_FAULT)?,
+        _ => sc_fault.fault.clone().context("open-fault scenario carries a fault spec")?,
     };
     let classes = match (args.flag("classes"), file_cfg) {
         (Some(spec), _) => workloads::parse_class_mix(spec)?,
         (None, Some(cfg)) => cfg.classes,
-        (None, None) => workloads::default_qos_mix(),
+        (None, None) => sc_qos.classes.clone(),
     };
     let stream_spec = open_stream.spec_string();
     let platform = Platform::paper();
@@ -329,7 +334,14 @@ fn cmd_bench_stream(args: &Args) -> Result<()> {
         .map(|_| generate_layered(&GeneratorConfig::paper(KernelKind::Ma, size)))
         .collect();
     let phased: Vec<_> = (0..jobs.min(4)).map(|_| workloads::phased(8, 4, 256)).collect();
-    let open_phased: Vec<_> = (0..open_jobs).map(|_| workloads::phased(8, 4, 256)).collect();
+    // The open-poisson workload is the scenario file's class mix drawn
+    // at its base seed (a single phased class, so identical to building
+    // the phased jobs directly).
+    let open_phased: Vec<_> =
+        workloads::job_classes(&sc_poisson.classes, open_jobs, sc_poisson.seed)
+            .into_iter()
+            .map(|j| j.dag)
+            .collect();
     let open_mix = workloads::job_mix(open_jobs, 256, 2015);
     let closed = StreamConfig::closed();
     let scenarios: [(&str, &[hetsched::dag::Dag], &StreamConfig); 5] = [
@@ -340,13 +352,7 @@ fn cmd_bench_stream(args: &Args) -> Result<()> {
         ("open-mix", &open_mix, &open_stream),
     ];
 
-    let specs: Vec<String> = vec![
-        "eager".into(),
-        "dmda".into(),
-        "heft".into(),
-        "gp".into(),
-        format!("gp:window={window}"),
-    ];
+    let specs: Vec<String> = with_window(&sc_poisson.scheduler_axis, window);
 
     let registry = SchedulerRegistry::builtin();
     let mut rows: Vec<(String, String, String, SessionReport)> = Vec::new();
@@ -417,29 +423,31 @@ fn cmd_bench_stream(args: &Args) -> Result<()> {
 
     // --- open-qos: QoS-classed traffic, admission-policy sweep ------
     //
-    // One scheduler (QOS_POLICY), one bursty arrival trace, one classed
-    // job stream; only `admit=` varies — so the rows isolate what the
-    // admission policy buys (deadline hits for edf, mean sojourn for
-    // sjf, bounded waits for reject).
-    let classed = workloads::job_classes(&classes, open_jobs, 2015);
+    // One scheduler (the scenario's only axis entry), one bursty
+    // arrival trace, one classed job stream; only `admit=` varies — so
+    // the rows isolate what the admission policy buys (deadline hits
+    // for edf, mean sojourn for sjf, bounded waits for reject).
+    let classed = workloads::job_classes(&classes, open_jobs, sc_qos.seed);
     let qos_dags: Vec<hetsched::dag::Dag> = classed.iter().map(|j| j.dag.clone()).collect();
     let qos: Vec<JobQos> = classed.iter().map(|j| j.qos).collect();
     let names = workloads::class_names(&classes);
+    let qos_policy = sc_qos.scheduler_axis[0].as_str();
+    let qos_base = sc_qos.stream_axis[0].as_str();
     let mut qos_table = Table::new(
-        format!("open-qos admission sweep ({DEFAULT_QOS_STREAM}, policy {QOS_POLICY})"),
+        format!("open-qos admission sweep ({qos_base}, policy {qos_policy})"),
         &[
             "admit", "jobs", "rejected", "ddl-hit%", "p50_ms", "p95_ms", "mean_ms",
             "qdelay_ms", "jobs/s",
         ],
     );
-    for admit in ["fifo", "edf", "sjf", "reject"] {
+    for admit in &sc_qos.admit_axis {
         let spec = if admit == "fifo" {
-            DEFAULT_QOS_STREAM.to_string()
+            qos_base.to_string()
         } else {
-            format!("{DEFAULT_QOS_STREAM},admit={admit}")
+            format!("{qos_base},admit={admit}")
         };
         let stream = StreamConfig::from_spec(&spec)?;
-        let mut scheduler = registry.create(QOS_POLICY)?;
+        let mut scheduler = registry.create(qos_policy)?;
         let mut cache = PlanCache::new();
         let session = simulate_open_qos(
             &qos_dags,
@@ -465,7 +473,7 @@ fn cmd_bench_stream(args: &Args) -> Result<()> {
         ]);
         rows.push((
             "open-qos".to_string(),
-            QOS_POLICY.to_string(),
+            qos_policy.to_string(),
             stream.spec_string(),
             session,
         ));
@@ -480,7 +488,7 @@ fn cmd_bench_stream(args: &Args) -> Result<()> {
     // the down/up events — so the rows isolate what recovery-aware
     // replanning buys (mean sojourn, goodput).
     let fault_cfg = SimConfig { fault: Some(fault.clone()), ..Default::default() };
-    let fault_specs = ["dmda".to_string(), "gp".to_string(), format!("gp:window={window}")];
+    let fault_specs = with_window(&sc_fault.scheduler_axis, window);
     let mut fault_table = Table::new(
         format!("open-fault recovery sweep ({})", fault.spec_string()),
         &[
@@ -585,6 +593,134 @@ fn cmd_bench_stream(args: &Args) -> Result<()> {
 
     let json = render_session_json(jobs, window, size, "cargo-run", &platform, &rows);
     let path = benchkit::save_bench_json("sched_session", &json)?;
+    println!("json written to {}", path.display());
+    Ok(())
+}
+
+/// `hetsched scenario`: declarative experiments with replication.
+fn cmd_scenario(args: &Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("run") => cmd_scenario_run(args),
+        Some("list") => cmd_scenario_list(),
+        Some("bench") => cmd_scenario_bench(args),
+        other => bail!("unknown scenario verb {other:?} (available: run | list | bench)"),
+    }
+}
+
+fn scenario_run_options(args: &Args) -> Result<scenario::RunOptions> {
+    let repetitions = match args.flag("repetitions") {
+        Some(_) => Some(args.flag_usize("repetitions", 0)?),
+        None => None,
+    };
+    let threads = args.flag_usize("threads", scenario::default_threads())?;
+    Ok(scenario::RunOptions { repetitions, threads })
+}
+
+/// `mean±ci95` cell text for the scenario tables.
+fn fmt_stat(s: &Stat) -> String {
+    format!("{:.2}±{:.2}", s.mean, s.ci95)
+}
+
+fn print_scenario_report(report: &ScenarioReport) {
+    let mut table = Table::new(
+        format!(
+            "scenario {} ({} jobs x {} repetitions, seed {})",
+            report.name, report.jobs, report.repetitions, report.seed
+        ),
+        &[
+            "cell", "mean_ms", "p95_ms", "qdelay_ms", "ddl-hit", "goodput/s", "rejected",
+            "span_ms",
+        ],
+    );
+    let stat = |cell: &hetsched::scenario::CellReport, name: &str| {
+        fmt_stat(&cell.metric(name).expect("scalar metric present"))
+    };
+    for cell in &report.cells {
+        table.row(vec![
+            cell.label.clone(),
+            stat(cell, "mean_sojourn_ms"),
+            stat(cell, "p95_sojourn_ms"),
+            stat(cell, "mean_queue_delay_ms"),
+            stat(cell, "deadline_hit_rate"),
+            stat(cell, "goodput_jps"),
+            stat(cell, "rejected_jobs"),
+            stat(cell, "span_ms"),
+        ]);
+    }
+    println!("{}", table.render());
+    // Per-class SLO breakdown only when the mix actually has classes.
+    if report.cells.iter().all(|c| c.classes.len() <= 1) {
+        return;
+    }
+    let mut classes = Table::new(
+        format!("scenario {} per-class SLOs", report.name),
+        &["cell", "class", "jobs", "rejected", "mean_ms", "p95_ms", "ddl-hit"],
+    );
+    for cell in &report.cells {
+        for cls in &cell.classes {
+            classes.row(vec![
+                cell.label.clone(),
+                cls.name.clone(),
+                fmt_stat(&cls.jobs),
+                fmt_stat(&cls.rejected),
+                fmt_stat(&cls.mean_sojourn_ms),
+                fmt_stat(&cls.p95_sojourn_ms),
+                fmt_stat(&cls.deadline_hit_rate),
+            ]);
+        }
+    }
+    println!("{}", classes.render());
+}
+
+/// `hetsched scenario run FILE|NAME`: one scenario, merged statistics.
+fn cmd_scenario_run(args: &Args) -> Result<()> {
+    let target = args
+        .positional
+        .get(1)
+        .context("scenario run needs a scenario file path or builtin name")?;
+    let spec = scenario::load(target)?;
+    let opts = scenario_run_options(args)?;
+    let report = scenario::run_scenario(&spec, &opts)?;
+    print_scenario_report(&report);
+    Ok(())
+}
+
+/// `hetsched scenario list`: the committed builtin library.
+fn cmd_scenario_list() -> Result<()> {
+    let mut table = Table::new(
+        "builtin scenarios (scenarios/*.toml)".to_string(),
+        &["name", "jobs", "seed", "repetitions", "cells", "fault"],
+    );
+    for (name, _) in scenario::BUILTIN_SCENARIOS {
+        let spec = scenario::load_builtin(name)?;
+        table.row(vec![
+            name.to_string(),
+            spec.jobs.to_string(),
+            spec.seed.to_string(),
+            spec.repetitions.to_string(),
+            spec.cells()?.len().to_string(),
+            spec.fault.as_ref().map_or("-".to_string(), |f| f.spec_string()),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+/// `hetsched scenario bench`: every builtin scenario, merged into
+/// `bench_results/BENCH_scenarios.json`.
+fn cmd_scenario_bench(args: &Args) -> Result<()> {
+    let opts = scenario_run_options(args)?;
+    let platform = Platform::paper();
+    benchkit::preamble("scenarios — replicated scenario library", &platform);
+    let mut reports = Vec::new();
+    for (name, _) in scenario::BUILTIN_SCENARIOS {
+        let spec = scenario::load_builtin(name)?;
+        let report = scenario::run_scenario(&spec, &opts)?;
+        print_scenario_report(&report);
+        reports.push(report);
+    }
+    let json = scenario::scenarios_json("cargo-run", &reports);
+    let path = benchkit::save_bench_json("scenarios", &json)?;
     println!("json written to {}", path.display());
     Ok(())
 }

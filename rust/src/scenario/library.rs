@@ -1,0 +1,73 @@
+//! The committed scenario library: the `scenarios/*.toml` files at the
+//! repository root, embedded at compile time so `scenario run
+//! open-qos` works from any working directory and `bench stream`'s
+//! open scenarios can load them without touching the filesystem.
+
+use anyhow::{Context, Result};
+
+use super::spec::ScenarioSpec;
+
+/// `(name, file contents)` of every committed scenario, in bench
+/// emission order.
+pub const BUILTIN_SCENARIOS: [(&str, &str); 4] = [
+    ("open-poisson", include_str!("../../../scenarios/open-poisson.toml")),
+    ("open-qos", include_str!("../../../scenarios/open-qos.toml")),
+    ("open-fault", include_str!("../../../scenarios/open-fault.toml")),
+    ("capacity-sweep", include_str!("../../../scenarios/capacity-sweep.toml")),
+];
+
+/// Source text of a builtin scenario.
+pub fn builtin_src(name: &str) -> Option<&'static str> {
+    BUILTIN_SCENARIOS.iter().find(|(n, _)| *n == name).map(|(_, src)| *src)
+}
+
+/// Parse a builtin scenario by name.
+pub fn load_builtin(name: &str) -> Result<ScenarioSpec> {
+    let src = builtin_src(name).with_context(|| {
+        let names: Vec<&str> = BUILTIN_SCENARIOS.iter().map(|(n, _)| *n).collect();
+        format!("unknown builtin scenario {name:?} (builtins: {})", names.join(", "))
+    })?;
+    ScenarioSpec::parse(src).with_context(|| format!("builtin scenario {name:?}"))
+}
+
+/// Load a scenario by builtin name or file path (builtins win, so the
+/// committed library is reachable from any directory; anything else is
+/// read from disk).
+pub fn load(name_or_path: &str) -> Result<ScenarioSpec> {
+    if builtin_src(name_or_path).is_some() {
+        return load_builtin(name_or_path);
+    }
+    let text = std::fs::read_to_string(name_or_path)
+        .with_context(|| format!("reading scenario file {name_or_path:?} (not a builtin)"))?;
+    ScenarioSpec::parse(&text).with_context(|| format!("scenario file {name_or_path:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_builtin_parses_with_its_declared_name() {
+        for (name, _) in BUILTIN_SCENARIOS {
+            let spec = load_builtin(name).unwrap();
+            assert_eq!(spec.name, name, "file name and [scenario] name out of sync");
+            assert!(spec.repetitions >= 2, "{name}: committed scenarios must replicate");
+        }
+    }
+
+    #[test]
+    fn builtin_cell_counts_pin_the_sweeps() {
+        let count = |name: &str| load_builtin(name).unwrap().cells().unwrap().len();
+        assert_eq!(count("open-poisson"), 5, "policy sweep");
+        assert_eq!(count("open-qos"), 4, "admission sweep");
+        assert_eq!(count("open-fault"), 3, "recovery sweep");
+        assert_eq!(count("capacity-sweep"), 6, "2 policies x 3 offered loads");
+    }
+
+    #[test]
+    fn unknown_builtin_is_loud() {
+        let e = load_builtin("open-warp").unwrap_err().to_string();
+        assert!(e.contains("unknown builtin scenario"), "{e}");
+        assert!(load("no/such/file.toml").is_err());
+    }
+}

@@ -1,0 +1,46 @@
+//! Scenario subsystem: declarative experiment files plus a threaded
+//! replication harness with confidence intervals.
+//!
+//! The open engine can simulate arrivals, QoS classes, admission
+//! policies and device faults, but a single run is a point estimate: a
+//! seed that happens to flatter one policy proves nothing. This module
+//! turns one-off `bench stream` flag piles into *scenarios* — committed,
+//! declarative experiment files (`scenarios/*.toml`) — and replicates
+//! each one `repetitions` times with independently derived seeds, so
+//! every reported number carries a mean, a stddev and a Student-t 95%
+//! confidence interval.
+//!
+//! Layout:
+//! * [`spec`] — the scenario file grammar ([`ScenarioSpec`]), section
+//!   by section, with loud unknown-key errors, and the sweep-axis cross
+//!   product ([`SweepCell`]);
+//! * [`runner`] — per-repetition seed derivation ([`rep_seed`]), the
+//!   `std::thread` fan-out ([`run_cell`]), and the top-level driver
+//!   ([`run_scenario`]); merged results are bit-identical at any thread
+//!   count because threads only decide *where* a repetition computes;
+//! * [`report`] — merged statistics ([`Stat`], [`CellReport`],
+//!   [`ScenarioReport`]) and the `BENCH_scenarios.json` emitter
+//!   ([`scenarios_json`]);
+//! * [`library`] — the committed scenario files, embedded so builtins
+//!   (`open-poisson`, `open-qos`, `open-fault`, `capacity-sweep`)
+//!   resolve by bare name.
+//!
+//! Replication semantics: repetition 0 uses the file's seeds verbatim
+//! (so `--repetitions=1` reproduces the pre-scenario hard-coded bench
+//! scenarios bit for bit), and repetition `r > 0` derives workload,
+//! arrival and stochastic-fault seeds on separate PCG32 streams — the
+//! same parent-to-child splitting discipline as the parallel
+//! partitioner. Scripted fault windows are scenario definition, not
+//! noise, and replay identically in every repetition.
+
+pub mod library;
+pub mod report;
+pub mod runner;
+pub mod spec;
+
+pub use library::{builtin_src, load, load_builtin, BUILTIN_SCENARIOS};
+pub use report::{merge_cell, scenarios_json, CellReport, ClassStat, ScenarioReport, Stat};
+pub use runner::{
+    default_threads, rep_seed, run_cell, run_repetition, run_scenario, RunOptions,
+};
+pub use spec::{ScenarioSpec, SweepCell};

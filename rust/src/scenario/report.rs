@@ -1,0 +1,304 @@
+//! Merged scenario results: per-cell replication statistics
+//! (mean / stddev / 95% CI over repetitions) for every scalar session
+//! metric and per-class SLO, plus the `BENCH_scenarios.json` emitter.
+
+use crate::sim::report::SCALAR_METRICS;
+use crate::sim::SessionReport;
+use crate::util::stats::Welford;
+
+use super::spec::{ScenarioSpec, SweepCell};
+
+/// Replication statistics of one metric: `n` repetitions merged into a
+/// mean with a sample stddev and a Student-t 95% confidence half-width.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Stat {
+    /// Repetitions merged.
+    pub n: u64,
+    /// Sample mean across repetitions.
+    pub mean: f64,
+    /// Sample standard deviation (0 when `n < 2`).
+    pub std: f64,
+    /// 95% CI half-width `t(n-1) * std / sqrt(n)` (0 when `n < 2`:
+    /// a single repetition degenerates to a point estimate).
+    pub ci95: f64,
+}
+
+impl Stat {
+    /// Merge samples in iteration order (the runner feeds repetition
+    /// order, which is what makes merged reports thread-count
+    /// invariant).
+    pub fn from_samples<I: IntoIterator<Item = f64>>(samples: I) -> Stat {
+        let mut w = Welford::new();
+        for x in samples {
+            w.push(x);
+        }
+        Stat { n: w.count(), mean: w.mean(), std: w.stddev(), ci95: w.ci95_half_width() }
+    }
+
+    /// Lower 95% confidence bound.
+    pub fn lo(&self) -> f64 {
+        self.mean - self.ci95
+    }
+
+    /// Upper 95% confidence bound.
+    pub fn hi(&self) -> f64 {
+        self.mean + self.ci95
+    }
+
+    /// Do the two 95% intervals not overlap? The scenario-level
+    /// significance test (e.g. fifo-vs-edf deadline-hit rates).
+    pub fn disjoint_from(&self, other: &Stat) -> bool {
+        self.hi() < other.lo() || other.hi() < self.lo()
+    }
+}
+
+/// Replication statistics of one QoS class's SLO outcomes in one cell.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassStat {
+    pub name: String,
+    pub jobs: Stat,
+    pub rejected: Stat,
+    pub mean_sojourn_ms: Stat,
+    pub p95_sojourn_ms: Stat,
+    pub deadline_hit_rate: Stat,
+    pub throughput_jps: Stat,
+}
+
+/// One sweep cell's merged outcome across all repetitions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellReport {
+    /// Cell label from [`SweepCell::label`].
+    pub label: String,
+    /// Registry config string.
+    pub scheduler: String,
+    /// Resolved stream spec (canonical [`spec_string`] form, `admit=`
+    /// included when swept).
+    ///
+    /// [`spec_string`]: crate::sim::StreamConfig::spec_string
+    pub stream: String,
+    /// Fault spec string when the scenario injects failures.
+    pub fault: Option<String>,
+    /// Jobs submitted per repetition.
+    pub jobs: usize,
+    /// Repetitions merged.
+    pub repetitions: usize,
+    /// `(metric name, stats)` in [`SCALAR_METRICS`] order.
+    pub metrics: Vec<(&'static str, Stat)>,
+    /// Per-class SLO statistics, class-index order.
+    pub classes: Vec<ClassStat>,
+}
+
+impl CellReport {
+    /// Look one merged metric up by its [`SCALAR_METRICS`] name.
+    pub fn metric(&self, name: &str) -> Option<Stat> {
+        self.metrics.iter().find(|(n, _)| *n == name).map(|(_, s)| *s)
+    }
+}
+
+/// The merged outcome of a whole scenario run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioReport {
+    pub name: String,
+    /// Jobs submitted per repetition.
+    pub jobs: usize,
+    /// Base seed repetitions derived from.
+    pub seed: u64,
+    /// Repetitions actually run (file default or `--repetitions`).
+    pub repetitions: usize,
+    /// The sweep axes, for sweep-completeness checks downstream.
+    pub scheduler_axis: Vec<String>,
+    pub admit_axis: Vec<String>,
+    pub stream_axis: Vec<String>,
+    /// One merged cell per sweep cross-product point, cell order.
+    pub cells: Vec<CellReport>,
+}
+
+impl ScenarioReport {
+    /// Find a cell by its label.
+    pub fn cell(&self, label: &str) -> Option<&CellReport> {
+        self.cells.iter().find(|c| c.label == label)
+    }
+}
+
+/// Merge one cell's per-repetition session reports (repetition order)
+/// into replication statistics.
+pub fn merge_cell(spec: &ScenarioSpec, cell: &SweepCell, sessions: &[SessionReport]) -> CellReport {
+    let per_rep: Vec<Vec<(&'static str, f64)>> =
+        sessions.iter().map(|s| s.scalar_metrics()).collect();
+    let metrics = SCALAR_METRICS
+        .iter()
+        .enumerate()
+        .map(|(i, &name)| {
+            debug_assert!(per_rep.iter().all(|m| m[i].0 == name));
+            (name, Stat::from_samples(per_rep.iter().map(|m| m[i].1)))
+        })
+        .collect();
+
+    let class_count = sessions.first().map_or(0, |s| s.class_count());
+    let classes = (0..class_count)
+        .map(|c| {
+            let reps: Vec<_> = sessions.iter().map(|s| s.class_report(c)).collect();
+            let stat = |f: &dyn Fn(&crate::sim::ClassReport) -> f64| {
+                Stat::from_samples(reps.iter().map(f))
+            };
+            ClassStat {
+                name: sessions[0].class_name(c),
+                jobs: stat(&|r| r.jobs as f64),
+                rejected: stat(&|r| r.rejected as f64),
+                mean_sojourn_ms: stat(&|r| r.mean_sojourn_ms),
+                p95_sojourn_ms: stat(&|r| r.p95_sojourn_ms),
+                deadline_hit_rate: stat(&|r| r.deadline_hit_rate),
+                throughput_jps: stat(&|r| r.throughput_jps),
+            }
+        })
+        .collect();
+
+    CellReport {
+        label: cell.label.clone(),
+        scheduler: cell.scheduler.clone(),
+        stream: cell.stream.spec_string(),
+        fault: spec.fault.as_ref().map(|f| f.spec_string()),
+        jobs: spec.jobs,
+        repetitions: sessions.len(),
+        metrics,
+        classes,
+    }
+}
+
+// --- BENCH_scenarios.json -------------------------------------------
+
+/// Minimal JSON string escaping (labels and class names may come from
+/// user-written scenario files).
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Shortest-roundtrip float (Rust's `Display` never emits `inf`/`NaN`
+/// here: every merged metric is finite by construction).
+fn num(v: f64) -> String {
+    debug_assert!(v.is_finite());
+    format!("{v}")
+}
+
+fn stat_json(s: &Stat) -> String {
+    format!(
+        "{{\"n\": {}, \"mean\": {}, \"std\": {}, \"ci95_lo\": {}, \"ci95_hi\": {}}}",
+        s.n,
+        num(s.mean),
+        num(s.std),
+        num(s.lo()),
+        num(s.hi())
+    )
+}
+
+/// Render the merged reports of every scenario as the
+/// `BENCH_scenarios.json` document (`bench = "scenarios"`), validated
+/// by `python/tools/validate_bench.py`.
+pub fn scenarios_json(harness: &str, reports: &[ScenarioReport]) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"bench\": \"scenarios\",\n");
+    out.push_str(&format!("  \"harness\": \"{}\",\n", esc(harness)));
+    out.push_str("  \"scenarios\": [\n");
+    for (ri, rep) in reports.iter().enumerate() {
+        out.push_str("    {\n");
+        out.push_str(&format!("      \"name\": \"{}\",\n", esc(&rep.name)));
+        out.push_str(&format!("      \"jobs\": {},\n", rep.jobs));
+        out.push_str(&format!("      \"seed\": {},\n", rep.seed));
+        out.push_str(&format!("      \"repetitions\": {},\n", rep.repetitions));
+        let axis = |values: &[String]| {
+            values.iter().map(|v| format!("\"{}\"", esc(v))).collect::<Vec<_>>().join(", ")
+        };
+        out.push_str(&format!(
+            "      \"axes\": {{\"scheduler\": [{}], \"admit\": [{}], \"stream\": [{}]}},\n",
+            axis(&rep.scheduler_axis),
+            axis(&rep.admit_axis),
+            axis(&rep.stream_axis)
+        ));
+        out.push_str("      \"cells\": [\n");
+        for (ci, cell) in rep.cells.iter().enumerate() {
+            out.push_str("        {\n");
+            out.push_str(&format!("          \"label\": \"{}\",\n", esc(&cell.label)));
+            out.push_str(&format!("          \"scheduler\": \"{}\",\n", esc(&cell.scheduler)));
+            out.push_str(&format!("          \"stream\": \"{}\",\n", esc(&cell.stream)));
+            match &cell.fault {
+                Some(f) => out.push_str(&format!("          \"fault\": \"{}\",\n", esc(f))),
+                None => out.push_str("          \"fault\": null,\n"),
+            }
+            out.push_str(&format!("          \"jobs\": {},\n", cell.jobs));
+            out.push_str(&format!("          \"repetitions\": {},\n", cell.repetitions));
+            out.push_str("          \"metrics\": {\n");
+            for (mi, (name, stat)) in cell.metrics.iter().enumerate() {
+                let comma = if mi + 1 == cell.metrics.len() { "" } else { "," };
+                out.push_str(&format!("            \"{name}\": {}{comma}\n", stat_json(stat)));
+            }
+            out.push_str("          },\n");
+            out.push_str("          \"classes\": [\n");
+            for (cli, cls) in cell.classes.iter().enumerate() {
+                let comma = if cli + 1 == cell.classes.len() { "" } else { "," };
+                out.push_str(&format!(
+                    "            {{\"name\": \"{}\", \"jobs\": {}, \"rejected\": {}, \
+                     \"mean_sojourn_ms\": {}, \"p95_sojourn_ms\": {}, \
+                     \"deadline_hit_rate\": {}, \"throughput_jps\": {}}}{comma}\n",
+                    esc(&cls.name),
+                    stat_json(&cls.jobs),
+                    stat_json(&cls.rejected),
+                    stat_json(&cls.mean_sojourn_ms),
+                    stat_json(&cls.p95_sojourn_ms),
+                    stat_json(&cls.deadline_hit_rate),
+                    stat_json(&cls.throughput_jps)
+                ));
+            }
+            out.push_str("          ]\n");
+            let comma = if ci + 1 == rep.cells.len() { "" } else { "," };
+            out.push_str(&format!("        }}{comma}\n"));
+        }
+        out.push_str("      ]\n");
+        let comma = if ri + 1 == reports.len() { "" } else { "," };
+        out.push_str(&format!("    }}{comma}\n"));
+    }
+    out.push_str("  ]\n");
+    out.push_str("}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stat_from_samples_and_bounds() {
+        let s = Stat::from_samples([1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.mean, 3.0);
+        assert!((s.std - (2.5f64).sqrt()).abs() < 1e-12);
+        assert!(s.lo() < s.mean && s.mean < s.hi());
+        let point = Stat::from_samples([7.0]);
+        assert_eq!((point.std, point.ci95), (0.0, 0.0));
+        assert_eq!(point.lo(), point.hi());
+    }
+
+    #[test]
+    fn disjoint_intervals() {
+        let a = Stat { n: 5, mean: 1.0, std: 0.1, ci95: 0.2 };
+        let b = Stat { n: 5, mean: 2.0, std: 0.1, ci95: 0.2 };
+        let c = Stat { n: 5, mean: 1.3, std: 0.3, ci95: 0.4 };
+        assert!(a.disjoint_from(&b) && b.disjoint_from(&a));
+        assert!(!a.disjoint_from(&c) && !c.disjoint_from(&b));
+    }
+
+    #[test]
+    fn json_escaping() {
+        assert_eq!(esc("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(esc("x\ny"), "x\\u000ay");
+    }
+}

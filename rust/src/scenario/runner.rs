@@ -1,0 +1,180 @@
+//! Threaded replication runner: fans a scenario's repetitions out
+//! across worker threads and merges them into a [`ScenarioReport`].
+//!
+//! Determinism contract (pinned by `tests/scenario.rs`): repetition `r`
+//! of a cell depends only on the scenario spec, the cell, and `r` — its
+//! workload draw, arrival trace and stochastic fault trace all come
+//! from seeds derived via [`rep_seed`], the same parent-to-child PCG32
+//! stream-splitting discipline the parallel bisection uses. Threads
+//! only decide *which worker* computes a repetition; results land in
+//! per-repetition slots and are merged in repetition order after every
+//! worker joins, so the merged report is bit-identical at any
+//! `--threads` value. Repetition 0 keeps the base seeds verbatim, which
+//! is what makes a `--repetitions=1` run reproduce the hard-coded
+//! bench scenarios of PRs 4–6 exactly.
+
+use std::thread;
+
+use anyhow::{Context, Result};
+
+use crate::dag::workloads;
+use crate::dag::Dag;
+use crate::perfmodel::CalibratedModel;
+use crate::sched::{PlanCache, SchedulerRegistry};
+use crate::sim::{simulate_open_qos, ArrivalProcess, JobQos, SessionReport, SimConfig};
+use crate::util::rng::Pcg32;
+
+use super::report::{merge_cell, ScenarioReport};
+use super::spec::{ScenarioSpec, SweepCell};
+
+/// Stream selector for repetition-seed derivation (an arbitrary fixed
+/// constant, distinct from the bisection splitter's).
+const REP_STREAM: u64 = 0x5C3A_AB5E;
+
+/// Seed axes: each randomized ingredient of a repetition derives its
+/// seed on its own axis so the draws stay independent.
+const WORKLOAD_AXIS: u64 = 0;
+const ARRIVAL_AXIS: u64 = 1;
+const FAULT_AXIS: u64 = 2;
+
+/// Derive the seed repetition `rep` uses on `axis` from `base`.
+///
+/// Repetition 0 returns `base` unchanged — a single-repetition run is
+/// bit-identical to the pre-scenario hard-coded benches. Later
+/// repetitions draw from a PCG32 opened on a `(rep, axis)`-selected
+/// stream, so distinct repetitions (and distinct axes within one
+/// repetition) get statistically independent, platform-independent
+/// seeds — the `child_rng` discipline of the parallel partitioner.
+pub fn rep_seed(base: u64, rep: usize, axis: u64) -> u64 {
+    if rep == 0 {
+        return base;
+    }
+    Pcg32::new(base, REP_STREAM ^ ((rep as u64) << 8) ^ axis).next_u64()
+}
+
+/// How to run a scenario: replication override and worker-thread count.
+#[derive(Debug, Clone)]
+pub struct RunOptions {
+    /// Override the file's `repetitions` (e.g. `--repetitions=20`).
+    pub repetitions: Option<usize>,
+    /// Worker threads fanning repetitions out (results are
+    /// bit-identical at any value; this only buys wall-clock).
+    pub threads: usize,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        RunOptions { repetitions: None, threads: default_threads() }
+    }
+}
+
+/// Default worker count: the machine's parallelism, capped small — a
+/// cell rarely has more than a handful of repetitions in flight.
+pub fn default_threads() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+}
+
+/// Run one repetition of one cell, standalone. Public so tests (and
+/// debugging sessions) can pin that repetition `r` inside the threaded
+/// fan-out equals this exact call.
+pub fn run_repetition(spec: &ScenarioSpec, cell: &SweepCell, rep: usize) -> Result<SessionReport> {
+    let classed =
+        workloads::job_classes(&spec.classes, spec.jobs, rep_seed(spec.seed, rep, WORKLOAD_AXIS));
+    let dags: Vec<Dag> = classed.iter().map(|j| j.dag.clone()).collect();
+    let qos: Vec<JobQos> = classed.iter().map(|j| j.qos).collect();
+    let names = spec.class_names();
+
+    let mut stream = cell.stream.clone();
+    match &mut stream.arrival {
+        ArrivalProcess::Poisson { seed, .. } | ArrivalProcess::Bursty { seed, .. } => {
+            *seed = rep_seed(*seed, rep, ARRIVAL_AXIS);
+        }
+        ArrivalProcess::Closed | ArrivalProcess::Fixed { .. } => {}
+    }
+    let mut fault = spec.fault.clone();
+    if let Some(f) = &mut fault {
+        // Scripted windows are part of the scenario's definition and
+        // replay identically; only the stochastic trace re-derives.
+        if f.scripted.is_empty() {
+            f.seed = rep_seed(f.seed, rep, FAULT_AXIS);
+        }
+    }
+
+    let mut scheduler = SchedulerRegistry::builtin()
+        .create(&cell.scheduler)
+        .with_context(|| format!("scheduler spec {:?}", cell.scheduler))?;
+    let mut cache = PlanCache::new();
+    let platform = spec.platform();
+    let model =
+        if spec.tri_platform { CalibratedModel::tri_device() } else { CalibratedModel::paper() };
+    let sim_cfg = SimConfig { fault, ..Default::default() };
+    Ok(simulate_open_qos(
+        &dags,
+        &qos,
+        &names,
+        scheduler.as_mut(),
+        &platform,
+        &model,
+        &sim_cfg,
+        &stream,
+        &mut cache,
+    ))
+}
+
+/// Run every repetition of one cell, fanned across `threads` workers
+/// in contiguous chunks, and return the reports in repetition order.
+pub fn run_cell(
+    spec: &ScenarioSpec,
+    cell: &SweepCell,
+    reps: usize,
+    threads: usize,
+) -> Result<Vec<SessionReport>> {
+    let mut slots: Vec<Option<Result<SessionReport>>> = (0..reps).map(|_| None).collect();
+    let chunk = reps.div_ceil(threads.max(1));
+    thread::scope(|s| {
+        for (ci, chunk_slots) in slots.chunks_mut(chunk).enumerate() {
+            s.spawn(move || {
+                for (offset, slot) in chunk_slots.iter_mut().enumerate() {
+                    *slot = Some(run_repetition(spec, cell, ci * chunk + offset));
+                }
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .enumerate()
+        .map(|(rep, slot)| {
+            slot.expect("worker filled every slot")
+                .with_context(|| format!("cell {:?} repetition {rep}", cell.label))
+        })
+        .collect()
+}
+
+/// Run the whole scenario: every sweep cell × every repetition, merged
+/// into a [`ScenarioReport`] with mean/stddev/95%-CI statistics.
+pub fn run_scenario(spec: &ScenarioSpec, opts: &RunOptions) -> Result<ScenarioReport> {
+    let reps = opts.repetitions.unwrap_or(spec.repetitions).max(1);
+    let cells = spec.cells()?;
+    // Validate every scheduler spec before burning simulation time.
+    let registry = SchedulerRegistry::builtin();
+    for cell in &cells {
+        registry
+            .create(&cell.scheduler)
+            .with_context(|| format!("scheduler spec {:?}", cell.scheduler))?;
+    }
+    let mut merged = Vec::with_capacity(cells.len());
+    for cell in &cells {
+        let sessions = run_cell(spec, cell, reps, opts.threads)?;
+        merged.push(merge_cell(spec, cell, &sessions));
+    }
+    Ok(ScenarioReport {
+        name: spec.name.clone(),
+        jobs: spec.jobs,
+        seed: spec.seed,
+        repetitions: reps,
+        scheduler_axis: spec.scheduler_axis.clone(),
+        admit_axis: spec.admit_axis.clone(),
+        stream_axis: spec.stream_axis.clone(),
+        cells: merged,
+    })
+}

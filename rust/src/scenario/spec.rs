@@ -1,0 +1,441 @@
+//! Declarative scenario specs: the parsed form of a `scenarios/*.toml`
+//! file and the sweep-cell cross product it expands into.
+//!
+//! The file format is the same INI subset [`crate::config::parse_raw`]
+//! reads (`[section]` headers, `key = value`, `#` comments, duplicate
+//! keys rejected). Every section and key is checked against the grammar
+//! below; unknown ones are hard errors, mirroring the loud-failure
+//! discipline of [`crate::sched::registry::SchedParams`] — a typo in an
+//! experiment file must never silently fall back to a default.
+//!
+//! ```text
+//! [scenario]
+//! name        = open-qos        # required
+//! jobs        = 24              # jobs per repetition      (default 24)
+//! seed        = 2015            # base seed                (default 2015)
+//! repetitions = 20              # default replication count (default 8)
+//!
+//! [platform]
+//! kind = paper                  # paper | tri              (default paper)
+//!
+//! [workload]
+//! classes = "default"           # class-mix spec; see
+//!                               # `workloads::parse_class_mix`
+//!
+//! [stream]                      # fixed traffic (no stream sweep axis)
+//! spec = "stream:arrival=poisson,rate=220,queue=8"
+//!
+//! [fault]                       # optional failure injection
+//! spec = "fault:at=60:dev=1:down=40;refetch=2"
+//!
+//! [sweep]                       # `|`-separated axis values; the cell
+//!                               # set is the full cross product
+//! scheduler = "dmda|gp|gp:window=12"      # (default "gp")
+//! admit     = "fifo|edf|sjf|reject"       # (default "fifo")
+//! stream    = "spec1|spec2"     # stream axis — mutually exclusive
+//!                               # with a [stream] section
+//! ```
+//!
+//! `admit` values other than `fifo` are appended to the base stream
+//! spec (`...,admit=edf`), so a base spec that already pins `admit=`
+//! cannot also be swept.
+
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::BTreeMap;
+
+use crate::config::{parse_raw, RawConfig};
+use crate::dag::workloads::{self, JobClass};
+use crate::platform::Platform;
+use crate::sim::{FaultSpec, StreamConfig};
+
+/// A parsed scenario file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    /// Scenario name (`[scenario] name`, required).
+    pub name: String,
+    /// Jobs submitted per repetition.
+    pub jobs: usize,
+    /// Base seed; repetition `r` derives its streams from it via
+    /// [`crate::scenario::runner::rep_seed`].
+    pub seed: u64,
+    /// Default replication count (`--repetitions` overrides at run
+    /// time; committed bench rows require at least 2).
+    pub repetitions: usize,
+    /// `[platform] kind = tri` selects the three-device platform.
+    pub tri_platform: bool,
+    /// QoS class mix driving the per-repetition workload draw.
+    pub classes: Vec<JobClass>,
+    /// Optional failure injection, shared by every cell.
+    pub fault: Option<FaultSpec>,
+    /// Scheduler sweep axis (registry config strings).
+    pub scheduler_axis: Vec<String>,
+    /// Admission sweep axis (`fifo | edf | sjf | reject` values).
+    pub admit_axis: Vec<String>,
+    /// Stream sweep axis (raw stream spec strings); a single entry when
+    /// the scenario fixes its traffic with a `[stream]` section.
+    pub stream_axis: Vec<String>,
+}
+
+/// One point of the sweep cross product: a fully-resolved
+/// (stream × scheduler × admission) experiment cell.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepCell {
+    /// Display label: the scheduler spec, plus the admission policy
+    /// and/or the distinguishing stream tokens when those axes vary.
+    pub label: String,
+    /// Registry config string driving dispatch.
+    pub scheduler: String,
+    /// Admission axis value folded into `stream`.
+    pub admit: String,
+    /// Resolved traffic (base stream spec + `admit=`).
+    pub stream: StreamConfig,
+}
+
+/// One section's keys, consumed [`crate::sched::registry::SchedParams`]
+/// style: every key must be taken before `finish`, so unknown keys in a
+/// scenario file fail loudly with the section name and the known set.
+struct Section<'a> {
+    name: &'a str,
+    known: &'a [&'a str],
+    keys: BTreeMap<String, String>,
+}
+
+impl<'a> Section<'a> {
+    fn new(raw: &RawConfig, name: &'a str, known: &'a [&'a str]) -> Section<'a> {
+        Section { name, known, keys: raw.get(name).cloned().unwrap_or_default() }
+    }
+
+    fn take(&mut self, key: &str) -> Option<String> {
+        debug_assert!(self.known.contains(&key));
+        self.keys.remove(key)
+    }
+
+    fn take_parsed<T: std::str::FromStr>(&mut self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::error::Error + Send + Sync + 'static,
+    {
+        match self.take(key) {
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("bad [{}] {key} value {v:?}", self.name)),
+            None => Ok(default),
+        }
+    }
+
+    fn finish(self) -> Result<()> {
+        if let Some(unknown) = self.keys.keys().next() {
+            bail!(
+                "unknown key {unknown:?} in [{}] (known: {})",
+                self.name,
+                self.known.join(", ")
+            );
+        }
+        Ok(())
+    }
+}
+
+const SECTIONS: [&str; 6] = ["scenario", "platform", "workload", "stream", "fault", "sweep"];
+
+impl ScenarioSpec {
+    /// Parse a scenario file's text (and validate its sweep expands).
+    pub fn parse(src: &str) -> Result<ScenarioSpec> {
+        let spec = Self::from_raw(&parse_raw(src)?)?;
+        spec.cells()?;
+        Ok(spec)
+    }
+
+    /// Build from a parsed raw config, checking every section and key.
+    pub fn from_raw(raw: &RawConfig) -> Result<ScenarioSpec> {
+        for section in raw.keys() {
+            if section.is_empty() {
+                bail!("scenario files have no top-level keys (put them under a [section])");
+            }
+            if !SECTIONS.contains(&section.as_str()) {
+                bail!("unknown section [{section}] (known: {})", SECTIONS.join(", "));
+            }
+        }
+
+        let mut sc = Section::new(raw, "scenario", &["name", "jobs", "seed", "repetitions"]);
+        let name = sc
+            .take("name")
+            .context("missing required [scenario] name")?;
+        let jobs = sc.take_parsed("jobs", 24usize)?;
+        let seed = sc.take_parsed("seed", 2015u64)?;
+        let repetitions = sc.take_parsed("repetitions", 8usize)?;
+        sc.finish()?;
+        ensure!(jobs > 0, "[scenario] jobs must be > 0");
+        ensure!(repetitions > 0, "[scenario] repetitions must be > 0");
+
+        let mut pl = Section::new(raw, "platform", &["kind"]);
+        let tri_platform = match pl.take("kind").as_deref().unwrap_or("paper") {
+            "paper" => false,
+            "tri" => true,
+            other => bail!("unknown [platform] kind {other:?} (paper | tri)"),
+        };
+        pl.finish()?;
+
+        let mut wl = Section::new(raw, "workload", &["classes"]);
+        let classes_spec = wl.take("classes").unwrap_or_else(|| "default".to_string());
+        let classes = workloads::parse_class_mix(&classes_spec)
+            .with_context(|| format!("[workload] classes spec {classes_spec:?}"))?;
+        wl.finish()?;
+
+        let mut st = Section::new(raw, "stream", &["spec"]);
+        let base_stream = st.take("spec");
+        st.finish()?;
+        if let Some(spec) = &base_stream {
+            StreamConfig::from_spec(spec).with_context(|| format!("[stream] spec {spec:?}"))?;
+        }
+
+        let mut fa = Section::new(raw, "fault", &["spec"]);
+        let fault = match fa.take("spec") {
+            Some(spec) => Some(
+                FaultSpec::from_spec(&spec).with_context(|| format!("[fault] spec {spec:?}"))?,
+            ),
+            None => None,
+        };
+        fa.finish()?;
+
+        let mut sw = Section::new(raw, "sweep", &["scheduler", "admit", "stream"]);
+        let scheduler_axis = parse_axis("sweep scheduler", sw.take("scheduler"), "gp")?;
+        let admit_axis = parse_axis("sweep admit", sw.take("admit"), "fifo")?;
+        let sweep_stream = sw.take("stream");
+        sw.finish()?;
+
+        let stream_axis = match (base_stream, sweep_stream) {
+            (Some(_), Some(_)) => {
+                bail!("[stream] spec and [sweep] stream are mutually exclusive")
+            }
+            (Some(base), None) => vec![base],
+            (None, Some(axis)) => parse_axis("sweep stream", Some(axis), "")?,
+            (None, None) => vec!["stream:arrival=closed".to_string()],
+        };
+        for spec in &stream_axis {
+            StreamConfig::from_spec(spec).with_context(|| format!("stream spec {spec:?}"))?;
+        }
+
+        Ok(ScenarioSpec {
+            name,
+            jobs,
+            seed,
+            repetitions,
+            tri_platform,
+            classes,
+            fault,
+            scheduler_axis,
+            admit_axis,
+            stream_axis,
+        })
+    }
+
+    /// Expand the sweep axes into their full cross product, in
+    /// deterministic (stream, scheduler, admit) nesting order.
+    pub fn cells(&self) -> Result<Vec<SweepCell>> {
+        let stream_tags = distinguishing_tokens(&self.stream_axis);
+        let mut out = Vec::new();
+        for (si, base) in self.stream_axis.iter().enumerate() {
+            for scheduler in &self.scheduler_axis {
+                for admit in &self.admit_axis {
+                    let stream = stream_with_admit(base, admit)?;
+                    let mut label = scheduler.clone();
+                    if admit != "fifo" || self.admit_axis.len() > 1 {
+                        label = format!("{label}+{admit}");
+                    }
+                    if self.stream_axis.len() > 1 {
+                        label = format!("{label}@{}", stream_tags[si]);
+                    }
+                    out.push(SweepCell {
+                        label,
+                        scheduler: scheduler.clone(),
+                        admit: admit.clone(),
+                        stream,
+                    });
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Materialize the platform the scenario runs against.
+    pub fn platform(&self) -> Platform {
+        if self.tri_platform {
+            Platform::tri_device()
+        } else {
+            Platform::paper()
+        }
+    }
+
+    /// Display names of the QoS classes in the workload mix.
+    pub fn class_names(&self) -> Vec<String> {
+        workloads::class_names(&self.classes)
+    }
+}
+
+/// Split a `|`-separated sweep axis, rejecting empties and duplicates.
+fn parse_axis(what: &str, value: Option<String>, default: &str) -> Result<Vec<String>> {
+    let src = value.unwrap_or_else(|| default.to_string());
+    let mut out: Vec<String> = Vec::new();
+    for part in src.split('|') {
+        let part = part.trim();
+        ensure!(!part.is_empty(), "{what} axis has an empty entry in {src:?}");
+        ensure!(
+            !out.iter().any(|p| p == part),
+            "{what} axis repeats {part:?}"
+        );
+        out.push(part.to_string());
+    }
+    Ok(out)
+}
+
+/// Resolve a cell's traffic: the base stream spec with the admission
+/// axis value appended (`fifo` is the spec default and appends nothing,
+/// matching how the hard-coded `open-qos` bench built its sweep).
+fn stream_with_admit(base: &str, admit: &str) -> Result<StreamConfig> {
+    if admit == "fifo" {
+        return StreamConfig::from_spec(base);
+    }
+    ensure!(
+        !base.contains("admit="),
+        "stream spec {base:?} already pins admit=, so the admit axis cannot vary it"
+    );
+    StreamConfig::from_spec(&format!("{base},admit={admit}"))
+        .with_context(|| format!("applying admit={admit} to stream spec {base:?}"))
+}
+
+/// Per-entry label fragments for a multi-valued stream axis: the
+/// comma-separated tokens of each spec that are not shared by all
+/// entries (for a rate sweep that is just `rate=240`), falling back to
+/// the entry index when a spec has no distinguishing token.
+fn distinguishing_tokens(axis: &[String]) -> Vec<String> {
+    let token_sets: Vec<Vec<&str>> =
+        axis.iter().map(|s| s.split(',').map(str::trim).collect()).collect();
+    axis.iter()
+        .enumerate()
+        .map(|(i, _)| {
+            let own: Vec<&str> = token_sets[i]
+                .iter()
+                .filter(|t| !token_sets.iter().enumerate().all(|(j, _)| j == i || token_sets[j].contains(t)))
+                .copied()
+                .collect();
+            if own.is_empty() {
+                format!("s{i}")
+            } else {
+                own.join(",")
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{AdmissionPolicy, ArrivalProcess};
+
+    fn minimal(extra: &str) -> String {
+        format!("[scenario]\nname = t\n{extra}")
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let s = ScenarioSpec::parse(&minimal("")).unwrap();
+        assert_eq!(s.name, "t");
+        assert_eq!((s.jobs, s.seed, s.repetitions), (24, 2015, 8));
+        assert!(!s.tri_platform);
+        assert_eq!(s.classes, workloads::default_qos_mix());
+        assert!(s.fault.is_none());
+        assert_eq!(s.scheduler_axis, ["gp"]);
+        assert_eq!(s.admit_axis, ["fifo"]);
+        assert_eq!(s.stream_axis, ["stream:arrival=closed"]);
+        let cells = s.cells().unwrap();
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].label, "gp");
+        assert_eq!(cells[0].stream.arrival, ArrivalProcess::Closed);
+    }
+
+    #[test]
+    fn unknown_sections_and_keys_are_loud() {
+        let e = ScenarioSpec::parse(&minimal("[warp]\nx = 1\n")).unwrap_err().to_string();
+        assert!(e.contains("unknown section [warp]"), "{e}");
+        let e = ScenarioSpec::parse(&minimal("[platform]\nkindd = tri\n"))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("unknown key \"kindd\"") && e.contains("[platform]"), "{e}");
+        let e = ScenarioSpec::parse("[scenario]\nname = t\nrepetitons = 3\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("unknown key \"repetitons\""), "{e}");
+        let e = ScenarioSpec::parse("jobs = 3\n").unwrap_err().to_string();
+        assert!(e.contains("no top-level keys"), "{e}");
+    }
+
+    #[test]
+    fn missing_name_and_bad_values_are_loud() {
+        assert!(ScenarioSpec::parse("[scenario]\njobs = 4\n").is_err());
+        assert!(ScenarioSpec::parse(&minimal("jobs = none\n")).is_err());
+        assert!(ScenarioSpec::parse("[scenario]\nname = t\njobs = 0\n").is_err());
+        assert!(ScenarioSpec::parse("[scenario]\nname = t\nrepetitions = 0\n").is_err());
+        assert!(ScenarioSpec::parse(&minimal("[platform]\nkind = mars\n")).is_err());
+        assert!(ScenarioSpec::parse(&minimal("[workload]\nclasses = \"family=ring\"\n")).is_err());
+        assert!(ScenarioSpec::parse(&minimal("[stream]\nspec = \"stream:arrival=warp\"\n")).is_err());
+        assert!(ScenarioSpec::parse(&minimal("[fault]\nspec = \"fault:at=1:dev=0:down=5\"\n")).is_err());
+    }
+
+    #[test]
+    fn sweep_axes_cross_product() {
+        let s = ScenarioSpec::parse(&minimal(
+            "[stream]\nspec = \"stream:arrival=poisson,rate=100,queue=4\"\n\
+             [sweep]\nscheduler = \"dmda|gp\"\nadmit = \"fifo|edf\"\n",
+        ))
+        .unwrap();
+        let cells = s.cells().unwrap();
+        assert_eq!(cells.len(), 4);
+        let labels: Vec<&str> = cells.iter().map(|c| c.label.as_str()).collect();
+        assert_eq!(labels, ["dmda+fifo", "dmda+edf", "gp+fifo", "gp+edf"]);
+        assert_eq!(cells[1].stream.admit, AdmissionPolicy::Edf);
+        assert_eq!(cells[0].stream.admit, AdmissionPolicy::Fifo);
+    }
+
+    #[test]
+    fn stream_axis_labels_carry_distinguishing_tokens() {
+        let s = ScenarioSpec::parse(&minimal(
+            "[sweep]\nscheduler = \"dmda\"\n\
+             stream = \"stream:arrival=poisson,rate=120,queue=8|stream:arrival=poisson,rate=240,queue=8\"\n",
+        ))
+        .unwrap();
+        let cells = s.cells().unwrap();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].label, "dmda@rate=120");
+        assert_eq!(cells[1].label, "dmda@rate=240");
+    }
+
+    #[test]
+    fn sweep_conflicts_are_loud() {
+        // Fixed [stream] and a stream axis cannot coexist.
+        assert!(ScenarioSpec::parse(&minimal(
+            "[stream]\nspec = \"stream:arrival=fixed,rate=10\"\n\
+             [sweep]\nstream = \"stream:arrival=fixed,rate=20\"\n",
+        ))
+        .is_err());
+        // A base spec pinning admit= cannot also sweep admit.
+        assert!(ScenarioSpec::parse(&minimal(
+            "[stream]\nspec = \"stream:arrival=fixed,rate=10,admit=edf\"\n\
+             [sweep]\nadmit = \"fifo|sjf\"\n",
+        ))
+        .is_err());
+        // Admission sweeps need timed arrivals.
+        assert!(ScenarioSpec::parse(&minimal("[sweep]\nadmit = \"fifo|edf\"\n")).is_err());
+        // Duplicate and empty axis entries.
+        assert!(ScenarioSpec::parse(&minimal("[sweep]\nscheduler = \"gp|gp\"\n")).is_err());
+        assert!(ScenarioSpec::parse(&minimal("[sweep]\nscheduler = \"gp||dmda\"\n")).is_err());
+        // Unknown admit values fail at expansion.
+        assert!(ScenarioSpec::parse(&minimal(
+            "[stream]\nspec = \"stream:arrival=fixed,rate=10\"\n[sweep]\nadmit = \"lifo\"\n",
+        ))
+        .is_err());
+    }
+
+    #[test]
+    fn duplicate_keys_rejected_by_the_raw_parser() {
+        assert!(ScenarioSpec::parse("[scenario]\nname = a\nname = b\n").is_err());
+    }
+}

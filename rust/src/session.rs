@@ -24,6 +24,14 @@
 //! mean queueing delay, throughput, session-level device utilization —
 //! come from one place.
 //!
+//! A single session is one *sample* of an experiment. For replicated
+//! experiments — the same traffic re-run on derived seeds, merged into
+//! mean/stddev/95%-CI statistics — drive sessions through the
+//! [`crate::scenario`] subsystem instead of hand-rolling loops over
+//! `SchedSession`: its runner reproduces this module's engine calls
+//! exactly (repetition 0 is bit-identical to a single session) and
+//! fans repetitions across threads deterministically.
+//!
 //! ```no_run
 //! use hetsched::dag::{generate_layered, GeneratorConfig, KernelKind};
 //! use hetsched::perfmodel::CalibratedModel;

@@ -45,7 +45,7 @@ pub use engine::{
     est_total_work_ms, simulate, simulate_open, simulate_open_qos, simulate_stream,
     simulate_with_plan, SimConfig,
 };
-pub use report::{ClassReport, JobTiming, RunReport, SessionReport, TraceEvent};
+pub use report::{ClassReport, JobTiming, RunReport, SessionReport, TraceEvent, SCALAR_METRICS};
 pub use stream::{
     AdmissionPolicy, ArrivalProcess, FaultSpec, JobQos, ScriptedFault, StreamConfig,
     DEFAULT_QUEUE,

@@ -222,6 +222,24 @@ pub struct SessionReport {
     pub recovery_replans: u64,
 }
 
+/// Names of the per-session scalar metrics, in the order
+/// [`SessionReport::scalar_metrics`] emits them. The scenario harness
+/// keys its merged mean/stddev/CI statistics by these names, and the
+/// `BENCH_scenarios.json` schema check pins them.
+pub const SCALAR_METRICS: [&str; 11] = [
+    "span_ms",
+    "mean_sojourn_ms",
+    "p50_sojourn_ms",
+    "p95_sojourn_ms",
+    "p99_sojourn_ms",
+    "mean_queue_delay_ms",
+    "throughput_jps",
+    "goodput_jps",
+    "deadline_hit_rate",
+    "rejected_jobs",
+    "max_concurrent_jobs",
+];
+
 impl SessionReport {
     pub fn new(scheduler: &str) -> SessionReport {
         SessionReport { scheduler: scheduler.to_string(), ..Default::default() }
@@ -435,6 +453,26 @@ impl SessionReport {
             best = best.max(cur);
         }
         best.max(0) as usize
+    }
+
+    /// The scalar session metrics the scenario replication harness
+    /// merges across repetitions, as `(name, value)` pairs in
+    /// [`SCALAR_METRICS`] order. Counts are widened to `f64` so every
+    /// metric flows through the same Welford accumulator.
+    pub fn scalar_metrics(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("span_ms", self.span_ms),
+            ("mean_sojourn_ms", self.mean_sojourn_ms()),
+            ("p50_sojourn_ms", self.p50_sojourn_ms()),
+            ("p95_sojourn_ms", self.p95_sojourn_ms()),
+            ("p99_sojourn_ms", self.p99_sojourn_ms()),
+            ("mean_queue_delay_ms", self.mean_queueing_delay_ms()),
+            ("throughput_jps", self.throughput_jps()),
+            ("goodput_jps", self.goodput_jps()),
+            ("deadline_hit_rate", self.deadline_hit_rate()),
+            ("rejected_jobs", self.rejected_count() as f64),
+            ("max_concurrent_jobs", self.max_concurrent_jobs() as f64),
+        ]
     }
 
     // --- per-class SLO breakdown ------------------------------------

@@ -1,5 +1,116 @@
-//! Lightweight descriptive statistics used by the bench harness and the
-//! metrics subsystem.
+//! Lightweight descriptive statistics used by the bench harness, the
+//! metrics subsystem and the scenario replication merger.
+//!
+//! [`Welford`] is the mergeable core: a streaming mean/variance
+//! accumulator (Welford's algorithm, with Chan et al.'s parallel merge)
+//! that also yields Student-t 95% confidence intervals — the statistic
+//! every [`crate::scenario`] replication report is built from.
+//! [`Summary`] wraps it with the order statistics (min/max/percentiles)
+//! that need the full sample.
+
+/// Streaming mean/variance accumulator (Welford's online algorithm).
+///
+/// Numerically stable, O(1) per observation, and *mergeable*: two
+/// accumulators built over disjoint sample halves combine into the
+/// accumulator of the union (Chan et al. 1979), which is what lets the
+/// scenario runner fold per-repetition metrics in any grouping while the
+/// final statistics stay invariant (up to float rounding; the runner
+/// folds in repetition order so reports are bit-identical regardless of
+/// thread count).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Welford {
+        Welford::default()
+    }
+
+    /// Fold one observation.
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    /// Fold another accumulator built over a disjoint sample (Chan's
+    /// parallel combine). `merge` of per-chunk accumulators equals (to
+    /// rounding) pushing every observation into one accumulator.
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = *other;
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        let mean = self.mean + d * (other.n as f64 / n as f64);
+        let m2 = self.m2 + other.m2 + d * d * (self.n as f64 * other.n as f64 / n as f64);
+        *self = Welford { n, mean, m2 };
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Sample mean (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Unbiased sample variance (n-1 denominator); 0.0 for n < 2.
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    /// Sample standard deviation; 0.0 for n < 2.
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Half-width of the two-sided Student-t 95% confidence interval of
+    /// the mean: `t(n-1, 0.975) * s / sqrt(n)`. 0.0 for n < 2 (a single
+    /// repetition degenerates to the point value with no error bar).
+    pub fn ci95_half_width(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        t95(self.n - 1) * self.stddev() / (self.n as f64).sqrt()
+    }
+}
+
+/// Two-sided 95% Student-t critical value `t(df, 0.975)`.
+///
+/// Hand-carried table (no stats crates offline): exact for df 1..=30,
+/// then the conventional step values at 40/60/120 df and the normal
+/// limit 1.960 beyond — monotone non-increasing in df, and transliterated
+/// verbatim in `python/tools/sched_mirror.py` so both harnesses compute
+/// bit-identical intervals.
+pub fn t95(df: u64) -> f64 {
+    const TABLE: [f64; 30] = [
+        12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228, 2.201, 2.179,
+        2.160, 2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086, 2.080, 2.074, 2.069, 2.064,
+        2.060, 2.056, 2.052, 2.048, 2.045, 2.042,
+    ];
+    match df {
+        0 => f64::INFINITY,
+        1..=30 => TABLE[(df - 1) as usize],
+        31..=40 => 2.021,
+        41..=60 => 2.000,
+        61..=120 => 1.980,
+        _ => 1.960,
+    }
+}
 
 /// Summary statistics over a sample of f64 observations.
 #[derive(Debug, Clone, PartialEq)]
@@ -7,6 +118,9 @@ pub struct Summary {
     pub n: usize,
     pub mean: f64,
     pub std: f64,
+    /// Half-width of the Student-t 95% confidence interval of the mean
+    /// ([`Welford::ci95_half_width`]); 0.0 for n < 2.
+    pub ci95: f64,
     pub min: f64,
     pub max: f64,
     pub median: f64,
@@ -17,21 +131,29 @@ impl Summary {
     /// Compute summary statistics; returns a zeroed summary for empty input.
     pub fn from(samples: &[f64]) -> Summary {
         if samples.is_empty() {
-            return Summary { n: 0, mean: 0.0, std: 0.0, min: 0.0, max: 0.0, median: 0.0, p95: 0.0 };
+            return Summary {
+                n: 0,
+                mean: 0.0,
+                std: 0.0,
+                ci95: 0.0,
+                min: 0.0,
+                max: 0.0,
+                median: 0.0,
+                p95: 0.0,
+            };
         }
         let n = samples.len();
-        let mean = samples.iter().sum::<f64>() / n as f64;
-        let var = if n > 1 {
-            samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
-        } else {
-            0.0
-        };
+        let mut w = Welford::new();
+        for &x in samples {
+            w.push(x);
+        }
         let mut sorted = samples.to_vec();
         sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
         Summary {
             n,
-            mean,
-            std: var.sqrt(),
+            mean: w.mean(),
+            std: w.stddev(),
+            ci95: w.ci95_half_width(),
             min: sorted[0],
             max: sorted[n - 1],
             median: percentile_sorted(&sorted, 50.0),
@@ -142,5 +264,121 @@ mod tests {
     fn geomean_basic() {
         assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
         assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_matches_naive_moments() {
+        let xs = [3.0, 1.5, 4.25, -2.0, 0.5, 9.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var =
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (xs.len() - 1) as f64;
+        assert_eq!(w.count(), 6);
+        assert!((w.mean() - mean).abs() < 1e-12);
+        assert!((w.variance() - var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_merge_equals_sequential() {
+        let xs: Vec<f64> = (0..40).map(|i| ((i * 37 + 11) % 17) as f64 * 0.75).collect();
+        let mut seq = Welford::new();
+        for &x in &xs {
+            seq.push(x);
+        }
+        // Merge in several groupings: all must agree with sequential.
+        for split in [1usize, 7, 13, 20, 39] {
+            let (a, b) = xs.split_at(split);
+            let mut wa = Welford::new();
+            let mut wb = Welford::new();
+            a.iter().for_each(|&x| wa.push(x));
+            b.iter().for_each(|&x| wb.push(x));
+            let mut merged = wa;
+            merged.merge(&wb);
+            assert_eq!(merged.count(), seq.count());
+            assert!((merged.mean() - seq.mean()).abs() < 1e-9, "split {split}");
+            assert!((merged.variance() - seq.variance()).abs() < 1e-9, "split {split}");
+        }
+        // Merge order invariance: (a+b)+c vs a+(b+c).
+        let (a, rest) = xs.split_at(10);
+        let (b, c) = rest.split_at(15);
+        let fold = |chunks: &[&[f64]]| {
+            let mut acc = Welford::new();
+            for ch in chunks {
+                let mut w = Welford::new();
+                ch.iter().for_each(|&x| w.push(x));
+                acc.merge(&w);
+            }
+            acc
+        };
+        let left = fold(&[a, b, c]);
+        let right = fold(&[c, a, b]);
+        assert!((left.mean() - right.mean()).abs() < 1e-9);
+        assert!((left.ci95_half_width() - right.ci95_half_width()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn welford_merge_empty_identity() {
+        let mut w = Welford::new();
+        w.push(2.0);
+        w.push(4.0);
+        let before = w;
+        w.merge(&Welford::new());
+        assert_eq!(w, before);
+        let mut e = Welford::new();
+        e.merge(&before);
+        assert_eq!(e, before);
+    }
+
+    #[test]
+    fn welford_single_sample_degenerates_to_point() {
+        let mut w = Welford::new();
+        w.push(7.25);
+        assert_eq!(w.count(), 1);
+        assert_eq!(w.mean(), 7.25);
+        assert_eq!(w.stddev(), 0.0);
+        assert_eq!(w.ci95_half_width(), 0.0, "one repetition has no error bar");
+    }
+
+    #[test]
+    fn ci_shrinks_with_sample_count() {
+        // Same underlying spread, more observations: the t-interval
+        // tightens roughly as 1/sqrt(n).
+        let sample = |n: usize| {
+            let mut w = Welford::new();
+            for i in 0..n {
+                w.push(((i * 31 + 7) % 10) as f64);
+            }
+            w
+        };
+        let small = sample(10).ci95_half_width();
+        let big = sample(40).ci95_half_width();
+        assert!(big < small, "ci95 {big} at n=40 should beat {small} at n=10");
+        assert!(big > 0.0);
+    }
+
+    #[test]
+    fn t_table_monotone_and_anchored() {
+        assert_eq!(t95(1), 12.706);
+        assert_eq!(t95(19), 2.093, "df for the acceptance 20-rep scenario");
+        assert_eq!(t95(30), 2.042);
+        assert_eq!(t95(1000), 1.960);
+        let mut prev = f64::INFINITY;
+        for df in 1..200 {
+            let t = t95(df);
+            assert!(t <= prev, "t95 must be non-increasing (df {df})");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn summary_carries_ci() {
+        let s = Summary::from(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        // t(4) * std / sqrt(5).
+        let expect = 2.776 * (2.5f64).sqrt() / (5.0f64).sqrt();
+        assert!((s.ci95 - expect).abs() < 1e-12);
+        assert_eq!(Summary::from(&[7.5]).ci95, 0.0);
     }
 }

@@ -432,3 +432,61 @@ fn forall_formula1_probability_vector() {
         assert!((r[0] - t1 / (t0 + t1)).abs() < 1e-9, "Formula (1) violated");
     }
 }
+
+/// Welford replication statistics: any chunking of a sample merged in
+/// any order agrees with the sequential accumulation (within fp
+/// tolerance), the CI half-width tightens as samples grow on a fixed
+/// spread, and one sample degenerates to an error-bar-free point.
+#[test]
+fn forall_welford_merge_invariance() {
+    use hetsched::util::stats::Welford;
+    let mut rng = Pcg32::seeded(0x57A7);
+    for trial in 0..50 {
+        let n = rng.gen_range_usize(2, 200);
+        let xs: Vec<f64> = (0..n).map(|_| rng.gen_f64() * 500.0 - 100.0).collect();
+        let mut seq = Welford::new();
+        xs.iter().for_each(|&x| seq.push(x));
+        // Random chunking, merged in shuffled chunk order.
+        let mut chunks: Vec<Welford> = Vec::new();
+        let mut i = 0;
+        while i < n {
+            let take = rng.gen_range_usize(1, (n - i).min(20) + 1);
+            let mut w = Welford::new();
+            xs[i..i + take].iter().for_each(|&x| w.push(x));
+            chunks.push(w);
+            i += take;
+        }
+        // Fisher-Yates shuffle of the chunk order.
+        for j in (1..chunks.len()).rev() {
+            let k = rng.gen_range_usize(0, j + 1);
+            chunks.swap(j, k);
+        }
+        let mut merged = Welford::new();
+        chunks.iter().for_each(|w| merged.merge(w));
+        assert_eq!(merged.count(), seq.count(), "trial {trial}");
+        assert!((merged.mean() - seq.mean()).abs() < 1e-9, "trial {trial}: mean drift");
+        assert!(
+            (merged.variance() - seq.variance()).abs() < 1e-6 * (1.0 + seq.variance()),
+            "trial {trial}: variance drift ({} vs {})",
+            merged.variance(),
+            seq.variance()
+        );
+        // One sample: point estimate, no error bar.
+        let mut single = Welford::new();
+        single.push(xs[0]);
+        assert_eq!(single.mean(), xs[0], "trial {trial}");
+        assert_eq!(single.ci95_half_width(), 0.0, "trial {trial}");
+        // Fixed spread, more samples: the t-interval tightens. Repeat
+        // the same sample 4x so mean/std are identical but n grows.
+        if seq.count() >= 2 && seq.stddev() > 0.0 {
+            let mut grown = seq;
+            for _ in 0..3 {
+                grown.merge(&seq);
+            }
+            assert!(
+                grown.ci95_half_width() < seq.ci95_half_width(),
+                "trial {trial}: CI failed to shrink with n"
+            );
+        }
+    }
+}

@@ -1,0 +1,238 @@
+//! Scenario subsystem guard-rails.
+//!
+//! Three contracts, in order of importance:
+//!
+//! 1. **Bench bit-identity** — the committed `scenarios/*.toml` files
+//!    replaced the hard-coded `bench stream` flag tuples of PRs 4–6, so
+//!    repetition 0 of each builtin cell must reproduce the old
+//!    hard-coded runs *exactly* (the old constants are transcribed
+//!    below and the two paths compared metric by metric).
+//! 2. **Replication determinism** — the merged `ScenarioReport` is
+//!    bit-identical at 1, 2 and 8 worker threads, repetition `i` of the
+//!    threaded fan-out equals a standalone `run_repetition(i)` call,
+//!    and derived per-repetition seeds never collide.
+//! 3. **The statistics acceptance headline** — at 20 repetitions of
+//!    `open-qos`, the fifo and edf deadline-hit 95% confidence
+//!    intervals do not overlap: the PR 5 headline (0.72 vs 1.00) is
+//!    significant, not a lucky seed.
+
+use hetsched::dag::{workloads, Dag};
+use hetsched::perfmodel::CalibratedModel;
+use hetsched::platform::Platform;
+use hetsched::scenario::{
+    load_builtin, rep_seed, run_cell, run_repetition, run_scenario, RunOptions, ScenarioSpec,
+};
+use hetsched::sched::{self, PlanCache};
+use hetsched::sim::{
+    simulate_open, simulate_open_qos, FaultSpec, JobQos, SessionReport, SimConfig, StreamConfig,
+};
+
+// --- the PR 4-6 hard-coded bench tuples, transcribed ----------------
+
+const OLD_OPEN_STREAM: &str = "stream:arrival=poisson,rate=220,queue=8";
+const OLD_QOS_STREAM: &str = "stream:arrival=bursty,rate=380,burst=8,queue=2,seed=7";
+const OLD_QOS_POLICY: &str = "dmda";
+const OLD_FAULT: &str = "fault:at=60:dev=1:down=40;refetch=2";
+const OLD_OPEN_JOBS: usize = 24;
+const OLD_SEED: u64 = 2015;
+
+fn old_open_phased() -> Vec<Dag> {
+    (0..OLD_OPEN_JOBS).map(|_| workloads::phased(8, 4, 256)).collect()
+}
+
+fn run_old_open(dags: &[Dag], policy: &str, stream: &StreamConfig, fault: Option<FaultSpec>) -> SessionReport {
+    let platform = Platform::paper();
+    let model = CalibratedModel::paper();
+    let mut s = sched::by_name(policy).unwrap();
+    let mut cache = PlanCache::new();
+    let config = SimConfig { fault, ..Default::default() };
+    simulate_open(dags, s.as_mut(), &platform, &model, &config, stream, &mut cache)
+}
+
+/// Metric-by-metric exact equality between two engine runs.
+fn assert_metrics_identical(a: &SessionReport, b: &SessionReport, what: &str) {
+    for ((name, va), (_, vb)) in a.scalar_metrics().iter().zip(b.scalar_metrics().iter()) {
+        assert_eq!(va, vb, "{what}: metric {name} drifted");
+    }
+    assert_eq!(a.ledger.count, b.ledger.count, "{what}: transfer count drifted");
+    assert_eq!(a.job_count(), b.job_count(), "{what}: job count drifted");
+}
+
+#[test]
+fn open_poisson_rep0_matches_the_old_hardcoded_bench() {
+    let spec = load_builtin("open-poisson").unwrap();
+    assert_eq!((spec.jobs, spec.seed), (OLD_OPEN_JOBS, OLD_SEED));
+    assert_eq!(spec.stream_axis, [OLD_OPEN_STREAM]);
+    let dags = old_open_phased();
+    let stream = StreamConfig::from_spec(OLD_OPEN_STREAM).unwrap();
+    for cell in spec.cells().unwrap() {
+        let old = run_old_open(&dags, &cell.scheduler, &stream, None);
+        let new = run_repetition(&spec, &cell, 0).unwrap();
+        assert_metrics_identical(&old, &new, &format!("open-poisson {}", cell.label));
+    }
+}
+
+#[test]
+fn open_fault_rep0_matches_the_old_hardcoded_bench() {
+    let spec = load_builtin("open-fault").unwrap();
+    assert_eq!(spec.fault.as_ref().unwrap().spec_string(), OLD_FAULT);
+    let dags = old_open_phased();
+    let stream = StreamConfig::from_spec(OLD_OPEN_STREAM).unwrap();
+    let fault = FaultSpec::from_spec(OLD_FAULT).unwrap();
+    for cell in spec.cells().unwrap() {
+        let old = run_old_open(&dags, &cell.scheduler, &stream, Some(fault.clone()));
+        let new = run_repetition(&spec, &cell, 0).unwrap();
+        assert_metrics_identical(&old, &new, &format!("open-fault {}", cell.label));
+        assert!(new.failures_injected > 0, "scripted kill must fire in every repetition");
+    }
+}
+
+#[test]
+fn open_qos_rep0_matches_the_old_hardcoded_bench() {
+    let spec = load_builtin("open-qos").unwrap();
+    let classes = workloads::default_qos_mix();
+    assert_eq!(spec.classes, classes);
+    let classed = workloads::job_classes(&classes, OLD_OPEN_JOBS, OLD_SEED);
+    let dags: Vec<Dag> = classed.iter().map(|j| j.dag.clone()).collect();
+    let qos: Vec<JobQos> = classed.iter().map(|j| j.qos).collect();
+    let names = workloads::class_names(&classes);
+    let platform = Platform::paper();
+    let model = CalibratedModel::paper();
+    for cell in spec.cells().unwrap() {
+        let stream_spec = if cell.admit == "fifo" {
+            OLD_QOS_STREAM.to_string()
+        } else {
+            format!("{OLD_QOS_STREAM},admit={}", cell.admit)
+        };
+        let stream = StreamConfig::from_spec(&stream_spec).unwrap();
+        let mut s = sched::by_name(OLD_QOS_POLICY).unwrap();
+        let mut cache = PlanCache::new();
+        let old = simulate_open_qos(
+            &dags,
+            &qos,
+            &names,
+            s.as_mut(),
+            &platform,
+            &model,
+            &SimConfig::default(),
+            &stream,
+            &mut cache,
+        );
+        let new = run_repetition(&spec, &cell, 0).unwrap();
+        assert_metrics_identical(&old, &new, &format!("open-qos {}", cell.label));
+    }
+}
+
+// --- replication determinism ----------------------------------------
+
+#[test]
+fn merged_report_is_thread_count_invariant() {
+    let spec = load_builtin("open-qos").unwrap();
+    let run = |threads: usize| {
+        run_scenario(&spec, &RunOptions { repetitions: Some(6), threads }).unwrap()
+    };
+    let one = run(1);
+    let two = run(2);
+    let eight = run(8);
+    assert_eq!(one, two, "1-thread vs 2-thread merged reports diverged");
+    assert_eq!(one, eight, "1-thread vs 8-thread merged reports diverged");
+}
+
+#[test]
+fn fanned_out_repetition_equals_standalone_run() {
+    let spec = load_builtin("open-poisson").unwrap();
+    let cell = &spec.cells().unwrap()[1]; // dmda
+    let fanned = run_cell(&spec, cell, 5, 3).unwrap();
+    assert_eq!(fanned.len(), 5);
+    for (rep, session) in fanned.iter().enumerate() {
+        let standalone = run_repetition(&spec, cell, rep).unwrap();
+        assert_metrics_identical(session, &standalone, &format!("repetition {rep}"));
+    }
+}
+
+#[test]
+fn repetitions_actually_vary_and_seeds_never_collide() {
+    // Repetition 0 keeps the base seed on every axis (the bit-identity
+    // contract), so uniqueness is claimed across the base plus every
+    // derived (rep >= 1) seed.
+    let mut seen = std::collections::BTreeSet::new();
+    for axis in 0..3u64 {
+        assert_eq!(rep_seed(OLD_SEED, 0, axis), OLD_SEED, "rep 0 must keep the base seed");
+    }
+    seen.insert(OLD_SEED);
+    for rep in 1..8 {
+        for axis in 0..3u64 {
+            assert!(seen.insert(rep_seed(OLD_SEED, rep, axis)), "seed collision at {rep}/{axis}");
+        }
+    }
+    // Same base seeds, different repetitions: the sojourn distribution
+    // must actually change (otherwise the CI would be a lie).
+    let spec = load_builtin("open-poisson").unwrap();
+    let cell = &spec.cells().unwrap()[1];
+    let r0 = run_repetition(&spec, cell, 0).unwrap();
+    let r1 = run_repetition(&spec, cell, 1).unwrap();
+    assert_ne!(
+        r0.mean_sojourn_ms(),
+        r1.mean_sojourn_ms(),
+        "derived seeds produced identical repetitions"
+    );
+}
+
+#[test]
+fn single_repetition_degenerates_to_a_point_estimate() {
+    let spec = load_builtin("open-poisson").unwrap();
+    let report = run_scenario(&spec, &RunOptions { repetitions: Some(1), threads: 2 }).unwrap();
+    assert_eq!(report.repetitions, 1);
+    let cell = &report.cells[1];
+    let rep0 = run_repetition(&spec, &spec.cells().unwrap()[1], 0).unwrap();
+    for (name, value) in rep0.scalar_metrics() {
+        let stat = cell.metric(name).unwrap();
+        assert_eq!(stat.n, 1);
+        assert_eq!(stat.mean, value, "{name}: point estimate must be the rep-0 value");
+        assert_eq!((stat.std, stat.ci95), (0.0, 0.0), "{name}: no error bar from one sample");
+    }
+}
+
+#[test]
+fn bad_scheduler_specs_fail_before_any_simulation() {
+    let spec = ScenarioSpec::parse(
+        "[scenario]\nname = t\njobs = 2\n[sweep]\nscheduler = \"gp|warp-drive\"\n",
+    )
+    .unwrap();
+    let err = run_scenario(&spec, &RunOptions::default()).unwrap_err().to_string();
+    assert!(err.contains("warp-drive"), "{err}");
+}
+
+// --- the statistics acceptance headline ------------------------------
+
+#[test]
+fn open_qos_fifo_vs_edf_deadline_cis_are_disjoint_at_20_reps() {
+    let spec = load_builtin("open-qos").unwrap();
+    assert_eq!(spec.repetitions, 20, "committed repetition count is the acceptance pin");
+    let report = run_scenario(&spec, &RunOptions::default()).unwrap();
+    let fifo = report.cell("dmda+fifo").unwrap().metric("deadline_hit_rate").unwrap();
+    let edf = report.cell("dmda+edf").unwrap().metric("deadline_hit_rate").unwrap();
+    assert!(
+        edf.mean > fifo.mean,
+        "edf must beat fifo on deadline hits ({} vs {})",
+        edf.mean,
+        fifo.mean
+    );
+    assert!(
+        fifo.disjoint_from(&edf),
+        "fifo [{}, {}] vs edf [{}, {}] overlap: headline not significant",
+        fifo.lo(),
+        fifo.hi(),
+        edf.lo(),
+        edf.hi()
+    );
+    // Per-class SLOs surface in the merged report with matching arity.
+    for cell in &report.cells {
+        assert_eq!(cell.classes.len(), 3, "interactive/standard/batch breakdown");
+        assert_eq!(cell.repetitions, 20);
+        for (_, stat) in &cell.metrics {
+            assert_eq!(stat.n, 20);
+            assert!(stat.std >= 0.0 && stat.ci95 >= 0.0);
+        }
+    }
+}
