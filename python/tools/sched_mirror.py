@@ -25,6 +25,7 @@ Run:  python3 python/tools/sched_mirror.py checks   # assertion sweep
       python3 python/tools/sched_mirror.py tune     # gp-window sweep
 """
 
+import heapq
 import math
 import os
 import sys
@@ -708,6 +709,173 @@ def run(dag, name, model=None, workers=None, **kw):
 EV_DOWN, EV_UP, EV_DRAIN, EV_ARRIVAL, EV_READY, EV_REJECT = 0, 1, 2, 3, 4, 5
 
 
+# --------------------------------------------------- event-queue mirror
+#
+# Mirror of sim::equeue (keep in sync): the EventQueue seam with the
+# BinaryHeap reference and the ladder queue. Events are plain tuples
+# (time, kind, job, task, epoch); Python tuple comparison is the same
+# lexicographic total order the Rust engine uses, so both
+# implementations must produce identical pop sequences.
+
+LADDER_BUCKETS = 64
+LADDER_SPILL = 64
+LADDER_MAX_RUNGS = 8
+
+
+class HeapQueue:
+    """Mirror of equeue::HeapQueue (heapq on the full event tuple)."""
+
+    def __init__(self):
+        self._h = []
+
+    def schedule(self, ev):
+        heapq.heappush(self._h, ev)
+
+    def pop(self):
+        return heapq.heappop(self._h) if self._h else None
+
+    def __len__(self):
+        return len(self._h)
+
+
+class _Rung:
+    """Mirror of equeue::Rung."""
+
+    __slots__ = ("start", "width", "cur", "buckets")
+
+    def __init__(self, start, width):
+        self.start = start
+        self.width = width
+        self.cur = 0
+        self.buckets = [[] for _ in range(LADDER_BUCKETS)]
+
+    def bstart(self, i):
+        return self.start + i * self.width
+
+    def bucket_index(self, t):
+        n = len(self.buckets)
+        # Rust `as usize` saturates (negative -> 0, huge -> MAX).
+        idx = int((t - self.start) / self.width) if self.width > 0.0 else 0
+        idx = min(max(idx, 0), n - 1)
+        while idx + 1 < n and self.bstart(idx + 1) <= t:
+            idx += 1
+        while idx > 0 and self.bstart(idx) > t:
+            idx -= 1
+        return idx
+
+
+class LadderQueue:
+    """Mirror of equeue::LadderQueue: unsorted far-future top band, a
+    rung stack of fixed bucket arrays, and a descending-sorted bottom
+    band popped from the end."""
+
+    def __init__(self):
+        self.top = []
+        self.top_start = -math.inf
+        self.rungs = []
+        self.bottom = []
+        self.last_time = -math.inf
+        self.size = 0
+
+    def _spawn_or_spill(self, events):
+        parent = self.rungs[-1]
+        start = parent.bstart(parent.cur)
+        width = parent.width / LADDER_BUCKETS
+        tmin = min(e[0] for e in events)
+        tmax = max(e[0] for e in events)
+        if (
+            len(events) <= LADDER_SPILL
+            or len(self.rungs) >= LADDER_MAX_RUNGS
+            or tmin == tmax
+            or width <= 0.0
+        ):
+            events.sort(reverse=True)
+            self.bottom = events
+            parent.cur += 1
+            return
+        child = _Rung(start, width)
+        for ev in events:
+            child.buckets[child.bucket_index(ev[0])].append(ev)
+        # The parent's cur is NOT advanced: the child rung *is* that
+        # bucket; the parent advances when the child rung empties.
+        self.rungs.append(child)
+
+    def schedule(self, ev):
+        t = ev[0]
+        assert t >= self.last_time, f"event scheduled in the past: {t} < {self.last_time}"
+        self.size += 1
+        if t > self.top_start:
+            self.top.append(ev)
+            return
+        innermost = len(self.rungs) - 1
+        for ri, rung in enumerate(self.rungs):
+            idx = rung.bucket_index(t)
+            if idx < rung.cur:
+                continue
+            if idx == rung.cur and ri != innermost:
+                continue  # delegated to the child rung
+            rung.buckets[idx].append(ev)
+            return
+        # Below every active rung region: merge into the sorted bottom.
+        lo, hi = 0, len(self.bottom)
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if self.bottom[mid] > ev:
+                lo = mid + 1
+            else:
+                hi = mid
+        self.bottom.insert(lo, ev)
+
+    def pop(self):
+        if self.size == 0:
+            return None
+        while not self.bottom:
+            if self.rungs:
+                rung = self.rungs[-1]
+                while rung.cur < LADDER_BUCKETS and not rung.buckets[rung.cur]:
+                    rung.cur += 1
+                if rung.cur == LADDER_BUCKETS:
+                    self.rungs.pop()
+                    if self.rungs:
+                        self.rungs[-1].cur += 1
+                    continue
+                events = rung.buckets[rung.cur]
+                rung.buckets[rung.cur] = []
+                self._spawn_or_spill(events)
+                continue
+            tmin = min(e[0] for e in self.top)
+            tmax = max(e[0] for e in self.top)
+            events = self.top
+            self.top = []
+            # Strict `>` routing into top keeps same-time arrivals at
+            # top_start flowing into the active structure below it.
+            self.top_start = tmax
+            if len(events) <= LADDER_SPILL or tmin == tmax:
+                events.sort(reverse=True)
+                self.bottom = events
+            else:
+                rung = _Rung(tmin, (tmax - tmin) / LADDER_BUCKETS)
+                for ev in events:
+                    rung.buckets[rung.bucket_index(ev[0])].append(ev)
+                self.rungs.append(rung)
+        ev = self.bottom.pop()
+        self.last_time = ev[0]
+        self.size -= 1
+        return ev
+
+    def __len__(self):
+        return self.size
+
+
+def make_equeue(kind):
+    """Mirror of EventQueueKind::build ("heap" | "ladder")."""
+    if kind == "heap":
+        return HeapQueue()
+    if kind == "ladder":
+        return LadderQueue()
+    raise ValueError(kind)
+
+
 def exp_mean_ms(rng, mean):
     """Mirror of sim::engine::exp_mean_ms."""
     return -math.log(1.0 - rng.gen_f64()) * mean
@@ -1027,6 +1195,7 @@ def simulate_open_engine(
     admit="fifo",
     stream_budget=math.inf,
     fault=None,
+    equeue="heap",
 ):
     """Mirror of EngineCore::run: jobs_in = [(dag, submit_ms)]; qos[i]
     (optional) = dict(cls, prio, deadline, budget) with deadline/budget
@@ -1035,10 +1204,12 @@ def simulate_open_engine(
     mirror of StreamConfig::effective_budget_ms. fault (optional) =
     dict(mtbf, mttr, seed, refetch, scripted=[(at, dev, down, drain)]),
     the mirror of FaultSpec; an inert spec (no scripted outages and
-    mtbf=inf) behaves exactly like fault=None. Returns (results,
-    stats) with stats = the RecoveryStats mirror."""
+    mtbf=inf) behaves exactly like fault=None. equeue selects the event
+    queue ("heap" | "ladder"; both pop in the same total order, the
+    run_checks sweep pins that). Returns (results, stats) with stats =
+    the RecoveryStats mirror (+ events popped, max in-flight, and the
+    note_mem-style memory high-water estimate)."""
     import collections
-    import heapq
 
     k = len(workers)
     host = 0
@@ -1047,12 +1218,36 @@ def simulate_open_engine(
     bytes_of = []
     mask_of = []
     avail = []
-    heap = []
+    events = make_equeue(equeue)
     pending = []
     state = dict(inflight=0, completed=0)
     queue = max(queue, 1)
     dev_state = ["up"] * k  # DeviceState mirror: up | draining | down
-    stats = dict(failures=0, reexec=0, wasted=0.0, executed=0.0, replans=0)
+    stats = dict(
+        failures=0, reexec=0, wasted=0.0, executed=0.0, replans=0,
+        events=0, max_inflight=0, mem_high_water=0,
+    )
+
+    # Memory high-water mirror of EngineCore::note_mem. The Rust
+    # formula's constants are layout facts (size_of::<Option<JobRun>>,
+    # the arena row, an Event) the mirror approximates with nominal
+    # sizes; the *shape* — live slots x per-slot cost, sampled at
+    # admission — matches, which is what the capacity bench's
+    # O(in-flight) memory claim measures. One divergence: this engine
+    # pre-schedules every arrival event up front, so the len(events)
+    # term scales with the remaining session here, where the Rust core
+    # materializes arrivals lazily and stays O(in-flight).
+    memw = dict(live_jobs=0, live_tasks=0, live_handles=0)
+
+    def note_mem():
+        b = (
+            memw["live_jobs"] * 320
+            + memw["live_tasks"] * 48
+            + len(events) * 40
+            + memw["live_handles"] * 24
+            + len(pending) * 8
+        )
+        stats["mem_high_water"] = max(stats["mem_high_water"], b)
 
     jobs = []
     for j, (dag, submit) in enumerate(jobs_in):
@@ -1085,7 +1280,7 @@ def simulate_open_engine(
                 drain_epoch=0,
             )
         )
-        heapq.heappush(heap, (submit, EV_ARRIVAL, j, 0, 0))
+        events.schedule((submit, EV_ARRIVAL, j, 0, 0))
 
     # Fault clocks (mirror of FaultState::new): device 0 never fails —
     # it owns the host checkpoint, so a dispatch target always exists.
@@ -1095,13 +1290,13 @@ def simulate_open_engine(
         scripted = [collections.deque() for _ in range(k)]
         if not fault["scripted"]:
             for d in range(1, k):
-                heapq.heappush(heap, (exp_mean_ms(frng, fault["mtbf"]), EV_DOWN, d, 0, 0))
+                events.schedule((exp_mean_ms(frng, fault["mtbf"]), EV_DOWN, d, 0, 0))
         else:
             for (at, dev, down, drain) in sorted(fault["scripted"], key=lambda f: f[0]):
                 assert 0 < dev < k, f"scripted fault device {dev} out of range"
                 scripted[dev].append((at, down, drain))
-                heapq.heappush(heap, (at, EV_DOWN, dev, 1 if drain else 0, 0))
-                heapq.heappush(heap, (at + down, EV_UP, dev, 0, 0))
+                events.schedule((at, EV_DOWN, dev, 1 if drain else 0, 0))
+                events.schedule((at + down, EV_UP, dev, 0, 0))
         fault_state = dict(spec=fault, rng=frng, scripted=scripted, commits=[])
 
     def pending_key(j):
@@ -1149,7 +1344,7 @@ def simulate_open_engine(
                     makespan = max(makespan, bus[ch])
         st["complete"] = max(makespan, st["admit"])
         policy.on_job_drain(j)
-        heapq.heappush(heap, (st["complete"], EV_DRAIN, j, 0, st["drain_epoch"]))
+        events.schedule((st["complete"], EV_DRAIN, j, 0, st["drain_epoch"]))
 
     def admit_job(j, now):
         st = jobs[j]
@@ -1173,8 +1368,13 @@ def simulate_open_engine(
         st["remaining"] = n
         for v in range(n):
             if st["indeg"][v] == 0:
-                heapq.heappush(heap, (now, EV_READY, j, v, 0))
+                events.schedule((now, EV_READY, j, v, 0))
         state["inflight"] += 1
+        stats["max_inflight"] = max(stats["max_inflight"], state["inflight"])
+        st["_nhandles"] = n + sum(len(hs) for hs in st["initial"])
+        memw["live_tasks"] += n
+        memw["live_handles"] += st["_nhandles"]
+        note_mem()
         if st["remaining"] == 0:
             complete_job(j)
 
@@ -1192,8 +1392,8 @@ def simulate_open_engine(
                 st["indeg"][w] -= 1
                 st["ready_time"][w] = max(st["ready_time"][w], ready)
                 if st["indeg"][w] == 0:
-                    heapq.heappush(
-                        heap, (st["ready_time"][w], EV_READY, j, w, st["task_epoch"][w])
+                    events.schedule(
+                        (st["ready_time"][w], EV_READY, j, w, st["task_epoch"][w])
                     )
             st["remaining"] -= 1
             if st["remaining"] == 0:
@@ -1272,8 +1472,8 @@ def simulate_open_engine(
             st["indeg"][w] -= 1
             st["ready_time"][w] = max(st["ready_time"][w], end)
             if st["indeg"][w] == 0:
-                heapq.heappush(
-                    heap, (st["ready_time"][w], EV_READY, j, w, st["task_epoch"][w])
+                events.schedule(
+                    (st["ready_time"][w], EV_READY, j, w, st["task_epoch"][w])
                 )
         st["remaining"] -= 1
         if st["remaining"] == 0:
@@ -1316,7 +1516,7 @@ def simulate_open_engine(
             st["drain_epoch"] += 1
             st["complete"] = 0.0
         for (at, v, ep) in pushes:
-            heapq.heappush(heap, (at, EV_READY, jid, v, ep))
+            events.schedule((at, EV_READY, jid, v, ep))
 
     def device_down(dev, drain, t):
         """Mirror of EngineCore::device_down: kill (or drain around)
@@ -1325,7 +1525,7 @@ def simulate_open_engine(
         stats["failures"] += 1
         if not fs["spec"]["scripted"]:
             down_ms = exp_mean_ms(fs["rng"], fs["spec"]["mttr"])
-            heapq.heappush(heap, (t + down_ms, EV_UP, dev, 0, 0))
+            events.schedule((t + down_ms, EV_UP, dev, 0, 0))
         else:
             (_, down_ms, _) = fs["scripted"][dev].popleft()
         up_at = t + down_ms
@@ -1377,17 +1577,19 @@ def simulate_open_engine(
             worker_free[dev][w] = max(worker_free[dev][w], t)
         fs = fault_state
         if not fs["spec"]["scripted"]:
-            heapq.heappush(heap, (t + exp_mean_ms(fs["rng"], fs["spec"]["mtbf"]), EV_DOWN, dev, 0, 0))
+            events.schedule((t + exp_mean_ms(fs["rng"], fs["spec"]["mtbf"]), EV_DOWN, dev, 0, 0))
         stats["replans"] += policy.on_device_up(dev)
 
-    while heap:
-        t, kind, j, v, heap_epoch = heapq.heappop(heap)
+    while len(events):
+        t, kind, j, v, heap_epoch = events.pop()
+        stats["events"] += 1
         if kind == EV_DOWN:
             device_down(j, v == 1, t)
         elif kind == EV_UP:
             device_up(j, t)
         elif kind == EV_ARRIVAL:
             if state["inflight"] < queue:
+                memw["live_jobs"] += 1
                 admit_job(j, t)
             else:
                 budget = jobs[j]["budget"]
@@ -1407,18 +1609,24 @@ def simulate_open_engine(
                     state["completed"] += 1
                 else:
                     pending.append(j)
+                    memw["live_jobs"] += 1
+                    note_mem()
                     if budget != math.inf:
-                        heapq.heappush(heap, (t + budget, EV_REJECT, j, 0, 0))
+                        events.schedule((t + budget, EV_REJECT, j, 0, 0))
         elif kind == EV_DRAIN:
             if heap_epoch == jobs[j]["drain_epoch"]:
                 state["inflight"] -= 1
                 state["completed"] += 1
+                memw["live_jobs"] -= 1
+                memw["live_tasks"] -= jobs[j]["dag"].node_count()
+                memw["live_handles"] -= jobs[j]["_nhandles"]
                 nxt = pop_pending()
                 if nxt is not None:
                     admit_job(nxt, t)
         elif kind == EV_REJECT:
             if j in pending:
                 pending.remove(j)
+                memw["live_jobs"] -= 1
                 st = jobs[j]
                 st["rejected"] = True
                 st["remaining"] = 0
@@ -1541,6 +1749,169 @@ def session_metrics(results, workers):
     )
 
 
+# ------------------------------------------ streaming quantiles (CKMS)
+# Mirror of util::stats::CkmsSketch + sim::report::QuantileAcc (keep in
+# sync): a deterministic Greenwald–Khanna summary with the CKMS uniform
+# invariant g + delta <= max(floor(2*eps*n), 1). The report path keeps
+# exact sojourns up to EXACT_SOJOURN_LIMIT completions — bit-identical
+# to the sorted-vector path — and spills into the sketch beyond it.
+
+EXACT_SOJOURN_LIMIT = 16384
+SKETCH_EPS = 0.001
+
+
+class CkmsSketch:
+    def __init__(self, eps):
+        assert 0.0 < eps < 0.5, f"eps must be in (0, 0.5), got {eps}"
+        self.eps = eps
+        self.tuples = []  # (value, g, delta), sorted by value
+        self.n = 0
+        self.unmerged = 0
+
+    def _band(self):
+        return max(int(2.0 * self.eps * self.n), 1)
+
+    def insert(self, v):
+        self.insert_weighted(v, 1)
+        self.unmerged += 1
+        if self.unmerged >= max(int(1.0 / (2.0 * self.eps)), 1):
+            self.compress()
+            self.unmerged = 0
+
+    def insert_weighted(self, v, g):
+        self.n += g
+        # partition_point(|t| t.0 <= v): first index whose value > v.
+        lo, hi = 0, len(self.tuples)
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if self.tuples[mid][0] <= v:
+                lo = mid + 1
+            else:
+                hi = mid
+        delta = 0 if (lo == 0 or lo == len(self.tuples)) else max(self._band() - 1, 0)
+        self.tuples.insert(lo, (v, g, delta))
+
+    def compress(self):
+        if len(self.tuples) < 2:
+            return
+        band = self._band()
+        out = [self.tuples[-1]]
+        for i in range(len(self.tuples) - 2, -1, -1):
+            v, g, delta = self.tuples[i]
+            nv, ng, ndelta = out[-1]
+            if i != 0 and g + ng + ndelta <= band:
+                out[-1] = (nv, g + ng, ndelta)
+            else:
+                out.append((v, g, delta))
+        out.reverse()
+        self.tuples = out
+
+    def merge(self, other):
+        for (v, g, _) in other.tuples:
+            self.insert_weighted(v, g)
+        self.compress()
+
+    def query(self, p):
+        assert 0.0 < p <= 100.0, f"p must be in (0, 100], got {p}"
+        if self.n == 0:
+            return 0.0
+        target = math.ceil(p / 100.0 * self.n)
+        budget = target + int(self.eps * self.n)
+        rank = 0
+        prev = self.tuples[0][0]
+        for (v, g, delta) in self.tuples:
+            if rank + g + delta > budget:
+                return prev
+            rank += g
+            prev = v
+        return self.tuples[-1][0]
+
+
+class QuantileAcc:
+    """Mirror of sim::report::QuantileAcc: exact below the spill
+    threshold, eps-approximate beyond it."""
+
+    def __init__(self):
+        self.exact = []
+        self.sketch = None
+
+    def push(self, x):
+        if self.sketch is not None:
+            self.sketch.insert(x)
+            return
+        self.exact.append(x)
+        if len(self.exact) > EXACT_SOJOURN_LIMIT:
+            sk = CkmsSketch(SKETCH_EPS)
+            for v in self.exact:
+                sk.insert(v)
+            self.exact = []
+            self.sketch = sk
+
+    def count(self):
+        return self.sketch.n if self.sketch is not None else len(self.exact)
+
+    def is_sketched(self):
+        return self.sketch is not None
+
+    def percentile(self, p):
+        if self.sketch is not None:
+            return self.sketch.query(p)
+        if not self.exact:
+            return 0.0
+        return percentile_nearest_rank(sorted(self.exact), p)
+
+
+def streaming_session_metrics(results, workers, max_concurrent=0):
+    """Mirror of StreamingTally -> SessionReport scalar metrics: one
+    fold pass with a QuantileAcc instead of the full sojourn vector.
+    Below EXACT_SOJOURN_LIMIT completions this is bit-identical to
+    session_metrics (pinned by run_checks); beyond it percentiles are
+    eps-approximate. max_concurrent comes from the engine's
+    stats["max_inflight"] — the interval sweep session_metrics runs
+    needs every (admit, complete) pair, which streaming drops."""
+    acc = QuantileAcc()
+    completed = 0
+    rejected = 0
+    sum_sojourn = 0.0
+    sum_delay = 0.0
+    with_ddl = 0
+    hits = 0
+    span = 0.0
+    busy = [0.0] * len(workers)
+    for r in results:
+        span = max(span, r["complete"])
+        for d, b in enumerate(r["device_busy"]):
+            busy[d] += b
+        if r.get("deadline_abs", math.inf) != math.inf:
+            with_ddl += 1
+            if deadline_hit(r):
+                hits += 1
+        if r.get("rejected", False):
+            rejected += 1
+            continue
+        completed += 1
+        s = r["complete"] - r["submit"]
+        acc.push(s)
+        sum_sojourn += s
+        sum_delay += r["admit"] - r["submit"]
+    return dict(
+        span=span,
+        p50=acc.percentile(50.0),
+        p95=acc.percentile(95.0),
+        p99=acc.percentile(99.0),
+        mean_sojourn=sum_sojourn / completed if completed else 0.0,
+        mean_qdelay=sum_delay / completed if completed else 0.0,
+        throughput=completed / (span / 1000.0) if span > 0 else 0.0,
+        max_concurrent=max_concurrent,
+        rejected=rejected,
+        deadline_hit_rate=hits / with_ddl if with_ddl else 1.0,
+        utilization=[
+            (b / (span * w) if span > 0 else 0.0) for b, w in zip(busy, workers)
+        ],
+        sojourn_sketched=acc.is_sketched(),
+    )
+
+
 def class_metrics(results, span, n_classes, names):
     """Mirror of SessionReport::per_class."""
     out = []
@@ -1600,6 +1971,7 @@ def open_run(
     admit="fifo",
     stream_budget=math.inf,
     fault=None,
+    equeue="heap",
 ):
     model = model or CalibratedModel()
     workers = workers or PAPER_WORKERS
@@ -1615,6 +1987,7 @@ def open_run(
         admit=admit,
         stream_budget=stream_budget,
         fault=fault,
+        equeue=equeue,
     )
     return results, policy, stats
 
@@ -2103,7 +2476,9 @@ def load_scenario(name_or_path):
         return parse_scenario(fh.read())
 
 
-BUILTIN_SCENARIOS = ["open-poisson", "open-qos", "open-fault", "capacity-sweep"]
+BUILTIN_SCENARIOS = [
+    "open-poisson", "open-qos", "open-fault", "capacity-sweep", "engine-capacity",
+]
 
 # Mirror of sim::report::SCALAR_METRICS (same names, same order).
 SCENARIO_METRICS = [
@@ -2113,9 +2488,11 @@ SCENARIO_METRICS = [
 ]
 
 
-def scenario_rep(spec, cell, rep):
+def scenario_rep(spec, cell, rep, equeue="heap"):
     """Mirror of scenario::runner::run_repetition: one repetition of one
-    sweep cell on seeds derived from (spec.seed, rep)."""
+    sweep cell on seeds derived from (spec.seed, rep). equeue picks the
+    event queue ("heap" | "ladder") — mirror of run_repetition_with; the
+    reports are identical either way (pinned by run_checks)."""
     classed = job_classes(
         spec["classes"], spec["jobs"], rep_seed(spec["seed"], rep, WORKLOAD_AXIS)
     )
@@ -2144,7 +2521,7 @@ def scenario_rep(spec, cell, rep):
     results, _, stats = open_run(
         dags, cell["scheduler"], submits, st["queue"],
         model=model, workers=workers, qos=qos, admit=st["admit"],
-        stream_budget=st["budget"], fault=fault,
+        stream_budget=st["budget"], fault=fault, equeue=equeue,
     )
     return results, stats, workers
 
@@ -2317,6 +2694,59 @@ def scenarios_json(harness, reports):
 def bench_scenarios_json():
     reports = [run_scenario_mirror(load_scenario(n)) for n in BUILTIN_SCENARIOS]
     return scenarios_json("python-mirror", reports)
+
+
+def bench_engine_json(jobs=20000):
+    """Mirror of main.rs cmd_bench_engine / render_engine_json: the
+    same chain template streamed through the engine under both event
+    queues (the Rust default is a million jobs; 20k keeps the mirror
+    quick while still spilling past EXACT_SOJOURN_LIMIT, so the
+    sketched report path is what this bench exercises)."""
+    import time
+
+    model = CalibratedModel()
+    workers = PAPER_WORKERS
+    dag = chain(4, MM, 256)
+    submits = fixed_times(400.0, jobs)
+    rows = []
+    for kind in ["heap", "ladder"]:
+        t0 = time.perf_counter()
+        results, _, stats = open_run(
+            [dag] * jobs, "dmda", submits, 8, model=model, equeue=kind
+        )
+        wall = max(time.perf_counter() - t0, 1e-9)
+        m = streaming_session_metrics(results, workers, stats["max_inflight"])
+        rows.append((kind, wall, results, stats, m))
+    lines = [
+        "{",
+        '  "bench": "engine",',
+        '  "harness": "python-mirror",',
+        f'  "jobs_submitted": {jobs},',
+        '  "template": {"family": "chain", "len": 4, "kernel": "mm", "size": 256},',
+        '  "scheduler": "dmda",',
+        '  "stream": "stream:arrival=fixed,rate=400,queue=8",',
+        '  "rows": [',
+    ]
+    for i, (kind, wall, results, stats, m) in enumerate(rows):
+        comma = "" if i + 1 == len(rows) else ","
+        completed = len(results) - m["rejected"]
+        lines.append(
+            f'    {{"queue_kind": "{kind}", "jobs_submitted": {len(results)}, '
+            f'"jobs_completed": {completed}, "jobs_rejected": {m["rejected"]}, '
+            f'"events_processed": {stats["events"]}, "wall_s": {wall:.6f}, '
+            f'"events_per_sec": {stats["events"] / wall:.2f}, '
+            f'"jobs_per_sec": {len(results) / wall:.2f}, '
+            f'"mem_high_water_bytes": {stats["mem_high_water"]}, '
+            f'"max_concurrent_jobs": {stats["max_inflight"]}, '
+            f'"sojourn_sketched": {"true" if m["sojourn_sketched"] else "false"}, '
+            f'"p50_sojourn_ms": {m["p50"]:.6f}, "p95_sojourn_ms": {m["p95"]:.6f}, '
+            f'"p99_sojourn_ms": {m["p99"]:.6f}, "mean_sojourn_ms": {m["mean_sojourn"]:.6f}, '
+            f'"mean_queue_delay_ms": {m["mean_qdelay"]:.6f}, "span_ms": {m["span"]:.6f}, '
+            f'"throughput_jps": {m["throughput"]:.6f}}}{comma}'
+        )
+    lines.append("  ]")
+    lines.append("}")
+    return "\n".join(lines) + "\n"
 
 
 # ----------------------------------------------------------------- checks
@@ -2757,9 +3187,15 @@ def run_checks():
     specs = {name: load_scenario(name) for name in BUILTIN_SCENARIOS}
     counts = {n: len(scenario_cells(s)) for n, s in specs.items()}
     check(
-        "builtin sweep cell counts 5/4/3/6",
+        "builtin sweep cell counts 5/4/3/6/2",
         counts
-        == {"open-poisson": 5, "open-qos": 4, "open-fault": 3, "capacity-sweep": 6},
+        == {
+            "open-poisson": 5,
+            "open-qos": 4,
+            "open-fault": 3,
+            "capacity-sweep": 6,
+            "engine-capacity": 2,
+        },
         counts,
     )
     check(
@@ -2857,6 +3293,186 @@ def run_checks():
             and all(s["n"] == 20 for m in c["metrics"].values() for s in [m])
             for c in qos_report["cells"]
         ),
+    )
+
+    import bisect
+
+    print("event queue: ladder pops the heap's exact total order")
+    qrng = pm.Pcg32.seeded(99)
+    hq, lq = HeapQueue(), LadderQueue()
+    last = 0.0
+    scheduled = popped = 0
+    mismatch = False
+    for _ in range(2000):
+        for _ in range(1 + qrng.next_u64() % 4):
+            # Ties included: every ~8th event lands exactly on `last`.
+            t = last if qrng.next_u64() % 8 == 0 else last + qrng.gen_f64() * 50.0
+            ev = (t, int(qrng.next_u64() % 6), int(qrng.next_u64() % 64), 0, 0)
+            hq.schedule(ev)
+            lq.schedule(ev)
+            scheduled += 1
+        for _ in range(qrng.next_u64() % 3):
+            if len(hq) == 0:
+                break
+            a, b = hq.pop(), lq.pop()
+            popped += 1
+            mismatch = mismatch or a != b
+            last = a[0]
+    while len(hq):
+        a, b = hq.pop(), lq.pop()
+        popped += 1
+        mismatch = mismatch or a != b
+    check(
+        "randomized interleaved schedule/pop identical",
+        not mismatch and popped == scheduled and len(lq) == 0,
+        f"{popped}/{scheduled}",
+    )
+
+    print("event queue: ladder == heap through the full engine")
+    for name in ["open-poisson", "open-qos", "open-fault"]:
+        for cell in scenario_cells(specs[name]):
+            rh, sh, _ = scenario_rep(specs[name], cell, 0, equeue="heap")
+            rl, sl, _ = scenario_rep(specs[name], cell, 0, equeue="ladder")
+            check(
+                f"{name} {cell['label']} rep0 identical under ladder",
+                rh == rl and sh == sl,
+            )
+
+    print("engine-capacity scenario (slab/ladder core pin)")
+    sc_eng = specs["engine-capacity"]
+    eng_res, eng_stats, _ = scenario_rep(
+        sc_eng, scenario_cells(sc_eng)[0], 0, equeue="ladder"
+    )
+    check(
+        "rep0 completes all 400 jobs, none rejected",
+        len(eng_res) == 400 and not any(r["rejected"] for r in eng_res),
+    )
+    check(
+        "engine tracks events / concurrency / memory",
+        eng_stats["events"] > 400 * 4
+        and eng_stats["max_inflight"] >= 1
+        and eng_stats["mem_high_water"] > 0,
+        f"ev={eng_stats['events']} conc={eng_stats['max_inflight']}",
+    )
+
+    print("ckms sketch: rank error within eps (stats.rs property tests)")
+    srng = pm.Pcg32.seeded(11)
+    xs_sk = [math.exp(srng.gen_f64() * 6.0) for _ in range(30000)]
+    eps = 0.01
+    sk = CkmsSketch(eps)
+    for x in xs_sk:
+        sk.insert(x)
+    srt = sorted(xs_sk)
+    n_sk = len(xs_sk)
+
+    def rank_ok(sketch, values_sorted, p, tol):
+        q = sketch.query(p)
+        lo = bisect.bisect_left(values_sorted, q) + 1
+        hi = bisect.bisect_right(values_sorted, q)
+        target = math.ceil(p / 100.0 * len(values_sorted))
+        slack = tol * len(values_sorted) + 1
+        return lo - slack <= target <= hi + slack
+
+    check(
+        "sequential queries within eps*n ranks",
+        all(rank_ok(sk, srt, p, eps) for p in [50.0, 90.0, 95.0, 99.0]),
+    )
+    check(
+        "summary stays sublinear",
+        len(sk.tuples) < n_sk // 10,
+        f"{len(sk.tuples)} tuples for {n_sk} samples",
+    )
+    merged = CkmsSketch(eps)
+    for chunk in (xs_sk[:9000], xs_sk[9000:21000], xs_sk[21000:]):
+        part = CkmsSketch(eps)
+        for x in chunk:
+            part.insert(x)
+        merged.merge(part)
+    check(
+        "merged sketch within 2*eps ranks",
+        merged.n == n_sk
+        and all(rank_ok(merged, srt, p, 2.0 * eps) for p in [50.0, 95.0, 99.0]),
+    )
+    check("empty sketch queries 0.0", CkmsSketch(eps).query(95.0) == 0.0)
+
+    print("quantile acc: exact below the spill threshold, sketched above")
+    acc = QuantileAcc()
+    for v in xs_sk[:1000]:
+        acc.push(v)
+    check(
+        "below threshold bit-identical to nearest rank",
+        not acc.is_sketched()
+        and all(
+            acc.percentile(p) == percentile_nearest_rank(sorted(xs_sk[:1000]), p)
+            for p in [50.0, 95.0, 99.0]
+        ),
+    )
+    acc2 = QuantileAcc()
+    for v in xs_sk[:17000]:
+        acc2.push(v)
+    srt17 = sorted(xs_sk[:17000])
+    check(
+        "spills past EXACT_SOJOURN_LIMIT and keeps the count",
+        acc2.is_sketched() and acc2.count() == 17000,
+    )
+    check(
+        "spilled answers within SKETCH_EPS ranks",
+        all(rank_ok(acc2.sketch, srt17, p, SKETCH_EPS) for p in [50.0, 95.0, 99.0]),
+    )
+
+    print("streaming tally == vector session metrics below the spill")
+    res_s, _, st_stats = open_run(open_dags, "dmda", open_submits, 8, model=model)
+    vec_m = session_metrics(res_s, PAPER_WORKERS)
+    str_m = streaming_session_metrics(res_s, PAPER_WORKERS, st_stats["max_inflight"])
+    # mean_sojourn is summation-order sensitive: session_metrics sums
+    # the sorted sojourn list, the streaming fold sums in results order
+    # (as the Rust tally does), so those two agree only to the ulp.
+    # Everything else — including the percentiles, which is the point of
+    # the exact-below-threshold path — must match bit for bit.
+    check(
+        "streaming fold bit-identical",
+        all(
+            str_m[key] == vec_m[key]
+            for key in [
+                "span", "p50", "p95", "p99", "mean_qdelay",
+                "throughput", "rejected", "deadline_hit_rate", "max_concurrent",
+                "utilization",
+            ]
+        )
+        and abs(str_m["mean_sojourn"] - vec_m["mean_sojourn"])
+        <= 1e-12 * abs(vec_m["mean_sojourn"])
+        and not str_m["sojourn_sketched"],
+    )
+
+    print("report path: heavily-rejecting session stays finite")
+    rj_submits = bursty_times(2000.0, 16, 7, 32)
+    rj, _, rj_stats = open_run(
+        [chain(4, MM, 256)] * 32, "dmda", rj_submits, 1, model=model,
+        admit="reject", stream_budget=0.01,
+    )
+    rj_m = streaming_session_metrics(rj, PAPER_WORKERS, rj_stats["max_inflight"])
+    check(
+        "rejected-heavy metrics all finite",
+        rj_m["rejected"] > 0
+        and all(
+            math.isfinite(rj_m[key])
+            for key in [
+                "span", "p50", "p95", "p99", "mean_sojourn", "mean_qdelay",
+                "throughput", "deadline_hit_rate",
+            ]
+        ),
+        f"rejected={rj_m['rejected']}",
+    )
+
+    print("device utilization keeps the span denominator")
+    busy_tot = sum(sum(r["device_busy"]) for r in res_s)
+    recovered = sum(
+        u * vec_m["span"] * w for u, w in zip(vec_m["utilization"], PAPER_WORKERS)
+    )
+    check(
+        "sum util*span*workers recovers total busy time",
+        abs(recovered - busy_tot) <= 1e-9 * max(busy_tot, 1.0),
+        f"{recovered:.6f} vs {busy_tot:.6f}",
     )
 
     print("ALL OK" if OK else "FAILURES PRESENT")
@@ -3178,6 +3794,16 @@ if __name__ == "__main__":
         path = os.path.join(
             os.path.dirname(os.path.abspath(__file__)),
             "..", "..", "rust", "bench_results", "BENCH_scenarios.json",
+        )
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            f.write(out)
+        print(f"written {os.path.normpath(path)}")
+    elif cmd == "engine":
+        out = bench_engine_json()
+        path = os.path.join(
+            os.path.dirname(os.path.abspath(__file__)),
+            "..", "..", "rust", "bench_results", "BENCH_engine.json",
         )
         os.makedirs(os.path.dirname(path), exist_ok=True)
         with open(path, "w") as f:

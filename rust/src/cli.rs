@@ -110,6 +110,14 @@ COMMANDS:
              \"fault:mtbf=500,mttr=80,seed=9\" or scripted
              \"fault:at=120:dev=1:down=50;refetch=2\"; drain=MS drains
              instead of killing)
+             `bench engine` streams a million identical chain jobs
+             through the slab/arena engine core (memory stays
+             O(in-flight); sojourns fold into a quantile sketch) and
+             reports events/sec, jobs/sec and the memory high-water
+             mark in bench_results/BENCH_engine.json.
+             [--jobs N (default 1000000)] [--len N] [--size N]
+             [--scheduler SPEC] [--stream SPEC]
+             [--queue-kind heap|ladder|both]
   scenario   Declarative experiments with replication + confidence
              intervals (see scenarios/*.toml and the scenario module
              docs for the file grammar).

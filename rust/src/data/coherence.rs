@@ -18,6 +18,9 @@ pub struct Directory {
     /// Bit `i` set = memory node `i` holds a valid copy.
     masks: Vec<u64>,
     bytes: Vec<u64>,
+    /// Slots of freed handles, recycled LIFO by the allocs so a long
+    /// session's directory stays O(live data), not O(total jobs).
+    freed: Vec<u32>,
 }
 
 impl Directory {
@@ -25,21 +28,42 @@ impl Directory {
         Directory::default()
     }
 
+    /// Next slot: recycle a freed one or grow the table.
+    fn slot(&mut self, mask: u64, bytes: u64) -> DataHandle {
+        match self.freed.pop() {
+            Some(i) => {
+                self.masks[i as usize] = mask;
+                self.bytes[i as usize] = bytes;
+                DataHandle(i)
+            }
+            None => {
+                let h = DataHandle(self.masks.len() as u32);
+                self.masks.push(mask);
+                self.bytes.push(bytes);
+                h
+            }
+        }
+    }
+
     /// Register a datum of `bytes` with its initial valid copy on `home`.
     pub fn alloc(&mut self, bytes: u64, home: MemNode) -> DataHandle {
         assert!(home < 64, "memory node out of bitmask range");
-        let h = DataHandle(self.masks.len() as u32);
-        self.masks.push(1u64 << home);
-        self.bytes.push(bytes);
-        h
+        self.slot(1u64 << home, bytes)
     }
 
     /// Register a datum that nobody has produced yet (no valid copies).
     pub fn alloc_unwritten(&mut self, bytes: u64) -> DataHandle {
-        let h = DataHandle(self.masks.len() as u32);
-        self.masks.push(0);
-        self.bytes.push(bytes);
-        h
+        self.slot(0, bytes)
+    }
+
+    /// Retire a handle (its job drained): zero the state and make the
+    /// slot available for recycling. A freed slot holds no copies, so
+    /// [`Directory::invalidate_node`] skips it; the caller must not use
+    /// the handle again.
+    pub fn free(&mut self, h: DataHandle) {
+        self.masks[h.0 as usize] = 0;
+        self.bytes[h.0 as usize] = 0;
+        self.freed.push(h.0);
     }
 
     pub fn len(&self) -> usize {
@@ -221,6 +245,37 @@ mod tests {
         d.clear(h);
         assert_eq!(d.any_holder(h), None, "killed output must be unwritten again");
         assert_eq!(d.copy_count(h), 0);
+    }
+
+    #[test]
+    fn free_recycles_slots_with_cleared_state() {
+        let mut d = Directory::new();
+        let a = d.alloc(8, 0);
+        let b = d.alloc_unwritten(16);
+        d.acquire_write(b, 1);
+        d.free(a);
+        d.free(b);
+        // The table does not grow: freed slots are reused LIFO.
+        let c = d.alloc(32, 1);
+        assert_eq!(c, b, "LIFO recycling reuses the last freed slot");
+        assert_eq!(d.bytes(c), 32, "recycled slot carries the new size");
+        assert_eq!(d.valid_mask(c), 0b10, "recycled slot starts at its new home");
+        let e = d.alloc_unwritten(64);
+        assert_eq!(e, a);
+        assert_eq!(d.any_holder(e), None, "no stale copies on a recycled slot");
+        assert_eq!(d.len(), 2, "no growth while freed slots remain");
+        let f = d.alloc(1, 0);
+        assert_eq!(f.0, 2, "exhausted free list grows the table again");
+    }
+
+    #[test]
+    fn freed_slots_invisible_to_invalidate_node() {
+        let mut d = Directory::new();
+        let a = d.alloc(8, 0);
+        d.acquire_read(a, 1);
+        d.free(a);
+        assert_eq!(d.invalidate_node(1), 0, "freed handles hold no copies");
+        assert_eq!(d.valid_mask(a), 0, "freed slot must stay empty, not host-restored");
     }
 
     #[test]

@@ -17,8 +17,8 @@ use hetsched::runtime::{KernelRuntime, RuntimeService};
 use hetsched::scenario::{self, ScenarioReport, Stat};
 use hetsched::sched::{self, PlanCache, SchedulerRegistry};
 use hetsched::sim::{
-    simulate, simulate_open, simulate_open_qos, FaultSpec, JobQos, SessionReport, SimConfig,
-    StreamConfig,
+    simulate, simulate_capacity, simulate_open, simulate_open_qos, EventQueueKind, FaultSpec,
+    JobQos, SessionReport, SimConfig, StreamConfig,
 };
 
 fn main() {
@@ -139,6 +139,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             bus_channels: args.flag_usize("bus-channels", 1)?,
             prefetch: args.has("prefetch"),
             fault: cfg.fault.clone(),
+            ..Default::default()
         };
         let mut last = None;
         for _ in 0..cfg.iterations.max(1) {
@@ -254,7 +255,8 @@ fn cmd_figures(_args: &Args) -> Result<()> {
 fn cmd_bench(args: &Args) -> Result<()> {
     match args.positional.first().map(String::as_str) {
         Some("stream") => cmd_bench_stream(args),
-        other => bail!("unknown bench target {other:?} (available: stream)"),
+        Some("engine") => cmd_bench_engine(args),
+        other => bail!("unknown bench target {other:?} (available: stream | engine)"),
     }
 }
 
@@ -595,6 +597,148 @@ fn cmd_bench_stream(args: &Args) -> Result<()> {
     let path = benchkit::save_bench_json("sched_session", &json)?;
     println!("json written to {}", path.display());
     Ok(())
+}
+
+/// `hetsched bench engine`: the million-job capacity bench. Streams
+/// `--jobs` identical chain jobs (a template source — O(1) workload
+/// memory) through [`simulate_capacity`]'s slab/arena engine at a
+/// fixed under-capacity arrival rate and reports raw engine throughput:
+/// events/sec, jobs/sec, and the slab/arena memory high-water mark.
+/// `--queue-kind heap|ladder|both` selects the event-queue
+/// implementation (both kinds pop in the same total order, so the
+/// simulated metrics must agree; only wall time differs). Writes
+/// `bench_results/BENCH_engine.json`.
+fn cmd_bench_engine(args: &Args) -> Result<()> {
+    let jobs = args.flag_usize("jobs", 1_000_000)?;
+    let len = args.flag_usize("len", 4)?;
+    let size = args.flag_u32("size", 256)?;
+    let sched_spec = args.flag_or("scheduler", "dmda");
+    let stream_spec = args.flag_or("stream", "stream:arrival=fixed,rate=400,queue=8");
+    let kinds: Vec<EventQueueKind> = match args.flag_or("queue-kind", "ladder").as_str() {
+        "heap" => vec![EventQueueKind::Heap],
+        "ladder" => vec![EventQueueKind::Ladder],
+        "both" => vec![EventQueueKind::Heap, EventQueueKind::Ladder],
+        other => bail!("unknown --queue-kind {other:?} (heap | ladder | both)"),
+    };
+    let stream = StreamConfig::from_spec(&stream_spec)?;
+    let platform = Platform::paper();
+    let model = CalibratedModel::paper();
+    benchkit::preamble("engine — slab/ladder million-job capacity", &platform);
+    let dag = workloads::chain(len, KernelKind::Mm, size);
+    println!(
+        "template job: chain len={len} kernel=mm size={size} | jobs={jobs} | stream {}",
+        stream.spec_string()
+    );
+
+    let registry = SchedulerRegistry::builtin();
+    let mut rows: Vec<(EventQueueKind, f64, SessionReport)> = Vec::new();
+    let mut table = Table::new(
+        format!("engine capacity ({jobs} jobs, scheduler {sched_spec})"),
+        &[
+            "queue", "jobs", "events", "wall_s", "events/s", "jobs/s", "mem_kib", "maxconc",
+            "p95_ms",
+        ],
+    );
+    for kind in kinds {
+        let mut scheduler = registry.create(&sched_spec)?;
+        let sim_cfg = SimConfig { event_queue: kind, ..Default::default() };
+        let t0 = std::time::Instant::now();
+        let session = simulate_capacity(
+            &dag,
+            jobs,
+            scheduler.as_mut(),
+            &platform,
+            &model,
+            &sim_cfg,
+            &stream,
+        );
+        let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+        table.row(vec![
+            kind.as_str().to_string(),
+            session.job_count().to_string(),
+            session.events_processed.to_string(),
+            format!("{wall_s:.2}"),
+            format!("{:.0}", session.events_processed as f64 / wall_s),
+            format!("{:.0}", session.job_count() as f64 / wall_s),
+            (session.mem_high_water_bytes / 1024).to_string(),
+            session.max_concurrent_jobs().to_string(),
+            fmt_ms(session.p95_sojourn_ms()),
+        ]);
+        rows.push((kind, wall_s, session));
+    }
+    println!("{}", table.render());
+
+    let json = render_engine_json("cargo-run", jobs, len, size, &sched_spec, &stream, &rows);
+    let path = benchkit::save_bench_json("engine", &json)?;
+    println!("json written to {}", path.display());
+    Ok(())
+}
+
+/// Render the `BENCH_engine.json` document — one row per event-queue
+/// kind, the schema `python/tools/validate_bench.py` checks in CI
+/// (events/sec positive, every submitted job completed, memory
+/// high-water present).
+fn render_engine_json(
+    harness: &str,
+    jobs: usize,
+    len: usize,
+    size: u32,
+    scheduler: &str,
+    stream: &StreamConfig,
+    rows: &[(EventQueueKind, f64, SessionReport)],
+) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    s.push_str("{\n  \"bench\": \"engine\",\n");
+    let _ = writeln!(s, "  \"harness\": \"{harness}\",");
+    let _ = writeln!(s, "  \"jobs_submitted\": {jobs},");
+    let _ = writeln!(
+        s,
+        "  \"template\": {{\"family\": \"chain\", \"len\": {len}, \"kernel\": \"mm\", \
+         \"size\": {size}}},"
+    );
+    let _ = writeln!(s, "  \"scheduler\": \"{}\",", json_escape(scheduler));
+    let _ = writeln!(s, "  \"stream\": \"{}\",", json_escape(&stream.spec_string()));
+    s.push_str("  \"rows\": [\n");
+    for (i, (kind, wall_s, r)) in rows.iter().enumerate() {
+        let completed = r.job_count() - r.rejected_count();
+        let sketched = r
+            .tally
+            .as_ref()
+            .map(|t| t.sojourns.is_sketched())
+            .unwrap_or(false);
+        let _ = writeln!(
+            s,
+            "    {{\"queue_kind\": \"{}\", \"jobs_submitted\": {}, \"jobs_completed\": {}, \
+             \"jobs_rejected\": {}, \"events_processed\": {}, \"wall_s\": {:.6}, \
+             \"events_per_sec\": {:.2}, \"jobs_per_sec\": {:.2}, \
+             \"mem_high_water_bytes\": {}, \"max_concurrent_jobs\": {}, \
+             \"sojourn_sketched\": {}, \"p50_sojourn_ms\": {:.6}, \"p95_sojourn_ms\": {:.6}, \
+             \"p99_sojourn_ms\": {:.6}, \"mean_sojourn_ms\": {:.6}, \
+             \"mean_queue_delay_ms\": {:.6}, \"span_ms\": {:.6}, \"throughput_jps\": {:.6}}}{}",
+            kind.as_str(),
+            r.job_count(),
+            completed,
+            r.rejected_count(),
+            r.events_processed,
+            wall_s,
+            r.events_processed as f64 / wall_s,
+            r.job_count() as f64 / wall_s,
+            r.mem_high_water_bytes,
+            r.max_concurrent_jobs(),
+            sketched,
+            r.p50_sojourn_ms(),
+            r.p95_sojourn_ms(),
+            r.p99_sojourn_ms(),
+            r.mean_sojourn_ms(),
+            r.mean_queueing_delay_ms(),
+            r.span_ms,
+            r.throughput_jps(),
+            if i + 1 == rows.len() { "" } else { "," }
+        );
+    }
+    s.push_str("  ]\n}\n");
+    s
 }
 
 /// `hetsched scenario`: declarative experiments with replication.

@@ -9,11 +9,12 @@ use super::spec::ScenarioSpec;
 
 /// `(name, file contents)` of every committed scenario, in bench
 /// emission order.
-pub const BUILTIN_SCENARIOS: [(&str, &str); 4] = [
+pub const BUILTIN_SCENARIOS: [(&str, &str); 5] = [
     ("open-poisson", include_str!("../../../scenarios/open-poisson.toml")),
     ("open-qos", include_str!("../../../scenarios/open-qos.toml")),
     ("open-fault", include_str!("../../../scenarios/open-fault.toml")),
     ("capacity-sweep", include_str!("../../../scenarios/capacity-sweep.toml")),
+    ("engine-capacity", include_str!("../../../scenarios/engine-capacity.toml")),
 ];
 
 /// Source text of a builtin scenario.
@@ -62,6 +63,7 @@ mod tests {
         assert_eq!(count("open-qos"), 4, "admission sweep");
         assert_eq!(count("open-fault"), 3, "recovery sweep");
         assert_eq!(count("capacity-sweep"), 6, "2 policies x 3 offered loads");
+        assert_eq!(count("engine-capacity"), 2, "policy pair on the slab/ladder core");
     }
 
     #[test]

@@ -41,6 +41,7 @@ pub mod spec;
 pub use library::{builtin_src, load, load_builtin, BUILTIN_SCENARIOS};
 pub use report::{merge_cell, scenarios_json, CellReport, ClassStat, ScenarioReport, Stat};
 pub use runner::{
-    default_threads, rep_seed, run_cell, run_repetition, run_scenario, RunOptions,
+    default_threads, rep_seed, run_cell, run_repetition, run_repetition_with, run_scenario,
+    RunOptions,
 };
 pub use spec::{ScenarioSpec, SweepCell};

@@ -21,7 +21,9 @@ use crate::dag::workloads;
 use crate::dag::Dag;
 use crate::perfmodel::CalibratedModel;
 use crate::sched::{PlanCache, SchedulerRegistry};
-use crate::sim::{simulate_open_qos, ArrivalProcess, JobQos, SessionReport, SimConfig};
+use crate::sim::{
+    simulate_open_qos, ArrivalProcess, EventQueueKind, JobQos, SessionReport, SimConfig,
+};
 use crate::util::rng::Pcg32;
 
 use super::report::{merge_cell, ScenarioReport};
@@ -78,6 +80,21 @@ pub fn default_threads() -> usize {
 /// debugging sessions) can pin that repetition `r` inside the threaded
 /// fan-out equals this exact call.
 pub fn run_repetition(spec: &ScenarioSpec, cell: &SweepCell, rep: usize) -> Result<SessionReport> {
+    run_repetition_with(spec, cell, rep, EventQueueKind::default())
+}
+
+/// [`run_repetition`] with an explicit event-queue implementation.
+///
+/// The default (ladder) and the reference heap pop events in the same
+/// total order, so both produce bit-identical reports — the
+/// equivalence tests in `tests/engine_capacity.rs` pin that on every
+/// builtin scenario via this entry point.
+pub fn run_repetition_with(
+    spec: &ScenarioSpec,
+    cell: &SweepCell,
+    rep: usize,
+    event_queue: EventQueueKind,
+) -> Result<SessionReport> {
     let classed =
         workloads::job_classes(&spec.classes, spec.jobs, rep_seed(spec.seed, rep, WORKLOAD_AXIS));
     let dags: Vec<Dag> = classed.iter().map(|j| j.dag.clone()).collect();
@@ -107,7 +124,7 @@ pub fn run_repetition(spec: &ScenarioSpec, cell: &SweepCell, rep: usize) -> Resu
     let platform = spec.platform();
     let model =
         if spec.tri_platform { CalibratedModel::tri_device() } else { CalibratedModel::paper() };
-    let sim_cfg = SimConfig { fault, ..Default::default() };
+    let sim_cfg = SimConfig { fault, event_queue, ..Default::default() };
     Ok(simulate_open_qos(
         &dags,
         &qos,

@@ -2,12 +2,39 @@
 //!
 //! One global event queue drives *many jobs simultaneously in flight*:
 //! every event — job arrival, job drain, task ready — is tagged with its
-//! [`JobId`] and totally ordered by `(time, kind, job, task)`, so merged
-//! traces and ledgers are reproducible regardless of how admissions
-//! interleave. Jobs share the devices, the bus channels, the MSI
-//! [`Directory`] and the policy; a bounded admission window (the
+//! [`JobId`] and totally ordered by `(time, kind, job, task, epoch)`, so
+//! merged traces and ledgers are reproducible regardless of how
+//! admissions interleave. Jobs share the devices, the bus channels, the
+//! MSI [`Directory`] and the policy; a bounded admission window (the
 //! [`StreamConfig::queue`]) holds excess arrivals in FIFO order, and the
 //! wait is reported as queueing delay.
+//!
+//! # Capacity architecture
+//!
+//! The hot structures are sized for *millions of jobs in one session*
+//! (the ROADMAP's heavy-traffic north star), so every per-job cost is
+//! O(in-flight), never O(total jobs):
+//!
+//! * **Job slab** — live jobs occupy recycled slots in a
+//!   `Vec<Option<JobRun>>`; a drained job's slot, its [`Directory`]
+//!   handles and its task-arena range are freed and reused by the next
+//!   admission. Events carry the dense [`JobId`] (not the slot), which
+//!   preserves the total order bit-for-bit.
+//! * **Task arena** — per-task state (indegree, ready/finish time,
+//!   assignment, epoch, output handle) lives in six parallel vectors of
+//!   a shared [`TaskArena`], addressed as `base + task`; ranges are
+//!   recycled by size class on job drain.
+//! * **Event-queue seam** — the queue sits behind the
+//!   [`super::equeue::EventQueue`] trait ([`SimConfig::event_queue`]):
+//!   the default [`super::equeue::LadderQueue`] is amortized O(1) per
+//!   event, the `BinaryHeap` reference implementation is kept for
+//!   cross-checks, and both produce *identical* pop sequences (pinned
+//!   by equivalence tests), so goldens are queue-independent.
+//! * **Lazy arrivals** — job inputs come from a [`JobSource`]: arrival
+//!   `j + 1` is scheduled while arrival `j` is processed, so a
+//!   million-job session never materializes a million `JobInput`s (the
+//!   [`simulate_capacity`] entry point shares one template DAG and
+//!   plan across every job).
 //!
 //! Entry points:
 //! * [`simulate`] / [`simulate_with_plan`] — thin single-job wrappers
@@ -18,7 +45,11 @@
 //!   run with a merged multi-job ready frontier;
 //! * [`simulate_stream`] — the closed loop (`arrival=closed`): each job
 //!   runs back-to-back on an otherwise-idle platform, exactly PR 2's
-//!   stream semantics (pinned by the golden equivalence tests).
+//!   stream semantics (pinned by the golden equivalence tests);
+//! * [`simulate_capacity`] — the million-job entry: one template job
+//!   replayed over a timed arrival process into a *streaming*
+//!   [`SessionReport`] (quantile sketches, no per-job vectors), with
+//!   events/sec and memory high-water accounting.
 //!
 //! The scheduler observes the open system through the job-tagged
 //! lifecycle ([`Scheduler::on_submit`] at admission, [`Scheduler::select`]
@@ -45,11 +76,11 @@
 //! epochs; with no fault spec every epoch is 0 and the engine is
 //! bit-for-bit the PR 5 engine.
 
-use std::cmp::Reverse;
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 use std::time::Instant;
 
+use super::equeue::{Event, EventQueue, EventQueueKind, Ord64};
 use super::report::{JobTiming, RunReport, SessionReport, TraceEvent};
 use super::stream::{AdmissionPolicy, FaultSpec, JobQos, StreamConfig};
 use crate::dag::{Dag, KernelKind};
@@ -81,6 +112,10 @@ pub struct SimConfig {
     /// Device failure/drain injection (`None` or an inert spec = the
     /// failure-free engine, bit-for-bit). See the module docs.
     pub fault: Option<FaultSpec>,
+    /// Event-queue implementation behind the seam. The default ladder
+    /// queue and the `BinaryHeap` reference pop identical sequences;
+    /// this knob exists for cross-checking and benchmarks.
+    pub event_queue: EventQueueKind,
 }
 
 impl Default for SimConfig {
@@ -91,19 +126,8 @@ impl Default for SimConfig {
             bus_channels: 1,
             prefetch: false,
             fault: None,
+            event_queue: EventQueueKind::default(),
         }
-    }
-}
-
-/// Totally ordered f64 for the event heap (times are finite by
-/// construction).
-#[derive(PartialEq, PartialOrd)]
-struct Ord64(f64);
-impl Eq for Ord64 {}
-#[allow(clippy::derive_ord_xor_partial_ord)]
-impl Ord for Ord64 {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.partial_cmp(other).unwrap()
     }
 }
 
@@ -177,7 +201,74 @@ impl<'a> JobInput<'a> {
     }
 }
 
-/// Per-job engine state.
+/// Where the engine pulls its jobs from, one arrival ahead of the
+/// clock. `submit_ms` must be nondecreasing in `j` (true of every
+/// [`super::stream::ArrivalProcess`]), which is what lets the engine
+/// schedule arrival `j + 1` while processing arrival `j` without
+/// perturbing the event total order.
+pub(crate) trait JobSource<'a> {
+    /// Total number of jobs this source will produce.
+    fn total(&self) -> usize;
+    /// Submit time of job `j` on the session clock.
+    fn submit_ms(&self, j: JobId) -> f64;
+    /// Materialize job `j`'s input (called exactly once per job, in
+    /// arrival order).
+    fn take(&mut self, j: JobId) -> JobInput<'a>;
+}
+
+/// Pre-materialized inputs (the classic `simulate_open` path).
+struct VecSource<'a> {
+    inputs: Vec<Option<JobInput<'a>>>,
+}
+
+impl<'a> JobSource<'a> for VecSource<'a> {
+    fn total(&self) -> usize {
+        self.inputs.len()
+    }
+    fn submit_ms(&self, j: JobId) -> f64 {
+        self.inputs[j].as_ref().expect("job not yet taken").submit_ms
+    }
+    fn take(&mut self, j: JobId) -> JobInput<'a> {
+        self.inputs[j].take().expect("each job taken exactly once")
+    }
+}
+
+/// One template job replayed at every submit time — the million-job
+/// capacity source: O(1) memory regardless of job count.
+struct TemplateSource<'a> {
+    dag: &'a Dag,
+    plan: Arc<Plan>,
+    times: Vec<f64>,
+    qos: JobQos,
+    est_work_ms: f64,
+    budget_ms: f64,
+    /// Plan build cost, attributed to job 0 (every other job is a
+    /// cache-hit by construction).
+    build_ns: u64,
+}
+
+impl<'a> JobSource<'a> for TemplateSource<'a> {
+    fn total(&self) -> usize {
+        self.times.len()
+    }
+    fn submit_ms(&self, j: JobId) -> f64 {
+        self.times[j]
+    }
+    fn take(&mut self, j: JobId) -> JobInput<'a> {
+        JobInput {
+            dag: self.dag,
+            plan: Arc::clone(&self.plan),
+            submit_ms: self.times[j],
+            build_ns: if j == 0 { self.build_ns } else { 0 },
+            qos: self.qos,
+            est_work_ms: self.est_work_ms,
+            budget_ms: self.budget_ms,
+        }
+    }
+}
+
+/// Per-job engine state (slab slot). Per-*task* state lives in the
+/// shared [`TaskArena`] at `base + task`.
 struct JobRun<'a> {
     dag: &'a Dag,
     plan: Arc<Plan>,
@@ -193,24 +284,84 @@ struct JobRun<'a> {
     rejected: bool,
     plan_ns: u64,
     decision_ns: u64,
-    out: Vec<DataHandle>,
+    /// Task-arena range start; `usize::MAX` before admission (pending
+    /// jobs own no task state yet).
+    base: usize,
+    /// Host-resident initial input handles per task (freed at retire).
     initial: Vec<Vec<DataHandle>>,
-    indeg: Vec<usize>,
-    ready_time: Vec<f64>,
-    finish: Vec<f64>,
-    assignments: Vec<usize>,
     device_busy: Vec<f64>,
     tasks_per_device: Vec<usize>,
     ledger: TransferLedger,
     trace: Vec<TraceEvent>,
+    /// Tasks not yet dispatched; `usize::MAX` before admission.
     remaining: usize,
-    /// Per-task event generation: an `EV_READY` whose epoch is stale
-    /// (the task was killed or its indegree restored since the push) is
-    /// skipped. All zeros in fault-free runs.
-    task_epoch: Vec<u64>,
     /// Drain generation: bumped when a failure revokes a completed job,
     /// invalidating its pending `EV_DRAIN`.
     drain_epoch: u64,
+}
+
+/// Shared per-task state in six parallel vectors, addressed as
+/// `base + task`. Ranges are recycled by size class on job drain, so
+/// the arena's footprint tracks the in-flight task count, not the
+/// session total.
+struct TaskArena {
+    indeg: Vec<usize>,
+    ready_time: Vec<f64>,
+    finish: Vec<f64>,
+    assign: Vec<usize>,
+    /// Per-task event generation: an `EV_READY` whose epoch is stale
+    /// (the task was killed or its indegree restored since the push) is
+    /// skipped. All zeros in fault-free runs.
+    epoch: Vec<u64>,
+    /// Output data handle per task.
+    out: Vec<DataHandle>,
+    /// Freed ranges by length, recycled LIFO.
+    free_by_len: HashMap<usize, Vec<usize>>,
+}
+
+impl TaskArena {
+    fn new() -> TaskArena {
+        TaskArena {
+            indeg: Vec::new(),
+            ready_time: Vec::new(),
+            finish: Vec::new(),
+            assign: Vec::new(),
+            epoch: Vec::new(),
+            out: Vec::new(),
+            free_by_len: HashMap::new(),
+        }
+    }
+
+    /// Claim a range of `n` tasks: recycle a freed same-length range or
+    /// grow the vectors. The caller re-initializes every field.
+    fn alloc(&mut self, n: usize) -> usize {
+        if let Some(list) = self.free_by_len.get_mut(&n) {
+            if let Some(base) = list.pop() {
+                return base;
+            }
+        }
+        let base = self.indeg.len();
+        self.indeg.resize(base + n, 0);
+        self.ready_time.resize(base + n, 0.0);
+        self.finish.resize(base + n, 0.0);
+        self.assign.resize(base + n, usize::MAX);
+        self.epoch.resize(base + n, 0);
+        self.out.resize(base + n, DataHandle(u32::MAX));
+        base
+    }
+
+    /// Return a range for recycling.
+    fn free(&mut self, base: usize, n: usize) {
+        if n > 0 {
+            self.free_by_len.entry(n).or_default().push(base);
+        }
+    }
+
+    /// Working-set estimate in bytes (for the memory high-water stat).
+    fn bytes(&self) -> u64 {
+        let per_task = (5 * std::mem::size_of::<usize>() + std::mem::size_of::<DataHandle>()) as u64;
+        self.indeg.len() as u64 * per_task
+    }
 }
 
 /// One committed task execution, remembered while a fault spec is
@@ -239,7 +390,7 @@ struct FaultState {
     commits: Vec<Commit>,
 }
 
-/// Recovery accounting for one engine run, aggregated into
+/// Recovery + capacity accounting for one engine run, aggregated into
 /// [`SessionReport`]'s recovery metrics.
 #[derive(Debug, Clone, Copy, Default)]
 pub(crate) struct RecoveryStats {
@@ -250,6 +401,14 @@ pub(crate) struct RecoveryStats {
     /// `executed == useful + wasted` at drain.
     pub executed_work_ms: f64,
     pub recovery_replans: u64,
+    /// Events popped from the queue over the whole run.
+    pub events_processed: u64,
+    /// Peak number of jobs simultaneously admitted.
+    pub max_inflight: u64,
+    /// Peak engine working-set estimate (bytes): job slab + task arena
+    /// + event queue + directory + availability/pending vectors. Stays
+    /// O(in-flight jobs) thanks to slot recycling.
+    pub mem_high_water_bytes: u64,
 }
 
 /// One exponential draw with the given mean (ms); strictly finite for
@@ -258,38 +417,49 @@ fn exp_mean_ms(rng: &mut Pcg32, mean_ms: f64) -> f64 {
     -(1.0 - rng.gen_f64()).ln() * mean_ms
 }
 
-/// The job-agnostic open-system core: shared machine state plus per-job
-/// slots, driven by the global event heap.
+/// The job-agnostic open-system core: shared machine state plus the job
+/// slab and task arena, driven by the global event queue.
 struct EngineCore<'a> {
     platform: &'a Platform,
     model: &'a dyn PerfModel,
     config: &'a SimConfig,
+    /// Policy name, captured at the start of `run` for retire-time
+    /// report assembly.
+    sched_name: &'static str,
+    /// Lazy job feed: arrival `j + 1` is scheduled while `j` processes.
+    source: Box<dyn JobSource<'a> + 'a>,
     worker_free: Vec<Vec<f64>>,
     bus: Vec<f64>,
     dir: Directory,
     /// Time each datum becomes available at its producer (prefetch).
     avail: Vec<f64>,
-    heap: BinaryHeap<Reverse<(Ord64, u8, usize, usize, u64)>>,
+    /// The event queue behind the seam ([`SimConfig::event_queue`]).
+    events: Box<dyn EventQueue>,
     /// Jobs waiting for an admission slot, in arrival order; pops are
     /// ordered by the admission policy via [`EngineCore::pop_pending`].
     pending: Vec<JobId>,
     admit_policy: AdmissionPolicy,
     inflight: usize,
     queue: usize,
-    jobs: Vec<JobRun<'a>>,
+    /// Job slab: live jobs in recycled slots ([`EngineCore::slot_of`]
+    /// maps ids to slots); `None` = free.
+    jobs: Vec<Option<JobRun<'a>>>,
+    free_slots: Vec<usize>,
+    slot_of: HashMap<JobId, usize>,
+    tasks: TaskArena,
     /// Dispatch gate per device ([`DeviceState::can_dispatch`]).
     device_state: Vec<DeviceState>,
     fault: Option<FaultState>,
     stats: RecoveryStats,
     /// Jobs drained or rejected so far; when a fault stream is active
-    /// the run loop stops at `completed == jobs.len()` instead of
-    /// draining the (perpetual) device events.
+    /// the run loop stops at `completed == total` instead of draining
+    /// the (perpetual) device events.
     completed: usize,
 }
 
 impl<'a> EngineCore<'a> {
     fn new(
-        inputs: Vec<JobInput<'a>>,
+        source: Box<dyn JobSource<'a> + 'a>,
         platform: &'a Platform,
         model: &'a dyn PerfModel,
         config: &'a SimConfig,
@@ -298,39 +468,10 @@ impl<'a> EngineCore<'a> {
     ) -> EngineCore<'a> {
         let worker_free = platform.devices.iter().map(|d| vec![0.0; d.workers]).collect();
         let bus = vec![0.0; config.bus_channels.max(1)];
-        let mut heap = BinaryHeap::new();
-        let jobs: Vec<JobRun> = inputs
-            .into_iter()
-            .map(|input| JobRun {
-                dag: input.dag,
-                plan: input.plan,
-                submit_ms: input.submit_ms,
-                admit_ms: 0.0,
-                complete_ms: 0.0,
-                deadline_abs: input.submit_ms + input.qos.deadline_ms,
-                qos: input.qos,
-                est_work_ms: input.est_work_ms,
-                budget_ms: input.budget_ms,
-                rejected: false,
-                plan_ns: input.build_ns,
-                decision_ns: 0,
-                out: Vec::new(),
-                initial: Vec::new(),
-                indeg: Vec::new(),
-                ready_time: Vec::new(),
-                finish: Vec::new(),
-                assignments: Vec::new(),
-                device_busy: Vec::new(),
-                tasks_per_device: Vec::new(),
-                ledger: TransferLedger::new(),
-                trace: Vec::new(),
-                remaining: usize::MAX,
-                task_epoch: Vec::new(),
-                drain_epoch: 0,
-            })
-            .collect();
-        for (j, job) in jobs.iter().enumerate() {
-            heap.push(Reverse((Ord64(job.submit_ms), EV_ARRIVAL, j, 0, 0)));
+        let mut events = config.event_queue.build();
+        if source.total() > 0 {
+            let at = source.submit_ms(0);
+            events.schedule((Ord64(at), EV_ARRIVAL, 0, 0, 0));
         }
         let k = platform.device_count();
         let fault = config.fault.as_ref().filter(|f| !f.is_inert()).map(|spec| {
@@ -341,11 +482,14 @@ impl<'a> EngineCore<'a> {
                 // device (device 0 owns the checkpoint, it never fails).
                 for d in 1..k {
                     let gap = exp_mean_ms(&mut rng, spec.mtbf_ms);
-                    heap.push(Reverse((Ord64(gap), EV_DEV_DOWN, d, 0, 0)));
+                    events.schedule((Ord64(gap), EV_DEV_DOWN, d, 0, 0));
                 }
             } else {
                 let mut outages = spec.scripted.clone();
-                outages.sort_by(|a, b| a.at_ms.partial_cmp(&b.at_ms).unwrap());
+                // total_cmp: a NaN time would corrupt the order silently
+                // under partial_cmp; here it sorts last and the window
+                // validation rejects it loudly.
+                outages.sort_by(|a, b| a.at_ms.total_cmp(&b.at_ms));
                 for f in &outages {
                     assert!(
                         f.dev < k,
@@ -353,8 +497,8 @@ impl<'a> EngineCore<'a> {
                         f.dev
                     );
                     scripted[f.dev].push_back((f.at_ms, f.down_ms, f.drain));
-                    heap.push(Reverse((Ord64(f.at_ms), EV_DEV_DOWN, f.dev, f.drain as usize, 0)));
-                    heap.push(Reverse((Ord64(f.at_ms + f.down_ms), EV_DEV_UP, f.dev, 0, 0)));
+                    events.schedule((Ord64(f.at_ms), EV_DEV_DOWN, f.dev, f.drain as usize, 0));
+                    events.schedule((Ord64(f.at_ms + f.down_ms), EV_DEV_UP, f.dev, 0, 0));
                 }
             }
             FaultState { spec: spec.clone(), rng, scripted, up_at: vec![0.0; k], commits: Vec::new() }
@@ -363,16 +507,21 @@ impl<'a> EngineCore<'a> {
             platform,
             model,
             config,
+            sched_name: "",
+            source,
             worker_free,
             bus,
             dir: Directory::new(),
             avail: Vec::new(),
-            heap,
+            events,
             pending: Vec::new(),
             admit_policy,
             inflight: 0,
             queue: queue.max(1),
-            jobs,
+            jobs: Vec::new(),
+            free_slots: Vec::new(),
+            slot_of: HashMap::new(),
+            tasks: TaskArena::new(),
             device_state: vec![DeviceState::Up; k],
             fault,
             stats: RecoveryStats::default(),
@@ -380,58 +529,112 @@ impl<'a> EngineCore<'a> {
         }
     }
 
+    /// Install job `j`'s input into a (recycled) slab slot. No task
+    /// state yet — that is allocated at admission.
+    fn alloc_slot(&mut self, j: JobId, input: JobInput<'a>) {
+        let run = JobRun {
+            dag: input.dag,
+            plan: input.plan,
+            submit_ms: input.submit_ms,
+            admit_ms: 0.0,
+            complete_ms: 0.0,
+            deadline_abs: input.submit_ms + input.qos.deadline_ms,
+            qos: input.qos,
+            est_work_ms: input.est_work_ms,
+            budget_ms: input.budget_ms,
+            rejected: false,
+            plan_ns: input.build_ns,
+            decision_ns: 0,
+            base: usize::MAX,
+            initial: Vec::new(),
+            device_busy: Vec::new(),
+            tasks_per_device: Vec::new(),
+            ledger: TransferLedger::new(),
+            trace: Vec::new(),
+            remaining: usize::MAX,
+            drain_epoch: 0,
+        };
+        let s = match self.free_slots.pop() {
+            Some(s) => {
+                self.jobs[s] = Some(run);
+                s
+            }
+            None => {
+                self.jobs.push(Some(run));
+                self.jobs.len() - 1
+            }
+        };
+        self.slot_of.insert(j, s);
+    }
+
+    /// Fold the current working-set estimate into the high-water mark.
+    fn note_mem(&mut self) {
+        let bytes = self.jobs.len() as u64 * std::mem::size_of::<Option<JobRun>>() as u64
+            + self.tasks.bytes()
+            + self.events.len() as u64 * std::mem::size_of::<Event>() as u64
+            + self.dir.len() as u64 * 16
+            + (self.avail.len() + self.pending.len()) as u64 * 8;
+        self.stats.mem_high_water_bytes = self.stats.mem_high_water_bytes.max(bytes);
+    }
+
+    /// Admission-policy key of pending job `j`. The full composite key
+    /// is `(priority, deadline, est_work, submit_seq)`; each policy
+    /// consults the documented prefix, and `submit_seq` (the dense job
+    /// id, submission order) breaks every tie deterministically.
+    fn pending_key(&self, j: JobId) -> (u32, f64, f64, usize) {
+        let s = self.slot_of[&j];
+        let job = self.jobs[s].as_ref().expect("pending job is live");
+        match self.admit_policy {
+            // FIFO (and reject, which is FIFO + budgets): arrival
+            // order only.
+            AdmissionPolicy::Fifo | AdmissionPolicy::Reject => (0, 0.0, 0.0, j),
+            AdmissionPolicy::Edf => (job.qos.priority, job.deadline_abs, 0.0, j),
+            AdmissionPolicy::Sjf => (job.qos.priority, job.est_work_ms, 0.0, j),
+        }
+    }
+
     /// Remove and return the next pending job under the admission
-    /// policy. The full composite key is `(priority, deadline,
-    /// est_work, submit_seq)`; each policy consults the documented
-    /// prefix, and `submit_seq` (the dense job id, submission order)
-    /// breaks every tie deterministically.
+    /// policy.
     fn pop_pending(&mut self) -> Option<JobId> {
         if self.pending.is_empty() {
             return None;
         }
-        let key = |jobs: &[JobRun], j: JobId| -> (u32, f64, f64, usize) {
-            let job = &jobs[j];
-            match self.admit_policy {
-                // FIFO (and reject, which is FIFO + budgets): arrival
-                // order only.
-                AdmissionPolicy::Fifo | AdmissionPolicy::Reject => (0, 0.0, 0.0, j),
-                AdmissionPolicy::Edf => (job.qos.priority, job.deadline_abs, 0.0, j),
-                AdmissionPolicy::Sjf => (job.qos.priority, job.est_work_ms, 0.0, j),
-            }
-        };
         let best = (0..self.pending.len())
             .min_by(|&a, &b| {
-                key(&self.jobs, self.pending[a])
-                    .partial_cmp(&key(&self.jobs, self.pending[b]))
+                self.pending_key(self.pending[a])
+                    .partial_cmp(&self.pending_key(self.pending[b]))
                     .expect("pending keys are never NaN")
             })
             .expect("pending is non-empty");
         Some(self.pending.remove(best))
     }
 
-    /// Admit job `j` at engine time `now`: install its plan, allocate
-    /// its data handles, and release its root tasks into the merged
-    /// ready frontier.
+    /// Admit job `j` at `now`: allocate its task-arena range and data
+    /// handles, tell the policy, and release its source frontier.
     fn admit(&mut self, scheduler: &mut dyn Scheduler, j: JobId, now: f64) {
         let k = self.platform.device_count();
         let host = self.platform.host_node();
-        let job = &mut self.jobs[j];
-        let dag = job.dag;
-        job.admit_ms = now;
+        let s = self.slot_of[&j];
+        let (dag, plan) = {
+            let job = self.jobs[s].as_mut().expect("live job");
+            job.admit_ms = now;
+            (job.dag, Arc::clone(&job.plan))
+        };
         let t0 = Instant::now();
-        scheduler.on_submit(j, dag, &job.plan, self.platform, self.model);
-        job.plan_ns += t0.elapsed().as_nanos() as u64;
+        scheduler.on_submit(j, dag, &plan, self.platform, self.model);
+        let dt = t0.elapsed().as_nanos() as u64;
+        self.jobs[s].as_mut().expect("live job").plan_ns += dt;
 
         // Data handles: one output per node, then host-resident initial
         // inputs for under-fed kernels (paper §III.B: all initial data
-        // on host).
+        // on host). Handles may be recycled from drained jobs.
         let n = dag.node_count();
-        job.out = Vec::with_capacity(n);
+        let base = self.tasks.alloc(n);
         for i in 0..n {
             let sz = dag.node(i).size as u64;
-            job.out.push(self.dir.alloc_unwritten(4 * sz * sz));
+            self.tasks.out[base + i] = self.dir.alloc_unwritten(4 * sz * sz);
         }
-        job.initial = Vec::with_capacity(n);
+        let mut initial: Vec<Vec<DataHandle>> = Vec::with_capacity(n);
         for i in 0..n {
             let node = dag.node(i);
             let missing = node.kernel.arity().saturating_sub(dag.in_degree(i));
@@ -440,27 +643,46 @@ impl<'a> EngineCore<'a> {
             for _ in 0..missing {
                 handles.push(self.dir.alloc(4 * sz * sz, host));
             }
-            job.initial.push(handles);
+            initial.push(handles);
         }
         // New data exists no earlier than the admission instant: a
-        // prefetch must not schedule a copy before the job arrived.
-        self.avail.resize(self.dir.len(), now);
-
-        job.indeg = (0..n).map(|i| dag.in_degree(i)).collect();
-        job.ready_time = vec![now; n];
-        job.finish = vec![0.0; n];
-        job.assignments = vec![usize::MAX; n];
-        job.device_busy = vec![0.0; k];
-        job.tasks_per_device = vec![0; k];
-        job.task_epoch = vec![0; n];
-        job.remaining = n;
+        // prefetch must not schedule a copy before the job arrived. A
+        // recycled handle must not keep its previous owner's time, so
+        // every handle is stamped explicitly (resize alone only covers
+        // fresh ones).
+        if self.avail.len() < self.dir.len() {
+            self.avail.resize(self.dir.len(), now);
+        }
+        for i in 0..n {
+            self.avail[self.tasks.out[base + i].0 as usize] = now;
+            for h in &initial[i] {
+                self.avail[h.0 as usize] = now;
+            }
+        }
+        for i in 0..n {
+            self.tasks.indeg[base + i] = dag.in_degree(i);
+            self.tasks.ready_time[base + i] = now;
+            self.tasks.finish[base + i] = 0.0;
+            self.tasks.assign[base + i] = usize::MAX;
+            self.tasks.epoch[base + i] = 0;
+        }
+        {
+            let job = self.jobs[s].as_mut().expect("live job");
+            job.base = base;
+            job.initial = initial;
+            job.device_busy = vec![0.0; k];
+            job.tasks_per_device = vec![0; k];
+            job.remaining = n;
+        }
         for v in 0..n {
-            if job.indeg[v] == 0 {
-                self.heap.push(Reverse((Ord64(now), EV_READY, j, v, 0)));
+            if self.tasks.indeg[base + v] == 0 {
+                self.events.schedule((Ord64(now), EV_READY, j, v, 0));
             }
         }
         self.inflight += 1;
-        if self.jobs[j].remaining == 0 {
+        self.stats.max_inflight = self.stats.max_inflight.max(self.inflight as u64);
+        self.note_mem();
+        if n == 0 {
             self.complete_job(scheduler, j);
         }
     }
@@ -471,26 +693,35 @@ impl<'a> EngineCore<'a> {
     fn dispatch(&mut self, scheduler: &mut dyn Scheduler, j: JobId, v: usize, ready: f64) {
         let k = self.platform.device_count();
         let host = self.platform.host_node();
-        let job = &mut self.jobs[j];
-        let dag = job.dag;
+        let s = self.slot_of[&j];
+        let (dag, base, deadline_abs) = {
+            let job = self.jobs[s].as_ref().expect("live job");
+            (job.dag, job.base, job.deadline_abs)
+        };
         let node = dag.node(v);
 
         // Virtual source kernels: zero time, output = host-resident data.
         if node.kernel == KernelKind::Source {
-            self.dir.acquire_write(job.out[v], host);
-            job.finish[v] = ready;
-            job.assignments[v] = host;
+            let out = self.tasks.out[base + v];
+            self.dir.acquire_write(out, host);
+            self.tasks.finish[base + v] = ready;
+            self.tasks.assign[base + v] = host;
             for &e in dag.out_edges(v) {
                 let w = dag.edge(e).dst;
-                job.indeg[w] -= 1;
-                job.ready_time[w] = job.ready_time[w].max(ready);
-                if job.indeg[w] == 0 {
-                    let ep = job.task_epoch[w];
-                    self.heap.push(Reverse((Ord64(job.ready_time[w]), EV_READY, j, w, ep)));
+                self.tasks.indeg[base + w] -= 1;
+                self.tasks.ready_time[base + w] = self.tasks.ready_time[base + w].max(ready);
+                if self.tasks.indeg[base + w] == 0 {
+                    let at = self.tasks.ready_time[base + w];
+                    let ep = self.tasks.epoch[base + w];
+                    self.events.schedule((Ord64(at), EV_READY, j, w, ep));
                 }
             }
-            job.remaining -= 1;
-            if job.remaining == 0 {
+            let rem = {
+                let job = self.jobs[s].as_mut().expect("live job");
+                job.remaining -= 1;
+                job.remaining
+            };
+            if rem == 0 {
                 self.complete_job(scheduler, j);
             }
             return;
@@ -500,9 +731,9 @@ impl<'a> EngineCore<'a> {
         let mut handles: Vec<DataHandle> = dag
             .in_edges(v)
             .iter()
-            .map(|&e| job.out[dag.edge(e).src])
+            .map(|&e| self.tasks.out[base + dag.edge(e).src])
             .collect();
-        handles.extend(&job.initial[v]);
+        handles.extend(self.jobs[s].as_ref().expect("live job").initial[v].iter().copied());
         let inputs: Vec<InputInfo> = handles
             .iter()
             .map(|&h| InputInfo { bytes: self.dir.bytes(h), valid_mask: self.dir.valid_mask(h) })
@@ -530,7 +761,7 @@ impl<'a> EngineCore<'a> {
             kernel: node.kernel,
             size: node.size,
             ready_ms: ready,
-            deadline_ms: job.deadline_abs,
+            deadline_ms: deadline_abs,
             device_free_ms: &device_free,
             inputs: &inputs,
             platform: self.platform,
@@ -538,7 +769,8 @@ impl<'a> EngineCore<'a> {
         };
         let t0 = Instant::now();
         let mut dev = scheduler.select(&ctx);
-        job.decision_ns += t0.elapsed().as_nanos() as u64;
+        let dt = t0.elapsed().as_nanos() as u64;
+        self.jobs[s].as_mut().expect("live job").decision_ns += dt;
         assert!(dev < k, "scheduler returned invalid device {dev}");
         if !self.device_state[dev].can_dispatch() {
             // Pinned to a failed/draining device: the engine reroutes to
@@ -570,70 +802,81 @@ impl<'a> EngineCore<'a> {
         let mut data_ready = ready;
         for &h in &handles {
             if let Some(src) = self.dir.acquire_read(h, mem) {
-                let t = self.model.transfer_time_ms(self.dir.bytes(h));
+                let bytes = self.dir.bytes(h);
+                let t = self.model.transfer_time_ms(bytes);
                 // Earliest-free channel; with prefetch the copy may begin
                 // as soon as the datum exists at its producer.
                 let ch = (0..self.bus.len())
-                    .min_by(|&a, &b| self.bus[a].partial_cmp(&self.bus[b]).unwrap())
+                    .min_by(|&a, &b| self.bus[a].total_cmp(&self.bus[b]))
                     .unwrap();
                 let earliest = if self.config.prefetch { self.avail[h.0 as usize] } else { ready };
                 let start = self.bus[ch].max(earliest);
                 self.bus[ch] = start + t;
-                job.ledger.record(src, mem, self.dir.bytes(h), t);
+                self.jobs[s].as_mut().expect("live job").ledger.record(src, mem, bytes, t);
                 data_ready = data_ready.max(self.bus[ch]);
             }
         }
         // Output: exclusive write on the executing node.
-        self.dir.acquire_write(job.out[v], mem);
+        let out = self.tasks.out[base + v];
+        self.dir.acquire_write(out, mem);
 
         // --- execute on the earliest-free worker ---
         let (worker, &wfree) = self.worker_free[dev]
             .iter()
             .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .min_by(|a, b| a.1.total_cmp(b.1))
             .unwrap();
         let exec = self.model.kernel_time_ms(node.kernel, node.size, dev);
         let start = wfree.max(data_ready);
         let end = start + exec;
         self.worker_free[dev][worker] = end;
-        job.finish[v] = end;
-        self.avail[job.out[v].0 as usize] = end;
-        job.assignments[v] = dev;
-        job.device_busy[dev] += exec;
-        job.tasks_per_device[dev] += 1;
+        self.tasks.finish[base + v] = end;
+        self.avail[out.0 as usize] = end;
+        self.tasks.assign[base + v] = dev;
         self.stats.executed_work_ms += exec;
+        {
+            let job = self.jobs[s].as_mut().expect("live job");
+            job.device_busy[dev] += exec;
+            job.tasks_per_device[dev] += 1;
+            if self.config.collect_trace {
+                job.trace.push(TraceEvent {
+                    job: j,
+                    task: v,
+                    device: dev,
+                    worker,
+                    start_ms: start,
+                    end_ms: end,
+                });
+            }
+        }
         if let Some(fault) = self.fault.as_mut() {
             fault.commits.push(Commit { job: j, task: v, dev, worker, start, end, exec });
-        }
-        if self.config.collect_trace {
-            job.trace.push(TraceEvent {
-                job: j,
-                task: v,
-                device: dev,
-                worker,
-                start_ms: start,
-                end_ms: end,
-            });
         }
         // Completion lifecycle event (the sim delivers it in dispatch
         // order; its virtual completion time rides along). Hook time
         // counts toward the policy's decision overhead.
         let t0 = Instant::now();
         scheduler.on_task_finish(j, v, dev, end);
-        job.decision_ns += t0.elapsed().as_nanos() as u64;
+        let dt = t0.elapsed().as_nanos() as u64;
+        self.jobs[s].as_mut().expect("live job").decision_ns += dt;
 
         // --- fire successors ---
         for &e in dag.out_edges(v) {
             let w = dag.edge(e).dst;
-            job.indeg[w] -= 1;
-            job.ready_time[w] = job.ready_time[w].max(end);
-            if job.indeg[w] == 0 {
-                let ep = job.task_epoch[w];
-                self.heap.push(Reverse((Ord64(job.ready_time[w]), EV_READY, j, w, ep)));
+            self.tasks.indeg[base + w] -= 1;
+            self.tasks.ready_time[base + w] = self.tasks.ready_time[base + w].max(end);
+            if self.tasks.indeg[base + w] == 0 {
+                let at = self.tasks.ready_time[base + w];
+                let ep = self.tasks.epoch[base + w];
+                self.events.schedule((Ord64(at), EV_READY, j, w, ep));
             }
         }
-        job.remaining -= 1;
-        if job.remaining == 0 {
+        let rem = {
+            let job = self.jobs[s].as_mut().expect("live job");
+            job.remaining -= 1;
+            job.remaining
+        };
+        if rem == 0 {
             self.complete_job(scheduler, j);
         }
     }
@@ -644,9 +887,14 @@ impl<'a> EngineCore<'a> {
     /// drain event that frees its admission slot.
     fn complete_job(&mut self, scheduler: &mut dyn Scheduler, j: JobId) {
         let host = self.platform.host_node();
-        let job = &mut self.jobs[j];
-        let dag = job.dag;
-        let mut makespan = job.finish.iter().cloned().fold(0.0f64, f64::max);
+        let s = self.slot_of[&j];
+        let (dag, base, admit_ms, drain_epoch) = {
+            let job = self.jobs[s].as_ref().expect("live job");
+            (job.dag, job.base, job.admit_ms, job.drain_epoch)
+        };
+        let n = dag.node_count();
+        let mut makespan =
+            self.tasks.finish[base..base + n].iter().cloned().fold(0.0f64, f64::max);
 
         // --- return results to host ---
         if self.config.return_results_to_host {
@@ -654,23 +902,78 @@ impl<'a> EngineCore<'a> {
                 if dag.node(v).kernel == KernelKind::Source {
                     continue;
                 }
-                if let Some(src) = self.dir.acquire_read(job.out[v], host) {
-                    let t = self.model.transfer_time_ms(self.dir.bytes(job.out[v]));
+                let out = self.tasks.out[base + v];
+                if let Some(src) = self.dir.acquire_read(out, host) {
+                    let bytes = self.dir.bytes(out);
+                    let t = self.model.transfer_time_ms(bytes);
                     let ch = (0..self.bus.len())
-                        .min_by(|&a, &b| self.bus[a].partial_cmp(&self.bus[b]).unwrap())
+                        .min_by(|&a, &b| self.bus[a].total_cmp(&self.bus[b]))
                         .unwrap();
-                    let start = self.bus[ch].max(job.finish[v]);
+                    let start = self.bus[ch].max(self.tasks.finish[base + v]);
                     self.bus[ch] = start + t;
-                    job.ledger.record(src, host, self.dir.bytes(job.out[v]), t);
+                    self.jobs[s].as_mut().expect("live job").ledger.record(src, host, bytes, t);
                     makespan = makespan.max(self.bus[ch]);
                 }
             }
         }
-        job.complete_ms = makespan.max(job.admit_ms);
+        let complete = makespan.max(admit_ms);
         let t0 = Instant::now();
         scheduler.on_job_drain(j);
-        job.decision_ns += t0.elapsed().as_nanos() as u64;
-        self.heap.push(Reverse((Ord64(job.complete_ms), EV_DRAIN, j, 0, job.drain_epoch)));
+        let dt = t0.elapsed().as_nanos() as u64;
+        {
+            let job = self.jobs[s].as_mut().expect("live job");
+            job.decision_ns += dt;
+            job.complete_ms = complete;
+        }
+        self.events.schedule((Ord64(complete), EV_DRAIN, j, 0, drain_epoch));
+    }
+
+    /// Remove job `j` from the slab, free its task-arena range and data
+    /// handles for recycling, and hand its report to the sink. After
+    /// this the engine holds no per-job state for `j` — what keeps a
+    /// million-job session's memory O(in-flight).
+    fn retire(&mut self, j: JobId, sink: &mut dyn FnMut(JobId, RunReport, JobTiming)) {
+        let s = self.slot_of.remove(&j).expect("retired job is live");
+        let job = self.jobs[s].take().expect("retired job is live");
+        self.free_slots.push(s);
+        let assignments = if job.base != usize::MAX {
+            let n = job.dag.node_count();
+            let assignments = self.tasks.assign[job.base..job.base + n].to_vec();
+            for i in 0..n {
+                self.dir.free(self.tasks.out[job.base + i]);
+            }
+            for handles in &job.initial {
+                for &h in handles {
+                    self.dir.free(h);
+                }
+            }
+            self.tasks.free(job.base, n);
+            assignments
+        } else {
+            // Rejected before admission: no task state was ever built.
+            Vec::new()
+        };
+        let report = RunReport {
+            scheduler: self.sched_name,
+            makespan_ms: if job.rejected { 0.0 } else { job.complete_ms - job.submit_ms },
+            ledger: job.ledger,
+            assignments,
+            device_busy_ms: job.device_busy,
+            tasks_per_device: job.tasks_per_device,
+            decision_ns: job.decision_ns,
+            plan_ns: job.plan_ns,
+            trace: job.trace,
+        };
+        let timing = JobTiming {
+            submit_ms: job.submit_ms,
+            admit_ms: job.admit_ms,
+            complete_ms: job.complete_ms,
+            class: job.qos.class,
+            priority: job.qos.priority,
+            deadline_ms: job.deadline_abs,
+            rejected: job.rejected,
+        };
+        sink(j, report, timing);
     }
 
     /// `EV_DEV_DOWN`: park the device (Down or Draining), and for a kill
@@ -683,12 +986,14 @@ impl<'a> EngineCore<'a> {
         let down_ms = if stochastic {
             let d = exp_mean_ms(&mut fault.rng, fault.spec.mttr_ms);
             // Scripted outages pushed their recovery at init.
-            self.heap.push(Reverse((Ord64(t + d), EV_DEV_UP, dev, 0, 0)));
+            self.events.schedule((Ord64(t + d), EV_DEV_UP, dev, 0, 0));
             d
         } else {
+            let fault = self.fault.as_mut().expect("checked above");
             let (_, down, _) = fault.scripted[dev].pop_front().expect("scripted outage queued");
             down
         };
+        let fault = self.fault.as_mut().expect("checked above");
         let up_at = t + down_ms;
         fault.up_at[dev] = up_at;
         self.device_state[dev] = if drain { DeviceState::Draining } else { DeviceState::Down };
@@ -700,7 +1005,9 @@ impl<'a> EngineCore<'a> {
 
         // --- kill the commitments still running on the victim ---
         // (`end == t` counts as finished: the failure strikes after the
-        // instant's completions, matching the event tie-break order.)
+        // instant's completions, matching the event tie-break order.
+        // Retired jobs' commitments also satisfy `end <= t`, so every
+        // slot lookup below hits a live job.)
         let fault = self.fault.as_mut().expect("checked above");
         let mut killed: Vec<Commit> = Vec::new();
         fault.commits.retain(|c| {
@@ -714,21 +1021,26 @@ impl<'a> EngineCore<'a> {
             true
         });
         for c in &killed {
-            let job = &mut self.jobs[c.job];
+            let s = self.slot_of[&c.job];
+            let base = self.jobs[s].as_ref().expect("live job").base;
             // Work done before the failure is wasted; work that was
             // committed but never ran is simply un-executed.
             let done = (t - c.start).max(0.0);
             self.stats.wasted_work_ms += done;
             self.stats.executed_work_ms -= c.exec - done;
             self.stats.tasks_reexecuted += 1;
-            job.device_busy[c.dev] -= c.exec;
-            job.tasks_per_device[c.dev] -= 1;
-            job.finish[c.task] = 0.0;
-            job.assignments[c.task] = usize::MAX;
+            self.tasks.finish[base + c.task] = 0.0;
+            self.tasks.assign[base + c.task] = usize::MAX;
             // The killed task's output is unwritten again.
-            self.dir.clear(job.out[c.task]);
-            if self.config.collect_trace {
-                job.trace.retain(|ev| ev.task != c.task);
+            let out = self.tasks.out[base + c.task];
+            self.dir.clear(out);
+            {
+                let job = self.jobs[s].as_mut().expect("live job");
+                job.device_busy[c.dev] -= c.exec;
+                job.tasks_per_device[c.dev] -= 1;
+                if self.config.collect_trace {
+                    job.trace.retain(|ev| ev.task != c.task);
+                }
             }
             scheduler.on_task_killed(c.job, c.task);
         }
@@ -764,7 +1076,7 @@ impl<'a> EngineCore<'a> {
         let fault = self.fault.as_mut().expect("device events require a fault state");
         if fault.spec.scripted.is_empty() {
             let gap = exp_mean_ms(&mut fault.rng, fault.spec.mtbf_ms);
-            self.heap.push(Reverse((Ord64(t + gap), EV_DEV_DOWN, dev, 0, 0)));
+            self.events.schedule((Ord64(t + gap), EV_DEV_DOWN, dev, 0, 0));
         }
         let replans = scheduler.on_device_up(dev);
         self.stats.recovery_replans += replans as u64;
@@ -772,71 +1084,96 @@ impl<'a> EngineCore<'a> {
 
     /// After a kill, restore job `jid`'s dependency frontier: recompute
     /// indegrees and ready times over the *done* predecessor set, bump
-    /// epochs so stale ready/drain events die in the heap, and push
+    /// epochs so stale ready/drain events die in the queue, and push
     /// fresh `EV_READY`s (delayed by the re-fetch charge) for killed
     /// tasks whose inputs are all still intact.
     fn requeue_job(&mut self, jid: usize, killed_tasks: &[usize], t: f64) {
         let refetch = self.fault.as_ref().map(|f| f.spec.refetch_ms).unwrap_or(0.0);
+        let s = self.slot_of[&jid];
+        let (dag, base, admit_ms, was_complete) = {
+            let job = self.jobs[s].as_ref().expect("live job");
+            (job.dag, job.base, job.admit_ms, job.remaining == 0)
+        };
         let mut pushes: Vec<(f64, usize, u64)> = Vec::new();
-        let job = &mut self.jobs[jid];
-        let dag = job.dag;
-        let was_complete = job.remaining == 0;
         let mut remaining = 0usize;
         for v in 0..dag.node_count() {
-            if job.assignments[v] != usize::MAX {
+            if self.tasks.assign[base + v] != usize::MAX {
                 continue; // done (and not killed): untouched
             }
             remaining += 1;
             let mut indeg = 0usize;
-            let mut ready = job.admit_ms;
+            let mut ready = admit_ms;
             for &e in dag.in_edges(v) {
                 let u = dag.edge(e).src;
-                if job.assignments[u] == usize::MAX {
+                if self.tasks.assign[base + u] == usize::MAX {
                     indeg += 1;
                 } else {
-                    ready = ready.max(job.finish[u]);
+                    ready = ready.max(self.tasks.finish[base + u]);
                 }
             }
-            job.ready_time[v] = ready;
+            self.tasks.ready_time[base + v] = ready;
             if killed_tasks.contains(&v) {
-                job.task_epoch[v] += 1;
-                job.indeg[v] = indeg;
+                self.tasks.epoch[base + v] += 1;
+                self.tasks.indeg[base + v] = indeg;
                 if indeg == 0 {
-                    pushes.push((ready.max(t) + refetch, v, job.task_epoch[v]));
+                    pushes.push((ready.max(t) + refetch, v, self.tasks.epoch[base + v]));
                 }
-            } else if indeg != job.indeg[v] {
+            } else if indeg != self.tasks.indeg[base + v] {
                 // A predecessor was killed from under this never-run
                 // task: its pending EV_READY (if any) is now premature.
-                job.task_epoch[v] += 1;
-                job.indeg[v] = indeg;
+                self.tasks.epoch[base + v] += 1;
+                self.tasks.indeg[base + v] = indeg;
             }
         }
-        job.remaining = remaining;
-        if was_complete && remaining > 0 {
-            // Revoke the drain: the job is back in flight. (Sound: its
-            // pending EV_DRAIN sits at complete_ms >= the killed end
-            // > t, so the stale event is still in the heap.) Any sink
-            // write-back already on the bus stays ledgered — a wasted
-            // transfer, like the wasted compute.
-            job.drain_epoch += 1;
-            job.complete_ms = 0.0;
+        {
+            let job = self.jobs[s].as_mut().expect("live job");
+            job.remaining = remaining;
+            if was_complete && remaining > 0 {
+                // Revoke the drain: the job is back in flight. (Sound: its
+                // pending EV_DRAIN sits at complete_ms >= the killed end
+                // > t, so the stale event is still in the queue.) Any sink
+                // write-back already on the bus stays ledgered — a wasted
+                // transfer, like the wasted compute.
+                job.drain_epoch += 1;
+                job.complete_ms = 0.0;
+            }
         }
         for (at, v, ep) in pushes {
-            self.heap.push(Reverse((Ord64(at), EV_READY, jid, v, ep)));
+            self.events.schedule((Ord64(at), EV_READY, jid, v, ep));
         }
     }
 
-    /// Drain the event heap, then assemble per-job reports in job order.
-    fn run(mut self, scheduler: &mut dyn Scheduler) -> (Vec<(RunReport, JobTiming)>, RecoveryStats) {
-        while let Some(Reverse((Ord64(t), kind, j, v, epoch))) = self.heap.pop() {
+    /// Drain the event queue, streaming each retired job's `(id, report,
+    /// timing)` into `sink` in drain order (callers needing job order
+    /// sort by id — [`EngineCore::run_collect`] does).
+    fn run(
+        mut self,
+        scheduler: &mut dyn Scheduler,
+        sink: &mut dyn FnMut(JobId, RunReport, JobTiming),
+    ) -> RecoveryStats {
+        self.sched_name = scheduler.name();
+        let total = self.source.total();
+        while let Some((Ord64(t), kind, j, v, epoch)) = self.events.pop() {
+            self.stats.events_processed += 1;
             match kind {
                 EV_DEV_DOWN => self.device_down(scheduler, j, v == 1, t),
                 EV_DEV_UP => self.device_up(scheduler, j, t),
                 EV_ARRIVAL => {
+                    // Lazy feed: schedule the next arrival before
+                    // processing this one. Submit times are
+                    // nondecreasing and job ids dense, so the pop order
+                    // is exactly the all-upfront order.
+                    if j + 1 < total {
+                        let at = self.source.submit_ms(j + 1);
+                        self.events.schedule((Ord64(at), EV_ARRIVAL, j + 1, 0, 0));
+                    }
+                    let input = self.source.take(j);
+                    self.alloc_slot(j, input);
                     if self.inflight < self.queue {
                         self.admit(scheduler, j, t);
                     } else {
-                        let budget = self.jobs[j].budget_ms;
+                        let s = self.slot_of[&j];
+                        let budget = self.jobs[s].as_ref().expect("live job").budget_ms;
                         // Predictive rejection (admit=reject only): if
                         // the pending queue's summed work estimate
                         // already implies the budget cannot be met,
@@ -845,32 +1182,53 @@ impl<'a> EngineCore<'a> {
                         // backstop for jobs this heuristic lets in.
                         let doomed = self.admit_policy == AdmissionPolicy::Reject
                             && budget.is_finite()
-                            && self.pending.iter().map(|&p| self.jobs[p].est_work_ms).sum::<f64>()
+                            && self
+                                .pending
+                                .iter()
+                                .map(|&p| {
+                                    let ps = self.slot_of[&p];
+                                    self.jobs[ps]
+                                        .as_ref()
+                                        .expect("pending job is live")
+                                        .est_work_ms
+                                })
+                                .sum::<f64>()
                                 > budget;
                         if doomed {
-                            let job = &mut self.jobs[j];
-                            job.rejected = true;
-                            job.remaining = 0;
-                            job.admit_ms = t;
-                            job.complete_ms = t;
+                            {
+                                let job = self.jobs[s].as_mut().expect("live job");
+                                job.rejected = true;
+                                job.remaining = 0;
+                                job.admit_ms = t;
+                                job.complete_ms = t;
+                            }
                             self.completed += 1;
+                            self.retire(j, sink);
                         } else {
                             self.pending.push(j);
                             // Backpressure: schedule the wait-budget
                             // expiry. The event is a no-op if the job
                             // admits first.
                             if budget.is_finite() {
-                                self.heap.push(Reverse((Ord64(t + budget), EV_REJECT, j, 0, 0)));
+                                self.events.schedule((Ord64(t + budget), EV_REJECT, j, 0, 0));
                             }
                         }
                     }
+                    self.note_mem();
                 }
                 EV_DRAIN => {
                     // A stale epoch means a failure revoked this
-                    // completion; the job re-drains later.
-                    if epoch == self.jobs[j].drain_epoch {
+                    // completion (the job re-drains later); a missing
+                    // slot means the job already retired.
+                    let live = self
+                        .slot_of
+                        .get(&j)
+                        .map(|&s| self.jobs[s].as_ref().expect("live job").drain_epoch == epoch)
+                        .unwrap_or(false);
+                    if live {
                         self.inflight -= 1;
                         self.completed += 1;
+                        self.retire(j, sink);
                         if let Some(next) = self.pop_pending() {
                             self.admit(scheduler, next, t);
                         }
@@ -881,68 +1239,56 @@ impl<'a> EngineCore<'a> {
                     // ever admitting past the budget.
                     if let Some(pos) = self.pending.iter().position(|&p| p == j) {
                         self.pending.remove(pos);
-                        let job = &mut self.jobs[j];
-                        job.rejected = true;
-                        job.remaining = 0;
-                        job.admit_ms = t;
-                        job.complete_ms = t;
+                        let s = self.slot_of[&j];
+                        {
+                            let job = self.jobs[s].as_mut().expect("live job");
+                            job.rejected = true;
+                            job.remaining = 0;
+                            job.admit_ms = t;
+                            job.complete_ms = t;
+                        }
                         self.completed += 1;
+                        self.retire(j, sink);
                     }
                 }
                 _ => {
-                    if epoch == self.jobs[j].task_epoch[v] {
+                    let live = self.slot_of.get(&j).map(|&s| {
+                        let job = self.jobs[s].as_ref().expect("live job");
+                        job.base != usize::MAX && self.tasks.epoch[job.base + v] == epoch
+                    });
+                    if live == Some(true) {
                         self.dispatch(scheduler, j, v, t);
                     }
                 }
             }
             // A fault stream's device events regenerate forever; stop
             // once every job has drained or been rejected.
-            if self.fault.is_some() && self.completed == self.jobs.len() {
+            if self.fault.is_some() && self.completed == total {
                 break;
             }
         }
         scheduler.on_drain();
-        for (j, job) in self.jobs.iter().enumerate() {
-            assert!(
-                job.rejected || job.remaining == 0,
-                "job {j}: cyclic graph or unreachable tasks ({} left)",
-                job.remaining
-            );
-        }
-        let stats = self.stats;
-        let reports = self
-            .jobs
-            .into_iter()
-            .map(|job| {
-                (
-                    RunReport {
-                        scheduler: scheduler.name(),
-                        makespan_ms: if job.rejected {
-                            0.0
-                        } else {
-                            job.complete_ms - job.submit_ms
-                        },
-                        ledger: job.ledger,
-                        assignments: job.assignments,
-                        device_busy_ms: job.device_busy,
-                        tasks_per_device: job.tasks_per_device,
-                        decision_ns: job.decision_ns,
-                        plan_ns: job.plan_ns,
-                        trace: job.trace,
-                    },
-                    JobTiming {
-                        submit_ms: job.submit_ms,
-                        admit_ms: job.admit_ms,
-                        complete_ms: job.complete_ms,
-                        class: job.qos.class,
-                        priority: job.qos.priority,
-                        deadline_ms: job.deadline_abs,
-                        rejected: job.rejected,
-                    },
-                )
-            })
-            .collect();
-        (reports, stats)
+        assert!(
+            self.slot_of.is_empty(),
+            "{} job(s) left in flight: cyclic graph or unreachable tasks",
+            self.slot_of.len()
+        );
+        self.stats
+    }
+
+    /// Run to completion, collecting reports in job order (the classic
+    /// materialized API — fine for thousands of jobs, not millions).
+    fn run_collect(
+        self,
+        scheduler: &mut dyn Scheduler,
+    ) -> (Vec<(RunReport, JobTiming)>, RecoveryStats) {
+        let mut out: Vec<(JobId, RunReport, JobTiming)> = Vec::new();
+        let stats = {
+            let mut sink = |j: JobId, r: RunReport, ti: JobTiming| out.push((j, r, ti));
+            self.run(scheduler, &mut sink)
+        };
+        out.sort_by_key(|t| t.0);
+        (out.into_iter().map(|t| (t.1, t.2)).collect(), stats)
     }
 }
 
@@ -958,7 +1304,8 @@ pub(crate) fn run_jobs<'a>(
     queue: usize,
     admit_policy: AdmissionPolicy,
 ) -> (Vec<(RunReport, JobTiming)>, RecoveryStats) {
-    EngineCore::new(inputs, platform, model, config, queue, admit_policy).run(scheduler)
+    let source = Box::new(VecSource { inputs: inputs.into_iter().map(Some).collect() });
+    EngineCore::new(source, platform, model, config, queue, admit_policy).run_collect(scheduler)
 }
 
 /// Simulate `dag` under `scheduler`, planning from scratch. See module
@@ -1087,6 +1434,10 @@ pub fn simulate_open_qos(
                 stats.wasted_work_ms += job_stats.wasted_work_ms;
                 stats.executed_work_ms += job_stats.executed_work_ms;
                 stats.recovery_replans += job_stats.recovery_replans;
+                stats.events_processed += job_stats.events_processed;
+                stats.max_inflight = stats.max_inflight.max(job_stats.max_inflight);
+                stats.mem_high_water_bytes =
+                    stats.mem_high_water_bytes.max(job_stats.mem_high_water_bytes);
                 // Tag and shift the trace onto the session clock so the
                 // merged timeline agrees with the job timings.
                 for ev in &mut report.trace {
@@ -1148,6 +1499,8 @@ pub fn simulate_open_qos(
     session.wasted_work_ms = stats.wasted_work_ms;
     session.executed_work_ms = stats.executed_work_ms;
     session.recovery_replans = stats.recovery_replans;
+    session.events_processed = stats.events_processed;
+    session.mem_high_water_bytes = stats.mem_high_water_bytes;
     // Useful work = the busy time that survived to the drain; with a
     // fault stream `executed == useful + wasted` balances exactly.
     session.useful_work_ms =
@@ -1167,6 +1520,66 @@ pub fn simulate_stream(
     cache: &mut PlanCache,
 ) -> SessionReport {
     simulate_open(dags, scheduler, platform, model, config, &StreamConfig::closed(), cache)
+}
+
+/// Million-job capacity entry point: one template `dag` (and one shared
+/// plan, built once) replayed `jobs` times over `stream`'s timed arrival
+/// process, aggregated *streamingly* into a [`SessionReport`] whose
+/// tally holds running sums and quantile sketches instead of per-job
+/// vectors — so both engine and report memory stay O(in-flight jobs).
+/// Job 0 carries the plan-build cost; every later job is a cache hit by
+/// construction. Panics on `arrival=closed` (a capacity session needs a
+/// timed arrival process).
+pub fn simulate_capacity(
+    dag: &Dag,
+    jobs: usize,
+    scheduler: &mut dyn Scheduler,
+    platform: &Platform,
+    model: &dyn PerfModel,
+    config: &SimConfig,
+    stream: &StreamConfig,
+) -> SessionReport {
+    let times = stream
+        .arrival
+        .submit_times_ms(jobs)
+        .expect("capacity sessions need a timed arrival process (fixed/poisson/bursty)");
+    let t0 = Instant::now();
+    let plan = Arc::new(scheduler.build_plan(dag, platform, model));
+    let build_ns = t0.elapsed().as_nanos() as u64;
+    let qos = JobQos::default();
+    let source = Box::new(TemplateSource {
+        dag,
+        plan,
+        times,
+        qos,
+        est_work_ms: est_total_work_ms(dag, platform, model),
+        budget_ms: stream.effective_budget_ms(&qos),
+        build_ns,
+    });
+    let mut session = SessionReport::streaming(scheduler.name());
+    let stats = {
+        let mut sink = |id: JobId, report: RunReport, timing: JobTiming| {
+            session.push_streamed(report, id != 0, timing);
+        };
+        EngineCore::new(source, platform, model, config, stream.queue, stream.admit)
+            .run(scheduler, &mut sink)
+    };
+    session.failures_injected = stats.failures_injected;
+    session.tasks_reexecuted = stats.tasks_reexecuted;
+    session.wasted_work_ms = stats.wasted_work_ms;
+    session.executed_work_ms = stats.executed_work_ms;
+    session.recovery_replans = stats.recovery_replans;
+    session.events_processed = stats.events_processed;
+    session.mem_high_water_bytes = stats.mem_high_water_bytes;
+    if let Some(tally) = session.tally.as_mut() {
+        tally.max_concurrent = stats.max_inflight as usize;
+    }
+    session.useful_work_ms = session
+        .tally
+        .as_ref()
+        .map(|t| t.device_busy_ms.iter().sum())
+        .unwrap_or(0.0);
+    session
 }
 
 #[cfg(test)]

@@ -1,0 +1,431 @@
+//! The event-queue seam of the open-system engine.
+//!
+//! The engine orders every event by the full tuple
+//! `(time, kind, job, task, epoch)` — that total order is what makes
+//! merged traces reproducible — so the queue behind it is swappable as
+//! long as pops come out in exactly that order. [`EventQueue`] is the
+//! minimal seam (desque-style: `schedule`, `pop`, a length), with two
+//! implementations:
+//!
+//! * [`HeapQueue`] — the original `BinaryHeap`, kept as the reference
+//!   implementation. O(log n) per op, no assumptions about time.
+//! * [`LadderQueue`] — a ladder/calendar queue: an unsorted *top* band
+//!   for far-future events, a stack of *rungs* (each a fixed array of
+//!   [`LADDER_BUCKETS`] buckets spanning one parent bucket), and a
+//!   sorted *bottom* band that pops O(1) from its end. Buckets split
+//!   recursively until a bucket holds ≤ [`LADDER_SPILL`] events (or the
+//!   rung stack hits [`LADDER_MAX_RUNGS`], or all times tie), at which
+//!   point it is sorted once into the bottom. Amortized O(1) per event
+//!   for the arrival patterns a discrete-event simulation produces.
+//!   Requires — and enforces — the engine's monotonic clock: scheduling
+//!   an event earlier than the last pop panics.
+//!
+//! Ties (equal times, distinct kinds/jobs/tasks) are broken by the full
+//! tuple comparison inside each sorted bottom batch, so the two queues
+//! produce *identical* pop sequences — pinned by the randomized
+//! equivalence tests below and by the scenario-level cross-checks in
+//! `tests/engine_capacity.rs`.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Totally ordered f64 for event times (times are finite by
+/// construction).
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd)]
+pub struct Ord64(pub f64);
+impl Eq for Ord64 {}
+#[allow(clippy::derive_ord_xor_partial_ord)]
+impl Ord for Ord64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.partial_cmp(other).unwrap()
+    }
+}
+
+/// One engine event: `(time, kind, job, task, epoch)`, compared
+/// lexicographically — the engine's reproducibility contract.
+pub type Event = (Ord64, u8, usize, usize, u64);
+
+/// The queue seam: schedule events, pop them in full-tuple order.
+pub trait EventQueue {
+    /// Insert an event. Implementations may require `ev.0` to be no
+    /// earlier than the last popped time (the engine's clock is
+    /// monotonic) and panic otherwise.
+    fn schedule(&mut self, ev: Event);
+    /// Remove and return the least event, or `None` when empty.
+    fn pop(&mut self) -> Option<Event>;
+    /// Events currently queued.
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Which [`EventQueue`] implementation an engine run uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EventQueueKind {
+    /// `BinaryHeap` reference implementation.
+    Heap,
+    /// Ladder queue (the default: identical pop order, O(1) amortized).
+    #[default]
+    Ladder,
+}
+
+impl EventQueueKind {
+    /// Construct an empty queue of this kind.
+    pub fn build(self) -> Box<dyn EventQueue> {
+        match self {
+            EventQueueKind::Heap => Box::new(HeapQueue::new()),
+            EventQueueKind::Ladder => Box::new(LadderQueue::new()),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EventQueueKind::Heap => "heap",
+            EventQueueKind::Ladder => "ladder",
+        }
+    }
+}
+
+/// The `BinaryHeap` reference implementation.
+pub struct HeapQueue {
+    heap: BinaryHeap<Reverse<Event>>,
+}
+
+impl HeapQueue {
+    pub fn new() -> HeapQueue {
+        HeapQueue { heap: BinaryHeap::new() }
+    }
+}
+
+impl Default for HeapQueue {
+    fn default() -> Self {
+        HeapQueue::new()
+    }
+}
+
+impl EventQueue for HeapQueue {
+    fn schedule(&mut self, ev: Event) {
+        self.heap.push(Reverse(ev));
+    }
+    fn pop(&mut self) -> Option<Event> {
+        self.heap.pop().map(|Reverse(ev)| ev)
+    }
+    fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+/// Buckets per rung.
+pub const LADDER_BUCKETS: usize = 64;
+/// A bucket with at most this many events is sorted straight into the
+/// bottom band instead of spawning a child rung.
+pub const LADDER_SPILL: usize = 64;
+/// Rung-stack depth cap; a pathological all-ties bucket spills instead
+/// of recursing forever.
+pub const LADDER_MAX_RUNGS: usize = 8;
+
+/// One rung: `LADDER_BUCKETS` buckets of width `width` starting at
+/// `start`; buckets before `cur` are already drained (or delegated to a
+/// child rung).
+struct Rung {
+    start: f64,
+    width: f64,
+    cur: usize,
+    buckets: Vec<Vec<Event>>,
+}
+
+impl Rung {
+    fn bstart(&self, i: usize) -> f64 {
+        self.start + i as f64 * self.width
+    }
+
+    /// Bucket index of time `t`: float division, then a correction walk
+    /// so the canonical bucket boundaries decide (float division may be
+    /// off by one at a boundary).
+    fn bucket_index(&self, t: f64) -> usize {
+        let n = self.buckets.len();
+        // `as usize` saturates: negative → 0, huge → usize::MAX.
+        let mut idx =
+            if self.width > 0.0 { ((t - self.start) / self.width) as usize } else { 0 };
+        idx = idx.min(n - 1);
+        while idx + 1 < n && self.bstart(idx + 1) <= t {
+            idx += 1;
+        }
+        while idx > 0 && self.bstart(idx) > t {
+            idx -= 1;
+        }
+        idx
+    }
+}
+
+fn empty_buckets() -> Vec<Vec<Event>> {
+    (0..LADDER_BUCKETS).map(|_| Vec::new()).collect()
+}
+
+/// Sort a batch descending so pops come off the end in ascending
+/// full-tuple order.
+fn sort_descending(events: &mut [Event]) {
+    events.sort_unstable_by(|a, b| b.cmp(a));
+}
+
+/// The ladder queue. See the module docs for the band structure.
+pub struct LadderQueue {
+    /// Unsorted far-future band: every event time `> top_start`.
+    top: Vec<Event>,
+    top_start: f64,
+    /// Rung stack, outermost first; each child spans exactly its
+    /// parent's current bucket.
+    rungs: Vec<Rung>,
+    /// Sorted descending; pop from the end.
+    bottom: Vec<Event>,
+    last_time: f64,
+    size: usize,
+}
+
+impl LadderQueue {
+    pub fn new() -> LadderQueue {
+        LadderQueue {
+            top: Vec::new(),
+            top_start: f64::NEG_INFINITY,
+            rungs: Vec::new(),
+            bottom: Vec::new(),
+            last_time: f64::NEG_INFINITY,
+            size: 0,
+        }
+    }
+
+    /// Split one parent bucket's events into a child rung, or — when the
+    /// batch is small (≤ [`LADDER_SPILL`]), the stack is at
+    /// [`LADDER_MAX_RUNGS`], or all times tie — sort them into the
+    /// (empty) bottom band and advance the parent past the bucket.
+    fn spawn_or_spill(&mut self, mut events: Vec<Event>) {
+        let parent = self.rungs.last().expect("spawn_or_spill requires a rung");
+        let start = parent.bstart(parent.cur);
+        let width = parent.width / LADDER_BUCKETS as f64;
+        let tmin = events.iter().map(|e| e.0 .0).fold(f64::INFINITY, f64::min);
+        let tmax = events.iter().map(|e| e.0 .0).fold(f64::NEG_INFINITY, f64::max);
+        if events.len() <= LADDER_SPILL
+            || self.rungs.len() >= LADDER_MAX_RUNGS
+            || tmin == tmax
+            || width <= 0.0
+        {
+            sort_descending(&mut events);
+            debug_assert!(self.bottom.is_empty());
+            self.bottom = events;
+            self.rungs.last_mut().expect("checked above").cur += 1;
+            return;
+        }
+        let mut child = Rung { start, width, cur: 0, buckets: empty_buckets() };
+        for ev in events {
+            let i = child.bucket_index(ev.0 .0);
+            child.buckets[i].push(ev);
+        }
+        // The parent's `cur` is NOT advanced: the child rung *is* that
+        // bucket; the parent advances when the child rung empties.
+        self.rungs.push(child);
+    }
+}
+
+impl Default for LadderQueue {
+    fn default() -> Self {
+        LadderQueue::new()
+    }
+}
+
+impl EventQueue for LadderQueue {
+    fn schedule(&mut self, ev: Event) {
+        let t = ev.0 .0;
+        assert!(
+            t >= self.last_time,
+            "event scheduled in the past: {t} < last popped {}",
+            self.last_time
+        );
+        self.size += 1;
+        if t > self.top_start {
+            self.top.push(ev);
+            return;
+        }
+        let innermost = self.rungs.len().wrapping_sub(1);
+        for ri in 0..self.rungs.len() {
+            let idx = self.rungs[ri].bucket_index(t);
+            let rung = &mut self.rungs[ri];
+            if idx < rung.cur {
+                continue;
+            }
+            if idx == rung.cur && ri != innermost {
+                continue; // delegated to the child rung
+            }
+            rung.buckets[idx].push(ev);
+            return;
+        }
+        // Below every active rung region: merge into the sorted bottom.
+        let mut lo = 0usize;
+        let mut hi = self.bottom.len();
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if self.bottom[mid] > ev {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        self.bottom.insert(lo, ev);
+    }
+
+    fn pop(&mut self) -> Option<Event> {
+        if self.size == 0 {
+            return None;
+        }
+        while self.bottom.is_empty() {
+            if !self.rungs.is_empty() {
+                let last = self.rungs.len() - 1;
+                {
+                    let rung = &mut self.rungs[last];
+                    while rung.cur < LADDER_BUCKETS && rung.buckets[rung.cur].is_empty() {
+                        rung.cur += 1;
+                    }
+                }
+                if self.rungs[last].cur == LADDER_BUCKETS {
+                    self.rungs.pop();
+                    if let Some(parent) = self.rungs.last_mut() {
+                        parent.cur += 1;
+                    }
+                    continue;
+                }
+                let cur = self.rungs[last].cur;
+                let events = std::mem::take(&mut self.rungs[last].buckets[cur]);
+                self.spawn_or_spill(events);
+                continue;
+            }
+            // No rungs left: pull the top band down into a fresh rung
+            // (or straight into the bottom when it is small). `size > 0`
+            // and empty bottom/rungs guarantee `top` is non-empty.
+            let tmin = self.top.iter().map(|e| e.0 .0).fold(f64::INFINITY, f64::min);
+            let tmax = self.top.iter().map(|e| e.0 .0).fold(f64::NEG_INFINITY, f64::max);
+            let mut events = std::mem::take(&mut self.top);
+            // Strict `>` routing into `top` keeps same-time arrivals at
+            // `top_start` flowing into the active structure below it.
+            self.top_start = tmax;
+            if events.len() <= LADDER_SPILL || tmin == tmax {
+                sort_descending(&mut events);
+                self.bottom = events;
+            } else {
+                let width = (tmax - tmin) / LADDER_BUCKETS as f64;
+                let mut rung = Rung { start: tmin, width, cur: 0, buckets: empty_buckets() };
+                for ev in events {
+                    let i = rung.bucket_index(ev.0 .0);
+                    rung.buckets[i].push(ev);
+                }
+                self.rungs.push(rung);
+            }
+        }
+        let ev = self.bottom.pop().expect("bottom non-empty after refill");
+        self.last_time = ev.0 .0;
+        self.size -= 1;
+        Some(ev)
+    }
+
+    fn len(&self) -> usize {
+        self.size
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn ev(t: f64, uid: usize) -> Event {
+        (Ord64(t), (uid % 6) as u8, uid % 97, uid % 13, (uid % 3) as u64)
+    }
+
+    /// Drive both queues through an interleaved schedule/pop workload
+    /// mimicking a discrete-event loop (schedules never precede the pop
+    /// clock), asserting identical pop sequences.
+    #[test]
+    fn ladder_matches_heap_pop_for_pop() {
+        for seed in 0..12u64 {
+            let mut rng = Pcg32::seeded(1000 + seed);
+            let mut heap = HeapQueue::new();
+            let mut ladder = LadderQueue::new();
+            let mut uid = 0usize;
+            let mut now = 0.0f64;
+            let sched = |h: &mut HeapQueue, l: &mut LadderQueue, e: Event| {
+                h.schedule(e);
+                l.schedule(e);
+            };
+            for _ in 0..(1 + rng.gen_range(50)) {
+                let e = ev(rng.gen_f64() * 10.0, uid);
+                uid += 1;
+                sched(&mut heap, &mut ladder, e);
+            }
+            for _ in 0..3000 {
+                if heap.len() > 0 && rng.gen_range(3) == 0 {
+                    let a = heap.pop().expect("non-empty");
+                    let b = ladder.pop().expect("ladder must match heap occupancy");
+                    assert_eq!(a, b, "seed {seed}: pop mismatch");
+                    now = a.0 .0;
+                } else {
+                    for _ in 0..(1 + rng.gen_range(7)) {
+                        let r = rng.gen_f64();
+                        let t = if r < 0.15 {
+                            now // exact tie with the pop clock
+                        } else if r < 0.3 {
+                            now + [0.5, 1.0, 2.0, 4.0][rng.gen_range(4) as usize]
+                        } else if r < 0.5 {
+                            now - (1.0 - rng.gen_f64()).ln() * 10.0 // heavy spread
+                        } else {
+                            now + rng.gen_f64() * 5.0
+                        };
+                        let e = ev(t, uid);
+                        uid += 1;
+                        sched(&mut heap, &mut ladder, e);
+                    }
+                }
+            }
+            while let Some(a) = heap.pop() {
+                assert_eq!(Some(a), ladder.pop(), "seed {seed}: drain mismatch");
+            }
+            assert_eq!(ladder.pop(), None, "ladder must drain with the heap");
+            assert_eq!(ladder.len(), 0);
+        }
+    }
+
+    #[test]
+    fn equal_time_ties_pop_in_tuple_order() {
+        let mut ladder = LadderQueue::new();
+        let mut heap = HeapQueue::new();
+        // Many events at the same instant with distinct kinds/jobs/tasks.
+        for uid in 0..200 {
+            let e = (Ord64(5.0), (uid % 6) as u8, 199 - uid, uid % 7, 0u64);
+            ladder.schedule(e);
+            heap.schedule(e);
+        }
+        for _ in 0..200 {
+            assert_eq!(ladder.pop(), heap.pop());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "event scheduled in the past")]
+    fn ladder_rejects_back_in_time_schedules() {
+        let mut q = LadderQueue::new();
+        q.schedule((Ord64(5.0), 0, 0, 0, 0));
+        q.schedule((Ord64(1.0), 0, 0, 0, 0));
+        assert_eq!(q.pop().map(|e| e.0 .0), Some(1.0));
+        q.schedule((Ord64(0.5), 0, 0, 0, 0)); // before the popped clock
+    }
+
+    #[test]
+    fn kind_default_is_ladder_and_builds() {
+        assert_eq!(EventQueueKind::default(), EventQueueKind::Ladder);
+        let mut q = EventQueueKind::default().build();
+        assert!(q.is_empty());
+        q.schedule((Ord64(1.0), 3, 0, 0, 0));
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop(), Some((Ord64(1.0), 3, 0, 0, 0)));
+        assert_eq!(EventQueueKind::Heap.as_str(), "heap");
+        assert_eq!(EventQueueKind::Ladder.as_str(), "ladder");
+    }
+}

@@ -36,16 +36,28 @@
 //!   re-dispatched, coherence rolls back to the host checkpoint, and
 //!   [`SessionReport`] grows recovery metrics (wasted work, goodput).
 //!   With no spec the engine is bit-for-bit the failure-free one.
+//!
+//! Capacity: the engine stores jobs and tasks in recycled slab/arena
+//! slots and drives them from a ladder event queue behind the
+//! [`EventQueue`] seam ([`equeue`]), and
+//! [`engine::simulate_capacity`] streams a million-job session into a
+//! sketch-backed [`SessionReport`] — memory stays O(in-flight jobs)
+//! end to end. See the [`engine`] module docs.
 
 pub mod engine;
+pub mod equeue;
 pub mod report;
 pub mod stream;
 
 pub use engine::{
-    est_total_work_ms, simulate, simulate_open, simulate_open_qos, simulate_stream,
-    simulate_with_plan, SimConfig,
+    est_total_work_ms, simulate, simulate_capacity, simulate_open, simulate_open_qos,
+    simulate_stream, simulate_with_plan, SimConfig,
 };
-pub use report::{ClassReport, JobTiming, RunReport, SessionReport, TraceEvent, SCALAR_METRICS};
+pub use equeue::{EventQueue, EventQueueKind};
+pub use report::{
+    ClassReport, JobTiming, QuantileAcc, RunReport, SessionReport, StreamingTally, TraceEvent,
+    EXACT_SOJOURN_LIMIT, SCALAR_METRICS, SKETCH_EPS,
+};
 pub use stream::{
     AdmissionPolicy, ArrivalProcess, FaultSpec, JobQos, ScriptedFault, StreamConfig,
     DEFAULT_QUEUE,

@@ -9,11 +9,120 @@
 //! (submit → completion), queueing delay (submit → admission),
 //! nearest-rank latency percentiles (p50/p95/p99), throughput (jobs/s
 //! over the session span) and session-level device utilization.
+//!
+//! Two aggregation modes share the metric API:
+//! * **materialized** ([`SessionReport::new`]) — per-job `RunReport`s
+//!   and `JobTiming`s are kept, metrics derive from the vectors; right
+//!   for thousands of jobs and anything that needs traces or per-job
+//!   drill-down;
+//! * **streaming** ([`SessionReport::streaming`]) — each job folds into
+//!   a [`StreamingTally`] of running sums plus a [`QuantileAcc`] per
+//!   sojourn distribution and is then dropped, so a million-job session
+//!   costs O(1) report memory. Quantiles stay *exact* (bit-identical to
+//!   the sorted-vector path) below [`EXACT_SOJOURN_LIMIT`] samples and
+//!   switch to a mergeable CKMS sketch (ε = [`SKETCH_EPS`]) beyond it.
 
 use crate::data::TransferLedger;
 use crate::platform::DeviceId;
 use crate::sched::JobId;
-use crate::util::stats::percentile_nearest_rank;
+use crate::util::stats::{percentile_nearest_rank, CkmsSketch};
+
+/// Streaming sessions keep sojourns exact (sorted-vector nearest rank)
+/// up to this many completed jobs, then spill into the CKMS sketch —
+/// so every pre-existing golden (all far below this) is bit-identical.
+pub const EXACT_SOJOURN_LIMIT: usize = 16_384;
+
+/// Rank error of the streaming quantile sketch once a distribution
+/// spills past [`EXACT_SOJOURN_LIMIT`]: quantile answers are within
+/// ±0.1% of the true rank.
+pub const SKETCH_EPS: f64 = 0.001;
+
+/// Sojourn quantile accumulator with an exact small-sample path and a
+/// CKMS sketch spill for capacity sessions (see the module docs).
+#[derive(Debug, Clone, Default)]
+pub struct QuantileAcc {
+    exact: Vec<f64>,
+    sketch: Option<CkmsSketch>,
+}
+
+impl QuantileAcc {
+    /// Fold one observation.
+    pub fn push(&mut self, x: f64) {
+        if let Some(sk) = self.sketch.as_mut() {
+            sk.insert(x);
+            return;
+        }
+        self.exact.push(x);
+        if self.exact.len() > EXACT_SOJOURN_LIMIT {
+            let mut sk = CkmsSketch::new(SKETCH_EPS);
+            for &v in &self.exact {
+                sk.insert(v);
+            }
+            self.exact = Vec::new();
+            self.sketch = Some(sk);
+        }
+    }
+
+    /// Observations folded so far.
+    pub fn count(&self) -> u64 {
+        self.sketch.as_ref().map(|s| s.count()).unwrap_or(self.exact.len() as u64)
+    }
+
+    /// True once the accumulator spilled past [`EXACT_SOJOURN_LIMIT`]
+    /// (answers are ε-approximate from then on).
+    pub fn is_sketched(&self) -> bool {
+        self.sketch.is_some()
+    }
+
+    /// Nearest-rank percentile for `p` in (0, 100]: exact below the
+    /// spill threshold, ε-approximate beyond it; 0.0 when empty.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if let Some(sk) = self.sketch.as_ref() {
+            return sk.query(p);
+        }
+        if self.exact.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.exact.clone();
+        sorted.sort_by(f64::total_cmp);
+        percentile_nearest_rank(&sorted, p)
+    }
+}
+
+/// Streaming per-class accumulator (the [`ClassReport`] inputs).
+#[derive(Debug, Clone, Default)]
+pub struct ClassTally {
+    pub jobs: usize,
+    pub rejected: usize,
+    pub sum_sojourn_ms: f64,
+    pub sum_delay_ms: f64,
+    pub with_deadline: usize,
+    pub deadline_hits: usize,
+    pub sojourns: QuantileAcc,
+}
+
+/// Streaming session accumulator: everything the scalar metrics need,
+/// in O(1) memory per job (see [`SessionReport::streaming`]).
+#[derive(Debug, Clone, Default)]
+pub struct StreamingTally {
+    /// Jobs that ran to completion.
+    pub completed: usize,
+    /// Jobs rejected by wait-budget backpressure.
+    pub rejected: usize,
+    pub sum_sojourn_ms: f64,
+    pub sum_delay_ms: f64,
+    pub with_deadline: usize,
+    pub deadline_hits: usize,
+    pub sojourns: QuantileAcc,
+    /// Total busy milliseconds per device across jobs.
+    pub device_busy_ms: Vec<f64>,
+    /// Per-class accumulators, indexed by [`JobTiming::class`] (grown
+    /// on demand).
+    pub classes: Vec<ClassTally>,
+    /// Peak in-flight jobs, reported by the engine (the timing-derived
+    /// sweep needs every interval, which streaming drops).
+    pub max_concurrent: usize,
+}
 
 /// One task execution in the timeline.
 #[derive(Debug, Clone, PartialEq)]
@@ -220,6 +329,16 @@ pub struct SessionReport {
     /// [`crate::sched::Scheduler::on_device_down`] /
     /// [`crate::sched::Scheduler::on_device_up`] hooks.
     pub recovery_replans: u64,
+
+    // --- capacity metrics -------------------------------------------
+    /// Streaming accumulator ([`SessionReport::streaming`]); `None` for
+    /// materialized sessions. Boxed: the tally is bigger than the rest
+    /// of the report and absent on the common path.
+    pub tally: Option<Box<StreamingTally>>,
+    /// Events the engine popped over the run (0 when unreported).
+    pub events_processed: u64,
+    /// Engine working-set high-water mark in bytes (0 when unreported).
+    pub mem_high_water_bytes: u64,
 }
 
 /// Names of the per-session scalar metrics, in the order
@@ -243,6 +362,73 @@ pub const SCALAR_METRICS: [&str; 11] = [
 impl SessionReport {
     pub fn new(scheduler: &str) -> SessionReport {
         SessionReport { scheduler: scheduler.to_string(), ..Default::default() }
+    }
+
+    /// A *streaming* session: jobs fold into the [`StreamingTally`] via
+    /// [`SessionReport::push_streamed`] and are dropped, so report
+    /// memory is O(1) per job. Per-job accessors (`jobs`, `timings`,
+    /// `merged_trace`, …) stay empty; every scalar metric works.
+    pub fn streaming(scheduler: &str) -> SessionReport {
+        SessionReport {
+            scheduler: scheduler.to_string(),
+            tally: Some(Box::default()),
+            ..Default::default()
+        }
+    }
+
+    /// Fold one job into a streaming session ([`SessionReport::streaming`])
+    /// and drop it: running sums, the quantile accumulators and the
+    /// per-class tallies absorb everything the scalar metrics need.
+    pub fn push_streamed(&mut self, job: RunReport, cache_hit: bool, timing: JobTiming) {
+        self.makespan_ms += job.makespan_ms;
+        self.span_ms = self.span_ms.max(timing.complete_ms);
+        self.ledger.merge(&job.ledger);
+        self.plan_ns += job.plan_ns;
+        self.decision_ns += job.decision_ns;
+        if cache_hit {
+            self.cache_hits += 1;
+        } else {
+            self.cache_misses += 1;
+        }
+        let tally = self.tally.as_mut().expect("push_streamed needs a streaming session");
+        if timing.deadline_ms.is_finite() {
+            tally.with_deadline += 1;
+            if timing.deadline_hit() {
+                tally.deadline_hits += 1;
+            }
+        }
+        if timing.rejected {
+            tally.rejected += 1;
+        } else {
+            tally.completed += 1;
+            tally.sum_sojourn_ms += timing.sojourn_ms();
+            tally.sum_delay_ms += timing.queueing_delay_ms();
+            tally.sojourns.push(timing.sojourn_ms());
+        }
+        if tally.device_busy_ms.len() < job.device_busy_ms.len() {
+            tally.device_busy_ms.resize(job.device_busy_ms.len(), 0.0);
+        }
+        for (d, &b) in job.device_busy_ms.iter().enumerate() {
+            tally.device_busy_ms[d] += b;
+        }
+        while tally.classes.len() <= timing.class {
+            tally.classes.push(ClassTally::default());
+        }
+        let ct = &mut tally.classes[timing.class];
+        ct.jobs += 1;
+        if timing.deadline_ms.is_finite() {
+            ct.with_deadline += 1;
+            if timing.deadline_hit() {
+                ct.deadline_hits += 1;
+            }
+        }
+        if timing.rejected {
+            ct.rejected += 1;
+        } else {
+            ct.sum_sojourn_ms += timing.sojourn_ms();
+            ct.sum_delay_ms += timing.queueing_delay_ms();
+            ct.sojourns.push(timing.sojourn_ms());
+        }
     }
 
     /// Fold one job into the session with back-to-back timing (the job
@@ -275,7 +461,10 @@ impl SessionReport {
     }
 
     pub fn job_count(&self) -> usize {
-        self.jobs.len()
+        match self.tally.as_deref() {
+            Some(t) => t.completed + t.rejected,
+            None => self.jobs.len(),
+        }
     }
 
     /// Fraction of jobs served by a cached plan.
@@ -290,10 +479,11 @@ impl SessionReport {
 
     /// Mean planning nanoseconds per job — the amortization headline.
     pub fn mean_plan_ns(&self) -> f64 {
-        if self.jobs.is_empty() {
+        let n = self.job_count();
+        if n == 0 {
             0.0
         } else {
-            self.plan_ns as f64 / self.jobs.len() as f64
+            self.plan_ns as f64 / n as f64
         }
     }
 
@@ -317,7 +507,18 @@ impl SessionReport {
 
     /// Jobs rejected by `admit=reject` backpressure.
     pub fn rejected_count(&self) -> usize {
-        self.timings.iter().filter(|t| t.rejected).count()
+        match self.tally.as_deref() {
+            Some(t) => t.rejected,
+            None => self.timings.iter().filter(|t| t.rejected).count(),
+        }
+    }
+
+    /// Jobs that ran to completion.
+    fn completed_count(&self) -> usize {
+        match self.tally.as_deref() {
+            Some(t) => t.completed,
+            None => self.completed().count(),
+        }
     }
 
     /// Per-job sojourn times (submit → completion) of completed jobs,
@@ -333,13 +534,18 @@ impl SessionReport {
     }
 
     /// Nearest-rank percentile of the sojourn distribution (`p` in
-    /// (0, 100]); 0.0 for an empty session.
+    /// (0, 100]); 0.0 for an empty session (e.g. every job rejected).
     pub fn sojourn_percentile_ms(&self, p: f64) -> f64 {
+        if let Some(t) = self.tally.as_deref() {
+            return t.sojourns.percentile(p);
+        }
         let mut sorted = self.sojourns_ms();
         if sorted.is_empty() {
             return 0.0;
         }
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: one NaN sojourn degrades the percentile instead of
+        // aborting the whole session report.
+        sorted.sort_by(f64::total_cmp);
         percentile_nearest_rank(&sorted, p)
     }
 
@@ -360,6 +566,9 @@ impl SessionReport {
 
     /// Mean sojourn (ms) of completed jobs; 0.0 for an empty session.
     pub fn mean_sojourn_ms(&self) -> f64 {
+        if let Some(t) = self.tally.as_deref() {
+            return if t.completed == 0 { 0.0 } else { t.sum_sojourn_ms / t.completed as f64 };
+        }
         let s = self.sojourns_ms();
         if s.is_empty() {
             0.0
@@ -371,6 +580,9 @@ impl SessionReport {
     /// Mean queueing delay (ms) of completed jobs; 0.0 for an empty
     /// session.
     pub fn mean_queueing_delay_ms(&self) -> f64 {
+        if let Some(t) = self.tally.as_deref() {
+            return if t.completed == 0 { 0.0 } else { t.sum_delay_ms / t.completed as f64 };
+        }
         let q = self.queueing_delays_ms();
         if q.is_empty() {
             0.0
@@ -385,7 +597,7 @@ impl SessionReport {
         if self.span_ms <= 0.0 {
             0.0
         } else {
-            self.completed().count() as f64 / (self.span_ms / 1000.0)
+            self.completed_count() as f64 / (self.span_ms / 1000.0)
         }
     }
 
@@ -404,6 +616,13 @@ impl SessionReport {
     /// deadline (rejected ones count as misses); 1.0 when no job has a
     /// deadline.
     pub fn deadline_hit_rate(&self) -> f64 {
+        if let Some(t) = self.tally.as_deref() {
+            return if t.with_deadline == 0 {
+                1.0
+            } else {
+                t.deadline_hits as f64 / t.with_deadline as f64
+            };
+        }
         let with: Vec<&JobTiming> =
             self.timings.iter().filter(|t| t.deadline_ms.is_finite()).collect();
         if with.is_empty() {
@@ -413,9 +632,18 @@ impl SessionReport {
     }
 
     /// Session-level utilization per device: total busy time across
-    /// jobs over `span * workers`.
+    /// jobs over `span * workers` (the wall-clock denominator — in an
+    /// open system overlapping jobs make accumulated makespan exceed
+    /// the span, so dividing by it would understate utilization).
     pub fn device_utilization(&self, workers_per_device: &[usize]) -> Vec<f64> {
         let mut busy = vec![0.0f64; workers_per_device.len()];
+        if let Some(t) = self.tally.as_deref() {
+            for (d, &b) in t.device_busy_ms.iter().enumerate() {
+                if d < busy.len() {
+                    busy[d] += b;
+                }
+            }
+        }
         for job in &self.jobs {
             for (d, &b) in job.device_busy_ms.iter().enumerate() {
                 if d < busy.len() {
@@ -438,6 +666,9 @@ impl SessionReport {
     /// Highest number of jobs simultaneously in flight (admitted, not
     /// yet complete) at any instant of the session.
     pub fn max_concurrent_jobs(&self) -> usize {
+        if let Some(t) = self.tally.as_deref() {
+            return t.max_concurrent;
+        }
         let mut events: Vec<(f64, i32)> = Vec::with_capacity(self.timings.len() * 2);
         for t in self.completed() {
             events.push((t.admit_ms, 1));
@@ -445,7 +676,7 @@ impl SessionReport {
         }
         // Close before open at equal times: touching intervals don't
         // count as concurrent.
-        events.sort_by(|a, b| (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap());
+        events.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
         let mut cur = 0i32;
         let mut best = 0i32;
         for (_, delta) in events {
@@ -480,6 +711,13 @@ impl SessionReport {
     /// Number of QoS classes present: enough to cover both the declared
     /// names and the highest class index any job carries.
     pub fn class_count(&self) -> usize {
+        if let Some(t) = self.tally.as_deref() {
+            return t
+                .classes
+                .len()
+                .max(self.class_names.len())
+                .max(usize::from(t.completed + t.rejected > 0));
+        }
         let seen = self.timings.iter().map(|t| t.class + 1).max().unwrap_or(0);
         seen.max(self.class_names.len()).max(usize::from(!self.timings.is_empty()))
     }
@@ -492,6 +730,39 @@ impl SessionReport {
 
     /// The SLO breakdown of one class (`c` may be empty of jobs).
     pub fn class_report(&self, c: usize) -> ClassReport {
+        if let Some(t) = self.tally.as_deref() {
+            let ct = t.classes.get(c).cloned().unwrap_or_default();
+            let completed = ct.jobs - ct.rejected;
+            return ClassReport {
+                class: c,
+                name: self.class_name(c),
+                jobs: ct.jobs,
+                rejected: ct.rejected,
+                p50_sojourn_ms: ct.sojourns.percentile(50.0),
+                p95_sojourn_ms: ct.sojourns.percentile(95.0),
+                p99_sojourn_ms: ct.sojourns.percentile(99.0),
+                mean_sojourn_ms: if completed == 0 {
+                    0.0
+                } else {
+                    ct.sum_sojourn_ms / completed as f64
+                },
+                mean_queueing_delay_ms: if completed == 0 {
+                    0.0
+                } else {
+                    ct.sum_delay_ms / completed as f64
+                },
+                deadline_hit_rate: if ct.with_deadline == 0 {
+                    1.0
+                } else {
+                    ct.deadline_hits as f64 / ct.with_deadline as f64
+                },
+                throughput_jps: if self.span_ms <= 0.0 {
+                    0.0
+                } else {
+                    completed as f64 / (self.span_ms / 1000.0)
+                },
+            };
+        }
         let of_class: Vec<&JobTiming> =
             self.timings.iter().filter(|t| t.class == c).collect();
         let mut sojourns: Vec<f64> = of_class
@@ -499,7 +770,9 @@ impl SessionReport {
             .filter(|t| !t.rejected)
             .map(|t| t.sojourn_ms())
             .collect();
-        sojourns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: NaN-safe (a corrupt sojourn degrades the class
+        // percentiles instead of panicking).
+        sojourns.sort_by(f64::total_cmp);
         let delays: Vec<f64> = of_class
             .iter()
             .filter(|t| !t.rejected)
@@ -560,9 +833,11 @@ impl SessionReport {
         let mut all: Vec<TraceEvent> =
             self.jobs.iter().flat_map(|j| j.trace.iter().cloned()).collect();
         all.sort_by(|a, b| {
-            (a.start_ms, a.end_ms, a.job, a.task)
-                .partial_cmp(&(b.start_ms, b.end_ms, b.job, b.task))
-                .unwrap()
+            a.start_ms
+                .total_cmp(&b.start_ms)
+                .then(a.end_ms.total_cmp(&b.end_ms))
+                .then(a.job.cmp(&b.job))
+                .then(a.task.cmp(&b.task))
         });
         all
     }
@@ -801,6 +1076,145 @@ mod tests {
         s.executed_work_ms = 15.0;
         assert!((s.goodput_jps() - s.throughput_jps() * 10.0 / 15.0).abs() < 1e-12);
         assert!(s.goodput_jps() < s.throughput_jps());
+    }
+
+    #[test]
+    fn streaming_tally_matches_materialized_below_threshold() {
+        // Same job stream folded both ways: every scalar metric must
+        // agree bit-for-bit while the exact path is active.
+        let mut mat = SessionReport::new("test");
+        let mut stm = SessionReport::streaming("test");
+        mat.class_names = vec!["interactive".into(), "batch".into()];
+        stm.class_names = mat.class_names.clone();
+        let mk = |sub: f64, adm: f64, comp: f64, class: usize, ddl: f64, rej: bool| JobTiming {
+            submit_ms: sub,
+            admit_ms: adm,
+            complete_ms: comp,
+            class,
+            deadline_ms: ddl,
+            rejected: rej,
+            ..Default::default()
+        };
+        let timings = [
+            mk(0.0, 0.0, 4.0, 0, 5.0, false),
+            mk(1.0, 1.0, 7.0, 1, f64::INFINITY, false),
+            mk(2.0, 4.0, 12.0, 0, 6.0, false),
+            mk(3.0, 9.0, 9.0, 1, 30.0, true),
+        ];
+        for (i, t) in timings.iter().enumerate() {
+            let ms = if t.rejected { 0.0 } else { t.sojourn_ms() };
+            mat.push_timed(job(ms, 10), i > 0, *t);
+            stm.push_streamed(job(ms, 10), i > 0, *t);
+        }
+        // The engine reports max_concurrent for streaming sessions.
+        stm.tally.as_mut().unwrap().max_concurrent = mat.max_concurrent_jobs();
+        for ((na, va), (nb, vb)) in mat.scalar_metrics().iter().zip(stm.scalar_metrics()) {
+            assert_eq!(*na, nb);
+            assert_eq!(*va, vb, "metric {na} diverged between tally and vectors");
+        }
+        assert_eq!(mat.job_count(), stm.job_count());
+        assert_eq!(mat.rejected_count(), stm.rejected_count());
+        assert_eq!(mat.mean_plan_ns(), stm.mean_plan_ns());
+        assert_eq!(mat.class_count(), stm.class_count());
+        for c in 0..mat.class_count() {
+            let (a, b) = (mat.class_report(c), stm.class_report(c));
+            assert_eq!(a, b, "class {c} report diverged");
+        }
+        assert_eq!(
+            mat.device_utilization(&[2]),
+            stm.device_utilization(&[2]),
+            "utilization must use the span denominator in both modes"
+        );
+        assert!(!stm.tally.as_ref().unwrap().sojourns.is_sketched());
+    }
+
+    #[test]
+    fn quantile_acc_spills_to_sketch_within_eps() {
+        let mut acc = QuantileAcc::default();
+        let mut exact: Vec<f64> = Vec::new();
+        // Deterministic non-monotone stream well past the spill point.
+        let n = EXACT_SOJOURN_LIMIT + 4_096;
+        for i in 0..n {
+            let x = ((i * 2_654_435_761) % 1_000_003) as f64;
+            acc.push(x);
+            exact.push(x);
+        }
+        assert!(acc.is_sketched());
+        assert_eq!(acc.count(), n as u64);
+        exact.sort_by(f64::total_cmp);
+        for p in [50.0, 95.0, 99.0] {
+            let est = acc.percentile(p);
+            // Rank of the estimate must be within eps of the target.
+            let lo = exact.partition_point(|&v| v < est);
+            let hi = exact.partition_point(|&v| v <= est);
+            let target = (p / 100.0 * n as f64).ceil();
+            let slack = (SKETCH_EPS * n as f64).max(1.0) + 1.0;
+            assert!(
+                (lo as f64) - slack <= target && target <= (hi as f64) + slack,
+                "p{p}: estimate rank [{lo}, {hi}] vs target {target} (±{slack})"
+            );
+        }
+    }
+
+    #[test]
+    fn all_rejected_session_has_nan_free_metrics() {
+        // Regression: a session where every job was rejected used to
+        // panic computing percentiles of the empty completed set.
+        for streaming in [false, true] {
+            let mut s = if streaming {
+                SessionReport::streaming("test")
+            } else {
+                SessionReport::new("test")
+            };
+            for i in 0..3 {
+                let t = JobTiming {
+                    submit_ms: i as f64,
+                    admit_ms: i as f64 + 5.0,
+                    complete_ms: i as f64 + 5.0,
+                    deadline_ms: 100.0,
+                    rejected: true,
+                    ..Default::default()
+                };
+                if streaming {
+                    s.push_streamed(job(0.0, 0), false, t);
+                } else {
+                    s.push_timed(job(0.0, 0), false, t);
+                }
+            }
+            assert_eq!(s.rejected_count(), 3);
+            assert_eq!(s.p50_sojourn_ms(), 0.0);
+            assert_eq!(s.p95_sojourn_ms(), 0.0);
+            assert_eq!(s.p99_sojourn_ms(), 0.0);
+            assert_eq!(s.mean_sojourn_ms(), 0.0);
+            assert_eq!(s.mean_queueing_delay_ms(), 0.0);
+            assert_eq!(s.deadline_hit_rate(), 0.0, "rejected deadline jobs all miss");
+            let c = s.class_report(0);
+            assert_eq!((c.jobs, c.rejected), (3, 3));
+            assert_eq!(c.p99_sojourn_ms, 0.0);
+            assert_eq!(c.mean_sojourn_ms, 0.0);
+            for (name, v) in s.scalar_metrics() {
+                assert!(v.is_finite(), "{name} must be finite in an all-rejected session");
+            }
+        }
+    }
+
+    #[test]
+    fn nan_sojourn_degrades_instead_of_panicking() {
+        // Regression: partial_cmp().unwrap() sorts aborted on NaN.
+        let mut s = SessionReport::new("test");
+        let t = |comp: f64| JobTiming {
+            submit_ms: 0.0,
+            admit_ms: 0.0,
+            complete_ms: comp,
+            ..Default::default()
+        };
+        s.push_timed(job(4.0, 0), false, t(4.0));
+        s.push_timed(job(f64::NAN, 0), false, t(f64::NAN));
+        s.push_timed(job(8.0, 0), false, t(8.0));
+        // No panic; the finite samples still order correctly.
+        let p50 = s.p50_sojourn_ms();
+        assert!(p50 == 4.0 || p50 == 8.0 || p50.is_nan());
+        let _ = s.class_report(0);
     }
 
     #[test]

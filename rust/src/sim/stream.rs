@@ -528,7 +528,7 @@ impl FaultSpec {
         // Windows on one device must be disjoint and strictly separated,
         // so every down event lands on an Up device.
         let mut by_dev: Vec<&ScriptedFault> = out.scripted.iter().collect();
-        by_dev.sort_by(|a, b| (a.dev, a.at_ms).partial_cmp(&(b.dev, b.at_ms)).unwrap());
+        by_dev.sort_by(|a, b| a.dev.cmp(&b.dev).then(a.at_ms.total_cmp(&b.at_ms)));
         for w in by_dev.windows(2) {
             if w[0].dev == w[1].dev && w[1].at_ms <= w[0].at_ms + w[0].down_ms {
                 bail!(

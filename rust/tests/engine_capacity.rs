@@ -1,0 +1,178 @@
+//! Million-job engine core guard-rails.
+//!
+//! Four contracts, in order of importance:
+//!
+//! 1. **Ladder/heap equivalence** — the ladder event queue (the
+//!    default) and the `BinaryHeap` reference pop events in the same
+//!    total order, so every builtin scenario and the capacity path
+//!    produce bit-identical reports under either queue.
+//! 2. **Capacity/classic equivalence** — below the sketch threshold,
+//!    `simulate_capacity`'s slab/arena + streaming-report path equals a
+//!    `simulate_open` run over the same repeated template job, metric
+//!    by metric.
+//! 3. **Bounded memory** — the slab recycles completed-job slots, so
+//!    the engine's memory high-water mark is a function of the
+//!    in-flight window, not the session length.
+//! 4. **Report-path regressions** — heavily-rejecting sessions report
+//!    finite metrics (no NaN, no panic), and device utilization keeps
+//!    the wall-clock-span denominator.
+
+use hetsched::dag::{workloads, KernelKind};
+use hetsched::perfmodel::CalibratedModel;
+use hetsched::platform::Platform;
+use hetsched::scenario::{load_builtin, run_repetition_with};
+use hetsched::sched::{PlanCache, SchedulerRegistry};
+use hetsched::sim::{
+    simulate_capacity, simulate_open, EventQueueKind, SessionReport, SimConfig, StreamConfig,
+};
+
+/// Metric-by-metric exact equality between two engine runs.
+fn assert_metrics_identical(a: &SessionReport, b: &SessionReport, what: &str) {
+    for ((name, va), (_, vb)) in a.scalar_metrics().iter().zip(b.scalar_metrics().iter()) {
+        assert_eq!(va, vb, "{what}: metric {name} drifted");
+    }
+    assert_eq!(a.ledger.count, b.ledger.count, "{what}: transfer count drifted");
+    assert_eq!(a.job_count(), b.job_count(), "{what}: job count drifted");
+    assert_eq!(a.rejected_count(), b.rejected_count(), "{what}: rejection count drifted");
+}
+
+fn run_capacity(
+    jobs: usize,
+    spec: &str,
+    stream_spec: &str,
+    kind: EventQueueKind,
+) -> SessionReport {
+    let dag = workloads::chain(4, KernelKind::Mm, 256);
+    let platform = Platform::paper();
+    let model = CalibratedModel::paper();
+    let stream = StreamConfig::from_spec(stream_spec).unwrap();
+    let mut scheduler = SchedulerRegistry::builtin().create(spec).unwrap();
+    let config = SimConfig { event_queue: kind, ..Default::default() };
+    simulate_capacity(&dag, jobs, scheduler.as_mut(), &platform, &model, &config, &stream)
+}
+
+// --- 1. ladder/heap equivalence -------------------------------------
+
+/// Every builtin scenario cell, repetition 0, under both queues: the
+/// scenario layer covers QoS classes, admission sweeps and scripted
+/// device faults, so equality here exercises every event kind the
+/// engine schedules (arrivals, task readiness, rejects, device
+/// down/up, drains).
+#[test]
+fn ladder_matches_heap_on_every_builtin_scenario() {
+    for name in ["open-poisson", "open-qos", "open-fault"] {
+        let spec = load_builtin(name).unwrap();
+        for cell in spec.cells().unwrap() {
+            let heap = run_repetition_with(&spec, &cell, 0, EventQueueKind::Heap).unwrap();
+            let ladder = run_repetition_with(&spec, &cell, 0, EventQueueKind::Ladder).unwrap();
+            assert_metrics_identical(&heap, &ladder, &format!("{name}/{}", cell.label));
+        }
+    }
+}
+
+/// The capacity path at a session long enough to make the ladder spawn
+/// and retire many rungs: identical pop order means identical
+/// simulated metrics *and* identical event counts.
+#[test]
+fn ladder_matches_heap_on_the_capacity_path() {
+    let stream = "stream:arrival=poisson,rate=300,queue=8";
+    let heap = run_capacity(3000, "dmda", stream, EventQueueKind::Heap);
+    let ladder = run_capacity(3000, "dmda", stream, EventQueueKind::Ladder);
+    assert_metrics_identical(&heap, &ladder, "capacity dmda");
+    assert_eq!(heap.events_processed, ladder.events_processed, "event count drifted");
+}
+
+// --- 2. capacity/classic equivalence --------------------------------
+
+/// Below `EXACT_SOJOURN_LIMIT` the streaming report keeps exact
+/// sojourns, so `simulate_capacity` over N template jobs must equal
+/// `simulate_open` over N clones of the template — same arrivals, same
+/// plan reuse, same floats.
+#[test]
+fn capacity_engine_matches_classic_open_engine_below_threshold() {
+    let dag = workloads::chain(4, KernelKind::Mm, 256);
+    let platform = Platform::paper();
+    let model = CalibratedModel::paper();
+    let stream = StreamConfig::from_spec("stream:arrival=fixed,rate=400,queue=8").unwrap();
+    let registry = SchedulerRegistry::builtin();
+    for spec in ["dmda", "gp"] {
+        let mut s1 = registry.create(spec).unwrap();
+        let config = SimConfig::default();
+        let capacity =
+            simulate_capacity(&dag, 40, s1.as_mut(), &platform, &model, &config, &stream);
+
+        let dags: Vec<_> = (0..40).map(|_| dag.clone()).collect();
+        let mut s2 = registry.create(spec).unwrap();
+        let mut cache = PlanCache::new();
+        let classic =
+            simulate_open(&dags, s2.as_mut(), &platform, &model, &config, &stream, &mut cache);
+
+        assert_metrics_identical(&capacity, &classic, &format!("capacity-vs-classic {spec}"));
+        let workers: Vec<usize> = platform.devices.iter().map(|d| d.workers).collect();
+        assert_eq!(
+            capacity.device_utilization(&workers),
+            classic.device_utilization(&workers),
+            "{spec}: utilization drifted"
+        );
+    }
+}
+
+// --- 3. bounded memory ----------------------------------------------
+
+/// A 5x longer session must not move the slab/arena high-water mark:
+/// completed jobs recycle their slots, so memory tracks the admission
+/// window, not the job count.
+#[test]
+fn slab_memory_high_water_is_independent_of_session_length() {
+    let stream = "stream:arrival=fixed,rate=400,queue=8";
+    let short = run_capacity(500, "dmda", stream, EventQueueKind::Ladder);
+    let long = run_capacity(2500, "dmda", stream, EventQueueKind::Ladder);
+    assert!(short.mem_high_water_bytes > 0, "high-water mark not tracked");
+    assert_eq!(
+        short.mem_high_water_bytes, long.mem_high_water_bytes,
+        "slab/arena memory grew with session length (slot recycling broken)"
+    );
+    assert_eq!(long.job_count(), 2500, "every submitted job must complete");
+    assert_eq!(long.rejected_count(), 0, "under-capacity fifo session must not reject");
+    assert!(long.events_processed > 2500 * 4, "event count implausibly low");
+}
+
+// --- 4. report-path regressions -------------------------------------
+
+/// A bursty overload against a tiny admission window with a near-zero
+/// wait budget rejects almost everything; the session report must stay
+/// finite end to end (the all-rejected unit tests live in
+/// `sim::report`; this pins the full engine path).
+#[test]
+fn heavily_rejecting_session_reports_finite_metrics() {
+    let stream = "stream:arrival=bursty,rate=2000,burst=16,queue=1,admit=reject,budget=0.01,seed=7";
+    let session = run_capacity(64, "dmda", stream, EventQueueKind::Ladder);
+    assert!(session.rejected_count() > 0, "overload session should reject");
+    for (name, v) in session.scalar_metrics() {
+        assert!(v.is_finite(), "metric {name} is not finite: {v}");
+    }
+}
+
+/// Device utilization divides by wall-clock span x workers: summing
+/// `util_d * span_ms * workers_d` over devices must recover the total
+/// busy time (`useful_work_ms`), pinning the denominator.
+#[test]
+fn device_utilization_keeps_the_span_denominator() {
+    let session =
+        run_capacity(200, "dmda", "stream:arrival=poisson,rate=300,queue=8", EventQueueKind::Ladder);
+    let platform = Platform::paper();
+    let workers: Vec<usize> = platform.devices.iter().map(|d| d.workers).collect();
+    let util = session.device_utilization(&workers);
+    assert_eq!(util.len(), workers.len());
+    let mut recovered = 0.0;
+    for (d, u) in util.iter().enumerate() {
+        assert!((0.0..=1.0).contains(u), "device {d} utilization {u} out of [0, 1]");
+        recovered += u * session.span_ms * workers[d] as f64;
+    }
+    let rel = (recovered - session.useful_work_ms).abs() / session.useful_work_ms.max(1e-12);
+    assert!(
+        rel < 1e-9,
+        "span denominator drifted: recovered {recovered} vs busy {}",
+        session.useful_work_ms
+    );
+}
