@@ -29,6 +29,7 @@ import heapq
 import math
 import os
 import sys
+import time
 
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 import partition_mirror as pm  # noqa: E402
@@ -441,14 +442,23 @@ class Gp:
 
 
 class GpWindow:
-    """Mirror of GraphPartition with window=W (frontier replanning)."""
+    """Mirror of GraphPartition with window=W (frontier replanning).
+    incremental=True (the Rust default) warm-starts each replan from the
+    previous pin table (pm.partition_warm: greedy warm_place for free
+    vertices + a single boundary refinement pass on the fine graph, no
+    coarsening), folds the select-time device-free horizon into the
+    replan targets, and skips replans whose frontier epoch is
+    unchanged; incremental=False is the from-scratch baseline arm (full
+    multilevel on every replan, never skips)."""
 
-    def __init__(self, dag, k, model, window, epsilon=0.05, seed=1, node_weight="gpu"):
+    def __init__(self, dag, k, model, window, epsilon=0.05, seed=1,
+                 node_weight="gpu", incremental=True):
         self.name = "gp-window"
         self.window = window
         self.epsilon = epsilon
         self.seed = seed
         self.k = k
+        self.incremental = incremental
         self.parts, self.ratios, self.result = gp_plan(
             dag, k, model, epsilon, seed, node_weight
         )
@@ -464,6 +474,17 @@ class GpWindow:
         self.dispatched = [False] * n
         self.finishes = 0
         self.replans = 0
+        # Mirror of GraphPartition's epoch diff + ReplanStats: on_submit
+        # has already bumped the epoch once by the time the job runs.
+        self.frontier_epoch = 1
+        self.last_replan_epoch = None
+        self.rstats = dict(replans=0, skipped=0, cost_ns=0)
+        # Mirror of GraphPartition dev_free_ms / per-job merged flag
+        # (see OpenGpWindow): the solo plan ignores nothing in the
+        # closed single-job case, but the first executed replan still
+        # re-seeds via warm_place for parity with the open path.
+        self.dev_free = [0.0] * k
+        self.merged = False
 
     def select(self, ctx):
         v = ctx["task"]
@@ -471,6 +492,10 @@ class GpWindow:
             d = _least_slack_meeting(ctx)
             if d is not None:
                 self.parts[v] = d
+        if not self.dispatched[v]:
+            # First dispatch: the task leaves the replannable frontier.
+            self.frontier_epoch += 1
+        self.dev_free = list(ctx["device_free"])
         self.dispatched[v] = True
         return self.parts[v]
 
@@ -482,6 +507,10 @@ class GpWindow:
         self._replan()
 
     def _replan(self):
+        if self.incremental and self.last_replan_epoch == self.frontier_epoch:
+            self.rstats["skipped"] += 1
+            return
+        t0 = time.perf_counter_ns()
         n = len(self.node_w)
         totals = [0.0] * self.k
         remaining = 0
@@ -493,9 +522,18 @@ class GpWindow:
                 totals[d] += self.dev_time[v][d]
         if remaining == 0:
             return
+        # Backlog-aware targets (see OpenGpWindow._replan for the
+        # derivation): equalize projected completion over the relative
+        # per-device free horizons snapshotted at the last select.
+        finite = [f for f in self.dev_free if math.isfinite(f)]
+        mn = min(finite) if finite else 0.0
+        blog = [min(f - mn, 1e7) if math.isfinite(f) else 1e7
+                for f in self.dev_free]
         inv = [1.0 / max(t, 1e-12) for t in totals]
-        s = sum(inv)
-        ratios = [i / s for i in inv]
+        c = (1.0 + sum(b * i for b, i in zip(blog, inv))) / sum(inv)
+        ratios = [max((c - b) * i, 1e-3) for b, i in zip(blog, inv)]
+        rsum = sum(ratios)
+        ratios = [r / rsum for r in ratios]
 
         vwgt = list(self.node_w) + [0]
         anchor = n
@@ -510,11 +548,21 @@ class GpWindow:
         cfg = pm.default_cfg(
             k=self.k, targets=ratios, epsilon=self.epsilon, seed=self.seed, fixed=fixed
         )
-        res = pm.partition(g, cfg)
+        if self.incremental:
+            # Never-merged vertices enter free (-1) so warm_place seeds
+            # them target-aware (parity with the open multi-job path).
+            warm = ([p if self.merged else -1 for p in self.parts]) + [0]
+            res = pm.partition_warm(g, cfg, warm)
+        else:
+            res = pm.partition(g, cfg)
+        self.merged = True
         self.parts = res["parts"][:n]
         self.ratios = ratios
         self.result = res
         self.replans += 1
+        self.last_replan_epoch = self.frontier_epoch
+        self.rstats["replans"] += 1
+        self.rstats["cost_ns"] += time.perf_counter_ns() - t0
 
 
 # ----------------------------------------------------------------- engine
@@ -1007,23 +1055,50 @@ class OpenGpWindow:
     """Mirror of GraphPartition with window=W under the open system:
     every W completions, re-partition the undispatched *union frontier*
     of all in-flight jobs (their vertices concatenated in job-id order
-    plus one shared host anchor), dispatched tasks pinned."""
+    plus one shared host anchor), dispatched tasks pinned. With
+    incremental=True (the Rust default) each replan warm-starts from the
+    previous per-job pin tables (pm.partition_warm: greedy warm_place
+    for never-merged jobs' free vertices + one boundary refinement pass
+    on the fine merged graph, no coarsening), folds the select-time
+    device-free horizon into the replan targets, and a replan whose
+    frontier epoch is unchanged since the last one is skipped outright;
+    incremental=False is the from-scratch baseline arm."""
 
     name = "gp-window"
 
-    def __init__(self, k, model, window, epsilon=0.05, seed=1, node_weight="gpu"):
+    def __init__(self, k, model, window, epsilon=0.05, seed=1, node_weight="gpu",
+                 incremental=True):
         self.k = k
         self.model = model
         self.window = window
         self.epsilon = epsilon
         self.seed = seed
         self.node_weight = node_weight
+        self.incremental = incremental
         self.plan_cache = {}
         self.hits = 0
         self.misses = 0
         self.jobs = {}
         self.finishes = 0
         self.replans = 0
+        # Mirror of GraphPartition.frontier_epoch / last_replan_epoch /
+        # ReplanStats (None = the u64::MAX "never replanned" sentinel).
+        self.frontier_epoch = 0
+        self.last_replan_epoch = None
+        self.rstats = dict(replans=0, skipped=0, cost_ns=0)
+        # Optional instrumentation: when set to a list, every executed
+        # incremental replan also runs the from-scratch partitioner on
+        # the same merged graph and appends (warm_cut, scratch_cut) —
+        # how run_checks measures the 2% cut-parity margin.
+        self.record_cuts = None
+        # Backlog-aware replan targets (mirror of GraphPartition
+        # dev_free_ms): select() snapshots the engine's per-device
+        # free-horizon estimate; _replan folds the relative backlog
+        # (free[d] - min free) into the k-way targets so the merged
+        # partition equalizes projected completion times instead of raw
+        # remaining-work shares. The equalization is invariant to a
+        # common offset, so no "now" clock is needed.
+        self.dev_free = [0.0] * k
 
     def _pins(self, dag):
         key = dag_signature(dag)
@@ -1039,6 +1114,7 @@ class OpenGpWindow:
 
     def on_submit(self, job, dag):
         pins = self._pins(dag)
+        self.frontier_epoch += 1  # admission changes the union frontier
         # Reset the window counter only when the system was idle (an
         # admission must not starve the in-flight jobs' replan cadence).
         if not any(st["active"] for st in self.jobs.values()):
@@ -1048,6 +1124,7 @@ class OpenGpWindow:
         node_w, _, anchor_w = build_gp_graph(dag, self.model, self.k, self.node_weight)
         self.jobs[job] = dict(
             active=True,
+            merged=False,
             parts=list(pins),
             dispatched=[False] * n,
             node_w=node_w[:n],
@@ -1069,6 +1146,11 @@ class OpenGpWindow:
             d = _least_slack_meeting(ctx)
             if d is not None:
                 st["parts"][v] = d
+        if not st["dispatched"][v]:
+            # First dispatch: the task leaves the replannable frontier
+            # and becomes a pin.
+            self.frontier_epoch += 1
+        self.dev_free = list(ctx["device_free"])
         st["dispatched"][v] = True
         return st["parts"][v]
 
@@ -1079,6 +1161,8 @@ class OpenGpWindow:
             self._replan()
 
     def on_job_drain(self, job):
+        if self.jobs[job]["active"]:
+            self.frontier_epoch += 1
         self.jobs[job]["active"] = False
 
     def on_task_killed(self, job, task):
@@ -1088,20 +1172,32 @@ class OpenGpWindow:
         st["active"] = True
         if task < len(st["dispatched"]):
             st["dispatched"][task] = False
+        self.frontier_epoch += 1
 
     def on_device_down(self, dev):
+        # The epoch bump *before* replanning guarantees the incremental
+        # fast exit never swallows a forced recovery replan.
         before = self.replans
         self.finishes = 0
+        self.frontier_epoch += 1
         self._replan()
         return self.replans - before
 
     def on_device_up(self, dev):
         before = self.replans
         self.finishes = 0
+        self.frontier_epoch += 1
         self._replan()
         return self.replans - before
 
     def _replan(self):
+        # No-change fast exit (incremental mode): an unchanged frontier
+        # epoch means this replan would reproduce the previous
+        # (deterministic) result verbatim.
+        if self.incremental and self.last_replan_epoch == self.frontier_epoch:
+            self.rstats["skipped"] += 1
+            return
+        t0 = time.perf_counter_ns()
         active = [j for j in sorted(self.jobs) if self.jobs[j]["active"]]
         if not active:
             return
@@ -1117,9 +1213,22 @@ class OpenGpWindow:
                     totals[d] += st["dev_time"][v][d]
         if remaining == 0:
             return
+        # Backlog-aware targets: device d finishes its dispatched backlog
+        # B_d plus an x_d share of the remaining frontier at B_d + x_d*R_d
+        # (R_d = time if the whole frontier ran on d); equalizing the
+        # projected finish times gives x_d = (C - B_d) / R_d with
+        # C = (1 + sum B/R) / sum 1/R, clamped and renormalized. B_d is
+        # the relative free horizon from the last select snapshot (a
+        # down device's inf horizon caps into a tiny clamped share).
+        finite = [f for f in self.dev_free if math.isfinite(f)]
+        mn = min(finite) if finite else 0.0
+        blog = [min(f - mn, 1e7) if math.isfinite(f) else 1e7
+                for f in self.dev_free]
         inv = [1.0 / max(t, 1e-12) for t in totals]
-        s = sum(inv)
-        ratios = [i / s for i in inv]
+        c = (1.0 + sum(b * i for b, i in zip(blog, inv))) / sum(inv)
+        ratios = [max((c - b) * i, 1e-3) for b, i in zip(blog, inv)]
+        rsum = sum(ratios)
+        ratios = [r / rsum for r in ratios]
 
         offsets = {}
         vwgt = []
@@ -1153,12 +1262,38 @@ class OpenGpWindow:
         cfg = pm.default_cfg(
             k=self.k, targets=ratios, epsilon=self.epsilon, seed=self.seed, fixed=fixed
         )
-        res = pm.partition(g, cfg)
+        if self.incremental:
+            # Warm start: scatter the previous per-job pin tables over
+            # the merged graph; the anchor warm-starts on its host pin.
+            # Jobs that never went through a merged replan only carry
+            # their solo-plan pins, which ignore the rest of the system
+            # — mark their vertices free (-1) so warm_place seeds them
+            # target-aware instead.
+            warm = [0] * (total_n + 1)
+            for j in active:
+                off = offsets[j]
+                st = self.jobs[j]
+                for v, p in enumerate(st["parts"]):
+                    warm[off + v] = p if st["merged"] else -1
+            res = pm.partition_warm(g, cfg, warm)
+        else:
+            res = pm.partition(g, cfg)
+        for j in active:
+            self.jobs[j]["merged"] = True
         for j in active:
             off = offsets[j]
             n = len(self.jobs[j]["node_w"])
             self.jobs[j]["parts"] = res["parts"][off:off + n]
         self.replans += 1
+        self.last_replan_epoch = self.frontier_epoch
+        self.rstats["replans"] += 1
+        self.rstats["cost_ns"] += time.perf_counter_ns() - t0
+        if self.incremental and self.record_cuts is not None:
+            # Outside the timed window: the scratch run exists only to
+            # measure cut parity, not to bill the incremental arm.
+            self.record_cuts.append(
+                (res["edge_cut"], pm.partition(g, cfg)["edge_cut"])
+            )
 
 
 def est_total_work(dag, model, k):
@@ -1246,6 +1381,10 @@ def simulate_open_engine(
             + len(events) * 40
             + memw["live_handles"] * 24
             + len(pending) * 8
+            # Source-footprint term (mirror of JobSource::bytes): the
+            # Rust open path's lazy StreamSource holds one submit time
+            # per job.
+            + len(jobs_in) * 8
         )
         stats["mem_high_water"] = max(stats["mem_high_water"], b)
 
@@ -1951,7 +2090,18 @@ def make_open_policy(spec, k, model, window=12):
     if spec == "gp":
         return OpenGp(k, model)
     if spec.startswith("gp:window"):
-        return OpenGpWindow(k, model, window=int(spec.split("=")[1]))
+        # Mirror of registry::build_gp's param list, e.g.
+        # "gp:window=64,incremental=0".
+        params = dict(part.split("=", 1) for part in spec[3:].split(","))
+        extra = set(params) - {"window", "incremental"}
+        if extra:
+            raise ValueError(f"unmirrored gp param(s): {sorted(extra)}")
+        return OpenGpWindow(
+            k,
+            model,
+            window=int(params["window"]),
+            incremental=params.get("incremental", "1") != "0",
+        )
     if spec == "cpu-only":
         return OpenPin(0)
     if spec == "gpu-only":
@@ -1989,6 +2139,11 @@ def open_run(
         fault=fault,
         equeue=equeue,
     )
+    # Mirror of simulate_open_qos reading scheduler.replan_stats() into
+    # SessionReport.replans / replan_cost_ms (zero for static policies).
+    rs = getattr(policy, "rstats", None)
+    stats["session_replans"] = rs["replans"] if rs else 0
+    stats["replan_cost_ns"] = rs["cost_ns"] if rs else 0
     return results, policy, stats
 
 
@@ -2485,6 +2640,7 @@ SCENARIO_METRICS = [
     "span_ms", "mean_sojourn_ms", "p50_sojourn_ms", "p95_sojourn_ms",
     "p99_sojourn_ms", "mean_queue_delay_ms", "throughput_jps", "goodput_jps",
     "deadline_hit_rate", "rejected_jobs", "max_concurrent_jobs",
+    "replans", "replan_cost_ms",
 ]
 
 
@@ -2546,6 +2702,8 @@ def scenario_rep_metrics(spec, cell, rep):
         "deadline_hit_rate": m["deadline_hit_rate"],
         "rejected_jobs": float(m["rejected"]),
         "max_concurrent_jobs": float(m["max_concurrent"]),
+        "replans": float(stats["session_replans"]),
+        "replan_cost_ms": stats["replan_cost_ns"] / 1e6,
     }
     names = [c["name"] for c in spec["classes"]]
     classes = class_metrics(results, m["span"], len(names), names)
@@ -3187,10 +3345,10 @@ def run_checks():
     specs = {name: load_scenario(name) for name in BUILTIN_SCENARIOS}
     counts = {n: len(scenario_cells(s)) for n, s in specs.items()}
     check(
-        "builtin sweep cell counts 5/4/3/6/2",
+        "builtin sweep cell counts 7/4/3/6/2",
         counts
         == {
-            "open-poisson": 5,
+            "open-poisson": 7,
             "open-qos": 4,
             "open-fault": 3,
             "capacity-sweep": 6,
@@ -3329,13 +3487,18 @@ def run_checks():
     )
 
     print("event queue: ladder == heap through the full engine")
+
+    def drop_wallclock(stats):
+        # replan_cost_ns is measured wall time; every other stat is deterministic.
+        return {k: v for k, v in stats.items() if k != "replan_cost_ns"}
+
     for name in ["open-poisson", "open-qos", "open-fault"]:
         for cell in scenario_cells(specs[name]):
             rh, sh, _ = scenario_rep(specs[name], cell, 0, equeue="heap")
             rl, sl, _ = scenario_rep(specs[name], cell, 0, equeue="ladder")
             check(
                 f"{name} {cell['label']} rep0 identical under ladder",
-                rh == rl and sh == sl,
+                rh == rl and drop_wallclock(sh) == drop_wallclock(sl),
             )
 
     print("engine-capacity scenario (slab/ladder core pin)")
@@ -3475,6 +3638,78 @@ def run_checks():
         f"{recovered:.6f} vs {busy_tot:.6f}",
     )
 
+    print("incremental replanning: warm-start cost vs from-scratch (tentpole margin)")
+    inc_jobs = [phased(8, 4, 256) for _ in range(96)]
+    inc_submits = poisson_times(220.0, 7, 96)
+    inc_res, inc_pol, _ = open_run(inc_jobs, "gp:window=64", inc_submits, 8)
+    scr_res, scr_pol, _ = open_run(
+        inc_jobs, "gp:window=64,incremental=0", inc_submits, 8
+    )
+    inc_rs, scr_rs = inc_pol.rstats, scr_pol.rstats
+    check("both arms execute replans", inc_rs["replans"] > 0 and scr_rs["replans"] > 0,
+          f"inc={inc_rs['replans']} scratch={scr_rs['replans']}")
+    inc_mean = inc_rs["cost_ns"] / max(inc_rs["replans"], 1)
+    scr_mean = scr_rs["cost_ns"] / max(scr_rs["replans"], 1)
+    print(
+        f"    mean replan cost: incremental {inc_mean / 1e6:.3f} ms vs "
+        f"scratch {scr_mean / 1e6:.3f} ms ({scr_mean / max(inc_mean, 1):.1f}x)"
+    )
+    check("incremental >=5x cheaper per replan", inc_mean * 5.0 <= scr_mean,
+          f"{scr_mean / max(inc_mean, 1):.2f}x")
+    inc_m = session_metrics(inc_res, PAPER_WORKERS)
+    scr_m = session_metrics(scr_res, PAPER_WORKERS)
+    print(
+        f"    mean sojourn: incremental {inc_m['mean_sojourn']:.2f} ms vs "
+        f"scratch {scr_m['mean_sojourn']:.2f} ms"
+    )
+    check("incremental mean sojourn no worse",
+          inc_m["mean_sojourn"] <= scr_m["mean_sojourn"] * 1.001,
+          f"{inc_m['mean_sojourn']:.2f} vs {scr_m['mean_sojourn']:.2f}")
+
+    print("incremental replanning: warm cut within 2% of from-scratch (same graphs)")
+    cut_model = CalibratedModel()
+    cut_pol = make_open_policy("gp:window=64", len(PAPER_WORKERS), cut_model)
+    cut_pol.record_cuts = []
+    simulate_open_engine(
+        list(zip(inc_jobs, inc_submits)), cut_pol, PAPER_WORKERS, cut_model, 8
+    )
+    warm_tot = sum(w for w, _ in cut_pol.record_cuts)
+    scratch_tot = sum(s for _, s in cut_pol.record_cuts)
+    print(
+        f"    {len(cut_pol.record_cuts)} replans: warm cut sum {warm_tot} vs "
+        f"scratch {scratch_tot} ({warm_tot / max(scratch_tot, 1):.4f}x)"
+    )
+    check("warm total cut within 2% of scratch",
+          warm_tot <= scratch_tot * 1.02 + 1,
+          f"{warm_tot} vs {scratch_tot}")
+
+    print("incremental replanning: unchanged frontier epoch skips the replan")
+    skip_pol = OpenGpWindow(len(PAPER_WORKERS), CalibratedModel(), window=4)
+    skip_dag = phased(6, 2, 256)
+    skip_pol.on_submit(0, skip_dag)
+    for v in range(2):
+        skip_pol.select(dict(job=0, task=v, deadline=math.inf,
+                             device_free=[0.0] * len(PAPER_WORKERS)))
+    for t in range(4):
+        skip_pol.on_task_finish(0, t, 0, float(t))
+    after_first = dict(skip_pol.rstats)
+    check("window fires one real replan",
+          after_first["replans"] == 1 and after_first["skipped"] == 0,
+          f"{after_first}")
+    for t in range(4, 8):
+        skip_pol.on_task_finish(0, t, 0, float(t))
+    check("no-change window skipped, cost not billed",
+          skip_pol.rstats["replans"] == 1 and skip_pol.rstats["skipped"] == 1
+          and skip_pol.rstats["cost_ns"] == after_first["cost_ns"],
+          f"{skip_pol.rstats}")
+    skip_pol.select(dict(job=0, task=2, deadline=math.inf,
+                         device_free=[0.0] * len(PAPER_WORKERS)))
+    for t in range(8, 12):
+        skip_pol.on_task_finish(0, t, 0, float(t))
+    check("dispatch bumps the epoch, next window replans",
+          skip_pol.rstats["replans"] == 2 and skip_pol.rstats["skipped"] == 1,
+          f"{skip_pol.rstats}")
+
     print("ALL OK" if OK else "FAILURES PRESENT")
     return OK
 
@@ -3608,13 +3843,20 @@ def bench_json(jobs=8, window=12, size=1024, open_jobs=24, rate=220.0, queue=8):
                 executed_work_ms=st["executed"],
                 recovery_replans=st["replans"],
                 goodput_jps=goodput,
+                replans=st.get("session_replans", 0),
+                replan_cost_ms=st.get("replan_cost_ns", 0) / 1e6,
                 utilization=m["utilization"],
                 classes=class_metrics(results, m["span"], n_classes, list(names)),
             )
         )
 
     for scenario, dags, submits in scenarios:
-        for spec in ["eager", "dmda", "heft", "gp", f"gp:window={window}"]:
+        specs = ["eager", "dmda", "heft", "gp", f"gp:window={window}"]
+        if scenario == "open-poisson":
+            # Incremental-replanning headline rows: warm-start default
+            # vs the from-scratch baseline arm on the same stream.
+            specs += ["gp:window=64", "gp:window=64,incremental=0"]
+        for spec in specs:
             plan_ns = 0
             first_plan_ns = 0
             row_stats = None
@@ -3625,6 +3867,8 @@ def bench_json(jobs=8, window=12, size=1024, open_jobs=24, rate=220.0, queue=8):
                 results = []
                 clock = 0.0
                 executed = 0.0
+                session_replans = 0
+                replan_cost_ns = 0
                 for i, dag in enumerate(dags):
                     t0 = time.perf_counter_ns()
                     if spec.startswith("gp:window"):
@@ -3637,6 +3881,10 @@ def bench_json(jobs=8, window=12, size=1024, open_jobs=24, rate=220.0, queue=8):
                     if i == 0 and spec.startswith("gp"):
                         first_plan_ns = t1 - t0
                         plan_ns += t1 - t0
+                    rs = getattr(r["policy"], "rstats", None)
+                    if rs:
+                        session_replans += rs["replans"]
+                        replan_cost_ns += rs["cost_ns"]
                     executed += r["executed_ms"]
                     results.append(
                         dict(
@@ -3649,7 +3897,8 @@ def bench_json(jobs=8, window=12, size=1024, open_jobs=24, rate=220.0, queue=8):
                         )
                     )
                     clock += r["makespan"]
-                row_stats = dict(failures=0, reexec=0, wasted=0.0, executed=executed, replans=0)
+                row_stats = dict(failures=0, reexec=0, wasted=0.0, executed=executed, replans=0,
+                                 session_replans=session_replans, replan_cost_ns=replan_cost_ns)
                 stream = "stream:arrival=closed"
             else:
                 t0 = time.perf_counter_ns()
@@ -3752,6 +4001,8 @@ def bench_json(jobs=8, window=12, size=1024, open_jobs=24, rate=220.0, queue=8):
             f'"executed_work_ms": {r["executed_work_ms"]:.6f}, '
             f'"recovery_replans": {r["recovery_replans"]}, '
             f'"goodput_jps": {r["goodput_jps"]:.6f}, '
+            f'"replans": {r["replans"]}, '
+            f'"replan_cost_ms": {r["replan_cost_ms"]:.6f}, '
             f'"utilization": [{util}], "classes": [{classes}]}}{comma}'
         )
     lines.append("  ]")

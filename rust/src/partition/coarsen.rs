@@ -26,8 +26,8 @@ pub struct CoarseLevel {
     /// fine vertex -> coarse vertex.
     pub map: Vec<u32>,
     pub coarse: MetisGraph,
-    /// Side pin per coarse vertex (-1 free; inherited from members).
-    pub coarse_fixed: Vec<i8>,
+    /// Part pin per coarse vertex (-1 free; inherited from members).
+    pub coarse_fixed: Vec<i32>,
 }
 
 impl CoarseLevel {
@@ -57,7 +57,7 @@ pub struct CoarsenScratch {
 
 /// Perform one round of heavy-edge matching on `fine`, allocating fresh
 /// output storage. Convenience wrapper over [`coarsen_once_into`].
-pub fn coarsen_once<G: Adjacency>(fine: &G, fixed: &[i8], rng: &mut Pcg32) -> CoarseLevel {
+pub fn coarsen_once<G: Adjacency>(fine: &G, fixed: &[i32], rng: &mut Pcg32) -> CoarseLevel {
     let mut ws = CoarsenScratch::default();
     let mut out = CoarseLevel::default();
     coarsen_once_into(fine, fixed, rng, &mut ws, &mut out);
@@ -67,13 +67,13 @@ pub fn coarsen_once<G: Adjacency>(fine: &G, fixed: &[i8], rng: &mut Pcg32) -> Co
 /// Perform one round of heavy-edge matching on `fine`, writing the coarse
 /// level into `out` (whose buffers are reused) with scratch from `ws`.
 ///
-/// `fixed[v]` (-1 free, 0/1 pinned side): vertices pinned to different
-/// sides are never matched together; a pair with one pinned member pins
+/// `fixed[v]` (-1 free, else pinned part): vertices pinned to different
+/// parts are never matched together; a pair with one pinned member pins
 /// the coarse vertex. Edge weights must be positive (zero is the scatter
 /// buffer's "untouched" sentinel).
 pub fn coarsen_once_into<G: Adjacency>(
     fine: &G,
-    fixed: &[i8],
+    fixed: &[i32],
     rng: &mut Pcg32,
     ws: &mut CoarsenScratch,
     out: &mut CoarseLevel,
@@ -228,7 +228,7 @@ mod tests {
     fn coarsening_shrinks_path() {
         let g = path(16, 1);
         let mut rng = Pcg32::seeded(1);
-        let lvl = coarsen_once(&g, &vec![-1i8; g.vertex_count()], &mut rng);
+        let lvl = coarsen_once(&g, &vec![-1i32; g.vertex_count()], &mut rng);
         assert!(lvl.coarse.vertex_count() <= 12, "HEM should shrink a path substantially");
         assert!(lvl.coarse.vertex_count() >= 8, "pairs only: at least n/2");
     }
@@ -237,7 +237,7 @@ mod tests {
     fn vertex_weight_conserved() {
         let g = path(13, 2);
         let mut rng = Pcg32::seeded(2);
-        let lvl = coarsen_once(&g, &vec![-1i8; g.vertex_count()], &mut rng);
+        let lvl = coarsen_once(&g, &vec![-1i32; g.vertex_count()], &mut rng);
         assert_eq!(lvl.coarse.vwgt.iter().sum::<i64>(), 13);
     }
 
@@ -245,7 +245,7 @@ mod tests {
     fn coarse_adjacency_symmetric() {
         let g = path(20, 3);
         let mut rng = Pcg32::seeded(3);
-        let lvl = coarsen_once(&g, &vec![-1i8; g.vertex_count()], &mut rng);
+        let lvl = coarsen_once(&g, &vec![-1i32; g.vertex_count()], &mut rng);
         let c = &lvl.coarse;
         for v in 0..c.vertex_count() {
             for (u, w) in c.neighbors(v) {
@@ -270,7 +270,7 @@ mod tests {
         add(2, 3, 100, &mut adj);
         let g = MetisGraph::from_adj(vec![1; 4], adj);
         let mut rng = Pcg32::seeded(4);
-        let lvl = coarsen_once(&g, &vec![-1i8; g.vertex_count()], &mut rng);
+        let lvl = coarsen_once(&g, &vec![-1i32; g.vertex_count()], &mut rng);
         // (0,1) and (2,3) collapse; only the light edge remains.
         assert_eq!(lvl.coarse.vertex_count(), 2);
         assert_eq!(lvl.coarse.edge_count(), 1);
@@ -281,7 +281,7 @@ mod tests {
     fn project_roundtrip() {
         let g = path(10, 1);
         let mut rng = Pcg32::seeded(5);
-        let lvl = coarsen_once(&g, &vec![-1i8; g.vertex_count()], &mut rng);
+        let lvl = coarsen_once(&g, &vec![-1i32; g.vertex_count()], &mut rng);
         let coarse_side: Vec<usize> = (0..lvl.coarse.vertex_count()).map(|i| i % 2).collect();
         let fine_side = lvl.project(&coarse_side);
         assert_eq!(fine_side.len(), 10);
@@ -297,7 +297,7 @@ mod tests {
     fn isolated_vertices_survive() {
         let g = MetisGraph::from_adj(vec![5, 7, 9], vec![vec![], vec![], vec![]]);
         let mut rng = Pcg32::seeded(6);
-        let lvl = coarsen_once(&g, &vec![-1i8; g.vertex_count()], &mut rng);
+        let lvl = coarsen_once(&g, &vec![-1i32; g.vertex_count()], &mut rng);
         assert_eq!(lvl.coarse.vertex_count(), 3);
         let mut w = lvl.coarse.vwgt.clone();
         w.sort();
@@ -307,7 +307,7 @@ mod tests {
     #[test]
     fn scratch_reuse_is_deterministic() {
         let g = path(40, 2);
-        let fixed = vec![-1i8; g.vertex_count()];
+        let fixed = vec![-1i32; g.vertex_count()];
         let mut ws = CoarsenScratch::default();
         let mut out = CoarseLevel::default();
         let mut rng = Pcg32::seeded(9);

@@ -15,7 +15,7 @@ use crate::util::Pcg32;
 pub fn greedy_growing<G: Adjacency>(
     g: &G,
     frac0: f64,
-    fixed: &[i8],
+    fixed: &[i32],
     cfg: &super::PartitionConfig,
     rng: &mut Pcg32,
 ) -> Vec<usize> {
@@ -36,7 +36,7 @@ pub fn greedy_growing<G: Adjacency>(
     side
 }
 
-fn grow_once<G: Adjacency>(g: &G, target0: i64, fixed: &[i8], rng: &mut Pcg32) -> Vec<usize> {
+fn grow_once<G: Adjacency>(g: &G, target0: i64, fixed: &[i32], rng: &mut Pcg32) -> Vec<usize> {
     let n = g.vertex_count();
     let mut side: Vec<usize> = (0..n).map(|v| if fixed[v] == 0 { 0 } else { 1 }).collect();
     if n == 0 {
@@ -152,7 +152,7 @@ mod tests {
         let g = grid(6, 6);
         let cfg = PartitionConfig::default();
         let mut rng = Pcg32::seeded(1);
-        let side = greedy_growing(&g, 0.5, &vec![-1i8; g.vertex_count()], &cfg, &mut rng);
+        let side = greedy_growing(&g, 0.5, &vec![-1i32; g.vertex_count()], &cfg, &mut rng);
         let w0 = side.iter().filter(|&&s| s == 0).count();
         assert!((15..=21).contains(&w0), "half of 36 ± slack, got {w0}");
     }
@@ -162,7 +162,7 @@ mod tests {
         let g = grid(8, 8);
         let cfg = PartitionConfig { initial_tries: 12, ..Default::default() };
         let mut rng = Pcg32::seeded(2);
-        let side = greedy_growing(&g, 0.5, &vec![-1i8; g.vertex_count()], &cfg, &mut rng);
+        let side = greedy_growing(&g, 0.5, &vec![-1i32; g.vertex_count()], &cfg, &mut rng);
         let cut = quality::edge_cut(&g, &side);
         // A grown half of an 8x8 grid should cut far fewer than random
         // (random expectation = half of 112 edges = 56).
@@ -174,7 +174,7 @@ mod tests {
         let g = grid(3, 3);
         let cfg = PartitionConfig::default();
         let mut rng = Pcg32::seeded(3);
-        let side = greedy_growing(&g, 0.0, &vec![-1i8; g.vertex_count()], &cfg, &mut rng);
+        let side = greedy_growing(&g, 0.0, &vec![-1i32; g.vertex_count()], &cfg, &mut rng);
         assert!(side.iter().all(|&s| s == 1));
     }
 
@@ -194,7 +194,7 @@ mod tests {
         let g = MetisGraph::from_adj(vec![1; 6], adj);
         let cfg = PartitionConfig::default();
         let mut rng = Pcg32::seeded(4);
-        let side = greedy_growing(&g, 0.5, &vec![-1i8; g.vertex_count()], &cfg, &mut rng);
+        let side = greedy_growing(&g, 0.5, &vec![-1i32; g.vertex_count()], &cfg, &mut rng);
         let w0 = side.iter().filter(|&&s| s == 0).count();
         assert_eq!(w0, 3);
     }

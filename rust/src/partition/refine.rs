@@ -1,4 +1,5 @@
-//! Refinement phase: boundary Fiduccia–Mattheyses (FM) with rollback.
+//! Refinement phase: boundary Fiduccia–Mattheyses (FM) with rollback,
+//! plus direct k-way boundary refinement ([`kway_refine_ws`]).
 //!
 //! Each pass tentatively moves every vertex at most once, always picking
 //! a highest-gain-class move that keeps the balance constraint, and
@@ -44,6 +45,23 @@
 //! `target0 * (1 ± epsilon) ± max_vertex_weight` — the vertex-weight slack
 //! keeps coarse levels (where single vertices can outweigh the tolerance)
 //! from deadlocking, mirroring METIS's coarse-level relaxation.
+//!
+//! # K-way boundary refinement
+//!
+//! [`kway_refine_ws`] refines a k-way assignment *directly* on the CSR
+//! graph instead of descending through `log k` recursive-bisection
+//! levels (each a full pass over the edge array). It reuses the same
+//! [`GainBuckets`] three-level-bitmap queue, keyed by each boundary
+//! vertex's best external gain, and greedily commits moves under a
+//! strict lexicographic `(total balance-band distance, cut)` decrease
+//! rule. Because every accepted move strictly shrinks that key, the
+//! pass needs **no rollback log** (termination is monotone, not
+//! prefix-restored), and balance-restoring moves with negative cut gain
+//! are accepted whenever they reduce the band distance — exactly what a
+//! warm-started assignment (projected from a previous replan, with jobs
+//! drained and admitted since) needs to re-legalize itself. Moved
+//! vertices lock for the remainder of the pass; passes repeat while the
+//! key improves, as in 2-way FM.
 
 use crate::dag::metis_io::Adjacency;
 use crate::util::Pcg32;
@@ -234,13 +252,13 @@ pub struct FmScratch {
 }
 
 /// Run FM refinement in place with fresh scratch. Convenience wrapper
-/// over [`fm_refine_ws`]; `fixed[v]` (-1 free, 0/1 pinned) locks pinned
+/// over [`fm_refine_ws`]; `fixed[v]` (-1 free, else pinned part) locks pinned
 /// vertices for every pass. Returns the final cut.
 pub fn fm_refine<G: Adjacency>(
     g: &G,
     side: &mut [usize],
     frac0: f64,
-    fixed: &[i8],
+    fixed: &[i32],
     cfg: &super::PartitionConfig,
     rng: &mut Pcg32,
 ) -> i64 {
@@ -253,7 +271,7 @@ pub fn fm_refine_ws<G: Adjacency>(
     g: &G,
     side: &mut [usize],
     frac0: f64,
-    fixed: &[i8],
+    fixed: &[i32],
     cfg: &super::PartitionConfig,
     _rng: &mut Pcg32,
     ws: &mut FmScratch,
@@ -291,7 +309,7 @@ fn fm_pass<G: Adjacency>(
     side: &mut [usize],
     lo0: i64,
     hi0: i64,
-    fixed: &[i8],
+    fixed: &[i32],
     cut: &mut i64,
     ws: &mut FmScratch,
 ) -> bool {
@@ -434,6 +452,236 @@ fn fm_pass<G: Adjacency>(
     improved
 }
 
+/// Reusable scratch for direct k-way boundary refinement.
+#[derive(Debug, Clone, Default)]
+pub struct KwayScratch {
+    /// `conn[p]` = total edge weight from the vertex under consideration
+    /// into part `p` (rebuilt per vertex; length k).
+    conn: Vec<i64>,
+    pwgts: Vec<i64>,
+    lo: Vec<i64>,
+    hi: Vec<i64>,
+    locked: Vec<bool>,
+    seeds: Vec<u32>,
+    buckets: GainBuckets,
+}
+
+/// Run k-way boundary refinement in place with fresh scratch.
+/// Convenience wrapper over [`kway_refine_ws`].
+pub fn kway_refine<G: Adjacency>(
+    g: &G,
+    parts: &mut [usize],
+    targets: &[f64],
+    fixed: &[i32],
+    cfg: &super::PartitionConfig,
+) -> i64 {
+    let mut ws = KwayScratch::default();
+    kway_refine_ws(g, parts, targets, fixed, cfg, &mut ws)
+}
+
+/// Refine a k-way assignment directly on the CSR graph, reusing `ws`
+/// across calls. `targets[p]` is part `p`'s weight fraction; `fixed[v]`
+/// (-1 free, else pinned part) locks pinned vertices. Returns the final
+/// cut. See the module docs for the move-acceptance rule.
+pub fn kway_refine_ws<G: Adjacency>(
+    g: &G,
+    parts: &mut [usize],
+    targets: &[f64],
+    fixed: &[i32],
+    cfg: &super::PartitionConfig,
+    ws: &mut KwayScratch,
+) -> i64 {
+    let n = g.vertex_count();
+    let k = targets.len();
+    let mut cut = super::quality::edge_cut(g, parts);
+    if n == 0 || k <= 1 {
+        return cut;
+    }
+    debug_assert!(parts.iter().all(|&p| p < k), "parts out of range");
+    let total: i64 = g.total_vertex_weight();
+    let max_vw = (0..n).map(|v| g.vertex_weight(v)).max().unwrap_or(0);
+    // Per-part balance band, the k-way analogue of the 2-way band in
+    // [`fm_refine_ws`]: each part may deviate from its own target by
+    // epsilon of that target plus one max vertex weight (coarse-level
+    // deadlock slack).
+    ws.lo.clear();
+    ws.hi.clear();
+    for p in 0..k {
+        let tp = targets[p] * total as f64;
+        ws.lo.push((tp - (cfg.epsilon * tp + max_vw as f64)).floor() as i64);
+        ws.hi.push((tp + (cfg.epsilon * tp + max_vw as f64)).ceil() as i64);
+    }
+    for _ in 0..cfg.refine_passes.max(1) {
+        let improved = kway_pass(g, parts, k, fixed, &mut cut, ws);
+        if !improved {
+            break;
+        }
+    }
+    cut
+}
+
+/// Rebuild `conn[p]` = edge weight from `v` into part `p` (length k).
+fn kway_conn<G: Adjacency>(g: &G, parts: &[usize], v: usize, conn: &mut [i64]) {
+    conn.fill(0);
+    g.for_neighbors(v, |u, w| {
+        if w > 0 {
+            conn[parts[u]] += w;
+        }
+    });
+}
+
+/// Bucket key for `v`: its best external gain, `max over p != a` of
+/// `conn[p] - conn[a]` (0 for an isolated vertex — movable for balance).
+fn kway_key(conn: &[i64], a: usize) -> i64 {
+    let mut best = i64::MIN;
+    for (p, &c) in conn.iter().enumerate() {
+        if p != a && c > best {
+            best = c;
+        }
+    }
+    best - conn[a]
+}
+
+/// Best destination for a vertex of weight `w` currently in part `a`:
+/// minimizes `(balance-band distance delta, -gain, p)` lexicographically
+/// over all `p != a`. Returns `(p, gain, dist_delta)`.
+fn kway_best(
+    conn: &[i64],
+    pwgts: &[i64],
+    lo: &[i64],
+    hi: &[i64],
+    a: usize,
+    w: i64,
+) -> (usize, i64, i64) {
+    let dist = |p: usize, x: i64| (lo[p] - x).max(0) + (x - hi[p]).max(0);
+    let da = dist(a, pwgts[a] - w) - dist(a, pwgts[a]);
+    let ca = conn[a];
+    let mut best = (i64::MAX, i64::MAX, usize::MAX);
+    for p in 0..conn.len() {
+        if p == a {
+            continue;
+        }
+        let gain = conn[p] - ca;
+        let dd = da + dist(p, pwgts[p] + w) - dist(p, pwgts[p]);
+        let cand = (dd, -gain, p);
+        if cand < best {
+            best = cand;
+        }
+    }
+    (best.2, -best.1, best.0)
+}
+
+/// One greedy k-way pass; returns true if any move was accepted.
+///
+/// Unlike [`fm_pass`] there is no tentative log and no rollback: a move
+/// commits only when it strictly decreases the lexicographic
+/// `(total band distance, cut)` key — either `dist_delta < 0` (balance
+/// restoring, any cut) or `dist_delta == 0 && gain > 0` (balance
+/// neutral, cut improving) — so the pass is monotone and terminates.
+/// Rejected pops are simply dropped; a vertex re-enters the queue when a
+/// neighbor's move changes its connectivity.
+fn kway_pass<G: Adjacency>(
+    g: &G,
+    parts: &mut [usize],
+    k: usize,
+    fixed: &[i32],
+    cut: &mut i64,
+    ws: &mut KwayScratch,
+) -> bool {
+    let n = g.vertex_count();
+    let conn = &mut ws.conn;
+    let pwgts = &mut ws.pwgts;
+    let lo = &ws.lo;
+    let hi = &ws.hi;
+    let locked = &mut ws.locked;
+    let seeds = &mut ws.seeds;
+    let buckets = &mut ws.buckets;
+
+    conn.clear();
+    conn.resize(k, 0);
+    pwgts.clear();
+    pwgts.resize(k, 0);
+    locked.clear();
+    locked.resize(n, false);
+    seeds.clear();
+    buckets.reset(n);
+
+    for v in 0..n {
+        pwgts[parts[v]] += g.vertex_weight(v);
+    }
+
+    // Stage free boundary/isolated vertices and observe the smallest
+    // edge weight — the gain quantum — before anything enters the queue.
+    // If any part is outside its band the assignment may have no
+    // boundary at all (e.g. a degenerate warm start with every vertex in
+    // one part), so stage every free vertex to let balance moves flow.
+    let any_oob = (0..k).any(|p| pwgts[p] < lo[p] || pwgts[p] > hi[p]);
+    let mut min_w = i64::MAX;
+    for v in 0..n {
+        locked[v] = fixed[v] >= 0;
+        let pv = parts[v];
+        let mut deg = 0usize;
+        let mut boundary = false;
+        g.for_neighbors(v, |u, w| {
+            deg += 1;
+            if w > 0 && w < min_w {
+                min_w = w;
+            }
+            if parts[u] != pv {
+                boundary = true;
+            }
+        });
+        if !locked[v] && (boundary || deg == 0 || any_oob) {
+            seeds.push(v as u32);
+        }
+    }
+    let gain_shift = if min_w == i64::MAX { 0 } else { (min_w as u64).ilog2() };
+    buckets.set_gain_shift(gain_shift);
+    for i in 0..seeds.len() {
+        let v = seeds[i] as usize;
+        kway_conn(g, parts, v, conn);
+        let key = kway_key(conn, parts[v]);
+        buckets.insert(v, key);
+    }
+
+    let mut improved = false;
+    let mut running_cut = *cut;
+    while let Some(v) = buckets.pop_best() {
+        let a = parts[v];
+        let w = g.vertex_weight(v);
+        // The bucket key may be stale; recompute connectivity and pick
+        // the best destination fresh.
+        kway_conn(g, parts, v, conn);
+        let (p, gain, dd) = kway_best(conn, pwgts, lo, hi, a, w);
+        if p == usize::MAX || !(dd < 0 || (dd == 0 && gain > 0)) {
+            continue;
+        }
+        parts[v] = p;
+        pwgts[a] -= w;
+        pwgts[p] += w;
+        running_cut -= gain;
+        locked[v] = true;
+        improved = true;
+        // Re-key unlocked free neighbors whose connectivity changed.
+        g.for_neighbors(v, |u, wu| {
+            if wu <= 0 || locked[u] {
+                return;
+            }
+            kway_conn(g, parts, u, conn);
+            let key = kway_key(conn, parts[u]);
+            if buckets.contains(u) {
+                buckets.reposition(u, key);
+            } else {
+                buckets.insert(u, key);
+            }
+        });
+    }
+    if improved {
+        *cut = running_cut;
+    }
+    improved
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -465,7 +713,7 @@ mod tests {
         let before = quality::edge_cut(&g, &side);
         let cfg = PartitionConfig::default();
         let mut rng = Pcg32::seeded(1);
-        let after = fm_refine(&g, &mut side, 0.5, &vec![-1i8; g.vertex_count()], &cfg, &mut rng);
+        let after = fm_refine(&g, &mut side, 0.5, &vec![-1i32; g.vertex_count()], &cfg, &mut rng);
         assert!(after < before, "cut {before} -> {after} should improve");
         assert_eq!(after, quality::edge_cut(&g, &side), "returned cut must match");
     }
@@ -476,7 +724,7 @@ mod tests {
         let mut side: Vec<usize> = (0..20).map(|v| v % 2).collect();
         let cfg = PartitionConfig { epsilon: 0.1, ..Default::default() };
         let mut rng = Pcg32::seeded(2);
-        fm_refine(&g, &mut side, 0.5, &vec![-1i8; g.vertex_count()], &cfg, &mut rng);
+        fm_refine(&g, &mut side, 0.5, &vec![-1i32; g.vertex_count()], &cfg, &mut rng);
         let w0 = side.iter().filter(|&&s| s == 0).count();
         assert!((8..=12).contains(&w0), "w0 {w0} violates 50% ± slack");
     }
@@ -490,7 +738,7 @@ mod tests {
         let before = quality::edge_cut(&g, &side);
         let cfg = PartitionConfig::default();
         let mut rng = Pcg32::seeded(3);
-        let after = fm_refine(&g, &mut side, 0.5, &vec![-1i8; g.vertex_count()], &cfg, &mut rng);
+        let after = fm_refine(&g, &mut side, 0.5, &vec![-1i32; g.vertex_count()], &cfg, &mut rng);
         assert!(after <= before);
     }
 
@@ -503,7 +751,7 @@ mod tests {
         }
         let cfg = PartitionConfig { epsilon: 0.05, ..Default::default() };
         let mut rng = Pcg32::seeded(4);
-        fm_refine(&g, &mut side, 0.75, &vec![-1i8; g.vertex_count()], &cfg, &mut rng);
+        fm_refine(&g, &mut side, 0.75, &vec![-1i32; g.vertex_count()], &cfg, &mut rng);
         let w0 = side.iter().filter(|&&s| s == 0).count();
         assert!((13..=17).contains(&w0), "w0 {w0} should stay near 15");
     }
@@ -514,16 +762,16 @@ mod tests {
         let mut side: Vec<usize> = vec![];
         let cfg = PartitionConfig::default();
         let mut rng = Pcg32::seeded(5);
-        assert_eq!(fm_refine(&g, &mut side, 0.5, &vec![-1i8; g.vertex_count()], &cfg, &mut rng), 0);
+        assert_eq!(fm_refine(&g, &mut side, 0.5, &vec![-1i32; g.vertex_count()], &cfg, &mut rng), 0);
     }
 
     #[test]
     fn pinned_vertices_never_move() {
         let g = ladder(6); // 12 vertices
         let mut side: Vec<usize> = (0..12).map(|v| v % 2).collect();
-        let mut fixed = vec![-1i8; 12];
-        fixed[0] = side[0] as i8;
-        fixed[7] = side[7] as i8;
+        let mut fixed = vec![-1i32; 12];
+        fixed[0] = side[0] as i32;
+        fixed[7] = side[7] as i32;
         let cfg = PartitionConfig::default();
         let mut rng = Pcg32::seeded(6);
         fm_refine(&g, &mut side, 0.5, &fixed, &cfg, &mut rng);
@@ -561,7 +809,7 @@ mod tests {
             let gb = ladder_weighted(12, 1 << 20);
             let mut rng_a = Pcg32::seeded(seed);
             let mut rng_b = Pcg32::seeded(seed);
-            let fixed = vec![-1i8; 24];
+            let fixed = vec![-1i32; 24];
             let ca = fm_refine(&ga, &mut side_a, 0.5, &fixed, &cfg, &mut rng_a);
             let cb = fm_refine(&gb, &mut side_b, 0.5, &fixed, &cfg, &mut rng_b);
             assert_eq!(side_a, side_b, "seed {seed}: scaled moves must match");
@@ -579,7 +827,7 @@ mod tests {
         let before = quality::edge_cut(&g, &side);
         let cfg = PartitionConfig::default();
         let mut rng = Pcg32::seeded(2);
-        let after = fm_refine(&g, &mut side, 0.5, &vec![-1i8; 32], &cfg, &mut rng);
+        let after = fm_refine(&g, &mut side, 0.5, &vec![-1i32; 32], &cfg, &mut rng);
         assert!(after < before / 4, "cut {before} -> {after} should collapse");
         assert_eq!(after, quality::edge_cut(&g, &side));
     }
@@ -654,6 +902,102 @@ mod tests {
         assert_eq!(b.pop_best(), Some(2));
         assert_eq!(b.pop_best(), Some(3));
         assert_eq!(b.pop_best(), None);
+    }
+
+    #[test]
+    fn kway_two_way_improves_bad_partition() {
+        let g = ladder(8);
+        let mut parts: Vec<usize> = (0..16).map(|v| v % 2).collect();
+        let before = quality::edge_cut(&g, &parts);
+        let cfg = PartitionConfig::default();
+        let after = kway_refine(&g, &mut parts, &[0.5, 0.5], &vec![-1i32; 16], &cfg);
+        assert!(after < before, "cut {before} -> {after} should improve");
+        assert_eq!(after, quality::edge_cut(&g, &parts), "returned cut must match");
+        let w0 = parts.iter().filter(|&&p| p == 0).count();
+        assert!((6..=10).contains(&w0), "w0 {w0} violates 50% ± slack");
+    }
+
+    fn cliques(k: usize, size: usize) -> MetisGraph {
+        // k cliques (heavy internal edges) joined in a ring by single
+        // light edges: the optimal k-way cut is the k ring edges.
+        let n = k * size;
+        let mut adj = vec![Vec::new(); n];
+        for c in 0..k {
+            for i in 0..size {
+                for j in (i + 1)..size {
+                    let (a, b) = (c * size + i, c * size + j);
+                    adj[a].push((b, 10));
+                    adj[b].push((a, 10));
+                }
+            }
+            let a = c * size;
+            let b = ((c + 1) % k) * size + 1;
+            adj[a].push((b, 1));
+            adj[b].push((a, 1));
+        }
+        MetisGraph::from_adj(vec![1; n], adj)
+    }
+
+    #[test]
+    fn kway_restores_perturbed_optimum() {
+        let g = cliques(4, 6);
+        let optimal_parts: Vec<usize> = (0..24).map(|v| v / 6).collect();
+        let mut parts = optimal_parts.clone();
+        let optimal = quality::edge_cut(&g, &parts);
+        // Push one vertex from each clique into the next part: balance is
+        // preserved, so only positive-gain moves can restore the optimum.
+        for c in 0..4 {
+            parts[c * 6 + 2] = (c + 1) % 4;
+        }
+        let cfg = PartitionConfig::default();
+        let after = kway_refine(&g, &mut parts, &[0.25; 4], &vec![-1i32; 24], &cfg);
+        assert_eq!(after, optimal);
+        assert_eq!(parts, optimal_parts);
+    }
+
+    #[test]
+    fn kway_restores_balance_from_degenerate_assignment() {
+        // Everything in part 0: no boundary exists, so the out-of-band
+        // seeding path must stage interior vertices for balance moves.
+        let g = ladder(9); // 18 unit vertices
+        let mut parts = vec![0usize; 18];
+        let cfg = PartitionConfig::default();
+        let after = kway_refine(&g, &mut parts, &[1.0 / 3.0; 3], &vec![-1i32; 18], &cfg);
+        assert_eq!(after, quality::edge_cut(&g, &parts));
+        for p in 0..3 {
+            let w = parts.iter().filter(|&&q| q == p).count();
+            assert!((4..=8).contains(&w), "part {p} weight {w} out of band");
+        }
+    }
+
+    #[test]
+    fn kway_pinned_vertices_never_move() {
+        let g = cliques(3, 4);
+        let mut parts: Vec<usize> = (0..12).map(|v| v / 4).collect();
+        // Pin two vertices into the "wrong" part: refinement must leave
+        // them and still return the true cut of the final assignment.
+        parts[1] = 1;
+        parts[5] = 2;
+        let mut fixed = vec![-1i32; 12];
+        fixed[1] = 1;
+        fixed[5] = 2;
+        let cfg = PartitionConfig::default();
+        let after = kway_refine(&g, &mut parts, &[1.0 / 3.0; 3], &fixed, &cfg);
+        assert_eq!(parts[1], 1);
+        assert_eq!(parts[5], 2);
+        assert_eq!(after, quality::edge_cut(&g, &parts));
+    }
+
+    #[test]
+    fn kway_degenerate_inputs_noop() {
+        let g = MetisGraph::empty();
+        let mut parts: Vec<usize> = vec![];
+        let cfg = PartitionConfig::default();
+        assert_eq!(kway_refine(&g, &mut parts, &[0.5, 0.5], &[], &cfg), 0);
+        // k = 1: nothing to refine, cut reported as-is.
+        let g = ladder(4);
+        let mut parts = vec![0usize; 8];
+        assert_eq!(kway_refine(&g, &mut parts, &[1.0], &vec![-1i32; 8], &cfg), 0);
     }
 
     #[test]

@@ -59,7 +59,7 @@ mod tests {
     #[test]
     fn builtin_cell_counts_pin_the_sweeps() {
         let count = |name: &str| load_builtin(name).unwrap().cells().unwrap().len();
-        assert_eq!(count("open-poisson"), 5, "policy sweep");
+        assert_eq!(count("open-poisson"), 7, "policy sweep + incremental headline pair");
         assert_eq!(count("open-qos"), 4, "admission sweep");
         assert_eq!(count("open-fault"), 3, "recovery sweep");
         assert_eq!(count("capacity-sweep"), 6, "2 policies x 3 offered loads");

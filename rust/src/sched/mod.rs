@@ -168,6 +168,25 @@ impl<'a> DispatchCtx<'a> {
     }
 }
 
+/// Cumulative replanning effort of one policy instance over a session.
+///
+/// Filled in by replanning policies (windowed [`gp::GraphPartition`]);
+/// the engine copies it into [`crate::sim::SessionReport`] at drain so
+/// sessions report `replans` / `replan_cost_ms` rows. Unlike the
+/// cadence counters some policies keep internally (and may reset
+/// between idle periods), these totals are monotone over the whole
+/// session.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ReplanStats {
+    /// Replans that actually ran the partitioner.
+    pub replans: u64,
+    /// Replans skipped because the frontier was unchanged since the
+    /// last replan (the incremental path's no-change fast exit).
+    pub skipped: u64,
+    /// Total wall-clock nanoseconds spent inside replanning.
+    pub cost_ns: u64,
+}
+
 /// Builds immutable [`Plan`] artifacts — the offline half of a policy.
 ///
 /// The paper's gp policy does all of its work here ("makes a singular
@@ -264,6 +283,12 @@ pub trait Scheduler: Planner {
 
     /// Lifecycle: every submitted job has drained.
     fn on_drain(&mut self) {}
+
+    /// Cumulative replanning effort so far (see [`ReplanStats`]).
+    /// Policies that never replan keep the default all-zero stats.
+    fn replan_stats(&self) -> ReplanStats {
+        ReplanStats::default()
+    }
 
     /// True for policies whose decisions are fixed before execution.
     fn is_offline(&self) -> bool {
@@ -389,6 +414,7 @@ mod tests {
         assert_eq!(s.on_device_up(1), 0);
         s.on_job_drain(0);
         s.on_drain();
+        assert_eq!(s.replan_stats(), ReplanStats::default());
         assert!(!s.is_offline());
         assert_eq!(s.fingerprint(), plan::fnv1a(b"fixed"));
     }

@@ -15,6 +15,9 @@
 //!   tolerance and partitioner seed 7;
 //! * `"gp:window=64"` — windowed gp: re-partition the not-yet-dispatched
 //!   frontier every 64 task completions (reported as `gp-window`);
+//! * `"gp:window=64,incremental=0"` — windowed gp with from-scratch
+//!   replans (the default `incremental=1` warm-starts each replan from
+//!   the previous assignment and skips no-change windows);
 //! * `"gp:node-weight=cpu"` — node-weight policy `gpu` | `cpu` | `mean`;
 //! * `"cpu-only"`, `"gpu-only"`, `"pin:device=2"` — pin every task to
 //!   one device.
@@ -193,6 +196,7 @@ fn build_gp(p: &mut SchedParams) -> Result<Box<dyn super::Scheduler>> {
         epsilon: p.f64("epsilon", defaults.epsilon)?,
         seed: p.u64("seed", defaults.seed)?,
         window,
+        incremental: p.u64("incremental", 1)? != 0,
     };
     Ok(Box::new(GraphPartition::new(cfg)))
 }
@@ -214,7 +218,8 @@ impl SchedulerRegistry {
                 },
                 Entry {
                     name: "gp",
-                    help: "graph partition [epsilon=F, seed=N, window=N, node-weight=gpu|cpu|mean]",
+                    help: "graph partition [epsilon=F, seed=N, window=N, incremental=0|1, \
+                           node-weight=gpu|cpu|mean]",
                     build: build_gp,
                 },
                 Entry {
@@ -313,6 +318,17 @@ mod tests {
             seeded.fingerprint(),
             "same spec, same fingerprint"
         );
+    }
+
+    #[test]
+    fn gp_incremental_param() {
+        let reg = SchedulerRegistry::builtin();
+        let on = reg.create("gp:window=64").unwrap();
+        let explicit = reg.create("gp:window=64,incremental=1").unwrap();
+        let off = reg.create("gp:window=64,incremental=0").unwrap();
+        assert_eq!(on.fingerprint(), explicit.fingerprint(), "incremental defaults to 1");
+        assert_ne!(on.fingerprint(), off.fingerprint(), "arms must not share plan caches");
+        assert!(reg.create("gp:incremental=x").is_err(), "bad value");
     }
 
     #[test]

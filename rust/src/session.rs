@@ -214,6 +214,8 @@ impl SchedSession {
         self.report.useful_work_ms += batch.useful_work_ms;
         self.report.executed_work_ms += batch.executed_work_ms;
         self.report.recovery_replans += batch.recovery_replans;
+        self.report.replans += batch.replans;
+        self.report.replan_cost_ms += batch.replan_cost_ms;
         &self.report.jobs[first..]
     }
 

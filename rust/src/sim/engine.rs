@@ -183,6 +183,10 @@ pub(crate) struct JobInput<'a> {
     /// ([`StreamConfig::effective_budget_ms`]); infinite = never
     /// rejected.
     pub budget_ms: f64,
+    /// Whether the plan came from the shared [`PlanCache`] (threaded to
+    /// the retire sink so session hit/miss accounting survives the lazy
+    /// source's out-of-order drains).
+    pub cache_hit: bool,
 }
 
 impl<'a> JobInput<'a> {
@@ -197,6 +201,7 @@ impl<'a> JobInput<'a> {
             qos: JobQos::default(),
             est_work_ms: 0.0,
             budget_ms: f64::INFINITY,
+            cache_hit: false,
         }
     }
 }
@@ -212,11 +217,18 @@ pub(crate) trait JobSource<'a> {
     /// Submit time of job `j` on the session clock.
     fn submit_ms(&self, j: JobId) -> f64;
     /// Materialize job `j`'s input (called exactly once per job, in
-    /// arrival order).
-    fn take(&mut self, j: JobId) -> JobInput<'a>;
+    /// arrival order). The scheduler is the session policy — a lazy
+    /// source may build plans through it on demand.
+    fn take(&mut self, j: JobId, scheduler: &mut dyn Scheduler) -> JobInput<'a>;
+    /// Resident footprint of the source itself (bytes), folded into the
+    /// engine's memory high-water so boxed-vs-lazy feeds are comparable.
+    fn bytes(&self) -> u64;
 }
 
-/// Pre-materialized inputs (the classic `simulate_open` path).
+/// Pre-materialized inputs: every `JobInput` boxed upfront, O(session)
+/// source memory. Kept as the single-job / closed-stream feed and as
+/// the reference the lazy [`StreamSource`] is regression-tested
+/// against.
 struct VecSource<'a> {
     inputs: Vec<Option<JobInput<'a>>>,
 }
@@ -228,8 +240,11 @@ impl<'a> JobSource<'a> for VecSource<'a> {
     fn submit_ms(&self, j: JobId) -> f64 {
         self.inputs[j].as_ref().expect("job not yet taken").submit_ms
     }
-    fn take(&mut self, j: JobId) -> JobInput<'a> {
+    fn take(&mut self, j: JobId, _scheduler: &mut dyn Scheduler) -> JobInput<'a> {
         self.inputs[j].take().expect("each job taken exactly once")
+    }
+    fn bytes(&self) -> u64 {
+        self.inputs.len() as u64 * std::mem::size_of::<Option<JobInput>>() as u64
     }
 }
 
@@ -254,7 +269,7 @@ impl<'a> JobSource<'a> for TemplateSource<'a> {
     fn submit_ms(&self, j: JobId) -> f64 {
         self.times[j]
     }
-    fn take(&mut self, j: JobId) -> JobInput<'a> {
+    fn take(&mut self, j: JobId, _scheduler: &mut dyn Scheduler) -> JobInput<'a> {
         JobInput {
             dag: self.dag,
             plan: Arc::clone(&self.plan),
@@ -263,7 +278,64 @@ impl<'a> JobSource<'a> for TemplateSource<'a> {
             qos: self.qos,
             est_work_ms: self.est_work_ms,
             budget_ms: self.budget_ms,
+            // Every replay after job 0 reuses the shared plan.
+            cache_hit: j != 0,
         }
+    }
+    fn bytes(&self) -> u64 {
+        self.times.len() as u64 * std::mem::size_of::<f64>() as u64
+    }
+}
+
+/// Lazy multi-DAG feed for the open path: job `j`'s input is
+/// materialized at its arrival event — the plan pulled through the
+/// shared [`PlanCache`] (building via the policy on a miss), QoS and
+/// work estimates derived on the spot — instead of boxing every
+/// [`JobInput`] upfront. The source's resident footprint is the
+/// submit-time vector plus the caller's QoS slice, so the engine's
+/// O(in-flight) slab memory story extends to the classic
+/// [`simulate_open`] path.
+struct StreamSource<'a> {
+    dags: &'a [Dag],
+    times: Vec<f64>,
+    /// Per-job QoS; empty = all defaults.
+    qos: &'a [JobQos],
+    stream: &'a StreamConfig,
+    platform: &'a Platform,
+    model: &'a dyn PerfModel,
+    cache: &'a mut PlanCache,
+}
+
+impl<'a> JobSource<'a> for StreamSource<'a> {
+    fn total(&self) -> usize {
+        self.times.len()
+    }
+    fn submit_ms(&self, j: JobId) -> f64 {
+        self.times[j]
+    }
+    fn take(&mut self, j: JobId, scheduler: &mut dyn Scheduler) -> JobInput<'a> {
+        let dags = self.dags;
+        let dag = &dags[j];
+        let platform = self.platform;
+        let model = self.model;
+        let key = PlanKey::of(dag, platform, model, scheduler);
+        let (plan, hit, build_ns) =
+            self.cache.get_or_build(key, || scheduler.build_plan(dag, platform, model));
+        let q = self.qos.get(j).copied().unwrap_or_default();
+        JobInput {
+            dag,
+            plan,
+            submit_ms: self.times[j],
+            build_ns,
+            qos: q,
+            est_work_ms: est_total_work_ms(dag, platform, model),
+            budget_ms: self.stream.effective_budget_ms(&q),
+            cache_hit: hit,
+        }
+    }
+    fn bytes(&self) -> u64 {
+        (self.times.len() * std::mem::size_of::<f64>()
+            + self.qos.len() * std::mem::size_of::<JobQos>()) as u64
     }
 }
 
@@ -282,6 +354,8 @@ struct JobRun<'a> {
     est_work_ms: f64,
     budget_ms: f64,
     rejected: bool,
+    /// Plan served from the shared cache (see [`JobInput::cache_hit`]).
+    cache_hit: bool,
     plan_ns: u64,
     decision_ns: u64,
     /// Task-arena range start; `usize::MAX` before admission (pending
@@ -543,6 +617,7 @@ impl<'a> EngineCore<'a> {
             est_work_ms: input.est_work_ms,
             budget_ms: input.budget_ms,
             rejected: false,
+            cache_hit: input.cache_hit,
             plan_ns: input.build_ns,
             decision_ns: 0,
             base: usize::MAX,
@@ -573,7 +648,8 @@ impl<'a> EngineCore<'a> {
             + self.tasks.bytes()
             + self.events.len() as u64 * std::mem::size_of::<Event>() as u64
             + self.dir.len() as u64 * 16
-            + (self.avail.len() + self.pending.len()) as u64 * 8;
+            + (self.avail.len() + self.pending.len()) as u64 * 8
+            + self.source.bytes();
         self.stats.mem_high_water_bytes = self.stats.mem_high_water_bytes.max(bytes);
     }
 
@@ -929,10 +1005,11 @@ impl<'a> EngineCore<'a> {
     }
 
     /// Remove job `j` from the slab, free its task-arena range and data
-    /// handles for recycling, and hand its report to the sink. After
-    /// this the engine holds no per-job state for `j` — what keeps a
-    /// million-job session's memory O(in-flight).
-    fn retire(&mut self, j: JobId, sink: &mut dyn FnMut(JobId, RunReport, JobTiming)) {
+    /// handles for recycling, and hand its report (plus the plan
+    /// cache-hit flag) to the sink. After this the engine holds no
+    /// per-job state for `j` — what keeps a million-job session's
+    /// memory O(in-flight).
+    fn retire(&mut self, j: JobId, sink: &mut dyn FnMut(JobId, RunReport, JobTiming, bool)) {
         let s = self.slot_of.remove(&j).expect("retired job is live");
         let job = self.jobs[s].take().expect("retired job is live");
         self.free_slots.push(s);
@@ -973,7 +1050,7 @@ impl<'a> EngineCore<'a> {
             deadline_ms: job.deadline_abs,
             rejected: job.rejected,
         };
-        sink(j, report, timing);
+        sink(j, report, timing, job.cache_hit);
     }
 
     /// `EV_DEV_DOWN`: park the device (Down or Draining), and for a kill
@@ -1149,7 +1226,7 @@ impl<'a> EngineCore<'a> {
     fn run(
         mut self,
         scheduler: &mut dyn Scheduler,
-        sink: &mut dyn FnMut(JobId, RunReport, JobTiming),
+        sink: &mut dyn FnMut(JobId, RunReport, JobTiming, bool),
     ) -> RecoveryStats {
         self.sched_name = scheduler.name();
         let total = self.source.total();
@@ -1167,7 +1244,7 @@ impl<'a> EngineCore<'a> {
                         let at = self.source.submit_ms(j + 1);
                         self.events.schedule((Ord64(at), EV_ARRIVAL, j + 1, 0, 0));
                     }
-                    let input = self.source.take(j);
+                    let input = self.source.take(j, scheduler);
                     self.alloc_slot(j, input);
                     if self.inflight < self.queue {
                         self.admit(scheduler, j, t);
@@ -1281,14 +1358,15 @@ impl<'a> EngineCore<'a> {
     fn run_collect(
         self,
         scheduler: &mut dyn Scheduler,
-    ) -> (Vec<(RunReport, JobTiming)>, RecoveryStats) {
-        let mut out: Vec<(JobId, RunReport, JobTiming)> = Vec::new();
+    ) -> (Vec<(RunReport, JobTiming, bool)>, RecoveryStats) {
+        let mut out: Vec<(JobId, RunReport, JobTiming, bool)> = Vec::new();
         let stats = {
-            let mut sink = |j: JobId, r: RunReport, ti: JobTiming| out.push((j, r, ti));
+            let mut sink =
+                |j: JobId, r: RunReport, ti: JobTiming, hit: bool| out.push((j, r, ti, hit));
             self.run(scheduler, &mut sink)
         };
         out.sort_by_key(|t| t.0);
-        (out.into_iter().map(|t| (t.1, t.2)).collect(), stats)
+        (out.into_iter().map(|t| (t.1, t.2, t.3)).collect(), stats)
     }
 }
 
@@ -1305,7 +1383,10 @@ pub(crate) fn run_jobs<'a>(
     admit_policy: AdmissionPolicy,
 ) -> (Vec<(RunReport, JobTiming)>, RecoveryStats) {
     let source = Box::new(VecSource { inputs: inputs.into_iter().map(Some).collect() });
-    EngineCore::new(source, platform, model, config, queue, admit_policy).run_collect(scheduler)
+    let (results, stats) =
+        EngineCore::new(source, platform, model, config, queue, admit_policy).run_collect(scheduler);
+    // Boxed callers track hit flags themselves (they built the inputs).
+    (results.into_iter().map(|(r, ti, _)| (r, ti)).collect(), stats)
 }
 
 /// Simulate `dag` under `scheduler`, planning from scratch. See module
@@ -1405,6 +1486,9 @@ pub fn simulate_open_qos(
     let mut session = SessionReport::new(scheduler.name());
     session.class_names = class_names.to_vec();
     let mut stats = RecoveryStats::default();
+    // Replanning effort is read as a delta so a policy reused across
+    // sessions reports only this session's replans.
+    let replan0 = scheduler.replan_stats();
     match stream.arrival.submit_times_ms(dags.len()) {
         // Closed loop: sequential fresh cores, back-to-back clock.
         // Admission never queues, so QoS only tags the timings. With a
@@ -1459,37 +1543,25 @@ pub fn simulate_open_qos(
                 session.push_timed(report, hit, timing);
             }
         }
-        // Open system: one shared core, every job tagged.
+        // Open system: one shared core, every job tagged. The lazy
+        // [`StreamSource`] materializes each input at its arrival event
+        // (plans pulled through `cache` on demand) instead of boxing
+        // every `JobInput` upfront, so source memory stays flat.
         Some(times) => {
-            let mut inputs = Vec::with_capacity(dags.len());
-            let mut hits = Vec::with_capacity(dags.len());
-            for (i, (dag, &submit_ms)) in dags.iter().zip(&times).enumerate() {
-                let key = PlanKey::of(dag, platform, model, scheduler);
-                let (plan, hit, build_ns) =
-                    cache.get_or_build(key, || scheduler.build_plan(dag, platform, model));
-                let q = qos_of(i);
-                inputs.push(JobInput {
-                    dag,
-                    plan,
-                    submit_ms,
-                    build_ns,
-                    qos: q,
-                    est_work_ms: est_total_work_ms(dag, platform, model),
-                    budget_ms: stream.effective_budget_ms(&q),
-                });
-                hits.push(hit);
-            }
-            let (results, run_stats) = run_jobs(
-                inputs,
-                scheduler,
+            let source = Box::new(StreamSource {
+                dags,
+                times,
+                qos,
+                stream,
                 platform,
                 model,
-                config,
-                stream.queue,
-                stream.admit,
-            );
+                cache,
+            });
+            let (results, run_stats) =
+                EngineCore::new(source, platform, model, config, stream.queue, stream.admit)
+                    .run_collect(scheduler);
             stats = run_stats;
-            for ((report, timing), hit) in results.into_iter().zip(hits) {
+            for (report, timing, hit) in results {
                 session.push_timed(report, hit, timing);
             }
         }
@@ -1501,6 +1573,9 @@ pub fn simulate_open_qos(
     session.recovery_replans = stats.recovery_replans;
     session.events_processed = stats.events_processed;
     session.mem_high_water_bytes = stats.mem_high_water_bytes;
+    let rs = scheduler.replan_stats();
+    session.replans = rs.replans - replan0.replans;
+    session.replan_cost_ms = rs.cost_ns.saturating_sub(replan0.cost_ns) as f64 / 1e6;
     // Useful work = the busy time that survived to the drain; with a
     // fault stream `executed == useful + wasted` balances exactly.
     session.useful_work_ms =
@@ -1557,9 +1632,10 @@ pub fn simulate_capacity(
         build_ns,
     });
     let mut session = SessionReport::streaming(scheduler.name());
+    let replan0 = scheduler.replan_stats();
     let stats = {
-        let mut sink = |id: JobId, report: RunReport, timing: JobTiming| {
-            session.push_streamed(report, id != 0, timing);
+        let mut sink = |_id: JobId, report: RunReport, timing: JobTiming, hit: bool| {
+            session.push_streamed(report, hit, timing);
         };
         EngineCore::new(source, platform, model, config, stream.queue, stream.admit)
             .run(scheduler, &mut sink)
@@ -1571,6 +1647,9 @@ pub fn simulate_capacity(
     session.recovery_replans = stats.recovery_replans;
     session.events_processed = stats.events_processed;
     session.mem_high_water_bytes = stats.mem_high_water_bytes;
+    let rs = scheduler.replan_stats();
+    session.replans = rs.replans - replan0.replans;
+    session.replan_cost_ms = rs.cost_ns.saturating_sub(replan0.cost_ns) as f64 / 1e6;
     if let Some(tally) = session.tally.as_mut() {
         tally.max_concurrent = stats.max_inflight as usize;
     }
@@ -1942,5 +2021,88 @@ mod tests {
         for (x, y) in a.timings.iter().zip(&b.timings) {
             assert_eq!(x.complete_ms, y.complete_ms);
         }
+    }
+
+    #[test]
+    fn lazy_open_source_beats_boxed_inputs_on_memory() {
+        // The open path's lazy StreamSource must (a) reproduce the boxed
+        // VecSource schedule bit-for-bit and (b) strictly lower the
+        // memory high-water, since the boxed feed holds every JobInput
+        // for the whole session while the lazy feed holds only the
+        // submit-time vector.
+        let platform = Platform::paper();
+        let model = CalibratedModel::default();
+        let dags: Vec<Dag> =
+            (0..48).map(|i| workloads::chain(3 + (i % 4), KernelKind::Ma, 256)).collect();
+        let stream = StreamConfig::open(ArrivalProcess::Poisson { rate_jps: 400.0, seed: 7 }, 4);
+        let cfg = SimConfig::default();
+
+        // Boxed reference arm: the pre-satellite path, inputs
+        // materialized upfront through the same cache logic.
+        let mut s = sched::by_name("heft").unwrap();
+        let mut cache = crate::sched::PlanCache::new();
+        let times = stream.arrival.submit_times_ms(dags.len()).expect("poisson is timed");
+        let mut inputs = Vec::with_capacity(dags.len());
+        for (dag, &submit_ms) in dags.iter().zip(&times) {
+            let key = crate::sched::PlanKey::of(dag, &platform, &model, s.as_ref());
+            let (plan, hit, build_ns) =
+                cache.get_or_build(key, || s.build_plan(dag, &platform, &model));
+            let q = JobQos::default();
+            inputs.push(JobInput {
+                dag,
+                plan,
+                submit_ms,
+                build_ns,
+                qos: q,
+                est_work_ms: est_total_work_ms(dag, &platform, &model),
+                budget_ms: stream.effective_budget_ms(&q),
+                cache_hit: hit,
+            });
+        }
+        let (boxed, boxed_stats) =
+            run_jobs(inputs, s.as_mut(), &platform, &model, &cfg, stream.queue, stream.admit);
+
+        // Lazy arm: the shipping simulate_open path.
+        let mut s2 = sched::by_name("heft").unwrap();
+        let mut cache2 = crate::sched::PlanCache::new();
+        let session =
+            simulate_open(&dags, s2.as_mut(), &platform, &model, &cfg, &stream, &mut cache2);
+
+        assert_eq!(session.job_count(), boxed.len());
+        for ((r, ti), (lr, lt)) in
+            boxed.iter().zip(session.jobs.iter().zip(&session.timings))
+        {
+            assert_eq!(r.makespan_ms, lr.makespan_ms, "schedules must match");
+            assert_eq!(ti.complete_ms, lt.complete_ms);
+        }
+        assert!(
+            session.mem_high_water_bytes < boxed_stats.mem_high_water_bytes,
+            "lazy source must beat the boxed feed: {} vs {}",
+            session.mem_high_water_bytes,
+            boxed_stats.mem_high_water_bytes,
+        );
+    }
+
+    #[test]
+    fn open_session_reports_replan_effort() {
+        // A windowed gp session must surface its replan count and cost
+        // through SessionReport; a static policy reports zero.
+        let platform = Platform::paper();
+        let model = CalibratedModel::default();
+        let dags: Vec<Dag> =
+            (0..8).map(|_| workloads::phased(6, 2, 256)).collect();
+        let stream = StreamConfig::open(ArrivalProcess::Poisson { rate_jps: 400.0, seed: 7 }, 4);
+        let cfg = SimConfig::default();
+        let mut run = |name: &str| {
+            let mut s = sched::by_name(name).unwrap();
+            let mut cache = crate::sched::PlanCache::new();
+            simulate_open(&dags, s.as_mut(), &platform, &model, &cfg, &stream, &mut cache)
+        };
+        let gp = run("gp:window=4");
+        assert!(gp.replans >= 1, "windowed gp must replan at least once");
+        assert!(gp.replan_cost_ms >= 0.0);
+        let heft = run("heft");
+        assert_eq!(heft.replans, 0, "static policies never replan");
+        assert_eq!(heft.replan_cost_ms, 0.0);
     }
 }

@@ -330,6 +330,16 @@ pub struct SessionReport {
     /// [`crate::sched::Scheduler::on_device_up`] hooks.
     pub recovery_replans: u64,
 
+    // --- replanning effort (windowed gp) -----------------------------
+    /// Replans the policy actually ran over the session
+    /// ([`crate::sched::ReplanStats::replans`]); 0 for non-replanning
+    /// policies.
+    pub replans: u64,
+    /// Total wall-clock milliseconds spent replanning
+    /// ([`crate::sched::ReplanStats::cost_ns`], widened to ms) — the
+    /// incremental-replanning headline metric.
+    pub replan_cost_ms: f64,
+
     // --- capacity metrics -------------------------------------------
     /// Streaming accumulator ([`SessionReport::streaming`]); `None` for
     /// materialized sessions. Boxed: the tally is bigger than the rest
@@ -345,7 +355,7 @@ pub struct SessionReport {
 /// [`SessionReport::scalar_metrics`] emits them. The scenario harness
 /// keys its merged mean/stddev/CI statistics by these names, and the
 /// `BENCH_scenarios.json` schema check pins them.
-pub const SCALAR_METRICS: [&str; 11] = [
+pub const SCALAR_METRICS: [&str; 13] = [
     "span_ms",
     "mean_sojourn_ms",
     "p50_sojourn_ms",
@@ -357,6 +367,8 @@ pub const SCALAR_METRICS: [&str; 11] = [
     "deadline_hit_rate",
     "rejected_jobs",
     "max_concurrent_jobs",
+    "replans",
+    "replan_cost_ms",
 ];
 
 impl SessionReport {
@@ -703,6 +715,8 @@ impl SessionReport {
             ("deadline_hit_rate", self.deadline_hit_rate()),
             ("rejected_jobs", self.rejected_count() as f64),
             ("max_concurrent_jobs", self.max_concurrent_jobs() as f64),
+            ("replans", self.replans as f64),
+            ("replan_cost_ms", self.replan_cost_ms),
         ]
     }
 
