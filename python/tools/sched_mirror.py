@@ -1316,6 +1316,89 @@ def default_qos():
     return dict(cls=0, prio=0, deadline=math.inf, budget=math.inf)
 
 
+def f64_total_key(x):
+    """Sort key matching Rust ``f64::total_cmp`` (IEEE-754 totalOrder):
+    -NaN < -inf < … < -0.0 < +0.0 < … < +inf < +NaN. Plain Python
+    ``<`` would raise nothing but order NaN arbitrarily."""
+    import struct
+
+    bits = struct.unpack("<q", struct.pack("<d", x))[0]
+    return bits ^ 0x7FFFFFFFFFFFFFFF if bits < 0 else bits
+
+
+class AdmissionCore:
+    """Bit-exact twin of ``sim::admission::AdmissionCore``: the bounded
+    admission window both Rust engines (simulated and real-executor)
+    share. Pops are ordered by the policy's composite key
+    ``(priority, deadline, est_work, submit_seq)`` under totalOrder
+    float comparison, so the pop sequence here must match the Rust core
+    exactly — including NaN keys, which sort last instead of raising."""
+
+    def __init__(self, capacity, policy):
+        self.policy = policy
+        self.capacity = max(capacity, 1)
+        self.inflight = 0
+        self.pending = []  # dict(job, prio, deadline_abs, est_work)
+
+    def has_slot(self):
+        return self.inflight < self.capacity
+
+    def note_admitted(self):
+        self.inflight += 1
+
+    def release_slot(self):
+        self.inflight = max(self.inflight - 1, 0)
+
+    def key_of(self, e):
+        if self.policy in ("fifo", "reject"):
+            return (0, f64_total_key(0.0), f64_total_key(0.0), e["job"])
+        if self.policy == "edf":
+            return (e["prio"], f64_total_key(e["deadline_abs"]), f64_total_key(0.0), e["job"])
+        if self.policy == "sjf":
+            return (e["prio"], f64_total_key(e["est_work"]), f64_total_key(0.0), e["job"])
+        raise ValueError(self.policy)
+
+    def push_pending(self, job, prio, deadline_abs, est_work):
+        self.pending.append(
+            dict(job=job, prio=prio, deadline_abs=deadline_abs, est_work=est_work)
+        )
+
+    def pop_pending(self):
+        if not self.pending:
+            return None
+        best = min(range(len(self.pending)), key=lambda i: self.key_of(self.pending[i]))
+        return self.pending.pop(best)["job"]
+
+    def remove_pending(self, job):
+        for i, e in enumerate(self.pending):
+            if e["job"] == job:
+                self.pending.pop(i)
+                return True
+        return False
+
+    def pending_len(self):
+        return len(self.pending)
+
+    def pending_est_work(self):
+        return sum(e["est_work"] for e in self.pending)
+
+    def predicts_reject(self, budget):
+        return (
+            self.policy == "reject"
+            and math.isfinite(budget)
+            and self.pending_est_work() > budget
+        )
+
+
+def serial_window_admit(submit, i, window, completes):
+    """Mirror of coordinator::serial_window_admit — the real engine's
+    pre-admission-core FIFO formula, kept as the bit-identity reference
+    for the queue=1 closed form."""
+    if i < window:
+        return submit
+    return max(submit, completes[i - window])
+
+
 def simulate_open_engine(
     jobs_in,
     policy,
@@ -1354,9 +1437,12 @@ def simulate_open_engine(
     mask_of = []
     avail = []
     events = make_equeue(equeue)
-    pending = []
-    state = dict(inflight=0, completed=0)
+    state = dict(completed=0)
     queue = max(queue, 1)
+    # The shared admission core (twin of sim::admission): slot
+    # accounting + the policy-ordered pending queue, same object the
+    # real executor's driver consumes on the Rust side.
+    adm = AdmissionCore(queue, admit)
     dev_state = ["up"] * k  # DeviceState mirror: up | draining | down
     stats = dict(
         failures=0, reexec=0, wasted=0.0, executed=0.0, replans=0,
@@ -1380,7 +1466,7 @@ def simulate_open_engine(
             + memw["live_tasks"] * 48
             + len(events) * 40
             + memw["live_handles"] * 24
-            + len(pending) * 8
+            + adm.pending_len() * 8
             # Source-footprint term (mirror of JobSource::bytes): the
             # Rust open path's lazy StreamSource holds one submit time
             # per job.
@@ -1438,22 +1524,6 @@ def simulate_open_engine(
                 events.schedule((at + down, EV_UP, dev, 0, 0))
         fault_state = dict(spec=fault, rng=frng, scripted=scripted, commits=[])
 
-    def pending_key(j):
-        st = jobs[j]
-        if admit in ("fifo", "reject"):
-            return (0, 0.0, 0.0, j)
-        if admit == "edf":
-            return (st["prio"], st["deadline_abs"], 0.0, j)
-        if admit == "sjf":
-            return (st["prio"], st["est_work"], 0.0, j)
-        raise ValueError(admit)
-
-    def pop_pending():
-        if not pending:
-            return None
-        best = min(range(len(pending)), key=lambda i: pending_key(pending[i]))
-        return pending.pop(best)
-
     def alloc(nbytes, mask, t):
         # New data exists no earlier than its job's admission instant.
         bytes_of.append(nbytes)
@@ -1508,8 +1578,8 @@ def simulate_open_engine(
         for v in range(n):
             if st["indeg"][v] == 0:
                 events.schedule((now, EV_READY, j, v, 0))
-        state["inflight"] += 1
-        stats["max_inflight"] = max(stats["max_inflight"], state["inflight"])
+        adm.note_admitted()
+        stats["max_inflight"] = max(stats["max_inflight"], adm.inflight)
         st["_nhandles"] = n + sum(len(hs) for hs in st["initial"])
         memw["live_tasks"] += n
         memw["live_handles"] += st["_nhandles"]
@@ -1727,17 +1797,12 @@ def simulate_open_engine(
         elif kind == EV_UP:
             device_up(j, t)
         elif kind == EV_ARRIVAL:
-            if state["inflight"] < queue:
+            if adm.has_slot():
                 memw["live_jobs"] += 1
                 admit_job(j, t)
             else:
                 budget = jobs[j]["budget"]
-                doomed = (
-                    admit == "reject"
-                    and budget != math.inf
-                    and sum(jobs[p]["est_work"] for p in pending) > budget
-                )
-                if doomed:
+                if adm.predicts_reject(budget):
                     # Predictive rejection: the pending backlog alone
                     # already exceeds this job's wait budget.
                     st = jobs[j]
@@ -1747,24 +1812,24 @@ def simulate_open_engine(
                     st["complete"] = t
                     state["completed"] += 1
                 else:
-                    pending.append(j)
+                    st = jobs[j]
+                    adm.push_pending(j, st["prio"], st["deadline_abs"], st["est_work"])
                     memw["live_jobs"] += 1
                     note_mem()
                     if budget != math.inf:
                         events.schedule((t + budget, EV_REJECT, j, 0, 0))
         elif kind == EV_DRAIN:
             if heap_epoch == jobs[j]["drain_epoch"]:
-                state["inflight"] -= 1
+                adm.release_slot()
                 state["completed"] += 1
                 memw["live_jobs"] -= 1
                 memw["live_tasks"] -= jobs[j]["dag"].node_count()
                 memw["live_handles"] -= jobs[j]["_nhandles"]
-                nxt = pop_pending()
+                nxt = adm.pop_pending()
                 if nxt is not None:
                     admit_job(nxt, t)
         elif kind == EV_REJECT:
-            if j in pending:
-                pending.remove(j)
+            if adm.remove_pending(j):
                 memw["live_jobs"] -= 1
                 st = jobs[j]
                 st["rejected"] = True
@@ -3710,6 +3775,90 @@ def run_checks():
           skip_pol.rstats["replans"] == 2 and skip_pol.rstats["skipped"] == 1,
           f"{skip_pol.rstats}")
 
+    print("shared admission core (twin of sim::admission)")
+    # Pop sequences pinned to the Rust unit tests bit-for-bit.
+    core = AdmissionCore(1, "fifo")
+    core.push_pending(2, 9, 1.0, 1.0)
+    core.push_pending(5, 0, 0.0, 0.0)
+    core.push_pending(3, 1, 0.5, 0.5)
+    check("fifo pops in arrival order regardless of keys",
+          [core.pop_pending() for _ in range(4)] == [2, 3, 5, None])
+    core = AdmissionCore(1, "edf")
+    core.push_pending(0, 1, 5.0, 0.0)
+    core.push_pending(1, 0, 90.0, 0.0)
+    core.push_pending(2, 0, 10.0, 0.0)
+    check("edf orders by priority then deadline",
+          [core.pop_pending() for _ in range(3)] == [2, 1, 0])
+    core = AdmissionCore(1, "sjf")
+    core.push_pending(0, 0, 0.0, 7.0)
+    core.push_pending(1, 0, 0.0, 2.0)
+    core.push_pending(2, 0, 0.0, 2.0)
+    check("sjf orders by work with job tiebreak",
+          [core.pop_pending() for _ in range(3)] == [1, 2, 0])
+    core = AdmissionCore(1, "sjf")
+    core.push_pending(0, 0, 0.0, float("nan"))
+    core.push_pending(1, 0, 0.0, 3.0)
+    core.push_pending(2, 0, 0.0, float("nan"))
+    check("nan keys sort last (totalOrder), job id breaks the nan tie",
+          [core.pop_pending() for _ in range(3)] == [1, 0, 2])
+    core = AdmissionCore(2, "reject")
+    core.note_admitted()
+    core.note_admitted()
+    core.push_pending(2, 0, math.inf, 30.0)
+    check("predictive reject fires only on finite exceeded budgets",
+          not core.predicts_reject(math.inf)
+          and core.predicts_reject(25.0)
+          and not core.predicts_reject(40.0)
+          and core.remove_pending(2)
+          and not core.remove_pending(2))
+
+    # Bit-identity of the two admission drivers: the real executor's
+    # event loop (arrivals drained before completions at each instant,
+    # pops from the shared core) must reproduce the serial-window
+    # closed form for FIFO — the ISSUE's queue=1 equivalence, plus the
+    # general serial queue=w case.
+    def core_window_admit(submits, services, queue):
+        core = AdmissionCore(queue, "fifo")
+        admit = [0.0] * len(submits)
+        completes = [0.0] * len(submits)
+        events = [(s, 0, i) for i, s in enumerate(submits)]
+        heapq.heapify(events)
+        prev_end = 0.0
+        def start(i, now):
+            nonlocal prev_end
+            core.note_admitted()
+            admit[i] = now
+            end = max(now, prev_end) + services[i]
+            prev_end = end
+            completes[i] = end
+            heapq.heappush(events, (end, 1, i))
+        while events:
+            now, kind, i = heapq.heappop(events)
+            if kind == 0:
+                if core.has_slot():
+                    start(i, now)
+                else:
+                    core.push_pending(i, 0, math.inf, services[i])
+            else:
+                core.release_slot()
+                nxt = core.pop_pending()
+                if nxt is not None:
+                    start(nxt, now)
+        return admit, completes
+    rng = pm.Pcg32.seeded(11)
+    submits = []
+    tacc = 0.0
+    for _ in range(40):
+        tacc += (rng.next_u32() % 1000) / 250.0
+        submits.append(tacc)
+    services = [1.0 + (rng.next_u32() % 1000) / 100.0 for _ in range(40)]
+    for w in (1, 2, 5):
+        admit, completes = core_window_admit(submits, services, w)
+        ref = [serial_window_admit(submits[i], i, w, completes)
+               for i in range(len(submits))]
+        check(f"admission-core driver == serial_window_admit (queue={w})",
+              admit == ref)
+
     print("ALL OK" if OK else "FAILURES PRESENT")
     return OK
 
@@ -3980,7 +4129,10 @@ def bench_json(jobs=8, window=12, size=1024, open_jobs=24, rate=220.0, queue=8):
         )
         lines.append(
             f'    {{"scenario": "{r["scenario"]}", "policy": "{r["policy"]}", '
-            f'"stream": "{r["stream"]}", "jobs": {r["jobs"]}, '
+            # The mirror can only produce simulated rows: real-engine
+            # rows are wall-clock measurements the Rust CLI appends
+            # under `bench stream --real`.
+            f'"stream": "{r["stream"]}", "engine": "sim", "jobs": {r["jobs"]}, '
             f'"makespan_ms": {r["makespan_ms"]:.6f}, "span_ms": {r["span_ms"]:.6f}, '
             f'"transfers": {r["transfers"]}, "plan_ns": {r["plan_ns"]}, '
             f'"first_plan_ns": {r["first_plan_ns"]}, "repeat_plan_ns": {r["repeat_plan_ns"]}, '

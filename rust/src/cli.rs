@@ -110,6 +110,12 @@ COMMANDS:
              \"fault:mtbf=500,mttr=80,seed=9\" or scripted
              \"fault:at=120:dev=1:down=50;refetch=2\"; drain=MS drains
              instead of killing)
+             [--real] appends a real-admit sweep: the work-stealing
+             PJRT executor runs paced multi-job streams under every
+             admission policy (fifo|edf|sjf|reject) through the same
+             shared admission core as the simulator, and the rows land
+             in the JSON tagged \"engine\": \"real\". Needs
+             `make artifacts`. [--real-size N] [--real-jobs N]
              `bench engine` streams a million identical chain jobs
              through the slab/arena engine core (memory stays
              O(in-flight); sojourns fold into a quantile sketch) and

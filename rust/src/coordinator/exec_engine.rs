@@ -1,17 +1,83 @@
-//! The threaded real-compute execution engine.
+//! The threaded real-compute execution engine: a Taskflow-style
+//! work-stealing, multi-job executor.
 //!
-//! Topology (per the paper's runtime): a coordinator owns global state —
-//! ready queue, MSI [`Directory`], per-memory-node [`HostStore`], transfer
-//! ledger — and one worker thread runs per device worker (the paper: 3 CPU
-//! workers + 1 GPU worker). Kernels execute for real through the shared
-//! PJRT [`crate::runtime::KernelRuntime`]; "bus transfers" are real buffer copies between
+//! Topology (per the paper's runtime): a coordinator owns the control
+//! plane — per-job DAG frontiers, the shared [`AdmissionCore`] window,
+//! per-device backlog estimates, transfer pricing — and one worker
+//! thread runs per device worker (the paper: 3 CPU workers + 1 GPU
+//! worker). Kernels execute for real through the per-device lanes of a
+//! [`RuntimeService`]; "bus transfers" are real buffer copies between
 //! per-node address spaces, counted exactly like the simulator counts
-//! them.
+//! them (the MSI [`Directory`] is the same type).
+//!
+//! ## Work stealing
+//!
+//! Dispatched tasks land in the *ready deque of the device the
+//! scheduler selected*. A worker of device `d`:
+//!
+//! 1. pops the **back** of its own deque (LIFO — the freshest task's
+//!    inputs are the likeliest still resident on `d`),
+//! 2. otherwise steals the **front-most unbound** task from victims
+//!    `(d+1) % k, (d+2) % k, …` (FIFO steal — the task its owner would
+//!    reach last, the classic deque discipline),
+//! 3. otherwise blocks on the pool condvar.
+//!
+//! A task is *bound* when the policy is offline
+//! ([`Scheduler::is_offline`]): a gp partition or a pin-all placement
+//! is the paper's artifact under test, so the executor must not
+//! second-guess it — bound tasks only ever run on their assigned
+//! device, which keeps real transfer counts and assignments
+//! bit-identical to the simulator for pinned policies. Online policies
+//! (eager, dmda, windowed gp) produce stealable tasks; the report
+//! records the device that *actually* executed each one.
+//!
+//! ## Admission sharing
+//!
+//! Open-arrival streams ([`ExecEngine::run_stream`]) drive the same
+//! [`AdmissionCore`] as the simulator: a bounded slot window
+//! ([`StreamConfig::queue`]) plus a policy-ordered pending queue, so
+//! `admit=fifo|edf|sjf|reject` all work on real hardware and the
+//! resulting sojourn / queueing-delay / deadline numbers are
+//! comparable to simulated sessions under the same
+//! [`StreamConfig`] grammar. Ready tasks of **all** admitted jobs
+//! interleave on the worker pool.
+//!
+//! ## What is (and is not) deterministic
+//!
+//! Deterministic across runs:
+//! * admission *values* for `queue=1, admit=fifo`: job `i` admits at
+//!   exactly `max(submit_i, complete_{i-1})` ([`serial_window_admit`]),
+//!   bit-for-bit the serial rule, because admit times are derived from
+//!   the virtual submit/complete timestamps rather than from when the
+//!   coordinator happened to process a channel message;
+//! * assignments and transfer counts for offline (bound) policies: the
+//!   plan pins every task, stealing is disabled, and MSI transfer
+//!   counts are order-independent for a fixed placement;
+//! * the set of jobs and the per-job work accounting identity
+//!   `executed == useful + wasted`.
+//!
+//! Not deterministic: wall-clock durations, steal victims, the
+//! interleaving of tasks from different jobs, and (for online
+//! policies) which device executes a stealable task — that is the
+//! machine being real.
+//!
+//! ## Failure propagation
+//!
+//! A kernel error inside a worker is *data*, not a worker panic: the
+//! worker sends the error through the completion channel and keeps
+//! serving other tasks. The coordinator marks the owning job failed,
+//! purges its queued tasks, lets its in-flight tasks drain, and
+//! reports it with [`crate::sim::JobTiming::failed`] set — the session
+//! continues, other jobs are unaffected, and the job's partial busy
+//! time is accounted as wasted work. (Single-job [`ExecEngine::run`]
+//! surfaces the failure as an error.) The engine never deadlocks on a
+//! missing artifact.
 
-use std::collections::HashMap;
-use std::sync::mpsc;
-use std::sync::Arc;
-use std::time::Instant;
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{self, RecvTimeoutError};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -22,7 +88,10 @@ use crate::perfmodel::PerfModel;
 use crate::platform::Platform;
 use crate::runtime::RuntimeService;
 use crate::sched::{DispatchCtx, InputInfo, Plan, PlanCache, PlanKey, Planner as _, Scheduler};
-use crate::sim::{JobTiming, RunReport, SessionReport, StreamConfig, TraceEvent};
+use crate::sim::{
+    est_total_work_ms, AdmissionCore, AdmissionEntry, JobQos, JobTiming, RunReport,
+    SessionReport, StreamConfig, TraceEvent,
+};
 
 /// Options for a real run.
 #[derive(Debug, Clone)]
@@ -49,23 +118,903 @@ pub struct ExecEngine {
     platform: Platform,
 }
 
-enum WorkerMsg {
-    Run {
-        task: NodeId,
-        kernel: KernelKind,
-        n: u32,
-        inputs: Vec<Vec<f32>>,
-    },
-    Stop,
+// ---------------------------------------------------------------------
+// Data plane
+// ---------------------------------------------------------------------
+
+/// Mutable data-plane state shared by the coordinator and every worker:
+/// the MSI directory plus the per-memory-node store. One lock guards
+/// both so an acquire/transfer/publish sequence is atomic.
+struct DataState {
+    dir: Directory,
+    store: HostStore,
 }
 
-struct Completion {
+/// Lock the data plane, recovering a poisoned guard: a panicking worker
+/// must not cascade into every other worker and the coordinator.
+fn lock_data(m: &Mutex<DataState>) -> MutexGuard<'_, DataState> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+// ---------------------------------------------------------------------
+// Worker pool
+// ---------------------------------------------------------------------
+
+/// One dispatched task sitting in a device's ready deque.
+struct ReadyTask {
+    job: usize,
     task: NodeId,
+    kernel: KernelKind,
+    n: u32,
+    /// Device the scheduler selected (deque placement + backlog key).
+    dev: usize,
+    /// Offline-policy placement is pinned: never stolen.
+    bound: bool,
+    /// Every input handle (all are fetched for coherence).
+    handles: Vec<DataHandle>,
+    /// The kernel math consumes the first `arity` handles.
+    arity: usize,
+    out: DataHandle,
+}
+
+/// What a worker reports back. A kernel error travels here as data —
+/// the worker thread survives and the coordinator decides job fate.
+struct Completion {
+    job: usize,
+    task: NodeId,
+    /// Device that actually executed (differs from `intended` when the
+    /// task was stolen).
     device: usize,
+    /// Device the scheduler selected at dispatch.
+    intended: usize,
     worker: usize,
-    output: Vec<f32>,
+    /// Raw input transfers performed, as `(src, dst, bytes)`; the
+    /// coordinator prices them (the perf model is not `Sync`).
+    transfers: Vec<(usize, usize, u64)>,
+    result: std::result::Result<Vec<f32>, String>,
     start_ms: f64,
     end_ms: f64,
+}
+
+struct Queues {
+    /// One ready deque per device.
+    deques: Vec<VecDeque<ReadyTask>>,
+    stop: bool,
+}
+
+struct PoolShared {
+    queues: Mutex<Queues>,
+    cv: Condvar,
+}
+
+/// The work-stealing worker pool: one thread per device worker, fed
+/// from per-device ready deques (see the module docs for the stealing
+/// discipline).
+struct WorkerPool {
+    shared: Arc<PoolShared>,
+    done_rx: mpsc::Receiver<Completion>,
+    joins: Vec<JoinHandle<()>>,
+    stopped: bool,
+}
+
+fn lock_queues(shared: &PoolShared) -> MutexGuard<'_, Queues> {
+    shared.queues.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+impl WorkerPool {
+    fn spawn(
+        platform: &Platform,
+        runtime: &RuntimeService,
+        data: &Arc<Mutex<DataState>>,
+        epoch: Instant,
+    ) -> Result<WorkerPool> {
+        let k = platform.device_count();
+        let shared = Arc::new(PoolShared {
+            queues: Mutex::new(Queues {
+                deques: (0..k).map(|_| VecDeque::new()).collect(),
+                stop: false,
+            }),
+            cv: Condvar::new(),
+        });
+        let (done_tx, done_rx) = mpsc::channel::<Completion>();
+        let mut joins = Vec::new();
+        for (dev, spec) in platform.devices.iter().enumerate() {
+            let mem = platform.memory_node(dev);
+            for w in 0..spec.workers {
+                let shared_w = Arc::clone(&shared);
+                let done = done_tx.clone();
+                let rt = runtime.clone();
+                let data = Arc::clone(data);
+                let spawned = std::thread::Builder::new()
+                    .name(format!("worker-d{dev}w{w}"))
+                    .spawn(move || worker_loop(dev, w, mem, shared_w, data, rt, done, epoch));
+                match spawned {
+                    Ok(j) => joins.push(j),
+                    Err(e) => {
+                        // Unwind the threads already parked on the
+                        // condvar before surfacing the error.
+                        let mut pool = WorkerPool { shared, done_rx, joins, stopped: false };
+                        pool.shutdown();
+                        return Err(e).context("spawning worker");
+                    }
+                }
+            }
+        }
+        // Drop the coordinator's sender: the channel disconnects only
+        // when every worker is gone, which is how recv detects death.
+        drop(done_tx);
+        Ok(WorkerPool { shared, done_rx, joins, stopped: false })
+    }
+
+    /// Enqueue a ready task on its selected device's deque.
+    fn push(&self, t: ReadyTask) {
+        let dev = t.dev;
+        let mut q = lock_queues(&self.shared);
+        q.deques[dev].push_back(t);
+        drop(q);
+        // notify_all: a bound task is runnable only by its own device's
+        // workers, so waking one arbitrary thread could wake one that
+        // cannot take it while the right one sleeps.
+        self.shared.cv.notify_all();
+    }
+
+    fn try_recv(&self) -> Option<Completion> {
+        self.done_rx.try_recv().ok()
+    }
+
+    fn recv(&self) -> Result<Completion> {
+        self.done_rx.recv().map_err(|_| anyhow::anyhow!("workers gone"))
+    }
+
+    fn recv_timeout(&self, d: Duration) -> Result<Option<Completion>> {
+        match self.done_rx.recv_timeout(d) {
+            Ok(c) => Ok(Some(c)),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => Err(anyhow::anyhow!("workers gone")),
+        }
+    }
+
+    /// Pull every still-queued task of a failed job back out of the
+    /// deques, returning them so the caller can unwind its accounting.
+    fn purge_job(&self, job: usize) -> Vec<ReadyTask> {
+        let mut purged = Vec::new();
+        let mut q = lock_queues(&self.shared);
+        for d in q.deques.iter_mut() {
+            let mut keep = VecDeque::with_capacity(d.len());
+            while let Some(t) = d.pop_front() {
+                if t.job == job {
+                    purged.push(t);
+                } else {
+                    keep.push_back(t);
+                }
+            }
+            *d = keep;
+        }
+        purged
+    }
+
+    /// Stop and join every worker. Idempotent; also the `Drop` backstop
+    /// so an early `?` return never leaks parked threads.
+    fn shutdown(&mut self) {
+        if self.stopped {
+            return;
+        }
+        self.stopped = true;
+        {
+            let mut q = lock_queues(&self.shared);
+            q.stop = true;
+            for d in q.deques.iter_mut() {
+                d.clear();
+            }
+        }
+        self.shared.cv.notify_all();
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    dev: usize,
+    w: usize,
+    mem: usize,
+    shared: Arc<PoolShared>,
+    data: Arc<Mutex<DataState>>,
+    rt: RuntimeService,
+    done: mpsc::Sender<Completion>,
+    epoch: Instant,
+) {
+    loop {
+        // --- take a task: own back (LIFO), steal front-most unbound ---
+        let task = {
+            let mut q = lock_queues(&shared);
+            loop {
+                if q.stop {
+                    return;
+                }
+                if let Some(t) = q.deques[dev].pop_back() {
+                    break t;
+                }
+                let k = q.deques.len();
+                let mut stolen = None;
+                for i in 1..k {
+                    let v = (dev + i) % k;
+                    if let Some(pos) = q.deques[v].iter().position(|t| !t.bound) {
+                        stolen = q.deques[v].remove(pos);
+                        break;
+                    }
+                }
+                if let Some(t) = stolen {
+                    break t;
+                }
+                q = shared.cv.wait(q).unwrap_or_else(|p| p.into_inner());
+            }
+        };
+
+        // --- MSI acquisition under the data lock ---
+        let start_ms = epoch.elapsed().as_secs_f64() * 1e3;
+        let mut transfers: Vec<(usize, usize, u64)> = Vec::new();
+        let inputs: Vec<Vec<f32>> = {
+            let mut guard = lock_data(&data);
+            let DataState { dir, store } = &mut *guard;
+            for &h in &task.handles {
+                if let Some(src) = dir.acquire_read(h, mem) {
+                    let bytes = store.transfer(h, src, mem);
+                    transfers.push((src, mem, bytes));
+                }
+            }
+            dir.acquire_write(task.out, mem);
+            // MSI write invalidation drops stale copies physically,
+            // sweeping *memory nodes* (not devices — the store is
+            // node-indexed and the mapping may diverge).
+            for other in 0..store.mem_nodes() {
+                if other != mem && store.get(task.out, other).is_some() {
+                    store.invalidate(task.out, other);
+                }
+            }
+            task.handles
+                .iter()
+                .take(task.arity)
+                .map(|&h| store.get(h, mem).expect("input resident after acquire").clone())
+                .collect()
+        };
+
+        // --- execute on this device's runtime lane ---
+        let result = match rt.execute_on(dev, task.kernel, task.n, inputs) {
+            Ok(output) => {
+                // Publish before completing: once the coordinator
+                // releases successors, their reads must find the data.
+                lock_data(&data).store.put(task.out, mem, output.clone());
+                Ok(output)
+            }
+            Err(e) => Err(format!("task {}: {e}", task.task)),
+        };
+        let end_ms = epoch.elapsed().as_secs_f64() * 1e3;
+        let sent = done.send(Completion {
+            job: task.job,
+            task: task.task,
+            device: dev,
+            intended: task.dev,
+            worker: w,
+            transfers,
+            result,
+            start_ms,
+            end_ms,
+        });
+        if sent.is_err() {
+            return; // coordinator gone
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Open-session coordinator
+// ---------------------------------------------------------------------
+
+/// Per-job execution state while admitted.
+struct RunState {
+    indeg: Vec<usize>,
+    out: Vec<DataHandle>,
+    initial: Vec<Vec<DataHandle>>,
+    node_outputs: HashMap<NodeId, Vec<f32>>,
+    /// Task outputs not yet produced.
+    remaining: usize,
+    /// Tasks handed to the pool, completion pending.
+    inflight: usize,
+    last_end_ms: f64,
+    ledger: TransferLedger,
+    assignments: Vec<usize>,
+    tasks_per_device: Vec<usize>,
+    device_busy: Vec<f64>,
+    trace: Vec<TraceEvent>,
+    decision_ns: u64,
+    failed: Option<String>,
+}
+
+/// One job of the session across its lifecycle (arrival → pending →
+/// running → retired).
+struct JobSlot {
+    submit_ms: f64,
+    qos: JobQos,
+    /// Absolute deadline on the session clock (`submit + qos.deadline`).
+    deadline_abs: f64,
+    plan: Option<Arc<Plan>>,
+    hit: bool,
+    plan_ns: u64,
+    admit_ms: f64,
+    run: Option<RunState>,
+}
+
+/// The multi-job coordinator: shares the simulator's [`AdmissionCore`],
+/// feeds the work-stealing pool, and retires jobs in virtual-time
+/// order while execution runs on the wall clock.
+struct OpenDriver<'a> {
+    platform: &'a Platform,
+    model: &'a dyn PerfModel,
+    opts: &'a ExecOptions,
+    dags: &'a [Dag],
+    pool: WorkerPool,
+    data: Arc<Mutex<DataState>>,
+    epoch: Instant,
+    adm: AdmissionCore,
+    /// Estimated model-time backlog per device, the dispatch signal
+    /// (shared across jobs — that is the multi-job contention signal).
+    backlog: Vec<f64>,
+    jobs: Vec<JobSlot>,
+    results: Vec<Option<(RunReport, JobTiming, bool)>>,
+    /// Failure message per job (parallel to `results`).
+    errors: Vec<Option<String>>,
+    /// Pending wait-budget expiries `(expiry_ms, job)`.
+    expiries: Vec<(f64, usize)>,
+    retired: usize,
+    sched_name: &'static str,
+}
+
+impl<'a> OpenDriver<'a> {
+    fn now_ms(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64() * 1e3
+    }
+
+    /// The coordinator event loop: arrivals (wall-paced), budget
+    /// expiries, completions — until every job is retired.
+    fn drive(
+        &mut self,
+        scheduler: &mut dyn Scheduler,
+        cache: &mut PlanCache,
+        stream: &StreamConfig,
+        plan0: Option<&Arc<Plan>>,
+    ) -> Result<()> {
+        let n = self.jobs.len();
+        let mut next_arrival = 0usize;
+        while self.retired < n {
+            let now = self.now_ms();
+            self.expire_due(now);
+            while next_arrival < n && self.jobs[next_arrival].submit_ms <= now {
+                self.on_arrival(next_arrival, scheduler, cache, stream, plan0)?;
+                next_arrival += 1;
+            }
+            while let Some(c) = self.pool.try_recv() {
+                self.on_completion(c, scheduler)?;
+            }
+            if self.retired == n {
+                break;
+            }
+            // Sleep until whichever comes first: the next arrival, the
+            // next budget expiry, or a completion.
+            let now = self.now_ms();
+            let next_arrival_t = (next_arrival < n).then(|| self.jobs[next_arrival].submit_ms);
+            let next_expiry_t = self
+                .expiries
+                .iter()
+                .map(|&(t, _)| t)
+                .fold(f64::INFINITY, f64::min);
+            let target = match (next_arrival_t, next_expiry_t.is_finite()) {
+                (Some(a), true) => Some(a.min(next_expiry_t)),
+                (Some(a), false) => Some(a),
+                (None, true) => Some(next_expiry_t),
+                (None, false) => None,
+            };
+            match target {
+                Some(t) if t <= now => continue,
+                Some(t) => {
+                    let wait = Duration::from_secs_f64((t - now) / 1e3);
+                    if let Some(c) = self.pool.recv_timeout(wait)? {
+                        self.on_completion(c, scheduler)?;
+                    }
+                }
+                None => {
+                    // No timers left: only completions can retire work.
+                    let c = self.pool.recv()?;
+                    self.on_completion(c, scheduler)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// A job arrives: resolve its plan through the cache, then admit,
+    /// predict-reject, or queue it — the simulator's arrival logic.
+    fn on_arrival(
+        &mut self,
+        i: usize,
+        scheduler: &mut dyn Scheduler,
+        cache: &mut PlanCache,
+        stream: &StreamConfig,
+        plan0: Option<&Arc<Plan>>,
+    ) -> Result<()> {
+        let (dags, platform, model) = (self.dags, self.platform, self.model);
+        let dag = &dags[i];
+        let (plan, hit, build_ns) = match plan0 {
+            Some(p) if i == 0 => (Arc::clone(p), false, 0),
+            _ => {
+                let key = PlanKey::of(dag, platform, model, scheduler);
+                cache.get_or_build(key, || scheduler.build_plan(dag, platform, model))
+            }
+        };
+        self.jobs[i].plan = Some(plan);
+        self.jobs[i].hit = hit;
+        self.jobs[i].plan_ns = build_ns;
+        let submit = self.jobs[i].submit_ms;
+        let qos = self.jobs[i].qos;
+        let budget = stream.effective_budget_ms(&qos);
+        if self.adm.has_slot() {
+            self.admit_job(i, submit, scheduler)?;
+        } else if self.adm.predicts_reject(budget) {
+            self.retire_rejected(i, submit);
+        } else {
+            self.adm.push_pending(AdmissionEntry {
+                job: i,
+                priority: qos.priority,
+                deadline_abs: self.jobs[i].deadline_abs,
+                est_work_ms: est_total_work_ms(dag, platform, model),
+            });
+            if budget.is_finite() {
+                self.expiries.push((submit + budget, i));
+            }
+        }
+        Ok(())
+    }
+
+    /// Claim a window slot, install the plan, allocate the job's data
+    /// and dispatch its root frontier.
+    fn admit_job(&mut self, i: usize, admit_ms: f64, scheduler: &mut dyn Scheduler) -> Result<()> {
+        self.adm.note_admitted();
+        self.jobs[i].admit_ms = admit_ms;
+        let (dags, platform, model, opts) = (self.dags, self.platform, self.model, self.opts);
+        let dag = &dags[i];
+        let plan = self.jobs[i].plan.clone().expect("plan resolved at arrival");
+        let t0 = Instant::now();
+        scheduler.on_submit(i, dag, &plan, platform, model);
+        self.jobs[i].plan_ns += t0.elapsed().as_nanos() as u64;
+
+        let n_nodes = dag.node_count();
+        let host = platform.host_node();
+        let k = platform.device_count();
+        let (out, initial) = {
+            let mut guard = lock_data(&self.data);
+            let DataState { dir, store } = &mut *guard;
+            let out: Vec<DataHandle> = (0..n_nodes)
+                .map(|v| {
+                    let sz = dag.node(v).size as u64;
+                    dir.alloc_unwritten(4 * sz * sz)
+                })
+                .collect();
+            let mut initial: Vec<Vec<DataHandle>> = Vec::with_capacity(n_nodes);
+            for v in 0..n_nodes {
+                let node = dag.node(v);
+                let missing = node.kernel.arity().saturating_sub(dag.in_degree(v));
+                let mut hs = Vec::with_capacity(missing);
+                for slot in 0..missing {
+                    let sz = node.size as u64;
+                    let h = dir.alloc(4 * sz * sz, host);
+                    store.put(h, host, oracle::initial_input(v, slot, node.size, opts.seed));
+                    hs.push(h);
+                }
+                initial.push(hs);
+            }
+            (out, initial)
+        };
+        self.jobs[i].run = Some(RunState {
+            indeg: (0..n_nodes).map(|v| dag.in_degree(v)).collect(),
+            out,
+            initial,
+            node_outputs: HashMap::new(),
+            remaining: n_nodes,
+            inflight: 0,
+            last_end_ms: admit_ms,
+            ledger: TransferLedger::new(),
+            assignments: vec![usize::MAX; n_nodes],
+            tasks_per_device: vec![0; k],
+            device_busy: vec![0.0; k],
+            trace: Vec::new(),
+            decision_ns: 0,
+            failed: None,
+        });
+        let roots: Vec<NodeId> = (0..n_nodes).filter(|&v| dag.in_degree(v) == 0).collect();
+        self.dispatch(i, roots, scheduler)?;
+        self.maybe_finalize(i, scheduler)
+    }
+
+    /// Dispatch a worklist of ready tasks of job `j`: Source nodes
+    /// resolve inline (host-resident zeros); real kernels go through
+    /// the scheduler's `select` and onto the pool.
+    fn dispatch(
+        &mut self,
+        j: usize,
+        mut work: Vec<NodeId>,
+        scheduler: &mut dyn Scheduler,
+    ) -> Result<()> {
+        let (dags, platform, model) = (self.dags, self.platform, self.model);
+        let dag = &dags[j];
+        let host = platform.host_node();
+        let bound = scheduler.is_offline();
+        while let Some(v) = work.pop() {
+            let node = dag.node(v);
+            if node.kernel == KernelKind::Source {
+                // Zero-cost: output is a host-resident zero buffer.
+                let sz = node.size as usize;
+                let zeros = vec![0f32; sz * sz];
+                let out_h = self.jobs[j].run.as_ref().expect("running job").out[v];
+                {
+                    let mut guard = lock_data(&self.data);
+                    let DataState { dir, store } = &mut *guard;
+                    dir.acquire_write(out_h, host);
+                    store.put(out_h, host, zeros.clone());
+                }
+                let run = self.jobs[j].run.as_mut().expect("running job");
+                run.assignments[v] = host;
+                run.node_outputs.insert(v, zeros);
+                run.remaining -= 1;
+                for &e in dag.out_edges(v) {
+                    let wv = dag.edge(e).dst;
+                    run.indeg[wv] -= 1;
+                    if run.indeg[wv] == 0 {
+                        work.push(wv);
+                    }
+                }
+                continue;
+            }
+
+            // Input handles: in-edge outputs (capped at arity for the
+            // kernel math, all fetched for coherence) + initials.
+            let (handles, out_h) = {
+                let run = self.jobs[j].run.as_ref().expect("running job");
+                let mut hs: Vec<DataHandle> =
+                    dag.in_edges(v).iter().map(|&e| run.out[dag.edge(e).src]).collect();
+                hs.extend(&run.initial[v]);
+                (hs, run.out[v])
+            };
+            let inputs_info: Vec<InputInfo> = {
+                let guard = lock_data(&self.data);
+                handles
+                    .iter()
+                    .map(|&h| InputInfo {
+                        bytes: guard.dir.bytes(h),
+                        valid_mask: guard.dir.valid_mask(h),
+                    })
+                    .collect()
+            };
+            let t_now = self.now_ms();
+            let device_free: Vec<f64> = self.backlog.iter().map(|&b| t_now + b).collect();
+            let ctx = DispatchCtx {
+                job: j,
+                task: v,
+                kernel: node.kernel,
+                size: node.size,
+                ready_ms: t_now,
+                deadline_ms: self.jobs[j].deadline_abs,
+                device_free_ms: &device_free,
+                inputs: &inputs_info,
+                platform,
+                model,
+            };
+            let td = Instant::now();
+            let dev = scheduler.select(&ctx);
+            let decision = td.elapsed().as_nanos() as u64;
+            self.backlog[dev] += model.kernel_time_ms(node.kernel, node.size, dev);
+            self.pool.push(ReadyTask {
+                job: j,
+                task: v,
+                kernel: node.kernel,
+                n: node.size,
+                dev,
+                bound,
+                handles,
+                arity: node.kernel.arity(),
+                out: out_h,
+            });
+            let run = self.jobs[j].run.as_mut().expect("running job");
+            run.decision_ns += decision;
+            run.inflight += 1;
+        }
+        Ok(())
+    }
+
+    /// Fold one completion into its job: price transfers, record the
+    /// actual device, release successors — or mark the job failed and
+    /// purge its queued tasks.
+    fn on_completion(&mut self, c: Completion, scheduler: &mut dyn Scheduler) -> Result<()> {
+        let j = c.job;
+        let (kernel, size) = {
+            let node = self.dags[j].node(c.task);
+            (node.kernel, node.size)
+        };
+        // Backlog unwinds against the *intended* device — the estimate
+        // charged at dispatch.
+        let est = self.model.kernel_time_ms(kernel, size, c.intended);
+        self.backlog[c.intended] = (self.backlog[c.intended] - est).max(0.0);
+        match c.result {
+            Err(msg) => {
+                {
+                    let run = self.jobs[j].run.as_mut().expect("completion for a running job");
+                    run.inflight -= 1;
+                    if run.failed.is_none() {
+                        run.failed = Some(msg);
+                    }
+                }
+                // Drop the job's queued-but-unstarted tasks; in-flight
+                // ones drain through this same path.
+                let purged = self.pool.purge_job(j);
+                for t in &purged {
+                    let e = self.model.kernel_time_ms(t.kernel, t.n, t.dev);
+                    self.backlog[t.dev] = (self.backlog[t.dev] - e).max(0.0);
+                }
+                let run = self.jobs[j].run.as_mut().expect("running job");
+                run.inflight -= purged.len();
+            }
+            Ok(output) => {
+                let priced: Vec<(usize, usize, u64, f64)> = c
+                    .transfers
+                    .iter()
+                    .map(|&(s, d, b)| (s, d, b, self.model.transfer_time_ms(b)))
+                    .collect();
+                let collect_trace = self.opts.collect_trace;
+                {
+                    let run = self.jobs[j].run.as_mut().expect("completion for a running job");
+                    run.inflight -= 1;
+                    for (s, d, b, ms) in priced {
+                        run.ledger.record(s, d, b, ms);
+                    }
+                    run.assignments[c.task] = c.device;
+                    run.tasks_per_device[c.device] += 1;
+                    run.device_busy[c.device] += c.end_ms - c.start_ms;
+                    run.last_end_ms = run.last_end_ms.max(c.end_ms);
+                    run.remaining -= 1;
+                    run.node_outputs.insert(c.task, output);
+                    if collect_trace {
+                        run.trace.push(TraceEvent {
+                            job: j,
+                            task: c.task,
+                            device: c.device,
+                            worker: c.worker,
+                            start_ms: c.start_ms,
+                            end_ms: c.end_ms,
+                        });
+                    }
+                }
+                // Completion lifecycle event — real engines deliver
+                // these in true completion order, which is what lets
+                // online policies observe the machine instead of
+                // trusting backlog estimates.
+                let th = Instant::now();
+                scheduler.on_task_finish(j, c.task, c.device, c.end_ms);
+                let decision = th.elapsed().as_nanos() as u64;
+                let mut newly = Vec::new();
+                {
+                    let dag = &self.dags[j];
+                    let run = self.jobs[j].run.as_mut().expect("running job");
+                    run.decision_ns += decision;
+                    // A failed job only drains its in-flight work; its
+                    // released successors would be pure waste.
+                    if run.failed.is_none() {
+                        for &e in dag.out_edges(c.task) {
+                            let wv = dag.edge(e).dst;
+                            run.indeg[wv] -= 1;
+                            if run.indeg[wv] == 0 {
+                                newly.push(wv);
+                            }
+                        }
+                    }
+                }
+                if !newly.is_empty() {
+                    self.dispatch(j, newly, scheduler)?;
+                }
+            }
+        }
+        self.maybe_finalize(j, scheduler)
+    }
+
+    /// Retire job `j` if it has fully drained (all outputs produced, or
+    /// failed with no task in flight): write back results, verify,
+    /// close its timing, free the admission slot and pop the pending
+    /// queue.
+    fn maybe_finalize(&mut self, j: usize, scheduler: &mut dyn Scheduler) -> Result<()> {
+        let done = match self.jobs[j].run.as_ref() {
+            Some(r) => r.inflight == 0 && (r.remaining == 0 || r.failed.is_some()),
+            None => false,
+        };
+        if !done {
+            return Ok(());
+        }
+        let mut run = self.jobs[j].run.take().expect("checked above");
+        let (dags, platform, model, opts) = (self.dags, self.platform, self.model, self.opts);
+        let dag = &dags[j];
+        let host = platform.host_node();
+        if run.failed.is_none() {
+            if opts.return_results_to_host {
+                let mut guard = lock_data(&self.data);
+                let DataState { dir, store } = &mut *guard;
+                for v in dag.sinks() {
+                    if dag.node(v).kernel == KernelKind::Source {
+                        continue;
+                    }
+                    if let Some(src) = dir.acquire_read(run.out[v], host) {
+                        let bytes = store.transfer(run.out[v], src, host);
+                        run.ledger.record(src, host, bytes, model.transfer_time_ms(bytes));
+                    }
+                }
+            }
+            if opts.verify {
+                if let Err(e) = verify_outputs(dag, &run.node_outputs, opts.seed) {
+                    run.failed = Some(format!("verification: {e}"));
+                }
+            }
+        }
+        let complete_ms = run.last_end_ms.max(self.jobs[j].admit_ms);
+        let th = Instant::now();
+        scheduler.on_job_drain(j);
+        run.decision_ns += th.elapsed().as_nanos() as u64;
+        let qos = self.jobs[j].qos;
+        let timing = JobTiming {
+            submit_ms: self.jobs[j].submit_ms,
+            admit_ms: self.jobs[j].admit_ms,
+            complete_ms,
+            class: qos.class,
+            priority: qos.priority,
+            deadline_ms: self.jobs[j].deadline_abs,
+            rejected: false,
+            failed: run.failed.is_some(),
+        };
+        let report = RunReport {
+            scheduler: self.sched_name,
+            makespan_ms: complete_ms - timing.submit_ms,
+            ledger: run.ledger,
+            assignments: run.assignments,
+            device_busy_ms: run.device_busy,
+            tasks_per_device: run.tasks_per_device,
+            decision_ns: run.decision_ns,
+            plan_ns: self.jobs[j].plan_ns,
+            trace: run.trace,
+        };
+        self.errors[j] = run.failed;
+        self.results[j] = Some((report, timing, self.jobs[j].hit));
+        self.retired += 1;
+
+        // The slot frees at this job's (virtual) completion instant:
+        // pops admit at max(their submit, complete) — the same value
+        // the simulator's window yields, and exactly
+        // [`serial_window_admit`] for queue=1/fifo.
+        self.adm.release_slot();
+        self.expire_due(self.now_ms());
+        while self.adm.has_slot() {
+            match self.adm.pop_pending() {
+                Some(next) => {
+                    let admit = self.jobs[next].submit_ms.max(complete_ms);
+                    self.admit_job(next, admit, scheduler)?;
+                }
+                None => break,
+            }
+        }
+        Ok(())
+    }
+
+    /// Reject still-pending jobs whose wait budget has expired; stale
+    /// entries (job already admitted) are dropped silently.
+    fn expire_due(&mut self, now: f64) {
+        let mut i = 0;
+        while i < self.expiries.len() {
+            if self.expiries[i].0 <= now {
+                let (t, job) = self.expiries.swap_remove(i);
+                if self.adm.remove_pending(job) {
+                    self.retire_rejected(job, t);
+                }
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Retire job `j` as rejected at `at_ms`: empty report, timing with
+    /// `rejected` set, no slot was ever held.
+    fn retire_rejected(&mut self, j: usize, at_ms: f64) {
+        let qos = self.jobs[j].qos;
+        let k = self.platform.device_count();
+        let timing = JobTiming {
+            submit_ms: self.jobs[j].submit_ms,
+            admit_ms: at_ms,
+            complete_ms: at_ms,
+            class: qos.class,
+            priority: qos.priority,
+            deadline_ms: self.jobs[j].deadline_abs,
+            rejected: true,
+            failed: false,
+        };
+        let report = RunReport {
+            scheduler: self.sched_name,
+            makespan_ms: 0.0,
+            ledger: TransferLedger::new(),
+            assignments: Vec::new(),
+            device_busy_ms: vec![0.0; k],
+            tasks_per_device: vec![0; k],
+            decision_ns: 0,
+            plan_ns: self.jobs[j].plan_ns,
+            trace: Vec::new(),
+        };
+        self.results[j] = Some((report, timing, self.jobs[j].hit));
+        self.retired += 1;
+    }
+}
+
+/// Per-node oracle verification (see [`ExecEngine::run_with_plan`]'s
+/// docs): each kernel's output is recomputed by the pure-Rust oracle
+/// from the *engine's own* upstream outputs, so every execution is
+/// verified without compounding fp32 accumulation-order divergence
+/// across deep MM chains (which is chaotic, not a bug).
+fn verify_outputs(
+    dag: &Dag,
+    node_outputs: &HashMap<NodeId, Vec<f32>>,
+    seed: u64,
+) -> Result<()> {
+    for (v, node) in dag.nodes() {
+        if node.kernel == KernelKind::Source {
+            continue;
+        }
+        let got = node_outputs
+            .get(&v)
+            .with_context(|| format!("missing output for task {v}"))?;
+        let arity = node.kernel.arity();
+        let mut inputs: Vec<&[f32]> = dag
+            .in_edges(v)
+            .iter()
+            .take(arity)
+            .map(|&e| node_outputs[&dag.edge(e).src].as_slice())
+            .collect();
+        let mut slot_bufs = Vec::new();
+        while inputs.len() + slot_bufs.len() < arity {
+            slot_bufs.push(oracle::initial_input(v, slot_bufs.len(), node.size, seed));
+        }
+        for b in &slot_bufs {
+            inputs.push(b.as_slice());
+        }
+        let want = oracle::kernel_output(node.kernel, node.size, &inputs);
+        anyhow::ensure!(got.len() == want.len(), "task {v}: length mismatch");
+        // Absolute tolerance scaled to the dot-product magnitude: fp32
+        // sums of `size` terms of magnitude ~scale² can differ by
+        // eps * size * scale² under different accumulation orders
+        // (cancellation makes output-relative checks meaningless).
+        let scale = inputs
+            .iter()
+            .flat_map(|s| s.iter())
+            .fold(1.0f32, |m, &x| m.max(x.abs()));
+        let tol = 1e-6 * node.size as f32 * scale * scale + 1e-5;
+        for i in 0..got.len() {
+            anyhow::ensure!(
+                (got[i] - want[i]).abs() <= tol,
+                "task {v} ({}) elem {i}: got {} want {} (tol {tol})",
+                node.name,
+                got[i],
+                want[i]
+            );
+        }
+    }
+    Ok(())
 }
 
 impl ExecEngine {
@@ -75,7 +1024,8 @@ impl ExecEngine {
 
     /// Execute `dag` under `scheduler` with real kernels, planning from
     /// scratch; returns the run report and (if verification is on)
-    /// checks outputs in-line.
+    /// checks outputs in-line. A kernel failure is a clean error (the
+    /// pool drains and shuts down), never a hang.
     pub fn run(
         &self,
         dag: &Dag,
@@ -89,6 +1039,8 @@ impl ExecEngine {
     /// Execute `dag` under `scheduler`, consuming `plan` when supplied
     /// (e.g. from a [`PlanCache`]) instead of running the planner — the
     /// real-compute twin of [`crate::sim::simulate_with_plan`].
+    /// Implemented as a one-job session on the same work-stealing pool
+    /// the streaming path uses.
     pub fn run_with_plan(
         &self,
         dag: &Dag,
@@ -97,363 +1049,109 @@ impl ExecEngine {
         opts: &ExecOptions,
         plan: Option<&Arc<Plan>>,
     ) -> Result<RunReport> {
-        let n_nodes = dag.node_count();
+        let mut cache = PlanCache::new();
+        let (mut results, errors) = self.run_open(
+            std::slice::from_ref(dag),
+            &[],
+            &[0.0],
+            scheduler,
+            model,
+            opts,
+            &mut cache,
+            &StreamConfig::closed(),
+            plan,
+        )?;
+        if let Some(msg) = errors.into_iter().next().flatten() {
+            anyhow::bail!("{msg}");
+        }
+        let (report, _timing, _hit) = results.remove(0);
+        Ok(report)
+    }
+
+    /// The shared open-session core: runs `dags` with the given virtual
+    /// submit `times` (wall-paced) through the work-stealing pool and
+    /// the simulator's admission window. Returns per-job
+    /// `(report, timing, cache_hit)` in submission order plus per-job
+    /// failure messages.
+    #[allow(clippy::too_many_arguments)]
+    fn run_open(
+        &self,
+        dags: &[Dag],
+        qos: &[JobQos],
+        times: &[f64],
+        scheduler: &mut dyn Scheduler,
+        model: &dyn PerfModel,
+        opts: &ExecOptions,
+        cache: &mut PlanCache,
+        stream: &StreamConfig,
+        plan0: Option<&Arc<Plan>>,
+    ) -> Result<(Vec<(RunReport, JobTiming, bool)>, Vec<Option<String>>)> {
         let k = self.platform.device_count();
-        let host = self.platform.host_node();
         let epoch = Instant::now();
-        let now_ms = move || epoch.elapsed().as_secs_f64() * 1e3;
-
-        // --- plan + submit lifecycle ---
-        let t0 = Instant::now();
-        let plan: Arc<Plan> = match plan {
-            Some(p) => Arc::clone(p),
-            None => Arc::new(scheduler.build_plan(dag, &self.platform, model)),
-        };
-        scheduler.on_submit(0, dag, &plan, &self.platform, model);
-        let plan_ns = t0.elapsed().as_nanos() as u64;
-
-        // --- data state ---
-        let mut dir = Directory::new();
-        let mut store = HostStore::new(k);
-        let out: Vec<DataHandle> = (0..n_nodes)
-            .map(|v| {
-                let sz = dag.node(v).size as u64;
-                dir.alloc_unwritten(4 * sz * sz)
+        let data = Arc::new(Mutex::new(DataState {
+            dir: Directory::new(),
+            store: HostStore::new(k),
+        }));
+        let pool = WorkerPool::spawn(&self.platform, &self.runtime, &data, epoch)?;
+        let qos_of = |i: usize| qos.get(i).copied().unwrap_or_default();
+        let jobs: Vec<JobSlot> = times
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| {
+                let q = qos_of(i);
+                JobSlot {
+                    submit_ms: t,
+                    qos: q,
+                    deadline_abs: t + q.deadline_ms,
+                    plan: None,
+                    hit: false,
+                    plan_ns: 0,
+                    admit_ms: t,
+                    run: None,
+                }
             })
             .collect();
-        let mut initial: Vec<Vec<DataHandle>> = Vec::with_capacity(n_nodes);
-        for v in 0..n_nodes {
-            let node = dag.node(v);
-            let missing = node.kernel.arity().saturating_sub(dag.in_degree(v));
-            let mut hs = Vec::with_capacity(missing);
-            for slot in 0..missing {
-                let sz = node.size as u64;
-                let h = dir.alloc(4 * sz * sz, host);
-                store.put(h, host, oracle::initial_input(v, slot, node.size, opts.seed));
-                hs.push(h);
-            }
-            initial.push(hs);
-        }
-
-        // --- workers ---
-        let (done_tx, done_rx) = mpsc::channel::<Completion>();
-        let mut senders: Vec<Vec<mpsc::Sender<WorkerMsg>>> = Vec::with_capacity(k);
-        let mut joins = Vec::new();
-        for (dev, spec) in self.platform.devices.iter().enumerate() {
-            let mut dev_senders = Vec::with_capacity(spec.workers);
-            for w in 0..spec.workers {
-                let (tx, rx) = mpsc::channel::<WorkerMsg>();
-                let done = done_tx.clone();
-                let rt = self.runtime.clone();
-                let join = std::thread::Builder::new()
-                    .name(format!("worker-d{dev}w{w}"))
-                    .spawn(move || {
-                        while let Ok(msg) = rx.recv() {
-                            match msg {
-                                WorkerMsg::Run { task, kernel, n, inputs } => {
-                                    let start_ms = epoch.elapsed().as_secs_f64() * 1e3;
-                                    let output = rt
-                                        .execute(kernel, n, inputs)
-                                        .expect("kernel execution failed");
-                                    let end_ms = epoch.elapsed().as_secs_f64() * 1e3;
-                                    let _ = done.send(Completion {
-                                        task,
-                                        device: dev,
-                                        worker: w,
-                                        output,
-                                        start_ms,
-                                        end_ms,
-                                    });
-                                }
-                                WorkerMsg::Stop => break,
-                            }
-                        }
-                    })
-                    .context("spawning worker")?;
-                joins.push(join);
-                dev_senders.push(tx);
-            }
-            senders.push(dev_senders);
-        }
-
-        // --- coordinator loop ---
-        let mut ledger = TransferLedger::new();
-        let mut indeg: Vec<usize> = (0..n_nodes).map(|v| dag.in_degree(v)).collect();
-        let mut ready: Vec<NodeId> = (0..n_nodes).filter(|&v| indeg[v] == 0).collect();
-        let mut assignments = vec![usize::MAX; n_nodes];
-        let mut tasks_per_device = vec![0usize; k];
-        let mut device_busy = vec![0.0f64; k];
-        // Estimated backlog per device (model-time), the dispatch signal.
-        let mut device_backlog = vec![0.0f64; k];
-        // Next free worker per device, round-robin over its workers.
-        let mut next_worker = vec![0usize; k];
-        let mut decision_ns = 0u64;
-        let mut trace = Vec::new();
-        let mut in_flight = 0usize;
-        let mut finished = vec![false; n_nodes];
-        let mut outputs_done = 0usize;
-        let mut node_outputs: HashMap<NodeId, Vec<f32>> = HashMap::new();
-
-        while outputs_done < n_nodes {
-            // Dispatch everything ready.
-            while let Some(v) = ready.pop() {
-                let node = dag.node(v);
-                if node.kernel == KernelKind::Source {
-                    // Zero-cost: output is a host-resident zero buffer.
-                    let sz = node.size as usize;
-                    dir.acquire_write(out[v], host);
-                    store.put(out[v], host, vec![0f32; sz * sz]);
-                    assignments[v] = host;
-                    finished[v] = true;
-                    outputs_done += 1;
-                    for &e in dag.out_edges(v) {
-                        let wv = dag.edge(e).dst;
-                        indeg[wv] -= 1;
-                        if indeg[wv] == 0 {
-                            ready.push(wv);
-                        }
-                    }
-                    continue;
-                }
-
-                // Input handles: in-edge outputs (capped at arity for the
-                // kernel math, all fetched for coherence) + initials.
-                let mut handles: Vec<DataHandle> = dag
-                    .in_edges(v)
-                    .iter()
-                    .map(|&e| out[dag.edge(e).src])
-                    .collect();
-                handles.extend(&initial[v]);
-                let inputs_info: Vec<InputInfo> = handles
-                    .iter()
-                    .map(|&h| InputInfo { bytes: dir.bytes(h), valid_mask: dir.valid_mask(h) })
-                    .collect();
-
-                let t_now = now_ms();
-                let device_free: Vec<f64> =
-                    device_backlog.iter().map(|&b| t_now + b).collect();
-                let ctx = DispatchCtx {
-                    job: 0,
-                    task: v,
-                    kernel: node.kernel,
-                    size: node.size,
-                    ready_ms: t_now,
-                    deadline_ms: f64::INFINITY,
-                    device_free_ms: &device_free,
-                    inputs: &inputs_info,
-                    platform: &self.platform,
-                    model,
-                };
-                let td = Instant::now();
-                let dev = scheduler.select(&ctx);
-                decision_ns += td.elapsed().as_nanos() as u64;
-                let mem = self.platform.memory_node(dev);
-
-                // MSI acquisition: real buffer copies between node spaces.
-                for &h in &handles {
-                    if let Some(src) = dir.acquire_read(h, mem) {
-                        let bytes = store.transfer(h, src, mem);
-                        ledger.record(src, mem, bytes, model.transfer_time_ms(bytes));
-                    }
-                }
-                dir.acquire_write(out[v], mem);
-                // MSI write invalidation drops stale copies physically,
-                // sweeping *memory nodes* (not devices — the store is
-                // node-indexed and the mapping may diverge).
-                for other in 0..store.mem_nodes() {
-                    if other != mem && store.get(out[v], other).is_some() {
-                        store.invalidate(out[v], other);
-                    }
-                }
-
-                // Kernel math consumes the first `arity` inputs.
-                let arity = node.kernel.arity();
-                let input_bufs: Vec<Vec<f32>> = handles
-                    .iter()
-                    .take(arity)
-                    .map(|&h| store.get(h, mem).expect("input resident after acquire").clone())
-                    .collect();
-
-                assignments[v] = dev;
-                tasks_per_device[dev] += 1;
-                device_backlog[dev] += model.kernel_time_ms(node.kernel, node.size, dev);
-                let w = next_worker[dev];
-                next_worker[dev] = (w + 1) % senders[dev].len();
-                senders[dev][w]
-                    .send(WorkerMsg::Run {
-                        task: v,
-                        kernel: node.kernel,
-                        n: node.size,
-                        inputs: input_bufs,
-                    })
-                    .context("worker channel closed")?;
-                in_flight += 1;
-            }
-
-            if in_flight == 0 {
-                break;
-            }
-            // Wait for one completion, then loop to dispatch newly-ready.
-            let c = done_rx.recv().context("workers gone")?;
-            in_flight -= 1;
-            outputs_done += 1;
-            finished[c.task] = true;
-            store.put(out[c.task], self.platform.memory_node(c.device), c.output.clone());
-            node_outputs.insert(c.task, c.output);
-            device_busy[c.device] += c.end_ms - c.start_ms;
-            let node = dag.node(c.task);
-            let est = model.kernel_time_ms(node.kernel, node.size, c.device);
-            device_backlog[c.device] = (device_backlog[c.device] - est).max(0.0);
-            if opts.collect_trace {
-                trace.push(TraceEvent {
-                    job: 0,
-                    task: c.task,
-                    device: c.device,
-                    worker: c.worker,
-                    start_ms: c.start_ms,
-                    end_ms: c.end_ms,
-                });
-            }
-            // Completion lifecycle event — real engines deliver these in
-            // true completion order, which is what lets online policies
-            // observe the machine instead of trusting backlog estimates.
-            let th = Instant::now();
-            scheduler.on_task_finish(0, c.task, c.device, c.end_ms);
-            decision_ns += th.elapsed().as_nanos() as u64;
-            for &e in dag.out_edges(c.task) {
-                let wv = dag.edge(e).dst;
-                indeg[wv] -= 1;
-                if indeg[wv] == 0 {
-                    ready.push(wv);
-                }
-            }
-        }
-
-        scheduler.on_job_drain(0);
+        let n = jobs.len();
+        let mut drv = OpenDriver {
+            platform: &self.platform,
+            model,
+            opts,
+            dags,
+            pool,
+            data,
+            epoch,
+            adm: AdmissionCore::new(stream.queue, stream.admit),
+            backlog: vec![0.0; k],
+            jobs,
+            results: (0..n).map(|_| None).collect(),
+            errors: (0..n).map(|_| None).collect(),
+            expiries: Vec::new(),
+            retired: 0,
+            sched_name: scheduler.name(),
+        };
+        let outcome = drv.drive(scheduler, cache, stream, plan0);
+        drv.pool.shutdown();
+        outcome?;
         scheduler.on_drain();
-
-        // --- shutdown workers ---
-        for dev_senders in &senders {
-            for tx in dev_senders {
-                let _ = tx.send(WorkerMsg::Stop);
-            }
-        }
-        drop(done_tx);
-        for j in joins {
-            let _ = j.join();
-        }
-
-        // --- return results to host ---
-        if opts.return_results_to_host {
-            for v in dag.sinks() {
-                if dag.node(v).kernel == KernelKind::Source {
-                    continue;
-                }
-                if let Some(src) = dir.acquire_read(out[v], host) {
-                    let bytes = store.transfer(out[v], src, host);
-                    ledger.record(src, host, bytes, model.transfer_time_ms(bytes));
-                }
-            }
-        }
-
-        let makespan = now_ms();
-
-        // --- verification against the oracle ---
-        //
-        // Per-node check: each kernel's output is recomputed by the
-        // pure-Rust oracle from the *engine's own* upstream outputs, so
-        // every execution is verified without compounding fp32
-        // accumulation-order divergence across deep MM chains (which is
-        // chaotic, not a bug).
-        if opts.verify {
-            for (v, node) in dag.nodes() {
-                if node.kernel == KernelKind::Source {
-                    continue;
-                }
-                let got = node_outputs
-                    .get(&v)
-                    .with_context(|| format!("missing output for task {v}"))?;
-                let arity = node.kernel.arity();
-                let mut inputs: Vec<&[f32]> = dag
-                    .in_edges(v)
-                    .iter()
-                    .take(arity)
-                    .map(|&e| node_outputs[&dag.edge(e).src].as_slice())
-                    .collect();
-                let mut slot_bufs = Vec::new();
-                while inputs.len() + slot_bufs.len() < arity {
-                    slot_bufs.push(oracle::initial_input(
-                        v,
-                        slot_bufs.len(),
-                        node.size,
-                        opts.seed,
-                    ));
-                }
-                for b in &slot_bufs {
-                    inputs.push(b.as_slice());
-                }
-                let want = oracle::kernel_output(node.kernel, node.size, &inputs);
-                anyhow::ensure!(got.len() == want.len(), "task {v}: length mismatch");
-                // Absolute tolerance scaled to the dot-product magnitude:
-                // fp32 sums of `size` terms of magnitude ~scale² can
-                // differ by eps * size * scale² under different
-                // accumulation orders (cancellation makes output-relative
-                // checks meaningless).
-                let scale = inputs
-                    .iter()
-                    .flat_map(|s| s.iter())
-                    .fold(1.0f32, |m, &x| m.max(x.abs()));
-                let tol = 1e-6 * node.size as f32 * scale * scale + 1e-5;
-                for i in 0..got.len() {
-                    anyhow::ensure!(
-                        (got[i] - want[i]).abs() <= tol,
-                        "task {v} ({}) elem {i}: got {} want {} (tol {tol})",
-                        node.name,
-                        got[i],
-                        want[i]
-                    );
-                }
-            }
-        }
-
-        Ok(RunReport {
-            scheduler: scheduler.name(),
-            makespan_ms: makespan,
-            ledger,
-            assignments,
-            device_busy_ms: device_busy,
-            tasks_per_device,
-            decision_ns,
-            plan_ns,
-            trace,
-        })
+        let results =
+            drv.results.into_iter().map(|r| r.expect("every job retired")).collect();
+        Ok((results, drv.errors))
     }
 
     /// Execute a stream of DAGs through one policy, sharing `cache` for
     /// plan reuse — the real-compute twin of
     /// [`crate::sim::simulate_stream`] / [`crate::sim::simulate_open`].
     ///
-    /// The machine is real, so the open-system semantics differ from the
-    /// simulator's: `stream`'s arrival process *paces* submissions on
-    /// the wall clock (the coordinator sleeps until each job's submit
-    /// time), while execution itself stays serial — one job owns the
-    /// workers at a time. Admission bookkeeping honors
-    /// [`StreamConfig::queue`]: job `i` is *admitted* (stops accruing
-    /// queueing delay) as soon as a window slot frees, i.e. at
-    /// `max(submit_i, complete_{i-queue})` — the same rule the
-    /// simulator's FIFO window implements (see [`serial_window_admit`])
-    /// — even though its kernels only start once the machine is free.
-    /// The merged [`SessionReport`] carries the same
-    /// sojourn/percentile/throughput metrics as the simulated sessions.
-    /// `arrival=closed` submits each job the instant the previous one
-    /// completes (PR 2 semantics, no pacing, and a window that never
-    /// fills).
-    ///
-    /// Admission *policies* are simulator-only for now: the serial real
-    /// engine cannot reorder or reject waiting jobs, so any
-    /// `admit=` other than `fifo` is a loud error here rather than a
-    /// silent FIFO fallback (see the ROADMAP's open-system real-engine
-    /// item).
+    /// With timed arrivals the engine is genuinely concurrent: the
+    /// arrival process *paces* submissions on the wall clock, the
+    /// shared [`AdmissionCore`] admits up to [`StreamConfig::queue`]
+    /// jobs at once under `admit=fifo|edf|sjf|reject`, and ready tasks
+    /// of every admitted job interleave on the work-stealing pool — so
+    /// the merged [`SessionReport`] measures real sojourn, queueing
+    /// delay, deadline-hit and concurrency numbers under the same
+    /// `StreamConfig` grammar the simulator uses. `arrival=closed`
+    /// keeps the PR 2 semantics: jobs run back-to-back, serially, each
+    /// submitted the instant the previous one completes.
     pub fn run_stream(
         &self,
         dags: &[Dag],
@@ -463,67 +1161,114 @@ impl ExecEngine {
         cache: &mut PlanCache,
         stream: &StreamConfig,
     ) -> Result<SessionReport> {
+        self.run_stream_qos(dags, &[], &[], scheduler, model, opts, cache, stream)
+    }
+
+    /// [`ExecEngine::run_stream`] with per-job QoS: `qos[i]` carries
+    /// job `i`'s class / priority / deadline / wait budget (empty slice
+    /// = all defaults) and `class_names` labels the class indices in
+    /// the report — the real-compute twin of
+    /// [`crate::sim::simulate_open_qos`]. Failed jobs (a kernel error)
+    /// are reported with [`JobTiming::failed`] set, their partial busy
+    /// time counted as wasted work, and the session keeps running.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_stream_qos(
+        &self,
+        dags: &[Dag],
+        qos: &[JobQos],
+        class_names: &[String],
+        scheduler: &mut dyn Scheduler,
+        model: &dyn PerfModel,
+        opts: &ExecOptions,
+        cache: &mut PlanCache,
+        stream: &StreamConfig,
+    ) -> Result<SessionReport> {
         anyhow::ensure!(
-            stream.admit == crate::sim::AdmissionPolicy::Fifo,
-            "ExecEngine::run_stream supports admit=fifo only (got admit={}); \
-             edf/sjf/reject are simulator-only until the real engine gains a \
-             concurrent admission window",
-            stream.admit.as_str()
+            qos.is_empty() || qos.len() == dags.len(),
+            "qos must be empty or match the job count"
         );
         let mut session = SessionReport::new(scheduler.name());
-        let submit_times = stream.arrival.submit_times_ms(dags.len());
-        let queue = stream.queue.max(1);
-        let epoch = Instant::now();
-        let now_ms = || epoch.elapsed().as_secs_f64() * 1e3;
-        let mut completes: Vec<f64> = Vec::with_capacity(dags.len());
-        for (i, dag) in dags.iter().enumerate() {
-            let submit_ms = match &submit_times {
-                Some(times) => {
-                    let target = times[i];
-                    let now = now_ms();
-                    if now < target {
-                        std::thread::sleep(std::time::Duration::from_secs_f64(
-                            (target - now) / 1e3,
-                        ));
+        session.class_names = class_names.to_vec();
+        // Replanning effort is read as a delta so a policy reused
+        // across sessions reports only this session's replans.
+        let replan0 = scheduler.replan_stats();
+        match stream.arrival.submit_times_ms(dags.len()) {
+            // Closed loop: serial back-to-back jobs, each on a fresh
+            // one-job session; the window never fills.
+            None => {
+                let epoch = Instant::now();
+                let now_ms = || epoch.elapsed().as_secs_f64() * 1e3;
+                let qos_of = |i: usize| qos.get(i).copied().unwrap_or_default();
+                for (i, dag) in dags.iter().enumerate() {
+                    let submit_ms = now_ms();
+                    let key = PlanKey::of(dag, &self.platform, model, scheduler);
+                    let (plan, hit, build_ns) = cache
+                        .get_or_build(key, || scheduler.build_plan(dag, &self.platform, model));
+                    let mut report = self.run_with_plan(dag, scheduler, model, opts, Some(&plan))?;
+                    report.plan_ns += build_ns;
+                    // run_with_plan stamps trace times on its own epoch,
+                    // which starts at this job's submission on the
+                    // session clock.
+                    for ev in &mut report.trace {
+                        ev.job = i;
+                        ev.start_ms += submit_ms;
+                        ev.end_ms += submit_ms;
                     }
-                    target
+                    let complete_ms = now_ms().max(submit_ms);
+                    let q = qos_of(i);
+                    let timing = JobTiming {
+                        submit_ms,
+                        admit_ms: submit_ms,
+                        complete_ms,
+                        class: q.class,
+                        priority: q.priority,
+                        deadline_ms: submit_ms + q.deadline_ms,
+                        rejected: false,
+                        failed: false,
+                    };
+                    session.push_timed(report, hit, timing);
                 }
-                None => now_ms(),
-            };
-            // Window bookkeeping: a slot frees when job i - queue
-            // completes, so that is when job i stops queueing — even
-            // while execution stays serial behind job i - 1.
-            let admit_ms = serial_window_admit(submit_ms, i, queue, &completes);
-            // Kernels start only once the machine is free (serial).
-            let start_ms = now_ms().max(submit_ms);
-            let key = PlanKey::of(dag, &self.platform, model, scheduler);
-            let (plan, hit, build_ns) =
-                cache.get_or_build(key, || scheduler.build_plan(dag, &self.platform, model));
-            let mut report = self.run_with_plan(dag, scheduler, model, opts, Some(&plan))?;
-            report.plan_ns += build_ns;
-            // run_with_plan stamps trace times on its own epoch, which
-            // starts at this job's execution start on the session clock.
-            for ev in &mut report.trace {
-                ev.job = i;
-                ev.start_ms += start_ms;
-                ev.end_ms += start_ms;
             }
-            let complete_ms = now_ms().max(admit_ms);
-            completes.push(complete_ms);
-            let timing =
-                JobTiming { submit_ms, admit_ms, complete_ms, ..Default::default() };
-            session.push_timed(report, hit, timing);
+            // Open system: the concurrent multi-job driver.
+            Some(times) => {
+                let (results, _errors) = self.run_open(
+                    dags, qos, &times, scheduler, model, opts, cache, stream, None,
+                )?;
+                for (report, timing, hit) in results {
+                    session.push_timed(report, hit, timing);
+                }
+            }
         }
+        // Work accounting: every committed millisecond either belonged
+        // to a job that drained clean (useful) or to one that failed
+        // (wasted) — `executed == useful + wasted` balances exactly.
+        let mut useful = 0.0f64;
+        let mut wasted = 0.0f64;
+        for (r, t) in session.jobs.iter().zip(&session.timings) {
+            let busy: f64 = r.device_busy_ms.iter().sum();
+            if t.failed {
+                wasted += busy;
+            } else {
+                useful += busy;
+            }
+        }
+        session.useful_work_ms = useful;
+        session.wasted_work_ms = wasted;
+        session.executed_work_ms = useful + wasted;
+        let rs = scheduler.replan_stats();
+        session.replans = rs.replans - replan0.replans;
+        session.replan_cost_ms = rs.cost_ns.saturating_sub(replan0.cost_ns) as f64 / 1e6;
         Ok(session)
     }
 }
 
 /// FIFO-window admission instant of job `i` in a *serial* engine: the
 /// later of its submit time and the completion of the job `queue`
-/// positions ahead of it (whose drain frees the slot). This is exactly
-/// the rule the simulator's bounded FIFO window yields when completions
-/// happen in submission order, which the regression tests pin on
-/// `arrival=fixed`.
+/// positions ahead of it (whose drain frees the slot). The concurrent
+/// engine reproduces this rule bit-for-bit at `queue=1, admit=fifo`
+/// (regression-tested), because its admit values are derived from
+/// virtual submit/complete timestamps, not from message-processing
+/// order.
 pub fn serial_window_admit(
     submit_ms: f64,
     index: usize,
@@ -550,8 +1295,11 @@ mod tests {
         if !dir.join("manifest.json").exists() {
             return None;
         }
-        let rt = RuntimeService::spawn(dir).unwrap();
-        Some(ExecEngine::new(rt, Platform::paper()))
+        let platform = Platform::paper();
+        // One runtime lane per device: kernels on different devices
+        // genuinely overlap.
+        let rt = RuntimeService::spawn_lanes(dir, platform.device_count()).unwrap();
+        Some(ExecEngine::new(rt, platform))
     }
 
     #[test]
@@ -586,7 +1334,8 @@ mod tests {
     #[test]
     fn transfer_counts_match_simulator_for_offline_policies() {
         // For pinned policies the transfer pattern is schedule-order
-        // independent, so sim and real must agree exactly.
+        // independent — and bound tasks are never stolen — so sim and
+        // real must agree exactly even with a concurrent pool.
         let Some(eng) = engine() else { return };
         let dag = generate_layered(&GeneratorConfig::paper(KernelKind::Ma, 64));
         let model = CalibratedModel::default();
@@ -644,20 +1393,106 @@ mod tests {
     }
 
     #[test]
-    fn run_stream_rejects_non_fifo_admission() {
-        // The real engine cannot reorder or reject waiting jobs yet;
-        // a non-fifo admit= spec must be a loud error, not silent FIFO.
+    fn run_stream_accepts_policy_admission() {
+        // The tentpole regression: edf/sjf/reject used to be a loud
+        // bail! in the real engine; now they drive the same
+        // AdmissionCore as the simulator.
         let Some(eng) = engine() else { return };
-        let dags = vec![workloads::chain(2, KernelKind::Ma, 64)];
+        let dags: Vec<Dag> = (0..3).map(|_| workloads::chain(2, KernelKind::Ma, 64)).collect();
+        let model = CalibratedModel::default();
+        for spec in [
+            "stream:arrival=fixed,rate=2000,queue=1,admit=edf",
+            "stream:arrival=fixed,rate=2000,queue=1,admit=sjf",
+            "stream:arrival=fixed,rate=2000,queue=1,admit=reject,budget=60000",
+        ] {
+            let mut s = sched::by_name("eager").unwrap();
+            let mut cache = crate::sched::PlanCache::new();
+            let stream = StreamConfig::from_spec(spec).unwrap();
+            let session = eng
+                .run_stream(&dags, s.as_mut(), &model, &ExecOptions::default(), &mut cache, &stream)
+                .unwrap();
+            assert_eq!(session.job_count(), 3, "{spec}");
+            assert_eq!(session.failed_count(), 0, "{spec}");
+            for t in &session.timings {
+                assert!(t.submit_ms <= t.admit_ms && t.admit_ms <= t.complete_ms, "{spec}");
+            }
+        }
+    }
+
+    #[test]
+    fn worker_error_propagates_instead_of_hanging() {
+        // Satellite regression: a missing kernel artifact used to
+        // .expect() inside the worker thread — the thread died, the
+        // coordinator waited forever. Now the error rides the
+        // completion channel and run() fails cleanly.
+        let Some(eng) = engine() else { return };
+        // n=3 has no artifact in the manifest (only power-of-two sizes
+        // are compiled).
+        let dag = workloads::chain(2, KernelKind::Ma, 3);
+        let model = CalibratedModel::default();
+        let mut s = sched::by_name("eager").unwrap();
+        let err = eng.run(&dag, s.as_mut(), &model, &ExecOptions::default()).unwrap_err();
+        assert!(err.to_string().contains("task"), "{err}");
+    }
+
+    #[test]
+    fn stream_marks_failed_job_and_continues() {
+        // One poisoned job (missing artifact) must not take the
+        // session down: it is reported failed, its busy time is
+        // wasted work, and the other jobs complete normally.
+        let Some(eng) = engine() else { return };
+        let dags = vec![
+            workloads::chain(2, KernelKind::Ma, 64),
+            workloads::chain(2, KernelKind::Ma, 3),
+            workloads::chain(2, KernelKind::Ma, 64),
+        ];
+        let model = CalibratedModel::default();
+        let mut s = sched::by_name("eager").unwrap();
+        let mut cache = crate::sched::PlanCache::new();
+        let stream = StreamConfig::from_spec("stream:arrival=fixed,rate=2000,queue=2").unwrap();
+        let session = eng
+            .run_stream(&dags, s.as_mut(), &model, &ExecOptions::default(), &mut cache, &stream)
+            .unwrap();
+        assert_eq!(session.job_count(), 3);
+        assert_eq!(session.failed_count(), 1);
+        assert!(session.timings[1].failed, "the poisoned job is the failed one");
+        assert!(!session.timings[0].failed && !session.timings[2].failed);
+        for i in [0usize, 2] {
+            assert!(
+                session.jobs[i].assignments.iter().all(|&d| d != usize::MAX),
+                "job {i} fully executed"
+            );
+        }
+        // Accounting identity: executed == useful + wasted.
+        assert!(
+            (session.executed_work_ms - session.useful_work_ms - session.wasted_work_ms).abs()
+                < 1e-9
+        );
+        assert!(session.goodput_jps() <= session.throughput_jps() + 1e-12);
+    }
+
+    #[test]
+    fn bursty_stream_interleaves_jobs() {
+        // Four jobs arriving in one burst with an 8-slot window must
+        // genuinely overlap: the acceptance bar for the multi-job
+        // executor is max_concurrent_jobs > 1.
+        let Some(eng) = engine() else { return };
+        let dags: Vec<Dag> = (0..4).map(|_| workloads::chain(3, KernelKind::Mm, 64)).collect();
         let model = CalibratedModel::default();
         let mut s = sched::by_name("eager").unwrap();
         let mut cache = crate::sched::PlanCache::new();
         let stream =
-            StreamConfig::from_spec("stream:arrival=fixed,rate=100,queue=2,admit=edf").unwrap();
-        let err = eng
+            StreamConfig::from_spec("stream:arrival=bursty,rate=500,burst=4,queue=8").unwrap();
+        let session = eng
             .run_stream(&dags, s.as_mut(), &model, &ExecOptions::default(), &mut cache, &stream)
-            .unwrap_err();
-        assert!(err.to_string().contains("admit=fifo only"), "{err}");
+            .unwrap();
+        assert_eq!(session.job_count(), 4);
+        assert_eq!(session.failed_count(), 0);
+        assert!(
+            session.max_concurrent_jobs() > 1,
+            "burst of 4 into queue=8 must overlap, got {}",
+            session.max_concurrent_jobs()
+        );
     }
 
     #[test]
@@ -677,14 +1512,31 @@ mod tests {
 
     #[test]
     fn paced_stream_honors_admission_window() {
-        // Fast fixed-rate arrivals against a 2-slot window: job i is
-        // admitted at max(submit_i, complete_{i-2}) — queueing delay is
-        // measured against the *window*, not the serial machine — and
-        // the sim's FIFO window implements the identical rule
-        // (regression-tested on arrival=fixed in tests/open_system.rs).
+        // queue=1/fifo: the concurrent engine must reproduce the
+        // serial rule admit_i = max(submit_i, complete_{i-1})
+        // bit-for-bit (the real-vs-serial equivalence regression).
         let Some(eng) = engine() else { return };
         let dags: Vec<Dag> = (0..4).map(|_| workloads::chain(2, KernelKind::Ma, 64)).collect();
         let model = CalibratedModel::default();
+        let mut s = sched::by_name("eager").unwrap();
+        let mut cache = crate::sched::PlanCache::new();
+        let stream =
+            StreamConfig::from_spec("stream:arrival=fixed,rate=10000,queue=1").unwrap();
+        let session = eng
+            .run_stream(&dags, s.as_mut(), &model, &ExecOptions::default(), &mut cache, &stream)
+            .unwrap();
+        assert_eq!(session.job_count(), 4);
+        let t = &session.timings;
+        for (i, w) in t.iter().enumerate() {
+            let completes: Vec<f64> = t[..i].iter().map(|x| x.complete_ms).collect();
+            let expect = serial_window_admit(w.submit_ms, i, 1, &completes);
+            assert_eq!(w.admit_ms, expect, "job {i}: bit-exact serial rule");
+            assert!(w.queueing_delay_ms() >= 0.0 && w.complete_ms >= w.admit_ms);
+        }
+
+        // queue=2: completions may reorder under concurrency, so the
+        // serial indexed rule no longer applies — but the window
+        // *capacity* invariants must hold.
         let mut s = sched::by_name("eager").unwrap();
         let mut cache = crate::sched::PlanCache::new();
         let stream =
@@ -693,24 +1545,13 @@ mod tests {
             .run_stream(&dags, s.as_mut(), &model, &ExecOptions::default(), &mut cache, &stream)
             .unwrap();
         assert_eq!(session.job_count(), 4);
+        assert!(session.max_concurrent_jobs() <= 2, "window capacity respected");
         let t = &session.timings;
-        for (i, w) in t.iter().enumerate() {
-            let expect = serial_window_admit(
-                w.submit_ms,
-                i,
-                2,
-                &t[..i].iter().map(|x| x.complete_ms).collect::<Vec<_>>(),
-            );
-            assert!(
-                (w.admit_ms - expect).abs() < 1e-9,
-                "job {i}: admit {} != window rule {expect}",
-                w.admit_ms
-            );
-            assert!(w.queueing_delay_ms() >= 0.0 && w.complete_ms >= w.admit_ms);
-        }
-        // The first `queue` jobs never queue.
-        assert_eq!(t[0].queueing_delay_ms(), 0.0);
+        assert_eq!(t[0].queueing_delay_ms(), 0.0, "first jobs admit at submit");
         assert_eq!(t[1].queueing_delay_ms(), 0.0);
+        for w in t {
+            assert!(w.admit_ms >= w.submit_ms && w.complete_ms >= w.admit_ms);
+        }
     }
 
     #[test]
@@ -724,7 +1565,7 @@ mod tests {
         let model = CalibratedModel::default();
         let mut s = sched::by_name("eager").unwrap();
         let mut cache = crate::sched::PlanCache::new();
-        let stream = StreamConfig::from_spec("stream:arrival=fixed,rate=2000").unwrap();
+        let stream = StreamConfig::from_spec("stream:arrival=fixed,rate=2000,queue=1").unwrap();
         let session = eng
             .run_stream(&dags, s.as_mut(), &model, &ExecOptions::default(), &mut cache, &stream)
             .unwrap();
@@ -736,6 +1577,42 @@ mod tests {
             assert!(t.sojourn_ms() > 0.0);
         }
         assert!(session.throughput_jps() > 0.0);
+    }
+
+    #[test]
+    fn offline_policy_is_deterministic_across_concurrent_runs() {
+        // Two identical open sessions under an offline (bound) policy:
+        // stealing is disabled and the plan pins every task, so the
+        // job set, assignments and accounting must agree exactly even
+        // though wall-clock interleaving differs.
+        let Some(eng) = engine() else { return };
+        let dag = generate_layered(&GeneratorConfig::paper(KernelKind::Ma, 64));
+        let dags = vec![dag.clone(), dag.clone(), dag];
+        let model = CalibratedModel::default();
+        let run_once = || {
+            let mut s = sched::by_name("gp").unwrap();
+            let mut cache = crate::sched::PlanCache::new();
+            let stream =
+                StreamConfig::from_spec("stream:arrival=poisson,rate=300,seed=7,queue=4")
+                    .unwrap();
+            eng.run_stream(&dags, s.as_mut(), &model, &ExecOptions::default(), &mut cache, &stream)
+                .unwrap()
+        };
+        let a = run_once();
+        let b = run_once();
+        assert_eq!(a.job_count(), b.job_count());
+        assert_eq!(a.rejected_count(), 0);
+        assert_eq!(b.rejected_count(), 0);
+        assert_eq!(a.failed_count() + b.failed_count(), 0);
+        for i in 0..a.jobs.len() {
+            assert_eq!(a.jobs[i].assignments, b.jobs[i].assignments, "job {i} placement");
+        }
+        for s in [&a, &b] {
+            assert!(
+                (s.executed_work_ms - s.useful_work_ms - s.wasted_work_ms).abs() < 1e-9,
+                "work accounting balances"
+            );
+        }
     }
 
     #[test]

@@ -118,7 +118,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     })?;
 
     let report = if args.has("real") {
-        let rt = RuntimeService::spawn(artifacts_dir())?;
+        // One runtime lane per device: the work-stealing executor can
+        // genuinely overlap kernels on different devices.
+        let rt = RuntimeService::spawn_lanes(artifacts_dir(), platform.device_count())?;
         if !rt.has(cfg.kernel, cfg.size) {
             bail!(
                 "no artifact for {} at size {} (available: {:?}); run `make artifacts`",
@@ -364,7 +366,10 @@ fn cmd_bench_stream(args: &Args) -> Result<()> {
     let specs: Vec<String> = with_window(&shared, window);
 
     let registry = SchedulerRegistry::builtin();
-    let mut rows: Vec<(String, String, String, SessionReport)> = Vec::new();
+    // (scenario, policy, stream spec, engine tag, report); the engine
+    // tag ("sim" | "real") rides into the JSON so the validator can
+    // apply real-engine invariants to the right rows.
+    let mut rows: Vec<(String, String, String, &'static str, SessionReport)> = Vec::new();
     // Per-row job counts are authoritative (the phased stream is capped
     // at 4 jobs regardless of --jobs); the title carries only the size.
     let mut table = Table::new(
@@ -427,6 +432,7 @@ fn cmd_bench_stream(args: &Args) -> Result<()> {
                 scenario.to_string(),
                 spec.clone(),
                 stream.spec_string(),
+                "sim",
                 session,
             ));
         }
@@ -488,6 +494,7 @@ fn cmd_bench_stream(args: &Args) -> Result<()> {
             "open-qos".to_string(),
             qos_policy.to_string(),
             stream.spec_string(),
+            "sim",
             session,
         ));
     }
@@ -532,16 +539,102 @@ fn cmd_bench_stream(args: &Args) -> Result<()> {
             format!("{:.1}", session.goodput_jps()),
             session.recovery_replans.to_string(),
         ]);
-        rows.push(("open-fault".to_string(), spec.clone(), open_stream.spec_string(), session));
+        rows.push((
+            "open-fault".to_string(),
+            spec.clone(),
+            open_stream.spec_string(),
+            "sim",
+            session,
+        ));
     }
     println!("{}", fault_table.render());
 
+    // --- real-admit: the work-stealing executor, admission sweep -----
+    //
+    // The same StreamConfig grammar on real kernels: paced arrivals,
+    // concurrent multi-job execution, the shared admission core under
+    // every admit= policy. Rows are tagged engine="real" (wall-clock
+    // numbers, not comparable bit-for-bit to the sim rows). Requires
+    // `make artifacts`; skipped with a note otherwise.
+    if args.has("real") {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            println!("real-admit sweep skipped: no artifacts (run `make artifacts`)");
+        } else {
+            let real_size = args.flag_u32("real-size", 64)?;
+            let real_jobs = args.flag_usize("real-jobs", 6)?;
+            let rt = RuntimeService::spawn_lanes(&dir, platform.device_count())?;
+            if !rt.has(KernelKind::Mm, real_size) {
+                bail!(
+                    "no artifact for mm at size {real_size} (available: {:?})",
+                    rt.manifest().sizes(KernelKind::Mm)
+                );
+            }
+            let engine = ExecEngine::new(rt.clone(), platform.clone());
+            let real_dags: Vec<_> = (0..real_jobs)
+                .map(|_| generate_layered(&GeneratorConfig::paper(KernelKind::Mm, real_size)))
+                .collect();
+            let real_policy = "eager";
+            let mut real_table = Table::new(
+                format!(
+                    "real-admit sweep (work-stealing executor, {real_jobs} jobs, \
+                     size {real_size}, policy {real_policy})"
+                ),
+                &[
+                    "admit", "jobs", "rejected", "failed", "span_ms", "mean_ms",
+                    "qdelay_ms", "jobs/s", "maxconc",
+                ],
+            );
+            for admit in ["fifo", "edf", "sjf", "reject"] {
+                let spec = match admit {
+                    "fifo" => "stream:arrival=fixed,rate=200,queue=2".to_string(),
+                    "reject" => {
+                        "stream:arrival=fixed,rate=200,queue=2,admit=reject,budget=60000"
+                            .to_string()
+                    }
+                    other => format!("stream:arrival=fixed,rate=200,queue=2,admit={other}"),
+                };
+                let stream = StreamConfig::from_spec(&spec)?;
+                let mut scheduler = registry.create(real_policy)?;
+                let mut cache = PlanCache::new();
+                let session = engine.run_stream(
+                    &real_dags,
+                    scheduler.as_mut(),
+                    &model,
+                    &ExecOptions::default(),
+                    &mut cache,
+                    &stream,
+                )?;
+                real_table.row(vec![
+                    admit.to_string(),
+                    session.job_count().to_string(),
+                    session.rejected_count().to_string(),
+                    session.failed_count().to_string(),
+                    fmt_ms(session.span_ms),
+                    fmt_ms(session.mean_sojourn_ms()),
+                    fmt_ms(session.mean_queueing_delay_ms()),
+                    format!("{:.1}", session.throughput_jps()),
+                    session.max_concurrent_jobs().to_string(),
+                ]);
+                rows.push((
+                    "real-admit".to_string(),
+                    real_policy.to_string(),
+                    stream.spec_string(),
+                    "real",
+                    session,
+                ));
+            }
+            println!("{}", real_table.render());
+            rt.shutdown();
+        }
+    }
+
     let find = |s: &str, p: &str| {
-        rows.iter().find(|(sc, sp, _, _)| sc == s && sp == p).map(|(_, _, _, r)| r)
+        rows.iter().find(|(sc, sp, _, _, _)| sc == s && sp == p).map(|(_, _, _, _, r)| r)
     };
     let find_admit = |admit: &str| {
         rows.iter()
-            .find(|(sc, _, st, _)| {
+            .find(|(sc, _, st, _, _)| {
                 sc == "open-qos"
                     && if admit == "fifo" {
                         !st.contains("admit=")
@@ -549,7 +642,7 @@ fn cmd_bench_stream(args: &Args) -> Result<()> {
                         st.contains(&format!("admit={admit}"))
                     }
             })
-            .map(|(_, _, _, r)| r)
+            .map(|(_, _, _, _, r)| r)
     };
     if let (Some(fifo), Some(edf), Some(sjf)) =
         (find_admit("fifo"), find_admit("edf"), find_admit("sjf"))
@@ -919,7 +1012,7 @@ fn render_session_json(
     size: u32,
     harness: &str,
     platform: &Platform,
-    rows: &[(String, String, String, SessionReport)],
+    rows: &[(String, String, String, &'static str, SessionReport)],
 ) -> String {
     use std::fmt::Write as _;
     let workers: Vec<usize> = platform.devices.iter().map(|d| d.workers).collect();
@@ -929,7 +1022,7 @@ fn render_session_json(
     let _ = writeln!(s, "  \"requested_jobs\": {jobs},");
     let _ = writeln!(s, "  \"window\": {window},\n  \"size\": {size},");
     s.push_str("  \"rows\": [\n");
-    for (i, (scenario, policy, stream, r)) in rows.iter().enumerate() {
+    for (i, (scenario, policy, stream, engine, r)) in rows.iter().enumerate() {
         let util = r
             .device_utilization(&workers)
             .iter()
@@ -961,7 +1054,7 @@ fn render_session_json(
         let _ = writeln!(
             s,
             "    {{\"scenario\": \"{scenario}\", \"policy\": \"{policy}\", \
-             \"stream\": \"{stream}\", \"jobs\": {}, \
+             \"stream\": \"{stream}\", \"engine\": \"{engine}\", \"jobs\": {}, \
              \"makespan_ms\": {:.6}, \"span_ms\": {:.6}, \"transfers\": {}, \"plan_ns\": {}, \
              \"first_plan_ns\": {}, \"repeat_plan_ns\": {}, \"cache_hit_rate\": {:.4}, \
              \"decision_ns\": {}, \"p50_sojourn_ms\": {:.6}, \"p95_sojourn_ms\": {:.6}, \

@@ -1,12 +1,20 @@
 //! Thread-safe façade over [`KernelRuntime`].
 //!
-//! A [`RuntimeService`] spawns one dedicated service thread that owns the
-//! runtime and executes requests sent over a channel; handles are `Clone +
-//! Send` and can be given to every worker. (The design predates the
-//! interpreter backend: PJRT handles from the `xla` crate were `!Send`,
-//! forcing single-thread ownership.) Kernel executions serialize on
-//! the service thread — faithful on this substrate, where every simulated
-//! device shares one physical CPU.
+//! A [`RuntimeService`] spawns dedicated service threads ("lanes"), each
+//! owning its own runtime and executing requests sent over a channel;
+//! handles are `Clone + Send` and can be given to every worker. (The
+//! design predates the interpreter backend: PJRT handles from the `xla`
+//! crate were `!Send`, forcing single-thread ownership.)
+//!
+//! Lanes are the concurrency seam the work-stealing executor needs: with
+//! [`RuntimeService::spawn`] there is a single lane and every kernel
+//! serializes on it (the pre-concurrency behaviour, kept for the
+//! calibration and single-job paths); with
+//! [`RuntimeService::spawn_lanes`] each simulated *device* gets its own
+//! lane, so kernels dispatched to different devices genuinely overlap —
+//! [`RuntimeService::execute_on`] routes by device index. Workers of one
+//! device still serialize on their device's lane, faithful to one
+//! physical execution context per device on this substrate.
 
 use std::path::{Path, PathBuf};
 use std::sync::mpsc;
@@ -28,84 +36,137 @@ enum Request {
     Stop,
 }
 
-/// Cloneable, Send-able handle to the PJRT service thread.
+/// Cloneable, Send-able handle to the runtime service lanes.
 #[derive(Clone)]
 pub struct RuntimeService {
-    tx: mpsc::Sender<Request>,
+    lanes: Vec<mpsc::Sender<Request>>,
     manifest: Arc<Manifest>,
-    join: Arc<Mutex<Option<std::thread::JoinHandle<()>>>>,
+    joins: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
 }
 
 impl RuntimeService {
-    /// Spawn the service thread over an artifacts directory.
+    /// Spawn a single-lane service over an artifacts directory — every
+    /// execution serializes on one thread (the historical behaviour).
     pub fn spawn(dir: impl AsRef<Path>) -> Result<RuntimeService> {
+        RuntimeService::spawn_lanes(dir, 1)
+    }
+
+    /// Spawn one service lane per simulated device: executions routed to
+    /// different lanes via [`RuntimeService::execute_on`] run
+    /// concurrently on their own threads and runtimes.
+    pub fn spawn_lanes(dir: impl AsRef<Path>, lanes: usize) -> Result<RuntimeService> {
         let dir: PathBuf = dir.as_ref().to_path_buf();
         // Parse the manifest here too, so handles can answer `has` without
         // a round-trip.
         let manifest = Arc::new(Manifest::load(&dir)?);
-        let (tx, rx) = mpsc::channel::<Request>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let join = std::thread::Builder::new()
-            .name("pjrt-service".into())
-            .spawn(move || {
-                let rt = match KernelRuntime::open(&dir) {
-                    Ok(rt) => {
-                        let _ = ready_tx.send(Ok(()));
-                        rt
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
-                    }
-                };
-                while let Ok(req) = rx.recv() {
-                    match req {
-                        Request::Execute { op, n, inputs, reply } => {
-                            let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
-                            let _ = reply.send(rt.execute_timed(op, n, &refs));
+        let mut txs = Vec::new();
+        let mut joins = Vec::new();
+        for lane in 0..lanes.max(1) {
+            let dir = dir.clone();
+            let (tx, rx) = mpsc::channel::<Request>();
+            let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+            let join = std::thread::Builder::new()
+                .name(format!("pjrt-service-{lane}"))
+                .spawn(move || {
+                    let rt = match KernelRuntime::open(&dir) {
+                        Ok(rt) => {
+                            let _ = ready_tx.send(Ok(()));
+                            rt
                         }
-                        Request::Stop => break,
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(e));
+                            return;
+                        }
+                    };
+                    while let Ok(req) = rx.recv() {
+                        match req {
+                            Request::Execute { op, n, inputs, reply } => {
+                                let refs: Vec<&[f32]> =
+                                    inputs.iter().map(|v| v.as_slice()).collect();
+                                let _ = reply.send(rt.execute_timed(op, n, &refs));
+                            }
+                            Request::Stop => break,
+                        }
                     }
-                }
-            })
-            .context("spawning pjrt service")?;
-        ready_rx
-            .recv()
-            .context("pjrt service died during startup")??;
-        Ok(RuntimeService { tx, manifest, join: Arc::new(Mutex::new(Some(join))) })
+                })
+                .context("spawning pjrt service")?;
+            ready_rx.recv().context("pjrt service died during startup")??;
+            txs.push(tx);
+            joins.push(join);
+        }
+        Ok(RuntimeService { lanes: txs, manifest, joins: Arc::new(Mutex::new(joins)) })
     }
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// Number of independent execution lanes.
+    pub fn lane_count(&self) -> usize {
+        self.lanes.len()
+    }
+
     pub fn has(&self, op: KernelKind, n: u32) -> bool {
         self.manifest.find(op, n).is_some()
     }
 
-    /// Execute a kernel on the service thread; blocks for the result.
+    /// Execute a kernel on lane 0; blocks for the result.
     pub fn execute(&self, op: KernelKind, n: u32, inputs: Vec<Vec<f32>>) -> Result<Vec<f32>> {
         self.execute_timed(op, n, inputs).map(|(out, _)| out)
     }
 
-    /// Execute and return (output, kernel wall ms).
+    /// Execute on the lane serving device `dev` (`dev % lane_count`, so
+    /// single-lane services still accept any device index).
+    pub fn execute_on(
+        &self,
+        dev: usize,
+        op: KernelKind,
+        n: u32,
+        inputs: Vec<Vec<f32>>,
+    ) -> Result<Vec<f32>> {
+        self.execute_timed_on(dev, op, n, inputs).map(|(out, _)| out)
+    }
+
+    /// Execute and return (output, kernel wall ms) on lane 0.
     pub fn execute_timed(
         &self,
         op: KernelKind,
         n: u32,
         inputs: Vec<Vec<f32>>,
     ) -> Result<(Vec<f32>, f64)> {
+        self.execute_timed_on(0, op, n, inputs)
+    }
+
+    /// Execute and return (output, kernel wall ms) on device `dev`'s lane.
+    pub fn execute_timed_on(
+        &self,
+        dev: usize,
+        op: KernelKind,
+        n: u32,
+        inputs: Vec<Vec<f32>>,
+    ) -> Result<(Vec<f32>, f64)> {
+        let lane = dev % self.lanes.len();
         let (reply, rx) = mpsc::channel();
-        self.tx
+        self.lanes[lane]
             .send(Request::Execute { op, n, inputs, reply })
             .map_err(|_| anyhow!("pjrt service gone"))?;
         rx.recv().map_err(|_| anyhow!("pjrt service dropped request"))?
     }
 
-    /// Stop the service thread (also triggered when the last clone drops).
+    /// Stop the service threads (also triggered when the last clone
+    /// drops). Must complete even if a caller panicked while holding a
+    /// runtime handle: a poisoned join lock is *recovered*, not
+    /// propagated — cascading the panic here would leak every lane
+    /// thread and hang process exit on some platforms.
     pub fn shutdown(&self) {
-        let _ = self.tx.send(Request::Stop);
-        if let Some(j) = self.join.lock().unwrap().take() {
+        for tx in &self.lanes {
+            let _ = tx.send(Request::Stop);
+        }
+        let mut guard = match self.joins.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        for j in guard.drain(..) {
             let _ = j.join();
         }
     }
@@ -141,10 +202,50 @@ mod tests {
     }
 
     #[test]
+    fn lanes_route_and_agree() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let svc = RuntimeService::spawn_lanes(dir, 2).unwrap();
+        assert_eq!(svc.lane_count(), 2);
+        let a = vec![2.0f32; 64 * 64];
+        let b = vec![3.0f32; 64 * 64];
+        // Same kernel on every lane (including an out-of-range device
+        // index, which wraps) produces identical results.
+        for dev in 0..3 {
+            let out = svc.execute_on(dev, KernelKind::Ma, 64, vec![a.clone(), b.clone()]).unwrap();
+            assert!(out.iter().all(|&x| (x - 5.0).abs() < 1e-6));
+        }
+        svc.shutdown();
+    }
+
+    #[test]
     fn missing_artifact_is_error_not_panic() {
         let Some(svc) = service() else { return };
         let a = vec![0f32; 9];
         assert!(svc.execute(KernelKind::Ma, 3, vec![a.clone(), a]).is_err());
         svc.shutdown();
+    }
+
+    #[test]
+    fn shutdown_survives_poisoned_join_lock() {
+        // Regression: a worker that panicked while holding the join lock
+        // used to turn every later shutdown() into a cascading panic,
+        // leaking the service threads. The guard is recovered instead.
+        let Some(svc) = service() else { return };
+        {
+            let svc = svc.clone();
+            let _ = std::thread::spawn(move || {
+                let _guard = svc.joins.lock().unwrap();
+                panic!("poison the join lock");
+            })
+            .join();
+        }
+        assert!(svc.joins.is_poisoned(), "lock must actually be poisoned");
+        svc.shutdown(); // must not panic
+        // The service is gone afterwards: requests fail cleanly.
+        let a = vec![0f32; 64 * 64];
+        assert!(svc.execute(KernelKind::Ma, 64, vec![a.clone(), a]).is_err());
     }
 }

@@ -24,6 +24,13 @@
 //! mean queueing delay, throughput, session-level device utilization —
 //! come from one place.
 //!
+//! Sessions here are *simulated*. The real-compute twin is
+//! [`crate::coordinator::ExecEngine::run_stream_qos`]: the same
+//! [`StreamConfig`] grammar and the same shared admission core
+//! ([`crate::sim::AdmissionCore`]), but jobs execute concurrently on
+//! PJRT device workers through a work-stealing pool, so its timings
+//! are wall-clock measurements rather than model predictions.
+//!
 //! A single session is one *sample* of an experiment. For replicated
 //! experiments — the same traffic re-run on derived seeds, merged into
 //! mean/stddev/95%-CI statistics — drive sessions through the

@@ -1,0 +1,257 @@
+//! The shared admission core: one implementation of the bounded
+//! admission window, consumed by *both* engines.
+//!
+//! The simulator's [`super::engine`] and the real executor
+//! ([`crate::coordinator::ExecEngine::run_stream`]) must make identical
+//! admission decisions for the same arrival sequence — that is what
+//! makes real-engine sojourn/queueing-delay/deadline numbers comparable
+//! to simulated ones under the same [`super::stream::StreamConfig`]
+//! grammar. Before this module each engine carried its own copy (the
+//! sim's policy-ordered pending queue vs the real engine's
+//! `serial_window_admit` special case, which could only express FIFO);
+//! now both drive an [`AdmissionCore`]:
+//!
+//! * a bounded slot count ([`AdmissionCore::has_slot`] /
+//!   [`AdmissionCore::note_admitted`] / [`AdmissionCore::release_slot`])
+//!   mirroring [`super::stream::StreamConfig::queue`];
+//! * a pending queue in arrival order whose *pops* are ordered by the
+//!   [`super::stream::AdmissionPolicy`] composite key
+//!   `(priority, deadline, est_work, submit_seq)` — FIFO/reject consult
+//!   only the sequence, `edf` priority→deadline, `sjf` priority→work
+//!   estimate, and the dense job id breaks every tie deterministically;
+//! * reject-policy backpressure: the predictive check at arrival
+//!   ([`AdmissionCore::predicts_reject`], pending work already exceeds
+//!   the budget) and membership removal at budget expiry
+//!   ([`AdmissionCore::remove_pending`]).
+//!
+//! Key comparisons use [`f64::total_cmp`] end to end: a NaN
+//! `est_total_work_ms` or deadline from a degenerate calibrated model
+//! sorts (deterministically, after every finite key) instead of
+//! panicking the engine mid-session, finishing the PR 8
+//! `partial_cmp` sweep. The Python mirror (`sched_mirror.py`) carries a
+//! bit-exact twin of this module and its `checks` verb asserts the sim
+//! and real drivers pop identical sequences from it.
+
+use super::stream::AdmissionPolicy;
+use crate::sched::JobId;
+use std::cmp::Ordering;
+
+/// Everything the admission policy may consult about one waiting job.
+/// Snapshot taken at arrival — entries never read engine state, which
+/// is what lets both engines share the queue.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionEntry {
+    /// Dense job id (submission order) — the universal tie-break.
+    pub job: JobId,
+    /// Priority band (lower admits first under `edf`/`sjf`).
+    pub priority: u32,
+    /// Absolute deadline on the session clock (`edf` key).
+    pub deadline_abs: f64,
+    /// Calibrated total-work estimate (`sjf` key,
+    /// [`super::engine::est_total_work_ms`]).
+    pub est_work_ms: f64,
+}
+
+/// Composite admission key: `(priority, deadline, est_work,
+/// submit_seq)`. Produced per-policy by [`AdmissionCore::key_of`];
+/// ordered NaN-safely by [`cmp_admission_keys`].
+pub type AdmissionKey = (u32, f64, f64, usize);
+
+/// Total order over admission keys. `f64::total_cmp` on the float
+/// fields: NaN sorts after every finite value (and `-0.0 < 0.0`), so a
+/// degenerate model cannot panic or silently corrupt the pop order.
+pub fn cmp_admission_keys(a: &AdmissionKey, b: &AdmissionKey) -> Ordering {
+    a.0.cmp(&b.0)
+        .then_with(|| a.1.total_cmp(&b.1))
+        .then_with(|| a.2.total_cmp(&b.2))
+        .then_with(|| a.3.cmp(&b.3))
+}
+
+/// The bounded admission window: slot accounting plus the
+/// policy-ordered pending queue. Engine-agnostic — the caller supplies
+/// timestamps and decides what "admit" physically means.
+#[derive(Debug, Clone)]
+pub struct AdmissionCore {
+    policy: AdmissionPolicy,
+    /// Window capacity ([`super::stream::StreamConfig::queue`]), ≥ 1.
+    capacity: usize,
+    /// Jobs currently holding a slot.
+    inflight: usize,
+    /// Waiting jobs in arrival order; pops scan for the policy minimum
+    /// (the queue is small — it is bounded by backpressure in practice).
+    pending: Vec<AdmissionEntry>,
+}
+
+impl AdmissionCore {
+    pub fn new(capacity: usize, policy: AdmissionPolicy) -> AdmissionCore {
+        AdmissionCore { policy, capacity: capacity.max(1), inflight: 0, pending: Vec::new() }
+    }
+
+    pub fn policy(&self) -> AdmissionPolicy {
+        self.policy
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Jobs currently holding an admission slot.
+    pub fn inflight(&self) -> usize {
+        self.inflight
+    }
+
+    /// True when an arrival can be admitted immediately.
+    pub fn has_slot(&self) -> bool {
+        self.inflight < self.capacity
+    }
+
+    /// A job took a slot (admitted now or popped from pending).
+    pub fn note_admitted(&mut self) {
+        self.inflight += 1;
+    }
+
+    /// A job drained (or was retired): its slot frees.
+    pub fn release_slot(&mut self) {
+        debug_assert!(self.inflight > 0, "release without admission");
+        self.inflight = self.inflight.saturating_sub(1);
+    }
+
+    /// The policy's composite key for `entry`.
+    pub fn key_of(&self, entry: &AdmissionEntry) -> AdmissionKey {
+        match self.policy {
+            // FIFO (and reject, which is FIFO + budgets): arrival order.
+            AdmissionPolicy::Fifo | AdmissionPolicy::Reject => (0, 0.0, 0.0, entry.job),
+            AdmissionPolicy::Edf => (entry.priority, entry.deadline_abs, 0.0, entry.job),
+            AdmissionPolicy::Sjf => (entry.priority, entry.est_work_ms, 0.0, entry.job),
+        }
+    }
+
+    /// Queue an arrival that found no free slot.
+    pub fn push_pending(&mut self, entry: AdmissionEntry) {
+        self.pending.push(entry);
+    }
+
+    /// Remove and return the next pending job under the admission
+    /// policy (`None` when nothing waits). Does *not* claim the slot —
+    /// the caller admits and calls [`AdmissionCore::note_admitted`].
+    pub fn pop_pending(&mut self) -> Option<JobId> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        let best = (0..self.pending.len())
+            .min_by(|&a, &b| {
+                cmp_admission_keys(&self.key_of(&self.pending[a]), &self.key_of(&self.pending[b]))
+            })
+            .expect("pending is non-empty");
+        Some(self.pending.remove(best).job)
+    }
+
+    /// Drop `job` from the pending queue (wait-budget expiry). Returns
+    /// whether it was still pending — `false` means it already admitted
+    /// and the expiry is a no-op.
+    pub fn remove_pending(&mut self, job: JobId) -> bool {
+        match self.pending.iter().position(|e| e.job == job) {
+            Some(pos) => {
+                self.pending.remove(pos);
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Summed work estimate of everything waiting ahead of a new
+    /// arrival — the predictive-rejection signal.
+    pub fn pending_est_work_ms(&self) -> f64 {
+        self.pending.iter().map(|e| e.est_work_ms).sum()
+    }
+
+    /// Predictive rejection (`admit=reject` only): the pending queue's
+    /// summed work estimate already implies `budget_ms` cannot be met,
+    /// so the arrival is rejected outright instead of queueing a doomed
+    /// job. The expiry event stays as the backstop for jobs this
+    /// heuristic lets in.
+    pub fn predicts_reject(&self, budget_ms: f64) -> bool {
+        self.policy == AdmissionPolicy::Reject
+            && budget_ms.is_finite()
+            && self.pending_est_work_ms() > budget_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(job: JobId, priority: u32, deadline: f64, work: f64) -> AdmissionEntry {
+        AdmissionEntry { job, priority, deadline_abs: deadline, est_work_ms: work }
+    }
+
+    #[test]
+    fn fifo_pops_in_arrival_order_regardless_of_keys() {
+        let mut core = AdmissionCore::new(1, AdmissionPolicy::Fifo);
+        core.push_pending(entry(2, 9, 1.0, 1.0));
+        core.push_pending(entry(5, 0, 0.0, 0.0));
+        core.push_pending(entry(3, 1, 0.5, 0.5));
+        assert_eq!(core.pop_pending(), Some(2));
+        assert_eq!(core.pop_pending(), Some(3));
+        assert_eq!(core.pop_pending(), Some(5));
+        assert_eq!(core.pop_pending(), None);
+    }
+
+    #[test]
+    fn edf_orders_by_priority_then_deadline() {
+        let mut core = AdmissionCore::new(1, AdmissionPolicy::Edf);
+        core.push_pending(entry(0, 1, 5.0, 0.0));
+        core.push_pending(entry(1, 0, 90.0, 0.0));
+        core.push_pending(entry(2, 0, 10.0, 0.0));
+        assert_eq!(core.pop_pending(), Some(2));
+        assert_eq!(core.pop_pending(), Some(1));
+        assert_eq!(core.pop_pending(), Some(0));
+    }
+
+    #[test]
+    fn sjf_orders_by_work_with_job_tiebreak() {
+        let mut core = AdmissionCore::new(1, AdmissionPolicy::Sjf);
+        core.push_pending(entry(0, 0, 0.0, 7.0));
+        core.push_pending(entry(1, 0, 0.0, 2.0));
+        core.push_pending(entry(2, 0, 0.0, 2.0));
+        assert_eq!(core.pop_pending(), Some(1));
+        assert_eq!(core.pop_pending(), Some(2));
+        assert_eq!(core.pop_pending(), Some(0));
+    }
+
+    #[test]
+    fn nan_keys_sort_last_not_panic() {
+        // The satellite regression: a degenerate model can hand sjf a
+        // NaN work estimate. total_cmp sorts it after every finite key;
+        // partial_cmp would have panicked here.
+        let mut core = AdmissionCore::new(1, AdmissionPolicy::Sjf);
+        core.push_pending(entry(0, 0, 0.0, f64::NAN));
+        core.push_pending(entry(1, 0, 0.0, 3.0));
+        core.push_pending(entry(2, 0, 0.0, f64::NAN));
+        assert_eq!(core.pop_pending(), Some(1));
+        // Between two NaNs the job-id tie-break decides.
+        assert_eq!(core.pop_pending(), Some(0));
+        assert_eq!(core.pop_pending(), Some(2));
+    }
+
+    #[test]
+    fn slot_accounting_and_predictive_reject() {
+        let mut core = AdmissionCore::new(2, AdmissionPolicy::Reject);
+        assert!(core.has_slot());
+        core.note_admitted();
+        core.note_admitted();
+        assert!(!core.has_slot());
+        core.push_pending(entry(2, 0, f64::INFINITY, 30.0));
+        assert!(!core.predicts_reject(f64::INFINITY), "infinite budget never predicts");
+        assert!(core.predicts_reject(25.0), "30ms queued > 25ms budget");
+        assert!(!core.predicts_reject(40.0));
+        assert!(core.remove_pending(2));
+        assert!(!core.remove_pending(2), "second removal is a no-op");
+        core.release_slot();
+        assert!(core.has_slot());
+    }
+}

@@ -80,6 +80,7 @@ use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 use std::time::Instant;
 
+use super::admission::{AdmissionCore, AdmissionEntry};
 use super::equeue::{Event, EventQueue, EventQueueKind, Ord64};
 use super::report::{JobTiming, RunReport, SessionReport, TraceEvent};
 use super::stream::{AdmissionPolicy, FaultSpec, JobQos, StreamConfig};
@@ -509,12 +510,11 @@ struct EngineCore<'a> {
     avail: Vec<f64>,
     /// The event queue behind the seam ([`SimConfig::event_queue`]).
     events: Box<dyn EventQueue>,
-    /// Jobs waiting for an admission slot, in arrival order; pops are
-    /// ordered by the admission policy via [`EngineCore::pop_pending`].
-    pending: Vec<JobId>,
-    admit_policy: AdmissionPolicy,
-    inflight: usize,
-    queue: usize,
+    /// The bounded admission window — shared (by construction, not by
+    /// copy) with the real executor: both engines drive the same
+    /// [`AdmissionCore`], so `admit=fifo|edf|sjf|reject` decisions are
+    /// bit-identical across sim and real paths.
+    adm: AdmissionCore,
     /// Job slab: live jobs in recycled slots ([`EngineCore::slot_of`]
     /// maps ids to slots); `None` = free.
     jobs: Vec<Option<JobRun<'a>>>,
@@ -588,10 +588,7 @@ impl<'a> EngineCore<'a> {
             dir: Directory::new(),
             avail: Vec::new(),
             events,
-            pending: Vec::new(),
-            admit_policy,
-            inflight: 0,
-            queue: queue.max(1),
+            adm: AdmissionCore::new(queue, admit_policy),
             jobs: Vec::new(),
             free_slots: Vec::new(),
             slot_of: HashMap::new(),
@@ -648,41 +645,21 @@ impl<'a> EngineCore<'a> {
             + self.tasks.bytes()
             + self.events.len() as u64 * std::mem::size_of::<Event>() as u64
             + self.dir.len() as u64 * 16
-            + (self.avail.len() + self.pending.len()) as u64 * 8
+            + (self.avail.len() + self.adm.pending_len()) as u64 * 8
             + self.source.bytes();
         self.stats.mem_high_water_bytes = self.stats.mem_high_water_bytes.max(bytes);
     }
 
-    /// Admission-policy key of pending job `j`. The full composite key
-    /// is `(priority, deadline, est_work, submit_seq)`; each policy
-    /// consults the documented prefix, and `submit_seq` (the dense job
-    /// id, submission order) breaks every tie deterministically.
-    fn pending_key(&self, j: JobId) -> (u32, f64, f64, usize) {
+    /// The [`AdmissionEntry`] snapshot for job `j` (must be slotted).
+    fn admission_entry(&self, j: JobId) -> AdmissionEntry {
         let s = self.slot_of[&j];
-        let job = self.jobs[s].as_ref().expect("pending job is live");
-        match self.admit_policy {
-            // FIFO (and reject, which is FIFO + budgets): arrival
-            // order only.
-            AdmissionPolicy::Fifo | AdmissionPolicy::Reject => (0, 0.0, 0.0, j),
-            AdmissionPolicy::Edf => (job.qos.priority, job.deadline_abs, 0.0, j),
-            AdmissionPolicy::Sjf => (job.qos.priority, job.est_work_ms, 0.0, j),
+        let job = self.jobs[s].as_ref().expect("live job");
+        AdmissionEntry {
+            job: j,
+            priority: job.qos.priority,
+            deadline_abs: job.deadline_abs,
+            est_work_ms: job.est_work_ms,
         }
-    }
-
-    /// Remove and return the next pending job under the admission
-    /// policy.
-    fn pop_pending(&mut self) -> Option<JobId> {
-        if self.pending.is_empty() {
-            return None;
-        }
-        let best = (0..self.pending.len())
-            .min_by(|&a, &b| {
-                self.pending_key(self.pending[a])
-                    .partial_cmp(&self.pending_key(self.pending[b]))
-                    .expect("pending keys are never NaN")
-            })
-            .expect("pending is non-empty");
-        Some(self.pending.remove(best))
     }
 
     /// Admit job `j` at `now`: allocate its task-arena range and data
@@ -755,8 +732,8 @@ impl<'a> EngineCore<'a> {
                 self.events.schedule((Ord64(now), EV_READY, j, v, 0));
             }
         }
-        self.inflight += 1;
-        self.stats.max_inflight = self.stats.max_inflight.max(self.inflight as u64);
+        self.adm.note_admitted();
+        self.stats.max_inflight = self.stats.max_inflight.max(self.adm.inflight() as u64);
         self.note_mem();
         if n == 0 {
             self.complete_job(scheduler, j);
@@ -1049,6 +1026,7 @@ impl<'a> EngineCore<'a> {
             priority: job.qos.priority,
             deadline_ms: job.deadline_abs,
             rejected: job.rejected,
+            failed: false,
         };
         sink(j, report, timing, job.cache_hit);
     }
@@ -1246,32 +1224,12 @@ impl<'a> EngineCore<'a> {
                     }
                     let input = self.source.take(j, scheduler);
                     self.alloc_slot(j, input);
-                    if self.inflight < self.queue {
+                    if self.adm.has_slot() {
                         self.admit(scheduler, j, t);
                     } else {
                         let s = self.slot_of[&j];
                         let budget = self.jobs[s].as_ref().expect("live job").budget_ms;
-                        // Predictive rejection (admit=reject only): if
-                        // the pending queue's summed work estimate
-                        // already implies the budget cannot be met,
-                        // reject at arrival instead of queueing a
-                        // doomed job. The expiry event stays as the
-                        // backstop for jobs this heuristic lets in.
-                        let doomed = self.admit_policy == AdmissionPolicy::Reject
-                            && budget.is_finite()
-                            && self
-                                .pending
-                                .iter()
-                                .map(|&p| {
-                                    let ps = self.slot_of[&p];
-                                    self.jobs[ps]
-                                        .as_ref()
-                                        .expect("pending job is live")
-                                        .est_work_ms
-                                })
-                                .sum::<f64>()
-                                > budget;
-                        if doomed {
+                        if self.adm.predicts_reject(budget) {
                             {
                                 let job = self.jobs[s].as_mut().expect("live job");
                                 job.rejected = true;
@@ -1282,7 +1240,8 @@ impl<'a> EngineCore<'a> {
                             self.completed += 1;
                             self.retire(j, sink);
                         } else {
-                            self.pending.push(j);
+                            let entry = self.admission_entry(j);
+                            self.adm.push_pending(entry);
                             // Backpressure: schedule the wait-budget
                             // expiry. The event is a no-op if the job
                             // admits first.
@@ -1303,10 +1262,10 @@ impl<'a> EngineCore<'a> {
                         .map(|&s| self.jobs[s].as_ref().expect("live job").drain_epoch == epoch)
                         .unwrap_or(false);
                     if live {
-                        self.inflight -= 1;
+                        self.adm.release_slot();
                         self.completed += 1;
                         self.retire(j, sink);
-                        if let Some(next) = self.pop_pending() {
+                        if let Some(next) = self.adm.pop_pending() {
                             self.admit(scheduler, next, t);
                         }
                     }
@@ -1314,8 +1273,7 @@ impl<'a> EngineCore<'a> {
                 EV_REJECT => {
                     // Still pending at budget expiry: reject instead of
                     // ever admitting past the budget.
-                    if let Some(pos) = self.pending.iter().position(|&p| p == j) {
-                        self.pending.remove(pos);
+                    if self.adm.remove_pending(j) {
                         let s = self.slot_of[&j];
                         {
                             let job = self.jobs[s].as_mut().expect("live job");
@@ -1538,6 +1496,7 @@ pub fn simulate_open_qos(
                     priority: q.priority,
                     deadline_ms: clock + q.deadline_ms,
                     rejected: false,
+                    failed: false,
                 };
                 clock = timing.complete_ms;
                 session.push_timed(report, hit, timing);
@@ -2104,5 +2063,46 @@ mod tests {
         let heft = run("heft");
         assert_eq!(heft.replans, 0, "static policies never replan");
         assert_eq!(heft.replan_cost_ms, 0.0);
+    }
+
+    #[test]
+    fn nan_deadline_does_not_panic_admission() {
+        // Regression: admission ordering used `partial_cmp(..).unwrap()`
+        // on QoS keys, so a NaN deadline (e.g. a malformed class spec)
+        // panicked the whole session. With `f64::total_cmp` NaN sorts
+        // last — the poisoned job still completes, it just never wins
+        // an EDF tiebreak.
+        let platform = Platform::paper();
+        let model = CalibratedModel::default();
+        let dags: Vec<Dag> =
+            (0..4).map(|_| workloads::chain(3, KernelKind::Ma, 256)).collect();
+        let mut qos: Vec<JobQos> = (0..4)
+            .map(|i| JobQos { deadline_ms: 40.0 + i as f64, ..JobQos::default() })
+            .collect();
+        qos[1].deadline_ms = f64::NAN;
+        let mut s = sched::by_name("dmda").unwrap();
+        let mut cache = crate::sched::PlanCache::new();
+        // queue=1 + a fast fixed rate forces every job through the
+        // pending heap, so the NaN key actually gets compared.
+        let stream = StreamConfig::from_spec(
+            "stream:arrival=fixed,rate=10000,queue=1,admit=edf",
+        )
+        .unwrap();
+        let session = simulate_open_qos(
+            &dags,
+            &qos,
+            &[],
+            s.as_mut(),
+            &platform,
+            &model,
+            &SimConfig::default(),
+            &stream,
+            &mut cache,
+        );
+        assert_eq!(session.job_count(), 4);
+        assert_eq!(session.rejected_count(), 0);
+        for (i, t) in session.timings.iter().enumerate() {
+            assert!(t.complete_ms >= t.admit_ms, "job {i} must complete");
+        }
     }
 }

@@ -44,11 +44,13 @@
 //! sketch-backed [`SessionReport`] — memory stays O(in-flight jobs)
 //! end to end. See the [`engine`] module docs.
 
+pub mod admission;
 pub mod engine;
 pub mod equeue;
 pub mod report;
 pub mod stream;
 
+pub use admission::{cmp_admission_keys, AdmissionCore, AdmissionEntry, AdmissionKey};
 pub use engine::{
     est_total_work_ms, simulate, simulate_capacity, simulate_open, simulate_open_qos,
     simulate_stream, simulate_with_plan, SimConfig,

@@ -211,6 +211,12 @@ pub struct JobTiming {
     /// True when the job's wait budget expired before admission
     /// (`admit=reject` backpressure): no task of it ever ran.
     pub rejected: bool,
+    /// True when the job was admitted but a task execution *errored*
+    /// (real engine only: a kernel failure propagated through the
+    /// completion channel). The job still drains — its timings close
+    /// and its partial work counts as wasted — but its outputs are
+    /// untrusted. Always false in the simulator.
+    pub failed: bool,
 }
 
 impl Default for JobTiming {
@@ -223,6 +229,7 @@ impl Default for JobTiming {
             priority: 0,
             deadline_ms: f64::INFINITY,
             rejected: false,
+            failed: false,
         }
     }
 }
@@ -523,6 +530,13 @@ impl SessionReport {
             Some(t) => t.rejected,
             None => self.timings.iter().filter(|t| t.rejected).count(),
         }
+    }
+
+    /// Jobs that were admitted but failed mid-execution (real engine:
+    /// a kernel error surfaced through the completion channel). Always
+    /// 0 for simulated sessions.
+    pub fn failed_count(&self) -> usize {
+        self.timings.iter().filter(|t| t.failed).count()
     }
 
     /// Jobs that ran to completion.
